@@ -1,0 +1,52 @@
+//! Bench E5 + E6 — paper Table 7 / Fig. 11 (cost-benefit at 10/25/50
+//! epochs) and Table 8 / Fig. 13 (time saving in MTT-per-epoch units),
+//! with MTT measured on the real AOT-compiled model via PJRT.
+//!
+//! Requires `make artifacts` first.
+//!
+//!     cargo bench --bench cost_benefit
+
+use p3sapp::benchkit::{env_f64, env_usize};
+use p3sapp::report::{
+    fig13_csv, run_suite, table7, table8, SuiteOptions, TrainTimeModel,
+};
+use p3sapp::runtime::{Session, Trainer};
+use p3sapp::vocab::{Batcher, Vocabulary};
+
+fn main() {
+    let base = std::env::temp_dir().join("p3sapp-bench");
+    let mut opts = SuiteOptions::new(&base);
+    opts.scale = env_f64("BENCH_SCALE", 1.0);
+    opts.tiers = (1..=env_usize("BENCH_TIERS", 5)).collect();
+    let suite = run_suite(&opts).expect("suite");
+
+    // Measure real s/step on tier 1's cleaned frame.
+    let frame = &suite.tiers[0].p3sapp.frame;
+    let session = Session::cpu("artifacts").expect("PJRT session (run `make artifacts`)");
+    let mut trainer = Trainer::new(session).expect("trainer");
+    let cfg = trainer.manifest.config.clone();
+    let texts: Vec<&str> = (0..frame.num_rows())
+        .flat_map(|i| {
+            [
+                frame.column(0).get_str(i).unwrap_or(""),
+                frame.column(1).get_str(i).unwrap_or(""),
+            ]
+        })
+        .collect();
+    let vocab = Vocabulary::build(texts.into_iter(), cfg.vocab);
+    let mut batcher = Batcher::new(
+        frame, &vocab, "title", "abstract", cfg.batch, cfg.src_len, cfg.tgt_len, 7,
+    )
+    .expect("batcher");
+    trainer.train_step(&batcher.next_batch()).expect("warmup");
+    let stats = trainer
+        .train_loop(5, || batcher.next_batch())
+        .expect("measure");
+    let sec_per_step = stats.iter().map(|s| s.wall_secs).sum::<f64>() / stats.len() as f64;
+    println!("measured MTT: {sec_per_step:.3} s/step (batch {})\n", cfg.batch);
+    let model = TrainTimeModel { sec_per_step, batch_size: cfg.batch, train_frac: 0.9 };
+
+    println!("{}", table7(&suite, &model).expect("t7").render());
+    println!("{}", table8(&suite, &model).expect("t8").render());
+    println!("fig13 csv:\n{}", fig13_csv(&suite, &model).expect("fig13"));
+}

@@ -1,0 +1,22 @@
+//! Bench E3 + E7 + E8 — paper Table 4 / Fig. 9 (cumulative time),
+//! Fig. 10 (trend-line slopes) and Fig. 12 (summary of % reductions).
+//!
+//!     cargo bench --bench cumulative
+//!
+//! Expected shape: cumulative reduction rises with dataset size
+//! (paper: 82.57% -> 98.27%); both preprocessing series fit straight
+//! lines with CA's slope ≫ P3SAPP's (§6).
+
+use p3sapp::benchkit::{env_f64, env_usize};
+use p3sapp::report::{fig10, fig12, run_suite, table4, SuiteOptions};
+
+fn main() {
+    let base = std::env::temp_dir().join("p3sapp-bench");
+    let mut opts = SuiteOptions::new(&base);
+    opts.scale = env_f64("BENCH_SCALE", 1.0);
+    opts.tiers = (1..=env_usize("BENCH_TIERS", 5)).collect();
+    let suite = run_suite(&opts).expect("suite");
+    println!("\n{}", table4(&suite).render());
+    println!("{}", fig10(&suite).expect("fig10").render());
+    println!("{}", fig12(&suite).render());
+}

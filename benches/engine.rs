@@ -1,0 +1,77 @@
+//! Ablation bench — the `k` of the paper's O(n/k) claim (§3, §6):
+//! pipeline transform throughput vs worker count, plus the partition
+//! rebalancing effect on skewed frames.
+//!
+//!     cargo bench --bench engine
+
+use p3sapp::benchkit::{bench, black_box, env_usize};
+use p3sapp::corpus::{record, Rng};
+use p3sapp::engine::rebalance;
+use p3sapp::frame::{Column, Frame, Partition, Schema};
+use p3sapp::pipeline::presets::abstract_pipeline;
+
+fn frame(rows: usize, parts: usize, skewed: bool) -> Frame {
+    let mut rng = Rng::new(5);
+    let schema = Schema::strings(&["abstract"]);
+    let mut partitions = Vec::new();
+    // Skewed: first partition gets half the rows.
+    let sizes: Vec<usize> = if skewed && parts > 1 {
+        let mut v = vec![rows / 2];
+        let rest = rows - rows / 2;
+        for i in 0..parts - 1 {
+            v.push(rest / (parts - 1) + usize::from(i < rest % (parts - 1)));
+        }
+        v
+    } else {
+        (0..parts)
+            .map(|i| rows / parts + usize::from(i < rows % parts))
+            .collect()
+    };
+    for n in sizes {
+        let vals: Vec<Option<String>> = (0..n)
+            .map(|_| {
+                let t = record::abstract_text(&mut rng, 4);
+                Some(record::add_html_noise(&mut rng, t, 0.4))
+            })
+            .collect();
+        partitions.push(Partition::new(vec![Column::from_strs(vals)]));
+    }
+    Frame::from_partitions(schema, partitions).unwrap()
+}
+
+fn main() {
+    let rows = env_usize("BENCH_ROWS", 20_000);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    println!("transform throughput vs workers ({rows} rows, {cores} cores):\n");
+
+    let pipeline = abstract_pipeline("abstract");
+    let mut base = 0.0;
+    for workers in [1usize, 2, cores, cores * 2] {
+        let f = frame(rows, workers.max(4) * 4, false);
+        let model = pipeline.fit(&f).unwrap();
+        let m = bench(&format!("transform workers={workers}"), 1, 5, || {
+            model.transform(black_box(f.clone()), workers).unwrap()
+        });
+        if workers == 1 {
+            base = m.mean_secs();
+        }
+        println!("  {}  speedup {:.2}x", m.report(), base / m.mean_secs());
+    }
+
+    println!("\nskew / rebalancing ablation (2 workers, 8 partitions, half the rows in one):\n");
+    let skewed = frame(rows, 8, true);
+    let model = pipeline.fit(&skewed).unwrap();
+    let m_skew = bench("skewed, no rebalance", 1, 5, || {
+        model.transform(black_box(skewed.clone()), 2).unwrap()
+    });
+    println!("  {}", m_skew.report());
+    let m_reb = bench("skewed, with rebalance", 1, 5, || {
+        let f = rebalance(black_box(skewed.clone()), 2);
+        model.transform(f, 2).unwrap()
+    });
+    println!("  {}", m_reb.report());
+    println!(
+        "  rebalance gain: {:.2}x",
+        m_skew.mean_secs() / m_reb.mean_secs()
+    );
+}

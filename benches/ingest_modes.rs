@@ -1,0 +1,77 @@
+//! Ablation bench — *why* CA ingestion blows up (paper Table 2's
+//! mechanism): isolates frame-append semantics from parsing by feeding
+//! both ingestion modes identical pre-parsed partitions, then shows the
+//! full file-to-frame paths.
+//!
+//!     cargo bench --bench ingest_modes
+
+use p3sapp::benchkit::{bench, black_box, env_usize};
+use p3sapp::corpus::{generate_corpus, CorpusSpec};
+use p3sapp::frame::{Column, Frame, LocalFrame, Partition, Schema};
+use p3sapp::ingest::append::ingest_files_append;
+use p3sapp::ingest::spark::{ingest_files, IngestOptions};
+use p3sapp::ingest::list_shards;
+
+fn main() {
+    let files_n = env_usize("BENCH_FILES", 60);
+    let rows_per_file = env_usize("BENCH_ROWS_PER_FILE", 400);
+    let schema = Schema::strings(&["title", "abstract"]);
+
+    // -- frame-growth semantics in isolation --------------------------
+    println!(
+        "frame growth semantics ({files_n} batches x {rows_per_file} rows, no parsing):\n"
+    );
+    let batch: Vec<Option<String>> =
+        (0..rows_per_file).map(|i| Some(format!("row value number {i}"))).collect();
+    let part = || {
+        Partition::new(vec![
+            Column::from_strs(batch.clone()),
+            Column::from_strs(batch.clone()),
+        ])
+    };
+
+    let m_append = bench("pandas-append (copy per batch)", 1, 3, || {
+        let mut data = LocalFrame::empty(schema.clone());
+        for _ in 0..files_n {
+            let inc = LocalFrame::from_columns(schema.clone(), part().into_columns()).unwrap();
+            data.append_copy(black_box(&inc)).unwrap();
+        }
+        data.num_rows()
+    });
+    println!("  {}", m_append.report());
+
+    let m_union = bench("spark-union (pointer append)", 1, 3, || {
+        let mut data = Frame::empty(schema.clone());
+        for _ in 0..files_n {
+            data.push_partition(black_box(part())).unwrap();
+        }
+        data.num_rows()
+    });
+    println!("  {}", m_union.report());
+    println!(
+        "  union/append advantage: {:.1}x (grows with file count — append is Θ(n·f))\n",
+        m_append.mean_secs() / m_union.mean_secs()
+    );
+
+    // -- full ingestion paths on a real corpus ------------------------
+    let dir = std::env::temp_dir().join("p3sapp-bench-ingest");
+    let mut spec = CorpusSpec::tier(2, 42);
+    spec.n_files = files_n.min(60);
+    generate_corpus(&spec, &dir).expect("corpus");
+    let files = list_shards(&dir).expect("shards");
+    println!("full ingestion paths ({} shard files):\n", files.len());
+
+    let m_ca = bench("CA sequential + append", 1, 3, || {
+        ingest_files_append(black_box(&files), &["title", "abstract"]).unwrap().num_rows()
+    });
+    println!("  {}", m_ca.report());
+    for workers in [1usize, 2, 4] {
+        let opts = IngestOptions { workers, queue_cap: 16 };
+        let m = bench(&format!("P3SAPP parallel x{workers}"), 1, 3, || {
+            ingest_files(black_box(&files), &["title", "abstract"], &opts)
+                .unwrap()
+                .num_rows()
+        });
+        println!("  {}  vs CA: {:.1}x", m.report(), m_ca.mean_secs() / m.mean_secs());
+    }
+}

@@ -1,0 +1,22 @@
+//! Bench E1 — paper Table 2 / Fig. 7: ingestion time, CA vs P3SAPP,
+//! across the five dataset tiers, with % reduction per tier.
+//!
+//!     cargo bench --bench ingestion
+//!     BENCH_SCALE=2 BENCH_TIERS=3 cargo bench --bench ingestion
+//!
+//! Expected shape: CA grows superlinearly (pandas append copies the
+//! whole frame per file), P3SAPP near-linearly; reduction grows with
+//! size (paper: 96.98% -> 99.68%).
+
+use p3sapp::benchkit::{env_f64, env_usize};
+use p3sapp::report::{run_suite, table2, SuiteOptions};
+
+fn main() {
+    let base = std::env::temp_dir().join("p3sapp-bench");
+    let mut opts = SuiteOptions::new(&base);
+    opts.scale = env_f64("BENCH_SCALE", 1.0);
+    opts.tiers = (1..=env_usize("BENCH_TIERS", 5)).collect();
+    let suite = run_suite(&opts).expect("suite");
+    println!("\n{}", table2(&suite).render());
+    println!("csv:\n{}", table2(&suite).to_csv());
+}

@@ -1,0 +1,21 @@
+//! Bench E2 — paper Table 3 / Fig. 8: preprocessing time split into
+//! pre-cleaning / cleaning / post-cleaning, CA vs P3SAPP, across tiers.
+//!
+//!     cargo bench --bench preprocessing
+//!
+//! Expected shape (paper §5.1.2): CA's time is dominated by the cleaning
+//! stage; P3SAPP's by post-cleaning (the Spark->pandas conversion);
+//! total preprocessing reduction ~40-45%.
+
+use p3sapp::benchkit::{env_f64, env_usize};
+use p3sapp::report::{run_suite, table3, SuiteOptions};
+
+fn main() {
+    let base = std::env::temp_dir().join("p3sapp-bench");
+    let mut opts = SuiteOptions::new(&base);
+    opts.scale = env_f64("BENCH_SCALE", 1.0);
+    opts.tiers = (1..=env_usize("BENCH_TIERS", 5)).collect();
+    let suite = run_suite(&opts).expect("suite");
+    println!("\n{}", table3(&suite).render());
+    println!("csv:\n{}", table3(&suite).to_csv());
+}

@@ -1,0 +1,79 @@
+//! Ablation bench — per-stage cost of each transformer (which cleaning
+//! stage dominates, paper §5.1.2's claim that "cleaning ... takes a
+//! chunk of the time for the conventional approach"), plus the
+//! column-sweep (P3SAPP) vs row-loop (CA) cleaning comparison at equal
+//! thread count (isolates the *pipeline* win from the *parallelism* win).
+//!
+//!     cargo bench --bench stages
+
+use p3sapp::baseline::{clean_abstract_row, clean_title_row};
+use p3sapp::benchkit::{bench, black_box, env_usize};
+use p3sapp::corpus::{record, Rng};
+use p3sapp::frame::Column;
+use p3sapp::pipeline::stages::*;
+use p3sapp::pipeline::Transformer;
+
+fn sample_column(rows: usize) -> Column {
+    let mut rng = Rng::new(99);
+    let vals: Vec<Option<String>> = (0..rows)
+        .map(|_| {
+            let text = record::abstract_text(&mut rng, 5);
+            Some(record::add_html_noise(&mut rng, text, 0.4))
+        })
+        .collect();
+    Column::from_strs(vals)
+}
+
+fn main() {
+    let rows = env_usize("BENCH_ROWS", 20_000);
+    let col = sample_column(rows);
+    let lowered = ConvertToLower::new("c").transform_column(&col);
+    println!("per-stage transform cost over {rows} abstracts:\n");
+
+    let stages: Vec<(&str, Box<dyn Transformer>)> = vec![
+        ("ConvertToLower", Box::new(ConvertToLower::new("c"))),
+        ("RemoveHTMLTags", Box::new(RemoveHtmlTags::new("c"))),
+        ("RemoveUnwantedCharacters", Box::new(RemoveUnwantedCharacters::new("c"))),
+        ("StopWordsRemoverStr", Box::new(StopWordsRemoverStr::new("c"))),
+        ("RemoveShortWords(1)", Box::new(RemoveShortWords::new("c", 1))),
+        ("Tokenizer", Box::new(Tokenizer::new("c", "w"))),
+    ];
+    let mut total = 0.0;
+    for (name, stage) in &stages {
+        // HTML/unwanted get the raw column; later stages get lowered text.
+        let input = if *name == "ConvertToLower" || *name == "RemoveHTMLTags" {
+            &col
+        } else {
+            &lowered
+        };
+        let m = bench(name, 1, 5, || stage.transform_column(black_box(input)));
+        total += m.mean_secs();
+        println!("  {}", m.report());
+    }
+    println!("  sum of stage means: {total:.3} s");
+
+    // Column-sweep pipeline vs row-loop chain, both single-threaded.
+    println!("\ncleaning architecture comparison (single thread, {rows} rows):\n");
+    let m_rows = bench("CA row-loop (title+abstract recipes)", 1, 5, || {
+        let mut out = 0usize;
+        for v in black_box(&col).strs().iter().flatten() {
+            out += clean_title_row(v).len();
+            out += clean_abstract_row(v).len();
+        }
+        out
+    });
+    println!("  {}", m_rows.report());
+    let m_cols = bench("P3SAPP column sweep (same work)", 1, 5, || {
+        let t = ConvertToLower::new("c").transform_column(black_box(&col));
+        let t = RemoveHtmlTags::new("c").transform_column(&t);
+        let title_done = RemoveUnwantedCharacters::new("c").transform_column(&t);
+        let a = StopWordsRemoverStr::new("c").transform_column(&title_done);
+        let a = RemoveShortWords::new("c", 1).transform_column(&a);
+        (title_done.len(), a.len())
+    });
+    println!("  {}", m_cols.report());
+    println!(
+        "  column/row speedup: {:.2}x",
+        m_rows.mean_secs() / m_cols.mean_secs()
+    );
+}

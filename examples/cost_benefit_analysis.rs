@@ -1,0 +1,84 @@
+//! Cost-benefit analysis (paper §5.3, Table 7 / Figs. 11-13): measure
+//! cumulative preprocessing times for both approaches on two tiers,
+//! measure real MTT/step on the AOT-compiled model, and evaluate the
+//! paper's cost equations at 10/25/50 epochs and a configurable hourly
+//! price.
+//!
+//!     make artifacts && cargo run --release --example cost_benefit_analysis
+
+use p3sapp::analysis::cost::{cost, evaluate, saving_to_mtt_ratio, CostInputs, EPOCH_SETTINGS};
+use p3sapp::report::{run_suite, SuiteOptions, TextTable, TrainTimeModel};
+use p3sapp::runtime::{Session, Trainer};
+use p3sapp::vocab::{Batcher, Vocabulary};
+use p3sapp::Result;
+
+fn main() -> Result<()> {
+    let hourly_price: f64 = std::env::var("HOURLY_PRICE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.90); // the paper-era FloydHub GPU rate ballpark
+
+    // Two tiers keep this example fast; `repro report --exp e5` runs all 5.
+    let base = std::env::temp_dir().join("p3sapp-cost-example");
+    let mut opts = SuiteOptions::new(&base);
+    opts.tiers = vec![1, 2];
+    opts.scale = 0.5;
+    let suite = run_suite(&opts)?;
+
+    // Measure the real per-step training cost on tier 1's clean frame.
+    let frame = &suite.tiers[0].p3sapp.frame;
+    let session = Session::cpu("artifacts")?;
+    let mut trainer = Trainer::new(session)?;
+    let cfg = trainer.manifest.config.clone();
+    let texts: Vec<&str> = (0..frame.num_rows())
+        .flat_map(|i| {
+            [
+                frame.column(0).get_str(i).unwrap_or(""),
+                frame.column(1).get_str(i).unwrap_or(""),
+            ]
+        })
+        .collect();
+    let vocab = Vocabulary::build(texts.into_iter(), cfg.vocab);
+    let mut batcher = Batcher::new(
+        frame, &vocab, "title", "abstract", cfg.batch, cfg.src_len, cfg.tgt_len, 7,
+    )?;
+    trainer.train_step(&batcher.next_batch())?; // warm-up
+    let stats = trainer.train_loop(5, || batcher.next_batch())?;
+    let sec_per_step = stats.iter().map(|s| s.wall_secs).sum::<f64>() / stats.len() as f64;
+    let model = TrainTimeModel { sec_per_step, batch_size: cfg.batch, train_frac: 0.9 };
+    println!("measured training cost: {sec_per_step:.3} s/step (batch {})\n", cfg.batch);
+
+    let mut t = TextTable::new(
+        format!("Cost-benefit at ${hourly_price}/h (eqs. 6-11)"),
+        &["tier", "epochs", "T_ca (h)", "T_pa (h)", "cost CA ($)", "cost P3 ($)", "CB (%)"],
+    );
+    for tier in &suite.tiers {
+        let ca = tier.ca.as_ref().expect("suite ran with CA");
+        let inputs = CostInputs {
+            tc_ca_secs: ca.cumulative_secs(),
+            tc_p3sapp_secs: tier.p3sapp.cumulative_secs(),
+            mtt_per_epoch_secs: model.mtt_per_epoch(tier.p3sapp.rows_out),
+        };
+        for &e in &EPOCH_SETTINGS {
+            let row = evaluate(&inputs, e);
+            t.row(vec![
+                tier.tier.to_string(),
+                e.to_string(),
+                format!("{:.4}", row.total_ca_hours),
+                format!("{:.4}", row.total_p3sapp_hours),
+                format!("{:.4}", cost(row.total_ca_hours * 3600.0, hourly_price)),
+                format!("{:.4}", cost(row.total_p3sapp_hours * 3600.0, hourly_price)),
+                format!("{:.3}", row.cost_benefit_pct),
+            ]);
+        }
+        println!(
+            "tier {}: time saving = {:.3} s = {:.3} MTT-epochs (paper fig. 13 shape: grows with size)",
+            tier.tier,
+            inputs.tc_ca_secs - inputs.tc_p3sapp_secs,
+            saving_to_mtt_ratio(&inputs)
+        );
+    }
+    print!("\n{}", t.render());
+    println!("\nExpected shape (paper §6): CB rises with dataset size, falls with epochs.");
+    Ok(())
+}

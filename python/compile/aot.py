@@ -1,0 +1,162 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas kernels) → HLO text artifacts
+executed by the Rust runtime (rust/src/runtime/).
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts (all shapes fixed at lowering time from `Config`):
+  init.hlo.txt        ()                                  -> (params, m, v)
+  train_step.hlo.txt  (params, m, v, step, batch...)      -> (loss, params', m', v')
+  encode.hlo.txt      (params, src1, mask1)               -> (enc_h, h0, c0)
+  decode_step.hlo.txt (params, enc_h, mask1, tok, h, c)   -> (logits, h', c')
+  manifest.json       parameter order/shapes + config + artifact signatures
+
+`make artifacts` runs this once; Python never touches the request path.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(cfg: M.Config, seed: int):
+    """Lower every exported function; returns {name: hlo_text}."""
+    b, s, t = cfg.batch, cfg.src_len, cfg.tgt_len
+    f32, i32 = jnp.float32, jnp.int32
+
+    params_spec = [
+        jax.ShapeDtypeStruct(shape, f32) for _, shape in M.param_order(cfg)
+    ]
+
+    def spec(shape, dtype=f32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    out = {}
+
+    # -- init ---------------------------------------------------------
+    def init():
+        return M.init_fn(cfg, seed)
+
+    out["init"] = to_hlo_text(jax.jit(init).lower())
+
+    # -- train step ---------------------------------------------------
+    def train_step(params, m, v, step, src, src_mask, tgt_in, tgt_out, tgt_mask):
+        return M.train_step(cfg, params, m, v, step, src, src_mask,
+                            tgt_in, tgt_out, tgt_mask)
+
+    out["train_step"] = to_hlo_text(
+        jax.jit(train_step, keep_unused=True).lower(
+            params_spec, params_spec, params_spec,
+            spec((), f32),
+            spec((b, s), i32), spec((b, s), f32),
+            spec((b, t), i32), spec((b, t), i32), spec((b, t), f32),
+        )
+    )
+
+    # -- inference (batch 1) -------------------------------------------
+    def encode(params, src, src_mask):
+        return M.encode(cfg, params, src, src_mask)
+
+    out["encode"] = to_hlo_text(
+        jax.jit(encode, keep_unused=True).lower(params_spec, spec((1, s), i32), spec((1, s), f32))
+    )
+
+    def decode_step(params, enc_h, src_mask, token, h, c):
+        return M.decode_step(cfg, params, enc_h, src_mask, token, h, c)
+
+    out["decode_step"] = to_hlo_text(
+        jax.jit(decode_step, keep_unused=True).lower(
+            params_spec,
+            spec((1, s, cfg.hidden), f32), spec((1, s), f32),
+            spec((1,), i32), spec((1, cfg.hidden), f32), spec((1, cfg.hidden), f32),
+        )
+    )
+    return out
+
+
+def manifest(cfg: M.Config, seed: int) -> dict:
+    return {
+        "config": dataclasses.asdict(cfg),
+        "seed": seed,
+        "special_tokens": {"pad": M.PAD, "bos": M.BOS, "eos": M.EOS, "unk": M.UNK},
+        "param_order": [
+            {"name": name, "shape": list(shape)} for name, shape in M.param_order(cfg)
+        ],
+        "param_count": M.param_count(cfg),
+        "artifacts": {
+            "init": {
+                "inputs": [],
+                "outputs": "params+m+v (3P tensors, param_order each)",
+            },
+            "train_step": {
+                "inputs": "params+m+v (3P), step f32[], src i32[B,S], src_mask f32[B,S], "
+                          "tgt_in i32[B,T], tgt_out i32[B,T], tgt_mask f32[B,T]",
+                "outputs": "loss f32[], params'+m'+v' (3P)",
+            },
+            "encode": {
+                "inputs": "params (P), src i32[1,S], src_mask f32[1,S]",
+                "outputs": "enc_h f32[1,S,H], h0 f32[1,H], c0 f32[1,H]",
+            },
+            "decode_step": {
+                "inputs": "params (P), enc_h f32[1,S,H], src_mask f32[1,S], "
+                          "token i32[1], h f32[1,H], c f32[1,H]",
+                "outputs": "logits f32[1,V], h' f32[1,H], c' f32[1,H]",
+            },
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--vocab", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--src-len", type=int, default=None)
+    ap.add_argument("--tgt-len", type=int, default=None)
+    ap.add_argument("--hidden", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = M.Config.small()
+    overrides = {
+        k: getattr(args, k)
+        for k in ("vocab", "batch", "src_len", "tgt_len", "hidden")
+        if getattr(args, k) is not None
+    }
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    texts = lower_all(cfg, args.seed)
+    for name, text in texts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(cfg, args.seed), f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: fused Bahdanau additive attention (paper eqs. 1-3).
+
+The paper's Keras implementation materializes the full score tensor and
+runs softmax + the weighted sum as three separate GPU ops. The TPU-shaped
+fusion here computes, per batch tile, in one VMEM-resident pass:
+
+    e_ij    = v . tanh(enc_h @ W_enc + dec_s @ W_dec)   (eq. 1)
+    a_ij    = masked-softmax(e_ij)                      (eq. 2)
+    C_i     = sum_j a_ij h_j                            (eq. 3)
+
+so `enc_h` is read from HBM exactly once and the [B, T] score matrix
+never leaves VMEM. BlockSpec: grid over batch tiles; weights broadcast;
+the full [T, H] encoder block for the tile rows is VMEM-resident
+(T=64, H=256 → 64 KB/row tile — small against a 16 MB budget).
+
+interpret=True for CPU-PJRT executability (see lstm_cell.py).
+Differentiable via custom VJP against the verified ref implementation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _attention_kernel(enc_ref, dec_ref, we_ref, wd_ref, v_ref, mask_ref,
+                      ctx_ref, wts_ref):
+    enc = enc_ref[...]      # [bb, T, H]
+    dec = dec_ref[...]      # [bb, H]
+    w_enc = we_ref[...]     # [H, A]
+    w_dec = wd_ref[...]     # [H, A]
+    v = v_ref[...]          # [A]
+    mask = mask_ref[...]    # [bb, T]
+
+    # eq. 1 — additive alignment scores.
+    proj = jnp.tanh(enc @ w_enc + (dec @ w_dec)[:, None, :])  # [bb, T, A]
+    scores = proj @ v                                         # [bb, T]
+
+    # eq. 2 — masked, numerically-stable softmax.
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(mask > 0, scores, neg)
+    scores = scores - scores.max(axis=-1, keepdims=True)
+    exp = jnp.exp(scores) * (mask > 0)
+    weights = exp / (exp.sum(axis=-1, keepdims=True) + 1e-9)
+
+    # eq. 3 — attended context vector.
+    ctx_ref[...] = jnp.einsum("bt,bth->bh", weights, enc)
+    wts_ref[...] = weights
+
+
+def _batch_tile(batch: int) -> int:
+    for cand in (16, 8, 4, 2, 1):
+        if batch % cand == 0:
+            return cand
+    return batch
+
+
+def attention_fwd(enc_h, dec_s, w_enc, w_dec, v, mask):
+    """Pallas forward. Shapes as in ref.bahdanau_attention."""
+    batch, seq, hidden = enc_h.shape
+    attn = w_enc.shape[-1]
+    bb = _batch_tile(batch)
+    grid = (batch // bb,)
+    return pl.pallas_call(
+        _attention_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, seq, hidden), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden, attn), lambda i: (0, 0)),
+            pl.BlockSpec((hidden, attn), lambda i: (0, 0)),
+            pl.BlockSpec((attn,), lambda i: (0,)),
+            pl.BlockSpec((bb, seq), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((bb, seq), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hidden), enc_h.dtype),
+            jax.ShapeDtypeStruct((batch, seq), enc_h.dtype),
+        ],
+        interpret=True,
+    )(enc_h, dec_s, w_enc, w_dec, v, mask)
+
+
+@jax.custom_vjp
+def attention(enc_h, dec_s, w_enc, w_dec, v, mask):
+    """Differentiable fused attention (Pallas forward, ref backward)."""
+    return attention_fwd(enc_h, dec_s, w_enc, w_dec, v, mask)
+
+
+def _vjp_fwd(enc_h, dec_s, w_enc, w_dec, v, mask):
+    out = attention_fwd(enc_h, dec_s, w_enc, w_dec, v, mask)
+    return out, (enc_h, dec_s, w_enc, w_dec, v, mask)
+
+
+def _vjp_bwd(res, g):
+    _, vjp = jax.vjp(ref.bahdanau_attention, *res)
+    return vjp(g)
+
+
+attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def vmem_estimate(batch: int, seq: int, hidden: int, attn: int,
+                  dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM residency estimate (DESIGN.md §Perf)."""
+    bb = _batch_tile(batch)
+    tiles = (
+        bb * seq * hidden      # encoder block
+        + bb * hidden          # decoder state
+        + 2 * hidden * attn    # projections
+        + attn                 # v
+        + 2 * bb * seq         # mask + weights
+        + bb * seq * attn      # proj intermediate
+        + bb * hidden          # context out
+    )
+    return tiles * dtype_bytes

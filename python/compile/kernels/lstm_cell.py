@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: fused LSTM cell.
+
+TPU-shaped rethink of the cuDNN LSTM the paper trains on a K80 (see
+DESIGN.md §Hardware-Adaptation): the four gate GEMVs are packed into one
+`[B, I+H] @ [I+H, 4H]` matmul — a single MXU-systolic-friendly contraction
+— and all gate nonlinearities + state update fuse into the same kernel, so
+the `[B, 4H]` pre-activation tensor never round-trips to HBM.
+
+BlockSpec strategy: one grid step per batch tile (`bb` rows). Weights
+(`w`, `b`) are broadcast to every step (index_map pins them to block 0);
+x/h/c tiles stream through VMEM. For our model sizes a full (x,h,w) tile
+is ≲ 1.5 MB — comfortably inside a 16 MB VMEM budget (estimate recorded
+in DESIGN.md §Perf).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO, which is how
+it rides inside the AOT artifacts the Rust runtime executes.
+
+Training support: `lstm_cell` carries a custom VJP whose backward is
+derived from the verified-identical `ref.lstm_cell`, so `jax.grad`
+through the Pallas forward is exact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, w_ref, b_ref, h_out_ref, c_out_ref):
+    """One batch-tile of the fused cell."""
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    hidden = h.shape[-1]
+    # Single packed contraction for all four gates (MXU-friendly).
+    zx = jnp.concatenate([x, h], axis=-1) @ w + b
+    i = jax.nn.sigmoid(zx[:, 0 * hidden : 1 * hidden])
+    f = jax.nn.sigmoid(zx[:, 1 * hidden : 2 * hidden])
+    g = jnp.tanh(zx[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(zx[:, 3 * hidden : 4 * hidden])
+    c_new = f * c + i * g
+    h_out_ref[...] = o * jnp.tanh(c_new)
+    c_out_ref[...] = c_new
+
+
+def _batch_tile(batch: int) -> int:
+    """Largest divisor of `batch` that is <= 32 (8-row multiples keep the
+    sublane dimension aligned on real TPU; on CPU it just bounds VMEM)."""
+    for cand in (32, 16, 8, 4, 2, 1):
+        if batch % cand == 0:
+            return cand
+    return batch
+
+
+def lstm_cell_fwd(x, h, c, w, b):
+    """Pallas forward for the fused LSTM cell. Shapes as in ref.lstm_cell."""
+    batch, _ = x.shape
+    hidden = h.shape[-1]
+    in_dim = x.shape[-1]
+    bb = _batch_tile(batch)
+    grid = (batch // bb,)
+    return pl.pallas_call(
+        _lstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((in_dim + hidden, 4 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((4 * hidden,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+        ],
+        interpret=True,
+    )(x, h, c, w, b)
+
+
+@jax.custom_vjp
+def lstm_cell(x, h, c, w, b):
+    """Differentiable fused LSTM cell (Pallas forward, ref backward)."""
+    h_new, c_new = lstm_cell_fwd(x, h, c, w, b)
+    return h_new, c_new
+
+
+def _vjp_fwd(x, h, c, w, b):
+    out = lstm_cell_fwd(x, h, c, w, b)
+    return out, (x, h, c, w, b)
+
+
+def _vjp_bwd(res, g):
+    _, vjp = jax.vjp(ref.lstm_cell, *res)
+    return vjp(g)
+
+
+lstm_cell.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_estimate(batch: int, in_dim: int, hidden: int, dtype_bytes: int = 4) -> int:
+    """Bytes resident in VMEM for one grid step (perf-model input for
+    DESIGN.md §Perf; interpret-mode wallclock is NOT a TPU proxy)."""
+    bb = _batch_tile(batch)
+    tiles = (
+        bb * in_dim  # x tile
+        + 2 * bb * hidden  # h, c tiles
+        + (in_dim + hidden) * 4 * hidden  # packed weights
+        + 4 * hidden  # bias
+        + bb * 4 * hidden  # gate pre-activations
+        + 2 * bb * hidden  # outputs
+    )
+    return tiles * dtype_bytes

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package must match its reference here to float32
+tolerance under pytest + hypothesis sweeps (python/tests/test_kernel.py).
+The references are also used as the custom-vjp backward bodies, so the
+training path differentiates through *verified-identical* math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell(x, h, c, w, b):
+    """Fused LSTM cell, reference semantics.
+
+    Args:
+      x: [B, I] input at this time step.
+      h: [B, H] previous hidden state.
+      c: [B, H] previous cell state.
+      w: [I+H, 4H] packed gate weights (input, forget, cell, output).
+      b: [4H] packed gate biases.
+
+    Returns:
+      (h', c'): next hidden and cell states, each [B, H].
+    """
+    hidden = h.shape[-1]
+    zx = jnp.concatenate([x, h], axis=-1) @ w + b
+    i = jax.nn.sigmoid(zx[:, 0 * hidden : 1 * hidden])
+    f = jax.nn.sigmoid(zx[:, 1 * hidden : 2 * hidden])
+    g = jnp.tanh(zx[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(zx[:, 3 * hidden : 4 * hidden])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def bahdanau_attention(enc_h, dec_s, w_enc, w_dec, v, mask):
+    """Additive (Bahdanau) attention, reference semantics — eqs. (1)-(3)
+    of the paper.
+
+    Args:
+      enc_h: [B, T, H] encoder hidden states (h_j).
+      dec_s: [B, H] decoder state at this step (s_i).
+      w_enc: [H, A] encoder projection.
+      w_dec: [H, A] decoder projection.
+      v:     [A]    score vector.
+      mask:  [B, T] 1.0 for real tokens, 0.0 for padding.
+
+    Returns:
+      (context [B, H], weights [B, T]): attended context vector C_i and
+      attention weights a_ij.
+    """
+    # e_ij = v . tanh(W_enc h_j + W_dec s_i)       (eq. 1, additive score)
+    proj = jnp.tanh(enc_h @ w_enc + (dec_s @ w_dec)[:, None, :])  # [B, T, A]
+    scores = proj @ v  # [B, T]
+    # Masked softmax                               (eq. 2)
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(mask > 0, scores, neg)
+    scores = scores - scores.max(axis=-1, keepdims=True)
+    exp = jnp.exp(scores) * (mask > 0)
+    weights = exp / (exp.sum(axis=-1, keepdims=True) + 1e-9)
+    # C_i = sum_j a_ij h_j                         (eq. 3)
+    context = jnp.einsum("bt,bth->bh", weights, enc_h)
+    return context, weights

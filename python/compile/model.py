@@ -1,0 +1,225 @@
+"""L2: the case-study model — LSTM seq2seq title generation (paper §4.2.3).
+
+Architecture, matching the paper's Keras implementation shape:
+  - embedding shared by encoder and decoder,
+  - 3-layer *stacked* LSTM encoder ("a 3-layer stacked LSTM is used for
+    encoder ... ensures better sequence representation"),
+  - single-layer LSTM decoder initialized from the encoder's final
+    hidden/cell state,
+  - Bahdanau additive attention at every decoder step (eqs. 1-5),
+  - dense vocab projection over concat([s_i; C_i]) (eq. 4-5),
+  - masked softmax cross-entropy, Adam.
+
+Both recurrences call the L1 Pallas kernels (`kernels.lstm_cell`,
+`kernels.attention`), so the kernels lower into every exported HLO
+artifact. Everything here is build-time only: `aot.py` lowers
+`init_fn` / `train_step` / `encode` / `decode_step` to HLO text executed
+by the Rust runtime (rust/src/runtime/).
+
+Parameter I/O contract with Rust: params travel as a flat list of
+tensors in `PARAM_ORDER`; Adam state as two more such lists. The
+manifest (artifacts/manifest.json) pins names, shapes and the order.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.lstm_cell import lstm_cell
+
+# Special token ids (mirrored in rust/src/vocab/).
+PAD, BOS, EOS, UNK = 0, 1, 2, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Model + batch geometry (fixed at AOT time)."""
+
+    vocab: int = 512
+    embed: int = 64
+    hidden: int = 128
+    attn: int = 64
+    enc_layers: int = 3
+    src_len: int = 48
+    tgt_len: int = 12
+    batch: int = 32
+    lr: float = 1e-3
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+
+    @staticmethod
+    def small() -> "Config":
+        return Config()
+
+
+def param_order(cfg: Config):
+    """The flat parameter list: (name, shape) in wire order."""
+    e, h, a, v = cfg.embed, cfg.hidden, cfg.attn, cfg.vocab
+    order = [("embedding", (v, e))]
+    in_dim = e
+    for layer in range(cfg.enc_layers):
+        order.append((f"enc_w_{layer}", (in_dim + h, 4 * h)))
+        order.append((f"enc_b_{layer}", (4 * h,)))
+        in_dim = h
+    order += [
+        ("dec_w", (e + h, 4 * h)),
+        ("dec_b", (4 * h,)),
+        ("attn_w_enc", (h, a)),
+        ("attn_w_dec", (h, a)),
+        ("attn_v", (a,)),
+        ("out_w", (2 * h, v)),
+        ("out_b", (v,)),
+    ]
+    return order
+
+
+def init_params(cfg: Config, seed: int = 0):
+    """Glorot-ish init, deterministic in `seed`. Returns the flat list."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_order(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_b", "_v")) or len(shape) == 1:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+    return params
+
+
+def _unpack(cfg: Config, flat):
+    return {name: t for (name, _), t in zip(param_order(cfg), flat)}
+
+
+def encode_states(cfg: Config, p, src, src_mask):
+    """Run the stacked encoder over `src` [B, S] int32.
+
+    Returns (enc_h [B, S, H] top-layer states, h_fin [B, H], c_fin [B, H]).
+    Padding positions carry the last real state forward (mask-gated
+    update), matching Keras masking semantics.
+    """
+    b, s = src.shape
+    h_dim = cfg.hidden
+    emb = jnp.take(p["embedding"], src, axis=0)  # [B, S, E]
+
+    layer_in = emb
+    h_fin = c_fin = None
+    for layer in range(cfg.enc_layers):
+        w, bias = p[f"enc_w_{layer}"], p[f"enc_b_{layer}"]
+
+        def step(carry, xs, w=w, bias=bias):
+            h, c = carry
+            x_t, m_t = xs
+            h_new, c_new = lstm_cell(x_t, h, c, w, bias)
+            m = m_t[:, None]
+            h = m * h_new + (1.0 - m) * h
+            c = m * c_new + (1.0 - m) * c
+            return (h, c), h
+
+        init = (jnp.zeros((b, h_dim), jnp.float32), jnp.zeros((b, h_dim), jnp.float32))
+        xs = (jnp.swapaxes(layer_in, 0, 1), jnp.swapaxes(src_mask, 0, 1))
+        (h_fin, c_fin), hs = jax.lax.scan(step, init, xs)
+        layer_in = jnp.swapaxes(hs, 0, 1)  # [B, S, H] feeds next layer
+    return layer_in, h_fin, c_fin
+
+
+def decoder_step(cfg: Config, p, enc_h, src_mask, token, h, c):
+    """One decoder time-step: embed prev token, LSTM, attend, project.
+
+    Returns (logits [B, V], h', c').
+    """
+    emb = jnp.take(p["embedding"], token, axis=0)  # [B, E]
+    x = jnp.concatenate([emb], axis=-1)
+    h, c = lstm_cell(x, h, c, p["dec_w"], p["dec_b"])
+    # eqs. 1-3: attended context from the encoder states.
+    ctx, _ = attention(enc_h, h, p["attn_w_enc"], p["attn_w_dec"], p["attn_v"], src_mask)
+    # eq. 4: S_i = concat([s_i; C_i]);  eq. 5: y_i = dense(S_i).
+    s_cat = jnp.concatenate([h, ctx], axis=-1)
+    logits = s_cat @ p["out_w"] + p["out_b"]
+    return logits, h, c
+
+
+def loss_fn(cfg: Config, flat_params, src, src_mask, tgt_in, tgt_out, tgt_mask):
+    """Teacher-forced masked cross-entropy over the batch."""
+    p = _unpack(cfg, flat_params)
+    enc_h, h0, c0 = encode_states(cfg, p, src, src_mask)
+
+    def step(carry, xs):
+        h, c = carry
+        tok_in, tok_out, m = xs
+        logits, h, c = decoder_step(cfg, p, enc_h, src_mask, tok_in, h, c)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tok_out[:, None], axis=-1)[:, 0]
+        return (h, c), nll * m
+
+    xs = (
+        jnp.swapaxes(tgt_in, 0, 1),
+        jnp.swapaxes(tgt_out, 0, 1),
+        jnp.swapaxes(tgt_mask, 0, 1),
+    )
+    (_, _), nlls = jax.lax.scan(step, (h0, c0), xs)
+    return nlls.sum() / jnp.maximum(tgt_mask.sum(), 1.0)
+
+
+def train_step(cfg: Config, flat_params, adam_m, adam_v, step, src, src_mask,
+               tgt_in, tgt_out, tgt_mask):
+    """One Adam step. Returns (loss, params', m', v').
+
+    `step` is a float32 scalar step counter (1-based) for bias correction.
+    """
+    loss, grads = jax.value_and_grad(loss_fn, argnums=1)(
+        cfg, flat_params, src, src_mask, tgt_in, tgt_out, tgt_mask
+    )
+    b1, b2, eps, lr = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.lr
+    new_p, new_m, new_v = [], [], []
+    for pi, gi, mi, vi in zip(flat_params, grads, adam_m, adam_v):
+        mi = b1 * mi + (1.0 - b1) * gi
+        vi = b2 * vi + (1.0 - b2) * gi * gi
+        m_hat = mi / (1.0 - b1**step)
+        v_hat = vi / (1.0 - b2**step)
+        new_p.append(pi - lr * m_hat / (jnp.sqrt(v_hat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return loss, new_p, new_m, new_v
+
+
+def init_fn(cfg: Config, seed: int = 0):
+    """Fresh (params, m, v) — exported so the Rust runtime gets its
+    initial state by executing HLO, no Python at run time."""
+    params = init_params(cfg, seed)
+    zeros = [jnp.zeros_like(t) for t in params]
+    return params, zeros, [jnp.zeros_like(t) for t in params]
+
+
+def encode(cfg: Config, flat_params, src, src_mask):
+    """Inference-side encoder (paper Algorithm 3 step 1)."""
+    p = _unpack(cfg, flat_params)
+    return encode_states(cfg, p, src, src_mask)
+
+
+def decode_step(cfg: Config, flat_params, enc_h, src_mask, token, h, c):
+    """Inference-side single decoder step (Algorithm 3 steps 3-5).
+    Greedy argmax happens on the Rust side over the returned logits."""
+    p = _unpack(cfg, flat_params)
+    return decoder_step(cfg, p, enc_h, src_mask, token, h, c)
+
+
+@functools.lru_cache(maxsize=None)
+def n_params(cfg: Config) -> int:
+    return len(param_order(cfg))
+
+
+def param_count(cfg: Config) -> int:
+    """Total scalar parameters (README/EXPERIMENTS bookkeeping)."""
+    total = 0
+    for _, shape in param_order(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total

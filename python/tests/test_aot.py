@@ -1,0 +1,96 @@
+"""AOT lowering contract tests: the HLO-text artifacts must keep the
+shape/ordering contract the Rust runtime (runtime/manifest.rs,
+trainer.rs, generator.rs) depends on."""
+
+import re
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    # Small geometry: lowering the full default takes seconds; the
+    # contract is geometry-independent.
+    return M.Config(vocab=64, embed=16, hidden=24, attn=16,
+                    src_len=10, tgt_len=5, batch=4)
+
+
+@pytest.fixture(scope="module")
+def texts(cfg):
+    return aot.lower_all(cfg, seed=0)
+
+
+def entry_signature(hlo_text):
+    """Parse the module header's entry_computation_layout:
+    `HloModule name, entry_computation_layout={(<params>)->(<ret>)}`."""
+    header = hlo_text.splitlines()[0]
+    m = re.search(r"entry_computation_layout=\{(?P<sig>.*)\}", header)
+    assert m, "no entry_computation_layout found"
+    params_part, ret = m.group("sig").split("->", 1)
+    raw = re.sub(r"/\*.*?\*/", "", params_part)
+    # Split on commas that separate tensor types (each starts a dtype
+    # token like f32[ / s32[), not commas inside layout braces.
+    params = re.findall(r"[a-z]\d+\[[^\]]*\]", raw)
+    return params, ret
+
+
+def test_all_four_artifacts_lower(texts):
+    assert set(texts) == {"init", "train_step", "encode", "decode_step"}
+    for name, text in texts.items():
+        assert "ENTRY" in text, name
+        assert len(text) > 1000, name
+
+
+def test_init_has_no_inputs_and_3p_outputs(texts, cfg):
+    params, ret = entry_signature(texts["init"])
+    assert params == []
+    # Tuple of 3P tensors.
+    assert ret.count("f32[") == 3 * len(M.param_order(cfg))
+
+
+def test_train_step_signature(texts, cfg):
+    p = len(M.param_order(cfg))
+    params, ret = entry_signature(texts["train_step"])
+    # keep_unused=True: every input must survive lowering for the wire
+    # contract (3P + step + 5 batch tensors).
+    assert len(params) == 3 * p + 6, f"{len(params)} params"
+    # Outputs: loss + 3P.
+    assert ret.count("f32[") == 1 + 3 * p
+
+
+def test_encode_signature(texts, cfg):
+    p = len(M.param_order(cfg))
+    params, ret = entry_signature(texts["encode"])
+    assert len(params) == p + 2
+    # enc_h [1,S,H], h0, c0.
+    assert f"f32[1,{cfg.src_len},{cfg.hidden}]" in ret
+    assert ret.count(f"f32[1,{cfg.hidden}]") == 2
+
+
+def test_decode_step_signature(texts, cfg):
+    p = len(M.param_order(cfg))
+    params, ret = entry_signature(texts["decode_step"])
+    assert len(params) == p + 5
+    assert f"f32[1,{cfg.vocab}]" in ret  # logits
+
+
+def test_scan_not_unrolled(texts):
+    # Time recursion must stay a while loop: code size O(1) in seq_len.
+    assert texts["train_step"].count("while(") >= 4
+    assert texts["encode"].count("while(") >= 3  # one per stacked layer
+
+
+def test_manifest_consistent_with_lowering(cfg):
+    man = aot.manifest(cfg, seed=0)
+    assert man["param_count"] == M.param_count(cfg)
+    assert len(man["param_order"]) == len(M.param_order(cfg))
+    assert set(man["artifacts"]) == {"init", "train_step", "encode", "decode_step"}
+
+
+def test_lowering_is_deterministic(cfg):
+    a = aot.lower_all(cfg, seed=0)["encode"]
+    b = aot.lower_all(cfg, seed=0)["encode"]
+    assert a == b

@@ -1,0 +1,242 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref — the CORE
+correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import lstm_cell as lstm_k
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def lstm_inputs(seed, batch, in_dim, hidden, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    return (
+        rand(ks[0], (batch, in_dim), dtype),
+        rand(ks[1], (batch, hidden), dtype),
+        rand(ks[2], (batch, hidden), dtype),
+        rand(ks[3], (in_dim + hidden, 4 * hidden), dtype, 0.2),
+        rand(ks[4], (4 * hidden,), dtype, 0.1),
+    )
+
+
+def attn_inputs(seed, batch, seq, hidden, attn, lens=None, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    enc = rand(ks[0], (batch, seq, hidden), dtype)
+    dec = rand(ks[1], (batch, hidden), dtype)
+    w_enc = rand(ks[2], (hidden, attn), dtype, 0.2)
+    w_dec = rand(ks[3], (hidden, attn), dtype, 0.2)
+    v = rand(ks[4], (attn,), dtype, 0.5)
+    if lens is None:
+        lens = [seq] * batch
+    mask = (jnp.arange(seq)[None, :] < jnp.asarray(lens)[:, None]).astype(dtype)
+    return enc, dec, w_enc, w_dec, v, mask
+
+
+# ---------------------------------------------------------------- LSTM
+
+
+class TestLstmCell:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        batch=st.sampled_from([1, 2, 3, 4, 8, 16, 32, 48]),
+        in_dim=st.sampled_from([1, 4, 16, 64]),
+        hidden=st.sampled_from([1, 8, 24, 128]),
+    )
+    def test_matches_ref_shape_sweep(self, seed, batch, in_dim, hidden):
+        args = lstm_inputs(seed, batch, in_dim, hidden)
+        h_k, c_k = lstm_k.lstm_cell(*args)
+        h_r, c_r = ref.lstm_cell(*args)
+        np.testing.assert_allclose(h_k, h_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-5)
+
+    def test_odd_batch_not_divisible_by_tile(self):
+        args = lstm_inputs(7, 5, 12, 16)  # batch 5: tile fallback = 1
+        h_k, _ = lstm_k.lstm_cell(*args)
+        h_r, _ = ref.lstm_cell(*args)
+        np.testing.assert_allclose(h_k, h_r, rtol=1e-5, atol=1e-5)
+
+    def test_gradients_match_ref(self):
+        args = lstm_inputs(3, 8, 12, 16)
+
+        def loss_k(w):
+            h, c = lstm_k.lstm_cell(args[0], args[1], args[2], w, args[4])
+            return (h * h).sum() + c.sum()
+
+        def loss_r(w):
+            h, c = ref.lstm_cell(args[0], args[1], args[2], w, args[4])
+            return (h * h).sum() + c.sum()
+
+        g_k = jax.grad(loss_k)(args[3])
+        g_r = jax.grad(loss_r)(args[3])
+        np.testing.assert_allclose(g_k, g_r, rtol=1e-4, atol=1e-4)
+
+    def test_grad_wrt_all_inputs(self):
+        args = lstm_inputs(11, 4, 6, 8)
+        for argnum in range(5):
+            g_k = jax.grad(lambda *a: lstm_k.lstm_cell(*a)[0].sum(), argnums=argnum)(*args)
+            g_r = jax.grad(lambda *a: ref.lstm_cell(*a)[0].sum(), argnums=argnum)(*args)
+            np.testing.assert_allclose(g_k, g_r, rtol=1e-4, atol=1e-4,
+                                       err_msg=f"argnum {argnum}")
+
+    def test_under_jit_and_scan(self):
+        """The kernel must survive jit+scan — how the encoder uses it."""
+        args = lstm_inputs(5, 8, 16, 16)
+        x, h, c, w, b = args
+
+        @jax.jit
+        def run(h, c):
+            def step(carry, _):
+                h, c = carry
+                h, c = lstm_k.lstm_cell(x, h, c, w, b)
+                return (h, c), h
+
+            (h, c), hs = jax.lax.scan(step, (h, c), None, length=4)
+            return hs
+
+        hs = run(h, c)
+        # Reference unrolled.
+        hr, cr = h, c
+        for _ in range(4):
+            hr, cr = ref.lstm_cell(x, hr, cr, w, b)
+        np.testing.assert_allclose(hs[-1], hr, rtol=1e-4, atol=1e-5)
+
+    def test_forget_gate_saturation_preserves_cell(self):
+        """Property: with w=0 and a huge forget bias, c' ≈ c."""
+        batch, hidden = 4, 8
+        x = jnp.zeros((batch, hidden))
+        h = jnp.zeros((batch, hidden))
+        c = jnp.linspace(-2, 2, batch * hidden).reshape(batch, hidden)
+        w = jnp.zeros((2 * hidden, 4 * hidden))
+        b = jnp.concatenate([
+            jnp.full((hidden,), -20.0),  # input gate closed
+            jnp.full((hidden,), 20.0),   # forget gate open
+            jnp.zeros((hidden,)),
+            jnp.zeros((hidden,)),
+        ])
+        _, c_new = lstm_k.lstm_cell(x, h, c, w, b)
+        np.testing.assert_allclose(c_new, c, rtol=1e-5, atol=1e-5)
+
+    def test_vmem_estimate_reasonable(self):
+        est = lstm_k.vmem_estimate(32, 64, 128)
+        assert 0 < est < 16 * 2**20, f"VMEM estimate {est} outside budget"
+
+
+# ----------------------------------------------------------- Attention
+
+
+class TestAttention:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        batch=st.sampled_from([1, 2, 4, 8, 16]),
+        seq=st.sampled_from([1, 3, 8, 48]),
+        hidden=st.sampled_from([4, 16, 128]),
+        attn=st.sampled_from([2, 8, 64]),
+    )
+    def test_matches_ref_shape_sweep(self, seed, batch, seq, hidden, attn):
+        args = attn_inputs(seed, batch, seq, hidden, attn)
+        c_k, w_k = attn_k.attention(*args)
+        c_r, w_r = ref.bahdanau_attention(*args)
+        np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(w_k, w_r, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), data=st.data())
+    def test_ragged_masks(self, seed, data):
+        batch, seq = 8, 12
+        lens = data.draw(
+            st.lists(st.integers(1, seq), min_size=batch, max_size=batch)
+        )
+        args = attn_inputs(seed, batch, seq, 16, 8, lens)
+        c_k, w_k = attn_k.attention(*args)
+        c_r, w_r = ref.bahdanau_attention(*args)
+        np.testing.assert_allclose(c_k, c_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(w_k, w_r, rtol=1e-5, atol=1e-5)
+
+    def test_weights_are_a_masked_distribution(self):
+        """Property (eq. 2): weights sum to 1 and vanish on padding."""
+        args = attn_inputs(2, 6, 10, 16, 8, lens=[10, 7, 4, 1, 9, 2])
+        _, w = attn_k.attention(*args)
+        np.testing.assert_allclose(w.sum(-1), np.ones(6), rtol=1e-5)
+        mask = np.asarray(args[5])
+        assert (np.asarray(w)[mask == 0] == 0).all()
+
+    def test_uniform_scores_give_uniform_weights(self):
+        """Property: identical encoder states → uniform attention."""
+        batch, seq, hidden, attn = 2, 5, 8, 4
+        enc = jnp.ones((batch, seq, hidden))
+        dec = jnp.ones((batch, hidden))
+        w_enc = jnp.ones((hidden, attn)) * 0.1
+        w_dec = jnp.ones((hidden, attn)) * 0.1
+        v = jnp.ones((attn,))
+        mask = jnp.ones((batch, seq))
+        _, w = attn_k.attention(enc, dec, w_enc, w_dec, v, mask)
+        np.testing.assert_allclose(w, np.full((batch, seq), 1.0 / seq), rtol=1e-5)
+
+    def test_context_is_convex_combination(self):
+        """Property (eq. 3): context lies within the encoder states' hull
+        (checked per-dimension against min/max)."""
+        args = attn_inputs(9, 4, 7, 8, 4)
+        ctx, _ = attn_k.attention(*args)
+        enc = np.asarray(args[0])
+        assert (np.asarray(ctx) <= enc.max(axis=1) + 1e-5).all()
+        assert (np.asarray(ctx) >= enc.min(axis=1) - 1e-5).all()
+
+    def test_gradients_match_ref(self):
+        args = attn_inputs(4, 4, 6, 8, 4)
+        for argnum in range(5):  # mask (5) is not differentiated
+            g_k = jax.grad(
+                lambda *a: attn_k.attention(*a)[0].sum(), argnums=argnum
+            )(*args)
+            g_r = jax.grad(
+                lambda *a: ref.bahdanau_attention(*a)[0].sum(), argnums=argnum
+            )(*args)
+            np.testing.assert_allclose(g_k, g_r, rtol=1e-4, atol=1e-4,
+                                       err_msg=f"argnum {argnum}")
+
+    def test_vmem_estimate_reasonable(self):
+        est = attn_k.vmem_estimate(32, 48, 128, 64)
+        assert 0 < est < 16 * 2**20
+
+
+# ------------------------------------------------- numerical edge cases
+
+
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 30.0])
+def test_lstm_extreme_scales(scale):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    batch, in_dim, hidden = 4, 8, 8
+    args = (
+        rand(ks[0], (batch, in_dim)) * scale,
+        rand(ks[1], (batch, hidden)) * scale,
+        rand(ks[2], (batch, hidden)) * scale,
+        rand(ks[3], (in_dim + hidden, 4 * hidden)) * scale,
+        rand(ks[4], (4 * hidden,)) * scale,
+    )
+    h_k, c_k = lstm_k.lstm_cell(*args)
+    h_r, c_r = ref.lstm_cell(*args)
+    assert np.isfinite(np.asarray(h_k)).all()
+    np.testing.assert_allclose(h_k, h_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(c_k, c_r, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_single_token_sequence():
+    """seq=1: softmax over one element must be exactly 1."""
+    args = attn_inputs(1, 2, 1, 4, 4)
+    ctx, w = attn_k.attention(*args)
+    np.testing.assert_allclose(w, np.ones((2, 1)), rtol=1e-6)
+    np.testing.assert_allclose(ctx, np.asarray(args[0])[:, 0, :], rtol=1e-6)

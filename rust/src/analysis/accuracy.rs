@@ -1,0 +1,113 @@
+//! Record-match accuracy between the CA and P3SAPP output frames
+//! (paper §5.2, Tables 5–6): "the percentage of matching records in the
+//! Pandas DataFrames generated for conventional and proposed approaches".
+//!
+//! Matching is multiset intersection over cell values of one column —
+//! order-insensitive, duplicate-aware (two copies in one frame match at
+//! most two copies in the other).
+
+use crate::frame::LocalFrame;
+use crate::Result;
+use std::collections::HashMap;
+
+/// Accuracy result for one column (one row of Table 5 or 6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatchReport {
+    pub column: String,
+    pub rows_ca: usize,
+    pub rows_p3sapp: usize,
+    pub matching: usize,
+    /// matching / max(rows_ca, rows_p3sapp) * 100 — a match fraction
+    /// that penalizes both missing and excess rows.
+    pub percentage: f64,
+}
+
+/// Compare one column of the two output frames.
+pub fn match_column(ca: &LocalFrame, p3sapp: &LocalFrame, column: &str) -> Result<MatchReport> {
+    let ca_rows = ca.str_rows(column)?;
+    let pa_rows = p3sapp.str_rows(column)?;
+
+    let mut counts: HashMap<&str, isize> = HashMap::with_capacity(ca_rows.len());
+    for v in ca_rows.iter().flatten() {
+        *counts.entry(v).or_default() += 1;
+    }
+    let mut matching = 0usize;
+    for v in pa_rows.iter().flatten() {
+        if let Some(c) = counts.get_mut(v) {
+            if *c > 0 {
+                *c -= 1;
+                matching += 1;
+            }
+        }
+    }
+    let denom = ca_rows.len().max(pa_rows.len());
+    Ok(MatchReport {
+        column: column.to_string(),
+        rows_ca: ca_rows.len(),
+        rows_p3sapp: pa_rows.len(),
+        matching,
+        percentage: if denom == 0 { 100.0 } else { matching as f64 / denom as f64 * 100.0 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frame::{Column, Schema};
+
+    fn lf(vals: &[&str]) -> LocalFrame {
+        LocalFrame::from_columns(
+            Schema::strings(&["title"]),
+            vec![Column::from_strs(vals.iter().map(|v| Some(v.to_string())).collect())],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_frames_match_100() {
+        let a = lf(&["x", "y", "z"]);
+        let r = match_column(&a, &a.clone(), "title").unwrap();
+        assert_eq!(r.matching, 3);
+        assert_eq!(r.percentage, 100.0);
+    }
+
+    #[test]
+    fn order_insensitive() {
+        let a = lf(&["x", "y", "z"]);
+        let b = lf(&["z", "x", "y"]);
+        assert_eq!(match_column(&a, &b, "title").unwrap().percentage, 100.0);
+    }
+
+    #[test]
+    fn partial_match_counted() {
+        let a = lf(&["x", "y", "z", "w"]);
+        let b = lf(&["x", "y", "DIFFERENT", "ALSO"]);
+        let r = match_column(&a, &b, "title").unwrap();
+        assert_eq!(r.matching, 2);
+        assert_eq!(r.percentage, 50.0);
+    }
+
+    #[test]
+    fn duplicates_match_pairwise() {
+        let a = lf(&["x", "x", "y"]);
+        let b = lf(&["x", "x", "x"]);
+        let r = match_column(&a, &b, "title").unwrap();
+        assert_eq!(r.matching, 2, "two x's can match, the third can't");
+    }
+
+    #[test]
+    fn size_mismatch_penalized() {
+        let a = lf(&["x", "y", "z", "w"]);
+        let b = lf(&["x", "y"]);
+        let r = match_column(&a, &b, "title").unwrap();
+        assert_eq!(r.matching, 2);
+        assert_eq!(r.percentage, 50.0, "denominator is the larger frame");
+    }
+
+    #[test]
+    fn empty_frames() {
+        let a = lf(&[]);
+        let r = match_column(&a, &a.clone(), "title").unwrap();
+        assert_eq!(r.percentage, 100.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Cost-benefit model — the paper's eqs. (6)–(11) (§5.1, §5.3):
+//!
+//!   T  = t_c + n · t_mt            (eq. 8; t_mi ≈ 2 s is ignored)
+//!   C  = x · T                     (eq. 10, x = hourly price)
+//!   CB = (T_ca − T_pa) / T_ca · 100  (eq. 11 — price cancels)
+
+/// Inputs measured by the drivers + trainer.
+#[derive(Debug, Clone, Copy)]
+pub struct CostInputs {
+    /// Cumulative (ingestion + preprocessing) seconds, conventional.
+    pub tc_ca_secs: f64,
+    /// Cumulative seconds, P3SAPP.
+    pub tc_p3sapp_secs: f64,
+    /// Model-training time per epoch, seconds (identical for both —
+    /// P3SAPP leaves training untouched, §3).
+    pub mtt_per_epoch_secs: f64,
+}
+
+/// One row of Table 7 for a fixed epoch count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostRow {
+    pub epochs: u32,
+    pub total_ca_hours: f64,
+    pub total_p3sapp_hours: f64,
+    /// Percentage cost benefit (eq. 11).
+    pub cost_benefit_pct: f64,
+}
+
+/// Total execution time T in seconds (eq. 8).
+pub fn total_secs(tc_secs: f64, epochs: u32, mtt_per_epoch_secs: f64) -> f64 {
+    tc_secs + epochs as f64 * mtt_per_epoch_secs
+}
+
+/// Monetary cost (eq. 10) given an hourly price.
+pub fn cost(total_secs: f64, hourly_price: f64) -> f64 {
+    total_secs / 3600.0 * hourly_price
+}
+
+/// Cost benefit percentage (eq. 11).
+pub fn cost_benefit_pct(t_ca_secs: f64, t_pa_secs: f64) -> f64 {
+    if t_ca_secs <= 0.0 {
+        return 0.0;
+    }
+    (t_ca_secs - t_pa_secs) / t_ca_secs * 100.0
+}
+
+/// Evaluate one epochs setting.
+pub fn evaluate(inputs: &CostInputs, epochs: u32) -> CostRow {
+    let t_ca = total_secs(inputs.tc_ca_secs, epochs, inputs.mtt_per_epoch_secs);
+    let t_pa = total_secs(inputs.tc_p3sapp_secs, epochs, inputs.mtt_per_epoch_secs);
+    CostRow {
+        epochs,
+        total_ca_hours: t_ca / 3600.0,
+        total_p3sapp_hours: t_pa / 3600.0,
+        cost_benefit_pct: cost_benefit_pct(t_ca, t_pa),
+    }
+}
+
+/// The paper's three epoch settings (Table 7 / Fig. 11).
+pub const EPOCH_SETTINGS: [u32; 3] = [10, 25, 50];
+
+/// Table 8's ratio: time saving / MTT per epoch — "the time savings ...
+/// is equal to the time taken by 7.9 epochs" for tier 5.
+pub fn saving_to_mtt_ratio(inputs: &CostInputs) -> f64 {
+    if inputs.mtt_per_epoch_secs <= 0.0 {
+        return 0.0;
+    }
+    (inputs.tc_ca_secs - inputs.tc_p3sapp_secs) / inputs.mtt_per_epoch_secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's own Table 7 numbers must fall out of the formulas —
+    /// dataset 5, MTT 4170 s/epoch, t_c 33563.325 vs 581.839 s.
+    #[test]
+    fn reproduces_paper_table7_row5() {
+        let inputs = CostInputs {
+            tc_ca_secs: 33563.325,
+            tc_p3sapp_secs: 581.839,
+            mtt_per_epoch_secs: 4170.0,
+        };
+        let r10 = evaluate(&inputs, 10);
+        assert!((r10.total_ca_hours - 20.906).abs() < 0.01, "{}", r10.total_ca_hours);
+        assert!((r10.total_p3sapp_hours - 11.745).abs() < 0.01);
+        assert!((r10.cost_benefit_pct - 43.821).abs() < 0.05);
+        let r50 = evaluate(&inputs, 50);
+        assert!((r50.cost_benefit_pct - 13.625).abs() < 0.05);
+    }
+
+    /// Table 8 row 5: ratio 7.909.
+    #[test]
+    fn reproduces_paper_table8_ratio() {
+        let inputs = CostInputs {
+            tc_ca_secs: 33563.325,
+            tc_p3sapp_secs: 581.839,
+            mtt_per_epoch_secs: 4170.0,
+        };
+        assert!((saving_to_mtt_ratio(&inputs) - 7.909).abs() < 0.01);
+    }
+
+    #[test]
+    fn benefit_shrinks_with_epochs() {
+        let inputs = CostInputs { tc_ca_secs: 1000.0, tc_p3sapp_secs: 100.0, mtt_per_epoch_secs: 50.0 };
+        let cbs: Vec<f64> = EPOCH_SETTINGS
+            .iter()
+            .map(|&e| evaluate(&inputs, e).cost_benefit_pct)
+            .collect();
+        assert!(cbs[0] > cbs[1] && cbs[1] > cbs[2], "{cbs:?}");
+    }
+
+    #[test]
+    fn hourly_price_cancels_in_benefit() {
+        // CB is price-independent; cost() itself scales linearly.
+        assert!((cost(7200.0, 3.0) - 6.0).abs() < 1e-9);
+        assert_eq!(cost_benefit_pct(200.0, 100.0), 50.0);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(cost_benefit_pct(0.0, 10.0), 0.0);
+        let z = CostInputs { tc_ca_secs: 5.0, tc_p3sapp_secs: 1.0, mtt_per_epoch_secs: 0.0 };
+        assert_eq!(saving_to_mtt_ratio(&z), 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Experiment analysis: record-match accuracy (Tables 5-6), cost-benefit
+//! model (Table 7, eqs. 6-11), trend-line fitting (Fig. 10).
+
+pub mod accuracy;
+pub mod cost;
+pub mod trend;

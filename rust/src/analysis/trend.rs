@@ -1,0 +1,81 @@
+//! Least-squares trend-line fitting (paper Fig. 10 + §6: "for every unit
+//! increase in dataset size, the preprocessing time increases 37.589
+//! times for CA while the same for P3SAPP occurs by a factor of 20.426").
+
+/// y = slope · x + intercept, with the coefficient of determination.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrendLine {
+    pub slope: f64,
+    pub intercept: f64,
+    pub r_squared: f64,
+}
+
+/// Ordinary least squares over (x, y) pairs. Returns `None` for fewer
+/// than 2 points or zero x-variance.
+pub fn fit(points: &[(f64, f64)]) -> Option<TrendLine> {
+    let n = points.len() as f64;
+    if points.len() < 2 {
+        return None;
+    }
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+
+    let mean_y = sy / n;
+    let ss_tot: f64 = points.iter().map(|p| (p.1 - mean_y).powi(2)).sum();
+    let ss_res: f64 = points
+        .iter()
+        .map(|p| (p.1 - (slope * p.0 + intercept)).powi(2))
+        .sum();
+    let r_squared = if ss_tot < 1e-12 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    Some(TrendLine { slope, intercept, r_squared })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 3.0 * i as f64 + 1.0)).collect();
+        let t = fit(&pts).unwrap();
+        assert!((t.slope - 3.0).abs() < 1e-9);
+        assert!((t.intercept - 1.0).abs() < 1e-9);
+        assert!((t.r_squared - 1.0).abs() < 1e-9);
+    }
+
+    /// Fit the paper's own Table 3 preprocessing series: slopes should
+    /// come out near the §6 figures (37.589 CA, 20.426 P3SAPP).
+    #[test]
+    fn paper_fig10_slopes() {
+        let sizes = [4.18, 8.54, 13.34, 18.23, 23.58];
+        let ca = [154.679, 232.745, 458.94, 629.913, 864.409];
+        let pa = [89.485, 140.609, 262.492, 351.848, 477.784];
+        let t_ca = fit(&sizes.iter().copied().zip(ca).collect::<Vec<_>>()).unwrap();
+        let t_pa = fit(&sizes.iter().copied().zip(pa).collect::<Vec<_>>()).unwrap();
+        assert!((t_ca.slope - 37.589).abs() < 0.5, "CA slope {}", t_ca.slope);
+        assert!((t_pa.slope - 20.426).abs() < 0.5, "P3SAPP slope {}", t_pa.slope);
+        assert!(t_ca.r_squared > 0.97);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        assert!(fit(&[]).is_none());
+        assert!(fit(&[(1.0, 2.0)]).is_none());
+        assert!(fit(&[(1.0, 2.0), (1.0, 3.0)]).is_none(), "zero x-variance");
+    }
+
+    #[test]
+    fn noisy_data_r_squared_below_one() {
+        let pts = [(0.0, 0.0), (1.0, 2.0), (2.0, 1.0), (3.0, 4.0)];
+        let t = fit(&pts).unwrap();
+        assert!(t.r_squared < 1.0 && t.r_squared > 0.0);
+    }
+}

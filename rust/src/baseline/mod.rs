@@ -1,0 +1,7 @@
+//! Conventional approach (CA) — the paper's Algorithm 2 baseline:
+//! sequential pandas-style ingestion (`ingest::append`) followed by
+//! row-at-a-time text cleaning in a Python-style `for` loop.
+
+mod cleaner;
+
+pub use cleaner::{clean_abstract_row, clean_title_row, clean_frame_rows, RowCleaner};

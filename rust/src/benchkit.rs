@@ -1,0 +1,117 @@
+//! Micro-benchmark support (no criterion in the vendored dependency
+//! closure): warmup + N timed iterations, mean/median/stddev reporting,
+//! and a tiny black_box. Used by the `benches/` harnesses.
+
+use std::hint;
+use std::time::{Duration, Instant};
+
+/// Measurement summary for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// One-line report, criterion-style.
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>12} (median {:>12}, σ {:>10}, n={})",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.stddev),
+            self.iters
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} µs", s * 1e6)
+    }
+}
+
+/// Opaque value barrier (prevents the optimizer from deleting work).
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let n = times.len();
+    let mean_ns = times.iter().map(|d| d.as_nanos()).sum::<u128>() / n as u128;
+    let mean = Duration::from_nanos(mean_ns as u64);
+    let var = times
+        .iter()
+        .map(|d| {
+            let diff = d.as_nanos() as i128 - mean_ns as i128;
+            (diff * diff) as u128
+        })
+        .sum::<u128>()
+        / n as u128;
+    let stddev = Duration::from_nanos((var as f64).sqrt() as u64);
+    Measurement {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median: times[n / 2],
+        stddev,
+        min: times[0],
+        max: times[n - 1],
+    }
+}
+
+/// Environment knob helper for benches (`BENCH_SCALE=2 cargo bench`).
+pub fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let m = bench("sleep", 0, 3, || std::thread::sleep(Duration::from_millis(5)));
+        assert!(m.mean >= Duration::from_millis(4));
+        assert_eq!(m.iters, 3);
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn report_formats() {
+        let m = bench("fast", 1, 5, || 1 + 1);
+        let r = m.report();
+        assert!(r.contains("fast"));
+        assert!(r.contains("n=5"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Minimal CLI argument parsing (no clap in the vendored closure):
+//! `repro <command> [--key value] [--key=value] [--flag]`.
+
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.
+    pub fn parse(argv: impl Iterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.peekable();
+        if let Some(cmd) = iter.next() {
+            anyhow::ensure!(!cmd.starts_with('-'), "expected a command, got '{cmd}'");
+            out.command = cmd;
+        }
+        while let Some(arg) = iter.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                anyhow::bail!("unexpected positional argument '{arg}'");
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                out.options.insert(name.to_string(), iter.next().unwrap());
+            } else {
+                out.flags.push(name.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated usize list.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{name}: bad integer '{x}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_options_flags() {
+        let a = parse(&["report", "--exp", "e1", "--scale=2.5", "--skip-ca"]);
+        assert_eq!(a.command, "report");
+        assert_eq!(a.get("exp"), Some("e1"));
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 2.5);
+        assert!(a.flag("skip-ca"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse(&["train", "--steps", "50"]);
+        assert_eq!(a.get_usize("steps", 10).unwrap(), 50);
+        assert_eq!(a.get_usize("workers", 4).unwrap(), 4);
+        assert!(parse(&["x", "--steps", "abc"]).get_usize("steps", 1).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["report", "--tiers", "1,2,3"]);
+        assert_eq!(a.get_usize_list("tiers", &[5]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(parse(&["x"]).get_usize_list("tiers", &[5]).unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(["cmd", "stray"].iter().map(|s| s.to_string())).is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! Configuration system: a TOML-subset parser (sections, string /
+//! integer / float / boolean values, comments) plus the typed
+//! [`AppConfig`] the launcher consumes. No external TOML crate exists in
+//! the vendored closure, so the subset parser is part of the substrate.
+
+mod parser;
+
+pub use parser::{parse_toml, TomlValue};
+
+use crate::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Corpus-generation settings ([corpus] section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CorpusConfig {
+    pub seed: u64,
+    pub scale: f64,
+    pub html_noise_rate: f64,
+    pub dup_rate: f64,
+}
+
+/// Engine settings ([engine]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// 0 = local[*] (all logical cores).
+    pub workers: usize,
+    pub queue_cap: usize,
+    pub short_word_threshold: usize,
+}
+
+/// Model/training settings ([model]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub artifacts_dir: String,
+    pub train_steps: usize,
+    pub batch_seed: u64,
+}
+
+/// Cost-model settings ([cost]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostConfig {
+    /// Hourly price of the GPU instance (the paper's FloydHub analog).
+    pub hourly_price: f64,
+    pub epochs: Vec<u32>,
+}
+
+/// The full launcher configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppConfig {
+    pub corpus: CorpusConfig,
+    pub engine: EngineConfig,
+    pub model: ModelConfig,
+    pub cost: CostConfig,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            corpus: CorpusConfig { seed: 42, scale: 1.0, html_noise_rate: 0.3, dup_rate: 0.05 },
+            engine: EngineConfig { workers: 0, queue_cap: 16, short_word_threshold: 1 },
+            model: ModelConfig {
+                artifacts_dir: "artifacts".into(),
+                train_steps: 200,
+                batch_seed: 7,
+            },
+            cost: CostConfig { hourly_price: 0.9, epochs: vec![10, 25, 50] },
+        }
+    }
+}
+
+impl AppConfig {
+    /// Load from a TOML file, overlaying defaults; unknown keys are
+    /// rejected (typos must not silently fall back to defaults).
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read config {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let sections = parse_toml(text)?;
+        let mut cfg = AppConfig::default();
+        for (section, values) in &sections {
+            match section.as_str() {
+                "corpus" => apply(values, |k, v| match k {
+                    "seed" => set_u64(v, &mut cfg.corpus.seed),
+                    "scale" => set_f64(v, &mut cfg.corpus.scale),
+                    "html_noise_rate" => set_f64(v, &mut cfg.corpus.html_noise_rate),
+                    "dup_rate" => set_f64(v, &mut cfg.corpus.dup_rate),
+                    _ => unknown(section, k),
+                })?,
+                "engine" => apply(values, |k, v| match k {
+                    "workers" => set_usize(v, &mut cfg.engine.workers),
+                    "queue_cap" => set_usize(v, &mut cfg.engine.queue_cap),
+                    "short_word_threshold" => {
+                        set_usize(v, &mut cfg.engine.short_word_threshold)
+                    }
+                    _ => unknown(section, k),
+                })?,
+                "model" => apply(values, |k, v| match k {
+                    "artifacts_dir" => set_string(v, &mut cfg.model.artifacts_dir),
+                    "train_steps" => set_usize(v, &mut cfg.model.train_steps),
+                    "batch_seed" => set_u64(v, &mut cfg.model.batch_seed),
+                    _ => unknown(section, k),
+                })?,
+                "cost" => apply(values, |k, v| match k {
+                    "hourly_price" => set_f64(v, &mut cfg.cost.hourly_price),
+                    "epochs" => {
+                        if let TomlValue::Array(items) = v {
+                            cfg.cost.epochs = items
+                                .iter()
+                                .filter_map(|x| match x {
+                                    TomlValue::Int(i) => Some(*i as u32),
+                                    _ => None,
+                                })
+                                .collect();
+                            Ok(())
+                        } else {
+                            anyhow::bail!("cost.epochs must be an integer array")
+                        }
+                    }
+                    _ => unknown(section, k),
+                })?,
+                other => anyhow::bail!("unknown config section [{other}]"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity bounds.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.corpus.html_noise_rate),
+            "corpus.html_noise_rate must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.corpus.dup_rate),
+            "corpus.dup_rate must be in [0, 1]"
+        );
+        anyhow::ensure!(self.corpus.scale > 0.0, "corpus.scale must be positive");
+        anyhow::ensure!(self.engine.queue_cap >= 1, "engine.queue_cap must be >= 1");
+        anyhow::ensure!(self.cost.hourly_price >= 0.0, "cost.hourly_price must be >= 0");
+        anyhow::ensure!(!self.cost.epochs.is_empty(), "cost.epochs must be non-empty");
+        Ok(())
+    }
+}
+
+fn apply(
+    values: &BTreeMap<String, TomlValue>,
+    mut f: impl FnMut(&str, &TomlValue) -> Result<()>,
+) -> Result<()> {
+    for (k, v) in values {
+        f(k, v)?;
+    }
+    Ok(())
+}
+
+fn unknown(section: &str, key: &str) -> Result<()> {
+    anyhow::bail!("unknown config key {section}.{key}")
+}
+
+fn set_u64(v: &TomlValue, dst: &mut u64) -> Result<()> {
+    match v {
+        TomlValue::Int(i) if *i >= 0 => {
+            *dst = *i as u64;
+            Ok(())
+        }
+        _ => anyhow::bail!("expected non-negative integer"),
+    }
+}
+
+fn set_usize(v: &TomlValue, dst: &mut usize) -> Result<()> {
+    match v {
+        TomlValue::Int(i) if *i >= 0 => {
+            *dst = *i as usize;
+            Ok(())
+        }
+        _ => anyhow::bail!("expected non-negative integer"),
+    }
+}
+
+fn set_f64(v: &TomlValue, dst: &mut f64) -> Result<()> {
+    match v {
+        TomlValue::Float(f) => {
+            *dst = *f;
+            Ok(())
+        }
+        TomlValue::Int(i) => {
+            *dst = *i as f64;
+            Ok(())
+        }
+        _ => anyhow::bail!("expected number"),
+    }
+}
+
+fn set_string(v: &TomlValue, dst: &mut String) -> Result<()> {
+    match v {
+        TomlValue::Str(s) => {
+            *dst = s.clone();
+            Ok(())
+        }
+        _ => anyhow::bail!("expected string"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        AppConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_overlays_defaults() {
+        let cfg = AppConfig::parse(
+            r#"
+            # experiment config
+            [corpus]
+            seed = 7
+            scale = 2.5
+
+            [engine]
+            workers = 4
+
+            [cost]
+            hourly_price = 1.5
+            epochs = [5, 10]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.corpus.seed, 7);
+        assert_eq!(cfg.corpus.scale, 2.5);
+        assert_eq!(cfg.engine.workers, 4);
+        assert_eq!(cfg.engine.queue_cap, 16, "default preserved");
+        assert_eq!(cfg.cost.epochs, vec![5, 10]);
+        assert_eq!(cfg.cost.hourly_price, 1.5);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(AppConfig::parse("[engine]\nworkerz = 4\n").is_err());
+        assert!(AppConfig::parse("[nope]\nx = 1\n").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(AppConfig::parse("[corpus]\nhtml_noise_rate = 1.5\n").is_err());
+        assert!(AppConfig::parse("[corpus]\nscale = 0.0\n").is_err());
+        assert!(AppConfig::parse("[cost]\nepochs = []\n").is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! TOML-subset parser: `[section]`, `key = value` with string / int /
+//! float / bool / flat-array values, `#` comments. Enough for launcher
+//! configs; deliberately not a full TOML implementation.
+
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+/// Parse into section → (key → value). Keys before any `[section]`
+/// header land in the "" section.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, BTreeMap<String, TomlValue>>> {
+    let mut out: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            anyhow::ensure!(!section.is_empty(), "line {}: empty section name", lineno + 1);
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+        let value = parse_value(value.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let dup = out
+            .entry(section.clone())
+            .or_default()
+            .insert(key.to_string(), value);
+        anyhow::ensure!(dup.is_none(), "line {}: duplicate key '{key}'", lineno + 1);
+    }
+    Ok(out)
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    anyhow::ensure!(!s.is_empty(), "empty value");
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    anyhow::bail!("cannot parse value '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = r#"
+            top = 1
+            [a]
+            s = "hello # not a comment"
+            i = -3          # trailing comment
+            f = 2.5
+            b = true
+            arr = [1, 2, 3]
+            [b]
+            empty_arr = []
+        "#;
+        let t = parse_toml(doc).unwrap();
+        assert_eq!(t[""]["top"], TomlValue::Int(1));
+        assert_eq!(t["a"]["s"], TomlValue::Str("hello # not a comment".into()));
+        assert_eq!(t["a"]["i"], TomlValue::Int(-3));
+        assert_eq!(t["a"]["f"], TomlValue::Float(2.5));
+        assert_eq!(t["a"]["b"], TomlValue::Bool(true));
+        assert_eq!(
+            t["a"]["arr"],
+            TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+        assert_eq!(t["b"]["empty_arr"], TomlValue::Array(vec![]));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_toml("noequals").is_err());
+        assert!(parse_toml("[]\n").is_err());
+        assert!(parse_toml("k = \n").is_err());
+        assert!(parse_toml("k = what\n").is_err());
+        assert!(parse_toml("k = 1\nk = 2\n").is_err(), "duplicate key");
+    }
+
+    #[test]
+    fn escaped_quotes_in_strings() {
+        let t = parse_toml(r#"k = "a \"b\" c""#).unwrap();
+        assert_eq!(t[""]["k"], TomlValue::Str(r#"a "b" c"#.into()));
+    }
+}

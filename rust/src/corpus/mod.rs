@@ -1,0 +1,15 @@
+//! Synthetic CORE-corpus generator — the stand-in for the paper's 330 GB
+//! CORE dataset (see DESIGN.md substitution table). Deterministic in the
+//! spec seed; emits sharded JSON files with CORE's schema, realistic
+//! null/duplicate rates, HTML noise, and heavy file-size skew.
+
+pub mod record;
+pub mod rng;
+pub mod spec;
+pub mod words;
+mod writer;
+
+pub use record::CoreRecord;
+pub use rng::Rng;
+pub use spec::CorpusSpec;
+pub use writer::{generate_corpus, CorpusManifest};

@@ -1,0 +1,353 @@
+//! CORE-schema record synthesis (the JSON structure of §5 of the paper,
+//! reproduced field-for-field).
+
+use super::rng::Rng;
+use super::words;
+use crate::json::Json;
+use std::collections::BTreeMap;
+
+/// One synthetic scholarly record, mirroring the CORE metadata schema the
+/// paper lists in §5. Only `title` and `abstract` are projected by the
+/// case-study ingestion; everything else exists to make the files
+/// realistically heavy (parse a lot, keep a little).
+#[derive(Debug, Clone)]
+pub struct CoreRecord {
+    pub doi: Option<String>,
+    pub core_id: String,
+    pub oai: Option<String>,
+    pub identifiers: Vec<String>,
+    pub title: Option<String>,
+    pub authors: Vec<String>,
+    pub contributors: Vec<String>,
+    pub date_published: Option<String>,
+    pub abstract_text: Option<String>,
+    pub download_url: Option<String>,
+    pub full_text_identifier: Option<String>,
+    pub pdf_hash: Option<String>,
+    pub publisher: Option<String>,
+    pub raw_record_xml: Option<String>,
+    pub journals: Vec<String>,
+    pub language: Option<String>,
+    pub relations: Vec<String>,
+    pub year: Option<i64>,
+    pub topics: Vec<String>,
+    pub subjects: Vec<String>,
+    pub full_text: Option<String>,
+    pub references: Vec<String>,
+    pub document_type: Option<String>,
+}
+
+/// Generate a content phrase of `n` words, Zipf-sampled with occasional
+/// connectives, capitalised per `titlecase`.
+pub fn phrase(rng: &mut Rng, n: usize, titlecase: bool) -> String {
+    let mut out = String::with_capacity(n * 8);
+    for i in 0..n {
+        if i > 0 {
+            out.push(' ');
+        }
+        let w = if i > 0 && rng.chance(0.25) {
+            *rng.choice(words::CONNECTIVES)
+        } else {
+            words::CONTENT[rng.zipfish(words::CONTENT.len())]
+        };
+        if titlecase && (i == 0 || w.len() > 3) {
+            let mut cs = w.chars();
+            if let Some(c0) = cs.next() {
+                out.extend(c0.to_uppercase());
+                out.push_str(cs.as_str());
+            }
+        } else {
+            out.push_str(w);
+        }
+    }
+    out
+}
+
+/// Generate an abstract of `n_sentences` templated sentences.
+pub fn abstract_text(rng: &mut Rng, n_sentences: usize) -> String {
+    let mut out = String::with_capacity(n_sentences * 90);
+    for i in 0..n_sentences {
+        if i > 0 {
+            out.push(' ');
+        }
+        let template = *rng.choice(words::SENTENCE_TEMPLATES);
+        let mut rest = template;
+        while let Some(pos) = rest.find('{') {
+            out.push_str(&rest[..pos]);
+            let kind = &rest[pos + 1..pos + 2];
+            match kind {
+                "C" => {
+                    out.push_str(&phrase(rng, 2, false));
+                }
+                _ => {
+                    out.push_str(words::CONTENT[rng.zipfish(words::CONTENT.len())]);
+                }
+            }
+            rest = &rest[pos + 3..];
+        }
+        out.push_str(rest);
+    }
+    out
+}
+
+/// Build a title out of an abstract's salient content words (plus
+/// occasional connectives), in order of appearance — the summarization
+/// relationship the case-study model is supposed to learn.
+pub fn title_from_abstract(rng: &mut Rng, abstract_body: &str) -> String {
+    use crate::textutil::stopwords::is_stopword;
+    let content: Vec<&str> = abstract_body
+        .split_whitespace()
+        .map(|w| w.trim_matches(|c: char| !c.is_ascii_alphabetic()))
+        .filter(|w| w.len() > 3 && !is_stopword(w))
+        .collect();
+    if content.is_empty() {
+        return phrase(rng, 4, true);
+    }
+    let n_words = (3 + rng.gen_range(6)).min(content.len());
+    // Sample positions without replacement, keep appearance order.
+    let mut picks: Vec<usize> = Vec::with_capacity(n_words);
+    while picks.len() < n_words {
+        let idx = rng.zipfish(content.len());
+        if !picks.contains(&idx) {
+            picks.push(idx);
+        }
+    }
+    picks.sort_unstable();
+    let mut out = String::with_capacity(n_words * 10);
+    for (i, &idx) in picks.iter().enumerate() {
+        if i > 0 {
+            out.push(' ');
+            if rng.chance(0.2) {
+                out.push_str(*rng.choice(words::CONNECTIVES));
+                out.push(' ');
+            }
+        }
+        let w = content[idx];
+        let mut cs = w.chars();
+        if let Some(c0) = cs.next() {
+            out.extend(c0.to_uppercase());
+            out.push_str(cs.as_str());
+        }
+    }
+    out
+}
+
+/// Wrap `text` in HTML noise with probability `p` (tag wrap) and inject
+/// inline entities with probability `p/2`.
+pub fn add_html_noise(rng: &mut Rng, text: String, p: f64) -> String {
+    let mut t = text;
+    if rng.chance(p) {
+        let (open, close) = *rng.choice(words::HTML_NOISE_WRAP);
+        t = format!("{open}{t}{close}");
+    }
+    if rng.chance(p / 2.0) {
+        // Splice an inline entity at a word boundary.
+        if let Some(pos) = t[..t.len() / 2].rfind(' ') {
+            let noise = *rng.choice(words::HTML_NOISE_INLINE);
+            t = format!("{} {} {}", &t[..pos], noise, &t[pos + 1..]);
+        }
+    }
+    t
+}
+
+impl CoreRecord {
+    /// Synthesize one record. `noise` controls HTML-noise probability;
+    /// `null_title` / `null_abstract` force those fields to null
+    /// (injected upstream at spec-configured rates).
+    pub fn generate(
+        rng: &mut Rng,
+        id: u64,
+        noise: f64,
+        null_title: bool,
+        null_abstract: bool,
+    ) -> CoreRecord {
+        let year = 1990 + rng.gen_range(34) as i64;
+        let n_authors = 1 + rng.gen_range(5);
+        let authors: Vec<String> = (0..n_authors)
+            .map(|_| {
+                format!(
+                    "{}. {}",
+                    (b'A' + rng.gen_range(26) as u8) as char,
+                    rng.choice(words::SURNAMES)
+                )
+            })
+            .collect();
+        // Abstract first; the title is then *derived from it* (titles
+        // summarize their abstract) so the case-study seq2seq task has a
+        // learnable abstract→title mapping, like real scholarly data.
+        let n = 3 + rng.gen_range(6);
+        let abstract_body = abstract_text(rng, n);
+        let title = if null_title {
+            None
+        } else {
+            let t = title_from_abstract(rng, &abstract_body);
+            Some(add_html_noise(rng, t, noise))
+        };
+        let abstract_txt = if null_abstract {
+            None
+        } else {
+            Some(add_html_noise(rng, abstract_body.clone(), noise))
+        };
+        let doi = if rng.chance(0.8) {
+            Some(format!("10.{}/synth.{}", 1000 + rng.gen_range(9000), id))
+        } else {
+            None
+        };
+        let n_refs = rng.gen_range(12);
+        let references: Vec<String> = (0..n_refs)
+            .map(|_| format!("{} ({}). {}.", rng.choice(words::SURNAMES), year, phrase(rng, 6, true)))
+            .collect();
+        let full_text = if rng.chance(0.15) {
+            // A minority of records carry a body snippet — keeps average
+            // record weight up without ballooning generation time.
+            let n = 12 + rng.gen_range(12);
+            Some(abstract_text(rng, n))
+        } else {
+            None
+        };
+        CoreRecord {
+            doi,
+            core_id: format!("core-{id}"),
+            oai: rng.chance(0.7).then(|| format!("oai:synth.org:{id}")),
+            identifiers: vec![format!("synth:{id}")],
+            title,
+            authors,
+            contributors: Vec::new(),
+            date_published: Some(format!("{year}-{:02}-01", 1 + rng.gen_range(12))),
+            abstract_text: abstract_txt,
+            download_url: rng.chance(0.6).then(|| format!("https://synth.org/pdf/{id}.pdf")),
+            full_text_identifier: None,
+            pdf_hash: rng.chance(0.5).then(|| format!("{:016x}", rng.next_u64())),
+            publisher: Some(rng.choice(words::PUBLISHERS).to_string()),
+            raw_record_xml: rng
+                .chance(0.3)
+                .then(|| format!("<record id=\"{id}\"><status>ok</status></record>")),
+            journals: vec![rng.choice(words::JOURNALS).to_string()],
+            language: rng.chance(0.85).then(|| rng.choice(words::LANGUAGES).to_string()),
+            relations: Vec::new(),
+            year: Some(year),
+            topics: vec![rng.choice(words::SUBJECTS).to_string()],
+            subjects: vec![rng.choice(words::SUBJECTS).to_string()],
+            full_text,
+            references,
+            document_type: Some("research".into()),
+        }
+    }
+
+    /// Serialize to the CORE JSON layout.
+    pub fn to_json(&self) -> Json {
+        fn s(v: &Option<String>) -> Json {
+            v.as_ref().map(|x| Json::Str(x.clone())).unwrap_or(Json::Null)
+        }
+        fn arr(v: &[String]) -> Json {
+            Json::Arr(v.iter().map(|x| Json::Str(x.clone())).collect())
+        }
+        let mut o = BTreeMap::new();
+        o.insert("doi".into(), s(&self.doi));
+        o.insert("coreId".into(), Json::Str(self.core_id.clone()));
+        o.insert("oai".into(), s(&self.oai));
+        o.insert("identifiers".into(), arr(&self.identifiers));
+        o.insert("title".into(), s(&self.title));
+        o.insert("authors".into(), arr(&self.authors));
+        let mut enrich = BTreeMap::new();
+        enrich.insert("references".into(), arr(&self.references));
+        let mut dt = BTreeMap::new();
+        dt.insert("type".into(), s(&self.document_type));
+        dt.insert("confidence".into(), Json::Str("0.9".into()));
+        enrich.insert("documentType".into(), Json::Obj(dt));
+        o.insert("enrichments".into(), Json::Obj(enrich));
+        o.insert("contributors".into(), arr(&self.contributors));
+        o.insert("datePublished".into(), s(&self.date_published));
+        o.insert("abstract".into(), s(&self.abstract_text));
+        o.insert("downloadUrl".into(), s(&self.download_url));
+        o.insert("fullTextIdentifier".into(), s(&self.full_text_identifier));
+        o.insert("pdfHashValue".into(), s(&self.pdf_hash));
+        o.insert("publisher".into(), s(&self.publisher));
+        o.insert("rawRecordXml".into(), s(&self.raw_record_xml));
+        o.insert("journals".into(), arr(&self.journals));
+        o.insert("language".into(), s(&self.language));
+        o.insert("relations".into(), arr(&self.relations));
+        o.insert(
+            "year".into(),
+            self.year.map(|y| Json::Num(y as f64)).unwrap_or(Json::Null),
+        );
+        o.insert("topics".into(), arr(&self.topics));
+        o.insert("subjects".into(), arr(&self.subjects));
+        o.insert("fullText".into(), s(&self.full_text));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_json_has_core_fields() {
+        let mut rng = Rng::new(1);
+        let r = CoreRecord::generate(&mut rng, 7, 0.3, false, false);
+        let j = r.to_json();
+        for key in ["doi", "coreId", "title", "abstract", "authors", "year", "fullText"] {
+            assert!(j.as_obj().unwrap().contains_key(key), "missing {key}");
+        }
+        assert_eq!(j.get_str("coreId"), Some("core-7"));
+        assert!(j.get_str("title").is_some());
+    }
+
+    #[test]
+    fn null_injection_respected() {
+        let mut rng = Rng::new(2);
+        let r = CoreRecord::generate(&mut rng, 1, 0.0, true, true);
+        assert!(r.title.is_none());
+        assert!(r.abstract_text.is_none());
+        let j = r.to_json();
+        assert_eq!(j.get_str("title"), None);
+        assert_eq!(j.get_str("abstract"), None);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let ra = CoreRecord::generate(&mut a, 1, 0.2, false, false);
+        let rb = CoreRecord::generate(&mut b, 1, 0.2, false, false);
+        assert_eq!(ra.to_json().to_string(), rb.to_json().to_string());
+    }
+
+    #[test]
+    fn html_noise_appears_at_high_p() {
+        let mut rng = Rng::new(4);
+        let mut saw_tag = false;
+        for i in 0..50 {
+            let r = CoreRecord::generate(&mut rng, i, 1.0, false, false);
+            if r.title.unwrap().contains('<') {
+                saw_tag = true;
+                break;
+            }
+        }
+        assert!(saw_tag);
+    }
+
+    #[test]
+    fn abstract_sentences_end_with_period() {
+        let mut rng = Rng::new(5);
+        let a = abstract_text(&mut rng, 4);
+        assert!(a.ends_with('.'));
+        assert!(a.split(". ").count() >= 3);
+    }
+    #[test]
+    fn title_words_come_from_abstract() {
+        let mut rng = Rng::new(8);
+        for i in 0..20 {
+            let r = CoreRecord::generate(&mut rng, i, 0.0, false, false);
+            let (title, abs) = (r.title.unwrap(), r.abstract_text.unwrap());
+            let abs_lower = abs.to_lowercase();
+            let hits = title
+                .split_whitespace()
+                .filter(|w| abs_lower.contains(&w.to_lowercase()))
+                .count();
+            let total = title.split_whitespace().count();
+            assert!(hits * 2 >= total, "title {title:?} not derived from abstract");
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Deterministic PRNG (xoshiro256**) — the corpus must be byte-identical
+//! across runs for a given seed so CA and P3SAPP see the same input and
+//! EXPERIMENTS.md numbers are reproducible. No external rand crate.
+
+/// xoshiro256** by Blackman & Vigna (public domain reference
+/// implementation, ported).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 so any u64 (including 0) is a valid seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)`. Uses Lemire's multiply-shift rejection-free
+    /// approximation (bias < 2^-64 * n, irrelevant here).
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Uniform choice from a slice.
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.gen_range(items.len())]
+    }
+
+    /// Zipf-ish rank sampling over `[0, n)`: heavy head, long tail —
+    /// approximates natural word-frequency distribution by squaring a
+    /// uniform variate (exact Zipf is needlessly expensive here).
+    pub fn zipfish(&mut self, n: usize) -> usize {
+        let u = self.gen_f64();
+        let r = (u * u * n as f64) as usize;
+        r.min(n - 1)
+    }
+
+    /// Log-normal-ish positive size with median `median` and heavy upper
+    /// tail — models CORE's KB→GB file-size skew at our scale.
+    pub fn skewed_size(&mut self, median: usize) -> usize {
+        // exp of a centered triangular variate ≈ lognormal shape.
+        let t = self.gen_f64() + self.gen_f64() - 1.0; // [-1, 1) triangular
+        let factor = (t * 2.2f64).exp(); // median 1.0, tail ~9x
+        ((median as f64) * factor) as usize + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..4).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..4).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.gen_range(13) < 13);
+        }
+    }
+
+    #[test]
+    fn gen_f64_unit_interval_and_roughly_uniform() {
+        let mut r = Rng::new(11);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.gen_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn zipfish_head_heavy() {
+        let mut r = Rng::new(3);
+        let n = 1000;
+        let head = (0..10_000).filter(|_| r.zipfish(n) < n / 10).count();
+        // Squared-uniform puts ~31.6% of mass in the first decile.
+        assert!(head > 2500, "head draws: {head}");
+    }
+
+    #[test]
+    fn skewed_size_positive_with_tail() {
+        let mut r = Rng::new(5);
+        let sizes: Vec<usize> = (0..10_000).map(|_| r.skewed_size(1000)).collect();
+        assert!(sizes.iter().all(|&s| s > 0));
+        assert!(sizes.iter().any(|&s| s > 3000), "has heavy tail");
+        assert!(sizes.iter().any(|&s| s < 400), "has light tail");
+    }
+}

@@ -1,0 +1,132 @@
+//! Word pools for synthetic scholarly text. Sampled Zipf-ishly so the
+//! generated corpus has a natural head-heavy frequency profile (matters
+//! for vocabulary building and stopword hit rates).
+
+/// Domain/content words (titles and abstracts draw from here).
+/// Ordered roughly frequent→rare; `Rng::zipfish` indexes into this.
+pub const CONTENT: &[&str] = &[
+    "data", "model", "learning", "analysis", "system", "network", "approach", "method",
+    "algorithm", "performance", "research", "information", "results", "framework", "deep",
+    "neural", "classification", "detection", "evaluation", "optimization", "clustering",
+    "feature", "image", "text", "language", "processing", "recognition", "prediction",
+    "knowledge", "semantic", "distributed", "parallel", "efficient", "scalable", "novel",
+    "hybrid", "adaptive", "dynamic", "statistical", "bayesian", "probabilistic", "graph",
+    "structure", "architecture", "training", "inference", "accuracy", "precision", "recall",
+    "dataset", "corpus", "benchmark", "experiment", "simulation", "implementation",
+    "computation", "memory", "storage", "cloud", "cluster", "stream", "pipeline", "query",
+    "index", "retrieval", "recommendation", "ranking", "embedding", "representation",
+    "attention", "transformer", "recurrent", "convolutional", "sequence", "temporal",
+    "spatial", "hierarchical", "supervised", "unsupervised", "reinforcement", "transfer",
+    "domain", "task", "application", "service", "platform", "protocol", "security",
+    "privacy", "encryption", "authentication", "wireless", "sensor", "mobile", "energy",
+    "latency", "throughput", "bandwidth", "scheduling", "allocation", "resource",
+    "virtualization", "container", "microservice", "database", "transaction", "consistency",
+    "replication", "partition", "consensus", "fault", "tolerance", "recovery", "monitoring",
+    "visualization", "interface", "interaction", "usability", "cognitive", "behavioral",
+    "social", "citation", "scholarly", "bibliographic", "metadata", "ontology", "taxonomy",
+    "genomic", "protein", "molecular", "clinical", "diagnosis", "treatment", "epidemic",
+    "biological", "chemical", "physical", "quantum", "photonic", "semiconductor",
+    "robotics", "autonomous", "vehicle", "navigation", "localization", "mapping",
+    "segmentation", "synthesis", "generation", "summarization", "translation", "parsing",
+    "tagging", "annotation", "extraction", "mining", "warehouse", "federated", "edge",
+    "fog", "blockchain", "ledger", "contract", "incentive", "auction", "game", "equilibrium",
+    "topology", "spectral", "manifold", "kernel", "regression", "ensemble", "boosting",
+    "pruning", "quantization", "compression", "distillation", "augmentation",
+    "regularization", "convergence", "gradient", "stochastic", "variational", "generative",
+    "adversarial", "encoder", "decoder", "latent", "posterior", "likelihood", "entropy",
+    "divergence", "metric", "similarity", "distance", "alignment", "matching", "fusion",
+    "multimodal", "crossmodal", "heterogeneous", "longitudinal", "cohort", "survey",
+    "review", "taxonomy", "tutorial", "perspective", "empirical", "theoretical",
+];
+
+/// Function words / connectives (never removed by content sampling,
+/// guarantee stopword-stage work).
+pub const CONNECTIVES: &[&str] = &[
+    "the", "of", "and", "for", "in", "on", "with", "a", "an", "to", "using", "based",
+    "via", "from", "towards", "through", "between", "under", "over", "by", "at", "as",
+];
+
+/// Sentence-level templates for abstracts: `{c}` slots take content
+/// words, `{C}` a content bigram. Chosen to exercise every cleaning
+/// stage (contractions, parentheses, digits, punctuation).
+pub const SENTENCE_TEMPLATES: &[&str] = &[
+    "this paper presents a {c} {c} for {c} {c}.",
+    "we propose a novel {c} approach to {c} {c}, improving {c} by 12.5% over baselines.",
+    "it's shown that {c} {c} doesn't degrade under {c} constraints.",
+    "experimental results (on 5 datasets) demonstrate the {c} of our {c} {c}.",
+    "the proposed {C} outperforms state-of-the-art {c} methods.",
+    "we evaluate {c} {c} on large-scale {c} workloads, reporting {c} and {c}.",
+    "a comprehensive study of {c} {c} reveals significant {c} gains.",
+    "our {c} framework integrates {c} and {c} for end-to-end {c}.",
+    "furthermore, the {c} analysis confirms that {c} can't explain the observed {c}.",
+    "these findings suggest {c} {c} as a promising direction for {c} research.",
+];
+
+/// Author surname pool.
+pub const SURNAMES: &[&str] = &[
+    "Smith", "Chen", "Kumar", "Müller", "Garcia", "Kim", "Tanaka", "Ivanov", "Silva",
+    "Ahmed", "Olsen", "Novak", "Rossi", "Dubois", "Park", "Wang", "Singh", "Khan",
+    "Larsen", "Costa", "Haddad", "Okafor", "Nakamura", "Petrov", "Andersen",
+];
+
+/// Journal name fragments.
+pub const JOURNALS: &[&str] = &[
+    "Journal of Data Science", "Transactions on Computing", "Information Systems Review",
+    "Proceedings of Machine Intelligence", "Scholarly Analytics Quarterly",
+    "International Review of Networks", "Computational Methods Letters",
+];
+
+/// Publishers.
+pub const PUBLISHERS: &[&str] =
+    &["Elsevier", "Springer", "IEEE", "ACM", "Wiley", "MDPI", "Taylor & Francis"];
+
+/// Subjects / topics.
+pub const SUBJECTS: &[&str] = &[
+    "Computer Science", "Information Science", "Applied Mathematics", "Bioinformatics",
+    "Physics", "Electrical Engineering", "Digital Libraries", "Statistics",
+];
+
+/// Languages (weighting toward null/en like CORE).
+pub const LANGUAGES: &[&str] = &["en", "en", "en", "de", "fr", "es", "pt", "zh"];
+
+/// HTML noise snippets injected into a fraction of titles/abstracts —
+/// the tags/entities real publisher feeds leak into CORE metadata.
+pub const HTML_NOISE_WRAP: &[(&str, &str)] = &[
+    ("<p>", "</p>"),
+    ("<i>", "</i>"),
+    ("<b>", "</b>"),
+    ("<sub>", "</sub>"),
+    ("<span class=\"title\">", "</span>"),
+    ("<jats:title>", "</jats:title>"),
+];
+
+/// Inline entity noise.
+pub const HTML_NOISE_INLINE: &[&str] =
+    &["&amp;", "&lt;i&gt;", "&nbsp;", "<br/>", "&#8212;", "<!-- note -->"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::textutil::stopwords::is_stopword;
+
+    #[test]
+    fn pools_nonempty_and_lowercase_content() {
+        assert!(CONTENT.len() > 150);
+        for w in CONTENT {
+            assert_eq!(*w, w.to_lowercase(), "content words must be lowercase");
+        }
+    }
+
+    #[test]
+    fn connectives_overlap_stopword_list() {
+        let hits = CONNECTIVES.iter().filter(|w| is_stopword(w)).count();
+        assert!(hits >= CONNECTIVES.len() / 2, "stopword stage must get work: {hits}");
+    }
+
+    #[test]
+    fn templates_have_slots() {
+        for t in SENTENCE_TEMPLATES {
+            assert!(t.contains("{c}") || t.contains("{C}"));
+        }
+    }
+}

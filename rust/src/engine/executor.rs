@@ -1,0 +1,175 @@
+//! Work-queue executor over partitions.
+
+use crate::frame::Partition;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A parallel partition mapper with a fixed worker count.
+///
+/// Scheduling is a shared atomic cursor over the input vector — the
+/// cheapest possible dynamic load balancer. Partition sizes are skewed
+/// (file-size skew survives ingestion), so dynamic pull beats static
+/// striping by keeping all cores busy until the queue drains.
+#[derive(Debug, Clone, Copy)]
+pub struct Executor {
+    workers: usize,
+}
+
+impl Executor {
+    /// `workers = 0` means "all logical cores" (`local[*]`).
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
+        } else {
+            workers
+        };
+        Executor { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Apply `f` to every partition in parallel; output order == input
+    /// order. `f` must be `Sync` (shared by all workers by reference).
+    pub fn map_partitions<F>(&self, partitions: Vec<Partition>, f: F) -> Vec<Partition>
+    where
+        F: Fn(Partition) -> Partition + Sync,
+    {
+        let n = partitions.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.workers.min(n);
+        if workers <= 1 {
+            return partitions.into_iter().map(f).collect();
+        }
+
+        // Input slots (taken by workers) and output slots (filled in
+        // input order).
+        let input: Vec<Mutex<Option<Partition>>> =
+            partitions.into_iter().map(|p| Mutex::new(Some(p))).collect();
+        let output: Vec<Mutex<Option<Partition>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        let f = &f;
+
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let part = input[i].lock().unwrap().take().expect("slot taken once");
+                    let out = f(part);
+                    *output[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+
+        output
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+            .collect()
+    }
+
+    /// Parallel map over arbitrary Send items (used by the benchmark
+    /// harness and the vocabulary builder).
+    pub fn map_items<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.workers.min(n);
+        if workers <= 1 {
+            return items.into_iter().map(f).collect();
+        }
+        let input: Vec<Mutex<Option<T>>> = items.into_iter().map(|p| Mutex::new(Some(p))).collect();
+        let output: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        let f = &f;
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = input[i].lock().unwrap().take().expect("slot taken once");
+                    *output[i].lock().unwrap() = Some(f(item));
+                });
+            }
+        });
+        output
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("filled"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frame::Column;
+
+    fn part(vals: &[&str]) -> Partition {
+        Partition::new(vec![Column::from_strs(
+            vals.iter().map(|v| Some(v.to_string())).collect(),
+        )])
+    }
+
+    #[test]
+    fn preserves_order() {
+        let parts: Vec<Partition> = (0..50).map(|i| part(&[&format!("p{i}")])).collect();
+        let out = Executor::new(4).map_partitions(parts, |p| p);
+        for (i, p) in out.iter().enumerate() {
+            assert_eq!(p.column(0).get_str(0), Some(format!("p{i}").as_str()));
+        }
+    }
+
+    #[test]
+    fn applies_transform() {
+        let parts = vec![part(&["a", "b"]), part(&["c"])];
+        let out = Executor::new(2).map_partitions(parts, |p| {
+            let upper: Vec<Option<String>> = p
+                .column(0)
+                .strs()
+                .iter()
+                .map(|v| v.as_ref().map(|s| s.to_uppercase()))
+                .collect();
+            Partition::new(vec![Column::from_strs(upper)])
+        });
+        assert_eq!(out[0].column(0).get_str(1), Some("B"));
+        assert_eq!(out[1].column(0).get_str(0), Some("C"));
+    }
+
+    #[test]
+    fn zero_workers_means_all_cores() {
+        assert!(Executor::new(0).workers() >= 1);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out = Executor::new(4).map_partitions(Vec::new(), |p| p);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_items_parallel() {
+        let out = Executor::new(3).map_items((0..100).collect::<Vec<i32>>(), |x| x * 2);
+        assert_eq!(out[51], 102);
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let parts = vec![part(&["x"]), part(&["y"])];
+        let out = Executor::new(1).map_partitions(parts, |p| p);
+        assert_eq!(out.len(), 2);
+    }
+}

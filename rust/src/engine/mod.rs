@@ -1,0 +1,12 @@
+//! Multicore partition executor — the `local[*]` analog. A fixed pool of
+//! scoped worker threads pulls partitions from a shared queue and applies
+//! a per-partition closure; results are returned in input order.
+//!
+//! This is the `k` in the paper's O(n/k) preprocessing claim (§3, §6):
+//! the same total row work, divided across `k` logical cores.
+
+mod executor;
+mod rebalance;
+
+pub use executor::Executor;
+pub use rebalance::{needs_rebalance, rebalance};

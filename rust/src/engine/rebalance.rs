@@ -1,0 +1,94 @@
+//! Partition rebalancing: ingestion inherits the corpus's file-size skew
+//! (one partition per shard, KB→MB). Before the transform stages run,
+//! heavily skewed frames are re-split so the slowest partition doesn't
+//! serialize the whole stage (straggler elimination).
+
+use crate::frame::Frame;
+
+/// Heuristic: rebalance when the largest partition holds more than
+/// `max_share` of total bytes, or when there are fewer partitions than
+/// workers (idle cores).
+pub fn needs_rebalance(frame: &Frame, workers: usize, max_share: f64) -> bool {
+    let nparts = frame.num_partitions();
+    if nparts == 0 {
+        return false;
+    }
+    if nparts < workers {
+        return true;
+    }
+    let sizes: Vec<usize> = frame.partitions().iter().map(|p| p.approx_bytes()).collect();
+    let total: usize = sizes.iter().sum();
+    if total == 0 {
+        return false;
+    }
+    let max = *sizes.iter().max().unwrap();
+    (max as f64) / (total as f64) > max_share
+}
+
+/// Re-split into `workers * per_worker` equal-row partitions when the
+/// skew heuristic fires; otherwise pass through unchanged.
+pub fn rebalance(frame: Frame, workers: usize) -> Frame {
+    if needs_rebalance(&frame, workers, 0.25) {
+        frame.repartition(workers.max(1) * 4)
+    } else {
+        frame
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frame::{Column, Frame, Partition, Schema};
+
+    fn skewed_frame() -> Frame {
+        let schema = Schema::strings(&["c"]);
+        let big: Vec<Option<String>> = (0..1000).map(|i| Some(format!("row {i} xxxxxxxx"))).collect();
+        let small: Vec<Option<String>> = vec![Some("tiny".into())];
+        Frame::from_partitions(
+            schema,
+            vec![
+                Partition::new(vec![Column::from_strs(big)]),
+                Partition::new(vec![Column::from_strs(small.clone())]),
+                Partition::new(vec![Column::from_strs(small)]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn detects_byte_skew() {
+        let f = skewed_frame();
+        assert!(needs_rebalance(&f, 2, 0.25));
+    }
+
+    #[test]
+    fn detects_underpartitioning() {
+        let f = skewed_frame();
+        assert!(needs_rebalance(&f, 8, 1.1), "3 partitions < 8 workers");
+    }
+
+    #[test]
+    fn balanced_frame_passes_through() {
+        let schema = Schema::strings(&["c"]);
+        let parts: Vec<Partition> = (0..8)
+            .map(|_| {
+                Partition::new(vec![Column::from_strs(
+                    (0..100).map(|i| Some(format!("r{i}"))).collect(),
+                )])
+            })
+            .collect();
+        let f = Frame::from_partitions(schema, parts).unwrap();
+        assert!(!needs_rebalance(&f, 4, 0.25));
+        let nparts = f.num_partitions();
+        assert_eq!(rebalance(f, 4).num_partitions(), nparts);
+    }
+
+    #[test]
+    fn rebalance_preserves_rows() {
+        let f = skewed_frame();
+        let rows = f.num_rows();
+        let r = rebalance(f, 2);
+        assert_eq!(r.num_rows(), rows);
+        assert_eq!(r.num_partitions(), 8);
+    }
+}

@@ -1,0 +1,289 @@
+//! Typed, nullable columns.
+
+use super::value::{DType, Value};
+
+/// A single column of one partition. Stored as a dense `Vec` of optional
+/// values — the natural layout for string-heavy scholarly data where
+/// almost every transformation rewrites the payload anyway.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    Str(Vec<Option<String>>),
+    Tokens(Vec<Option<Vec<String>>>),
+    Vecs(Vec<Option<Vec<f32>>>),
+}
+
+impl Column {
+    pub fn from_strs(values: Vec<Option<String>>) -> Self {
+        Column::Str(values)
+    }
+
+    pub fn from_token_lists(values: Vec<Option<Vec<String>>>) -> Self {
+        Column::Tokens(values)
+    }
+
+    pub fn from_vectors(values: Vec<Option<Vec<f32>>>) -> Self {
+        Column::Vecs(values)
+    }
+
+    /// Build a column of the given dtype from generic [`Value`]s.
+    /// Values that don't fit the dtype become nulls — mirroring Spark's
+    /// permissive cast-to-null on malformed records.
+    pub fn from_values(values: Vec<Value>, dtype: DType) -> Self {
+        match dtype {
+            DType::Str => Column::Str(
+                values
+                    .into_iter()
+                    .map(|v| match v {
+                        Value::Str(s) => Some(s),
+                        _ => None,
+                    })
+                    .collect(),
+            ),
+            DType::Tokens => Column::Tokens(
+                values
+                    .into_iter()
+                    .map(|v| match v {
+                        Value::Tokens(t) => Some(t),
+                        _ => None,
+                    })
+                    .collect(),
+            ),
+            DType::Vector => Column::Vecs(
+                values
+                    .into_iter()
+                    .map(|v| match v {
+                        Value::Vector(x) => Some(x),
+                        _ => None,
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Pre-sized empty column.
+    pub fn with_capacity(dtype: DType, cap: usize) -> Self {
+        match dtype {
+            DType::Str => Column::Str(Vec::with_capacity(cap)),
+            DType::Tokens => Column::Tokens(Vec::with_capacity(cap)),
+            DType::Vector => Column::Vecs(Vec::with_capacity(cap)),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Column::Str(_) => DType::Str,
+            Column::Tokens(_) => DType::Tokens,
+            Column::Vecs(_) => DType::Vector,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Str(v) => v.len(),
+            Column::Tokens(v) => v.len(),
+            Column::Vecs(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_null(&self, i: usize) -> bool {
+        match self {
+            Column::Str(v) => v[i].is_none(),
+            Column::Tokens(v) => v[i].is_none(),
+            Column::Vecs(v) => v[i].is_none(),
+        }
+    }
+
+    pub fn null_count(&self) -> usize {
+        match self {
+            Column::Str(v) => v.iter().filter(|x| x.is_none()).count(),
+            Column::Tokens(v) => v.iter().filter(|x| x.is_none()).count(),
+            Column::Vecs(v) => v.iter().filter(|x| x.is_none()).count(),
+        }
+    }
+
+    pub fn get_str(&self, i: usize) -> Option<&str> {
+        match self {
+            Column::Str(v) => v[i].as_deref(),
+            _ => None,
+        }
+    }
+
+    pub fn get_tokens(&self, i: usize) -> Option<&[String]> {
+        match self {
+            Column::Tokens(v) => v[i].as_deref(),
+            _ => None,
+        }
+    }
+
+    pub fn get_vector(&self, i: usize) -> Option<&[f32]> {
+        match self {
+            Column::Vecs(v) => v[i].as_deref(),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, i: usize) -> Value {
+        match self {
+            Column::Str(v) => v[i].clone().map(Value::Str).unwrap_or(Value::Null),
+            Column::Tokens(v) => v[i].clone().map(Value::Tokens).unwrap_or(Value::Null),
+            Column::Vecs(v) => v[i].clone().map(Value::Vector).unwrap_or(Value::Null),
+        }
+    }
+
+    /// Consume into generic values (used by repartitioning).
+    pub fn into_values(self) -> Box<dyn Iterator<Item = Value>> {
+        match self {
+            Column::Str(v) => Box::new(
+                v.into_iter().map(|x| x.map(Value::Str).unwrap_or(Value::Null)),
+            ),
+            Column::Tokens(v) => Box::new(
+                v.into_iter().map(|x| x.map(Value::Tokens).unwrap_or(Value::Null)),
+            ),
+            Column::Vecs(v) => Box::new(
+                v.into_iter().map(|x| x.map(Value::Vector).unwrap_or(Value::Null)),
+            ),
+        }
+    }
+
+    /// Borrow the raw string vector (panics on dtype mismatch) — the
+    /// zero-copy path the transform stages use.
+    pub fn strs(&self) -> &[Option<String>] {
+        match self {
+            Column::Str(v) => v,
+            _ => panic!("column is not a string column"),
+        }
+    }
+
+    pub fn strs_mut(&mut self) -> &mut Vec<Option<String>> {
+        match self {
+            Column::Str(v) => v,
+            _ => panic!("column is not a string column"),
+        }
+    }
+
+    pub fn token_lists(&self) -> &[Option<Vec<String>>] {
+        match self {
+            Column::Tokens(v) => v,
+            _ => panic!("column is not a token column"),
+        }
+    }
+
+    pub fn vectors(&self) -> &[Option<Vec<f32>>] {
+        match self {
+            Column::Vecs(v) => v,
+            _ => panic!("column is not a vector column"),
+        }
+    }
+
+    /// Retain rows whose index passes `keep`. Used by null-drop and
+    /// distinct; preserves order.
+    pub fn filter_by_mask(&self, mask: &[bool]) -> Column {
+        debug_assert_eq!(mask.len(), self.len());
+        match self {
+            Column::Str(v) => Column::Str(
+                v.iter()
+                    .zip(mask)
+                    .filter(|(_, &m)| m)
+                    .map(|(x, _)| x.clone())
+                    .collect(),
+            ),
+            Column::Tokens(v) => Column::Tokens(
+                v.iter()
+                    .zip(mask)
+                    .filter(|(_, &m)| m)
+                    .map(|(x, _)| x.clone())
+                    .collect(),
+            ),
+            Column::Vecs(v) => Column::Vecs(
+                v.iter()
+                    .zip(mask)
+                    .filter(|(_, &m)| m)
+                    .map(|(x, _)| x.clone())
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Approximate payload size in bytes (used for partition rebalancing
+    /// and the copy-on-append cost model).
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            Column::Str(v) => v
+                .iter()
+                .map(|x| x.as_ref().map(|s| s.len()).unwrap_or(0) + std::mem::size_of::<Option<String>>())
+                .sum(),
+            Column::Tokens(v) => v
+                .iter()
+                .map(|x| {
+                    x.as_ref()
+                        .map(|t| t.iter().map(|s| s.len() + std::mem::size_of::<String>()).sum())
+                        .unwrap_or(0)
+                        + std::mem::size_of::<Option<Vec<String>>>()
+                })
+                .sum(),
+            Column::Vecs(v) => v
+                .iter()
+                .map(|x| {
+                    x.as_ref().map(|f| f.len() * 4).unwrap_or(0)
+                        + std::mem::size_of::<Option<Vec<f32>>>()
+                })
+                .sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn str_column_basics() {
+        let c = Column::from_strs(vec![Some("a".into()), None, Some("b".into())]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.dtype(), DType::Str);
+        assert_eq!(c.null_count(), 1);
+        assert!(c.is_null(1));
+        assert_eq!(c.get_str(0), Some("a"));
+        assert_eq!(c.get_str(1), None);
+    }
+
+    #[test]
+    fn from_values_casts_mismatch_to_null() {
+        let vals = vec![Value::from("x"), Value::Tokens(vec!["t".into()]), Value::Null];
+        let c = Column::from_values(vals, DType::Str);
+        assert_eq!(c.get_str(0), Some("x"));
+        assert!(c.is_null(1)); // tokens don't fit a string column
+        assert!(c.is_null(2));
+    }
+
+    #[test]
+    fn filter_by_mask_preserves_order() {
+        let c = Column::from_strs(vec![Some("a".into()), Some("b".into()), Some("c".into())]);
+        let f = c.filter_by_mask(&[true, false, true]);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.get_str(0), Some("a"));
+        assert_eq!(f.get_str(1), Some("c"));
+    }
+
+    #[test]
+    fn token_column_roundtrip() {
+        let c = Column::from_token_lists(vec![Some(vec!["a".into(), "b".into()]), None]);
+        assert_eq!(c.dtype(), DType::Tokens);
+        assert_eq!(c.get_tokens(0).unwrap(), &["a".to_string(), "b".to_string()][..]);
+        assert!(c.get_tokens(1).is_none());
+        let vals: Vec<Value> = c.clone().into_values().collect();
+        let c2 = Column::from_values(vals, DType::Tokens);
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn approx_bytes_counts_payload() {
+        let small = Column::from_strs(vec![Some("a".into())]);
+        let big = Column::from_strs(vec![Some("a".repeat(1000))]);
+        assert!(big.approx_bytes() > small.approx_bytes() + 900);
+    }
+}

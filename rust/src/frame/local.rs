@@ -1,0 +1,274 @@
+//! `LocalFrame` — the contiguous, single-buffer frame standing in for a
+//! pandas DataFrame.
+//!
+//! Two growth modes matter for the reproduction:
+//!
+//! - [`LocalFrame::extend_from_partition`] — amortized `Vec` growth, used
+//!   when collecting a distributed [`super::Frame`] (the P3SAPP exit path).
+//! - [`LocalFrame::append_copy`] — **full reallocation + copy of the
+//!   existing rows plus the new rows**, faithfully reproducing pandas
+//!   `DataFrame.append` (never in-place before pandas 2.0, which is what
+//!   the paper's CA, Algorithm 2 step 6, calls per file). Summed over
+//!   f files this is O(total²/f) — the measured cause of CA's ingestion
+//!   curve in Table 2.
+
+use super::column::Column;
+use super::partition::Partition;
+use super::schema::Schema;
+use super::value::{DType, Value};
+use crate::Result;
+
+/// Contiguous columnar frame (the "pandas DataFrame" of both algorithms'
+/// output contract).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LocalFrame {
+    schema: Schema,
+    columns: Vec<Column>,
+}
+
+impl LocalFrame {
+    pub fn empty(schema: Schema) -> Self {
+        let columns = schema
+            .fields()
+            .iter()
+            .map(|f| Column::with_capacity(f.dtype, 0))
+            .collect();
+        LocalFrame { schema, columns }
+    }
+
+    pub fn from_columns(schema: Schema, columns: Vec<Column>) -> Result<Self> {
+        let p = Partition::new(columns);
+        p.check_schema(&schema)?;
+        Ok(LocalFrame { schema, columns: p.into_columns() })
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.columns.first().map(|c| c.len()).unwrap_or(0)
+    }
+
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn column(&self, i: usize) -> &Column {
+        &self.columns[i]
+    }
+
+    pub fn column_by_name(&self, name: &str) -> Option<&Column> {
+        self.schema.index_of(name).map(|i| &self.columns[i])
+    }
+
+    pub fn column_mut(&mut self, i: usize) -> &mut Column {
+        &mut self.columns[i]
+    }
+
+    pub fn columns(&self) -> &[Column] {
+        &self.columns
+    }
+
+    pub fn column_index(&self, name: &str) -> Result<usize> {
+        self.schema
+            .index_of(name)
+            .ok_or_else(|| anyhow::anyhow!("no such column: {name}"))
+    }
+
+    /// Amortized append used by `Frame::collect` — plain `Vec::extend`.
+    pub fn extend_from_partition(&mut self, partition: Partition) {
+        debug_assert_eq!(partition.num_columns(), self.columns.len());
+        for (dst, src) in self.columns.iter_mut().zip(partition.into_columns()) {
+            match (dst, src) {
+                (Column::Str(d), Column::Str(s)) => d.extend(s),
+                (Column::Tokens(d), Column::Tokens(s)) => d.extend(s),
+                (Column::Vecs(d), Column::Vecs(s)) => d.extend(s),
+                _ => panic!("dtype mismatch in extend_from_partition"),
+            }
+        }
+    }
+
+    /// pandas-`append` semantics: allocate a **new** frame sized
+    /// rows(self)+rows(other), copy both, replace self. Deliberately not
+    /// amortized — this is the conventional approach's per-file ingestion
+    /// cost (see module docs).
+    pub fn append_copy(&mut self, other: &LocalFrame) -> Result<()> {
+        if self.schema != other.schema {
+            anyhow::bail!("append_copy: schema mismatch");
+        }
+        let total = self.num_rows() + other.num_rows();
+        let mut new_columns = Vec::with_capacity(self.columns.len());
+        for (a, b) in self.columns.iter().zip(&other.columns) {
+            // Exact-capacity allocation + element-wise clone of both
+            // halves = the realloc-and-copy pandas does on every append.
+            let col = match (a, b) {
+                (Column::Str(x), Column::Str(y)) => {
+                    let mut v = Vec::with_capacity(total);
+                    v.extend(x.iter().cloned());
+                    v.extend(y.iter().cloned());
+                    Column::Str(v)
+                }
+                (Column::Tokens(x), Column::Tokens(y)) => {
+                    let mut v = Vec::with_capacity(total);
+                    v.extend(x.iter().cloned());
+                    v.extend(y.iter().cloned());
+                    Column::Tokens(v)
+                }
+                _ => anyhow::bail!("append_copy: dtype mismatch"),
+            };
+            new_columns.push(col);
+        }
+        self.columns = new_columns;
+        Ok(())
+    }
+
+    /// Row as generic values (test/debug helper).
+    pub fn row(&self, i: usize) -> Vec<Value> {
+        self.columns.iter().map(|c| c.get(i)).collect()
+    }
+
+    /// Drop rows with a null in any of the named columns (Algorithm 1/2
+    /// step 9 and the post-cleaning null sweep).
+    pub fn drop_nulls(&mut self, cols: &[&str]) -> Result<usize> {
+        let idxs: Vec<usize> = cols
+            .iter()
+            .map(|c| self.column_index(c))
+            .collect::<Result<_>>()?;
+        let n = self.num_rows();
+        let mut mask = vec![true; n];
+        let mut dropped = 0usize;
+        for i in 0..n {
+            if idxs.iter().any(|&ci| self.columns[ci].is_null(i)) {
+                mask[i] = false;
+                dropped += 1;
+            }
+        }
+        if dropped > 0 {
+            for c in &mut self.columns {
+                *c = c.filter_by_mask(&mask);
+            }
+        }
+        Ok(dropped)
+    }
+
+    /// Drop duplicate rows, keyed on the named columns, keeping the first
+    /// occurrence (Algorithm 1/2 step 10).
+    pub fn drop_duplicates(&mut self, cols: &[&str]) -> Result<usize> {
+        let idxs: Vec<usize> = cols
+            .iter()
+            .map(|c| self.column_index(c))
+            .collect::<Result<_>>()?;
+        let n = self.num_rows();
+        let mut seen = std::collections::HashSet::with_capacity(n);
+        let mut mask = vec![true; n];
+        let mut dropped = 0usize;
+        for i in 0..n {
+            let key: Vec<Value> = idxs.iter().map(|&ci| self.columns[ci].get(i)).collect();
+            if !seen.insert(key) {
+                mask[i] = false;
+                dropped += 1;
+            }
+        }
+        if dropped > 0 {
+            for c in &mut self.columns {
+                *c = c.filter_by_mask(&mask);
+            }
+        }
+        Ok(dropped)
+    }
+
+    /// Convert into a single-partition distributed frame.
+    pub fn into_frame(self) -> super::Frame {
+        let schema = self.schema.clone();
+        super::Frame::from_partition(schema, Partition::new(self.columns))
+            .expect("LocalFrame is schema-consistent by construction")
+    }
+
+    /// Make a `DType::Str` pair extractor for (title, abstract)-style
+    /// record matching in the accuracy analysis.
+    pub fn str_rows(&self, col: &str) -> Result<Vec<Option<&str>>> {
+        let i = self.column_index(col)?;
+        let c = &self.columns[i];
+        if c.dtype() != DType::Str {
+            anyhow::bail!("str_rows: column {col} is not a string column");
+        }
+        Ok((0..c.len()).map(|r| c.get_str(r)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frame::Field;
+
+    fn lf(rows: &[(Option<&str>, Option<&str>)]) -> LocalFrame {
+        LocalFrame::from_columns(
+            Schema::strings(&["title", "abstract"]),
+            vec![
+                Column::from_strs(rows.iter().map(|r| r.0.map(String::from)).collect()),
+                Column::from_strs(rows.iter().map(|r| r.1.map(String::from)).collect()),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn append_copy_concatenates() {
+        let mut a = lf(&[(Some("t1"), Some("a1"))]);
+        let b = lf(&[(Some("t2"), Some("a2"))]);
+        a.append_copy(&b).unwrap();
+        assert_eq!(a.num_rows(), 2);
+        assert_eq!(a.column(0).get_str(1), Some("t2"));
+    }
+
+    #[test]
+    fn append_copy_schema_mismatch() {
+        let mut a = lf(&[(Some("t"), Some("a"))]);
+        let b = LocalFrame::empty(Schema::new(vec![Field::new("doi", DType::Str)]));
+        assert!(a.append_copy(&b).is_err());
+    }
+
+    #[test]
+    fn drop_nulls_any_column() {
+        let mut f = lf(&[
+            (Some("t1"), Some("a1")),
+            (None, Some("a2")),
+            (Some("t3"), None),
+            (Some("t4"), Some("a4")),
+        ]);
+        let dropped = f.drop_nulls(&["title", "abstract"]).unwrap();
+        assert_eq!(dropped, 2);
+        assert_eq!(f.num_rows(), 2);
+        assert_eq!(f.column(0).get_str(1), Some("t4"));
+    }
+
+    #[test]
+    fn drop_duplicates_keeps_first() {
+        let mut f = lf(&[
+            (Some("t1"), Some("a1")),
+            (Some("t1"), Some("a1")),
+            (Some("t1"), Some("a2")),
+        ]);
+        let dropped = f.drop_duplicates(&["title", "abstract"]).unwrap();
+        assert_eq!(dropped, 1);
+        assert_eq!(f.num_rows(), 2);
+    }
+
+    #[test]
+    fn drop_duplicates_on_subset_of_columns() {
+        let mut f = lf(&[(Some("t1"), Some("a1")), (Some("t1"), Some("a2"))]);
+        let dropped = f.drop_duplicates(&["title"]).unwrap();
+        assert_eq!(dropped, 1);
+        assert_eq!(f.num_rows(), 1);
+        assert_eq!(f.column(1).get_str(0), Some("a1"));
+    }
+
+    #[test]
+    fn into_frame_roundtrip() {
+        let f = lf(&[(Some("t1"), Some("a1")), (Some("t2"), Some("a2"))]);
+        let frame = f.clone().into_frame();
+        assert_eq!(frame.num_partitions(), 1);
+        assert_eq!(frame.collect(), f);
+    }
+}

@@ -1,0 +1,250 @@
+//! Columnar, partitioned DataFrame — the `sparklet` analog of a Spark SQL
+//! DataFrame, plus a contiguous [`LocalFrame`] standing in for pandas.
+//!
+//! Two frame flavours model the paper's two worlds:
+//!
+//! - [`Frame`] — *distributed* flavour: rows live in independent
+//!   [`Partition`]s, transformations run per-partition on the worker pool
+//!   (`engine`), and `union` is O(1) partition-list concatenation. This is
+//!   what gives P3SAPP its near-linear ingestion curve (Table 2).
+//! - [`LocalFrame`] — *pandas* flavour: one contiguous buffer per column.
+//!   The conventional approach (CA) appends each file's rows with a full
+//!   copy (`append_copy`), reproducing pandas `DataFrame.append`
+//!   semantics and therefore CA's superlinear ingestion blow-up.
+//!
+//! Columns are typed ([`DType::Str`] or [`DType::Tokens`]) with explicit
+//! nulls, mirroring Spark's nullable string / array<string> columns used
+//! by the paper's preprocessing stages.
+
+mod column;
+mod local;
+mod ops;
+mod partition;
+mod schema;
+mod value;
+
+pub use column::Column;
+pub use local::LocalFrame;
+pub use ops::{distinct, drop_nulls, hash_key};
+pub use partition::Partition;
+pub use schema::{Field, Schema};
+pub use value::{DType, Value};
+
+use crate::Result;
+
+/// A partitioned, columnar frame. The unit of parallelism is the
+/// [`Partition`]; all partitions share one [`Schema`].
+#[derive(Debug, Clone, Default)]
+pub struct Frame {
+    schema: Schema,
+    partitions: Vec<Partition>,
+}
+
+impl Frame {
+    /// Empty frame with the given schema and no partitions.
+    pub fn empty(schema: Schema) -> Self {
+        Frame { schema, partitions: Vec::new() }
+    }
+
+    /// Build a frame from one pre-assembled partition.
+    pub fn from_partition(schema: Schema, partition: Partition) -> Result<Self> {
+        partition.check_schema(&schema)?;
+        Ok(Frame { schema, partitions: vec![partition] })
+    }
+
+    /// Build a frame from many partitions (all must match the schema).
+    pub fn from_partitions(schema: Schema, partitions: Vec<Partition>) -> Result<Self> {
+        for p in &partitions {
+            p.check_schema(&schema)?;
+        }
+        Ok(Frame { schema, partitions })
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    pub fn partitions(&self) -> &[Partition] {
+        &self.partitions
+    }
+
+    pub fn partitions_mut(&mut self) -> &mut Vec<Partition> {
+        &mut self.partitions
+    }
+
+    pub fn into_partitions(self) -> (Schema, Vec<Partition>) {
+        (self.schema, self.partitions)
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// Total row count across partitions.
+    pub fn num_rows(&self) -> usize {
+        self.partitions.iter().map(|p| p.num_rows()).sum()
+    }
+
+    /// Union with another frame: O(1) in data — partition lists are
+    /// concatenated, nothing is copied. This is the Spark-side ingestion
+    /// primitive (Algorithm 1, step 6).
+    pub fn union(mut self, mut other: Frame) -> Result<Frame> {
+        if self.schema != other.schema {
+            anyhow::bail!(
+                "union: schema mismatch ({:?} vs {:?})",
+                self.schema.field_names(),
+                other.schema.field_names()
+            );
+        }
+        self.partitions.append(&mut other.partitions);
+        Ok(self)
+    }
+
+    /// Append a single partition in place (streaming ingestion path).
+    pub fn push_partition(&mut self, partition: Partition) -> Result<()> {
+        partition.check_schema(&self.schema)?;
+        self.partitions.push(partition);
+        Ok(())
+    }
+
+    /// Re-split rows into `n` roughly equal partitions. Used by the
+    /// engine to rebalance skewed ingestion output (files vary KB→MB)
+    /// before the transform stages.
+    pub fn repartition(self, n: usize) -> Frame {
+        let n = n.max(1);
+        let total = self.num_rows();
+        let schema = self.schema.clone();
+        if total == 0 {
+            return Frame::empty(schema);
+        }
+        let per = total.div_ceil(n);
+        let ncols = schema.len();
+        let mut builders: Vec<Vec<Value>> = (0..ncols).map(|_| Vec::with_capacity(per)).collect();
+        let mut out: Vec<Partition> = Vec::with_capacity(n);
+        let mut rows_in_builder = 0usize;
+        for part in self.partitions {
+            let nrows = part.num_rows();
+            let cols = part.into_columns();
+            let mut col_iters: Vec<_> = cols.into_iter().map(|c| c.into_values()).collect();
+            for _ in 0..nrows {
+                for (ci, it) in col_iters.iter_mut().enumerate() {
+                    builders[ci].push(it.next().expect("column length mismatch"));
+                }
+                rows_in_builder += 1;
+                if rows_in_builder == per {
+                    let cols: Vec<Column> = builders
+                        .iter_mut()
+                        .zip(schema.fields())
+                        .map(|(b, f)| Column::from_values(std::mem::take(b), f.dtype))
+                        .collect();
+                    out.push(Partition::new(cols));
+                    rows_in_builder = 0;
+                }
+            }
+        }
+        if rows_in_builder > 0 {
+            let cols: Vec<Column> = builders
+                .iter_mut()
+                .zip(schema.fields())
+                .map(|(b, f)| Column::from_values(std::mem::take(b), f.dtype))
+                .collect();
+            out.push(Partition::new(cols));
+        }
+        Frame { schema, partitions: out }
+    }
+
+    /// Collect all partitions into a single contiguous [`LocalFrame`]
+    /// (the Spark→pandas conversion of Algorithm 1, step 15 — the cost
+    /// that dominates P3SAPP's post-cleaning time in Table 3).
+    pub fn collect(self) -> LocalFrame {
+        let mut local = LocalFrame::empty(self.schema.clone());
+        for p in self.partitions {
+            local.extend_from_partition(p);
+        }
+        local
+    }
+
+    /// Index of a column by name.
+    pub fn column_index(&self, name: &str) -> Result<usize> {
+        self.schema
+            .index_of(name)
+            .ok_or_else(|| anyhow::anyhow!("no such column: {name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_col_schema() -> Schema {
+        Schema::new(vec![
+            Field::new("title", DType::Str),
+            Field::new("abstract", DType::Str),
+        ])
+    }
+
+    fn part(rows: &[(&str, &str)]) -> Partition {
+        Partition::new(vec![
+            Column::from_strs(rows.iter().map(|r| Some(r.0.to_string())).collect()),
+            Column::from_strs(rows.iter().map(|r| Some(r.1.to_string())).collect()),
+        ])
+    }
+
+    #[test]
+    fn union_is_partition_concat() {
+        let s = two_col_schema();
+        let a = Frame::from_partition(s.clone(), part(&[("t1", "a1")])).unwrap();
+        let b = Frame::from_partition(s, part(&[("t2", "a2"), ("t3", "a3")])).unwrap();
+        let u = a.union(b).unwrap();
+        assert_eq!(u.num_partitions(), 2);
+        assert_eq!(u.num_rows(), 3);
+    }
+
+    #[test]
+    fn union_schema_mismatch_fails() {
+        let a = Frame::empty(two_col_schema());
+        let b = Frame::empty(Schema::new(vec![Field::new("doi", DType::Str)]));
+        assert!(a.union(b).is_err());
+    }
+
+    #[test]
+    fn collect_concatenates_rows_in_partition_order() {
+        let s = two_col_schema();
+        let mut f = Frame::empty(s);
+        f.push_partition(part(&[("t1", "a1")])).unwrap();
+        f.push_partition(part(&[("t2", "a2")])).unwrap();
+        let local = f.collect();
+        assert_eq!(local.num_rows(), 2);
+        assert_eq!(local.column(0).get_str(0), Some("t1"));
+        assert_eq!(local.column(0).get_str(1), Some("t2"));
+    }
+
+    #[test]
+    fn push_partition_checks_schema() {
+        let mut f = Frame::empty(two_col_schema());
+        let bad = Partition::new(vec![Column::from_strs(vec![Some("x".into())])]);
+        assert!(f.push_partition(bad).is_err());
+    }
+
+    #[test]
+    fn repartition_preserves_rows_and_order() {
+        let s = two_col_schema();
+        let mut f = Frame::empty(s);
+        f.push_partition(part(&[("a", "1"), ("b", "2"), ("c", "3")])).unwrap();
+        f.push_partition(part(&[("d", "4"), ("e", "5")])).unwrap();
+        let r = f.repartition(2);
+        assert_eq!(r.num_partitions(), 2);
+        assert_eq!(r.num_rows(), 5);
+        let local = r.collect();
+        let titles: Vec<_> = (0..5).map(|i| local.column(0).get_str(i).unwrap().to_string()).collect();
+        assert_eq!(titles, vec!["a", "b", "c", "d", "e"]);
+    }
+
+    #[test]
+    fn repartition_empty_frame() {
+        let f = Frame::empty(two_col_schema());
+        let r = f.repartition(4);
+        assert_eq!(r.num_partitions(), 0);
+        assert_eq!(r.num_rows(), 0);
+    }
+}

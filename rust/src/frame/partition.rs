@@ -1,0 +1,135 @@
+//! A partition: the unit of parallel work.
+
+use super::column::Column;
+use super::schema::Schema;
+use crate::Result;
+
+/// One horizontal slice of a [`super::Frame`]: a set of equal-length
+/// columns. Partitions are moved whole between the ingestion workers,
+/// the transform executor, and the final collect.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    columns: Vec<Column>,
+}
+
+impl Partition {
+    pub fn new(columns: Vec<Column>) -> Self {
+        if let Some(first) = columns.first() {
+            debug_assert!(
+                columns.iter().all(|c| c.len() == first.len()),
+                "partition columns must have equal length"
+            );
+        }
+        Partition { columns }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.columns.first().map(|c| c.len()).unwrap_or(0)
+    }
+
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn column(&self, i: usize) -> &Column {
+        &self.columns[i]
+    }
+
+    pub fn column_mut(&mut self, i: usize) -> &mut Column {
+        &mut self.columns[i]
+    }
+
+    pub fn columns(&self) -> &[Column] {
+        &self.columns
+    }
+
+    pub fn into_columns(self) -> Vec<Column> {
+        self.columns
+    }
+
+    /// Replace column `i` (dtype may change — Tokenizer does this).
+    pub fn replace_column(&mut self, i: usize, col: Column) {
+        self.columns[i] = col;
+    }
+
+    /// Take column `i` out for an owned in-place transform, leaving an
+    /// empty placeholder. The partition is row-inconsistent until the
+    /// matching [`Partition::replace_column`] call — callers must pair
+    /// the two without touching other accessors in between.
+    pub fn take_column(&mut self, i: usize) -> Column {
+        let dtype = self.columns[i].dtype();
+        std::mem::replace(&mut self.columns[i], Column::with_capacity(dtype, 0))
+    }
+
+    /// Verify this partition's column count and dtypes match `schema`.
+    pub fn check_schema(&self, schema: &Schema) -> Result<()> {
+        if self.columns.len() != schema.len() {
+            anyhow::bail!(
+                "partition has {} columns, schema expects {}",
+                self.columns.len(),
+                schema.len()
+            );
+        }
+        for (col, field) in self.columns.iter().zip(schema.fields()) {
+            if col.dtype() != field.dtype {
+                anyhow::bail!(
+                    "column '{}' has dtype {}, schema expects {}",
+                    field.name,
+                    col.dtype(),
+                    field.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Keep only rows where `mask[i]` is true.
+    pub fn filter_by_mask(&self, mask: &[bool]) -> Partition {
+        Partition { columns: self.columns.iter().map(|c| c.filter_by_mask(mask)).collect() }
+    }
+
+    /// Approximate payload bytes (for rebalancing decisions).
+    pub fn approx_bytes(&self) -> usize {
+        self.columns.iter().map(|c| c.approx_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frame::{DType, Field};
+
+    fn p() -> Partition {
+        Partition::new(vec![
+            Column::from_strs(vec![Some("t1".into()), None]),
+            Column::from_strs(vec![Some("a1".into()), Some("a2".into())]),
+        ])
+    }
+
+    #[test]
+    fn row_and_column_counts() {
+        let p = p();
+        assert_eq!(p.num_rows(), 2);
+        assert_eq!(p.num_columns(), 2);
+    }
+
+    #[test]
+    fn schema_check_rejects_wrong_dtype() {
+        let p = p();
+        let ok = Schema::strings(&["title", "abstract"]);
+        assert!(p.check_schema(&ok).is_ok());
+        let bad = Schema::new(vec![
+            Field::new("title", DType::Tokens),
+            Field::new("abstract", DType::Str),
+        ]);
+        assert!(p.check_schema(&bad).is_err());
+    }
+
+    #[test]
+    fn filter_by_mask_filters_all_columns() {
+        let p = p().filter_by_mask(&[false, true]);
+        assert_eq!(p.num_rows(), 1);
+        assert_eq!(p.column(1).get_str(0), Some("a2"));
+        assert!(p.column(0).is_null(0));
+    }
+}

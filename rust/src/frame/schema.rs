@@ -1,0 +1,90 @@
+//! Frame schema: ordered, named, typed fields.
+
+use super::value::DType;
+
+/// One named, typed column slot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Field {
+    pub name: String,
+    pub dtype: DType,
+}
+
+impl Field {
+    pub fn new(name: impl Into<String>, dtype: DType) -> Self {
+        Field { name: name.into(), dtype }
+    }
+}
+
+/// Ordered collection of fields shared by every partition of a frame.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Schema {
+    fields: Vec<Field>,
+}
+
+impl Schema {
+    pub fn new(fields: Vec<Field>) -> Self {
+        Schema { fields }
+    }
+
+    /// Convenience: all-string schema from column names (the shape every
+    /// ingestion projection produces).
+    pub fn strings(names: &[&str]) -> Self {
+        Schema { fields: names.iter().map(|n| Field::new(*n, DType::Str)).collect() }
+    }
+
+    pub fn fields(&self) -> &[Field] {
+        &self.fields
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    pub fn field_names(&self) -> Vec<&str> {
+        self.fields.iter().map(|f| f.name.as_str()).collect()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.fields.iter().position(|f| f.name == name)
+    }
+
+    pub fn dtype_of(&self, name: &str) -> Option<DType> {
+        self.index_of(name).map(|i| self.fields[i].dtype)
+    }
+
+    /// New schema with one field's dtype replaced (stages like Tokenizer
+    /// change `string` → `array<string>`).
+    pub fn with_dtype(&self, name: &str, dtype: DType) -> Option<Schema> {
+        let idx = self.index_of(name)?;
+        let mut fields = self.fields.clone();
+        fields[idx].dtype = dtype;
+        Some(Schema { fields })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_builder_and_lookup() {
+        let s = Schema::strings(&["title", "abstract"]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.index_of("abstract"), Some(1));
+        assert_eq!(s.index_of("doi"), None);
+        assert_eq!(s.dtype_of("title"), Some(DType::Str));
+    }
+
+    #[test]
+    fn with_dtype_replaces_one_field() {
+        let s = Schema::strings(&["title", "abstract"]);
+        let s2 = s.with_dtype("abstract", DType::Tokens).unwrap();
+        assert_eq!(s2.dtype_of("abstract"), Some(DType::Tokens));
+        assert_eq!(s2.dtype_of("title"), Some(DType::Str));
+        assert!(s.with_dtype("nope", DType::Tokens).is_none());
+    }
+}

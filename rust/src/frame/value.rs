@@ -1,0 +1,164 @@
+//! Cell values and column dtypes.
+
+use std::fmt;
+
+/// Column data type. The paper's preprocessing stages work on Spark
+/// nullable `string` columns and `array<string>` columns (Tokenizer
+/// output / StopWordsRemover input), so those are the two dtypes we model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// Nullable UTF-8 string.
+    Str,
+    /// Nullable list of tokens (Spark `array<string>`).
+    Tokens,
+    /// Nullable dense feature vector (Spark `Vector`, used by the
+    /// TF-IDF feature-extraction stages).
+    Vector,
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DType::Str => write!(f, "string"),
+            DType::Tokens => write!(f, "array<string>"),
+            DType::Vector => write!(f, "vector"),
+        }
+    }
+}
+
+/// A single cell value.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Null,
+    Str(String),
+    Tokens(Vec<String>),
+    Vector(Vec<f32>),
+}
+
+// Eq/Hash by f32 bit pattern (NaN == NaN for dedup purposes; -0.0 and
+// 0.0 differ — acceptable for key semantics, consistent between the two
+// impls as the Hash/Eq contract requires).
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Value::Null, Value::Null) => true,
+            (Value::Str(a), Value::Str(b)) => a == b,
+            (Value::Tokens(a), Value::Tokens(b)) => a == b,
+            (Value::Vector(a), Value::Vector(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            _ => false,
+        }
+    }
+}
+
+impl Eq for Value {}
+
+impl std::hash::Hash for Value {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        match self {
+            Value::Null => 0u8.hash(state),
+            Value::Str(s) => {
+                1u8.hash(state);
+                s.hash(state);
+            }
+            Value::Tokens(t) => {
+                2u8.hash(state);
+                t.hash(state);
+            }
+            Value::Vector(v) => {
+                3u8.hash(state);
+                for x in v {
+                    x.to_bits().hash(state);
+                }
+            }
+        }
+    }
+}
+
+impl Value {
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    /// dtype of a non-null value; nulls fit any dtype.
+    pub fn fits(&self, dtype: DType) -> bool {
+        match (self, dtype) {
+            (Value::Null, _) => true,
+            (Value::Str(_), DType::Str) => true,
+            (Value::Tokens(_), DType::Tokens) => true,
+            (Value::Vector(_), DType::Vector) => true,
+            _ => false,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_tokens(&self) -> Option<&[String]> {
+        match self {
+            Value::Tokens(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_vector(&self) -> Option<&[f32]> {
+        match self {
+            Value::Vector(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+
+impl From<Option<String>> for Value {
+    fn from(s: Option<String>) -> Self {
+        match s {
+            Some(s) => Value::Str(s),
+            None => Value::Null,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_fits_any_dtype() {
+        assert!(Value::Null.fits(DType::Str));
+        assert!(Value::Null.fits(DType::Tokens));
+    }
+
+    #[test]
+    fn str_only_fits_str() {
+        let v = Value::from("x");
+        assert!(v.fits(DType::Str));
+        assert!(!v.fits(DType::Tokens));
+    }
+
+    #[test]
+    fn accessors() {
+        assert_eq!(Value::from("a").as_str(), Some("a"));
+        assert_eq!(Value::Null.as_str(), None);
+        let t = Value::Tokens(vec!["a".into(), "b".into()]);
+        assert_eq!(t.as_tokens().unwrap().len(), 2);
+        assert!(t.as_str().is_none());
+    }
+}

@@ -1,0 +1,63 @@
+//! Conventional (CA) ingestion: sequential file loop with pandas
+//! `DataFrame.append` copy-semantics (Algorithm 2, steps 2–8).
+//!
+//! Each file is read, parsed, projected to a small [`LocalFrame`], and
+//! appended to the accumulator via [`LocalFrame::append_copy`] — which
+//! reallocates and copies *all rows so far*, every file. Over f files of
+//! n total rows that is Θ(n·f) row copies: the measured mechanism behind
+//! the paper's 433 s → 32,699 s CA ingestion column (Table 2).
+
+use super::projector::project_batch;
+use super::scanner::list_shards;
+use crate::frame::{LocalFrame, Schema};
+use crate::json::parse_document;
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Sequential append-based ingestion of every shard under `dir`.
+pub fn ingest_dir_append(dir: &Path, fields: &[&str]) -> Result<LocalFrame> {
+    ingest_files_append(&list_shards(dir)?, fields)
+}
+
+/// Sequential append-based ingestion over an explicit file list.
+pub fn ingest_files_append(files: &[PathBuf], fields: &[&str]) -> Result<LocalFrame> {
+    let schema = Schema::strings(fields);
+    let mut data = LocalFrame::empty(schema.clone());
+    for path in files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let records = parse_document(&text)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let part = project_batch(&records, fields);
+        let incoming = LocalFrame::from_columns(schema.clone(), part.into_columns())?;
+        // pandas: data = data.append(selected)  — full copy each file.
+        data.append_copy(&incoming)?;
+    }
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate_corpus, CorpusSpec};
+    use crate::ingest::spark::ingest_dir;
+
+    #[test]
+    fn sequential_equals_parallel_content() {
+        let dir =
+            std::env::temp_dir().join(format!("p3sapp-ca-eq-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        generate_corpus(&CorpusSpec::tiny(17), &dir).unwrap();
+
+        let ca = ingest_dir_append(&dir, &["title", "abstract"]).unwrap();
+        let pa = ingest_dir(&dir, &["title", "abstract"], 4).unwrap().collect();
+        assert_eq!(ca, pa, "CA and P3SAPP ingestion must agree row-for-row");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_list_gives_empty_frame() {
+        let f = ingest_files_append(&[], &["title"]).unwrap();
+        assert_eq!(f.num_rows(), 0);
+    }
+}

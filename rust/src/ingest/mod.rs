@@ -1,0 +1,25 @@
+//! Data ingestion — both worlds:
+//!
+//! - [`spark`] — P3SAPP path (Algorithm 1, steps 2–8): shard files are
+//!   read and parsed **in parallel** by a worker pool; each file becomes
+//!   one [`crate::frame::Partition`] pushed through a bounded channel
+//!   (backpressure) and unioned into a [`crate::frame::Frame`] — an O(1)
+//!   pointer append per file.
+//! - [`append`] — conventional path (Algorithm 2, steps 2–8): files are
+//!   read **sequentially**; each file's rows are appended to a growing
+//!   [`crate::frame::LocalFrame`] with pandas `DataFrame.append`
+//!   copy-semantics, which is what makes CA's ingestion superlinear
+//!   (Table 2).
+//!
+//! Both paths perform the same *projection* (select `title`, `abstract`
+//! out of the full CORE record) so downstream row content is identical.
+
+pub mod append;
+pub mod projector;
+pub mod scanner;
+pub mod spark;
+
+pub use append::ingest_dir_append;
+pub use projector::project_record;
+pub use scanner::list_shards;
+pub use spark::{ingest_dir, IngestOptions};

@@ -1,0 +1,60 @@
+//! Column projection: CORE record JSON → the selected nullable string
+//! fields ("Select data to be extracted", Algorithms 1 & 2 step 5).
+
+use crate::frame::{Column, Partition};
+use crate::json::Json;
+
+/// Extract the named fields from one record. Missing, null, or
+/// non-string fields project to `None` — Spark's permissive reading of
+/// heterogeneous JSON.
+pub fn project_record(record: &Json, fields: &[&str]) -> Vec<Option<String>> {
+    fields
+        .iter()
+        .map(|f| record.get_str(f).map(|s| s.to_string()))
+        .collect()
+}
+
+/// Project a batch of records into one [`Partition`] with `fields.len()`
+/// string columns.
+pub fn project_batch(records: &[Json], fields: &[&str]) -> Partition {
+    let mut cols: Vec<Vec<Option<String>>> =
+        fields.iter().map(|_| Vec::with_capacity(records.len())).collect();
+    for rec in records {
+        for (i, f) in fields.iter().enumerate() {
+            cols[i].push(rec.get_str(f).map(|s| s.to_string()));
+        }
+    }
+    Partition::new(cols.into_iter().map(Column::from_strs).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    #[test]
+    fn projects_present_null_and_missing() {
+        let rec = parse(r#"{"title": "T", "abstract": null, "year": 2019}"#).unwrap();
+        let row = project_record(&rec, &["title", "abstract", "doi"]);
+        assert_eq!(row, vec![Some("T".to_string()), None, None]);
+    }
+
+    #[test]
+    fn non_string_field_projects_to_null() {
+        let rec = parse(r#"{"title": 42}"#).unwrap();
+        assert_eq!(project_record(&rec, &["title"]), vec![None]);
+    }
+
+    #[test]
+    fn batch_projection_shape() {
+        let records = vec![
+            parse(r#"{"title":"a","abstract":"x"}"#).unwrap(),
+            parse(r#"{"title":"b"}"#).unwrap(),
+        ];
+        let p = project_batch(&records, &["title", "abstract"]);
+        assert_eq!(p.num_rows(), 2);
+        assert_eq!(p.num_columns(), 2);
+        assert_eq!(p.column(0).get_str(1), Some("b"));
+        assert!(p.column(1).is_null(1));
+    }
+}

@@ -1,0 +1,53 @@
+//! Shard discovery: deterministic (sorted) listing of `.json` files
+//! under a corpus directory — both approaches must visit files in the
+//! same order for their outputs to be row-comparable.
+
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// All `.json` files directly under `dir`, sorted by file name.
+pub fn list_shards(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("cannot read corpus dir {}: {e}", dir.display()))?
+    {
+        let p = entry?.path();
+        if p.is_file() && p.extension().map(|e| e == "json") == Some(true) {
+            out.push(p);
+        }
+    }
+    out.sort();
+    if out.is_empty() {
+        anyhow::bail!("no .json shards found in {}", dir.display());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    #[test]
+    fn lists_sorted_json_only() {
+        let dir = std::env::temp_dir().join(format!("p3sapp-scan-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("b.json"), "{}").unwrap();
+        fs::write(dir.join("a.json"), "{}").unwrap();
+        fs::write(dir.join("notes.txt"), "x").unwrap();
+        let shards = list_shards(&dir).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert!(shards[0].ends_with("a.json"));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_dir_errors() {
+        let dir = std::env::temp_dir().join(format!("p3sapp-scan-empty-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        assert!(list_shards(&dir).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal, dependency-free JSON substrate: a recursive-descent parser
+//! and an escaping serializer. Built from scratch (no serde in the
+//! vendored dependency closure) — and sized for what the pipeline needs:
+//! CORE-schema metadata records, JSON-array files and JSON-lines files.
+//!
+//! The parser is used on the ingestion hot path, so it avoids
+//! recursion-per-char, borrows the input for scanning, and only allocates
+//! for the values that survive (strings, arrays, objects).
+
+mod parse;
+mod projected;
+mod write;
+
+pub use parse::{parse, parse_document, Parser};
+pub use projected::parse_document_projected;
+pub use write::{escape_into, write_value};
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup; `Json::Null` and missing both yield `None`.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(o) => match o.get(key) {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(v),
+            },
+            _ => None,
+        }
+    }
+
+    /// Field as string, treating null/missing/non-string as `None` —
+    /// exactly the nullable-string projection ingestion performs.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        write_value(self, &mut s);
+        f.write_str(&s)
+    }
+}
+
+/// Parse error with byte offset for diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JsonError {
+    pub offset: usize,
+    pub message: String,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "JSON error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"title": "T", "year": 2019, "topics": ["a"], "doi": null}"#).unwrap();
+        assert_eq!(v.get_str("title"), Some("T"));
+        assert_eq!(v.get("year").unwrap().as_i64(), Some(2019));
+        assert_eq!(v.get("doi"), None); // null collapses to None
+        assert_eq!(v.get("missing"), None);
+        assert_eq!(v.get("topics").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        let src = r#"{"a":[1,true,null,"s\"x"],"b":-2.5}"#;
+        let v = parse(src).unwrap();
+        let v2 = parse(&v.to_string()).unwrap();
+        assert_eq!(v, v2);
+    }
+}

@@ -1,0 +1,440 @@
+//! Recursive-descent JSON parser over `&str` input.
+
+use super::{Json, JsonError};
+use std::collections::BTreeMap;
+
+/// Parse a complete JSON document (one value, optionally surrounded by
+/// whitespace).
+pub fn parse(input: &str) -> Result<Json, JsonError> {
+    let mut p = Parser::new(input);
+    let v = p.value()?;
+    p.skip_ws();
+    if !p.eof() {
+        return Err(p.err("trailing characters after document"));
+    }
+    Ok(v)
+}
+
+/// Parse a *file-level* document that is either
+/// - a single JSON array of records,
+/// - a single JSON object (one record), or
+/// - JSON-lines (one record per non-empty line) —
+///
+/// the three layouts found in CORE metadata dumps (and produced by our
+/// corpus writer). Always returns the record list.
+pub fn parse_document(input: &str) -> Result<Vec<Json>, JsonError> {
+    let trimmed = input.trim_start();
+    if trimmed.starts_with('[') {
+        match parse(input)? {
+            Json::Arr(items) => Ok(items),
+            _ => unreachable!("leading '[' parses to array"),
+        }
+    } else {
+        // JSON-lines (also covers the single-object case: one line).
+        let mut out = Vec::new();
+        let mut offset = 0usize;
+        for line in input.split('\n') {
+            let l = line.trim();
+            if !l.is_empty() {
+                out.push(parse(l).map_err(|e| JsonError {
+                    offset: offset + e.offset,
+                    message: e.message,
+                })?);
+            }
+            offset += line.len() + 1;
+        }
+        Ok(out)
+    }
+}
+
+/// Stateful parser; exposed for streaming use by the ingestion layer.
+pub struct Parser<'a> {
+    input: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    pub fn new(input: &'a str) -> Self {
+        Parser { input, bytes: input.as_bytes(), pos: 0 }
+    }
+
+    pub fn eof(&self) -> bool {
+        self.pos >= self.bytes.len()
+    }
+
+    pub fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError { offset: self.pos, message: msg.into() }
+    }
+
+    pub fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, JsonError> {
+        if self.input[self.pos..].starts_with(lit) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(self.err(format!("invalid literal, expected '{lit}'")))
+        }
+    }
+
+    /// Parse one JSON value starting at the current position.
+    pub fn value(&mut self) -> Result<Json, JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(c) => Err(self.err(format!("unexpected character '{}'", c as char))),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(out)),
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut out = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            out.insert(key, val);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(out)),
+                _ => return Err(self.err("expected ',' or '}' in object")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        // Fast path: scan for closing quote with no escapes, borrow once.
+        let mut i = self.pos;
+        while i < self.bytes.len() {
+            match self.bytes[i] {
+                b'"' => {
+                    let s = self.input[start..i].to_string();
+                    self.pos = i + 1;
+                    return Ok(s);
+                }
+                b'\\' => break,
+                _ => i += 1,
+            }
+        }
+        // Slow path with escape decoding.
+        let mut s = String::with_capacity(16);
+        s.push_str(&self.input[start..i]);
+        self.pos = i;
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(s),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'b') => s.push('\u{8}'),
+                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        if (0xD800..0xDC00).contains(&cp) {
+                            // High surrogate: require \uXXXX low surrogate.
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("unpaired surrogate"));
+                            }
+                            let low = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&low) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (low - 0xDC00);
+                            s.push(char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))?);
+                        } else if (0xDC00..0xE000).contains(&cp) {
+                            return Err(self.err("unpaired low surrogate"));
+                        } else {
+                            s.push(char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?);
+                        }
+                    }
+                    _ => return Err(self.err("invalid escape")),
+                },
+                Some(b) if b < 0x80 => s.push(b as char),
+                Some(_) => {
+                    // Multi-byte UTF-8: copy the full char.
+                    self.pos -= 1;
+                    let c = self.input[self.pos..].chars().next().unwrap();
+                    s.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    // ---- low-level access for the projection parser ----------------
+
+    pub(crate) fn peek_byte(&self) -> Option<u8> {
+        self.peek()
+    }
+
+    pub(crate) fn bump_byte(&mut self) -> Option<u8> {
+        self.bump()
+    }
+
+    pub(crate) fn expect_byte(&mut self, b: u8) -> Result<(), JsonError> {
+        self.expect(b)
+    }
+
+    /// Public string parse (for keys / projected values).
+    pub(crate) fn parse_string(&mut self) -> Result<String, JsonError> {
+        self.string()
+    }
+
+    /// Consume one complete JSON value without materializing it —
+    /// the projection parser's skip path. Strings are scanned at byte
+    /// speed (escape-aware, no decoding); containers by depth counting.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'n') => self.literal("null", Json::Null).map(|_| ()),
+            Some(b't') => self.literal("true", Json::Bool(true)).map(|_| ()),
+            Some(b'f') => self.literal("false", Json::Bool(false)).map(|_| ()),
+            Some(b'"') => self.skip_string(),
+            Some(b'-' | b'0'..=b'9') => self.number().map(|_| ()),
+            Some(b'[') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(b',') => continue,
+                        Some(b']') => return Ok(()),
+                        _ => return Err(self.err("expected ',' or ']' in array")),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_string()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(b',') => continue,
+                        Some(b'}') => return Ok(()),
+                        _ => return Err(self.err("expected ',' or '}' in object")),
+                    }
+                }
+            }
+            Some(c) => Err(self.err(format!("unexpected character '{}'", c as char))),
+        }
+    }
+
+    /// Scan past a string without building it.
+    fn skip_string(&mut self) -> Result<(), JsonError> {
+        self.expect(b'"')?;
+        while self.pos < self.bytes.len() {
+            match self.bytes[self.pos] {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                b'\\' => self.pos += 2, // skip escape pair (incl. \uXXXX prefix)
+                _ => self.pos += 1,
+            }
+        }
+        Err(self.err("unterminated string"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let hex = &self.input[self.pos..self.pos + 4];
+        let v = u32::from_str_radix(hex, 16).map_err(|_| self.err("invalid \\u escape"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        let text = &self.input[start..self.pos];
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| JsonError { offset: start, message: format!("invalid number '{text}'") })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse(" -2.5e2 ").unwrap(), Json::Num(-250.0));
+        assert_eq!(parse(r#""hi""#).unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn escapes() {
+        assert_eq!(
+            parse(r#""a\"b\\c\nd\tA""#).unwrap(),
+            Json::Str("a\"b\\c\nd\tA".into())
+        );
+    }
+
+    #[test]
+    fn surrogate_pair() {
+        assert_eq!(parse(r#""😀""#).unwrap(), Json::Str("😀".into()));
+        assert!(parse(r#""\ud83d""#).is_err());
+    }
+
+    #[test]
+    fn utf8_passthrough() {
+        assert_eq!(parse(r#""naïve Σ""#).unwrap(), Json::Str("naïve Σ".into()));
+    }
+
+    #[test]
+    fn nested_structures() {
+        let v = parse(r#"{"a": [1, {"b": null}], "c": {}}"#).unwrap();
+        let a = v.as_obj().unwrap().get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a[0], Json::Num(1.0));
+        assert!(a[1].as_obj().unwrap().get("b").unwrap().is_null());
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(parse("").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse(r#"{"a" 1}"#).is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("nul").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse(r#""unterminated"#).is_err());
+    }
+
+    #[test]
+    fn error_offset_reported() {
+        let e = parse("[1, x]").unwrap_err();
+        assert_eq!(e.offset, 4);
+    }
+
+    #[test]
+    fn document_array_layout() {
+        let recs = parse_document(r#"[{"title":"a"},{"title":"b"}]"#).unwrap();
+        assert_eq!(recs.len(), 2);
+    }
+
+    #[test]
+    fn document_jsonl_layout() {
+        let recs = parse_document("{\"title\":\"a\"}\n\n{\"title\":\"b\"}\n").unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].get_str("title"), Some("b"));
+    }
+
+    #[test]
+    fn document_single_object() {
+        let recs = parse_document(r#"{"title":"only"}"#).unwrap();
+        assert_eq!(recs.len(), 1);
+    }
+
+    #[test]
+    fn document_jsonl_error_has_global_offset() {
+        let e = parse_document("{\"ok\":1}\n{bad}\n").unwrap_err();
+        assert!(e.offset > 8, "offset {} should point into line 2", e.offset);
+    }
+}

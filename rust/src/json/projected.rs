@@ -1,0 +1,173 @@
+//! Projection-pushdown parsing: materialize only the requested top-level
+//! string fields of each record, *skipping* every other value without
+//! building a `Json` tree.
+//!
+//! This mirrors what Spark's JSON datasource actually does when a query
+//! selects two columns (schema/projection pushdown into the parser),
+//! and is the honest mechanism behind part of P3SAPP's ingestion
+//! advantage: pandas `read_json` has no such pushdown and materializes
+//! every field (our CA path does the same via `parse_document`).
+
+use super::parse::Parser;
+use super::JsonError;
+
+/// Parse a file-level document (JSON array / JSON-lines / single object)
+/// into rows of the projected `fields` (nullable strings). Non-string
+/// and null field values project to `None`, like the full parser.
+pub fn parse_document_projected(
+    input: &str,
+    fields: &[&str],
+) -> Result<Vec<Vec<Option<String>>>, JsonError> {
+    let trimmed = input.trim_start();
+    if trimmed.starts_with('[') {
+        let mut p = Parser::new(input);
+        p.skip_ws();
+        p.expect_byte(b'[')?;
+        let mut out = Vec::new();
+        p.skip_ws();
+        if p.peek_byte() == Some(b']') {
+            return Ok(out);
+        }
+        loop {
+            out.push(record_projected(&mut p, fields)?);
+            p.skip_ws();
+            match p.bump_byte() {
+                Some(b',') => continue,
+                Some(b']') => break,
+                _ => return Err(p.err("expected ',' or ']' in record array")),
+            }
+        }
+        p.skip_ws();
+        if !p.eof() {
+            return Err(p.err("trailing characters after document"));
+        }
+        Ok(out)
+    } else {
+        let mut out = Vec::new();
+        let mut offset = 0usize;
+        for line in input.split('\n') {
+            let l = line.trim();
+            if !l.is_empty() {
+                let mut p = Parser::new(l);
+                let row = record_projected(&mut p, fields).map_err(|e| JsonError {
+                    offset: offset + e.offset,
+                    message: e.message,
+                })?;
+                p.skip_ws();
+                if !p.eof() {
+                    return Err(JsonError {
+                        offset,
+                        message: "trailing characters after record".into(),
+                    });
+                }
+                out.push(row);
+            }
+            offset += line.len() + 1;
+        }
+        Ok(out)
+    }
+}
+
+/// Parse one object, keeping only `fields` (string values), skipping the
+/// rest at lexer speed.
+fn record_projected(
+    p: &mut Parser<'_>,
+    fields: &[&str],
+) -> Result<Vec<Option<String>>, JsonError> {
+    p.skip_ws();
+    p.expect_byte(b'{')?;
+    let mut row: Vec<Option<String>> = vec![None; fields.len()];
+    p.skip_ws();
+    if p.peek_byte() == Some(b'}') {
+        p.bump_byte();
+        return Ok(row);
+    }
+    loop {
+        p.skip_ws();
+        // Keys are short; borrow where possible via the fast path.
+        let key = p.parse_string()?;
+        p.skip_ws();
+        p.expect_byte(b':')?;
+        if let Some(idx) = fields.iter().position(|f| *f == key) {
+            p.skip_ws();
+            if p.peek_byte() == Some(b'"') {
+                row[idx] = Some(p.parse_string()?);
+            } else {
+                // null / number / object / array → None, still consumed.
+                p.skip_value()?;
+            }
+        } else {
+            p.skip_value()?;
+        }
+        p.skip_ws();
+        match p.bump_byte() {
+            Some(b',') => continue,
+            Some(b'}') => return Ok(row),
+            _ => return Err(p.err("expected ',' or '}' in record")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse_document;
+
+    const DOC: &str = r#"[
+      {"title": "T1", "abstract": "A1", "year": 2019, "authors": ["x", "y"],
+       "enrichments": {"references": ["r1"], "documentType": {"type": null}}},
+      {"title": null, "abstract": "A2 \"quoted\"", "junk": [1, [2, {"k": "v"}]]},
+      {"abstract": 42, "title": "T3"}
+    ]"#;
+
+    #[test]
+    fn projects_only_requested_fields() {
+        let rows = parse_document_projected(DOC, &["title", "abstract"]).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], vec![Some("T1".into()), Some("A1".into())]);
+        assert_eq!(rows[1], vec![None, Some("A2 \"quoted\"".into())]);
+        assert_eq!(rows[2], vec![Some("T3".into()), None]); // non-string → None
+    }
+
+    #[test]
+    fn agrees_with_full_parser_on_projection() {
+        let full = parse_document(DOC).unwrap();
+        let proj = parse_document_projected(DOC, &["title", "abstract"]).unwrap();
+        for (rec, row) in full.iter().zip(&proj) {
+            assert_eq!(rec.get_str("title").map(String::from), row[0]);
+            assert_eq!(rec.get_str("abstract").map(String::from), row[1]);
+        }
+    }
+
+    #[test]
+    fn jsonl_layout() {
+        let doc = "{\"title\":\"a\",\"x\":{}}\n{\"title\":\"b\"}\n";
+        let rows = parse_document_projected(doc, &["title"]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1][0].as_deref(), Some("b"));
+    }
+
+    #[test]
+    fn skip_handles_nesting_and_escapes() {
+        let doc = r#"{"skip": {"a": [1, "s}]", {"b": "\"}"}], "c": null}, "title": "ok"}"#;
+        let rows = parse_document_projected(doc, &["title"]).unwrap();
+        assert_eq!(rows[0][0].as_deref(), Some("ok"));
+        // Cross-check with the full parser: both must accept it.
+        assert!(crate::json::parse(doc).is_ok());
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(parse_document_projected("[{]", &["t"]).is_err());
+        assert!(parse_document_projected("{\"a\" 1}", &["a"]).is_err());
+        assert!(parse_document_projected("[{}", &["t"]).is_err());
+    }
+
+    #[test]
+    fn empty_docs() {
+        assert!(parse_document_projected("[]", &["t"]).unwrap().is_empty());
+        assert!(parse_document_projected("\n\n", &["t"]).unwrap().is_empty());
+        let rows = parse_document_projected("{}", &["t"]).unwrap();
+        assert_eq!(rows, vec![vec![None]]);
+    }
+}

@@ -1,0 +1,93 @@
+//! JSON serialization with correct string escaping. Used by the corpus
+//! generator's shard writer.
+
+use super::Json;
+
+/// Append the JSON-escaped form of `s` (including surrounding quotes)
+/// to `out`.
+pub fn escape_into(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Serialize `v` onto `out` (compact form).
+pub fn write_value(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                out.push_str(&format!("{}", *n as i64));
+            } else {
+                out.push_str(&format!("{n}"));
+            }
+        }
+        Json::Str(s) => escape_into(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                escape_into(k, out);
+                out.push(':');
+                write_value(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+
+    #[test]
+    fn escaping_roundtrip() {
+        let nasty = "quote\" slash\\ nl\n tab\t ctrl\u{1} unicode✓";
+        let mut out = String::new();
+        escape_into(nasty, &mut out);
+        assert_eq!(parse(&out).unwrap(), Json::Str(nasty.into()));
+    }
+
+    #[test]
+    fn integers_serialized_without_decimal() {
+        let mut out = String::new();
+        write_value(&Json::Num(2019.0), &mut out);
+        assert_eq!(out, "2019");
+    }
+
+    #[test]
+    fn structure_roundtrip() {
+        let src = r#"{"authors":["A. One","B. Two"],"year":2019,"doi":null,"score":0.5}"#;
+        let v = parse(src).unwrap();
+        let mut out = String::new();
+        write_value(&v, &mut out);
+        assert_eq!(parse(&out).unwrap(), v);
+    }
+}

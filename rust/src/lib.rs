@@ -1,0 +1,57 @@
+//! # p3sapp — Preprocessing Pipeline for Scholarly Applications
+//!
+//! A reproduction of *"A Spark ML-driven preprocessing approach for deep
+//! learning-based scholarly data applications"* (Khan, Liu & Alam, 2019)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the coordination layer: a from-scratch
+//!   Spark-like engine (`frame`, `pipeline`, `engine`, `ingest`), the
+//!   conventional sequential baseline (`baseline`), the PJRT runtime that
+//!   drives the AOT-compiled seq2seq model (`runtime`), and the
+//!   analysis/reporting layer regenerating every table and figure of the
+//!   paper (`analysis`, `report`).
+//! - **L2** — `python/compile/model.py`: the JAX seq2seq model (3-layer
+//!   stacked LSTM encoder, Bahdanau-attention decoder), AOT-lowered to
+//!   HLO text artifacts at build time.
+//! - **L1** — `python/compile/kernels/`: Pallas kernels for the fused
+//!   LSTM cell and Bahdanau attention.
+//!
+//! Python never runs at request time: `make artifacts` produces
+//! `artifacts/*.hlo.txt` once; the `repro` binary is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use p3sapp::corpus::{CorpusSpec, generate_corpus};
+//! use p3sapp::ingest::spark::ingest_dir;
+//! use p3sapp::pipeline::presets;
+//!
+//! let spec = CorpusSpec::tiny(42);
+//! let dir = std::path::Path::new("/tmp/corpus");
+//! generate_corpus(&spec, dir).unwrap();
+//! let frame = ingest_dir(dir, &["title", "abstract"], 4).unwrap();
+//! let model = presets::abstract_pipeline("abstract").fit(&frame).unwrap();
+//! let clean = model.transform(frame, 4).unwrap();
+//! println!("{} clean rows", clean.num_rows());
+//! ```
+
+pub mod analysis;
+pub mod baseline;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod corpus;
+pub mod driver;
+pub mod engine;
+pub mod frame;
+pub mod ingest;
+pub mod json;
+pub mod metrics;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod textutil;
+pub mod vocab;
+
+/// Crate-wide result alias (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

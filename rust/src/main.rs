@@ -1,0 +1,420 @@
+//! `repro` — the P3SAPP launcher.
+//!
+//! Subcommands:
+//!   gen-corpus   generate a synthetic CORE-schema corpus tier
+//!   preprocess   run one approach (ca | p3sapp) over a corpus dir
+//!   compare      run both approaches + accuracy matching
+//!   train        preprocess then train the seq2seq model (AOT/PJRT)
+//!   infer        generate titles with a freshly trained model
+//!   report       regenerate the paper's tables/figures (e1..e9, all)
+//!
+//! Run `repro help` for options.
+
+use p3sapp::analysis::accuracy::match_column;
+use p3sapp::cli::Args;
+use p3sapp::config::AppConfig;
+use p3sapp::corpus::{generate_corpus, CorpusSpec};
+use p3sapp::driver::{run_ca, run_p3sapp, DriverOptions};
+use p3sapp::ingest::list_shards;
+use p3sapp::report as rpt;
+use p3sapp::runtime::{Generator, Session, Trainer};
+use p3sapp::vocab::{Batcher, Vocabulary};
+use p3sapp::Result;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "usage: repro <command> [options]\n\
+         \n\
+         commands:\n\
+         \x20 gen-corpus  --dir D [--tier 1..5 | --records N] [--seed S] [--scale F]\n\
+         \x20 preprocess  --dir D --approach ca|p3sapp [--workers N]\n\
+         \x20 compare     --dir D [--workers N]\n\
+         \x20 train       --dir D [--steps N] [--artifacts A] [--workers N]\n\
+         \x20             [--save-params FILE]\n\
+         \x20 infer       --dir D [--steps N] [--titles K] [--artifacts A]\n\
+         \x20 report      [--exp all|e1|...|e9] [--base-dir B] [--scale F]\n\
+         \x20             [--tiers 1,2,3] [--workers N] [--artifacts A] [--csv]\n\
+         \x20 help\n\
+         \n\
+         common options:\n\
+         \x20 --config FILE   load a TOML config (defaults otherwise)\n"
+    );
+}
+
+fn load_config(args: &Args) -> Result<AppConfig> {
+    match args.get("config") {
+        Some(path) => AppConfig::load(Path::new(path)),
+        None => Ok(AppConfig::default()),
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "gen-corpus" => cmd_gen_corpus(args),
+        "preprocess" => cmd_preprocess(args),
+        "compare" => cmd_compare(args),
+        "train" => cmd_train(args),
+        "infer" => cmd_infer(args),
+        "report" => cmd_report(args),
+        "help" | "" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            usage();
+            anyhow::bail!("unknown command '{other}'")
+        }
+    }
+}
+
+fn cmd_gen_corpus(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dir = PathBuf::from(
+        args.get("dir").ok_or_else(|| anyhow::anyhow!("--dir is required"))?,
+    );
+    let seed = args.get_u64("seed", cfg.corpus.seed)?;
+    let scale = args.get_f64("scale", cfg.corpus.scale)?;
+    let mut spec = match args.get("tier") {
+        Some(t) => CorpusSpec::tier(t.parse()?, seed),
+        None => {
+            let mut s = CorpusSpec::tiny(seed);
+            s.n_records = args.get_usize("records", s.n_records)?;
+            s
+        }
+    }
+    .scaled(scale);
+    spec.html_noise_rate = cfg.corpus.html_noise_rate;
+    spec.dup_rate = cfg.corpus.dup_rate;
+    let m = generate_corpus(&spec, &dir)?;
+    println!(
+        "generated {} records ({} duplicates) in {} files, {:.2} MB at {}",
+        m.n_records,
+        m.n_duplicates,
+        m.n_files,
+        m.total_bytes as f64 / 1048576.0,
+        dir.display()
+    );
+    Ok(())
+}
+
+fn driver_opts(args: &Args, cfg: &AppConfig) -> Result<DriverOptions> {
+    Ok(DriverOptions {
+        workers: args.get_usize("workers", cfg.engine.workers)?,
+        ..Default::default()
+    })
+}
+
+fn cmd_preprocess(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dir = PathBuf::from(
+        args.get("dir").ok_or_else(|| anyhow::anyhow!("--dir is required"))?,
+    );
+    let files = list_shards(&dir)?;
+    let opts = driver_opts(args, &cfg)?;
+    let approach = args.get_or("approach", "p3sapp");
+    let res = match approach {
+        "ca" => run_ca(&files, &opts)?,
+        "p3sapp" => run_p3sapp(&files, &opts)?,
+        other => anyhow::bail!("--approach must be ca or p3sapp, got '{other}'"),
+    };
+    println!("approach           {approach}");
+    println!("rows ingested      {}", res.rows_ingested);
+    println!("rows out           {}", res.rows_out);
+    for (stage, d) in res.times.stages() {
+        println!("{stage:18} {:.3} s", d.as_secs_f64());
+    }
+    println!("preprocessing      {:.3} s", res.preprocessing_secs());
+    println!("cumulative (t_c)   {:.3} s", res.cumulative_secs());
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dir = PathBuf::from(
+        args.get("dir").ok_or_else(|| anyhow::anyhow!("--dir is required"))?,
+    );
+    let files = list_shards(&dir)?;
+    let opts = driver_opts(args, &cfg)?;
+    println!("running P3SAPP ...");
+    let pa = run_p3sapp(&files, &opts)?;
+    println!("running conventional approach ...");
+    let ca = run_ca(&files, &opts)?;
+
+    let mut t = rpt::TextTable::new(
+        "CA vs P3SAPP",
+        &["metric", "CA", "P3SAPP", "reduction %"],
+    );
+    let red = |a: f64, b: f64| {
+        if a > 0.0 { format!("{:.3}", (a - b) / a * 100.0) } else { "-".into() }
+    };
+    t.row(vec![
+        "ingestion (s)".into(),
+        format!("{:.3}", ca.ingestion_secs()),
+        format!("{:.3}", pa.ingestion_secs()),
+        red(ca.ingestion_secs(), pa.ingestion_secs()),
+    ]);
+    t.row(vec![
+        "preprocessing (s)".into(),
+        format!("{:.3}", ca.preprocessing_secs()),
+        format!("{:.3}", pa.preprocessing_secs()),
+        red(ca.preprocessing_secs(), pa.preprocessing_secs()),
+    ]);
+    t.row(vec![
+        "cumulative (s)".into(),
+        format!("{:.3}", ca.cumulative_secs()),
+        format!("{:.3}", pa.cumulative_secs()),
+        red(ca.cumulative_secs(), pa.cumulative_secs()),
+    ]);
+    print!("{}", t.render());
+
+    for col in ["title", "abstract"] {
+        let m = match_column(&ca.frame, &pa.frame, col)?;
+        println!(
+            "accuracy[{col}]: {}/{} matching = {:.3}%",
+            m.matching,
+            m.rows_ca.max(m.rows_p3sapp),
+            m.percentage
+        );
+    }
+    Ok(())
+}
+
+/// Preprocess a corpus and train for `steps`; returns what infer needs.
+fn train_pipeline(
+    args: &Args,
+    cfg: &AppConfig,
+) -> Result<(Trainer, Vocabulary, p3sapp::frame::LocalFrame, Vec<f32>)> {
+    let dir = PathBuf::from(
+        args.get("dir").ok_or_else(|| anyhow::anyhow!("--dir is required"))?,
+    );
+    let artifacts = args.get_or("artifacts", &cfg.model.artifacts_dir).to_string();
+    let steps = args.get_usize("steps", cfg.model.train_steps)?;
+    let files = list_shards(&dir)?;
+    let opts = driver_opts(args, cfg)?;
+
+    println!("preprocessing (P3SAPP) ...");
+    let pre = run_p3sapp(&files, &opts)?;
+    println!("  {} clean rows in {:.3} s", pre.rows_out, pre.cumulative_secs());
+
+    let session = Session::cpu(&artifacts)?;
+    println!("PJRT platform: {}", session.platform());
+    let mut trainer = Trainer::new(session)?;
+    let mcfg = trainer.manifest.config.clone();
+    println!(
+        "model: vocab={} hidden={} enc_layers={} B={} S={} T={} ({} tensors)",
+        mcfg.vocab, mcfg.hidden, mcfg.enc_layers, mcfg.batch, mcfg.src_len, mcfg.tgt_len,
+        trainer.manifest.n_tensors()
+    );
+
+    let frame = pre.frame;
+    let texts: Vec<&str> = (0..frame.num_rows())
+        .flat_map(|i| {
+            [
+                frame.column(0).get_str(i).unwrap_or(""),
+                frame.column(1).get_str(i).unwrap_or(""),
+            ]
+        })
+        .collect();
+    let vocab = Vocabulary::build(texts.into_iter(), mcfg.vocab);
+    println!("vocabulary: {} entries", vocab.len());
+
+    let mut batcher = Batcher::new(
+        &frame,
+        &vocab,
+        "title",
+        "abstract",
+        mcfg.batch,
+        mcfg.src_len,
+        mcfg.tgt_len,
+        cfg.model.batch_seed,
+    )?;
+    println!(
+        "training {} steps ({} pairs, {} batches/epoch) ...",
+        steps,
+        batcher.num_pairs(),
+        batcher.batches_per_epoch()
+    );
+    let stats = trainer.train_loop(steps, || batcher.next_batch())?;
+    let losses: Vec<f32> = stats.iter().map(|s| s.loss).collect();
+    let avg_step = stats.iter().map(|s| s.wall_secs).sum::<f64>() / stats.len().max(1) as f64;
+    for chunk in stats.chunks(steps.div_ceil(10).max(1)) {
+        let s = chunk.last().unwrap();
+        println!("  step {:4}  loss {:.4}  ({:.3} s/step)", s.step, s.loss, s.wall_secs);
+    }
+    println!("avg step time: {avg_step:.3} s");
+    Ok((trainer, vocab, frame, losses))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let (trainer, _, _, losses) = train_pipeline(args, &cfg)?;
+    let first = *losses.first().unwrap_or(&f32::NAN);
+    let last = *losses.last().unwrap_or(&f32::NAN);
+    println!(
+        "loss: {:.4} -> {:.4} over {} steps",
+        first,
+        last,
+        trainer.step_count()
+    );
+    if let Some(path) = args.get("save-params") {
+        trainer.save_checkpoint(Path::new(path))?;
+        println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let titles = args.get_usize("titles", 5)?;
+    let (trainer, vocab, frame, _) = train_pipeline(args, &cfg)?;
+    let generator = Generator::from_trainer(trainer)?;
+    println!("\ngenerating {titles} titles:");
+    let mut total = 0.0;
+    for i in 0..titles.min(frame.num_rows()) {
+        let abstract_text = frame.column(1).get_str(i).unwrap_or("");
+        let true_title = frame.column(0).get_str(i).unwrap_or("");
+        let (gen, secs) = generator.generate_title(&vocab, abstract_text)?;
+        total += secs;
+        println!("  [{i}] t_mi={secs:.3}s");
+        println!("      true: {true_title}");
+        println!("      gen:  {gen}");
+    }
+    println!("mean t_mi: {:.3} s", total / titles.max(1) as f64);
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let exp = args.get_or("exp", "all");
+    let base = PathBuf::from(args.get_or("base-dir", "/tmp/p3sapp-experiments"));
+    let mut opts = rpt::SuiteOptions::new(&base);
+    opts.seed = args.get_u64("seed", cfg.corpus.seed)?;
+    opts.scale = args.get_f64("scale", cfg.corpus.scale)?;
+    opts.workers = args.get_usize("workers", cfg.engine.workers)?;
+    opts.tiers = args.get_usize_list("tiers", &[1, 2, 3, 4, 5])?;
+    let csv = args.flag("csv");
+
+    let needs_mtt = matches!(exp, "all" | "e5" | "e6");
+    let suite = rpt::run_suite(&opts)?;
+
+    // Training-time model: measure sec/step with a short real run when
+    // the cost tables are requested (paper Tables 7-8).
+    let model = if needs_mtt {
+        let artifacts = args.get_or("artifacts", &cfg.model.artifacts_dir);
+        Some(measure_train_model(&suite, artifacts, cfg.model.batch_seed)?)
+    } else {
+        None
+    };
+
+    let emit = |t: rpt::TextTable| {
+        if csv {
+            print!("{}", t.to_csv());
+        } else {
+            println!("{}", t.render());
+        }
+    };
+    let want = |e: &str| exp == "all" || exp == e;
+    if want("e1") {
+        emit(rpt::table2(&suite));
+    }
+    if want("e2") {
+        emit(rpt::table3(&suite));
+    }
+    if want("e3") {
+        emit(rpt::table4(&suite));
+    }
+    if want("e4") {
+        emit(rpt::table5_6(&suite, "title")?);
+        emit(rpt::table5_6(&suite, "abstract")?);
+    }
+    if want("e5") {
+        emit(rpt::table7(&suite, model.as_ref().unwrap())?);
+    }
+    if want("e6") {
+        emit(rpt::table8(&suite, model.as_ref().unwrap())?);
+    }
+    if want("e7") {
+        emit(rpt::fig10(&suite)?);
+    }
+    if want("e8") {
+        emit(rpt::fig12(&suite));
+    }
+    if want("e9") {
+        report_inference_time(args, &cfg)?;
+    }
+    Ok(())
+}
+
+/// Measure per-step training time on the first tier's cleaned frame.
+fn measure_train_model(
+    suite: &rpt::SuiteResult,
+    artifacts: &str,
+    batch_seed: u64,
+) -> Result<rpt::TrainTimeModel> {
+    let frame = &suite.tiers[0].p3sapp.frame;
+    let session = Session::cpu(artifacts)?;
+    let mut trainer = Trainer::new(session)?;
+    let mcfg = trainer.manifest.config.clone();
+    let texts: Vec<&str> = (0..frame.num_rows())
+        .flat_map(|i| {
+            [
+                frame.column(0).get_str(i).unwrap_or(""),
+                frame.column(1).get_str(i).unwrap_or(""),
+            ]
+        })
+        .collect();
+    let vocab = Vocabulary::build(texts.into_iter(), mcfg.vocab);
+    let mut batcher = Batcher::new(
+        frame, &vocab, "title", "abstract", mcfg.batch, mcfg.src_len, mcfg.tgt_len, batch_seed,
+    )?;
+    // Warm-up step (compile caches), then measure a few.
+    trainer.train_step(&batcher.next_batch())?;
+    let stats = trainer.train_loop(5, || batcher.next_batch())?;
+    let sec_per_step =
+        stats.iter().map(|s| s.wall_secs).sum::<f64>() / stats.len() as f64;
+    eprintln!("[report] measured {sec_per_step:.3} s/step (batch {})", mcfg.batch);
+    Ok(rpt::TrainTimeModel { sec_per_step, batch_size: mcfg.batch, train_frac: 0.9 })
+}
+
+/// E9: mean single-title inference time (paper: t_mi ≈ 2 s on a K80).
+fn report_inference_time(args: &Args, cfg: &AppConfig) -> Result<()> {
+    let artifacts = args.get_or("artifacts", &cfg.model.artifacts_dir);
+    let session = Session::cpu(artifacts)?;
+    let trainer = Trainer::new(session)?;
+    let mcfg = trainer.manifest.config.clone();
+    let generator = Generator::from_trainer(trainer)?;
+    let src = vec![5i32; mcfg.src_len];
+    let mask = vec![1.0f32; mcfg.src_len];
+    // Warm-up, then measure.
+    generator.generate_ids(&src, &mask)?;
+    let mut total = 0.0;
+    let n = 5;
+    for _ in 0..n {
+        total += generator.generate_ids(&src, &mask)?.wall_secs;
+    }
+    println!(
+        "== E9: inference time ==\nmean t_mi over {n} runs: {:.4} s (paper: ~2 s on K80)",
+        total / n as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Stage timing instrumentation shared by both approaches and the
+//! benchmark harness.
+
+mod timer;
+
+pub use timer::{StageClock, StageTimes};

@@ -1,0 +1,125 @@
+//! Wall-clock stage timing. The paper's evaluation is entirely about
+//! stage-level wall time (ingestion / pre-cleaning / cleaning /
+//! post-cleaning), so timing is a first-class object here, not ad-hoc
+//! `Instant` calls scattered through drivers.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulated per-stage durations, ordered by insertion.
+#[derive(Debug, Clone, Default)]
+pub struct StageTimes {
+    order: Vec<String>,
+    times: BTreeMap<String, Duration>,
+}
+
+impl StageTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add (accumulate) a duration for `stage`.
+    pub fn add(&mut self, stage: &str, d: Duration) {
+        if !self.times.contains_key(stage) {
+            self.order.push(stage.to_string());
+        }
+        *self.times.entry(stage.to_string()).or_default() += d;
+    }
+
+    pub fn get(&self, stage: &str) -> Duration {
+        self.times.get(stage).copied().unwrap_or_default()
+    }
+
+    pub fn secs(&self, stage: &str) -> f64 {
+        self.get(stage).as_secs_f64()
+    }
+
+    /// Sum of all stages.
+    pub fn total(&self) -> Duration {
+        self.times.values().sum()
+    }
+
+    /// Stages in first-recorded order.
+    pub fn stages(&self) -> impl Iterator<Item = (&str, Duration)> {
+        self.order.iter().map(move |k| (k.as_str(), self.times[k]))
+    }
+
+    /// Merge another set of stage times into this one.
+    pub fn merge(&mut self, other: &StageTimes) {
+        for (k, d) in other.stages() {
+            self.add(k, d);
+        }
+    }
+}
+
+/// RAII-free stage clock: `clock.time("stage", || work())`.
+#[derive(Debug, Default)]
+pub struct StageClock {
+    pub times: StageTimes,
+}
+
+impl StageClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, attributing its wall time to `stage`.
+    pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.times.add(stage, t0.elapsed());
+        out
+    }
+
+    /// Fallible variant.
+    pub fn time_res<T, E>(
+        &mut self,
+        stage: &str,
+        f: impl FnOnce() -> Result<T, E>,
+    ) -> Result<T, E> {
+        let t0 = Instant::now();
+        let out = f();
+        self.times.add(stage, t0.elapsed());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_orders() {
+        let mut t = StageTimes::new();
+        t.add("b", Duration::from_millis(5));
+        t.add("a", Duration::from_millis(3));
+        t.add("b", Duration::from_millis(5));
+        assert_eq!(t.get("b"), Duration::from_millis(10));
+        assert_eq!(t.total(), Duration::from_millis(13));
+        let order: Vec<&str> = t.stages().map(|(k, _)| k).collect();
+        assert_eq!(order, vec!["b", "a"]);
+    }
+
+    #[test]
+    fn clock_times_closure() {
+        let mut c = StageClock::new();
+        let v = c.time("work", || {
+            std::thread::sleep(Duration::from_millis(10));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(c.times.get("work") >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = StageTimes::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = StageTimes::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.get("x"), Duration::from_millis(3));
+        assert_eq!(a.get("y"), Duration::from_millis(3));
+    }
+}

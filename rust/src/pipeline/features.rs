@@ -1,0 +1,323 @@
+//! Feature-extraction stages beyond the paper's four cleaning APIs —
+//! the §7 future-work direction ("More APIs can be identified and
+//! implemented"): `NGram` and `HashingTF` (Spark ML transformers) plus
+//! `IDF`, the first **estimator** (a stage that must be `fit` to data
+//! before it can transform), exercising the estimator half of the Spark
+//! `Pipeline` contract. Together they give the TF-IDF feature pipeline
+//! the paper's §2 cites as the classic scholarly-analytics workload.
+
+use super::{Estimator, Transformer};
+use crate::frame::{Column, DType, Frame};
+use crate::Result;
+
+/// Spark ML `NGram`: token sequence → sequence of space-joined n-grams.
+pub struct NGram {
+    input: String,
+    output: String,
+    n: usize,
+}
+
+impl NGram {
+    pub fn new(input: impl Into<String>, output: impl Into<String>, n: usize) -> Self {
+        assert!(n >= 1, "n must be >= 1");
+        NGram { input: input.into(), output: output.into(), n }
+    }
+}
+
+impl Transformer for NGram {
+    fn name(&self) -> &'static str {
+        "NGram"
+    }
+    fn input_col(&self) -> &str {
+        &self.input
+    }
+    fn output_col(&self) -> &str {
+        &self.output
+    }
+    fn output_dtype(&self, _input: DType) -> DType {
+        DType::Tokens
+    }
+    fn transform_column(&self, input: &Column) -> Column {
+        Column::from_token_lists(
+            input
+                .token_lists()
+                .iter()
+                .map(|row| {
+                    row.as_ref().map(|toks| {
+                        if toks.len() < self.n {
+                            Vec::new()
+                        } else {
+                            toks.windows(self.n).map(|w| w.join(" ")).collect()
+                        }
+                    })
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Spark ML `HashingTF`: token sequence → fixed-size term-frequency
+/// vector via feature hashing (no vocabulary pass needed).
+pub struct HashingTF {
+    input: String,
+    output: String,
+    num_features: usize,
+}
+
+impl HashingTF {
+    pub fn new(input: impl Into<String>, output: impl Into<String>, num_features: usize) -> Self {
+        assert!(num_features >= 1);
+        HashingTF { input: input.into(), output: output.into(), num_features }
+    }
+
+    /// Term → bucket (FNV-1a mod buckets; murmur in real Spark — any
+    /// stable hash preserves the semantics).
+    pub fn bucket(&self, term: &str) -> usize {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &b in term.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        (h % self.num_features as u64) as usize
+    }
+}
+
+impl Transformer for HashingTF {
+    fn name(&self) -> &'static str {
+        "HashingTF"
+    }
+    fn input_col(&self) -> &str {
+        &self.input
+    }
+    fn output_col(&self) -> &str {
+        &self.output
+    }
+    fn output_dtype(&self, _input: DType) -> DType {
+        DType::Vector
+    }
+    fn transform_column(&self, input: &Column) -> Column {
+        Column::from_vectors(
+            input
+                .token_lists()
+                .iter()
+                .map(|row| {
+                    row.as_ref().map(|toks| {
+                        let mut tf = vec![0.0f32; self.num_features];
+                        for t in toks {
+                            tf[self.bucket(t)] += 1.0;
+                        }
+                        tf
+                    })
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Spark ML `IDF` — an **estimator**: `fit` scans the corpus for
+/// document frequencies and produces an [`IdfModel`] transformer with
+/// idf(t) = ln((N + 1) / (df_t + 1)) (Spark's smoothed formula).
+pub struct Idf {
+    input: String,
+    output: String,
+    min_doc_freq: usize,
+}
+
+impl Idf {
+    pub fn new(input: impl Into<String>, output: impl Into<String>) -> Self {
+        Idf { input: input.into(), output: output.into(), min_doc_freq: 0 }
+    }
+
+    pub fn with_min_doc_freq(mut self, min_doc_freq: usize) -> Self {
+        self.min_doc_freq = min_doc_freq;
+        self
+    }
+}
+
+impl Estimator for Idf {
+    fn name(&self) -> &'static str {
+        "IDF"
+    }
+    fn input_col(&self) -> &str {
+        &self.input
+    }
+    fn output_col(&self) -> &str {
+        &self.output
+    }
+    fn output_dtype(&self, _input: DType) -> DType {
+        DType::Vector
+    }
+
+    fn fit_transformer(&self, frame: &Frame, in_idx: usize) -> Result<Box<dyn Transformer>> {
+        let mut df: Vec<u64> = Vec::new();
+        let mut n_docs = 0u64;
+        for part in frame.partitions() {
+            let col = part.column(in_idx);
+            if col.dtype() != DType::Vector {
+                anyhow::bail!("IDF input column must be vector (got {})", col.dtype());
+            }
+            for row in col.vectors().iter().flatten() {
+                if df.is_empty() {
+                    df = vec![0; row.len()];
+                } else if df.len() != row.len() {
+                    anyhow::bail!("IDF: inconsistent vector widths ({} vs {})", df.len(), row.len());
+                }
+                n_docs += 1;
+                for (slot, &v) in df.iter_mut().zip(row) {
+                    if v > 0.0 {
+                        *slot += 1;
+                    }
+                }
+            }
+        }
+        let min_df = self.min_doc_freq as u64;
+        let idf: Vec<f32> = df
+            .iter()
+            .map(|&d| {
+                if d < min_df {
+                    0.0
+                } else {
+                    (((n_docs + 1) as f64) / ((d + 1) as f64)).ln() as f32
+                }
+            })
+            .collect();
+        Ok(Box::new(IdfModel { input: self.input.clone(), output: self.output.clone(), idf }))
+    }
+}
+
+/// Fitted IDF: scales term-frequency vectors element-wise.
+pub struct IdfModel {
+    input: String,
+    output: String,
+    pub idf: Vec<f32>,
+}
+
+impl Transformer for IdfModel {
+    fn name(&self) -> &'static str {
+        "IDFModel"
+    }
+    fn input_col(&self) -> &str {
+        &self.input
+    }
+    fn output_col(&self) -> &str {
+        &self.output
+    }
+    fn output_dtype(&self, _input: DType) -> DType {
+        DType::Vector
+    }
+    fn transform_column(&self, input: &Column) -> Column {
+        Column::from_vectors(
+            input
+                .vectors()
+                .iter()
+                .map(|row| {
+                    row.as_ref().map(|tf| {
+                        tf.iter().zip(&self.idf).map(|(a, b)| a * b).collect()
+                    })
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frame::{Partition, Schema, Field};
+    use crate::pipeline::stages::Tokenizer;
+    use crate::pipeline::Pipeline;
+
+    fn token_frame(texts: &[&str]) -> Frame {
+        let f = Frame::from_partition(
+            Schema::strings(&["text"]),
+            Partition::new(vec![Column::from_strs(
+                texts.iter().map(|t| Some(t.to_string())).collect(),
+            )]),
+        )
+        .unwrap();
+        let p = Pipeline::new().stage(Tokenizer::new("text", "tokens"));
+        p.fit(&f).unwrap().transform(f, 1).unwrap()
+    }
+
+    #[test]
+    fn ngram_windows() {
+        let f = token_frame(&["a b c d", "x"]);
+        let idx = f.column_index("tokens").unwrap();
+        let ng = NGram::new("tokens", "bigrams", 2);
+        let col = ng.transform_column(f.partitions()[0].column(idx));
+        assert_eq!(
+            col.get_tokens(0).unwrap(),
+            &["a b".to_string(), "b c".to_string(), "c d".to_string()][..]
+        );
+        assert!(col.get_tokens(1).unwrap().is_empty(), "short rows give empty");
+    }
+
+    #[test]
+    fn hashing_tf_counts_terms() {
+        let f = token_frame(&["cat dog cat"]);
+        let idx = f.column_index("tokens").unwrap();
+        let tf = HashingTF::new("tokens", "tf", 16);
+        let col = tf.transform_column(f.partitions()[0].column(idx));
+        let v = col.get_vector(0).unwrap();
+        assert_eq!(v.iter().sum::<f32>(), 3.0);
+        assert_eq!(v[tf.bucket("cat")], 2.0);
+        assert_eq!(v[tf.bucket("dog")], 1.0);
+    }
+
+    #[test]
+    fn idf_downweights_ubiquitous_terms() {
+        // "the" in every doc, "quantum" in one.
+        let f = token_frame(&["the quantum", "the cat", "the dog"]);
+        let pipe = Pipeline::new()
+            .stage(HashingTF::new("tokens", "tf", 64))
+            .estimator(Idf::new("tf", "tfidf"));
+        let model = pipe.fit(&f).unwrap();
+        let out = model.transform(f, 1).unwrap().collect();
+        let idx = out.column_index("tfidf").unwrap();
+        let tfhash = HashingTF::new("tokens", "tf", 64);
+        let v0 = out.column(idx).get_vector(0).unwrap();
+        let the_w = v0[tfhash.bucket("the")];
+        let quantum_w = v0[tfhash.bucket("quantum")];
+        assert!(quantum_w > the_w, "idf must favor rare terms: {quantum_w} vs {the_w}");
+        // "the" appears in all docs: idf = ln(4/4) = 0.
+        assert_eq!(the_w, 0.0);
+    }
+
+    #[test]
+    fn idf_respects_min_doc_freq() {
+        let f = token_frame(&["rare common", "common x", "common y"]);
+        let pipe = Pipeline::new()
+            .stage(HashingTF::new("tokens", "tf", 64))
+            .estimator(Idf::new("tf", "tfidf").with_min_doc_freq(2));
+        let model = pipe.fit(&f).unwrap();
+        let out = model.transform(f, 1).unwrap().collect();
+        let idx = out.column_index("tfidf").unwrap();
+        let tfhash = HashingTF::new("tokens", "tf", 64);
+        let v0 = out.column(idx).get_vector(0).unwrap();
+        assert_eq!(v0[tfhash.bucket("rare")], 0.0, "df=1 < min_doc_freq=2 → zeroed");
+    }
+
+    #[test]
+    fn idf_rejects_wrong_dtype() {
+        let f = token_frame(&["a"]);
+        let pipe = Pipeline::new().estimator(Idf::new("tokens", "tfidf"));
+        assert!(pipe.fit(&f).is_err());
+    }
+
+    #[test]
+    fn full_tfidf_pipeline_schema() {
+        let f = token_frame(&["deep learning models", "deep nets"]);
+        let pipe = Pipeline::new()
+            .stage(NGram::new("tokens", "bigrams", 2))
+            .stage(HashingTF::new("bigrams", "tf", 32))
+            .estimator(Idf::new("tf", "tfidf"));
+        let model = pipe.fit(&f).unwrap();
+        let schema = model.output_schema();
+        assert_eq!(schema.dtype_of("bigrams"), Some(DType::Tokens));
+        assert_eq!(schema.dtype_of("tf"), Some(DType::Vector));
+        assert_eq!(schema.dtype_of("tfidf"), Some(DType::Vector));
+        let _ = Field::new("x", DType::Vector); // dtype is public API
+        let out = model.transform(f, 2).unwrap();
+        assert_eq!(out.num_rows(), 2);
+    }
+}

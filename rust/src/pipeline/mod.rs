@@ -1,0 +1,333 @@
+//! Spark-ML-style transformer pipeline — the P3SAPP contribution.
+//!
+//! Mirrors the Spark ML `feature` API shape the paper extends:
+//! a [`Transformer`] consumes an `inputCol` and produces an `outputCol`
+//! (possibly the same column, possibly a new dtype), and a [`Pipeline`]
+//! chains transformers into a single workflow that is `fit` to data
+//! (producing a [`PipelineModel`]) and then `transform`ed — with the
+//! transform executed **per-partition in parallel** by the
+//! [`crate::engine`] worker pool.
+//!
+//! The four APIs the paper implements (§4.1) plus the two Spark built-ins
+//! it reuses (§3.2) all live in [`stages`]:
+//!
+//! | Paper API | Stage |
+//! |---|---|
+//! | ConvertToLower (§4.1.1) | [`stages::ConvertToLower`] |
+//! | RemoveHTMLTags (§4.1.2) | [`stages::RemoveHtmlTags`] |
+//! | RemoveUnwantedCharacters (§4.1.3) | [`stages::RemoveUnwantedCharacters`] |
+//! | RemoveShortWords (§4.1.4) | [`stages::RemoveShortWords`] |
+//! | Tokenizer (Spark built-in) | [`stages::Tokenizer`] |
+//! | StopWordsRemover (built-in + case-study string variant) | [`stages::StopWordsRemover`], [`stages::StopWordsRemoverStr`] |
+
+pub mod features;
+pub mod presets;
+pub mod stages;
+
+use crate::engine::Executor;
+use crate::frame::{Column, DType, Frame, Schema};
+use crate::Result;
+use std::sync::Arc;
+
+/// A feature transformer: one stage of the preprocessing pipeline.
+///
+/// `transform_column` maps the whole input column of one partition —
+/// column-at-a-time (not row-at-a-time) so per-stage scratch buffers are
+/// amortized across the partition, which is where P3SAPP's cleaning-time
+/// win over the row-loop conventional approach comes from.
+pub trait Transformer: Send + Sync {
+    /// Stage name (diagnostics / ablation bench labels).
+    fn name(&self) -> &'static str;
+    /// Column read by this stage.
+    fn input_col(&self) -> &str;
+    /// Column written by this stage (may equal `input_col`).
+    fn output_col(&self) -> &str;
+    /// Output dtype given the input dtype.
+    fn output_dtype(&self, input: DType) -> DType;
+    /// Transform one partition's input column.
+    fn transform_column(&self, input: &Column) -> Column;
+
+    /// Owned variant used when the stage rewrites its own input column
+    /// (`input_col == output_col`). Stages that can transform in place
+    /// override this to avoid re-allocating the column; the default
+    /// falls back to the borrowing path.
+    fn transform_column_owned(&self, input: Column) -> Column {
+        self.transform_column(&input)
+    }
+}
+
+/// An estimator: a stage that must scan the data before it can
+/// transform (Spark's `Estimator` — e.g. [`features::Idf`]). `fit`
+/// receives the frame *as transformed by all previous pipeline stages*
+/// plus its resolved input column index, and yields the fitted
+/// transformer.
+pub trait Estimator: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn input_col(&self) -> &str;
+    fn output_col(&self) -> &str;
+    fn output_dtype(&self, input: DType) -> DType;
+    fn fit_transformer(&self, frame: &Frame, in_idx: usize) -> Result<Box<dyn Transformer>>;
+}
+
+/// One pipeline entry: transformer or estimator (Spark `PipelineStage`).
+#[derive(Clone)]
+enum StageKind {
+    Transformer(Arc<dyn Transformer>),
+    Estimator(Arc<dyn Estimator>),
+}
+
+impl StageKind {
+    fn names(&self) -> (&'static str, &str, &str) {
+        match self {
+            StageKind::Transformer(t) => (t.name(), t.input_col(), t.output_col()),
+            StageKind::Estimator(e) => (e.name(), e.input_col(), e.output_col()),
+        }
+    }
+    fn output_dtype(&self, input: DType) -> DType {
+        match self {
+            StageKind::Transformer(t) => t.output_dtype(input),
+            StageKind::Estimator(e) => e.output_dtype(input),
+        }
+    }
+}
+
+/// An unfitted pipeline: an ordered stage list (Spark `Pipeline`).
+#[derive(Clone, Default)]
+pub struct Pipeline {
+    stages: Vec<StageKind>,
+}
+
+impl Pipeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a transformer stage (builder style).
+    pub fn stage(mut self, t: impl Transformer + 'static) -> Self {
+        self.stages.push(StageKind::Transformer(Arc::new(t)));
+        self
+    }
+
+    /// Append an estimator stage.
+    pub fn estimator(mut self, e: impl Estimator + 'static) -> Self {
+        self.stages.push(StageKind::Estimator(Arc::new(e)));
+        self
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Back-compat alias used by tests/docs: stage count.
+    pub fn stages(&self) -> &[impl Sized] {
+        &self.stages
+    }
+
+    /// Fit the pipeline to data: resolves every stage's input column
+    /// against the evolving schema, pre-computes the output schema, and
+    /// fits estimator stages on the frame *as transformed by the stages
+    /// before them* (Spark `Pipeline.fit` semantics). Transformer-only
+    /// pipelines never materialize intermediate data.
+    pub fn fit(&self, frame: &Frame) -> Result<PipelineModel> {
+        let mut schema = frame.schema().clone();
+        let mut plan: Vec<StagePlan> = Vec::with_capacity(self.stages.len());
+        // Materialized working copy — only if an estimator needs it.
+        let has_estimator =
+            self.stages.iter().any(|s| matches!(s, StageKind::Estimator(_)));
+        let mut current: Option<Frame> = if has_estimator { Some(frame.clone()) } else { None };
+
+        for st in &self.stages {
+            let (name, input_col, output_col) = st.names();
+            let in_idx = schema.index_of(input_col).ok_or_else(|| {
+                anyhow::anyhow!("stage {name}: input column '{input_col}' not found")
+            })?;
+            let in_dtype = schema.fields()[in_idx].dtype;
+            let out_dtype = st.output_dtype(in_dtype);
+            let out_idx = match schema.index_of(output_col) {
+                Some(i) => {
+                    schema = schema.with_dtype(output_col, out_dtype).unwrap();
+                    i
+                }
+                None => {
+                    let mut fields = schema.fields().to_vec();
+                    fields.push(crate::frame::Field::new(output_col, out_dtype));
+                    schema = Schema::new(fields);
+                    schema.len() - 1
+                }
+            };
+            let fitted: Arc<dyn Transformer> = match st {
+                StageKind::Transformer(t) => Arc::clone(t),
+                StageKind::Estimator(e) => {
+                    let data = current.as_ref().expect("materialized when estimators exist");
+                    Arc::from(e.fit_transformer(data, in_idx)?)
+                }
+            };
+            let sp = StagePlan { stage: fitted, in_idx, out_idx };
+            if let Some(cur) = current.take() {
+                current = Some(apply_stage(cur, &sp, &schema)?);
+            }
+            plan.push(sp);
+        }
+        Ok(PipelineModel { plan, output_schema: schema })
+    }
+}
+
+/// Apply one fitted stage to a whole frame (single-threaded; used only
+/// during estimator fitting).
+fn apply_stage(frame: Frame, sp: &StagePlan, schema_after: &Schema) -> Result<Frame> {
+    let (_, partitions) = frame.into_partitions();
+    let out: Vec<crate::frame::Partition> = partitions
+        .into_iter()
+        .map(|mut part| {
+            let col = sp.stage.transform_column(part.column(sp.in_idx));
+            if sp.out_idx < part.num_columns() {
+                part.replace_column(sp.out_idx, col);
+                part
+            } else {
+                let mut cols = part.into_columns();
+                cols.push(col);
+                crate::frame::Partition::new(cols)
+            }
+        })
+        .collect();
+    Frame::from_partitions(schema_after.clone(), out)
+}
+
+/// One resolved stage: which column indices it reads/writes.
+#[derive(Clone)]
+struct StagePlan {
+    stage: Arc<dyn Transformer>,
+    in_idx: usize,
+    out_idx: usize,
+}
+
+/// A fitted pipeline (Spark `PipelineModel`): ready to transform frames
+/// with pre-resolved column indices.
+#[derive(Clone)]
+pub struct PipelineModel {
+    plan: Vec<StagePlan>,
+    output_schema: Schema,
+}
+
+impl PipelineModel {
+    pub fn output_schema(&self) -> &Schema {
+        &self.output_schema
+    }
+
+    /// Transform a distributed frame with `workers` parallel workers.
+    /// Within a partition, stages run back-to-back (no barrier between
+    /// stages — Spark's narrow-dependency chaining).
+    pub fn transform(&self, frame: Frame, workers: usize) -> Result<Frame> {
+        let (_, partitions) = frame.into_partitions();
+        let plan = self.plan.clone();
+        let exec = Executor::new(workers);
+        let transformed = exec.map_partitions(partitions, move |mut part| {
+            for sp in &plan {
+                if sp.in_idx == sp.out_idx {
+                    // In-place rewrite: hand the stage the owned column
+                    // (zero-allocation sweep for the string stages).
+                    let owned = part.take_column(sp.in_idx);
+                    let out = sp.stage.transform_column_owned(owned);
+                    part.replace_column(sp.out_idx, out);
+                } else {
+                    let out = sp.stage.transform_column(part.column(sp.in_idx));
+                    if sp.out_idx < part.num_columns() {
+                        part.replace_column(sp.out_idx, out);
+                    } else {
+                        let mut cols = part.into_columns();
+                        cols.push(out);
+                        part = crate::frame::Partition::new(cols);
+                    }
+                }
+            }
+            part
+        });
+        Frame::from_partitions(self.output_schema.clone(), transformed)
+    }
+
+    /// Single-threaded transform of one partition-worth of columns —
+    /// used by tests and the sequential ablation bench.
+    pub fn transform_local(&self, frame: Frame) -> Result<Frame> {
+        self.transform(frame, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::stages::{ConvertToLower, RemoveHtmlTags, Tokenizer};
+    use super::*;
+    use crate::frame::{Column, Partition};
+
+    fn frame(vals: &[Option<&str>]) -> Frame {
+        Frame::from_partition(
+            Schema::strings(&["abstract"]),
+            Partition::new(vec![Column::from_strs(
+                vals.iter().map(|v| v.map(String::from)).collect(),
+            )]),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fit_resolves_columns_and_schema() {
+        let p = Pipeline::new()
+            .stage(ConvertToLower::new("abstract"))
+            .stage(Tokenizer::new("abstract", "words"));
+        let m = p.fit(&frame(&[Some("X")])).unwrap();
+        assert_eq!(m.output_schema().field_names(), vec!["abstract", "words"]);
+        assert_eq!(m.output_schema().dtype_of("words"), Some(DType::Tokens));
+    }
+
+    #[test]
+    fn fit_unknown_column_fails() {
+        let p = Pipeline::new().stage(ConvertToLower::new("nope"));
+        assert!(p.fit(&frame(&[Some("X")])).is_err());
+    }
+
+    #[test]
+    fn chained_transform_applies_in_order() {
+        let p = Pipeline::new()
+            .stage(RemoveHtmlTags::new("abstract"))
+            .stage(ConvertToLower::new("abstract"));
+        let f = frame(&[Some("<b>Deep</b> LEARNING"), None]);
+        let m = p.fit(&f).unwrap();
+        let out = m.transform(f, 2).unwrap().collect();
+        assert_eq!(out.column(0).get_str(0), Some(" deep  learning"));
+        assert!(out.column(0).is_null(1), "nulls propagate");
+    }
+
+    #[test]
+    fn new_output_column_appended() {
+        let p = Pipeline::new().stage(Tokenizer::new("abstract", "words"));
+        let f = frame(&[Some("a b")]);
+        let m = p.fit(&f).unwrap();
+        let out = m.transform(f, 1).unwrap().collect();
+        assert_eq!(out.num_columns(), 2);
+        assert_eq!(
+            out.column(1).get_tokens(0).unwrap(),
+            &["a".to_string(), "b".to_string()][..]
+        );
+    }
+
+    #[test]
+    fn parallel_and_serial_agree() {
+        let vals: Vec<Option<String>> = (0..500)
+            .map(|i| Some(format!("<p>Sample {i} TEXT</p>")))
+            .collect();
+        let parts: Vec<Partition> = vals
+            .chunks(37)
+            .map(|c| Partition::new(vec![Column::from_strs(c.to_vec())]))
+            .collect();
+        let schema = Schema::strings(&["abstract"]);
+        let f1 = Frame::from_partitions(schema.clone(), parts.clone()).unwrap();
+        let f2 = Frame::from_partitions(schema, parts).unwrap();
+        let p = Pipeline::new()
+            .stage(RemoveHtmlTags::new("abstract"))
+            .stage(ConvertToLower::new("abstract"));
+        let m = p.fit(&f1).unwrap();
+        assert_eq!(
+            m.transform(f1, 4).unwrap().collect(),
+            m.transform_local(f2).unwrap().collect()
+        );
+    }
+}

@@ -1,0 +1,403 @@
+//! The transformer stages: the paper's four implemented APIs (§4.1), the
+//! two Spark ML built-ins it reuses, and the case-study string variant of
+//! StopWordsRemover (§4.2.2 notes a case-study-specific implementation).
+//!
+//! All string stages share the same structure: iterate the column once,
+//! reuse scratch buffers across rows, propagate nulls untouched.
+
+use super::Transformer;
+use crate::frame::{Column, DType};
+use crate::textutil;
+
+/// Apply `f(input, scratch…) -> String` over a string column with two
+/// reusable scratch buffers, preserving nulls.
+fn map_str_column(input: &Column, mut f: impl FnMut(&str, &mut String, &mut String)) -> Column {
+    let src = input.strs();
+    let mut out: Vec<Option<String>> = Vec::with_capacity(src.len());
+    let mut buf = String::new();
+    let mut scratch = String::new();
+    for v in src {
+        match v {
+            None => out.push(None),
+            Some(s) => {
+                f(s, &mut scratch, &mut buf);
+                out.push(Some(std::mem::take(&mut buf)));
+            }
+        }
+    }
+    Column::from_strs(out)
+}
+
+/// Owned (in-place) variant: rewrites each cell through a swap with a
+/// reused output buffer, so steady-state cost is **zero allocations per
+/// row** — the old cell's String becomes the next row's output buffer.
+/// This is the pipeline's whole-stage-sweep advantage over the
+/// conventional row loop, which allocates fresh strings at every step
+/// (see `baseline::cleaner`).
+fn map_str_column_owned(
+    mut col: Column,
+    mut f: impl FnMut(&str, &mut String, &mut String),
+) -> Column {
+    let rows = col.strs_mut();
+    let mut out = String::new();
+    let mut scratch = String::new();
+    for v in rows.iter_mut() {
+        if let Some(s) = v {
+            f(s, &mut scratch, &mut out);
+            // `out` holds the new value; swap it into the cell and keep
+            // the old buffer (with its capacity) for the next row.
+            std::mem::swap(s, &mut out);
+        }
+    }
+    col
+}
+
+/// §4.1.1 `ConvertToLower` — lowercase every entry of the column.
+pub struct ConvertToLower {
+    col: String,
+}
+
+impl ConvertToLower {
+    pub fn new(col: impl Into<String>) -> Self {
+        ConvertToLower { col: col.into() }
+    }
+}
+
+impl Transformer for ConvertToLower {
+    fn name(&self) -> &'static str {
+        "ConvertToLower"
+    }
+    fn input_col(&self) -> &str {
+        &self.col
+    }
+    fn output_col(&self) -> &str {
+        &self.col
+    }
+    fn output_dtype(&self, input: DType) -> DType {
+        input
+    }
+    fn transform_column(&self, input: &Column) -> Column {
+        map_str_column(input, |s, _scratch, out| textutil::to_lowercase_into(s, out))
+    }
+    fn transform_column_owned(&self, mut input: Column) -> Column {
+        // ASCII text lowers fully in place (no buffer at all); the rare
+        // non-ASCII cell goes through the swap buffer.
+        let rows = input.strs_mut();
+        let mut out = String::new();
+        for v in rows.iter_mut() {
+            if let Some(s) = v {
+                if s.is_ascii() {
+                    s.make_ascii_lowercase();
+                } else {
+                    textutil::to_lowercase_into(s, &mut out);
+                    std::mem::swap(s, &mut out);
+                }
+            }
+        }
+        input
+    }
+}
+
+/// §4.1.2 `RemoveHTMLTags` — strip tags/comments, decode entities.
+pub struct RemoveHtmlTags {
+    col: String,
+}
+
+impl RemoveHtmlTags {
+    pub fn new(col: impl Into<String>) -> Self {
+        RemoveHtmlTags { col: col.into() }
+    }
+}
+
+impl Transformer for RemoveHtmlTags {
+    fn name(&self) -> &'static str {
+        "RemoveHTMLTags"
+    }
+    fn input_col(&self) -> &str {
+        &self.col
+    }
+    fn output_col(&self) -> &str {
+        &self.col
+    }
+    fn output_dtype(&self, input: DType) -> DType {
+        input
+    }
+    fn transform_column(&self, input: &Column) -> Column {
+        map_str_column(input, |s, _scratch, out| textutil::strip_html(s, out))
+    }
+    fn transform_column_owned(&self, input: Column) -> Column {
+        map_str_column_owned(input, |s, _scratch, out| textutil::strip_html(s, out))
+    }
+}
+
+/// §4.1.3 `RemoveUnwantedCharacters` — contraction mapping, parenthesised
+/// text elision, and punctuation/digit/special-character removal.
+pub struct RemoveUnwantedCharacters {
+    col: String,
+}
+
+impl RemoveUnwantedCharacters {
+    pub fn new(col: impl Into<String>) -> Self {
+        RemoveUnwantedCharacters { col: col.into() }
+    }
+}
+
+impl Transformer for RemoveUnwantedCharacters {
+    fn name(&self) -> &'static str {
+        "RemoveUnwantedCharacters"
+    }
+    fn input_col(&self) -> &str {
+        &self.col
+    }
+    fn output_col(&self) -> &str {
+        &self.col
+    }
+    fn output_dtype(&self, input: DType) -> DType {
+        input
+    }
+    fn transform_column(&self, input: &Column) -> Column {
+        map_str_column(input, |s, scratch, out| textutil::remove_unwanted(s, scratch, out))
+    }
+    fn transform_column_owned(&self, input: Column) -> Column {
+        map_str_column_owned(input, |s, scratch, out| textutil::remove_unwanted(s, scratch, out))
+    }
+}
+
+/// §4.1.4 `RemoveShortWords` — drop words of length ≤ `threshold`
+/// (the case study fixes threshold = 1).
+pub struct RemoveShortWords {
+    col: String,
+    threshold: usize,
+}
+
+impl RemoveShortWords {
+    pub fn new(col: impl Into<String>, threshold: usize) -> Self {
+        RemoveShortWords { col: col.into(), threshold }
+    }
+}
+
+impl Transformer for RemoveShortWords {
+    fn name(&self) -> &'static str {
+        "RemoveShortWords"
+    }
+    fn input_col(&self) -> &str {
+        &self.col
+    }
+    fn output_col(&self) -> &str {
+        &self.col
+    }
+    fn output_dtype(&self, input: DType) -> DType {
+        input
+    }
+    fn transform_column(&self, input: &Column) -> Column {
+        match input {
+            Column::Str(_) => {
+                let th = self.threshold;
+                map_str_column(input, |s, _scratch, out| {
+                    textutil::remove_short_words(s, th, out)
+                })
+            }
+            Column::Tokens(rows) => Column::from_token_lists(
+                rows.iter()
+                    .map(|r| {
+                        r.as_ref()
+                            .map(|t| textutil::chars::remove_short_words_tokens(t, self.threshold))
+                    })
+                    .collect(),
+            ),
+            other => other.clone(),
+        }
+    }
+    fn transform_column_owned(&self, input: Column) -> Column {
+        match input {
+            Column::Str(_) => {
+                let th = self.threshold;
+                map_str_column_owned(input, |s, _scratch, out| {
+                    textutil::remove_short_words(s, th, out)
+                })
+            }
+            other => self.transform_column(&other),
+        }
+    }
+}
+
+/// Spark ML built-in `Tokenizer`: lowercase + whitespace split,
+/// `string` → `array<string>`.
+pub struct Tokenizer {
+    input: String,
+    output: String,
+}
+
+impl Tokenizer {
+    pub fn new(input: impl Into<String>, output: impl Into<String>) -> Self {
+        Tokenizer { input: input.into(), output: output.into() }
+    }
+}
+
+impl Transformer for Tokenizer {
+    fn name(&self) -> &'static str {
+        "Tokenizer"
+    }
+    fn input_col(&self) -> &str {
+        &self.input
+    }
+    fn output_col(&self) -> &str {
+        &self.output
+    }
+    fn output_dtype(&self, _input: DType) -> DType {
+        DType::Tokens
+    }
+    fn transform_column(&self, input: &Column) -> Column {
+        Column::from_token_lists(
+            input
+                .strs()
+                .iter()
+                .map(|v| v.as_ref().map(|s| textutil::tokenize(s)))
+                .collect(),
+        )
+    }
+}
+
+/// Spark ML built-in `StopWordsRemover`: filters stopwords out of an
+/// `array<string>` column.
+pub struct StopWordsRemover {
+    input: String,
+    output: String,
+}
+
+impl StopWordsRemover {
+    pub fn new(input: impl Into<String>, output: impl Into<String>) -> Self {
+        StopWordsRemover { input: input.into(), output: output.into() }
+    }
+}
+
+impl Transformer for StopWordsRemover {
+    fn name(&self) -> &'static str {
+        "StopWordsRemover"
+    }
+    fn input_col(&self) -> &str {
+        &self.input
+    }
+    fn output_col(&self) -> &str {
+        &self.output
+    }
+    fn output_dtype(&self, _input: DType) -> DType {
+        DType::Tokens
+    }
+    fn transform_column(&self, input: &Column) -> Column {
+        Column::from_token_lists(
+            input
+                .token_lists()
+                .iter()
+                .map(|v| v.as_ref().map(|t| textutil::stopwords::remove_stopwords_tokens(t)))
+                .collect(),
+        )
+    }
+}
+
+/// Case-study string-level stopword removal (§4.2.2: "the case study -
+/// specific implementation for the same was also done") — operates
+/// directly on the string column without tokenize/detokenize round-trip.
+pub struct StopWordsRemoverStr {
+    col: String,
+}
+
+impl StopWordsRemoverStr {
+    pub fn new(col: impl Into<String>) -> Self {
+        StopWordsRemoverStr { col: col.into() }
+    }
+}
+
+impl Transformer for StopWordsRemoverStr {
+    fn name(&self) -> &'static str {
+        "StopWordsRemoverStr"
+    }
+    fn input_col(&self) -> &str {
+        &self.col
+    }
+    fn output_col(&self) -> &str {
+        &self.col
+    }
+    fn output_dtype(&self, input: DType) -> DType {
+        input
+    }
+    fn transform_column(&self, input: &Column) -> Column {
+        map_str_column(input, |s, _scratch, out| textutil::remove_stopwords(s, out))
+    }
+    fn transform_column_owned(&self, input: Column) -> Column {
+        map_str_column_owned(input, |s, _scratch, out| textutil::remove_stopwords(s, out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(vals: &[Option<&str>]) -> Column {
+        Column::from_strs(vals.iter().map(|v| v.map(String::from)).collect())
+    }
+
+    #[test]
+    fn convert_to_lower() {
+        let out = ConvertToLower::new("c").transform_column(&col(&[Some("AbC"), None]));
+        assert_eq!(out.get_str(0), Some("abc"));
+        assert!(out.is_null(1));
+    }
+
+    #[test]
+    fn remove_html() {
+        let out = RemoveHtmlTags::new("c").transform_column(&col(&[Some("<i>x</i> &amp; y")]));
+        assert_eq!(out.get_str(0), Some(" x  & y"));
+    }
+
+    #[test]
+    fn remove_unwanted() {
+        let out = RemoveUnwantedCharacters::new("c")
+            .transform_column(&col(&[Some("it's 42% better (p<0.05)!")]));
+        assert_eq!(out.get_str(0), Some("it is better"));
+    }
+
+    #[test]
+    fn remove_short_words_str_and_tokens() {
+        let out = RemoveShortWords::new("c", 1).transform_column(&col(&[Some("a bb c ddd")]));
+        assert_eq!(out.get_str(0), Some("bb ddd"));
+        let toks = Column::from_token_lists(vec![Some(vec!["a".into(), "bb".into()]), None]);
+        let out = RemoveShortWords::new("c", 1).transform_column(&toks);
+        assert_eq!(out.get_tokens(0).unwrap(), &["bb".to_string()][..]);
+        assert!(out.is_null(1));
+    }
+
+    #[test]
+    fn tokenizer_lowercases_and_splits() {
+        let out = Tokenizer::new("c", "w").transform_column(&col(&[Some("Deep  LEARNING")]));
+        assert_eq!(
+            out.get_tokens(0).unwrap(),
+            &["deep".to_string(), "learning".to_string()][..]
+        );
+    }
+
+    #[test]
+    fn stopwords_token_and_str_variants_agree() {
+        let text = "the model of choice is attention";
+        let toks = Tokenizer::new("c", "w").transform_column(&col(&[Some(text)]));
+        let via_tokens = StopWordsRemover::new("w", "w").transform_column(&toks);
+        let via_str = StopWordsRemoverStr::new("c").transform_column(&col(&[Some(text)]));
+        let joined = via_tokens.get_tokens(0).unwrap().join(" ");
+        assert_eq!(joined, via_str.get_str(0).unwrap());
+    }
+
+    #[test]
+    fn every_stage_propagates_nulls() {
+        let input = col(&[None]);
+        let stages: Vec<Box<dyn Transformer>> = vec![
+            Box::new(ConvertToLower::new("c")),
+            Box::new(RemoveHtmlTags::new("c")),
+            Box::new(RemoveUnwantedCharacters::new("c")),
+            Box::new(RemoveShortWords::new("c", 1)),
+            Box::new(StopWordsRemoverStr::new("c")),
+        ];
+        for st in stages {
+            assert!(st.transform_column(&input).is_null(0), "{} broke null", st.name());
+        }
+    }
+}

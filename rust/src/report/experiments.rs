@@ -1,0 +1,178 @@
+//! Tiered experiment runner: generates (or reuses) the five corpus
+//! tiers, runs both preprocessing approaches on each, and carries the
+//! measured stage times into the table renderers.
+
+use crate::corpus::{generate_corpus, CorpusSpec};
+use crate::driver::{run_ca, run_p3sapp, DriverOptions, PreprocessResult};
+use crate::ingest::list_shards;
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Options for a full suite run.
+#[derive(Debug, Clone)]
+pub struct SuiteOptions {
+    pub base_dir: PathBuf,
+    pub seed: u64,
+    /// Multiplies every tier's record count (perf runs use > 1).
+    pub scale: f64,
+    /// 0 = local[*].
+    pub workers: usize,
+    /// Tier ids to run (default 1..=5).
+    pub tiers: Vec<usize>,
+    /// Skip the (slow, superlinear) conventional approach — used by
+    /// P3SAPP-only benches.
+    pub skip_ca: bool,
+}
+
+impl SuiteOptions {
+    pub fn new(base_dir: impl Into<PathBuf>) -> Self {
+        SuiteOptions {
+            base_dir: base_dir.into(),
+            seed: 42,
+            scale: 1.0,
+            workers: 0,
+            tiers: vec![1, 2, 3, 4, 5],
+            skip_ca: false,
+        }
+    }
+}
+
+/// Measured outcome for one tier.
+#[derive(Debug, Clone)]
+pub struct TierResult {
+    pub tier: usize,
+    pub corpus_dir: PathBuf,
+    pub size_bytes: u64,
+    pub n_files: usize,
+    pub ca: Option<PreprocessResult>,
+    pub p3sapp: PreprocessResult,
+}
+
+impl TierResult {
+    pub fn size_mb(&self) -> f64 {
+        self.size_bytes as f64 / (1024.0 * 1024.0)
+    }
+
+    /// % reduction of a time metric, CA → P3SAPP (guard: None if CA was
+    /// skipped).
+    pub fn reduction_pct(&self, f: impl Fn(&PreprocessResult) -> f64) -> Option<f64> {
+        let ca = self.ca.as_ref()?;
+        let (a, b) = (f(ca), f(&self.p3sapp));
+        if a <= 0.0 {
+            return Some(0.0);
+        }
+        Some((a - b) / a * 100.0)
+    }
+}
+
+/// A full suite outcome (one per `repro report` invocation).
+#[derive(Debug, Clone)]
+pub struct SuiteResult {
+    pub tiers: Vec<TierResult>,
+    pub workers: usize,
+}
+
+/// Generate tier `id`'s corpus under `base_dir/tier-<id>` (reusing it if
+/// the manifest matches) and run both approaches.
+pub fn run_tier(opts: &SuiteOptions, tier: usize) -> Result<TierResult> {
+    let dir = opts.base_dir.join(format!("tier-{tier}"));
+    let spec = CorpusSpec::tier(tier, opts.seed).scaled(opts.scale);
+    let manifest = ensure_corpus(&spec, &dir)?;
+    let files = list_shards(&dir)?;
+
+    let driver_opts = DriverOptions { workers: opts.workers, ..Default::default() };
+    let p3sapp = run_p3sapp(&files, &driver_opts)?;
+    let ca = if opts.skip_ca { None } else { Some(run_ca(&files, &driver_opts)?) };
+
+    Ok(TierResult {
+        tier,
+        corpus_dir: dir,
+        size_bytes: manifest.total_bytes,
+        n_files: manifest.n_files,
+        ca,
+        p3sapp,
+    })
+}
+
+/// Run every requested tier.
+pub fn run_suite(opts: &SuiteOptions) -> Result<SuiteResult> {
+    let mut tiers = Vec::with_capacity(opts.tiers.len());
+    for &tier in &opts.tiers {
+        eprintln!("[suite] tier {tier}: running ...");
+        let r = run_tier(opts, tier)?;
+        eprintln!(
+            "[suite] tier {tier}: {:.1} MB, {} files, P3SAPP t_c {:.3}s{}",
+            r.size_mb(),
+            r.n_files,
+            r.p3sapp.cumulative_secs(),
+            r.ca
+                .as_ref()
+                .map(|c| format!(", CA t_c {:.3}s", c.cumulative_secs()))
+                .unwrap_or_default()
+        );
+        tiers.push(r);
+    }
+    let workers = if opts.workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
+    } else {
+        opts.workers
+    };
+    Ok(SuiteResult { tiers, workers })
+}
+
+/// Generate the corpus unless an identical-spec run already exists
+/// (checked via manifest.txt seed/record fields).
+fn ensure_corpus(spec: &CorpusSpec, dir: &Path) -> Result<crate::corpus::CorpusManifest> {
+    let manifest_path = dir.join("manifest.txt");
+    if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+        let get = |k: &str| -> Option<u64> {
+            text.lines()
+                .find_map(|l| l.strip_prefix(&format!("{k}=")))
+                .and_then(|v| v.parse().ok())
+        };
+        if get("seed") == Some(spec.seed) && get("files") == Some(spec.n_files as u64) {
+            if let (Some(records), Some(bytes), Some(dups)) =
+                (get("records"), get("bytes"), get("duplicates"))
+            {
+                // Reuse: the generator is deterministic in the spec.
+                return Ok(crate::corpus::CorpusManifest {
+                    dir: dir.to_path_buf(),
+                    seed: spec.seed,
+                    n_records: records as usize,
+                    n_duplicates: dups as usize,
+                    n_files: spec.n_files,
+                    total_bytes: bytes,
+                });
+            }
+        }
+    }
+    generate_corpus(spec, dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_run_end_to_end_smallest() {
+        let base =
+            std::env::temp_dir().join(format!("p3sapp-suite-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let mut opts = SuiteOptions::new(&base);
+        opts.scale = 0.1; // ~150 records
+        opts.workers = 2;
+        opts.tiers = vec![1];
+        let suite = run_suite(&opts).unwrap();
+        assert_eq!(suite.tiers.len(), 1);
+        let t = &suite.tiers[0];
+        assert!(t.size_bytes > 0);
+        assert!(t.p3sapp.rows_out > 0);
+        assert!(t.ca.as_ref().unwrap().rows_out > 0);
+        assert!(t.reduction_pct(|r| r.ingestion_secs()).is_some());
+
+        // Second run reuses the corpus (manifest match).
+        let again = run_tier(&opts, 1).unwrap();
+        assert_eq!(again.size_bytes, t.size_bytes);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+}

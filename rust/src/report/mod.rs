@@ -1,0 +1,11 @@
+//! Experiment harness + paper-table renderers. Every table and figure of
+//! the paper's evaluation (§5–§6) is regenerated from here; the criterion
+//! benches and the `repro report` CLI both delegate to this module.
+
+mod experiments;
+mod tables;
+mod text_table;
+
+pub use experiments::{run_tier, run_suite, SuiteOptions, SuiteResult, TierResult};
+pub use tables::*;
+pub use text_table::TextTable;

@@ -1,0 +1,321 @@
+//! Renderers: one function per paper table/figure. All take the measured
+//! [`SuiteResult`] (and, where the paper needs it, the measured training
+//! time model) and print the same rows/series the paper reports.
+
+use super::experiments::SuiteResult;
+use super::text_table::{pct, secs, TextTable};
+use crate::analysis::accuracy::match_column;
+use crate::analysis::cost::{evaluate, saving_to_mtt_ratio, CostInputs, EPOCH_SETTINGS};
+use crate::analysis::trend::fit;
+use crate::Result;
+
+/// Measured training-cost model: per-step wall time from the runtime
+/// trainer, scaled to per-epoch by each tier's row count (the paper's
+/// MTT/epoch grows with dataset size the same way, Table 7).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainTimeModel {
+    pub sec_per_step: f64,
+    pub batch_size: usize,
+    /// Fraction of rows used for training (paper splits ~90/10,
+    /// Table 8's training/validation columns).
+    pub train_frac: f64,
+}
+
+impl TrainTimeModel {
+    pub fn mtt_per_epoch(&self, rows: usize) -> f64 {
+        let steps = ((rows as f64 * self.train_frac) / self.batch_size as f64).floor();
+        steps.max(1.0) * self.sec_per_step
+    }
+}
+
+/// Table 2 + Fig. 7 — ingestion time, CA vs P3SAPP, % reduction.
+pub fn table2(suite: &SuiteResult) -> TextTable {
+    let mut t = TextTable::new(
+        "Table 2: Ingestion Time (CA vs P3SAPP)",
+        &["Dataset ID", "Size (MB)", "CA (s)", "P3SAPP (s)", "Reduction (%)"],
+    );
+    for tier in &suite.tiers {
+        let ca = tier.ca.as_ref().map(|c| c.ingestion_secs());
+        t.row(vec![
+            tier.tier.to_string(),
+            format!("{:.2}", tier.size_mb()),
+            ca.map(secs).unwrap_or_else(|| "-".into()),
+            secs(tier.p3sapp.ingestion_secs()),
+            tier.reduction_pct(|r| r.ingestion_secs())
+                .map(pct)
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
+/// Table 3 + Fig. 8 — preprocessing breakdown (pre/clean/post/total).
+pub fn table3(suite: &SuiteResult) -> TextTable {
+    let mut t = TextTable::new(
+        "Table 3: Preprocessing Time breakdown (CA vs P3SAPP)",
+        &[
+            "Dataset ID",
+            "Size (MB)",
+            "Pre CA",
+            "Pre P3",
+            "Clean CA",
+            "Clean P3",
+            "Post CA",
+            "Post P3",
+            "Total CA",
+            "Total P3",
+            "Reduction (%)",
+        ],
+    );
+    use crate::driver::{CLEANING, POST_CLEANING, PRE_CLEANING};
+    for tier in &suite.tiers {
+        let ca = tier.ca.as_ref();
+        let g = |r: &crate::driver::PreprocessResult, k: &str| secs(r.times.secs(k));
+        t.row(vec![
+            tier.tier.to_string(),
+            format!("{:.2}", tier.size_mb()),
+            ca.map(|c| g(c, PRE_CLEANING)).unwrap_or_else(|| "-".into()),
+            g(&tier.p3sapp, PRE_CLEANING),
+            ca.map(|c| g(c, CLEANING)).unwrap_or_else(|| "-".into()),
+            g(&tier.p3sapp, CLEANING),
+            ca.map(|c| g(c, POST_CLEANING)).unwrap_or_else(|| "-".into()),
+            g(&tier.p3sapp, POST_CLEANING),
+            ca.map(|c| secs(c.preprocessing_secs())).unwrap_or_else(|| "-".into()),
+            secs(tier.p3sapp.preprocessing_secs()),
+            tier.reduction_pct(|r| r.preprocessing_secs())
+                .map(pct)
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
+/// Table 4 + Fig. 9 — cumulative time t_c = t_i + t_pp.
+pub fn table4(suite: &SuiteResult) -> TextTable {
+    let mut t = TextTable::new(
+        "Table 4: Cumulative Time (CA vs P3SAPP)",
+        &["Dataset ID", "Size (MB)", "CA (s)", "P3SAPP (s)", "Reduction (%)"],
+    );
+    for tier in &suite.tiers {
+        t.row(vec![
+            tier.tier.to_string(),
+            format!("{:.2}", tier.size_mb()),
+            tier.ca
+                .as_ref()
+                .map(|c| secs(c.cumulative_secs()))
+                .unwrap_or_else(|| "-".into()),
+            secs(tier.p3sapp.cumulative_secs()),
+            tier.reduction_pct(|r| r.cumulative_secs())
+                .map(pct)
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
+/// Tables 5 & 6 — matching records for `column` ("title" or "abstract").
+pub fn table5_6(suite: &SuiteResult, column: &str) -> Result<TextTable> {
+    let label = if column == "title" { "5" } else { "6" };
+    let mut t = TextTable::new(
+        format!("Table {label}: Matching Records for Extracted {column}s"),
+        &["Dataset ID", "CA rows", "P3SAPP rows", "Matching", "Percentage"],
+    );
+    for tier in &suite.tiers {
+        let Some(ca) = tier.ca.as_ref() else {
+            anyhow::bail!("accuracy table requires the CA run (suite ran with skip_ca)")
+        };
+        let m = match_column(&ca.frame, &tier.p3sapp.frame, column)?;
+        t.row(vec![
+            tier.tier.to_string(),
+            m.rows_ca.to_string(),
+            m.rows_p3sapp.to_string(),
+            m.matching.to_string(),
+            format!("{:.3}%", m.percentage),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table 7 + Fig. 11 — cost-benefit at the paper's three epoch settings.
+pub fn table7(suite: &SuiteResult, model: &TrainTimeModel) -> Result<TextTable> {
+    let mut t = TextTable::new(
+        "Table 7: Cost-Benefit Analysis",
+        &[
+            "Dataset ID",
+            "t_c CA (s)",
+            "t_c P3SAPP (s)",
+            "MTT/epoch (s)",
+            "T(10) CA h",
+            "T(10) P3 h",
+            "CB(10) %",
+            "T(25) CA h",
+            "T(25) P3 h",
+            "CB(25) %",
+            "T(50) CA h",
+            "T(50) P3 h",
+            "CB(50) %",
+        ],
+    );
+    for tier in &suite.tiers {
+        let Some(ca) = tier.ca.as_ref() else {
+            anyhow::bail!("cost table requires the CA run")
+        };
+        let mtt = model.mtt_per_epoch(tier.p3sapp.rows_out);
+        let inputs = CostInputs {
+            tc_ca_secs: ca.cumulative_secs(),
+            tc_p3sapp_secs: tier.p3sapp.cumulative_secs(),
+            mtt_per_epoch_secs: mtt,
+        };
+        let mut cells = vec![
+            tier.tier.to_string(),
+            secs(inputs.tc_ca_secs),
+            secs(inputs.tc_p3sapp_secs),
+            secs(mtt),
+        ];
+        for &e in &EPOCH_SETTINGS {
+            let row = evaluate(&inputs, e);
+            cells.push(format!("{:.3}", row.total_ca_hours));
+            cells.push(format!("{:.3}", row.total_p3sapp_hours));
+            cells.push(format!("{:.3}", row.cost_benefit_pct));
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// Table 8 + Fig. 13 — time saving expressed in MTT-per-epoch units.
+pub fn table8(suite: &SuiteResult, model: &TrainTimeModel) -> Result<TextTable> {
+    let mut t = TextTable::new(
+        "Table 8: Time Saving in units of MTT/epoch",
+        &[
+            "Dataset ID",
+            "Rows (train)",
+            "Rows (val)",
+            "MTT/epoch (s)",
+            "Time Saving (s)",
+            "Saving / MTT per epoch",
+        ],
+    );
+    for tier in &suite.tiers {
+        let Some(ca) = tier.ca.as_ref() else {
+            anyhow::bail!("table 8 requires the CA run")
+        };
+        let rows = tier.p3sapp.rows_out;
+        let train_rows = (rows as f64 * model.train_frac) as usize;
+        let mtt = model.mtt_per_epoch(rows);
+        let inputs = CostInputs {
+            tc_ca_secs: ca.cumulative_secs(),
+            tc_p3sapp_secs: tier.p3sapp.cumulative_secs(),
+            mtt_per_epoch_secs: mtt,
+        };
+        t.row(vec![
+            tier.tier.to_string(),
+            train_rows.to_string(),
+            (rows - train_rows).to_string(),
+            secs(mtt),
+            secs(inputs.tc_ca_secs - inputs.tc_p3sapp_secs),
+            format!("{:.3}", saving_to_mtt_ratio(&inputs)),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Fig. 10 — linear trend of preprocessing time vs dataset size for both
+/// approaches (slope comparison, §6).
+pub fn fig10(suite: &SuiteResult) -> Result<TextTable> {
+    let pts = |f: &dyn Fn(&crate::report::TierResult) -> Option<f64>| -> Vec<(f64, f64)> {
+        suite
+            .tiers
+            .iter()
+            .filter_map(|t| f(t).map(|y| (t.size_mb(), y)))
+            .collect()
+    };
+    let ca_pts = pts(&|t| t.ca.as_ref().map(|c| c.preprocessing_secs()));
+    let pa_pts = pts(&|t| Some(t.p3sapp.preprocessing_secs()));
+    let mut t = TextTable::new(
+        "Fig 10: Preprocessing-time trend lines (y = a*x + b over MB)",
+        &["Series", "slope (s/MB)", "intercept (s)", "R^2"],
+    );
+    if let Some(l) = fit(&ca_pts) {
+        t.row(vec!["CA".into(), format!("{:.4}", l.slope), format!("{:.4}", l.intercept), format!("{:.4}", l.r_squared)]);
+    }
+    if let Some(l) = fit(&pa_pts) {
+        t.row(vec![
+            "P3SAPP".into(),
+            format!("{:.4}", l.slope),
+            format!("{:.4}", l.intercept),
+            format!("{:.4}", l.r_squared),
+        ]);
+    }
+    anyhow::ensure!(t.num_rows() > 0, "fig10 needs >= 2 tiers");
+    Ok(t)
+}
+
+/// Fig. 12 — summary of % reductions (ingestion/preprocessing/cumulative).
+pub fn fig12(suite: &SuiteResult) -> TextTable {
+    let mut t = TextTable::new(
+        "Fig 12: Development time - Summary of results (% reduction)",
+        &["Dataset ID", "Size (MB)", "Ingestion", "Preprocessing", "Cumulative"],
+    );
+    for tier in &suite.tiers {
+        let f = |v: Option<f64>| v.map(pct).unwrap_or_else(|| "-".into());
+        t.row(vec![
+            tier.tier.to_string(),
+            format!("{:.2}", tier.size_mb()),
+            f(tier.reduction_pct(|r| r.ingestion_secs())),
+            f(tier.reduction_pct(|r| r.preprocessing_secs())),
+            f(tier.reduction_pct(|r| r.cumulative_secs())),
+        ]);
+    }
+    t
+}
+
+/// Fig. 13 series — saving/MTT ratio per tier (rendered by table8; this
+/// emits the CSV series for plotting).
+pub fn fig13_csv(suite: &SuiteResult, model: &TrainTimeModel) -> Result<String> {
+    Ok(table8(suite, model)?.to_csv())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::{run_suite, SuiteOptions};
+
+    fn tiny_suite() -> SuiteResult {
+        let base = std::env::temp_dir().join(format!("p3sapp-tbl-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let mut opts = SuiteOptions::new(&base);
+        opts.scale = 0.08;
+        opts.workers = 2;
+        opts.tiers = vec![1, 2];
+        run_suite(&opts).unwrap()
+    }
+
+    #[test]
+    fn all_tables_render_from_suite() {
+        let suite = tiny_suite();
+        let model = TrainTimeModel { sec_per_step: 0.5, batch_size: 32, train_frac: 0.9 };
+        assert_eq!(table2(&suite).num_rows(), 2);
+        assert_eq!(table3(&suite).num_rows(), 2);
+        assert_eq!(table4(&suite).num_rows(), 2);
+        assert_eq!(table5_6(&suite, "title").unwrap().num_rows(), 2);
+        assert_eq!(table5_6(&suite, "abstract").unwrap().num_rows(), 2);
+        assert_eq!(table7(&suite, &model).unwrap().num_rows(), 2);
+        assert_eq!(table8(&suite, &model).unwrap().num_rows(), 2);
+        assert_eq!(fig10(&suite).unwrap().num_rows(), 2);
+        assert_eq!(fig12(&suite).num_rows(), 2);
+        assert!(fig13_csv(&suite, &model).unwrap().lines().count() >= 3);
+        // Accuracy in our unified-substrate reproduction is 100% — the
+        // paper's 93-98% stems from its two different ingestion stacks
+        // (see EXPERIMENTS.md discussion).
+        let acc = table5_6(&suite, "title").unwrap().render();
+        assert!(acc.contains("100.000%"), "{acc}");
+    }
+
+    #[test]
+    fn train_time_model_scales_with_rows() {
+        let m = TrainTimeModel { sec_per_step: 2.0, batch_size: 32, train_frac: 0.9 };
+        assert!(m.mtt_per_epoch(3200) > m.mtt_per_epoch(320));
+        assert_eq!(m.mtt_per_epoch(10), 2.0, "at least one step per epoch");
+    }
+}

@@ -1,0 +1,192 @@
+//! Parameter checkpointing: persist/restore the trainer's model state
+//! without any Python — a flat little-endian binary format tied to the
+//! manifest's wire order.
+//!
+//! Layout:
+//! ```text
+//! magic  b"P3CK"            4 bytes
+//! version u32               (1)
+//! step    u64               optimizer step at save time
+//! count   u32               number of tensors (P)
+//! per tensor:
+//!   name_len u32, name bytes (utf-8)
+//!   rank u32, dims u64 × rank
+//!   f32 data (prod(dims) × 4 bytes, little-endian)
+//! ```
+
+use super::manifest::ModelManifest;
+use crate::Result;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"P3CK";
+const VERSION: u32 = 1;
+
+/// Save `params` (manifest wire order) to `path`.
+pub fn save(
+    path: &Path,
+    manifest: &ModelManifest,
+    params: &[xla::Literal],
+    step: u64,
+) -> Result<()> {
+    anyhow::ensure!(
+        params.len() == manifest.n_tensors(),
+        "checkpoint: {} tensors, manifest expects {}",
+        params.len(),
+        manifest.n_tensors()
+    );
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&step.to_le_bytes())?;
+    w.write_all(&(params.len() as u32).to_le_bytes())?;
+    for ((name, shape), lit) in manifest.param_order.iter().zip(params) {
+        let data: Vec<f32> = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("checkpoint read tensor {name}: {e}"))?;
+        let expected: usize = shape.iter().product();
+        anyhow::ensure!(
+            data.len() == expected,
+            "checkpoint: tensor {name} has {} elems, shape {:?} expects {expected}",
+            data.len(),
+            shape
+        );
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&(shape.len() as u32).to_le_bytes())?;
+        for &d in shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // Bulk copy of the raw f32 payload.
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        w.write_all(bytes)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a checkpoint; validates names/shapes against the manifest and
+/// returns (params in wire order, saved step).
+pub fn load(path: &Path, manifest: &ModelManifest) -> Result<(Vec<xla::Literal>, u64)> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open checkpoint {}: {e}", path.display()))?,
+    );
+    let mut buf4 = [0u8; 4];
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf4)?;
+    anyhow::ensure!(&buf4 == MAGIC, "not a p3sapp checkpoint (bad magic)");
+    r.read_exact(&mut buf4)?;
+    let version = u32::from_le_bytes(buf4);
+    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    r.read_exact(&mut buf8)?;
+    let step = u64::from_le_bytes(buf8);
+    r.read_exact(&mut buf4)?;
+    let count = u32::from_le_bytes(buf4) as usize;
+    anyhow::ensure!(
+        count == manifest.n_tensors(),
+        "checkpoint has {count} tensors, manifest expects {}",
+        manifest.n_tensors()
+    );
+
+    let mut params = Vec::with_capacity(count);
+    for (name, shape) in &manifest.param_order {
+        r.read_exact(&mut buf4)?;
+        let name_len = u32::from_le_bytes(buf4) as usize;
+        let mut name_buf = vec![0u8; name_len];
+        r.read_exact(&mut name_buf)?;
+        let got_name = String::from_utf8(name_buf)?;
+        anyhow::ensure!(
+            &got_name == name,
+            "checkpoint tensor order mismatch: got {got_name}, expected {name}"
+        );
+        r.read_exact(&mut buf4)?;
+        let rank = u32::from_le_bytes(buf4) as usize;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            r.read_exact(&mut buf8)?;
+            dims.push(u64::from_le_bytes(buf8) as usize);
+        }
+        anyhow::ensure!(
+            &dims == shape,
+            "checkpoint tensor {name}: shape {dims:?} != manifest {shape:?}"
+        );
+        let n: usize = dims.iter().product();
+        let mut data = vec![0f32; n];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
+        };
+        r.read_exact(bytes)?;
+        let lit = xla::Literal::vec1(&data)
+            .reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())
+            .map_err(|e| anyhow::anyhow!("reshape {name}: {e}"))?;
+        params.push(lit);
+    }
+    Ok((params, step))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelManifest;
+
+    fn tiny_manifest() -> ModelManifest {
+        ModelManifest::parse_str(
+            r#"{
+              "config": {"vocab": 8, "embed": 2, "hidden": 2, "attn": 2,
+                         "enc_layers": 3, "src_len": 4, "tgt_len": 2, "batch": 2, "lr": 0.001},
+              "seed": 0,
+              "special_tokens": {"pad": 0, "bos": 1, "eos": 2, "unk": 3},
+              "param_order": [
+                {"name": "a", "shape": [2, 3]},
+                {"name": "b", "shape": [4]}
+              ],
+              "param_count": 10
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn tensors() -> Vec<xla::Literal> {
+        vec![
+            xla::Literal::vec1(&[1f32, 2., 3., 4., 5., 6.]).reshape(&[2, 3]).unwrap(),
+            xla::Literal::vec1(&[7f32, 8., 9., 10.]),
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = tiny_manifest();
+        let path = std::env::temp_dir().join(format!("p3ck-rt-{}.ckpt", std::process::id()));
+        save(&path, &m, &tensors(), 42).unwrap();
+        let (loaded, step) = load(&path, &m).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].to_vec::<f32>().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(loaded[1].to_vec::<f32>().unwrap(), vec![7., 8., 9., 10.]);
+        assert_eq!(loaded[0].array_shape().unwrap().dims(), &[2, 3]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_manifest() {
+        let m = tiny_manifest();
+        let path = std::env::temp_dir().join(format!("p3ck-bad-{}.ckpt", std::process::id()));
+        save(&path, &m, &tensors(), 1).unwrap();
+        let mut other = m.clone();
+        other.param_order[1].1 = vec![5]; // shape drift
+        assert!(load(&path, &other).is_err());
+        other.param_order[1] = ("renamed".into(), vec![4]);
+        assert!(load(&path, &other).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = std::env::temp_dir().join(format!("p3ck-junk-{}.ckpt", std::process::id()));
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path, &tiny_manifest()).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

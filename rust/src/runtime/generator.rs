@@ -1,0 +1,243 @@
+//! Greedy title generation — the paper's Algorithm 3 (model inference):
+//! encode the abstract once, then feed `<start>` and loop single decoder
+//! steps, picking the argmax word, until `<end>` or the length cap.
+
+use super::manifest::ModelManifest;
+use super::session::{host, Session};
+use crate::vocab::{Vocabulary, BOS, EOS};
+use crate::Result;
+use std::time::Instant;
+
+/// Inference driver over the `encode` + `decode_step` artifacts.
+pub struct Generator {
+    session: Session,
+    exe_encode: xla::PjRtLoadedExecutable,
+    exe_decode: xla::PjRtLoadedExecutable,
+    manifest: ModelManifest,
+    params: Vec<xla::Literal>,
+}
+
+/// One generated title plus timing (t_mi of eq. 6).
+#[derive(Debug, Clone)]
+pub struct Generated {
+    pub token_ids: Vec<i32>,
+    pub wall_secs: f64,
+}
+
+impl Generator {
+    pub fn new(
+        session: Session,
+        manifest: ModelManifest,
+        params: Vec<xla::Literal>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            params.len() == manifest.n_tensors(),
+            "generator got {} param tensors, manifest says {}",
+            params.len(),
+            manifest.n_tensors()
+        );
+        let exe_encode = session.load("encode")?;
+        let exe_decode = session.load("decode_step")?;
+        Ok(Generator { session, exe_encode, exe_decode, manifest, params })
+    }
+
+    /// From trained state in one call.
+    pub fn from_trainer(trainer: super::Trainer) -> Result<Self> {
+        let (session, manifest, params) = trainer.into_generator_parts();
+        Generator::new(session, manifest, params)
+    }
+
+    pub fn manifest(&self) -> &ModelManifest {
+        &self.manifest
+    }
+
+    /// Generate a title for one encoded abstract (ids+mask of length
+    /// src_len). Greedy argmax decoding, capped at tgt_len steps.
+    pub fn generate_ids(&self, src: &[i32], src_mask: &[f32]) -> Result<Generated> {
+        let cfg = &self.manifest.config;
+        anyhow::ensure!(
+            src.len() == cfg.src_len && src_mask.len() == cfg.src_len,
+            "source length {} != artifact src_len {}",
+            src.len(),
+            cfg.src_len
+        );
+        let t0 = Instant::now();
+        let s = cfg.src_len as i64;
+
+        // Algorithm 3 step 1: encode the whole input sequence.
+        // Inputs are borrowed — params are never deep-copied per call.
+        let src_lit = host::i32_tensor(src, &[1, s])?;
+        let mask_lit = host::f32_tensor(src_mask, &[1, s])?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&src_lit);
+        inputs.push(&mask_lit);
+        let enc_out = self.session.run_ref(&self.exe_encode, &inputs)?;
+        anyhow::ensure!(enc_out.len() == 3, "encode returned {} tensors", enc_out.len());
+        let mut it = enc_out.into_iter();
+        let enc_h = it.next().unwrap();
+        let mut h = it.next().unwrap();
+        let mut c = it.next().unwrap();
+
+        // Steps 2-6: <start> token, loop decoder steps, argmax.
+        let mut token = BOS;
+        let mut out_ids = Vec::with_capacity(cfg.tgt_len);
+        for _ in 0..cfg.tgt_len {
+            let tok_lit = host::i32_tensor(&[token], &[1])?;
+            let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+            inputs.push(&enc_h);
+            inputs.push(&mask_lit);
+            inputs.push(&tok_lit);
+            inputs.push(&h);
+            inputs.push(&c);
+            let step_out = self.session.run_ref(&self.exe_decode, &inputs)?;
+            anyhow::ensure!(step_out.len() == 3, "decode_step returned {}", step_out.len());
+            let mut it = step_out.into_iter();
+            let logits = host::to_f32_vec(&it.next().unwrap())?;
+            h = it.next().unwrap();
+            c = it.next().unwrap();
+
+            // Greedy: highest-probability word (Algorithm 3 step 4).
+            let next = argmax(&logits) as i32;
+            if next == EOS {
+                break;
+            }
+            out_ids.push(next);
+            token = next;
+        }
+        Ok(Generated { token_ids: out_ids, wall_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Convenience: clean-text abstract → generated title string.
+    pub fn generate_title(&self, vocab: &Vocabulary, abstract_text: &str) -> Result<(String, f64)> {
+        let (src, mask) = vocab.encode_src(abstract_text, self.manifest.config.src_len);
+        let gen = self.generate_ids(&src, &mask)?;
+        Ok((vocab.decode(&gen.token_ids), gen.wall_secs))
+    }
+
+    /// Beam-search decoding (width `beam`) — the standard upgrade over
+    /// Algorithm 3's greedy argmax; scores are length-normalized summed
+    /// log-probabilities. `beam == 1` reduces to greedy.
+    pub fn generate_ids_beam(&self, src: &[i32], src_mask: &[f32], beam: usize) -> Result<Generated> {
+        anyhow::ensure!(beam >= 1, "beam width must be >= 1");
+        let cfg = &self.manifest.config;
+        anyhow::ensure!(
+            src.len() == cfg.src_len && src_mask.len() == cfg.src_len,
+            "source length {} != artifact src_len {}",
+            src.len(),
+            cfg.src_len
+        );
+        let t0 = Instant::now();
+        let s = cfg.src_len as i64;
+
+        let src_lit = host::i32_tensor(src, &[1, s])?;
+        let mask_lit = host::f32_tensor(src_mask, &[1, s])?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&src_lit);
+        inputs.push(&mask_lit);
+        let enc_out = self.session.run_ref(&self.exe_encode, &inputs)?;
+        let mut it = enc_out.into_iter();
+        let enc_h = it.next().unwrap();
+        let h0 = it.next().unwrap();
+        let c0 = it.next().unwrap();
+
+        // A hypothesis: token path, states, score, finished flag.
+        struct Hyp {
+            ids: Vec<i32>,
+            h: xla::Literal,
+            c: xla::Literal,
+            logp: f32,
+            done: bool,
+        }
+        let mut beams = vec![Hyp { ids: Vec::new(), h: h0, c: c0, logp: 0.0, done: false }];
+
+        for _ in 0..cfg.tgt_len {
+            if beams.iter().all(|b| b.done) {
+                break;
+            }
+            let mut candidates: Vec<Hyp> = Vec::with_capacity(beams.len() * beam + 1);
+            for hyp in beams {
+                if hyp.done {
+                    candidates.push(hyp);
+                    continue;
+                }
+                let token = *hyp.ids.last().unwrap_or(&BOS);
+                let tok_lit = host::i32_tensor(&[token], &[1])?;
+                let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+                inputs.push(&enc_h);
+                inputs.push(&mask_lit);
+                inputs.push(&tok_lit);
+                inputs.push(&hyp.h);
+                inputs.push(&hyp.c);
+                let step_out = self.session.run_ref(&self.exe_decode, &inputs)?;
+                let mut it = step_out.into_iter();
+                let logits = host::to_f32_vec(&it.next().unwrap())?;
+                let h = it.next().unwrap();
+                let c = it.next().unwrap();
+                // log-softmax over the vocab.
+                let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let logz = logits.iter().map(|x| (x - max).exp()).sum::<f32>().ln() + max;
+                // Expand the top-`beam` next tokens.
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+                for &next in idx.iter().take(beam) {
+                    let lp = logits[next] - logz;
+                    let next = next as i32;
+                    let mut ids = hyp.ids.clone();
+                    let done = next == EOS;
+                    if !done {
+                        ids.push(next);
+                    }
+                    candidates.push(Hyp {
+                        ids,
+                        h: h.clone(),
+                        c: c.clone(),
+                        logp: hyp.logp + lp,
+                        done,
+                    });
+                }
+            }
+            // Length-normalized pruning to `beam` survivors.
+            candidates.sort_by(|a, b| {
+                let an = a.logp / (a.ids.len().max(1) as f32);
+                let bn = b.logp / (b.ids.len().max(1) as f32);
+                bn.partial_cmp(&an).unwrap()
+            });
+            candidates.truncate(beam);
+            beams = candidates;
+        }
+
+        let best = beams
+            .into_iter()
+            .max_by(|a, b| {
+                let an = a.logp / (a.ids.len().max(1) as f32);
+                let bn = b.logp / (b.ids.len().max(1) as f32);
+                an.partial_cmp(&bn).unwrap()
+            })
+            .expect("at least one beam");
+        Ok(Generated { token_ids: best.ids, wall_secs: t0.elapsed().as_secs_f64() })
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in v.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0, -1.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, 0.0]), 1);
+    }
+}

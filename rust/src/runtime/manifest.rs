@@ -1,0 +1,163 @@
+//! Artifact manifest: the Python↔Rust wire contract.
+
+use crate::json::{parse, Json};
+use crate::Result;
+use std::path::Path;
+
+/// Model geometry fixed at AOT time (mirrors `model.Config`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub embed: usize,
+    pub hidden: usize,
+    pub attn: usize,
+    pub enc_layers: usize,
+    pub src_len: usize,
+    pub tgt_len: usize,
+    pub batch: usize,
+    pub lr: f64,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub config: ModelConfig,
+    pub seed: i64,
+    /// (name, shape) in wire order — the flattening contract for the
+    /// params / adam_m / adam_v tensor lists.
+    pub param_order: Vec<(String, Vec<usize>)>,
+    pub param_count: usize,
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub unk: i32,
+}
+
+impl ModelManifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            )
+        })?;
+        Self::parse_str(&text)
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self> {
+        let v = parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let cfg = v.get("config").ok_or_else(|| anyhow::anyhow!("manifest: no config"))?;
+        let geti = |o: &Json, k: &str| -> Result<usize> {
+            o.get(k)
+                .and_then(|x| x.as_i64())
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest: missing int '{k}'"))
+        };
+        let config = ModelConfig {
+            vocab: geti(cfg, "vocab")?,
+            embed: geti(cfg, "embed")?,
+            hidden: geti(cfg, "hidden")?,
+            attn: geti(cfg, "attn")?,
+            enc_layers: geti(cfg, "enc_layers")?,
+            src_len: geti(cfg, "src_len")?,
+            tgt_len: geti(cfg, "tgt_len")?,
+            batch: geti(cfg, "batch")?,
+            lr: cfg.get("lr").and_then(|x| x.as_f64()).unwrap_or(1e-3),
+        };
+        let order = v
+            .get("param_order")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest: no param_order"))?;
+        let mut param_order = Vec::with_capacity(order.len());
+        for entry in order {
+            let name = entry
+                .get_str("name")
+                .ok_or_else(|| anyhow::anyhow!("param entry without name"))?
+                .to_string();
+            let shape = entry
+                .get("shape")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("param entry without shape"))?
+                .iter()
+                .map(|d| d.as_i64().unwrap_or(0) as usize)
+                .collect();
+            param_order.push((name, shape));
+        }
+        let specials = v
+            .get("special_tokens")
+            .ok_or_else(|| anyhow::anyhow!("manifest: no special_tokens"))?;
+        let gets = |k: &str| -> Result<i32> {
+            specials
+                .get(k)
+                .and_then(|x| x.as_i64())
+                .map(|x| x as i32)
+                .ok_or_else(|| anyhow::anyhow!("manifest: missing special '{k}'"))
+        };
+        let m = ModelManifest {
+            config,
+            seed: v.get("seed").and_then(|x| x.as_i64()).unwrap_or(0),
+            param_count: geti(&v, "param_count")?,
+            param_order,
+            pad: gets("pad")?,
+            bos: gets("bos")?,
+            eos: gets("eos")?,
+            unk: gets("unk")?,
+        };
+        // Cross-check against the rust-side constants — a drifted
+        // contract must fail loudly at load, not corrupt training.
+        anyhow::ensure!(
+            m.pad == crate::vocab::PAD
+                && m.bos == crate::vocab::BOS
+                && m.eos == crate::vocab::EOS
+                && m.unk == crate::vocab::UNK,
+            "special-token contract drift between manifest and rust vocab"
+        );
+        Ok(m)
+    }
+
+    /// Number of tensors in one parameter list (P).
+    pub fn n_tensors(&self) -> usize {
+        self.param_order.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"vocab": 512, "embed": 64, "hidden": 128, "attn": 64,
+                 "enc_layers": 3, "src_len": 48, "tgt_len": 12, "batch": 32,
+                 "lr": 0.001, "adam_b1": 0.9, "adam_b2": 0.999, "adam_eps": 1e-8},
+      "seed": 0,
+      "special_tokens": {"pad": 0, "bos": 1, "eos": 2, "unk": 3},
+      "param_order": [
+        {"name": "embedding", "shape": [512, 64]},
+        {"name": "enc_w_0", "shape": [192, 512]}
+      ],
+      "param_count": 131072
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelManifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.config.vocab, 512);
+        assert_eq!(m.config.enc_layers, 3);
+        assert_eq!(m.n_tensors(), 2);
+        assert_eq!(m.param_order[0].0, "embedding");
+        assert_eq!(m.param_order[0].1, vec![512, 64]);
+        assert_eq!(m.eos, 2);
+    }
+
+    #[test]
+    fn rejects_special_token_drift() {
+        let bad = SAMPLE.replace(r#""eos": 2"#, r#""eos": 9"#);
+        assert!(ModelManifest::parse_str(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(ModelManifest::parse_str("{}").is_err());
+    }
+}

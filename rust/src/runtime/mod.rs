@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Python never runs here — the artifacts directory is the entire
+//! contract between the layers.
+//!
+//! - [`Session`] — PJRT CPU client + executable loading/compilation.
+//! - [`ModelManifest`] — `artifacts/manifest.json`: parameter wire order,
+//!   model geometry, special token ids.
+//! - [`Trainer`] — owns the model/optimizer state as host literals and
+//!   drives `train_step.hlo.txt`.
+//! - [`Generator`] — greedy title generation via `encode.hlo.txt` +
+//!   `decode_step.hlo.txt` (paper Algorithm 3).
+
+pub mod checkpoint;
+mod generator;
+mod manifest;
+mod session;
+mod trainer;
+
+pub use generator::Generator;
+pub use manifest::{ModelConfig, ModelManifest};
+pub use session::Session;
+pub use trainer::Trainer;

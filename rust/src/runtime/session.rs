@@ -1,0 +1,117 @@
+//! PJRT session: CPU client + HLO-text artifact loading.
+//!
+//! The load path is exactly the /opt/xla-example recipe:
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile`. Text (not serialized proto) because jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects.
+
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// A PJRT client plus the artifacts directory it loads from.
+pub struct Session {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+impl Session {
+    /// CPU-backed session (the only backend in this environment; the
+    /// same artifacts compile for GPU/TPU PJRT plugins unchanged).
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Session { client, artifacts_dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load and compile `<artifacts>/<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} missing — run `make artifacts`",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))
+    }
+
+    /// Execute with literal inputs and decompose the tuple root into a
+    /// flat literal list (aot.py lowers with `return_tuple=True`).
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let buffers = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let root = buffers[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        root.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))
+    }
+
+    /// Borrowed-input variant — avoids deep-copying large persistent
+    /// literals (model parameters) on every call; the runtime hot paths
+    /// (trainer step, decoder step) use this.
+    pub fn run_ref(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let buffers = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let root = buffers[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        root.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))
+    }
+}
+
+/// Host-tensor helpers shared by trainer/generator.
+pub mod host {
+    use crate::Result;
+
+    pub fn f32_tensor(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape f32{dims:?}: {e}"))
+    }
+
+    pub fn i32_tensor(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("reshape i32{dims:?}: {e}"))
+    }
+
+    pub fn f32_scalar(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e}"))
+    }
+
+    pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+        lit.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("scalar: {e}"))?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("empty scalar literal"))
+    }
+}

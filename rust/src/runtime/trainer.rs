@@ -1,0 +1,159 @@
+//! Training driver: owns (params, adam_m, adam_v) as host literals and
+//! drives the `train_step` artifact — the "n × t_mt" term of the paper's
+//! eq. (6), measured for the MTT columns of Tables 7–8.
+
+use super::manifest::ModelManifest;
+use super::session::{host, Session};
+use crate::vocab::EncodedBatch;
+use crate::Result;
+use std::time::Instant;
+
+/// Model + optimizer state and the compiled step executable.
+pub struct Trainer {
+    session: Session,
+    exe_step: xla::PjRtLoadedExecutable,
+    pub manifest: ModelManifest,
+    params: Vec<xla::Literal>,
+    adam_m: Vec<xla::Literal>,
+    adam_v: Vec<xla::Literal>,
+    step: u64,
+}
+
+/// Result of one optimizer step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub step: u64,
+    pub loss: f32,
+    pub wall_secs: f64,
+}
+
+impl Trainer {
+    /// Create a trainer: loads the manifest, compiles `init` and
+    /// `train_step`, and materializes the initial state by *executing*
+    /// the init artifact (no Python, no weight files).
+    pub fn new(session: Session) -> Result<Self> {
+        let manifest = ModelManifest::load(session.artifacts_dir())?;
+        let exe_init = session.load("init")?;
+        let exe_step = session.load("train_step")?;
+
+        let state = session.run(&exe_init, &[])?;
+        let p = manifest.n_tensors();
+        anyhow::ensure!(
+            state.len() == 3 * p,
+            "init artifact returned {} tensors, expected {}",
+            state.len(),
+            3 * p
+        );
+        let mut it = state.into_iter();
+        let params: Vec<_> = it.by_ref().take(p).collect();
+        let adam_m: Vec<_> = it.by_ref().take(p).collect();
+        let adam_v: Vec<_> = it.collect();
+
+        Ok(Trainer { session, exe_step, manifest, params, adam_m, adam_v, step: 0 })
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Borrow the current parameters (wire order) — handed to
+    /// [`super::Generator`] for inference.
+    pub fn params(&self) -> &[xla::Literal] {
+        &self.params
+    }
+
+    /// Clone parameters out (for checkpoint-style handoff).
+    pub fn export_params(&self) -> Vec<xla::Literal> {
+        self.params.clone()
+    }
+
+    /// Run one optimizer step on an encoded batch.
+    pub fn train_step(&mut self, batch: &EncodedBatch) -> Result<StepStats> {
+        let cfg = &self.manifest.config;
+        anyhow::ensure!(
+            batch.batch == cfg.batch
+                && batch.src_len == cfg.src_len
+                && batch.tgt_len == cfg.tgt_len,
+            "batch geometry {}x{}/{} != artifact {}x{}/{}",
+            batch.batch,
+            batch.src_len,
+            batch.tgt_len,
+            cfg.batch,
+            cfg.src_len,
+            cfg.tgt_len
+        );
+        let t0 = Instant::now();
+        self.step += 1;
+
+        let b = batch.batch as i64;
+        let (s, t) = (batch.src_len as i64, batch.tgt_len as i64);
+        let p = self.manifest.n_tensors();
+
+        // Input order mirrors aot.py's train_step signature. Inputs are
+        // *borrowed* (`&Literal`) — deep-copying ~P model tensors per
+        // step was a measurable share of step time (§Perf).
+        let scalars = [
+            host::f32_scalar(self.step as f32),
+            host::i32_tensor(&batch.src, &[b, s])?,
+            host::f32_tensor(&batch.src_mask, &[b, s])?,
+            host::i32_tensor(&batch.tgt_in, &[b, t])?,
+            host::i32_tensor(&batch.tgt_out, &[b, t])?,
+            host::f32_tensor(&batch.tgt_mask, &[b, t])?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * p + 6);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.adam_m.iter());
+        inputs.extend(self.adam_v.iter());
+        inputs.extend(scalars.iter());
+
+        let outputs = self.session.run_ref(&self.exe_step, &inputs)?;
+        anyhow::ensure!(
+            outputs.len() == 1 + 3 * p,
+            "train_step returned {} tensors, expected {}",
+            outputs.len(),
+            1 + 3 * p
+        );
+        let mut it = outputs.into_iter();
+        let loss = host::scalar_f32(&it.next().unwrap())?;
+        self.params = it.by_ref().take(p).collect();
+        self.adam_m = it.by_ref().take(p).collect();
+        self.adam_v = it.collect();
+
+        anyhow::ensure!(loss.is_finite(), "training diverged: loss = {loss}");
+        Ok(StepStats { step: self.step, loss, wall_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Run `n` steps pulling batches from `next`, returning per-step
+    /// stats (the loss curve recorded in EXPERIMENTS.md).
+    pub fn train_loop(
+        &mut self,
+        n: usize,
+        mut next: impl FnMut() -> EncodedBatch,
+    ) -> Result<Vec<StepStats>> {
+        let mut stats = Vec::with_capacity(n);
+        for _ in 0..n {
+            let batch = next();
+            stats.push(self.train_step(&batch)?);
+        }
+        Ok(stats)
+    }
+
+    /// Consume the trainer into (session, manifest, params) for the
+    /// inference stage.
+    pub fn into_generator_parts(self) -> (Session, ModelManifest, Vec<xla::Literal>) {
+        (self.session, self.manifest, self.params)
+    }
+
+    /// Persist the current model parameters (not Adam state) to `path`.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        super::checkpoint::save(path, &self.manifest, &self.params, self.step)
+    }
+
+    /// Restore model parameters from a checkpoint; Adam state is reset
+    /// (fine-tuning semantics). Returns the saved step counter.
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<u64> {
+        let (params, step) = super::checkpoint::load(path, &self.manifest)?;
+        self.params = params;
+        Ok(step)
+    }
+}

@@ -1,0 +1,150 @@
+//! Unwanted-character removal and short-word removal — the paper's
+//! `RemoveUnwantedCharacters` (§4.1.3) and `RemoveShortWords` (§4.1.4)
+//! APIs, at the byte level.
+
+use super::contractions;
+
+/// The full `RemoveUnwantedCharacters` semantics, in one pass each:
+/// 1. expand contractions (needs apostrophes still present),
+/// 2. drop text between parentheses (non-greedy, nesting-aware),
+/// 3. keep only ASCII letters and spaces — punctuation, apostrophes,
+///    digits, and any special/non-ASCII characters become separators —
+///    collapsing whitespace runs.
+///
+/// `input` is expected lowercased (the pipeline orders ConvertToLower
+/// first, as in Figs. 2–3); `scratch` is a reusable intermediate buffer.
+pub fn remove_unwanted(input: &str, scratch: &mut String, out: &mut String) {
+    // Pass 1: contraction mapping.
+    contractions::expand_contractions(input, scratch);
+
+    // Pass 2+3 fused: parenthesis elision + character filtering.
+    out.clear();
+    out.reserve(scratch.len());
+    let mut depth = 0usize;
+    let mut pending_space = false;
+    for c in scratch.chars() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            _ if depth > 0 => {}
+            c if c.is_ascii_alphabetic() => {
+                if pending_space && !out.is_empty() {
+                    out.push(' ');
+                }
+                pending_space = false;
+                out.push(c);
+            }
+            _ => {
+                // Everything else (space, digit, punctuation, Unicode)
+                // acts as a word separator.
+                pending_space = true;
+            }
+        }
+    }
+}
+
+/// `RemoveShortWords`: drop words of length <= `threshold` (the paper
+/// fixes threshold = 1 for the case study, killing stray single letters
+/// left over from character filtering).
+pub fn remove_short_words(input: &str, threshold: usize, out: &mut String) {
+    out.clear();
+    out.reserve(input.len());
+    let mut first = true;
+    for word in input.split_whitespace() {
+        if word.chars().count() <= threshold {
+            continue;
+        }
+        if !first {
+            out.push(' ');
+        }
+        first = false;
+        out.push_str(word);
+    }
+}
+
+/// Token-list variant of short-word removal.
+pub fn remove_short_words_tokens(tokens: &[String], threshold: usize) -> Vec<String> {
+    tokens
+        .iter()
+        .filter(|t| t.chars().count() > threshold)
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clean(s: &str) -> String {
+        let (mut scratch, mut out) = (String::new(), String::new());
+        remove_unwanted(s, &mut scratch, &mut out);
+        out
+    }
+
+    #[test]
+    fn strips_punctuation_and_digits() {
+        assert_eq!(clean("results: 42% better, faster!"), "results better faster");
+    }
+
+    #[test]
+    fn parenthesised_text_removed() {
+        assert_eq!(clean("model (see section 3) performs"), "model performs");
+        assert_eq!(clean("nested (a (b) c) end"), "nested end");
+        assert_eq!(clean("unbalanced ) fine"), "unbalanced fine");
+    }
+
+    #[test]
+    fn contractions_expanded_before_apostrophe_strip() {
+        assert_eq!(clean("it's shown we don't overfit"), "it is shown we do not overfit");
+        // Possessive: apostrophe stripped, word splits stay sane.
+        assert_eq!(clean("the model's output"), "the model s output");
+    }
+
+    #[test]
+    fn unicode_becomes_separator() {
+        assert_eq!(clean("naïve approach"), "na ve approach");
+        assert_eq!(clean("α-helix"), "helix");
+    }
+
+    #[test]
+    fn whitespace_collapsed_no_leading_trailing() {
+        assert_eq!(clean("  a  lot   of , , space  "), "a lot of space");
+        assert_eq!(clean("...!!!"), "");
+        assert_eq!(clean(""), "");
+    }
+
+    #[test]
+    fn short_words_threshold_1() {
+        let mut out = String::new();
+        remove_short_words("a be sea deep", 1, &mut out);
+        assert_eq!(out, "be sea deep");
+    }
+
+    #[test]
+    fn short_words_threshold_3() {
+        let mut out = String::new();
+        remove_short_words("a be sea deep model", 3, &mut out);
+        assert_eq!(out, "deep model");
+    }
+
+    #[test]
+    fn short_words_all_removed() {
+        let mut out = String::new();
+        remove_short_words("a b c", 1, &mut out);
+        assert_eq!(out, "");
+    }
+
+    #[test]
+    fn short_words_token_variant() {
+        let toks: Vec<String> = ["a", "deep", "net"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(remove_short_words_tokens(&toks, 1), vec!["deep", "net"]);
+    }
+
+    #[test]
+    fn unicode_length_counted_in_chars() {
+        let mut out = String::new();
+        remove_short_words("ää bb", 2, &mut out);
+        // "ää" is 2 chars (4 bytes) — removed at threshold 2 like "bb".
+        assert_eq!(out, "");
+    }
+}

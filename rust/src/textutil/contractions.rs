@@ -1,0 +1,148 @@
+//! English contraction expansion ("isn't" → "is not"), the contraction
+//! mapping sub-step of the paper's `RemoveUnwantedCharacters` API.
+//!
+//! Stored as a `const` sorted table + binary search: no hashing, no heap,
+//! and lookup stays in one cache line for the common misses (most words
+//! contain no apostrophe and never reach the table).
+
+/// Sorted (contraction, expansion) pairs. Keys are lowercase.
+/// MUST stay sorted — `lookup` binary-searches; a unit test enforces it.
+const CONTRACTIONS: &[(&str, &str)] = &[
+    ("ain't", "is not"),
+    ("aren't", "are not"),
+    ("can't", "cannot"),
+    ("couldn't", "could not"),
+    ("didn't", "did not"),
+    ("doesn't", "does not"),
+    ("don't", "do not"),
+    ("hadn't", "had not"),
+    ("hasn't", "has not"),
+    ("haven't", "have not"),
+    ("he'd", "he would"),
+    ("he'll", "he will"),
+    ("he's", "he is"),
+    ("here's", "here is"),
+    ("how's", "how is"),
+    ("i'd", "i would"),
+    ("i'll", "i will"),
+    ("i'm", "i am"),
+    ("i've", "i have"),
+    ("isn't", "is not"),
+    ("it'd", "it would"),
+    ("it'll", "it will"),
+    ("it's", "it is"),
+    ("let's", "let us"),
+    ("mightn't", "might not"),
+    ("mustn't", "must not"),
+    ("needn't", "need not"),
+    ("she'd", "she would"),
+    ("she'll", "she will"),
+    ("she's", "she is"),
+    ("shouldn't", "should not"),
+    ("that'd", "that would"),
+    ("that's", "that is"),
+    ("there'd", "there would"),
+    ("there's", "there is"),
+    ("they'd", "they would"),
+    ("they'll", "they will"),
+    ("they're", "they are"),
+    ("they've", "they have"),
+    ("wasn't", "was not"),
+    ("we'd", "we would"),
+    ("we'll", "we will"),
+    ("we're", "we are"),
+    ("we've", "we have"),
+    ("weren't", "were not"),
+    ("what'll", "what will"),
+    ("what're", "what are"),
+    ("what's", "what is"),
+    ("what've", "what have"),
+    ("where'd", "where did"),
+    ("where's", "where is"),
+    ("who'd", "who would"),
+    ("who'll", "who will"),
+    ("who're", "who are"),
+    ("who's", "who is"),
+    ("who've", "who have"),
+    ("won't", "will not"),
+    ("wouldn't", "would not"),
+    ("you'd", "you would"),
+    ("you'll", "you will"),
+    ("you're", "you are"),
+    ("you've", "you have"),
+];
+
+/// Lowercase-key lookup.
+pub fn lookup(word: &str) -> Option<&'static str> {
+    CONTRACTIONS
+        .binary_search_by(|(k, _)| k.cmp(&word))
+        .ok()
+        .map(|i| CONTRACTIONS[i].1)
+}
+
+/// Expand every contraction in (already lowercased) `input` into `out`
+/// (cleared first). Words are delimited by whitespace; trailing
+/// punctuation sticks to the word and defeats lookup, which is fine —
+/// the unwanted-character stage strips punctuation right after and a
+/// possessive "model's" is not a contraction anyway.
+pub fn expand_contractions(input: &str, out: &mut String) {
+    out.clear();
+    out.reserve(input.len());
+    let mut first = true;
+    for word in input.split_whitespace() {
+        if !first {
+            out.push(' ');
+        }
+        first = false;
+        if word.contains('\'') {
+            if let Some(exp) = lookup(word) {
+                out.push_str(exp);
+                continue;
+            }
+        }
+        out.push_str(word);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_sorted_and_lowercase() {
+        for w in CONTRACTIONS.windows(2) {
+            assert!(w[0].0 < w[1].0, "{} !< {}", w[0].0, w[1].0);
+        }
+        for (k, _) in CONTRACTIONS {
+            assert_eq!(*k, k.to_lowercase());
+        }
+    }
+
+    #[test]
+    fn expands_known_contractions() {
+        let mut out = String::new();
+        expand_contractions("it's shown that results don't generalize", &mut out);
+        assert_eq!(out, "it is shown that results do not generalize");
+    }
+
+    #[test]
+    fn possessives_left_alone() {
+        let mut out = String::new();
+        expand_contractions("the model's output", &mut out);
+        assert_eq!(out, "the model's output");
+    }
+
+    #[test]
+    fn no_apostrophe_fast_path() {
+        let mut out = String::new();
+        expand_contractions("plain words only", &mut out);
+        assert_eq!(out, "plain words only");
+    }
+
+    #[test]
+    fn whitespace_normalized() {
+        let mut out = String::new();
+        expand_contractions("  a\t b ", &mut out);
+        assert_eq!(out, "a b");
+    }
+}

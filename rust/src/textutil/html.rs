@@ -1,0 +1,187 @@
+//! HTML tag stripping and entity decoding — a hand-rolled state machine
+//! (no regex) because this runs once per row per dataset and is one of
+//! the two dominant cleaning costs. Handles the noise actually present
+//! in crawled scholarly metadata: tags, comments, entities, and stray
+//! `<`/`>` in math text ("p < 0.05") which must NOT be eaten.
+
+/// Decoded named entities we care about (the set injected by real-world
+/// publisher HTML and by our corpus generator).
+fn decode_entity(name: &str) -> Option<char> {
+    Some(match name {
+        "amp" => '&',
+        "lt" => '<',
+        "gt" => '>',
+        "quot" => '"',
+        "apos" => '\'',
+        "nbsp" => ' ',
+        "ndash" | "mdash" => '-',
+        "hellip" => '…',
+        _ => return None,
+    })
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum St {
+    Text,
+    /// Just saw `<`; deciding whether it opens a tag.
+    MaybeTag,
+    /// Inside a tag; payload = pending quote char (`"`/`'`) if within a
+    /// quoted attribute value, where `>` must not close the tag.
+    InTag(Option<char>),
+    /// Inside `<!-- … -->`.
+    InComment(u8), // number of consecutive '-' seen toward `-->`
+}
+
+/// Strip HTML tags/comments and decode common entities from `input` into
+/// `out` (cleared first). A `<` only opens a tag if followed by an ASCII
+/// letter, `/`, or `!` — otherwise it is literal text (math inequalities
+/// survive). Tags are replaced by a single space so `word<br>word`
+/// doesn't fuse.
+pub fn strip_html(input: &str, out: &mut String) {
+    out.clear();
+    out.reserve(input.len());
+    let bytes = input.as_bytes();
+    let mut st = St::Text;
+    let mut i = 0;
+    while i < input.len() {
+        // Operate on char boundaries; ASCII control chars drive the
+        // state machine, multi-byte chars only ever appear as text.
+        let c = input[i..].chars().next().unwrap();
+        let clen = c.len_utf8();
+        match st {
+            St::Text => {
+                if c == '<' {
+                    st = St::MaybeTag;
+                } else if c == '&' {
+                    // Try to decode an entity: &name; (max 8 chars).
+                    if let Some(semi) = input[i + 1..].char_indices().take(9).find(|(_, ch)| *ch == ';')
+                    {
+                        let name = &input[i + 1..i + 1 + semi.0];
+                        if let Some(decoded) = decode_entity(name) {
+                            out.push(decoded);
+                            i += semi.0 + 2; // skip &name;
+                            continue;
+                        } else if name.starts_with('#') {
+                            if let Ok(code) = name[1..].parse::<u32>() {
+                                out.push(char::from_u32(code).unwrap_or(' '));
+                                i += semi.0 + 2;
+                                continue;
+                            }
+                        }
+                    }
+                    out.push('&');
+                } else {
+                    out.push(c);
+                }
+            }
+            St::MaybeTag => {
+                if c == '!' {
+                    // Comment or doctype.
+                    if input[i..].starts_with("!--") {
+                        st = St::InComment(0);
+                        i += 3;
+                        continue;
+                    }
+                    st = St::InTag(None);
+                } else if c.is_ascii_alphabetic() || c == '/' {
+                    st = St::InTag(None);
+                } else {
+                    // Literal '<' (e.g. "p < 0.05").
+                    out.push('<');
+                    out.push(c);
+                    st = St::Text;
+                }
+            }
+            St::InTag(quote) => match (quote, c) {
+                (None, '>') => {
+                    out.push(' '); // tag boundary becomes whitespace
+                    st = St::Text;
+                }
+                (None, '"' | '\'') => st = St::InTag(Some(c)),
+                (Some(q), c) if c == q => st = St::InTag(None),
+                _ => {}
+            },
+            St::InComment(dashes) => {
+                if c == '-' {
+                    st = St::InComment((dashes + 1).min(2));
+                } else if c == '>' && dashes >= 2 {
+                    out.push(' ');
+                    st = St::Text;
+                } else {
+                    st = St::InComment(0);
+                }
+            }
+        }
+        i += clen;
+        let _ = bytes;
+    }
+    // Unterminated tag at EOF: drop it (matches BeautifulSoup behaviour).
+    if st == St::MaybeTag {
+        out.push('<');
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip(s: &str) -> String {
+        let mut out = String::new();
+        strip_html(s, &mut out);
+        out
+    }
+
+    #[test]
+    fn strips_simple_tags() {
+        assert_eq!(strip("<p>Hello</p> world"), " Hello  world");
+    }
+
+    #[test]
+    fn tag_replaced_by_space_prevents_word_fusion() {
+        assert_eq!(strip("alpha<br>beta"), "alpha beta");
+    }
+
+    #[test]
+    fn attributes_and_self_closing() {
+        assert_eq!(strip(r#"<a href="x > y">link</a>"#), " link ");
+        assert_eq!(strip("pre<img src='x'/>post"), "pre post");
+    }
+
+    #[test]
+    fn math_inequality_survives() {
+        assert_eq!(strip("p < 0.05 and q <2"), "p < 0.05 and q <2");
+    }
+
+    #[test]
+    fn comments_removed() {
+        assert_eq!(strip("a<!-- hidden <b> -->b"), "a b");
+    }
+
+    #[test]
+    fn entities_decoded() {
+        assert_eq!(strip("Smith &amp; Jones &lt;2019&gt;"), "Smith & Jones <2019>");
+        assert_eq!(strip("caf&#233;"), "café");
+        assert_eq!(strip("x&nbsp;y"), "x y");
+    }
+
+    #[test]
+    fn unknown_entity_left_alone() {
+        assert_eq!(strip("&unknown; stays"), "&unknown; stays");
+    }
+
+    #[test]
+    fn unterminated_tag_dropped() {
+        assert_eq!(strip("text <div class="), "text ");
+        assert_eq!(strip("trailing <"), "trailing <");
+    }
+
+    #[test]
+    fn unicode_text_preserved() {
+        assert_eq!(strip("<i>naïve</i> Σ-algebra"), " naïve  Σ-algebra");
+    }
+
+    #[test]
+    fn empty_input() {
+        assert_eq!(strip(""), "");
+    }
+}

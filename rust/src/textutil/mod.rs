@@ -1,0 +1,74 @@
+//! Low-level text-cleaning substrate used by both the P3SAPP pipeline
+//! stages and the conventional baseline. Everything here is a pure
+//! function over `&str` writing into caller-provided buffers so the
+//! per-row hot loop allocates nothing beyond the output string itself.
+//!
+//! The five cleaning tasks the paper identifies (§2, §3.2):
+//! lowercasing, HTML-tag removal, unwanted-character removal (punctuation,
+//! parenthesised text, apostrophes/contractions, digits, specials),
+//! stopword removal, and short-word removal.
+
+pub mod chars;
+pub mod contractions;
+pub mod html;
+pub mod stopwords;
+
+pub use chars::{remove_short_words, remove_unwanted};
+pub use contractions::expand_contractions;
+pub use html::strip_html;
+pub use stopwords::{is_stopword, remove_stopwords};
+
+/// Lowercase `input` into `out` (cleared first). ASCII fast path with a
+/// correct Unicode fallback — scholarly abstracts are overwhelmingly
+/// ASCII, so the fast path wins by ~4x.
+pub fn to_lowercase_into(input: &str, out: &mut String) {
+    out.clear();
+    if input.is_ascii() {
+        out.push_str(input);
+        // Safety-free in-place ASCII lowering over the owned buffer.
+        // (make_ascii_lowercase is a no-op on non-alphabetic bytes.)
+        unsafe { out.as_mut_vec() }.make_ascii_lowercase();
+    } else {
+        for c in input.chars() {
+            for lc in c.to_lowercase() {
+                out.push(lc);
+            }
+        }
+    }
+}
+
+/// Whitespace tokenizer matching Spark ML `Tokenizer` semantics:
+/// lowercase, then split on runs of whitespace.
+pub fn tokenize(input: &str) -> Vec<String> {
+    input
+        .split_whitespace()
+        .map(|w| w.to_lowercase())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowercase_ascii_and_unicode() {
+        let mut out = String::new();
+        to_lowercase_into("Hello WORLD 123!", &mut out);
+        assert_eq!(out, "hello world 123!");
+        to_lowercase_into("ÉTUDE Σ", &mut out);
+        assert_eq!(out, "étude σ");
+    }
+
+    #[test]
+    fn lowercase_reuses_buffer() {
+        let mut out = String::from("previous contents");
+        to_lowercase_into("New", &mut out);
+        assert_eq!(out, "new");
+    }
+
+    #[test]
+    fn tokenize_matches_spark_semantics() {
+        assert_eq!(tokenize("Logistic  Regression\tModels"), vec!["logistic", "regression", "models"]);
+        assert!(tokenize("   ").is_empty());
+    }
+}

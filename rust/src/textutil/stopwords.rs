@@ -1,0 +1,94 @@
+//! English stopword set (the NLTK list Spark ML's `StopWordsRemover`
+//! defaults mirror). Const sorted table + binary search, same rationale
+//! as `contractions`.
+
+/// Sorted lowercase stopwords. A unit test enforces ordering.
+pub const STOPWORDS: &[&str] = &[
+    "a", "about", "above", "after", "again", "against", "all", "am", "an", "and", "any", "are",
+    "as", "at", "be", "because", "been", "before", "being", "below", "between", "both", "but",
+    "by", "can", "cannot", "could", "did", "do", "does", "doing", "down", "during", "each",
+    "few", "for", "from", "further", "had", "has", "have", "having", "he", "her", "here",
+    "hers", "herself", "him", "himself", "his", "how", "i", "if", "in", "into", "is", "it",
+    "its", "itself", "just", "me", "more", "most", "my", "myself", "no", "nor", "not", "now",
+    "of", "off", "on", "once", "only", "or", "other", "our", "ours", "ourselves", "out",
+    "over", "own", "same", "she", "should", "so", "some", "such", "than", "that", "the",
+    "their", "theirs", "them", "themselves", "then", "there", "these", "they", "this",
+    "those", "through", "to", "too", "under", "until", "up", "very", "was", "we", "were",
+    "what", "when", "where", "which", "while", "who", "whom", "why", "will", "with", "would",
+    "you", "your", "yours", "yourself", "yourselves",
+];
+
+/// Is `word` (assumed lowercase) a stopword?
+#[inline]
+pub fn is_stopword(word: &str) -> bool {
+    // Length gate: every stopword is 1..=10 chars; reject long words
+    // before touching the table.
+    let len = word.len();
+    len >= 1 && len <= 10 && STOPWORDS.binary_search(&word).is_ok()
+}
+
+/// Remove stopwords from (already lowercased) `input` into `out`
+/// (cleared first), preserving single-space separation.
+pub fn remove_stopwords(input: &str, out: &mut String) {
+    out.clear();
+    out.reserve(input.len());
+    let mut first = true;
+    for word in input.split_whitespace() {
+        if is_stopword(word) {
+            continue;
+        }
+        if !first {
+            out.push(' ');
+        }
+        first = false;
+        out.push_str(word);
+    }
+}
+
+/// Token-list variant (Spark `StopWordsRemover` on array<string>).
+pub fn remove_stopwords_tokens(tokens: &[String]) -> Vec<String> {
+    tokens.iter().filter(|t| !is_stopword(t)).cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_sorted() {
+        for w in STOPWORDS.windows(2) {
+            assert!(w[0] < w[1], "{} !< {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn membership() {
+        assert!(is_stopword("the"));
+        assert!(is_stopword("ourselves"));
+        assert!(!is_stopword("neural"));
+        assert!(!is_stopword(""));
+        assert!(!is_stopword("interdisciplinary"));
+    }
+
+    #[test]
+    fn removes_stopwords_preserving_content_words() {
+        let mut out = String::new();
+        remove_stopwords("the model is trained on a large corpus", &mut out);
+        assert_eq!(out, "model trained large corpus");
+    }
+
+    #[test]
+    fn all_stopwords_yields_empty() {
+        let mut out = String::new();
+        remove_stopwords("the of and", &mut out);
+        assert_eq!(out, "");
+    }
+
+    #[test]
+    fn token_variant_matches_string_variant() {
+        let toks: Vec<String> =
+            "the model is trained".split_whitespace().map(String::from).collect();
+        let kept = remove_stopwords_tokens(&toks);
+        assert_eq!(kept, vec!["model".to_string(), "trained".to_string()]);
+    }
+}

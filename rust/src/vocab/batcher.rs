@@ -1,0 +1,198 @@
+//! Batch assembly: cleaned (title, abstract) rows → fixed-shape int32/f32
+//! host tensors matching the train_step artifact signature.
+
+use super::Vocabulary;
+use crate::corpus::Rng;
+use crate::frame::LocalFrame;
+use crate::Result;
+
+/// One training batch, flattened row-major host buffers.
+#[derive(Debug, Clone)]
+pub struct EncodedBatch {
+    pub src: Vec<i32>,      // [B * S]
+    pub src_mask: Vec<f32>, // [B * S]
+    pub tgt_in: Vec<i32>,   // [B * T]
+    pub tgt_out: Vec<i32>,  // [B * T]
+    pub tgt_mask: Vec<f32>, // [B * T]
+    pub batch: usize,
+    pub src_len: usize,
+    pub tgt_len: usize,
+}
+
+/// Deterministic batch iterator over a cleaned frame: encodes all pairs
+/// once, shuffles per epoch with a seeded PRNG, yields full batches
+/// (remainder rows are dropped, as Keras `fit` does with
+/// `drop_remainder`).
+#[derive(Debug)]
+pub struct Batcher {
+    pairs: Vec<(Vec<i32>, Vec<f32>, Vec<i32>, Vec<i32>, Vec<f32>)>,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    batch: usize,
+    src_len: usize,
+    tgt_len: usize,
+}
+
+impl Batcher {
+    /// Build from a cleaned frame. `abstract_col` feeds `src`,
+    /// `title_col` feeds the target side.
+    pub fn new(
+        frame: &LocalFrame,
+        vocab: &Vocabulary,
+        title_col: &str,
+        abstract_col: &str,
+        batch: usize,
+        src_len: usize,
+        tgt_len: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let t_idx = frame.column_index(title_col)?;
+        let a_idx = frame.column_index(abstract_col)?;
+        let mut pairs = Vec::with_capacity(frame.num_rows());
+        for i in 0..frame.num_rows() {
+            let (Some(title), Some(abs)) =
+                (frame.column(t_idx).get_str(i), frame.column(a_idx).get_str(i))
+            else {
+                continue; // post-cleaning should have removed these
+            };
+            let (src, src_mask) = vocab.encode_src(abs, src_len);
+            let (tgt_in, tgt_out, tgt_mask) = vocab.encode_tgt(title, tgt_len);
+            pairs.push((src, src_mask, tgt_in, tgt_out, tgt_mask));
+        }
+        if pairs.is_empty() {
+            anyhow::bail!("no usable (title, abstract) pairs for batching");
+        }
+        let order: Vec<usize> = (0..pairs.len()).collect();
+        Ok(Batcher {
+            pairs,
+            order,
+            cursor: 0,
+            rng: Rng::new(seed),
+            batch,
+            src_len,
+            tgt_len,
+        })
+    }
+
+    pub fn num_pairs(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Full batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.pairs.len() / self.batch
+    }
+
+    fn reshuffle(&mut self) {
+        // Fisher-Yates with the seeded PRNG.
+        for i in (1..self.order.len()).rev() {
+            let j = self.rng.gen_range(i + 1);
+            self.order.swap(i, j);
+        }
+        self.cursor = 0;
+    }
+
+    /// Next full batch, reshuffling at epoch boundaries.
+    pub fn next_batch(&mut self) -> EncodedBatch {
+        if self.cursor + self.batch > self.order.len() {
+            self.reshuffle();
+        }
+        let b = self.batch;
+        let (s, t) = (self.src_len, self.tgt_len);
+        let mut out = EncodedBatch {
+            src: Vec::with_capacity(b * s),
+            src_mask: Vec::with_capacity(b * s),
+            tgt_in: Vec::with_capacity(b * t),
+            tgt_out: Vec::with_capacity(b * t),
+            tgt_mask: Vec::with_capacity(b * t),
+            batch: b,
+            src_len: s,
+            tgt_len: t,
+        };
+        for k in 0..b {
+            let idx = self.order[self.cursor + k];
+            let (src, sm, tin, tout, tm) = &self.pairs[idx];
+            out.src.extend(src);
+            out.src_mask.extend(sm);
+            out.tgt_in.extend(tin);
+            out.tgt_out.extend(tout);
+            out.tgt_mask.extend(tm);
+        }
+        self.cursor += b;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frame::{Column, Schema};
+
+    fn frame(n: usize) -> LocalFrame {
+        LocalFrame::from_columns(
+            Schema::strings(&["title", "abstract"]),
+            vec![
+                Column::from_strs((0..n).map(|i| Some(format!("title {i}"))).collect()),
+                Column::from_strs(
+                    (0..n).map(|i| Some(format!("abstract text number {i}"))).collect(),
+                ),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn vocab(f: &LocalFrame) -> Vocabulary {
+        let texts: Vec<String> = (0..f.num_rows())
+            .flat_map(|i| {
+                [
+                    f.column(0).get_str(i).unwrap().to_string(),
+                    f.column(1).get_str(i).unwrap().to_string(),
+                ]
+            })
+            .collect();
+        Vocabulary::build(texts.iter().map(|s| s.as_str()), 64)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let f = frame(10);
+        let v = vocab(&f);
+        let mut b = Batcher::new(&f, &v, "title", "abstract", 4, 6, 3, 1).unwrap();
+        assert_eq!(b.num_pairs(), 10);
+        assert_eq!(b.batches_per_epoch(), 2);
+        let batch = b.next_batch();
+        assert_eq!(batch.src.len(), 4 * 6);
+        assert_eq!(batch.tgt_in.len(), 4 * 3);
+        assert_eq!(batch.tgt_mask.len(), 4 * 3);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let f = frame(12);
+        let v = vocab(&f);
+        let mut b1 = Batcher::new(&f, &v, "title", "abstract", 4, 6, 3, 7).unwrap();
+        let mut b2 = Batcher::new(&f, &v, "title", "abstract", 4, 6, 3, 7).unwrap();
+        for _ in 0..6 {
+            assert_eq!(b1.next_batch().src, b2.next_batch().src);
+        }
+    }
+
+    #[test]
+    fn epochs_cycle_without_panic() {
+        let f = frame(5);
+        let v = vocab(&f);
+        let mut b = Batcher::new(&f, &v, "title", "abstract", 2, 6, 3, 1).unwrap();
+        for _ in 0..20 {
+            let batch = b.next_batch();
+            assert_eq!(batch.batch, 2);
+        }
+    }
+
+    #[test]
+    fn empty_frame_errors() {
+        let f = frame(0);
+        let v = Vocabulary::build([].into_iter(), 8);
+        assert!(Batcher::new(&f, &v, "title", "abstract", 2, 6, 3, 1).is_err());
+    }
+}

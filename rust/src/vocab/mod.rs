@@ -1,0 +1,231 @@
+//! Vocabulary building and sequence encoding: the bridge between the
+//! cleaned text frame (pipeline output) and the model's fixed-shape
+//! int32 tensors.
+//!
+//! Special ids mirror `python/compile/model.py`: PAD=0, BOS=1, EOS=2,
+//! UNK=3 (pinned by the artifact manifest and checked at load time).
+
+mod batcher;
+
+pub use batcher::{Batcher, EncodedBatch};
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+const N_SPECIAL: usize = 4;
+const SPECIAL_NAMES: [&str; N_SPECIAL] = ["<pad>", "<start>", "<end>", "<unk>"];
+
+/// Frequency-ranked word↔id mapping.
+#[derive(Debug, Clone)]
+pub struct Vocabulary {
+    word_to_id: HashMap<String, i32>,
+    id_to_word: Vec<String>,
+}
+
+impl Vocabulary {
+    /// Build from whitespace-tokenized texts, keeping the `max_size -
+    /// N_SPECIAL` most frequent words (ties broken lexicographically for
+    /// determinism).
+    pub fn build<'a>(texts: impl Iterator<Item = &'a str>, max_size: usize) -> Self {
+        let mut freq: HashMap<&'a str, u64> = HashMap::new();
+        for text in texts {
+            for w in text.split_whitespace() {
+                *freq.entry(w).or_default() += 1;
+            }
+        }
+        let mut ranked: Vec<(&str, u64)> = freq.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let keep = max_size.saturating_sub(N_SPECIAL);
+
+        let mut id_to_word: Vec<String> =
+            SPECIAL_NAMES.iter().map(|s| s.to_string()).collect();
+        id_to_word.extend(ranked.iter().take(keep).map(|(w, _)| w.to_string()));
+        let word_to_id = id_to_word
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Vocabulary { word_to_id, id_to_word }
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_to_word.len() <= N_SPECIAL
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        self.word_to_id.get(word).copied().unwrap_or(UNK)
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.id_to_word
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<unk>")
+    }
+
+    /// Out-of-vocabulary rate over a text (diagnostics).
+    pub fn oov_rate(&self, text: &str) -> f64 {
+        let mut total = 0usize;
+        let mut oov = 0usize;
+        for w in text.split_whitespace() {
+            total += 1;
+            if !self.word_to_id.contains_key(w) {
+                oov += 1;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            oov as f64 / total as f64
+        }
+    }
+
+    /// Encode a source text: right-pad/truncate to `len`.
+    /// Returns (ids, mask).
+    pub fn encode_src(&self, text: &str, len: usize) -> (Vec<i32>, Vec<f32>) {
+        let mut ids = Vec::with_capacity(len);
+        for w in text.split_whitespace().take(len) {
+            ids.push(self.id(w));
+        }
+        let real = ids.len();
+        ids.resize(len, PAD);
+        let mut mask = vec![0.0f32; len];
+        mask[..real].fill(1.0);
+        (ids, mask)
+    }
+
+    /// Encode a target title for teacher forcing: returns
+    /// (tgt_in = [BOS, w1..], tgt_out = [w1.., EOS], mask), all length
+    /// `len`.
+    pub fn encode_tgt(&self, text: &str, len: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let words: Vec<i32> = text
+            .split_whitespace()
+            .take(len - 1) // room for EOS
+            .map(|w| self.id(w))
+            .collect();
+        let mut tgt_out = words.clone();
+        tgt_out.push(EOS);
+        let real = tgt_out.len();
+        tgt_out.resize(len, PAD);
+
+        let mut tgt_in = Vec::with_capacity(len);
+        tgt_in.push(BOS);
+        tgt_in.extend(&words);
+        tgt_in.resize(len, PAD);
+
+        let mut mask = vec![0.0f32; len];
+        mask[..real].fill(1.0);
+        (tgt_in, tgt_out, mask)
+    }
+
+    /// Decode generated ids back to words, stopping at EOS/PAD.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            if id == EOS || id == PAD {
+                break;
+            }
+            if id == BOS {
+                continue;
+            }
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(self.word(id));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab() -> Vocabulary {
+        Vocabulary::build(
+            ["deep learning model", "model training data", "model data"]
+                .into_iter(),
+            16,
+        )
+    }
+
+    #[test]
+    fn specials_reserved() {
+        let v = vocab();
+        assert_eq!(v.word(PAD), "<pad>");
+        assert_eq!(v.word(BOS), "<start>");
+        assert_eq!(v.word(EOS), "<end>");
+        assert_eq!(v.word(UNK), "<unk>");
+    }
+
+    #[test]
+    fn frequency_ranked() {
+        let v = vocab();
+        // "model" (3) ranks before "data" (2) before the rest (1 each).
+        assert_eq!(v.id("model"), 4);
+        assert_eq!(v.id("data"), 5);
+        assert_eq!(v.id("never-seen"), UNK);
+    }
+
+    #[test]
+    fn max_size_enforced() {
+        let v = Vocabulary::build(["a b c d e f g h"].into_iter(), 6);
+        assert_eq!(v.len(), 6);
+        assert_eq!(v.id("a"), 4);
+        assert_eq!(v.id("b"), 5);
+        assert_eq!(v.id("c"), UNK); // truncated
+    }
+
+    #[test]
+    fn encode_src_pads_and_masks() {
+        let v = vocab();
+        let (ids, mask) = v.encode_src("model data", 4);
+        assert_eq!(ids, vec![v.id("model"), v.id("data"), PAD, PAD]);
+        assert_eq!(mask, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn encode_src_truncates() {
+        let v = vocab();
+        let (ids, mask) = v.encode_src("model data model data model", 3);
+        assert_eq!(ids.len(), 3);
+        assert_eq!(mask, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn encode_tgt_teacher_forcing_layout() {
+        let v = vocab();
+        let (tin, tout, mask) = v.encode_tgt("model data", 5);
+        assert_eq!(tin, vec![BOS, v.id("model"), v.id("data"), PAD, PAD]);
+        assert_eq!(tout, vec![v.id("model"), v.id("data"), EOS, PAD, PAD]);
+        assert_eq!(mask, vec![1.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn encode_tgt_long_title_reserves_eos() {
+        let v = vocab();
+        let (_, tout, _) = v.encode_tgt("model data model data model data", 4);
+        assert_eq!(tout[3], EOS);
+    }
+
+    #[test]
+    fn decode_roundtrip_stops_at_eos() {
+        let v = vocab();
+        let (_, tout, _) = v.encode_tgt("model data", 5);
+        assert_eq!(v.decode(&tout), "model data");
+    }
+
+    #[test]
+    fn oov_rate() {
+        let v = vocab();
+        assert_eq!(v.oov_rate("model xyzzy"), 0.5);
+        assert_eq!(v.oov_rate(""), 0.0);
+    }
+}

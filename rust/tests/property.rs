@@ -1,0 +1,216 @@
+//! Property-based tests over the text-cleaning substrate and the
+//! pipeline, driven by the crate's own deterministic PRNG (no proptest
+//! in the vendored closure — these are seeded random-input invariant
+//! sweeps with explicit failure seeds printed on assert).
+
+use p3sapp::baseline::{clean_abstract_row, clean_title_row};
+use p3sapp::corpus::{record, Rng};
+use p3sapp::frame::{Column, Frame, Partition, Schema};
+use p3sapp::pipeline::presets::{abstract_pipeline, title_pipeline};
+use p3sapp::textutil;
+
+/// Random "dirty" scholarly text: generated sentences + random noise
+/// injections (HTML, unicode, control chars, brackets).
+fn dirty_text(rng: &mut Rng) -> String {
+    let n = 1 + rng.gen_range(3);
+    let mut t = record::abstract_text(rng, n);
+    t = record::add_html_noise(rng, t, 0.6);
+    // Sprinkle adversarial fragments.
+    const NASTY: &[&str] = &[
+        "p < 0.05", "x>y", "<", ">", "&", "&amp;", "(unclosed", "closed)",
+        "(()())", "na\u{ef}ve", "\u{3b1}-helix", "it's", "don't", "A1-B2_3",
+        "<b>", "</i>", "<!--", "-->", "\"quote\"", "tab\there", "", "   ",
+    ];
+    for _ in 0..rng.gen_range(4) {
+        let frag = *rng.choice(NASTY);
+        let pos = if t.is_empty() { 0 } else { rng.gen_range(t.len()) };
+        // Insert at a char boundary.
+        let mut at = pos;
+        while !t.is_char_boundary(at) {
+            at -= 1;
+        }
+        t.insert_str(at, frag);
+        t.insert(at, ' ');
+    }
+    t
+}
+
+const TRIALS: usize = 400;
+
+#[test]
+fn cleaned_abstract_is_model_ready_for_any_input() {
+    let mut rng = Rng::new(0xABCD);
+    for trial in 0..TRIALS {
+        let input = dirty_text(&mut rng);
+        let out = clean_abstract_row(&input);
+        // Invariant: only lowercase ASCII letters and single spaces.
+        assert!(
+            out.chars().all(|c| c.is_ascii_lowercase() || c == ' '),
+            "trial {trial}: bad char in {out:?} (input {input:?})"
+        );
+        assert!(!out.contains("  "), "trial {trial}: double space in {out:?}");
+        assert!(!out.starts_with(' ') && !out.ends_with(' '), "trial {trial}");
+        // Invariant: no stopwords, no 1-char words.
+        for w in out.split_whitespace() {
+            assert!(!textutil::is_stopword(w), "trial {trial}: stopword {w}");
+            assert!(w.len() > 1, "trial {trial}: short word {w}");
+        }
+    }
+}
+
+#[test]
+fn cleaning_is_idempotent() {
+    let mut rng = Rng::new(0x1DE0);
+    for trial in 0..TRIALS {
+        let input = dirty_text(&mut rng);
+        let once = clean_abstract_row(&input);
+        assert_eq!(clean_abstract_row(&once), once, "abstract trial {trial}: {input:?}");
+        let once_t = clean_title_row(&input);
+        assert_eq!(clean_title_row(&once_t), once_t, "title trial {trial}");
+    }
+}
+
+#[test]
+fn html_stripper_never_leaves_real_tags() {
+    // Entity-encoded markup (`&lt;i&gt;`) correctly decodes to *text*
+    // `<i>` on the first pass (BeautifulSoup semantics), so the
+    // invariant is on the double-strip: after two passes no real-tag
+    // opener may remain (our noise nests entities at most one level).
+    let mut rng = Rng::new(0x11AA);
+    let (mut pass1, mut out) = (String::new(), String::new());
+    for trial in 0..TRIALS {
+        let input = dirty_text(&mut rng);
+        textutil::strip_html(&input, &mut pass1);
+        textutil::strip_html(&pass1, &mut out);
+        let bytes = out.as_bytes();
+        for (i, w) in out.char_indices() {
+            if w == '<' {
+                let next = bytes.get(i + 1).copied().unwrap_or(b' ');
+                assert!(
+                    !(next.is_ascii_alphabetic() || next == b'/' || next == b'!'),
+                    "trial {trial}: tag survived in {out:?} (input {input:?})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_equals_row_cleaner_on_random_inputs() {
+    // The two cleaning architectures (column pipeline vs row loop) must
+    // be semantically identical — this is what makes the accuracy
+    // experiment meaningful.
+    let mut rng = Rng::new(0xC0FE);
+    let inputs: Vec<Option<String>> = (0..TRIALS)
+        .map(|i| if i % 17 == 0 { None } else { Some(dirty_text(&mut rng)) })
+        .collect();
+
+    let schema = Schema::strings(&["title", "abstract"]);
+    let frame = Frame::from_partitions(
+        schema,
+        // Odd partition sizes to exercise boundaries.
+        inputs
+            .chunks(23)
+            .map(|c| {
+                Partition::new(vec![
+                    Column::from_strs(c.to_vec()),
+                    Column::from_strs(c.to_vec()),
+                ])
+            })
+            .collect(),
+    )
+    .unwrap();
+
+    let title_m = title_pipeline("title").fit(&frame).unwrap();
+    let abs_m = abstract_pipeline("abstract").fit(&frame).unwrap();
+    let out = abs_m
+        .transform(title_m.transform(frame, 2).unwrap(), 2)
+        .unwrap()
+        .collect();
+
+    for (i, input) in inputs.iter().enumerate() {
+        match input {
+            None => {
+                assert!(out.column(0).is_null(i));
+                assert!(out.column(1).is_null(i));
+            }
+            Some(s) => {
+                assert_eq!(
+                    out.column(0).get_str(i).unwrap(),
+                    clean_title_row(s),
+                    "title row {i}: {s:?}"
+                );
+                assert_eq!(
+                    out.column(1).get_str(i).unwrap(),
+                    clean_abstract_row(s),
+                    "abstract row {i}: {s:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn owned_and_borrowed_stage_paths_agree() {
+    use p3sapp::pipeline::stages::*;
+    use p3sapp::pipeline::Transformer;
+    let mut rng = Rng::new(0x0DD);
+    let vals: Vec<Option<String>> = (0..TRIALS)
+        .map(|i| if i % 11 == 0 { None } else { Some(dirty_text(&mut rng)) })
+        .collect();
+    let col = Column::from_strs(vals);
+    let stages: Vec<Box<dyn Transformer>> = vec![
+        Box::new(ConvertToLower::new("c")),
+        Box::new(RemoveHtmlTags::new("c")),
+        Box::new(RemoveUnwantedCharacters::new("c")),
+        Box::new(StopWordsRemoverStr::new("c")),
+        Box::new(RemoveShortWords::new("c", 1)),
+    ];
+    for st in stages {
+        let borrowed = st.transform_column(&col);
+        let owned = st.transform_column_owned(col.clone());
+        assert_eq!(borrowed, owned, "stage {} diverged", st.name());
+    }
+}
+
+#[test]
+fn projected_parser_agrees_with_full_parser_on_generated_corpora() {
+    use p3sapp::json::{parse_document, parse_document_projected};
+    let mut rng = Rng::new(0xFEED);
+    for trial in 0..40 {
+        // Build a small record batch, serialize, parse both ways.
+        let records: Vec<_> = (0..20)
+            .map(|i| {
+                record::CoreRecord::generate(&mut rng, i, 0.5, i % 7 == 0, i % 5 == 0)
+            })
+            .collect();
+        let mut doc = String::from("[");
+        for (i, r) in records.iter().enumerate() {
+            if i > 0 {
+                doc.push(',');
+            }
+            doc.push_str(&r.to_json().to_string());
+        }
+        doc.push(']');
+
+        let full = parse_document(&doc).unwrap();
+        let proj = parse_document_projected(&doc, &["title", "abstract"]).unwrap();
+        assert_eq!(full.len(), proj.len());
+        for (rec, row) in full.iter().zip(&proj) {
+            assert_eq!(rec.get_str("title").map(String::from), row[0], "trial {trial}");
+            assert_eq!(rec.get_str("abstract").map(String::from), row[1], "trial {trial}");
+        }
+    }
+}
+
+#[test]
+fn tokenizer_roundtrip_property() {
+    // join(tokenize(clean)) == clean for already-cleaned text (single
+    // spaces, lowercase) — tokenization must be lossless there.
+    let mut rng = Rng::new(0x70C0);
+    for _ in 0..TRIALS {
+        let cleaned = clean_abstract_row(&dirty_text(&mut rng));
+        let tokens = textutil::tokenize(&cleaned);
+        assert_eq!(tokens.join(" "), cleaned);
+    }
+}
