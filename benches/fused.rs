@@ -1,0 +1,88 @@
+//! Staged vs fused execution of the full P3SAPP preprocessing job over a
+//! generated corpus — the plan layer's headline number. Three arms:
+//!
+//!   1. staged     — the pre-plan driver shape: eager ingest, then
+//!                   null-drop, dedup, pipeline transform and collect as
+//!                   barrier-separated phases;
+//!   2. plan       — the same logical ops run by the single-pass plan
+//!                   executor, *without* the optimizer (isolates the
+//!                   barrier-elimination win);
+//!   3. plan+fuse  — the optimized plan with `FusedStringStage`s
+//!                   (adds the one-sweep-per-column win).
+//!
+//!     cargo bench --bench fused
+//!     BENCH_SCALE=4 BENCH_WORKERS=8 cargo bench --bench fused
+
+use p3sapp::benchkit::{bench, black_box, env_f64, env_usize};
+use p3sapp::corpus::{generate_corpus, CorpusSpec};
+use p3sapp::engine::rebalance;
+use p3sapp::frame::{distinct, drop_nulls};
+use p3sapp::ingest::list_shards;
+use p3sapp::ingest::spark::{ingest_files, IngestOptions};
+use p3sapp::pipeline::presets::{case_study_pipeline, case_study_plan};
+use std::path::PathBuf;
+
+const COLS: [&str; 2] = ["title", "abstract"];
+
+fn staged(files: &[PathBuf], workers: usize) -> usize {
+    let frame = ingest_files(files, &COLS, &IngestOptions::with_workers(workers)).unwrap();
+    let (frame, _) = drop_nulls(frame, &COLS).unwrap();
+    let (frame, _) = distinct(frame, &COLS).unwrap();
+    let frame = rebalance(frame, workers);
+    let model = case_study_pipeline("title", "abstract").fit(&frame).unwrap();
+    let frame = model.transform(frame, workers).unwrap();
+    let mut local = frame.collect();
+    for ci in 0..local.num_columns() {
+        local.column_mut(ci).nullify_empty_strs();
+    }
+    local.drop_nulls(&COLS).unwrap();
+    local.num_rows()
+}
+
+fn main() {
+    let scale = env_f64("BENCH_SCALE", 1.0);
+    let workers = match env_usize("BENCH_WORKERS", 0) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2),
+        n => n,
+    };
+    let spec = CorpusSpec::tiny(7).scaled(scale * 8.0);
+    let dir = std::env::temp_dir().join(format!("p3sapp-bench-fused-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let manifest = generate_corpus(&spec, &dir).unwrap();
+    let files = list_shards(&dir).unwrap();
+    println!(
+        "corpus: {} records in {} files ({:.1} MB), {workers} workers\n",
+        manifest.n_records,
+        manifest.n_files,
+        manifest.total_bytes as f64 / 1048576.0
+    );
+
+    let unfused_plan = case_study_plan(&files, "title", "abstract");
+    let fused_plan = unfused_plan.clone().optimize();
+
+    let m_staged = bench("staged (eager, 4 barriers)", 1, 5, || {
+        staged(black_box(&files), workers)
+    });
+    println!("  {}", m_staged.report());
+
+    let m_plan = bench("plan single-pass (unfused)", 1, 5, || {
+        black_box(&unfused_plan).execute(workers).unwrap().rows_out
+    });
+    println!("  {}", m_plan.report());
+
+    let m_fused = bench("plan single-pass + FusedStringStage", 1, 5, || {
+        black_box(&fused_plan).execute(workers).unwrap().rows_out
+    });
+    println!("  {}", m_fused.report());
+
+    println!(
+        "\n  barrier-elimination speedup (staged/plan):      {:.2}x",
+        m_staged.mean_secs() / m_plan.mean_secs()
+    );
+    println!(
+        "  total fused speedup (staged/plan+fuse):         {:.2}x",
+        m_staged.mean_secs() / m_fused.mean_secs()
+    );
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -6,6 +6,7 @@
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
 use p3sapp::driver::{run_p3sapp, DriverOptions};
 use p3sapp::ingest::list_shards;
+use p3sapp::pipeline::presets::case_study_plan;
 use p3sapp::Result;
 
 fn main() -> Result<()> {
@@ -20,10 +21,18 @@ fn main() -> Result<()> {
         dir.display()
     );
 
-    // 2. Run the full P3SAPP preprocessing (Algorithm 1): parallel
-    //    ingestion, null/duplicate removal, the Spark-ML-style cleaning
-    //    pipeline, and the collect to a pandas-like LocalFrame.
-    let result = run_p3sapp(&list_shards(&dir)?, &DriverOptions::default())?;
+    // 2. Show the execution plan run_p3sapp is about to execute: the
+    //    logical Algorithm 1, what the optimizer fuses, and the physical
+    //    single-pass program.
+    let files = list_shards(&dir)?;
+    let plan = case_study_plan(&files, "title", "abstract");
+    println!("\n{}", p3sapp::plan::explain(&plan, 0)?);
+
+    // 3. Run the full P3SAPP preprocessing (Algorithm 1): one fused
+    //    parallel pass per shard — parse, null/duplicate keys, cleaning
+    //    sweeps — then the ordered dedup merge and collect to a
+    //    pandas-like LocalFrame.
+    let result = run_p3sapp(&files, &DriverOptions::default())?;
     println!("\nstage times:");
     for (stage, d) in result.times.stages() {
         println!("  {stage:14} {:.4} s", d.as_secs_f64());
@@ -33,7 +42,7 @@ fn main() -> Result<()> {
         result.rows_ingested, result.rows_out
     );
 
-    // 3. Look at a few cleaned (title, abstract) pairs.
+    // 4. Look at a few cleaned (title, abstract) pairs.
     println!("\nsample cleaned rows:");
     for i in 0..3.min(result.frame.num_rows()) {
         let title = result.frame.column(0).get_str(i).unwrap_or("-");

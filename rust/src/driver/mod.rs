@@ -12,14 +12,16 @@
 //! Both produce the same contract: a cleaned, contiguous [`LocalFrame`]
 //! (the "Pandas DataFrame" both algorithms output) ready for the model
 //! training subsystem.
+//!
+//! P3SAPP executes through the fused plan layer ([`crate::plan`]); CA
+//! stays the eager stage-by-stage loop on purpose — it is the paper's
+//! control and must keep its measured cost profile.
 
 use crate::baseline::{clean_frame_rows, RowCleaner};
-use crate::engine::rebalance;
-use crate::frame::{drop_nulls, distinct, Frame, LocalFrame};
+use crate::frame::LocalFrame;
 use crate::ingest::append::ingest_files_append;
-use crate::ingest::spark::{ingest_files, IngestOptions};
 use crate::metrics::{StageClock, StageTimes};
-use crate::pipeline::presets::case_study_pipeline;
+use crate::pipeline::presets::case_study_plan;
 use crate::Result;
 use std::path::PathBuf;
 
@@ -76,59 +78,27 @@ impl Default for DriverOptions {
 /// real work in both algorithms.
 fn nullify_empty(frame: &mut LocalFrame) {
     for i in 0..frame.num_columns() {
-        if let crate::frame::Column::Str(v) = frame.column_mut(i) {
-            for cell in v.iter_mut() {
-                if cell.as_deref() == Some("") {
-                    *cell = None;
-                }
-            }
-        }
+        frame.column_mut(i).nullify_empty_strs();
     }
 }
 
-/// Algorithm 1 — P3SAPP. Parallel ingestion into a partitioned frame,
-/// distributed pre-cleaning, pipelined parallel cleaning, then the
-/// Spark→pandas collect in post-cleaning.
+/// Algorithm 1 — P3SAPP, executed through the plan layer
+/// ([`crate::plan`]): the whole ingest → pre-clean → clean → post-clean
+/// workflow is built as a lazy [`crate::plan::LogicalPlan`], optimized
+/// (projection pushdown, null-drop pushdown, string-stage fusion) and
+/// run as a **single parallel pass** per shard file — no barriers
+/// between the paper's stages. Stage times are the executor's
+/// proportional attribution of the pass (see `plan::physical`), so the
+/// Tables 2–4 accounting keeps working.
 pub fn run_p3sapp(files: &[PathBuf], opts: &DriverOptions) -> Result<PreprocessResult> {
-    let mut clock = StageClock::new();
-    let cols = [opts.title_col.as_str(), opts.abstract_col.as_str()];
-    let ingest_opts = IngestOptions::with_workers(if opts.workers == 0 {
-        IngestOptions::default().workers
-    } else {
-        opts.workers
-    });
-    let workers = ingest_opts.workers;
-
-    // Steps 2–8: parallel read/parse/project/union.
-    let frame: Frame =
-        clock.time_res(INGESTION, || ingest_files(files, &cols, &ingest_opts))?;
-    let rows_ingested = frame.num_rows();
-
-    // Steps 9–10: drop nulls, drop duplicates (distributed).
-    let frame = clock.time_res(PRE_CLEANING, || -> Result<Frame> {
-        let (f, _) = drop_nulls(frame, &cols)?;
-        let (f, _) = distinct(f, &cols)?;
-        Ok(f)
-    })?;
-
-    // Steps 11–14: define stages, build pipeline, fit, transform.
-    let frame = clock.time_res(CLEANING, || -> Result<Frame> {
-        let f = rebalance(frame, workers);
-        let pipeline = case_study_pipeline(&opts.title_col, &opts.abstract_col);
-        let model = pipeline.fit(&f)?;
-        model.transform(f, workers)
-    })?;
-
-    // Steps 15–16: Spark→pandas conversion + final null sweep.
-    let local = clock.time_res(POST_CLEANING, || -> Result<LocalFrame> {
-        let mut local = frame.collect();
-        nullify_empty(&mut local);
-        local.drop_nulls(&cols)?;
-        Ok(local)
-    })?;
-
-    let rows_out = local.num_rows();
-    Ok(PreprocessResult { frame: local, times: clock.times, rows_ingested, rows_out })
+    let plan = case_study_plan(files, &opts.title_col, &opts.abstract_col).optimize();
+    let out = plan.execute(opts.workers)?;
+    Ok(PreprocessResult {
+        frame: out.frame,
+        times: out.times,
+        rows_ingested: out.rows_ingested,
+        rows_out: out.rows_out,
+    })
 }
 
 /// Algorithm 2 — conventional approach. Sequential append ingestion,

@@ -179,6 +179,31 @@ impl Column {
         }
     }
 
+    /// Empty-string cells become nulls — the pandas `.replace('', NaN)`
+    /// analog shared by the CA driver, the plan executor's post-cleaning
+    /// sweep, and their reference implementations in tests/benches.
+    /// No-op on non-string columns.
+    pub fn nullify_empty_strs(&mut self) {
+        if let Column::Str(v) = self {
+            for cell in v.iter_mut() {
+                if cell.as_deref() == Some("") {
+                    *cell = None;
+                }
+            }
+        }
+    }
+
+    /// Split off and return the rows at `at..`, leaving `..at` in place
+    /// (per-column counterpart of `Vec::split_off`; used to re-chunk a
+    /// partition for the executor when shard files are scarce).
+    pub fn split_off(&mut self, at: usize) -> Column {
+        match self {
+            Column::Str(v) => Column::Str(v.split_off(at)),
+            Column::Tokens(v) => Column::Tokens(v.split_off(at)),
+            Column::Vecs(v) => Column::Vecs(v.split_off(at)),
+        }
+    }
+
     /// Retain rows whose index passes `keep`. Used by null-drop and
     /// distinct; preserves order.
     pub fn filter_by_mask(&self, mask: &[bool]) -> Column {
@@ -278,6 +303,25 @@ mod tests {
         let vals: Vec<Value> = c.clone().into_values().collect();
         let c2 = Column::from_values(vals, DType::Tokens);
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn nullify_empty_strs_nulls_only_empties() {
+        let mut c = Column::from_strs(vec![Some("a".into()), Some(String::new()), None]);
+        c.nullify_empty_strs();
+        assert_eq!(c.get_str(0), Some("a"));
+        assert!(c.is_null(1));
+        assert!(c.is_null(2));
+    }
+
+    #[test]
+    fn split_off_keeps_head_returns_tail() {
+        let mut c = Column::from_strs(vec![Some("a".into()), Some("b".into()), Some("c".into())]);
+        let tail = c.split_off(1);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get_str(0), Some("a"));
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail.get_str(0), Some("b"));
     }
 
     #[test]

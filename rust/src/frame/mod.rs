@@ -25,7 +25,8 @@ mod value;
 
 pub use column::Column;
 pub use local::LocalFrame;
-pub use ops::{distinct, drop_nulls, hash_key};
+pub(crate) use ops::null_mask;
+pub use ops::{distinct, distinct_par, drop_nulls, drop_nulls_par, hash_key, hash_row_wide};
 pub use partition::Partition;
 pub use schema::{Field, Schema};
 pub use value::{DType, Value};

@@ -2,10 +2,42 @@
 //! (Algorithm 1 steps 9–10). Both preserve row order (first occurrence
 //! wins for distinct) so CA and P3SAPP outputs stay row-comparable for
 //! the accuracy analysis (Tables 5–6).
+//!
+//! Both ops exist in a sequential form and a `_par` form that runs the
+//! per-partition phase (null masks / key hashing) on the
+//! [`Executor`] worker pool; the ordered merge that decides which
+//! duplicate survives is inherently sequential and stays on the caller's
+//! thread in both forms.
 
-use super::{Frame, Value};
+use super::{Column, Frame, Partition, Value};
+use crate::engine::Executor;
 use crate::Result;
-use std::collections::HashSet;
+use std::collections::HashMap;
+
+/// Compute the keep-mask for rows with no null in any of the `idxs`
+/// columns. Returns (mask, dropped count). Shared by the sequential and
+/// parallel null-drops here and by the plan executor's fused pass.
+pub(crate) fn null_mask(p: &Partition, idxs: &[usize]) -> (Vec<bool>, usize) {
+    let n = p.num_rows();
+    let mut mask = vec![true; n];
+    let mut dropped = 0usize;
+    for (i, m) in mask.iter_mut().enumerate() {
+        if idxs.iter().any(|&ci| p.column(ci).is_null(i)) {
+            *m = false;
+            dropped += 1;
+        }
+    }
+    (mask, dropped)
+}
+
+fn null_filter_partition(p: Partition, idxs: &[usize]) -> (Partition, usize) {
+    let (mask, dropped) = null_mask(&p, idxs);
+    if dropped > 0 {
+        (p.filter_by_mask(&mask), dropped)
+    } else {
+        (p, 0)
+    }
+}
 
 /// Drop rows with a null in any of the named columns.
 /// Returns (filtered frame, rows dropped).
@@ -15,55 +47,156 @@ pub fn drop_nulls(frame: Frame, cols: &[&str]) -> Result<(Frame, usize)> {
     let mut dropped = 0usize;
     let mut out = Vec::with_capacity(partitions.len());
     for p in partitions {
-        let n = p.num_rows();
-        let mut mask = vec![true; n];
-        let mut local_drop = 0usize;
-        for i in 0..n {
-            if idxs.iter().any(|&ci| p.column(ci).is_null(i)) {
-                mask[i] = false;
-                local_drop += 1;
-            }
-        }
+        let (p, local_drop) = null_filter_partition(p, &idxs);
         dropped += local_drop;
-        out.push(if local_drop > 0 { p.filter_by_mask(&mask) } else { p });
+        out.push(p);
+    }
+    Ok((Frame::from_partitions(schema, out)?, dropped))
+}
+
+/// [`drop_nulls`] with the per-partition masks computed on `workers`
+/// threads (0 = all cores). Output and drop count are identical to the
+/// sequential form — partitions are independent and order is preserved.
+pub fn drop_nulls_par(frame: Frame, cols: &[&str], workers: usize) -> Result<(Frame, usize)> {
+    let idxs: Vec<usize> = cols.iter().map(|c| frame.column_index(c)).collect::<Result<_>>()?;
+    let (schema, partitions) = frame.into_partitions();
+    let exec = Executor::new(workers);
+    let results = exec.map_items(partitions, |p| null_filter_partition(p, &idxs));
+    let mut dropped = 0usize;
+    let mut out = Vec::with_capacity(results.len());
+    for (p, local_drop) in results {
+        dropped += local_drop;
+        out.push(p);
     }
     Ok((Frame::from_partitions(schema, out)?, dropped))
 }
 
 /// Drop duplicate rows keyed on the named columns, keeping the first
 /// occurrence in partition order. Two-phase: per-partition key hashing
-/// (parallelizable), then a global ordered merge — the same shuffle-free
-/// shortcut Spark takes for `dropDuplicates` on a single stage when the
-/// data is already collected to the driver's partition list.
+/// (parallelizable — see [`distinct_par`]), then a global ordered merge —
+/// the same shuffle-free shortcut Spark takes for `dropDuplicates` on a
+/// single stage when the data is already collected to the driver's
+/// partition list.
+///
+/// Hash equality alone never drops a row: on a 64-bit collision the
+/// actual key values are compared, so two distinct rows that happen to
+/// share a hash are both retained.
 pub fn distinct(frame: Frame, cols: &[&str]) -> Result<(Frame, usize)> {
+    distinct_impl(frame, cols, None, &hash_row)
+}
+
+/// [`distinct`] with the key-hashing phase run on `workers` threads
+/// (0 = all cores). Output and drop count are identical to the
+/// sequential form — the ordered merge is the same.
+pub fn distinct_par(frame: Frame, cols: &[&str], workers: usize) -> Result<(Frame, usize)> {
+    let exec = Executor::new(workers);
+    distinct_impl(frame, cols, Some(&exec), &hash_row)
+}
+
+fn distinct_impl(
+    frame: Frame,
+    cols: &[&str],
+    exec: Option<&Executor>,
+    hash: &(dyn Fn(&Partition, &[usize], usize) -> u64 + Sync),
+) -> Result<(Frame, usize)> {
     let idxs: Vec<usize> = cols.iter().map(|c| frame.column_index(c)).collect::<Result<_>>()?;
     let (schema, partitions) = frame.into_partitions();
-    let mut seen: HashSet<u64> = HashSet::new();
+
+    // Phase 1: per-partition key hashing (embarrassingly parallel).
+    let hash_partition =
+        |p: &Partition| -> Vec<u64> { (0..p.num_rows()).map(|i| hash(p, &idxs, i)).collect() };
+    let hashes: Vec<Vec<u64>> = match exec {
+        Some(e) => e.map_items(partitions.iter().collect(), |p: &Partition| hash_partition(p)),
+        None => partitions.iter().map(hash_partition).collect(),
+    };
+
+    // Phase 2: ordered merge. `seen` maps each hash to the rows that
+    // claimed it; a row is a duplicate only if it *equals* one of them,
+    // so hash collisions between unequal rows keep both. The first
+    // occupant is stored inline — the overflow `Vec` (empty `Vec`s
+    // don't allocate) is touched only on a genuine 64-bit collision, so
+    // the per-ingested-row cost stays one hash-map probe, as before the
+    // collision fix.
+    type RowRef = (usize, usize);
+    let mut seen: HashMap<u64, (RowRef, Vec<RowRef>)> = HashMap::new();
+    let mut masks: Vec<(Vec<bool>, usize)> = Vec::with_capacity(partitions.len());
     let mut dropped = 0usize;
-    let mut out = Vec::with_capacity(partitions.len());
-    for p in partitions {
-        let n = p.num_rows();
+    for pi in 0..partitions.len() {
+        let n = partitions[pi].num_rows();
         let mut mask = vec![true; n];
         let mut local_drop = 0usize;
         for i in 0..n {
-            // Hash straight off the column storage — no per-row Value
-            // boxing/cloning (this loop runs once per ingested row).
-            let h = hash_row(&p, &idxs, i);
-            if !seen.insert(h) {
-                mask[i] = false;
-                local_drop += 1;
+            match seen.entry(hashes[pi][i]) {
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(((pi, i), Vec::new()));
+                }
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    let (first, overflow) = e.get_mut();
+                    let equals = |&(qp, qr): &RowRef| {
+                        rows_equal(&partitions[qp], qr, &partitions[pi], i, &idxs)
+                    };
+                    if equals(first) || overflow.iter().any(equals) {
+                        mask[i] = false;
+                        local_drop += 1;
+                    } else {
+                        overflow.push((pi, i));
+                    }
+                }
             }
         }
         dropped += local_drop;
-        out.push(if local_drop > 0 { p.filter_by_mask(&mask) } else { p });
+        masks.push((mask, local_drop));
     }
+
+    let out: Vec<Partition> = partitions
+        .into_iter()
+        .zip(masks)
+        .map(|(p, (mask, local_drop))| if local_drop > 0 { p.filter_by_mask(&mask) } else { p })
+        .collect();
     Ok((Frame::from_partitions(schema, out)?, dropped))
+}
+
+/// Key equality over the selected columns, straight off the column
+/// storage. Float cells compare by bit pattern — consistent with the
+/// hash encoding (NaN == NaN, 0.0 != -0.0).
+fn rows_equal(a: &Partition, ra: usize, b: &Partition, rb: usize, idxs: &[usize]) -> bool {
+    idxs.iter().all(|&ci| match (a.column(ci), b.column(ci)) {
+        (Column::Str(x), Column::Str(y)) => x[ra] == y[rb],
+        (Column::Tokens(x), Column::Tokens(y)) => x[ra] == y[rb],
+        (Column::Vecs(x), Column::Vecs(y)) => match (&x[ra], &y[rb]) {
+            (None, None) => true,
+            (Some(p), Some(q)) => {
+                p.len() == q.len()
+                    && p.iter().zip(q.iter()).all(|(u, v)| u.to_bits() == v.to_bits())
+            }
+            _ => false,
+        },
+        _ => false,
+    })
 }
 
 /// Zero-copy row hash over selected columns (same encoding as
 /// [`hash_key`], asserted equal by a unit test).
 fn hash_row(p: &super::Partition, idxs: &[usize], row: usize) -> u64 {
-    let mut h = Fnv::new();
+    hash_row_from(p, idxs, row, FNV_BASIS)
+}
+
+/// 128-bit row key: two independently-seeded FNV-1a streams over the
+/// same encoding. Used by the plan executor's single-pass dedup, where
+/// the raw values are gone (rewritten in place by the fused cleaning
+/// sweep) by the time the driver merges keys — so collisions cannot be
+/// verified against the rows and the key width carries the correctness
+/// burden instead (collision odds ~2⁻¹²⁸ · n²).
+pub fn hash_row_wide(p: &super::Partition, idxs: &[usize], row: usize) -> u128 {
+    let h1 = hash_row_from(p, idxs, row, FNV_BASIS);
+    let h2 = hash_row_from(p, idxs, row, FNV_BASIS ^ 0x9e37_79b9_7f4a_7c15);
+    ((h1 as u128) << 64) | (h2 as u128)
+}
+
+const FNV_BASIS: u64 = 0xcbf29ce484222325;
+
+fn hash_row_from(p: &super::Partition, idxs: &[usize], row: usize, basis: u64) -> u64 {
+    let mut h = Fnv(basis);
     for &ci in idxs {
         match p.column(ci) {
             super::Column::Str(v) => match &v[row] {
@@ -100,13 +233,10 @@ fn hash_row(p: &super::Partition, idxs: &[usize], row: usize) -> u64 {
     h.0
 }
 
-/// FNV-1a accumulator shared by the row and key hashers.
+/// FNV-1a accumulator (seedable basis) shared by the row and key hashers.
 struct Fnv(u64);
 
 impl Fnv {
-    fn new() -> Self {
-        Fnv(0xcbf29ce484222325)
-    }
     #[inline]
     fn feed(&mut self, bytes: &[u8]) {
         for &b in bytes {
@@ -116,10 +246,10 @@ impl Fnv {
     }
 }
 
-/// Stable 64-bit key hash (FNV-1a over a canonical encoding). A u64 set
-/// is ~10x lighter than storing owned key tuples; collision probability
-/// at our scale (<10^7 rows) is negligible and only affects dedup counts,
-/// never correctness of the schema.
+/// Stable 64-bit key hash (FNV-1a over a canonical encoding), matching
+/// [`hash_row`]'s encoding byte for byte. Callers that dedup on this
+/// hash alone must tolerate collisions; [`distinct`] verifies colliding
+/// rows against the real key values instead.
 pub fn hash_key(key: &[Value]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     let mut feed = |bytes: &[u8]| {
@@ -233,6 +363,87 @@ mod tests {
         for i in 0..2 {
             let key: Vec<Value> = vec![p.column(0).get(i), p.column(1).get(i)];
             assert_eq!(hash_row(p, &[0, 1], i), hash_key(&key));
+        }
+    }
+
+    #[test]
+    fn hash_collision_does_not_drop_distinct_rows() {
+        // Regression for the hash-only dedup bug: force every row into
+        // one hash bucket with a constant hasher — distinct rows must
+        // all survive, true duplicates must still be dropped, first
+        // occurrence must still win.
+        let f = frame(vec![
+            vec![(Some("t1"), Some("a1")), (Some("t2"), Some("a2"))],
+            vec![(Some("t1"), Some("a1")), (Some("t3"), Some("a3"))],
+        ]);
+        let constant = |_: &Partition, _: &[usize], _: usize| 42u64;
+        let (f, dropped) = distinct_impl(f, &["title", "abstract"], None, &constant).unwrap();
+        assert_eq!(dropped, 1, "only the true duplicate is dropped");
+        assert_eq!(f.num_rows(), 3);
+        let local = f.collect();
+        let titles: Vec<_> = (0..3).map(|i| local.column(0).get_str(i).unwrap()).collect();
+        assert_eq!(titles, vec!["t1", "t2", "t3"]);
+    }
+
+    #[test]
+    fn wide_hash_distinguishes_rows_sharing_one_half() {
+        let f = frame(vec![vec![(Some("ab"), Some("c")), (Some("a"), Some("bc"))]]);
+        let p = &f.partitions()[0];
+        assert_ne!(hash_row_wide(p, &[0, 1], 0), hash_row_wide(p, &[0, 1], 1));
+        // Equal rows hash equal.
+        let g = frame(vec![vec![(Some("x"), Some("y")), (Some("x"), Some("y"))]]);
+        let q = &g.partitions()[0];
+        assert_eq!(hash_row_wide(q, &[0, 1], 0), hash_row_wide(q, &[0, 1], 1));
+    }
+
+    fn skewed_frame(seed: u64) -> Frame {
+        // Multi-partition frame with nulls and duplicates sprinkled in.
+        let mut rows: Vec<(Option<String>, Option<String>)> = Vec::new();
+        let mut x = seed;
+        for i in 0..400u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let t = match x % 7 {
+                0 => None,
+                1 => Some("dup-title".to_string()),
+                _ => Some(format!("t{}", i % 90)),
+            };
+            let a = match (x >> 8) % 5 {
+                0 => None,
+                1 => Some("dup-abstract".to_string()),
+                _ => Some(format!("a{}", i % 70)),
+            };
+            rows.push((t, a));
+        }
+        let schema = Schema::strings(&["title", "abstract"]);
+        let partitions: Vec<Partition> = rows
+            .chunks(37)
+            .map(|c| {
+                Partition::new(vec![
+                    Column::from_strs(c.iter().map(|r| r.0.clone()).collect()),
+                    Column::from_strs(c.iter().map(|r| r.1.clone()).collect()),
+                ])
+            })
+            .collect();
+        Frame::from_partitions(schema, partitions).unwrap()
+    }
+
+    #[test]
+    fn parallel_drop_nulls_matches_sequential() {
+        for workers in [1, 2, 4] {
+            let seq = drop_nulls(skewed_frame(11), &["title", "abstract"]).unwrap();
+            let par = drop_nulls_par(skewed_frame(11), &["title", "abstract"], workers).unwrap();
+            assert_eq!(seq.1, par.1, "drop counts at workers={workers}");
+            assert_eq!(seq.0.collect(), par.0.collect(), "rows at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn parallel_distinct_matches_sequential() {
+        for workers in [1, 2, 4] {
+            let seq = distinct(skewed_frame(29), &["title", "abstract"]).unwrap();
+            let par = distinct_par(skewed_frame(29), &["title", "abstract"], workers).unwrap();
+            assert_eq!(seq.1, par.1, "drop counts at workers={workers}");
+            assert_eq!(seq.0.collect(), par.0.collect(), "rows at workers={workers}");
         }
     }
 }

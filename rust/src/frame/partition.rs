@@ -83,6 +83,25 @@ impl Partition {
         Ok(())
     }
 
+    /// Split into up to `pieces` row-contiguous partitions of roughly
+    /// equal size, preserving row order. Used by the plan executor to
+    /// keep every worker busy when there are fewer shard files than
+    /// threads. Returns fewer pieces when there aren't enough rows.
+    pub fn split_rows(mut self, pieces: usize) -> Vec<Partition> {
+        let pieces = pieces.max(1);
+        let total = self.num_rows();
+        let per = total.div_ceil(pieces).max(1);
+        let mut out = Vec::with_capacity(pieces);
+        while self.num_rows() > per {
+            let tail = Partition {
+                columns: self.columns.iter_mut().map(|c| c.split_off(per)).collect(),
+            };
+            out.push(std::mem::replace(&mut self, tail));
+        }
+        out.push(self);
+        out
+    }
+
     /// Keep only rows where `mask[i]` is true.
     pub fn filter_by_mask(&self, mask: &[bool]) -> Partition {
         Partition { columns: self.columns.iter().map(|c| c.filter_by_mask(mask)).collect() }
@@ -123,6 +142,28 @@ mod tests {
             Field::new("abstract", DType::Str),
         ]);
         assert!(p.check_schema(&bad).is_err());
+    }
+
+    #[test]
+    fn split_rows_preserves_order_and_balance() {
+        let big = Partition::new(vec![
+            Column::from_strs((0..10).map(|i| Some(format!("t{i}"))).collect()),
+            Column::from_strs((0..10).map(|i| Some(format!("a{i}"))).collect()),
+        ]);
+        let parts = big.split_rows(4);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts.iter().map(Partition::num_rows).sum::<usize>(), 10);
+        let mut seen = Vec::new();
+        for part in &parts {
+            for i in 0..part.num_rows() {
+                seen.push(part.column(0).get_str(i).unwrap().to_string());
+            }
+        }
+        let expect: Vec<String> = (0..10).map(|i| format!("t{i}")).collect();
+        assert_eq!(seen, expect);
+        // Degenerate cases.
+        assert_eq!(p().split_rows(1).len(), 1);
+        assert_eq!(p().split_rows(100).len(), 2, "capped by row count");
     }
 
     #[test]

@@ -114,7 +114,10 @@ pub fn ingest_files(files: &[PathBuf], fields: &[&str], opts: &IngestOptions) ->
 /// the selected fields are materialized, everything else is skipped at
 /// lexer speed — what Spark's JSON datasource does for a two-column
 /// select, and a mechanism pandas `read_json` (the CA path) lacks.
-fn read_shard(path: &Path, fields: &[String]) -> Result<Partition> {
+/// Also the ingestion step of the plan executor's fused single pass
+/// (`crate::plan`), which parses, cleans and filters each shard inside
+/// one worker task.
+pub(crate) fn read_shard(path: &Path, fields: &[String]) -> Result<Partition> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
     let field_refs: Vec<&str> = fields.iter().map(|s| s.as_str()).collect();

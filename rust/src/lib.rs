@@ -5,11 +5,14 @@
 //! as a three-layer Rust + JAX + Pallas stack:
 //!
 //! - **L3 (this crate)** — the coordination layer: a from-scratch
-//!   Spark-like engine (`frame`, `pipeline`, `engine`, `ingest`), the
-//!   conventional sequential baseline (`baseline`), the PJRT runtime that
-//!   drives the AOT-compiled seq2seq model (`runtime`), and the
-//!   analysis/reporting layer regenerating every table and figure of the
-//!   paper (`analysis`, `report`).
+//!   Spark-like engine (`frame`, `pipeline`, `engine`, `ingest`) topped
+//!   by a Catalyst/Tungsten-style plan layer (`plan`: lazy logical
+//!   plans, an optimizer that fuses adjacent string stages, and a
+//!   single-pass physical executor), the conventional sequential
+//!   baseline (`baseline`), the PJRT runtime that drives the
+//!   AOT-compiled seq2seq model (`runtime`), and the analysis/reporting
+//!   layer regenerating every table and figure of the paper
+//!   (`analysis`, `report`).
 //! - **L2** — `python/compile/model.py`: the JAX seq2seq model (3-layer
 //!   stacked LSTM encoder, Bahdanau-attention decoder), AOT-lowered to
 //!   HLO text artifacts at build time.
@@ -21,14 +24,32 @@
 //!
 //! ## Quickstart
 //!
+//! The preferred path is the plan API: describe the whole job lazily,
+//! let the optimizer fuse it, execute it in one parallel pass.
+//!
 //! ```no_run
 //! use p3sapp::corpus::{CorpusSpec, generate_corpus};
-//! use p3sapp::ingest::spark::ingest_dir;
+//! use p3sapp::ingest::list_shards;
 //! use p3sapp::pipeline::presets;
 //!
 //! let spec = CorpusSpec::tiny(42);
 //! let dir = std::path::Path::new("/tmp/corpus");
 //! generate_corpus(&spec, dir).unwrap();
+//! let files = list_shards(dir).unwrap();
+//!
+//! let plan = presets::case_study_plan(&files, "title", "abstract").optimize();
+//! println!("{}", p3sapp::plan::explain(&plan, 4).unwrap()); // what fused
+//! let out = plan.execute(4).unwrap();
+//! println!("{} clean rows ({} dups dropped)", out.rows_out, out.dups_dropped);
+//! ```
+//!
+//! The eager pipeline API remains for frames you already hold:
+//!
+//! ```no_run
+//! use p3sapp::ingest::spark::ingest_dir;
+//! use p3sapp::pipeline::presets;
+//!
+//! let dir = std::path::Path::new("/tmp/corpus");
 //! let frame = ingest_dir(dir, &["title", "abstract"], 4).unwrap();
 //! let model = presets::abstract_pipeline("abstract").fit(&frame).unwrap();
 //! let clean = model.transform(frame, 4).unwrap();
@@ -48,6 +69,7 @@ pub mod ingest;
 pub mod json;
 pub mod metrics;
 pub mod pipeline;
+pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod textutil;

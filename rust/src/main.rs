@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   gen-corpus   generate a synthetic CORE-schema corpus tier
 //!   preprocess   run one approach (ca | p3sapp) over a corpus dir
+//!   explain      print the P3SAPP logical/optimized/physical plan
 //!   compare      run both approaches + accuracy matching
 //!   train        preprocess then train the seq2seq model (AOT/PJRT)
 //!   infer        generate titles with a freshly trained model
@@ -47,13 +48,15 @@ fn usage() {
          \n\
          commands:\n\
          \x20 gen-corpus  --dir D [--tier 1..5 | --records N] [--seed S] [--scale F]\n\
-         \x20 preprocess  --dir D --approach ca|p3sapp [--workers N]\n\
+         \x20 preprocess  --dir D --approach ca|p3sapp [--workers N] [--explain]\n\
+         \x20 explain     --dir D [--workers N]\n\
          \x20 compare     --dir D [--workers N]\n\
          \x20 train       --dir D [--steps N] [--artifacts A] [--workers N]\n\
          \x20             [--save-params FILE]\n\
          \x20 infer       --dir D [--steps N] [--titles K] [--artifacts A]\n\
          \x20 report      [--exp all|e1|...|e9] [--base-dir B] [--scale F]\n\
          \x20             [--tiers 1,2,3] [--workers N] [--artifacts A] [--csv]\n\
+         \x20             [--explain]\n\
          \x20 help\n\
          \n\
          common options:\n\
@@ -72,6 +75,7 @@ fn run(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "gen-corpus" => cmd_gen_corpus(args),
         "preprocess" => cmd_preprocess(args),
+        "explain" => cmd_explain(args),
         "compare" => cmd_compare(args),
         "train" => cmd_train(args),
         "infer" => cmd_infer(args),
@@ -124,6 +128,24 @@ fn driver_opts(args: &Args, cfg: &AppConfig) -> Result<DriverOptions> {
     })
 }
 
+/// Build the case-study plan for a corpus dir (what `run_p3sapp`
+/// executes) so `explain` and `preprocess --explain` show exactly the
+/// plan that runs.
+fn case_plan(files: &[PathBuf], opts: &DriverOptions) -> p3sapp::plan::LogicalPlan {
+    p3sapp::pipeline::presets::case_study_plan(files, &opts.title_col, &opts.abstract_col)
+}
+
+fn cmd_explain(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dir = PathBuf::from(
+        args.get("dir").ok_or_else(|| anyhow::anyhow!("--dir is required"))?,
+    );
+    let files = list_shards(&dir)?;
+    let opts = driver_opts(args, &cfg)?;
+    print!("{}", p3sapp::plan::explain(&case_plan(&files, &opts), opts.workers)?);
+    Ok(())
+}
+
 fn cmd_preprocess(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let dir = PathBuf::from(
@@ -132,6 +154,10 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
     let files = list_shards(&dir)?;
     let opts = driver_opts(args, &cfg)?;
     let approach = args.get_or("approach", "p3sapp");
+    if args.flag("explain") && approach == "p3sapp" {
+        print!("{}", p3sapp::plan::explain(&case_plan(&files, &opts), opts.workers)?);
+        println!();
+    }
     let res = match approach {
         "ca" => run_ca(&files, &opts)?,
         "p3sapp" => run_p3sapp(&files, &opts)?,
@@ -312,6 +338,7 @@ fn cmd_report(args: &Args) -> Result<()> {
     opts.scale = args.get_f64("scale", cfg.corpus.scale)?;
     opts.workers = args.get_usize("workers", cfg.engine.workers)?;
     opts.tiers = args.get_usize_list("tiers", &[1, 2, 3, 4, 5])?;
+    opts.explain = args.flag("explain");
     let csv = args.flag("csv");
 
     let needs_mtt = matches!(exp, "all" | "e5" | "e6");

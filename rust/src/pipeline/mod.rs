@@ -54,6 +54,24 @@ pub trait Transformer: Send + Sync {
     fn transform_column_owned(&self, input: Column) -> Column {
         self.transform_column(&input)
     }
+
+    /// The fusable per-row string kernel of this stage, if it is a pure
+    /// same-column `string -> string` rewrite. Drives plan-level stage
+    /// fusion ([`crate::plan`]); stages that tokenize, change dtype, or
+    /// write a different column return `None` (the default) and act as
+    /// fusion barriers.
+    fn string_kernel(&self) -> Option<stages::StringKernel> {
+        None
+    }
+
+    /// Human-readable stage label for plan EXPLAIN output.
+    fn describe(&self) -> String {
+        if self.input_col() == self.output_col() {
+            format!("{}({})", self.name(), self.input_col())
+        } else {
+            format!("{}({} -> {})", self.name(), self.input_col(), self.output_col())
+        }
+    }
 }
 
 /// An estimator: a stage that must scan the data before it can
@@ -105,6 +123,14 @@ impl Pipeline {
     /// Append a transformer stage (builder style).
     pub fn stage(mut self, t: impl Transformer + 'static) -> Self {
         self.stages.push(StageKind::Transformer(Arc::new(t)));
+        self
+    }
+
+    /// Append an already-shared transformer stage — lets presets build
+    /// the same stage list into a [`Pipeline`] or a
+    /// [`crate::plan::LogicalPlan`] without duplicating it.
+    pub fn stage_arc(mut self, t: Arc<dyn Transformer>) -> Self {
+        self.stages.push(StageKind::Transformer(t));
         self
     }
 

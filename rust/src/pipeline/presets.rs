@@ -1,43 +1,86 @@
-//! Pre-assembled pipelines for the title-generation case study
-//! (paper Figs. 2–3).
+//! Pre-assembled pipelines and logical plans for the title-generation
+//! case study (paper Figs. 2–3).
+//!
+//! Each workflow exists in two forms sharing one stage list:
+//!
+//! - an eager [`Pipeline`] (`*_pipeline`) — fit/transform on a frame you
+//!   already ingested, and
+//! - a lazy [`LogicalPlan`] (`case_study_plan`) — the whole Algorithm 1
+//!   (scan → pre-clean → clean → post-clean → collect) as a plan the
+//!   optimizer can fuse and the executor can run in a single pass.
 
 use super::stages::*;
-use super::Pipeline;
+use super::{Pipeline, Transformer};
+use crate::plan::LogicalPlan;
+use std::path::PathBuf;
+use std::sync::Arc;
 
-/// Abstract-cleaning workflow (Fig. 2): the abstract is the model
+/// Abstract-cleaning stages (Fig. 2): the abstract is the model
 /// *feature*, so it gets the full treatment —
 /// lower → HTML → unwanted chars → stopwords → short words(threshold=1).
+pub fn abstract_stages(col: &str) -> Vec<Arc<dyn Transformer>> {
+    vec![
+        Arc::new(ConvertToLower::new(col)),
+        Arc::new(RemoveHtmlTags::new(col)),
+        Arc::new(RemoveUnwantedCharacters::new(col)),
+        Arc::new(StopWordsRemoverStr::new(col)),
+        Arc::new(RemoveShortWords::new(col, 1)),
+    ]
+}
+
+/// Title-cleaning stages (Fig. 3): the title is the model *target*, so
+/// stopwords and short words are kept — lower → HTML → unwanted chars.
+pub fn title_stages(col: &str) -> Vec<Arc<dyn Transformer>> {
+    vec![
+        Arc::new(ConvertToLower::new(col)),
+        Arc::new(RemoveHtmlTags::new(col)),
+        Arc::new(RemoveUnwantedCharacters::new(col)),
+    ]
+}
+
+/// Combined case-study stage list over a (title, abstract) frame: title
+/// stages then abstract stages.
+pub fn case_study_stages(title_col: &str, abstract_col: &str) -> Vec<Arc<dyn Transformer>> {
+    let mut stages = title_stages(title_col);
+    stages.extend(abstract_stages(abstract_col));
+    stages
+}
+
+fn from_stages(stages: Vec<Arc<dyn Transformer>>) -> Pipeline {
+    stages.into_iter().fold(Pipeline::new(), Pipeline::stage_arc)
+}
+
+/// Abstract-cleaning workflow (Fig. 2) as an eager pipeline.
 pub fn abstract_pipeline(col: &str) -> Pipeline {
-    Pipeline::new()
-        .stage(ConvertToLower::new(col))
-        .stage(RemoveHtmlTags::new(col))
-        .stage(RemoveUnwantedCharacters::new(col))
-        .stage(StopWordsRemoverStr::new(col))
-        .stage(RemoveShortWords::new(col, 1))
+    from_stages(abstract_stages(col))
 }
 
-/// Title-cleaning workflow (Fig. 3): the title is the model *target*, so
-/// stopwords and short words are kept —
-/// lower → HTML → unwanted chars.
+/// Title-cleaning workflow (Fig. 3) as an eager pipeline.
 pub fn title_pipeline(col: &str) -> Pipeline {
-    Pipeline::new()
-        .stage(ConvertToLower::new(col))
-        .stage(RemoveHtmlTags::new(col))
-        .stage(RemoveUnwantedCharacters::new(col))
+    from_stages(title_stages(col))
 }
 
-/// Combined case-study pipeline over a (title, abstract) frame: title
-/// stages then abstract stages, one fused parallel pass.
+/// Combined case-study pipeline: title stages then abstract stages, one
+/// fused parallel pass.
 pub fn case_study_pipeline(title_col: &str, abstract_col: &str) -> Pipeline {
-    Pipeline::new()
-        .stage(ConvertToLower::new(title_col))
-        .stage(RemoveHtmlTags::new(title_col))
-        .stage(RemoveUnwantedCharacters::new(title_col))
-        .stage(ConvertToLower::new(abstract_col))
-        .stage(RemoveHtmlTags::new(abstract_col))
-        .stage(RemoveUnwantedCharacters::new(abstract_col))
-        .stage(StopWordsRemoverStr::new(abstract_col))
-        .stage(RemoveShortWords::new(abstract_col, 1))
+    from_stages(case_study_stages(title_col, abstract_col))
+}
+
+/// The paper's Algorithm 1 (P3SAPP) as a lazy logical plan:
+/// scan → null-drop + dedup on the raw columns (steps 9–10) → the
+/// cleaning stages (11–14) → empty-string sweep (15–16) → collect.
+///
+/// Run through [`LogicalPlan::optimize`] the cleaning stages collapse to
+/// one `FusedStringStage` per column and the whole plan executes as a
+/// single parallel pass per shard file (see [`crate::plan`]).
+pub fn case_study_plan(files: &[PathBuf], title_col: &str, abstract_col: &str) -> LogicalPlan {
+    let cols = [title_col, abstract_col];
+    LogicalPlan::scan(files.to_vec(), &cols)
+        .drop_nulls(&cols)
+        .distinct(&cols)
+        .transforms(case_study_stages(title_col, abstract_col))
+        .drop_empty(&cols)
+        .collect()
 }
 
 #[cfg(test)]
@@ -79,5 +122,15 @@ mod tests {
     fn title_pipeline_stage_count_matches_fig3() {
         assert_eq!(title_pipeline("t").stages().len(), 3);
         assert_eq!(abstract_pipeline("a").stages().len(), 5);
+    }
+
+    #[test]
+    fn case_study_plan_has_paper_shape() {
+        let plan = case_study_plan(&[], "title", "abstract");
+        // Ingest + DropNulls + Distinct + 8 transforms + DropEmpty + Collect.
+        assert_eq!(plan.ops().len(), 13);
+        let rendered = plan.render();
+        assert!(rendered.starts_with("Ingest"), "{rendered}");
+        assert!(rendered.trim_end().ends_with("Collect"), "{rendered}");
     }
 }

@@ -9,6 +9,54 @@ use super::Transformer;
 use crate::frame::{Column, DType};
 use crate::textutil;
 
+/// The per-row rewrite at the core of each fusable string stage.
+///
+/// `apply` writes `input` transformed into `out` (cleared first), using
+/// `scratch` as a reusable intermediate buffer. Because every kernel has
+/// this exact shape, the plan optimizer can chain any run of them
+/// through one ping-pong buffer pair and sweep the column **once**
+/// (`crate::plan::FusedStringStage`) instead of once per stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StringKernel {
+    /// `ConvertToLower` (§4.1.1).
+    Lower,
+    /// `RemoveHTMLTags` (§4.1.2).
+    StripHtml,
+    /// `RemoveUnwantedCharacters` (§4.1.3).
+    RemoveUnwanted,
+    /// `StopWordsRemoverStr` (§4.2.2 case-study variant).
+    RemoveStopwords,
+    /// `RemoveShortWords(threshold)` (§4.1.4).
+    RemoveShortWords(usize),
+}
+
+impl StringKernel {
+    /// Rewrite one row. All kernels clear `out` before writing, so the
+    /// same buffer pair can be reused row after row and kernel after
+    /// kernel.
+    #[inline]
+    pub fn apply(&self, input: &str, scratch: &mut String, out: &mut String) {
+        match *self {
+            StringKernel::Lower => textutil::to_lowercase_into(input, out),
+            StringKernel::StripHtml => textutil::strip_html(input, out),
+            StringKernel::RemoveUnwanted => textutil::remove_unwanted(input, scratch, out),
+            StringKernel::RemoveStopwords => textutil::remove_stopwords(input, out),
+            StringKernel::RemoveShortWords(th) => textutil::remove_short_words(input, th, out),
+        }
+    }
+
+    /// Short label used by plan EXPLAIN output.
+    pub fn label(&self) -> String {
+        match *self {
+            StringKernel::Lower => "lower".into(),
+            StringKernel::StripHtml => "html".into(),
+            StringKernel::RemoveUnwanted => "chars".into(),
+            StringKernel::RemoveStopwords => "stopwords".into(),
+            StringKernel::RemoveShortWords(th) => format!("short-words(<={th})"),
+        }
+    }
+}
+
 /// Apply `f(input, scratch…) -> String` over a string column with two
 /// reusable scratch buffers, preserving nulls.
 fn map_str_column(input: &Column, mut f: impl FnMut(&str, &mut String, &mut String)) -> Column {
@@ -76,6 +124,9 @@ impl Transformer for ConvertToLower {
     fn output_dtype(&self, input: DType) -> DType {
         input
     }
+    fn string_kernel(&self) -> Option<StringKernel> {
+        Some(StringKernel::Lower)
+    }
     fn transform_column(&self, input: &Column) -> Column {
         map_str_column(input, |s, _scratch, out| textutil::to_lowercase_into(s, out))
     }
@@ -122,6 +173,9 @@ impl Transformer for RemoveHtmlTags {
     fn output_dtype(&self, input: DType) -> DType {
         input
     }
+    fn string_kernel(&self) -> Option<StringKernel> {
+        Some(StringKernel::StripHtml)
+    }
     fn transform_column(&self, input: &Column) -> Column {
         map_str_column(input, |s, _scratch, out| textutil::strip_html(s, out))
     }
@@ -154,6 +208,9 @@ impl Transformer for RemoveUnwantedCharacters {
     }
     fn output_dtype(&self, input: DType) -> DType {
         input
+    }
+    fn string_kernel(&self) -> Option<StringKernel> {
+        Some(StringKernel::RemoveUnwanted)
     }
     fn transform_column(&self, input: &Column) -> Column {
         map_str_column(input, |s, scratch, out| textutil::remove_unwanted(s, scratch, out))
@@ -188,6 +245,11 @@ impl Transformer for RemoveShortWords {
     }
     fn output_dtype(&self, input: DType) -> DType {
         input
+    }
+    fn string_kernel(&self) -> Option<StringKernel> {
+        // Only valid on `string` columns; the plan optimizer checks the
+        // column dtype before fusing (the token path is not fusable).
+        Some(StringKernel::RemoveShortWords(self.threshold))
     }
     fn transform_column(&self, input: &Column) -> Column {
         match input {
@@ -321,6 +383,9 @@ impl Transformer for StopWordsRemoverStr {
     fn output_dtype(&self, input: DType) -> DType {
         input
     }
+    fn string_kernel(&self) -> Option<StringKernel> {
+        Some(StringKernel::RemoveStopwords)
+    }
     fn transform_column(&self, input: &Column) -> Column {
         map_str_column(input, |s, _scratch, out| textutil::remove_stopwords(s, out))
     }
@@ -384,6 +449,35 @@ mod tests {
         let via_str = StopWordsRemoverStr::new("c").transform_column(&col(&[Some(text)]));
         let joined = via_tokens.get_tokens(0).unwrap().join(" ");
         assert_eq!(joined, via_str.get_str(0).unwrap());
+    }
+
+    #[test]
+    fn kernels_agree_with_their_stages() {
+        let input = col(&[Some("<b>It's the BEST (p<0.05) a result</b>")]);
+        let stages: Vec<Box<dyn Transformer>> = vec![
+            Box::new(ConvertToLower::new("c")),
+            Box::new(RemoveHtmlTags::new("c")),
+            Box::new(RemoveUnwantedCharacters::new("c")),
+            Box::new(StopWordsRemoverStr::new("c")),
+            Box::new(RemoveShortWords::new("c", 1)),
+        ];
+        let (mut scratch, mut out) = (String::new(), String::new());
+        for st in stages {
+            let k = st.string_kernel().expect("string stage has a kernel");
+            k.apply(input.get_str(0).unwrap(), &mut scratch, &mut out);
+            assert_eq!(
+                st.transform_column(&input).get_str(0),
+                Some(out.as_str()),
+                "kernel diverges from stage {}",
+                st.name()
+            );
+        }
+    }
+
+    #[test]
+    fn non_string_stages_have_no_kernel() {
+        assert!(Tokenizer::new("c", "w").string_kernel().is_none());
+        assert!(StopWordsRemover::new("w", "w").string_kernel().is_none());
     }
 
     #[test]

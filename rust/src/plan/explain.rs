@@ -1,0 +1,45 @@
+//! EXPLAIN rendering: the logical plan as written, the plan after
+//! optimization (showing what folded, hoisted and fused), and the
+//! physical single-pass program it lowers to. Consumed by the CLI
+//! `explain` command, `preprocess --explain`, and the report suite.
+
+use super::logical::LogicalPlan;
+use crate::Result;
+
+/// Render all three EXPLAIN sections for `plan`.
+pub fn explain(plan: &LogicalPlan, workers: usize) -> Result<String> {
+    let optimized = plan.clone().optimize();
+    let physical = optimized.lower()?;
+    Ok(format!(
+        "== Logical Plan ==\n{}\n== Optimized Logical Plan ==\n{}\n== Physical Plan ==\n{}",
+        plan.render(),
+        optimized.render(),
+        physical.render(workers)
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::presets::case_study_plan;
+
+    #[test]
+    fn explain_shows_fusion_happening() {
+        let plan = case_study_plan(&[], "title", "abstract");
+        let text = explain(&plan, 2).unwrap();
+        assert!(text.contains("== Logical Plan =="), "{text}");
+        assert!(text.contains("== Optimized Logical Plan =="), "{text}");
+        assert!(text.contains("== Physical Plan =="), "{text}");
+        // The raw plan lists the individual stages; the optimized one
+        // replaces them with fused sweeps.
+        assert!(text.contains("Transform ConvertToLower(title)"), "{text}");
+        assert!(text.contains("FusedStringStage(abstract <- lower|html|chars|stopwords"), "{text}");
+        assert!(text.contains("SinglePass"), "{text}");
+    }
+
+    #[test]
+    fn explain_fails_on_unexecutable_plans() {
+        let plan = LogicalPlan::scan(vec![], &["c"]); // no Collect
+        assert!(explain(&plan, 1).is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! `FusedStringStage` — the plan optimizer's whole-stage "codegen"
+//! analog. A run of N adjacent same-column string stages normally costs
+//! N full column traversals and N intermediate `String` materializations
+//! per row; fused, the kernel chain runs row-at-a-time through one
+//! ping-pong pair of scratch buffers, sweeping the partition **once**.
+
+use crate::frame::{Column, DType};
+use crate::pipeline::stages::StringKernel;
+use crate::pipeline::Transformer;
+
+/// A chain of [`StringKernel`]s fused into one transformer. Built by the
+/// optimizer ([`super::optimize`]); can also be constructed directly for
+/// ad-hoc pipelines and benches.
+pub struct FusedStringStage {
+    col: String,
+    kernels: Vec<StringKernel>,
+}
+
+impl FusedStringStage {
+    /// Fuse `kernels` (applied left to right) over column `col`.
+    ///
+    /// # Panics
+    /// If `kernels` is empty.
+    pub fn new(col: impl Into<String>, kernels: Vec<StringKernel>) -> Self {
+        assert!(!kernels.is_empty(), "FusedStringStage needs at least one kernel");
+        FusedStringStage { col: col.into(), kernels }
+    }
+
+    pub fn kernels(&self) -> &[StringKernel] {
+        &self.kernels
+    }
+
+    /// Run the whole kernel chain on one row. The result is left in `a`;
+    /// `b` and `scratch` are intermediates. All three buffers keep their
+    /// capacity across calls, so steady-state cost is zero allocations
+    /// per row beyond growth to the longest row seen.
+    fn run_chain(&self, input: &str, scratch: &mut String, a: &mut String, b: &mut String) {
+        self.kernels[0].apply(input, scratch, a);
+        let mut in_a = true;
+        for k in &self.kernels[1..] {
+            if in_a {
+                k.apply(a, scratch, b);
+            } else {
+                k.apply(b, scratch, a);
+            }
+            in_a = !in_a;
+        }
+        if !in_a {
+            std::mem::swap(a, b);
+        }
+    }
+}
+
+impl Transformer for FusedStringStage {
+    fn name(&self) -> &'static str {
+        "FusedStringStage"
+    }
+    fn input_col(&self) -> &str {
+        &self.col
+    }
+    fn output_col(&self) -> &str {
+        &self.col
+    }
+    fn output_dtype(&self, input: DType) -> DType {
+        input
+    }
+
+    fn transform_column(&self, input: &Column) -> Column {
+        match input {
+            Column::Str(src) => {
+                let mut rows: Vec<Option<String>> = Vec::with_capacity(src.len());
+                let (mut scratch, mut a, mut b) = (String::new(), String::new(), String::new());
+                for v in src {
+                    match v {
+                        None => rows.push(None),
+                        Some(s) => {
+                            self.run_chain(s, &mut scratch, &mut a, &mut b);
+                            rows.push(Some(std::mem::take(&mut a)));
+                        }
+                    }
+                }
+                Column::from_strs(rows)
+            }
+            other => other.clone(),
+        }
+    }
+
+    fn transform_column_owned(&self, mut input: Column) -> Column {
+        if let Column::Str(rows) = &mut input {
+            let (mut scratch, mut a, mut b) = (String::new(), String::new(), String::new());
+            for cell in rows.iter_mut() {
+                if let Some(s) = cell {
+                    self.run_chain(s, &mut scratch, &mut a, &mut b);
+                    // The old cell string becomes the next row's output
+                    // buffer — same zero-allocation swap trick the
+                    // individual stages use, once per row instead of
+                    // once per row *per stage*.
+                    std::mem::swap(s, &mut a);
+                }
+            }
+        }
+        input
+    }
+
+    fn describe(&self) -> String {
+        let chain: Vec<String> = self.kernels.iter().map(|k| k.label()).collect();
+        format!("FusedStringStage({} <- {})", self.col, chain.join("|"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::stages::{
+        ConvertToLower, RemoveHtmlTags, RemoveShortWords, RemoveUnwantedCharacters,
+        StopWordsRemoverStr,
+    };
+
+    fn col(vals: &[Option<&str>]) -> Column {
+        Column::from_strs(vals.iter().map(|v| v.map(String::from)).collect())
+    }
+
+    fn abstract_chain() -> FusedStringStage {
+        FusedStringStage::new(
+            "c",
+            vec![
+                StringKernel::Lower,
+                StringKernel::StripHtml,
+                StringKernel::RemoveUnwanted,
+                StringKernel::RemoveStopwords,
+                StringKernel::RemoveShortWords(1),
+            ],
+        )
+    }
+
+    fn staged_reference(input: &Column) -> Column {
+        let c = ConvertToLower::new("c").transform_column(input);
+        let c = RemoveHtmlTags::new("c").transform_column(&c);
+        let c = RemoveUnwantedCharacters::new("c").transform_column(&c);
+        let c = StopWordsRemoverStr::new("c").transform_column(&c);
+        RemoveShortWords::new("c", 1).transform_column(&c)
+    }
+
+    #[test]
+    fn fused_matches_staged_chain() {
+        let input = col(&[
+            Some("<b>The MODEL doesn't overfit (p < 0.05)</b> &amp; it's 12% better!"),
+            Some(""),
+            None,
+            Some("a bb The CCC"),
+        ]);
+        let fused = abstract_chain();
+        assert_eq!(fused.transform_column(&input), staged_reference(&input));
+        // Owned path must agree with the borrowing path.
+        assert_eq!(fused.transform_column_owned(input.clone()), staged_reference(&input));
+    }
+
+    #[test]
+    fn single_kernel_chain_matches_stage() {
+        let input = col(&[Some("AbC <i>X</i>")]);
+        let fused = FusedStringStage::new("c", vec![StringKernel::Lower]);
+        assert_eq!(
+            fused.transform_column(&input),
+            ConvertToLower::new("c").transform_column(&input)
+        );
+    }
+
+    #[test]
+    fn even_length_chain_lands_in_the_right_buffer() {
+        // Two kernels: result ends in buffer b and must be swapped back.
+        let input = col(&[Some("<i>The Answer</i>"), Some("X")]);
+        let fused =
+            FusedStringStage::new("c", vec![StringKernel::Lower, StringKernel::StripHtml]);
+        let c = ConvertToLower::new("c").transform_column(&input);
+        let expect = RemoveHtmlTags::new("c").transform_column(&c);
+        assert_eq!(fused.transform_column(&input), expect);
+    }
+
+    #[test]
+    fn nulls_propagate_and_describe_lists_kernels() {
+        let fused = abstract_chain();
+        assert!(fused.transform_column(&col(&[None])).is_null(0));
+        let d = fused.describe();
+        assert!(d.contains("FusedStringStage(c <- lower|html|chars|stopwords"), "{d}");
+    }
+}

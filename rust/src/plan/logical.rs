@@ -1,0 +1,185 @@
+//! The logical plan: a declarative description of a preprocessing job
+//! (what to ingest, which rows to keep, which rewrites to apply) with no
+//! commitment to *how* it runs. Built lazily with a fluent builder,
+//! optimized by [`super::optimize`], lowered and executed by
+//! [`super::physical`].
+
+use super::physical::{self, PhysicalPlan, PlanOutput};
+use crate::pipeline::Transformer;
+use crate::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// One node of the logical plan, in pipeline order.
+#[derive(Clone)]
+pub enum LogicalOp {
+    /// Parallel scan of JSON shard files, parsing only `fields`
+    /// (projection-pushdown ingestion, Algorithm 1 steps 2–8).
+    Ingest { files: Vec<PathBuf>, fields: Vec<String> },
+    /// Narrow the frame to `cols`. The optimizer folds this into
+    /// [`LogicalOp::Ingest`] so dropped fields are never even parsed.
+    Project { cols: Vec<String> },
+    /// Apply one transformer stage (steps 11–14).
+    Transform { stage: Arc<dyn Transformer> },
+    /// Drop rows with a null in any of `cols` (step 9).
+    DropNulls { cols: Vec<String> },
+    /// Drop duplicate rows keyed on `cols`, first occurrence wins
+    /// (step 10). Keys are hashed from the values *at this point* in the
+    /// plan — before the cleaning stages in the paper's ordering.
+    Distinct { cols: Vec<String> },
+    /// Null out empty strings in `cols`, then drop rows null in any of
+    /// them — the post-cleaning sweep (steps 15–16).
+    DropEmpty { cols: Vec<String> },
+    /// Gather every partition into a contiguous [`crate::frame::LocalFrame`]
+    /// (the Spark→pandas conversion, step 15).
+    Collect,
+}
+
+impl LogicalOp {
+    /// One-line rendering for EXPLAIN output.
+    pub fn label(&self) -> String {
+        match self {
+            LogicalOp::Ingest { files, fields } => {
+                format!("Ingest [{} files] project=[{}]", files.len(), fields.join(", "))
+            }
+            LogicalOp::Project { cols } => format!("Project [{}]", cols.join(", ")),
+            LogicalOp::Transform { stage } => format!("Transform {}", stage.describe()),
+            LogicalOp::DropNulls { cols } => format!("DropNulls [{}]", cols.join(", ")),
+            LogicalOp::Distinct { cols } => format!("Distinct [{}]", cols.join(", ")),
+            LogicalOp::DropEmpty { cols } => format!("DropEmpty [{}]", cols.join(", ")),
+            LogicalOp::Collect => "Collect".into(),
+        }
+    }
+}
+
+/// An ordered list of [`LogicalOp`]s — the lazy counterpart of the eager
+/// `ingest → transform → drop → collect` driver code it replaces.
+#[derive(Clone)]
+pub struct LogicalPlan {
+    pub(crate) ops: Vec<LogicalOp>,
+}
+
+impl LogicalPlan {
+    /// Start a plan with a file scan projecting `fields`.
+    pub fn scan(files: Vec<PathBuf>, fields: &[&str]) -> Self {
+        LogicalPlan {
+            ops: vec![LogicalOp::Ingest {
+                files,
+                fields: fields.iter().map(|s| s.to_string()).collect(),
+            }],
+        }
+    }
+
+    fn push(mut self, op: LogicalOp) -> Self {
+        self.ops.push(op);
+        self
+    }
+
+    /// Keep only `cols` (folded into the scan by the optimizer).
+    pub fn project(self, cols: &[&str]) -> Self {
+        self.push(LogicalOp::Project { cols: owned(cols) })
+    }
+
+    /// Append one transformer stage.
+    pub fn transform(self, stage: impl Transformer + 'static) -> Self {
+        self.transform_arc(Arc::new(stage))
+    }
+
+    /// Append an already-shared transformer stage.
+    pub fn transform_arc(self, stage: Arc<dyn Transformer>) -> Self {
+        self.push(LogicalOp::Transform { stage })
+    }
+
+    /// Append a whole stage list (preset reuse path).
+    pub fn transforms(mut self, stages: impl IntoIterator<Item = Arc<dyn Transformer>>) -> Self {
+        for stage in stages {
+            self.ops.push(LogicalOp::Transform { stage });
+        }
+        self
+    }
+
+    /// Drop rows null in any of `cols`.
+    pub fn drop_nulls(self, cols: &[&str]) -> Self {
+        self.push(LogicalOp::DropNulls { cols: owned(cols) })
+    }
+
+    /// Drop duplicate rows keyed on `cols` (first occurrence wins).
+    pub fn distinct(self, cols: &[&str]) -> Self {
+        self.push(LogicalOp::Distinct { cols: owned(cols) })
+    }
+
+    /// Empty-string → null sweep over `cols`, then drop those rows.
+    pub fn drop_empty(self, cols: &[&str]) -> Self {
+        self.push(LogicalOp::DropEmpty { cols: owned(cols) })
+    }
+
+    /// Finish the plan with the collect-to-LocalFrame step.
+    pub fn collect(self) -> Self {
+        self.push(LogicalOp::Collect)
+    }
+
+    pub fn ops(&self) -> &[LogicalOp] {
+        &self.ops
+    }
+
+    /// Run the optimizer: projection pushdown, null-drop pushdown, and
+    /// string-stage fusion (see [`super::optimize`]).
+    pub fn optimize(self) -> LogicalPlan {
+        super::optimize::optimize(self)
+    }
+
+    /// Lower to an executable [`PhysicalPlan`] (no data touched yet).
+    pub fn lower(&self) -> Result<PhysicalPlan> {
+        physical::lower(self)
+    }
+
+    /// Lower and execute with `workers` threads (0 = all cores).
+    pub fn execute(&self, workers: usize) -> Result<PlanOutput> {
+        self.lower()?.execute(workers)
+    }
+
+    /// Render the op list, one op per line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for op in &self.ops {
+            out.push_str(&op.label());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn owned(cols: &[&str]) -> Vec<String> {
+    cols.iter().map(|s| s.to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::stages::{ConvertToLower, Tokenizer};
+
+    #[test]
+    fn builder_orders_ops() {
+        let plan = LogicalPlan::scan(vec![], &["title", "abstract"])
+            .drop_nulls(&["title"])
+            .distinct(&["title", "abstract"])
+            .transform(ConvertToLower::new("title"))
+            .transform(Tokenizer::new("abstract", "words"))
+            .drop_empty(&["title"])
+            .collect();
+        let labels: Vec<String> = plan.ops().iter().map(|o| o.label()).collect();
+        assert_eq!(labels[0], "Ingest [0 files] project=[title, abstract]");
+        assert_eq!(labels[1], "DropNulls [title]");
+        assert_eq!(labels[2], "Distinct [title, abstract]");
+        assert_eq!(labels[3], "Transform ConvertToLower(title)");
+        assert_eq!(labels[4], "Transform Tokenizer(abstract -> words)");
+        assert_eq!(labels[5], "DropEmpty [title]");
+        assert_eq!(labels[6], "Collect");
+    }
+
+    #[test]
+    fn render_is_one_op_per_line() {
+        let plan = LogicalPlan::scan(vec![], &["c"]).collect();
+        assert_eq!(plan.render(), "Ingest [0 files] project=[c]\nCollect\n");
+    }
+}

@@ -1,0 +1,40 @@
+//! Fused execution plans — the Catalyst/Tungsten analog of this crate's
+//! Spark-like engine, and the layer [`crate::driver::run_p3sapp`] now
+//! executes through.
+//!
+//! A preprocessing job is described lazily as a [`LogicalPlan`]
+//! (Ingest → Project → Transform* → DropNulls → Distinct → DropEmpty →
+//! Collect), rewritten by the [`optimize`](LogicalPlan::optimize) rules
+//!
+//! 1. projection pushdown into ingestion,
+//! 2. null-drop pushdown ahead of cleaning, and
+//! 3. fusion of adjacent same-column string stages into one
+//!    [`FusedStringStage`],
+//!
+//! then lowered to a [`PhysicalPlan`] that runs everything — parse,
+//! null masks, pre-hashed dedup keys, fused cleaning sweeps, the
+//! empty-string sweep — inside **one** parallel pass per shard file.
+//! Only the ordered first-occurrence dedup merge and the final collect
+//! remain on the driver, eliminating the ingest/clean/dedup barriers of
+//! the eager path.
+//!
+//! ```no_run
+//! use p3sapp::pipeline::presets::case_study_plan;
+//!
+//! let files = p3sapp::ingest::list_shards(std::path::Path::new("/tmp/corpus")).unwrap();
+//! let plan = case_study_plan(&files, "title", "abstract").optimize();
+//! println!("{}", p3sapp::plan::explain(&plan, 4).unwrap());
+//! let out = plan.execute(4).unwrap();
+//! println!("{} clean rows in {:?}", out.rows_out, out.times.total());
+//! ```
+
+mod explain;
+mod fused;
+mod logical;
+mod optimize;
+mod physical;
+
+pub use explain::explain;
+pub use fused::FusedStringStage;
+pub use logical::{LogicalOp, LogicalPlan};
+pub use physical::{lower, PhysicalPlan, PlanOutput};

@@ -1,0 +1,241 @@
+//! Rule-based logical-plan optimizer — the Catalyst analog, sized to our
+//! three rules:
+//!
+//! 1. **Projection pushdown** — a `Project` directly after `Ingest`
+//!    narrows the scan's field list, so dropped fields are skipped at
+//!    JSON-lexer speed instead of parsed and thrown away.
+//! 2. **Null-drop pushdown** — `DropNulls` hoists ahead of any
+//!    null-preserving same-column string rewrite, so rows that are going
+//!    to be dropped are never cleaned.
+//! 3. **String-stage fusion** — adjacent same-column `string -> string`
+//!    stages collapse into one [`FusedStringStage`] whose kernel chain
+//!    sweeps the partition once (whole-stage codegen, scaled down).
+//!
+//! Rules run in that order; each is a pure `Vec<LogicalOp>` rewrite.
+
+use super::fused::FusedStringStage;
+use super::logical::{LogicalOp, LogicalPlan};
+use crate::frame::DType;
+use crate::pipeline::stages::StringKernel;
+use crate::pipeline::Transformer;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Apply all rules to `plan`.
+pub fn optimize(plan: LogicalPlan) -> LogicalPlan {
+    let ops = push_projection(plan.ops);
+    let ops = push_null_drop(ops);
+    let ops = fuse_string_stages(ops);
+    LogicalPlan { ops }
+}
+
+/// Rule 1: fold `Project` into a directly preceding `Ingest` when it
+/// only narrows the scan's field list.
+fn push_projection(ops: Vec<LogicalOp>) -> Vec<LogicalOp> {
+    let mut out: Vec<LogicalOp> = Vec::with_capacity(ops.len());
+    for op in ops {
+        if let LogicalOp::Project { cols } = &op {
+            if let Some(LogicalOp::Ingest { fields, .. }) = out.last_mut() {
+                if cols.iter().all(|c| fields.contains(c)) {
+                    *fields = cols.clone();
+                    continue;
+                }
+            }
+        }
+        out.push(op);
+    }
+    out
+}
+
+/// Rule 2: bubble every `DropNulls` leftwards over null-preserving
+/// same-column string rewrites (a stage with a [`StringKernel`] maps
+/// null -> null and never *creates* a null, so the filtered row set is
+/// identical on either side — but dropped rows skip the rewrite).
+fn push_null_drop(mut ops: Vec<LogicalOp>) -> Vec<LogicalOp> {
+    for i in 1..ops.len() {
+        if matches!(ops[i], LogicalOp::DropNulls { .. }) {
+            let mut j = i;
+            while j > 0 && hoistable(&ops[j - 1]) {
+                ops.swap(j - 1, j);
+                j -= 1;
+            }
+        }
+    }
+    ops
+}
+
+fn hoistable(op: &LogicalOp) -> bool {
+    match op {
+        LogicalOp::Transform { stage } => {
+            stage.string_kernel().is_some() && stage.input_col() == stage.output_col()
+        }
+        _ => false,
+    }
+}
+
+/// Rule 3: collapse runs of adjacent fusable stages on the same string
+/// column into one [`FusedStringStage`]. Column dtypes are tracked
+/// through the plan so a stage whose input has become `array<string>`
+/// (e.g. `RemoveShortWords` after a `Tokenizer`) is never fused.
+fn fuse_string_stages(ops: Vec<LogicalOp>) -> Vec<LogicalOp> {
+    let mut dtypes: HashMap<String, DType> = HashMap::new();
+    let mut out: Vec<LogicalOp> = Vec::with_capacity(ops.len());
+    let mut run: Vec<(Arc<dyn Transformer>, StringKernel)> = Vec::new();
+    let mut run_col: Option<String> = None;
+
+    fn flush(
+        out: &mut Vec<LogicalOp>,
+        run: &mut Vec<(Arc<dyn Transformer>, StringKernel)>,
+        run_col: &mut Option<String>,
+    ) {
+        let Some(col) = run_col.take() else { return };
+        if run.len() == 1 {
+            // A lone fusable stage gains nothing from fusion — emit the
+            // original stage so EXPLAIN keeps its real name.
+            let (stage, _) = run.pop().unwrap();
+            out.push(LogicalOp::Transform { stage });
+        } else if !run.is_empty() {
+            let kernels: Vec<StringKernel> = run.drain(..).map(|(_, k)| k).collect();
+            out.push(LogicalOp::Transform {
+                stage: Arc::new(FusedStringStage::new(col, kernels)),
+            });
+        }
+    }
+
+    for op in ops {
+        match op {
+            LogicalOp::Ingest { files, fields } => {
+                for f in &fields {
+                    dtypes.insert(f.clone(), DType::Str);
+                }
+                flush(&mut out, &mut run, &mut run_col);
+                out.push(LogicalOp::Ingest { files, fields });
+            }
+            LogicalOp::Transform { stage } => {
+                let in_dtype =
+                    dtypes.get(stage.input_col()).copied().unwrap_or(DType::Str);
+                let kernel = stage.string_kernel();
+                let fusable = kernel.is_some()
+                    && stage.input_col() == stage.output_col()
+                    && in_dtype == DType::Str;
+                if fusable {
+                    if run_col.as_deref() != Some(stage.input_col()) {
+                        flush(&mut out, &mut run, &mut run_col);
+                        run_col = Some(stage.input_col().to_string());
+                    }
+                    let k = kernel.unwrap();
+                    run.push((stage, k));
+                } else {
+                    flush(&mut out, &mut run, &mut run_col);
+                    dtypes.insert(
+                        stage.output_col().to_string(),
+                        stage.output_dtype(in_dtype),
+                    );
+                    out.push(LogicalOp::Transform { stage });
+                }
+            }
+            other => {
+                // Filters, dedup, project and collect are fusion
+                // barriers: a filter between two rewrites changes which
+                // rows the second rewrite sees.
+                flush(&mut out, &mut run, &mut run_col);
+                out.push(other);
+            }
+        }
+    }
+    flush(&mut out, &mut run, &mut run_col);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::presets::case_study_plan;
+    use crate::pipeline::stages::{ConvertToLower, RemoveHtmlTags, RemoveShortWords, Tokenizer};
+
+    fn transform_labels(plan: &LogicalPlan) -> Vec<String> {
+        plan.ops()
+            .iter()
+            .filter(|o| matches!(o, LogicalOp::Transform { .. }))
+            .map(|o| o.label())
+            .collect()
+    }
+
+    #[test]
+    fn projection_folds_into_ingest() {
+        let plan = LogicalPlan::scan(vec![], &["title", "abstract", "doi"])
+            .project(&["title", "abstract"])
+            .collect()
+            .optimize();
+        assert_eq!(plan.ops().len(), 2);
+        assert_eq!(plan.ops()[0].label(), "Ingest [0 files] project=[title, abstract]");
+    }
+
+    #[test]
+    fn null_drop_hoists_ahead_of_string_rewrites() {
+        let plan = LogicalPlan::scan(vec![], &["t"])
+            .transform(ConvertToLower::new("t"))
+            .transform(RemoveHtmlTags::new("t"))
+            .drop_nulls(&["t"])
+            .collect()
+            .optimize();
+        // DropNulls must now sit directly after Ingest, and the two
+        // rewrites must have fused behind it.
+        assert_eq!(plan.ops()[1].label(), "DropNulls [t]");
+        assert!(plan.ops()[2].label().contains("FusedStringStage"), "{}", plan.render());
+    }
+
+    #[test]
+    fn null_drop_does_not_cross_tokenizer() {
+        let plan = LogicalPlan::scan(vec![], &["t"])
+            .transform(Tokenizer::new("t", "w"))
+            .drop_nulls(&["w"])
+            .collect()
+            .optimize();
+        assert_eq!(plan.ops()[1].label(), "Transform Tokenizer(t -> w)");
+        assert_eq!(plan.ops()[2].label(), "DropNulls [w]");
+    }
+
+    #[test]
+    fn case_study_fuses_to_one_stage_per_column() {
+        let plan = case_study_plan(&[], "title", "abstract").optimize();
+        let transforms = transform_labels(&plan);
+        assert_eq!(transforms.len(), 2, "{}", plan.render());
+        assert!(transforms[0].contains("FusedStringStage(title <- lower|html|chars)"));
+        assert!(transforms[1]
+            .contains("FusedStringStage(abstract <- lower|html|chars|stopwords|short-words(<=1))"));
+        // 13 logical ops collapse to 7: Ingest, DropNulls, Distinct,
+        // 2 fused transforms, DropEmpty, Collect.
+        assert_eq!(plan.ops().len(), 7);
+    }
+
+    #[test]
+    fn short_words_after_tokenizer_is_not_fused() {
+        // On a token column the RemoveShortWords token path must be kept
+        // — dtype tracking forbids fusion even though a kernel exists.
+        let plan = LogicalPlan::scan(vec![], &["t"])
+            .transform(Tokenizer::new("t", "t"))
+            .transform(RemoveShortWords::new("t", 1))
+            .collect()
+            .optimize();
+        let transforms = transform_labels(&plan);
+        assert_eq!(transforms.len(), 2, "{}", plan.render());
+        assert!(transforms[1].contains("RemoveShortWords"));
+    }
+
+    #[test]
+    fn lone_fusable_stage_keeps_its_name() {
+        let plan = LogicalPlan::scan(vec![], &["t"])
+            .transform(ConvertToLower::new("t"))
+            .collect()
+            .optimize();
+        assert_eq!(plan.ops()[1].label(), "Transform ConvertToLower(t)");
+    }
+
+    #[test]
+    fn optimize_is_idempotent_on_the_case_study() {
+        let once = case_study_plan(&[], "title", "abstract").optimize();
+        let twice = once.clone().optimize();
+        assert_eq!(once.render(), twice.render());
+    }
+}

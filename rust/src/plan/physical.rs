@@ -1,0 +1,593 @@
+//! Physical execution: the whole lowered plan runs inside **one**
+//! parallel pass over the shard files. Each worker, per file:
+//! parse+project → null mask → 128-bit dedup keys → (fused) cleaning
+//! sweeps → empty-string sweep. The driver is left with the only
+//! inherently ordered work: the first-occurrence-wins dedup merge and
+//! the final extend into a contiguous [`LocalFrame`].
+//!
+//! This replaces the eager driver's four barrier-separated phases
+//! (ingest ‖ → pre-clean → clean ‖ → post-clean) with a single
+//! `map_items` over files — no thread pool ever drains while another
+//! stage waits to start, which is where the fused plan's wall-clock win
+//! comes from on top of the per-row fusion win.
+//!
+//! Stage-time accounting: the paper's tables want per-stage wall times,
+//! but a fused pass has no per-stage walls. Workers therefore record
+//! per-phase CPU spans, and the pass's wall time is attributed to the
+//! four stage keys proportionally; the driver-side dedup merge and
+//! collect are measured directly and added to pre-/post-cleaning.
+
+use super::logical::{LogicalOp, LogicalPlan};
+use crate::driver::{CLEANING, INGESTION, POST_CLEANING, PRE_CLEANING};
+use crate::engine::Executor;
+use crate::frame::{hash_row_wide, Field, LocalFrame, Partition, Schema};
+use crate::metrics::StageTimes;
+use crate::pipeline::Transformer;
+use crate::Result;
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One step of the per-partition single-pass program.
+#[derive(Clone)]
+enum PartitionOp {
+    /// Drop rows null in any of the columns (pre-cleaning).
+    NullFilter { idxs: Vec<usize> },
+    /// Compute 128-bit dedup keys over the columns *at this point* in
+    /// the program — i.e. over raw values when `Distinct` precedes the
+    /// cleaning stages, as in Algorithm 1.
+    HashKeys { idxs: Vec<usize> },
+    /// Apply one (possibly fused) transformer stage.
+    Stage { stage: Arc<dyn Transformer>, in_idx: usize, out_idx: usize },
+    /// Empty-string → null sweep + null filter (post-cleaning).
+    EmptyFilter { idxs: Vec<usize> },
+}
+
+/// A lowered, executable plan: the ingestion spec plus the straight-line
+/// per-partition program and the pre-computed output schema.
+pub struct PhysicalPlan {
+    files: Vec<PathBuf>,
+    fields: Vec<String>,
+    ops: Vec<PartitionOp>,
+    output_schema: Schema,
+}
+
+/// Lower a logical plan. Fails on shapes the single-pass executor cannot
+/// run: no leading `Ingest`, a `Project` that did not fold into the scan
+/// (run [`LogicalPlan::optimize`]), more than one `Distinct`, or a
+/// missing/misplaced `Collect`.
+pub fn lower(plan: &LogicalPlan) -> Result<PhysicalPlan> {
+    let mut it = plan.ops().iter();
+    let (files, mut fields) = match it.next() {
+        Some(LogicalOp::Ingest { files, fields }) => (files.clone(), fields.clone()),
+        _ => anyhow::bail!("plan must start with an Ingest op"),
+    };
+    let mut schema = strings_schema(&fields);
+    let mut ops: Vec<PartitionOp> = Vec::new();
+    let mut has_distinct = false;
+    let mut collected = false;
+    for op in it {
+        anyhow::ensure!(!collected, "Collect must be the final plan op");
+        match op {
+            LogicalOp::Ingest { .. } => anyhow::bail!("plan has more than one Ingest op"),
+            LogicalOp::Project { cols } => {
+                anyhow::ensure!(
+                    ops.is_empty(),
+                    "Project is only supported directly after Ingest (run optimize())"
+                );
+                for c in cols {
+                    anyhow::ensure!(fields.contains(c), "Project: unknown column '{c}'");
+                }
+                fields = cols.clone();
+                schema = strings_schema(&fields);
+            }
+            LogicalOp::DropNulls { cols } => {
+                ops.push(PartitionOp::NullFilter { idxs: resolve(&schema, cols)? });
+            }
+            LogicalOp::Distinct { cols } => {
+                anyhow::ensure!(!has_distinct, "at most one Distinct op is supported");
+                has_distinct = true;
+                ops.push(PartitionOp::HashKeys { idxs: resolve(&schema, cols)? });
+            }
+            LogicalOp::DropEmpty { cols } => {
+                ops.push(PartitionOp::EmptyFilter { idxs: resolve(&schema, cols)? });
+            }
+            LogicalOp::Transform { stage } => {
+                let in_idx = schema.index_of(stage.input_col()).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "stage {}: input column '{}' not found",
+                        stage.name(),
+                        stage.input_col()
+                    )
+                })?;
+                let in_dtype = schema.fields()[in_idx].dtype;
+                let out_dtype = stage.output_dtype(in_dtype);
+                let out_idx = match schema.index_of(stage.output_col()) {
+                    Some(i) => {
+                        schema = schema.with_dtype(stage.output_col(), out_dtype).unwrap();
+                        i
+                    }
+                    None => {
+                        let mut f = schema.fields().to_vec();
+                        f.push(Field::new(stage.output_col(), out_dtype));
+                        schema = Schema::new(f);
+                        schema.len() - 1
+                    }
+                };
+                ops.push(PartitionOp::Stage { stage: Arc::clone(stage), in_idx, out_idx });
+            }
+            LogicalOp::Collect => collected = true,
+        }
+    }
+    anyhow::ensure!(collected, "plan must end with a Collect op");
+    Ok(PhysicalPlan { files, fields, ops, output_schema: schema })
+}
+
+fn strings_schema(fields: &[String]) -> Schema {
+    Schema::strings(&fields.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+}
+
+fn resolve(schema: &Schema, cols: &[String]) -> Result<Vec<usize>> {
+    cols.iter()
+        .map(|c| {
+            schema
+                .index_of(c)
+                .ok_or_else(|| anyhow::anyhow!("no such column: {c}"))
+        })
+        .collect()
+}
+
+/// Per-worker time spent in each of the paper's stages during the pass.
+#[derive(Debug, Default, Clone, Copy)]
+struct Phases {
+    ingest: Duration,
+    pre: Duration,
+    clean: Duration,
+    post: Duration,
+}
+
+impl Phases {
+    fn total(&self) -> Duration {
+        self.ingest + self.pre + self.clean + self.post
+    }
+}
+
+/// What one worker hands back for one shard file.
+struct PartResult {
+    part: Partition,
+    /// Dedup keys aligned with `part` rows (present iff the plan has a
+    /// `Distinct`); masked along with the rows by later filters.
+    keys: Option<Vec<u128>>,
+    rows_ingested: usize,
+    nulls_dropped: usize,
+    empties_dropped: usize,
+    phases: Phases,
+}
+
+/// Result of executing a plan: the collected frame plus the stage-time
+/// and row accounting the drivers/reports consume.
+#[derive(Debug, Clone)]
+pub struct PlanOutput {
+    pub frame: LocalFrame,
+    pub times: StageTimes,
+    pub rows_ingested: usize,
+    pub rows_out: usize,
+    pub nulls_dropped: usize,
+    pub dups_dropped: usize,
+    pub empties_dropped: usize,
+}
+
+impl PhysicalPlan {
+    pub fn output_schema(&self) -> &Schema {
+        &self.output_schema
+    }
+
+    /// Execute with `workers` threads (0 = all cores).
+    pub fn execute(&self, workers: usize) -> Result<PlanOutput> {
+        let exec = Executor::new(workers);
+        let t_pass = Instant::now();
+        // The shard file is the unit of parallelism — unless files are
+        // scarcer than threads or one oversized shard would serialize
+        // the cleaning (the straggler problem `engine::rebalance` solved
+        // for the eager path). In those cases parse first, re-chunk the
+        // partitions to fill the pool, and run the op program over the
+        // chunks; output order (and therefore dedup and row order) is
+        // identical either way.
+        let mut extra_ingest = Duration::ZERO;
+        let results: Vec<PartResult> = if !self.needs_rechunk(exec.workers()) {
+            exec.map_items(self.files.clone(), |path| self.run_partition(&path))
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            let parsed: Vec<Result<(Partition, Duration)>> =
+                exec.map_items(self.files.clone(), |path| {
+                    let t0 = Instant::now();
+                    let part = crate::ingest::spark::read_shard(&path, &self.fields)?;
+                    Ok((part, t0.elapsed()))
+                });
+            let mut parts: Vec<Partition> = Vec::with_capacity(parsed.len());
+            for r in parsed {
+                let (part, span) = r?;
+                extra_ingest += span;
+                parts.push(part);
+            }
+            // Same chunk budget as the eager path's rebalance: about
+            // workers*4 chunks total, each file split by its own share.
+            let total_rows: usize = parts.iter().map(Partition::num_rows).sum();
+            let target_rows = (total_rows / (exec.workers() * 4)).max(1);
+            let mut chunks: Vec<Partition> = Vec::new();
+            for part in parts {
+                let pieces = part.num_rows().div_ceil(target_rows).max(1);
+                chunks.extend(part.split_rows(pieces));
+            }
+            exec.map_items(chunks, |part| self.run_ops(part, Duration::ZERO))
+        };
+        let pass_wall = t_pass.elapsed();
+
+        let mut phases = Phases::default();
+        let mut rows_ingested = 0usize;
+        let mut nulls_dropped = 0usize;
+        let mut empties_dropped = 0usize;
+        let mut parts: Vec<(Partition, Option<Vec<u128>>)> = Vec::with_capacity(results.len());
+        for r in results {
+            phases.ingest += r.phases.ingest;
+            phases.pre += r.phases.pre;
+            phases.clean += r.phases.clean;
+            phases.post += r.phases.post;
+            rows_ingested += r.rows_ingested;
+            nulls_dropped += r.nulls_dropped;
+            empties_dropped += r.empties_dropped;
+            parts.push((r.part, r.keys));
+        }
+        phases.ingest += extra_ingest;
+
+        // Attribute the pass wall time to the four stage keys in
+        // proportion to the summed per-worker phase spans.
+        let mut times = StageTimes::new();
+        let worker_total = phases.total().as_secs_f64();
+        let wall = pass_wall.as_secs_f64();
+        let share = |d: Duration| {
+            if worker_total > 0.0 {
+                Duration::from_secs_f64(wall * d.as_secs_f64() / worker_total)
+            } else {
+                Duration::ZERO
+            }
+        };
+        times.add(
+            INGESTION,
+            if worker_total > 0.0 { share(phases.ingest) } else { pass_wall },
+        );
+        times.add(PRE_CLEANING, share(phases.pre));
+        times.add(CLEANING, share(phases.clean));
+        times.add(POST_CLEANING, share(phases.post));
+
+        // Ordered driver merge: first-occurrence-wins dedup over the
+        // pre-hashed keys, then extend into the contiguous frame.
+        let mut local = LocalFrame::empty(self.output_schema.clone());
+        let mut seen: HashSet<u128> = HashSet::new();
+        let mut dups_dropped = 0usize;
+        let mut dedup_wall = Duration::ZERO;
+        let mut collect_wall = Duration::ZERO;
+        for (part, keys) in parts {
+            let part = match keys {
+                Some(keys) => {
+                    let t = Instant::now();
+                    debug_assert_eq!(keys.len(), part.num_rows());
+                    let mut mask = vec![true; keys.len()];
+                    let mut local_drop = 0usize;
+                    for (i, k) in keys.iter().enumerate() {
+                        if !seen.insert(*k) {
+                            mask[i] = false;
+                            local_drop += 1;
+                        }
+                    }
+                    dups_dropped += local_drop;
+                    let part =
+                        if local_drop > 0 { part.filter_by_mask(&mask) } else { part };
+                    dedup_wall += t.elapsed();
+                    part
+                }
+                None => part,
+            };
+            let t = Instant::now();
+            local.extend_from_partition(part);
+            collect_wall += t.elapsed();
+        }
+        times.add(PRE_CLEANING, dedup_wall);
+        times.add(POST_CLEANING, collect_wall);
+
+        let rows_out = local.num_rows();
+        Ok(PlanOutput {
+            frame: local,
+            times,
+            rows_ingested,
+            rows_out,
+            nulls_dropped,
+            dups_dropped,
+            empties_dropped,
+        })
+    }
+
+    /// File-granularity parallelism serializes when files are scarcer
+    /// than workers or when one shard dominates the byte count
+    /// (mirrors `engine::needs_rebalance`'s `max_share = 0.25` rule,
+    /// judged from file metadata so no parse is wasted). Unreadable
+    /// metadata defers to the single-pass path, where `read_shard`
+    /// reports the real error.
+    fn needs_rechunk(&self, workers: usize) -> bool {
+        if self.files.is_empty() || workers <= 1 {
+            return false;
+        }
+        if self.files.len() < workers {
+            return true;
+        }
+        let mut total = 0u64;
+        let mut max = 0u64;
+        for f in &self.files {
+            let Ok(meta) = std::fs::metadata(f) else { return false };
+            total += meta.len();
+            max = max.max(meta.len());
+        }
+        total > 0 && (max as f64) / (total as f64) > 0.25
+    }
+
+    /// The whole per-shard program, run by one worker: parse + op chain.
+    fn run_partition(&self, path: &Path) -> Result<PartResult> {
+        let t0 = Instant::now();
+        let part = crate::ingest::spark::read_shard(path, &self.fields)?;
+        Ok(self.run_ops(part, t0.elapsed()))
+    }
+
+    /// The op chain over one already-parsed partition (or chunk of one).
+    fn run_ops(&self, mut part: Partition, ingest_span: Duration) -> PartResult {
+        let mut phases = Phases { ingest: ingest_span, ..Default::default() };
+        let rows_ingested = part.num_rows();
+        let mut keys: Option<Vec<u128>> = None;
+        let mut nulls_dropped = 0usize;
+        let mut empties_dropped = 0usize;
+
+        for op in &self.ops {
+            match op {
+                PartitionOp::NullFilter { idxs } => {
+                    let t = Instant::now();
+                    let (mask, dropped) = crate::frame::null_mask(&part, idxs);
+                    if dropped > 0 {
+                        part = part.filter_by_mask(&mask);
+                        if let Some(k) = &mut keys {
+                            retain_by_mask(k, &mask);
+                        }
+                    }
+                    nulls_dropped += dropped;
+                    phases.pre += t.elapsed();
+                }
+                PartitionOp::HashKeys { idxs } => {
+                    let t = Instant::now();
+                    keys = Some(
+                        (0..part.num_rows()).map(|i| hash_row_wide(&part, idxs, i)).collect(),
+                    );
+                    phases.pre += t.elapsed();
+                }
+                PartitionOp::Stage { stage, in_idx, out_idx } => {
+                    let t = Instant::now();
+                    if in_idx == out_idx {
+                        let owned = part.take_column(*in_idx);
+                        part.replace_column(*out_idx, stage.transform_column_owned(owned));
+                    } else {
+                        let col = stage.transform_column(part.column(*in_idx));
+                        if *out_idx < part.num_columns() {
+                            part.replace_column(*out_idx, col);
+                        } else {
+                            let mut cols = part.into_columns();
+                            cols.push(col);
+                            part = Partition::new(cols);
+                        }
+                    }
+                    phases.clean += t.elapsed();
+                }
+                PartitionOp::EmptyFilter { idxs } => {
+                    let t = Instant::now();
+                    for &ci in idxs {
+                        part.column_mut(ci).nullify_empty_strs();
+                    }
+                    let (mask, dropped) = crate::frame::null_mask(&part, idxs);
+                    if dropped > 0 {
+                        part = part.filter_by_mask(&mask);
+                        if let Some(k) = &mut keys {
+                            retain_by_mask(k, &mask);
+                        }
+                    }
+                    empties_dropped += dropped;
+                    phases.post += t.elapsed();
+                }
+            }
+        }
+        PartResult { part, keys, rows_ingested, nulls_dropped, empties_dropped, phases }
+    }
+
+    /// Render the physical program (EXPLAIN's third section).
+    pub fn render(&self, workers: usize) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let name = |i: usize| self.output_schema.fields()[i].name.as_str();
+        let list =
+            |idxs: &[usize]| idxs.iter().map(|&i| name(i)).collect::<Vec<_>>().join(", ");
+        let _ = writeln!(
+            s,
+            "SinglePass [{} file-partitions, {} workers]",
+            self.files.len(),
+            Executor::new(workers).workers()
+        );
+        let _ = writeln!(s, "  parse+project [{}]", self.fields.join(", "));
+        let mut dedup = false;
+        for op in &self.ops {
+            match op {
+                PartitionOp::NullFilter { idxs } => {
+                    let _ = writeln!(s, "  null-filter [{}]", list(idxs));
+                }
+                PartitionOp::HashKeys { idxs } => {
+                    dedup = true;
+                    let _ = writeln!(s, "  hash-keys [{}] (128-bit)", list(idxs));
+                }
+                PartitionOp::Stage { stage, in_idx, out_idx } => {
+                    let mode = if in_idx == out_idx { "in-place sweep" } else { "append" };
+                    let _ = writeln!(s, "  {} ({mode})", stage.describe());
+                }
+                PartitionOp::EmptyFilter { idxs } => {
+                    let _ = writeln!(s, "  empty-filter [{}]", list(idxs));
+                }
+            }
+        }
+        if dedup {
+            let _ = writeln!(s, "Driver: ordered dedup merge (HashSet) -> collect(LocalFrame)");
+        } else {
+            let _ = writeln!(s, "Driver: collect(LocalFrame)");
+        }
+        s
+    }
+}
+
+fn retain_by_mask(keys: &mut Vec<u128>, mask: &[bool]) {
+    debug_assert_eq!(keys.len(), mask.len());
+    let mut i = 0;
+    keys.retain(|_| {
+        let keep = mask[i];
+        i += 1;
+        keep
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate_corpus, CorpusSpec};
+    use crate::ingest::list_shards;
+    use crate::pipeline::presets::case_study_plan;
+    use crate::pipeline::stages::Tokenizer;
+
+    fn corpus(name: &str) -> (PathBuf, Vec<PathBuf>) {
+        let dir = std::env::temp_dir().join(format!("p3sapp-plan-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        generate_corpus(&CorpusSpec::tiny(23), &dir).unwrap();
+        let files = list_shards(&dir).unwrap();
+        (dir, files)
+    }
+
+    #[test]
+    fn lower_rejects_malformed_plans() {
+        // No Ingest.
+        let bare = LogicalPlan { ops: vec![LogicalOp::Collect] };
+        assert!(lower(&bare).is_err());
+        // No Collect.
+        assert!(lower(&LogicalPlan::scan(vec![], &["c"])).is_err());
+        // Two Distincts.
+        let twice = LogicalPlan::scan(vec![], &["c"])
+            .distinct(&["c"])
+            .distinct(&["c"])
+            .collect();
+        assert!(lower(&twice).is_err());
+        // Unknown column.
+        let bad = LogicalPlan::scan(vec![], &["c"]).drop_nulls(&["nope"]).collect();
+        assert!(lower(&bad).is_err());
+    }
+
+    #[test]
+    fn lower_tracks_schema_through_transforms() {
+        let plan = LogicalPlan::scan(vec![], &["abstract"])
+            .transform(Tokenizer::new("abstract", "words"))
+            .collect();
+        let phys = lower(&plan).unwrap();
+        assert_eq!(phys.output_schema().field_names(), vec!["abstract", "words"]);
+    }
+
+    #[test]
+    fn execute_empty_file_list() {
+        let plan = case_study_plan(&[], "title", "abstract").optimize();
+        let out = plan.execute(2).unwrap();
+        assert_eq!(out.rows_ingested, 0);
+        assert_eq!(out.rows_out, 0);
+        assert_eq!(out.frame.num_rows(), 0);
+    }
+
+    #[test]
+    fn execute_records_all_four_stages_and_counts() {
+        let (dir, files) = corpus("stages");
+        let out = case_study_plan(&files, "title", "abstract")
+            .optimize()
+            .execute(2)
+            .unwrap();
+        assert!(out.rows_ingested > 0);
+        assert!(out.rows_out > 0);
+        assert_eq!(
+            out.rows_out,
+            out.rows_ingested - out.nulls_dropped - out.dups_dropped - out.empties_dropped
+        );
+        for key in [INGESTION, PRE_CLEANING, CLEANING, POST_CLEANING] {
+            assert!(out.times.secs(key) >= 0.0);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unoptimized_and_optimized_plans_agree() {
+        let (dir, files) = corpus("optagree");
+        let plan = case_study_plan(&files, "title", "abstract");
+        let staged = plan.execute(2).unwrap();
+        let fused = plan.clone().optimize().execute(2).unwrap();
+        assert_eq!(staged.frame, fused.frame);
+        assert_eq!(staged.dups_dropped, fused.dups_dropped);
+        assert_eq!(
+            staged.nulls_dropped + staged.empties_dropped,
+            fused.nulls_dropped + fused.empties_dropped
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn worker_count_does_not_change_plan_output() {
+        let (dir, files) = corpus("workers");
+        let plan = case_study_plan(&files, "title", "abstract").optimize();
+        let r1 = plan.execute(1).unwrap();
+        let r4 = plan.execute(4).unwrap();
+        // More workers than shard files exercises the re-chunking path.
+        let r16 = plan.execute(files.len() * 3).unwrap();
+        assert_eq!(r1.frame, r4.frame);
+        assert_eq!(r1.frame, r16.frame);
+        assert_eq!(r1.rows_ingested, r16.rows_ingested);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rechunk_triggers_on_scarce_or_skewed_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("p3sapp-plan-rechunk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut files = Vec::new();
+        for (name, bytes) in [("a", 10usize), ("b", 10), ("c", 10), ("d", 1000)] {
+            let path = dir.join(format!("{name}.json"));
+            std::fs::write(&path, "x".repeat(bytes)).unwrap();
+            files.push(path);
+        }
+        let phys = case_study_plan(&files, "title", "abstract").lower().unwrap();
+        assert!(phys.needs_rechunk(8), "fewer files than workers");
+        assert!(phys.needs_rechunk(4), "one shard holds >25% of the bytes");
+        assert!(!phys.needs_rechunk(1), "single worker has nothing to balance");
+        // Balanced files at matching worker count pass through.
+        let balanced: Vec<PathBuf> = files[..3].to_vec();
+        let phys = case_study_plan(&balanced, "title", "abstract").lower().unwrap();
+        assert!(!phys.needs_rechunk(3));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn render_mentions_single_pass_and_dedup() {
+        let plan = case_study_plan(&[], "title", "abstract").optimize();
+        let phys = plan.lower().unwrap();
+        let r = phys.render(2);
+        assert!(r.contains("SinglePass"), "{r}");
+        assert!(r.contains("hash-keys [title, abstract]"), "{r}");
+        assert!(r.contains("FusedStringStage"), "{r}");
+        assert!(r.contains("dedup merge"), "{r}");
+    }
+}

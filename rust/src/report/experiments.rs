@@ -22,6 +22,10 @@ pub struct SuiteOptions {
     /// Skip the (slow, superlinear) conventional approach — used by
     /// P3SAPP-only benches.
     pub skip_ca: bool,
+    /// Print the P3SAPP execution plan (logical → optimized → physical)
+    /// once per suite, so perf numbers in a report can be read next to
+    /// what was actually fused.
+    pub explain: bool,
 }
 
 impl SuiteOptions {
@@ -33,6 +37,7 @@ impl SuiteOptions {
             workers: 0,
             tiers: vec![1, 2, 3, 4, 5],
             skip_ca: false,
+            explain: false,
         }
     }
 }
@@ -81,6 +86,16 @@ pub fn run_tier(opts: &SuiteOptions, tier: usize) -> Result<TierResult> {
     let files = list_shards(&dir)?;
 
     let driver_opts = DriverOptions { workers: opts.workers, ..Default::default() };
+    if opts.explain {
+        // Print exactly the plan run_p3sapp is about to execute, built
+        // from the same files and column config.
+        let plan = crate::pipeline::presets::case_study_plan(
+            &files,
+            &driver_opts.title_col,
+            &driver_opts.abstract_col,
+        );
+        eprintln!("{}", crate::plan::explain(&plan, driver_opts.workers)?);
+    }
     let p3sapp = run_p3sapp(&files, &driver_opts)?;
     let ca = if opts.skip_ca { None } else { Some(run_ca(&files, &driver_opts)?) };
 
@@ -97,9 +112,13 @@ pub fn run_tier(opts: &SuiteOptions, tier: usize) -> Result<TierResult> {
 /// Run every requested tier.
 pub fn run_suite(opts: &SuiteOptions) -> Result<SuiteResult> {
     let mut tiers = Vec::with_capacity(opts.tiers.len());
+    // The plan only differs between tiers in its partition count, so
+    // one EXPLAIN (printed by the first tier) documents the suite.
+    let mut tier_opts = opts.clone();
     for &tier in &opts.tiers {
         eprintln!("[suite] tier {tier}: running ...");
-        let r = run_tier(opts, tier)?;
+        let r = run_tier(&tier_opts, tier)?;
+        tier_opts.explain = false;
         eprintln!(
             "[suite] tier {tier}: {:.1} MB, {} files, P3SAPP t_c {:.3}s{}",
             r.size_mb(),

@@ -114,7 +114,7 @@ fn pipelines_compose_with_tokenizer_downstream() {
 
     let dir = corpus("compose", &CorpusSpec::tiny(13));
     let frame = ingest_dir(&dir, &["title", "abstract"], 2).unwrap();
-    let (frame, _) = p3sapp::frame::drop_nulls(frame, &["title", "abstract"]).unwrap();
+    let (frame, _) = p3sapp::frame::drop_nulls_par(frame, &["title", "abstract"], 2).unwrap();
 
     let cleaned = abstract_pipeline("abstract")
         .fit(&frame)
@@ -145,7 +145,7 @@ fn pipelines_compose_with_tokenizer_downstream() {
 fn title_pipeline_preserves_stopwords_abstract_removes_them() {
     let dir = corpus("presets", &CorpusSpec::tiny(21));
     let frame = ingest_dir(&dir, &["title", "abstract"], 2).unwrap();
-    let (frame, _) = p3sapp::frame::drop_nulls(frame, &["title", "abstract"]).unwrap();
+    let (frame, _) = p3sapp::frame::drop_nulls_par(frame, &["title", "abstract"], 2).unwrap();
     let t = title_pipeline("title").fit(&frame).unwrap().transform(frame, 2).unwrap();
     let local = t.collect();
     // Generated titles contain connectives like "of"/"the" — the title
