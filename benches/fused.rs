@@ -1,5 +1,5 @@
 //! Staged vs fused execution of the full P3SAPP preprocessing job over a
-//! generated corpus — the plan layer's headline number. Three arms:
+//! generated corpus — the plan layer's headline number. Four arms:
 //!
 //!   1. staged     — the pre-plan driver shape: eager ingest, then
 //!                   null-drop, dedup, pipeline transform and collect as
@@ -8,18 +8,26 @@
 //!                   executor, *without* the optimizer (isolates the
 //!                   barrier-elimination win);
 //!   3. plan+fuse  — the optimized plan with `FusedStringStage`s
-//!                   (adds the one-sweep-per-column win).
+//!                   (adds the one-sweep-per-column win);
+//!   4. streaming  — the optimized plan on the streaming executor
+//!                   (parse of shard i+1 overlaps cleaning of shard i).
+//!
+//! Results are also recorded as machine-readable JSON (default
+//! `target/BENCH_streaming.json` so bench runs never dirty the checked-in
+//! `BENCH_streaming.json`; override with `BENCH_STREAMING_JSON=path`,
+//! disable with `BENCH_STREAMING_JSON=-`).
 //!
 //!     cargo bench --bench fused
 //!     BENCH_SCALE=4 BENCH_WORKERS=8 cargo bench --bench fused
 
-use p3sapp::benchkit::{bench, black_box, env_f64, env_usize};
+use p3sapp::benchkit::{bench, black_box, env_f64, env_usize, Measurement};
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
 use p3sapp::engine::rebalance;
 use p3sapp::frame::{distinct, drop_nulls};
 use p3sapp::ingest::list_shards;
 use p3sapp::ingest::spark::{ingest_files, IngestOptions};
 use p3sapp::pipeline::presets::{case_study_pipeline, case_study_plan};
+use p3sapp::plan::StreamOptions;
 use std::path::PathBuf;
 
 const COLS: [&str; 2] = ["title", "abstract"];
@@ -75,6 +83,15 @@ fn main() {
     });
     println!("  {}", m_fused.report());
 
+    // Cap cleaning workers at the shard count so the arm really streams
+    // (more workers than shards would delegate to the single pass).
+    let stream_opts =
+        StreamOptions { readers: 0, workers: workers.min(files.len()), queue_cap: 16 };
+    let m_stream = bench("plan streaming (parse overlaps clean)", 1, 5, || {
+        black_box(&fused_plan).execute_stream(&stream_opts).unwrap().rows_out
+    });
+    println!("  {}", m_stream.report());
+
     println!(
         "\n  barrier-elimination speedup (staged/plan):      {:.2}x",
         m_staged.mean_secs() / m_plan.mean_secs()
@@ -83,6 +100,66 @@ fn main() {
         "  total fused speedup (staged/plan+fuse):         {:.2}x",
         m_staged.mean_secs() / m_fused.mean_secs()
     );
+    println!(
+        "  streaming speedup (staged/streaming):           {:.2}x",
+        m_staged.mean_secs() / m_stream.mean_secs()
+    );
+    println!(
+        "  streaming vs single-pass (plan+fuse/streaming): {:.2}x",
+        m_fused.mean_secs() / m_stream.mean_secs()
+    );
+
+    let arms: [(&str, &Measurement); 4] = [
+        ("staged", &m_staged),
+        ("plan", &m_plan),
+        ("plan_fused", &m_fused),
+        ("streaming", &m_stream),
+    ];
+    // Record the resolved topology (readers: 0 is just the auto sentinel).
+    let (s_readers, s_workers, s_cap) = stream_opts.resolve(files.len());
+    let resolved = StreamOptions { readers: s_readers, workers: s_workers, queue_cap: s_cap };
+    write_json(&manifest, workers, &resolved, &arms);
 
     std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Record the run as JSON so CI (and BENCH_streaming.json in the repo)
+/// can track the streaming arm against the single-pass arms.
+fn write_json(
+    manifest: &p3sapp::corpus::CorpusManifest,
+    workers: usize,
+    stream_opts: &StreamOptions,
+    arms: &[(&str, &Measurement)],
+) {
+    let path = std::env::var("BENCH_STREAMING_JSON")
+        .unwrap_or_else(|_| "target/BENCH_streaming.json".into());
+    if path == "-" {
+        return;
+    }
+    let mut arms_json = String::new();
+    for (i, (name, m)) in arms.iter().enumerate() {
+        if i > 0 {
+            arms_json.push_str(",\n");
+        }
+        arms_json.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"mean_secs\": {:.6}, \"median_secs\": {:.6}, \"stddev_secs\": {:.6}, \"iters\": {}}}",
+            m.mean.as_secs_f64(),
+            m.median.as_secs_f64(),
+            m.stddev.as_secs_f64(),
+            m.iters
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"fused\",\n  \"records\": {},\n  \"files\": {},\n  \"bytes\": {},\n  \"workers\": {workers},\n  \"stream\": {{\"readers\": {}, \"workers\": {}, \"queue_cap\": {}}},\n  \"arms\": [\n{arms_json}\n  ]\n}}\n",
+        manifest.n_records,
+        manifest.n_files,
+        manifest.total_bytes,
+        stream_opts.readers,
+        stream_opts.workers,
+        stream_opts.queue_cap
+    );
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\n  wrote {path}"),
+        Err(e) => eprintln!("\n  could not write {path}: {e}"),
+    }
 }

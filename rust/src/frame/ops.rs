@@ -247,7 +247,7 @@ impl Fnv {
 }
 
 /// Stable 64-bit key hash (FNV-1a over a canonical encoding), matching
-/// [`hash_row`]'s encoding byte for byte. Callers that dedup on this
+/// the internal `hash_row`'s encoding byte for byte. Callers that dedup on this
 /// hash alone must tolerate collisions; [`distinct`] verifies colliding
 /// rows against the real key values instead.
 pub fn hash_key(key: &[Value]) -> u64 {

@@ -3,6 +3,20 @@
 //! channel. The bound provides backpressure — parse workers stall when
 //! the collector lags, capping peak memory at `queue_cap` partitions
 //! regardless of corpus size.
+//!
+//! This bounded producer/consumer shape is also the template for the
+//! plan layer's streaming executor ([`crate::plan::StreamExecutor`]),
+//! which puts the whole cleaning program behind the same kind of queue.
+//!
+//! ```
+//! use p3sapp::ingest::spark::{ingest_files, IngestOptions};
+//!
+//! // Four reader threads, at most two parsed-but-uncollected shards in
+//! // flight. An empty file list yields an empty frame immediately.
+//! let opts = IngestOptions { workers: 4, queue_cap: 2 };
+//! let frame = ingest_files(&[], &["title", "abstract"], &opts).unwrap();
+//! assert_eq!(frame.num_rows(), 0);
+//! ```
 
 use super::scanner::list_shards;
 use crate::frame::{Column, Frame, Partition, Schema};
@@ -114,9 +128,10 @@ pub fn ingest_files(files: &[PathBuf], fields: &[&str], opts: &IngestOptions) ->
 /// the selected fields are materialized, everything else is skipped at
 /// lexer speed — what Spark's JSON datasource does for a two-column
 /// select, and a mechanism pandas `read_json` (the CA path) lacks.
-/// Also the ingestion step of the plan executor's fused single pass
-/// (`crate::plan`), which parses, cleans and filters each shard inside
-/// one worker task.
+/// Also the ingestion step of both plan executors (`crate::plan`): the
+/// fused single pass parses, cleans and filters each shard inside one
+/// worker task; the streaming executor's reader stage calls this alone
+/// and hands the parsed partition to a separate cleaning pool.
 pub(crate) fn read_shard(path: &Path, fields: &[String]) -> Result<Partition> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;

@@ -7,8 +7,9 @@
 //! - **L3 (this crate)** — the coordination layer: a from-scratch
 //!   Spark-like engine (`frame`, `pipeline`, `engine`, `ingest`) topped
 //!   by a Catalyst/Tungsten-style plan layer (`plan`: lazy logical
-//!   plans, an optimizer that fuses adjacent string stages, and a
-//!   single-pass physical executor), the conventional sequential
+//!   plans, an optimizer that fuses adjacent string stages, a
+//!   single-pass physical executor, and a streaming executor that
+//!   overlaps shard parsing with cleaning), the conventional sequential
 //!   baseline (`baseline`), the PJRT runtime that drives the
 //!   AOT-compiled seq2seq model (`runtime`), and the analysis/reporting
 //!   layer regenerating every table and figure of the paper
@@ -21,6 +22,11 @@
 //!
 //! Python never runs at request time: `make artifacts` produces
 //! `artifacts/*.hlo.txt` once; the `repro` binary is self-contained.
+//!
+//! A guided tour of the plan layer — logical → optimized → physical →
+//! streaming, with a rendered EXPLAIN sample — lives in
+//! `docs/ARCHITECTURE.md` at the repository root; `README.md` covers
+//! the CLI, benches and report suite.
 //!
 //! ## Quickstart
 //!
@@ -41,6 +47,12 @@
 //! println!("{}", p3sapp::plan::explain(&plan, 4).unwrap()); // what fused
 //! let out = plan.execute(4).unwrap();
 //! println!("{} clean rows ({} dups dropped)", out.rows_out, out.dups_dropped);
+//!
+//! // Or stream it: shard parsing overlaps cleaning, same output bytes.
+//! let streamed = plan
+//!     .execute_stream(&p3sapp::plan::StreamOptions::default())
+//!     .unwrap();
+//! assert_eq!(streamed.rows_out, out.rows_out);
 //! ```
 //!
 //! The eager pipeline API remains for frames you already hold:

@@ -60,7 +60,14 @@ fn usage() {
          \x20 help\n\
          \n\
          common options:\n\
-         \x20 --config FILE   load a TOML config (defaults otherwise)\n"
+         \x20 --config FILE   load a TOML config (defaults otherwise)\n\
+         \x20 --stream        run P3SAPP through the streaming executor\n\
+         \x20                 (parse shard i+1 while cleaning shard i);\n\
+         \x20                 applies to preprocess/explain/compare/train/report\n\
+         \x20 --queue-cap N   streaming backpressure window in partitions\n\
+         \x20                 (implies --stream; default 16)\n\
+         \x20 --readers N     streaming parse threads (implies --stream;\n\
+         \x20                 default: a quarter of the cores)\n"
     );
 }
 
@@ -121,11 +128,25 @@ fn cmd_gen_corpus(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--stream` / `--queue-cap N` / `--readers N` → streaming executor
+/// options (the latter two imply `--stream`). `workers` is the resolved
+/// `--workers` value, reused as the streaming cleaning-pool size.
+fn stream_opts(args: &Args, workers: usize) -> Result<Option<p3sapp::plan::StreamOptions>> {
+    if !args.flag("stream") && args.get("queue-cap").is_none() && args.get("readers").is_none()
+    {
+        return Ok(None);
+    }
+    let defaults = p3sapp::plan::StreamOptions::default();
+    Ok(Some(p3sapp::plan::StreamOptions {
+        readers: args.get_usize("readers", defaults.readers)?,
+        workers,
+        queue_cap: args.get_usize("queue-cap", defaults.queue_cap)?,
+    }))
+}
+
 fn driver_opts(args: &Args, cfg: &AppConfig) -> Result<DriverOptions> {
-    Ok(DriverOptions {
-        workers: args.get_usize("workers", cfg.engine.workers)?,
-        ..Default::default()
-    })
+    let workers = args.get_usize("workers", cfg.engine.workers)?;
+    Ok(DriverOptions { workers, stream: stream_opts(args, workers)?, ..Default::default() })
 }
 
 /// Build the case-study plan for a corpus dir (what `run_p3sapp`
@@ -135,6 +156,12 @@ fn case_plan(files: &[PathBuf], opts: &DriverOptions) -> p3sapp::plan::LogicalPl
     p3sapp::pipeline::presets::case_study_plan(files, &opts.title_col, &opts.abstract_col)
 }
 
+/// EXPLAIN rendering matching the executor `opts` selects: streaming
+/// topology when `--stream` is on, the single-pass program otherwise.
+fn render_explain(files: &[PathBuf], opts: &DriverOptions) -> Result<String> {
+    p3sapp::plan::explain_with(&case_plan(files, opts), opts.workers, opts.stream.as_ref())
+}
+
 fn cmd_explain(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let dir = PathBuf::from(
@@ -142,7 +169,7 @@ fn cmd_explain(args: &Args) -> Result<()> {
     );
     let files = list_shards(&dir)?;
     let opts = driver_opts(args, &cfg)?;
-    print!("{}", p3sapp::plan::explain(&case_plan(&files, &opts), opts.workers)?);
+    print!("{}", render_explain(&files, &opts)?);
     Ok(())
 }
 
@@ -155,7 +182,7 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
     let opts = driver_opts(args, &cfg)?;
     let approach = args.get_or("approach", "p3sapp");
     if args.flag("explain") && approach == "p3sapp" {
-        print!("{}", p3sapp::plan::explain(&case_plan(&files, &opts), opts.workers)?);
+        print!("{}", render_explain(&files, &opts)?);
         println!();
     }
     let res = match approach {
@@ -339,6 +366,7 @@ fn cmd_report(args: &Args) -> Result<()> {
     opts.workers = args.get_usize("workers", cfg.engine.workers)?;
     opts.tiers = args.get_usize_list("tiers", &[1, 2, 3, 4, 5])?;
     opts.explain = args.flag("explain");
+    opts.stream = stream_opts(args, opts.workers)?;
     let csv = args.flag("csv");
 
     let needs_mtt = matches!(exp, "all" | "e5" | "e6");

@@ -4,9 +4,18 @@
 //! `explain` command, `preprocess --explain`, and the report suite.
 
 use super::logical::LogicalPlan;
+use super::stream::StreamOptions;
 use crate::Result;
 
 /// Render all three EXPLAIN sections for `plan`.
+///
+/// ```
+/// use p3sapp::pipeline::presets::case_study_plan;
+///
+/// let plan = case_study_plan(&[], "title", "abstract");
+/// let text = p3sapp::plan::explain(&plan, 2).unwrap();
+/// assert!(text.contains("== Optimized Logical Plan =="));
+/// ```
 pub fn explain(plan: &LogicalPlan, workers: usize) -> Result<String> {
     let optimized = plan.clone().optimize();
     let physical = optimized.lower()?;
@@ -15,6 +24,34 @@ pub fn explain(plan: &LogicalPlan, workers: usize) -> Result<String> {
         plan.render(),
         optimized.render(),
         physical.render(workers)
+    ))
+}
+
+/// Dispatch for callers holding an optional streaming config (the CLI's
+/// `--stream`, the report suite's `SuiteOptions::stream`):
+/// [`explain_stream`] when one is set, [`explain`] otherwise.
+pub fn explain_with(
+    plan: &LogicalPlan,
+    workers: usize,
+    stream: Option<&StreamOptions>,
+) -> Result<String> {
+    match stream {
+        Some(opts) => explain_stream(plan, opts),
+        None => explain(plan, workers),
+    }
+}
+
+/// Like [`explain`], but the physical section renders the streaming
+/// topology (reader count, queue bound, worker count) that
+/// [`LogicalPlan::execute_stream`] would run.
+pub fn explain_stream(plan: &LogicalPlan, opts: &StreamOptions) -> Result<String> {
+    let optimized = plan.clone().optimize();
+    let physical = optimized.lower()?;
+    Ok(format!(
+        "== Logical Plan ==\n{}\n== Optimized Logical Plan ==\n{}\n== Physical Plan (streaming) ==\n{}",
+        plan.render(),
+        optimized.render(),
+        physical.render_stream(opts)
     ))
 }
 
@@ -41,5 +78,18 @@ mod tests {
     fn explain_fails_on_unexecutable_plans() {
         let plan = LogicalPlan::scan(vec![], &["c"]); // no Collect
         assert!(explain(&plan, 1).is_err());
+        assert!(explain_stream(&plan, &StreamOptions::default()).is_err());
+    }
+
+    #[test]
+    fn explain_stream_renders_topology_section() {
+        let plan = case_study_plan(&[], "title", "abstract");
+        let opts = StreamOptions { readers: 2, workers: 3, queue_cap: 8 };
+        let text = explain_stream(&plan, &opts).unwrap();
+        assert!(text.contains("== Physical Plan (streaming) =="), "{text}");
+        assert!(text.contains("StreamPipeline"), "{text}");
+        assert!(text.contains("readers: 1 x parse+project"), "{text}"); // clamped: 0 files
+        assert!(text.contains("workers: 3 x op-program"), "{text}");
+        assert!(text.contains("FusedStringStage"), "{text}");
     }
 }

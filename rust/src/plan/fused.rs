@@ -9,8 +9,8 @@ use crate::pipeline::stages::StringKernel;
 use crate::pipeline::Transformer;
 
 /// A chain of [`StringKernel`]s fused into one transformer. Built by the
-/// optimizer ([`super::optimize`]); can also be constructed directly for
-/// ad-hoc pipelines and benches.
+/// optimizer (rule 3 of [`LogicalPlan::optimize`](super::LogicalPlan::optimize));
+/// can also be constructed directly for ad-hoc pipelines and benches.
 pub struct FusedStringStage {
     col: String,
     kernels: Vec<StringKernel>,

@@ -5,6 +5,7 @@
 //! [`super::physical`].
 
 use super::physical::{self, PhysicalPlan, PlanOutput};
+use super::stream::StreamOptions;
 use crate::pipeline::Transformer;
 use crate::Result;
 use std::path::PathBuf;
@@ -54,6 +55,21 @@ impl LogicalOp {
 
 /// An ordered list of [`LogicalOp`]s — the lazy counterpart of the eager
 /// `ingest → transform → drop → collect` driver code it replaces.
+///
+/// ```
+/// use p3sapp::plan::LogicalPlan;
+/// use p3sapp::pipeline::stages::ConvertToLower;
+///
+/// // Describe the job lazily (no files touched), then optimize,
+/// // lower and execute. An empty scan runs end to end instantly.
+/// let plan = LogicalPlan::scan(vec![], &["title"])
+///     .drop_nulls(&["title"])
+///     .transform(ConvertToLower::new("title"))
+///     .collect()
+///     .optimize();
+/// let out = plan.execute(2).unwrap();
+/// assert_eq!(out.rows_out, 0);
+/// ```
 #[derive(Clone)]
 pub struct LogicalPlan {
     pub(crate) ops: Vec<LogicalOp>,
@@ -123,7 +139,7 @@ impl LogicalPlan {
     }
 
     /// Run the optimizer: projection pushdown, null-drop pushdown, and
-    /// string-stage fusion (see [`super::optimize`]).
+    /// string-stage fusion (the `plan::optimize` rule set).
     pub fn optimize(self) -> LogicalPlan {
         super::optimize::optimize(self)
     }
@@ -136,6 +152,13 @@ impl LogicalPlan {
     /// Lower and execute with `workers` threads (0 = all cores).
     pub fn execute(&self, workers: usize) -> Result<PlanOutput> {
         self.lower()?.execute(workers)
+    }
+
+    /// Lower and execute through the streaming pipeline
+    /// ([`super::StreamExecutor`]): shard parsing overlaps cleaning.
+    /// Byte-identical output to [`LogicalPlan::execute`].
+    pub fn execute_stream(&self, opts: &StreamOptions) -> Result<PlanOutput> {
+        self.lower()?.execute_stream(opts)
     }
 
     /// Render the op list, one op per line.

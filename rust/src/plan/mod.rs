@@ -18,14 +18,31 @@
 //! remain on the driver, eliminating the ingest/clean/dedup barriers of
 //! the eager path.
 //!
+//! Two executors share that lowered program:
+//!
+//! - [`PhysicalPlan::execute`] — the fused single pass: each worker
+//!   parses *and* cleans one shard end to end;
+//! - [`PhysicalPlan::execute_stream`] — the streaming pipeline
+//!   ([`StreamExecutor`]): a bounded reader stage parses shards while a
+//!   worker pool cleans shards already parsed, so I/O and compute
+//!   overlap *within* the pass too.
+//!
+//! Both produce byte-identical output; `docs/ARCHITECTURE.md` at the
+//! repository root walks the whole layer with a rendered EXPLAIN sample.
+//!
 //! ```no_run
 //! use p3sapp::pipeline::presets::case_study_plan;
+//! use p3sapp::plan::StreamOptions;
 //!
 //! let files = p3sapp::ingest::list_shards(std::path::Path::new("/tmp/corpus")).unwrap();
 //! let plan = case_study_plan(&files, "title", "abstract").optimize();
 //! println!("{}", p3sapp::plan::explain(&plan, 4).unwrap());
 //! let out = plan.execute(4).unwrap();
 //! println!("{} clean rows in {:?}", out.rows_out, out.times.total());
+//!
+//! // Same job, streaming: parse shard i+1 while cleaning shard i.
+//! let streamed = plan.execute_stream(&StreamOptions::default()).unwrap();
+//! assert_eq!(streamed.rows_out, out.rows_out);
 //! ```
 
 mod explain;
@@ -33,8 +50,10 @@ mod fused;
 mod logical;
 mod optimize;
 mod physical;
+mod stream;
 
-pub use explain::explain;
+pub use explain::{explain, explain_stream, explain_with};
 pub use fused::FusedStringStage;
 pub use logical::{LogicalOp, LogicalPlan};
 pub use physical::{lower, PhysicalPlan, PlanOutput};
+pub use stream::{StreamExecutor, StreamOptions};

@@ -18,6 +18,7 @@
 //! collect are measured directly and added to pre-/post-cleaning.
 
 use super::logical::{LogicalOp, LogicalPlan};
+use super::stream::{StreamExecutor, StreamOptions};
 use crate::driver::{CLEANING, INGESTION, POST_CLEANING, PRE_CLEANING};
 use crate::engine::Executor;
 use crate::frame::{hash_row_wide, Field, LocalFrame, Partition, Schema};
@@ -57,6 +58,14 @@ pub struct PhysicalPlan {
 /// run: no leading `Ingest`, a `Project` that did not fold into the scan
 /// (run [`LogicalPlan::optimize`]), more than one `Distinct`, or a
 /// missing/misplaced `Collect`.
+///
+/// ```
+/// use p3sapp::plan::{lower, LogicalPlan};
+///
+/// let plan = LogicalPlan::scan(vec![], &["title"]).collect();
+/// let phys = lower(&plan).unwrap();
+/// assert_eq!(phys.output_schema().field_names(), vec!["title"]);
+/// ```
 pub fn lower(plan: &LogicalPlan) -> Result<PhysicalPlan> {
     let mut it = plan.ops().iter();
     let (files, mut fields) = match it.next() {
@@ -153,8 +162,10 @@ impl Phases {
     }
 }
 
-/// What one worker hands back for one shard file.
-struct PartResult {
+/// What one worker hands back for one shard file. Opaque outside the
+/// plan layer; the streaming executor moves these from its worker pool
+/// to the driver-side [`Merger`] without looking inside.
+pub(super) struct PartResult {
     part: Partition,
     /// Dedup keys aligned with `part` rows (present iff the plan has a
     /// `Distinct`); masked along with the rows by later filters.
@@ -178,9 +189,146 @@ pub struct PlanOutput {
     pub empties_dropped: usize,
 }
 
+/// Driver-side accumulator shared by the single-pass and streaming
+/// executors: counters, the first-occurrence-wins dedup merge over the
+/// pre-hashed keys, and the extend into one contiguous [`LocalFrame`].
+///
+/// Push order **is** output row order and decides which duplicate
+/// survives, so callers must push results in input shard order — the
+/// streaming executor re-sequences out-of-order arrivals before pushing.
+pub(super) struct Merger {
+    local: LocalFrame,
+    seen: HashSet<u128>,
+    phases: Phases,
+    rows_ingested: usize,
+    nulls_dropped: usize,
+    empties_dropped: usize,
+    dups_dropped: usize,
+    dedup_wall: Duration,
+    collect_wall: Duration,
+}
+
+impl Merger {
+    pub(super) fn new(schema: Schema) -> Merger {
+        Merger {
+            local: LocalFrame::empty(schema),
+            seen: HashSet::new(),
+            phases: Phases::default(),
+            rows_ingested: 0,
+            nulls_dropped: 0,
+            empties_dropped: 0,
+            dups_dropped: 0,
+            dedup_wall: Duration::ZERO,
+            collect_wall: Duration::ZERO,
+        }
+    }
+
+    /// Fold one shard's result in (must be called in shard order).
+    pub(super) fn push(&mut self, r: PartResult) {
+        let PartResult { part, keys, rows_ingested, nulls_dropped, empties_dropped, phases } = r;
+        self.phases.ingest += phases.ingest;
+        self.phases.pre += phases.pre;
+        self.phases.clean += phases.clean;
+        self.phases.post += phases.post;
+        self.rows_ingested += rows_ingested;
+        self.nulls_dropped += nulls_dropped;
+        self.empties_dropped += empties_dropped;
+        let part = match keys {
+            Some(keys) => {
+                let t = Instant::now();
+                debug_assert_eq!(keys.len(), part.num_rows());
+                let mut mask = vec![true; keys.len()];
+                let mut local_drop = 0usize;
+                for (i, k) in keys.iter().enumerate() {
+                    if !self.seen.insert(*k) {
+                        mask[i] = false;
+                        local_drop += 1;
+                    }
+                }
+                self.dups_dropped += local_drop;
+                let part = if local_drop > 0 { part.filter_by_mask(&mask) } else { part };
+                self.dedup_wall += t.elapsed();
+                part
+            }
+            None => part,
+        };
+        let t = Instant::now();
+        self.local.extend_from_partition(part);
+        self.collect_wall += t.elapsed();
+    }
+
+    /// Close the accumulation: attribute `pass_wall` to the four stage
+    /// keys in proportion to the summed per-worker phase spans, add the
+    /// directly-measured dedup/collect spans, and assemble the output.
+    /// `extra_ingest` carries parse time measured outside the op program
+    /// (the re-chunk path parses before chunking).
+    ///
+    /// This variant is for the single-pass executor, where the driver
+    /// merge runs *after* `pass_wall` was captured.
+    pub(super) fn finish(self, pass_wall: Duration, extra_ingest: Duration) -> PlanOutput {
+        self.finish_with(pass_wall, extra_ingest)
+    }
+
+    /// Streaming variant: the driver merge ran *inside* `pass_wall`
+    /// (concurrently with parsing and cleaning), so its directly-measured
+    /// spans are removed from the proportional base before attribution —
+    /// otherwise `times.total()` would exceed the real wall time by the
+    /// merge duration.
+    pub(super) fn finish_overlapped(self, pass_wall: Duration) -> PlanOutput {
+        let merge = self.dedup_wall + self.collect_wall;
+        self.finish_with(pass_wall.saturating_sub(merge), Duration::ZERO)
+    }
+
+    fn finish_with(self, pass_wall: Duration, extra_ingest: Duration) -> PlanOutput {
+        let mut phases = self.phases;
+        phases.ingest += extra_ingest;
+
+        let mut times = StageTimes::new();
+        let worker_total = phases.total().as_secs_f64();
+        let wall = pass_wall.as_secs_f64();
+        let share = |d: Duration| {
+            if worker_total > 0.0 {
+                Duration::from_secs_f64(wall * d.as_secs_f64() / worker_total)
+            } else {
+                Duration::ZERO
+            }
+        };
+        times.add(
+            INGESTION,
+            if worker_total > 0.0 { share(phases.ingest) } else { pass_wall },
+        );
+        times.add(PRE_CLEANING, share(phases.pre));
+        times.add(CLEANING, share(phases.clean));
+        times.add(POST_CLEANING, share(phases.post));
+        times.add(PRE_CLEANING, self.dedup_wall);
+        times.add(POST_CLEANING, self.collect_wall);
+
+        let rows_out = self.local.num_rows();
+        PlanOutput {
+            frame: self.local,
+            times,
+            rows_ingested: self.rows_ingested,
+            rows_out,
+            nulls_dropped: self.nulls_dropped,
+            dups_dropped: self.dups_dropped,
+            empties_dropped: self.empties_dropped,
+        }
+    }
+}
+
 impl PhysicalPlan {
     pub fn output_schema(&self) -> &Schema {
         &self.output_schema
+    }
+
+    /// The shard files this plan will scan, in output (shard) order.
+    pub(super) fn files(&self) -> &[PathBuf] {
+        &self.files
+    }
+
+    /// The projected field list the scan parses.
+    pub(super) fn fields(&self) -> &[String] {
+        &self.fields
     }
 
     /// Execute with `workers` threads (0 = all cores).
@@ -225,88 +373,19 @@ impl PhysicalPlan {
         };
         let pass_wall = t_pass.elapsed();
 
-        let mut phases = Phases::default();
-        let mut rows_ingested = 0usize;
-        let mut nulls_dropped = 0usize;
-        let mut empties_dropped = 0usize;
-        let mut parts: Vec<(Partition, Option<Vec<u128>>)> = Vec::with_capacity(results.len());
+        let mut merger = Merger::new(self.output_schema.clone());
         for r in results {
-            phases.ingest += r.phases.ingest;
-            phases.pre += r.phases.pre;
-            phases.clean += r.phases.clean;
-            phases.post += r.phases.post;
-            rows_ingested += r.rows_ingested;
-            nulls_dropped += r.nulls_dropped;
-            empties_dropped += r.empties_dropped;
-            parts.push((r.part, r.keys));
+            merger.push(r);
         }
-        phases.ingest += extra_ingest;
+        Ok(merger.finish(pass_wall, extra_ingest))
+    }
 
-        // Attribute the pass wall time to the four stage keys in
-        // proportion to the summed per-worker phase spans.
-        let mut times = StageTimes::new();
-        let worker_total = phases.total().as_secs_f64();
-        let wall = pass_wall.as_secs_f64();
-        let share = |d: Duration| {
-            if worker_total > 0.0 {
-                Duration::from_secs_f64(wall * d.as_secs_f64() / worker_total)
-            } else {
-                Duration::ZERO
-            }
-        };
-        times.add(
-            INGESTION,
-            if worker_total > 0.0 { share(phases.ingest) } else { pass_wall },
-        );
-        times.add(PRE_CLEANING, share(phases.pre));
-        times.add(CLEANING, share(phases.clean));
-        times.add(POST_CLEANING, share(phases.post));
-
-        // Ordered driver merge: first-occurrence-wins dedup over the
-        // pre-hashed keys, then extend into the contiguous frame.
-        let mut local = LocalFrame::empty(self.output_schema.clone());
-        let mut seen: HashSet<u128> = HashSet::new();
-        let mut dups_dropped = 0usize;
-        let mut dedup_wall = Duration::ZERO;
-        let mut collect_wall = Duration::ZERO;
-        for (part, keys) in parts {
-            let part = match keys {
-                Some(keys) => {
-                    let t = Instant::now();
-                    debug_assert_eq!(keys.len(), part.num_rows());
-                    let mut mask = vec![true; keys.len()];
-                    let mut local_drop = 0usize;
-                    for (i, k) in keys.iter().enumerate() {
-                        if !seen.insert(*k) {
-                            mask[i] = false;
-                            local_drop += 1;
-                        }
-                    }
-                    dups_dropped += local_drop;
-                    let part =
-                        if local_drop > 0 { part.filter_by_mask(&mask) } else { part };
-                    dedup_wall += t.elapsed();
-                    part
-                }
-                None => part,
-            };
-            let t = Instant::now();
-            local.extend_from_partition(part);
-            collect_wall += t.elapsed();
-        }
-        times.add(PRE_CLEANING, dedup_wall);
-        times.add(POST_CLEANING, collect_wall);
-
-        let rows_out = local.num_rows();
-        Ok(PlanOutput {
-            frame: local,
-            times,
-            rows_ingested,
-            rows_out,
-            nulls_dropped,
-            dups_dropped,
-            empties_dropped,
-        })
+    /// Execute through the two-stage streaming pipeline instead of the
+    /// fused single pass: a bounded reader stage parses shards while a
+    /// worker pool runs the op program on shards already parsed (see
+    /// [`StreamExecutor`]). Output is byte-identical to [`Self::execute`].
+    pub fn execute_stream(&self, opts: &StreamOptions) -> Result<PlanOutput> {
+        StreamExecutor::new(opts.clone()).execute(self)
     }
 
     /// File-granularity parallelism serializes when files are scarcer
@@ -340,7 +419,10 @@ impl PhysicalPlan {
     }
 
     /// The op chain over one already-parsed partition (or chunk of one).
-    fn run_ops(&self, mut part: Partition, ingest_span: Duration) -> PartResult {
+    /// `ingest_span` is the parse time to attribute to the ingestion
+    /// stage — measured by the caller when parsing happened elsewhere
+    /// (the streaming executor's reader stage, the re-chunk path).
+    pub(super) fn run_ops(&self, mut part: Partition, ingest_span: Duration) -> PartResult {
         let mut phases = Phases { ingest: ingest_span, ..Default::default() };
         let rows_ingested = part.num_rows();
         let mut keys: Option<Vec<u128>> = None;
@@ -405,13 +487,41 @@ impl PhysicalPlan {
         PartResult { part, keys, rows_ingested, nulls_dropped, empties_dropped, phases }
     }
 
+    /// One rendered line per op of the per-partition program, shared by
+    /// the single-pass and streaming EXPLAIN renderings.
+    fn op_lines(&self) -> Vec<String> {
+        let name = |i: usize| self.output_schema.fields()[i].name.as_str();
+        let list =
+            |idxs: &[usize]| idxs.iter().map(|&i| name(i)).collect::<Vec<_>>().join(", ");
+        let mut lines = Vec::with_capacity(self.ops.len());
+        for op in &self.ops {
+            match op {
+                PartitionOp::NullFilter { idxs } => {
+                    lines.push(format!("null-filter [{}]", list(idxs)));
+                }
+                PartitionOp::HashKeys { idxs } => {
+                    lines.push(format!("hash-keys [{}] (128-bit)", list(idxs)));
+                }
+                PartitionOp::Stage { stage, in_idx, out_idx } => {
+                    let mode = if in_idx == out_idx { "in-place sweep" } else { "append" };
+                    lines.push(format!("{} ({mode})", stage.describe()));
+                }
+                PartitionOp::EmptyFilter { idxs } => {
+                    lines.push(format!("empty-filter [{}]", list(idxs)));
+                }
+            }
+        }
+        lines
+    }
+
+    fn has_dedup(&self) -> bool {
+        self.ops.iter().any(|op| matches!(op, PartitionOp::HashKeys { .. }))
+    }
+
     /// Render the physical program (EXPLAIN's third section).
     pub fn render(&self, workers: usize) -> String {
         use std::fmt::Write;
         let mut s = String::new();
-        let name = |i: usize| self.output_schema.fields()[i].name.as_str();
-        let list =
-            |idxs: &[usize]| idxs.iter().map(|&i| name(i)).collect::<Vec<_>>().join(", ");
         let _ = writeln!(
             s,
             "SinglePass [{} file-partitions, {} workers]",
@@ -419,29 +529,51 @@ impl PhysicalPlan {
             Executor::new(workers).workers()
         );
         let _ = writeln!(s, "  parse+project [{}]", self.fields.join(", "));
-        let mut dedup = false;
-        for op in &self.ops {
-            match op {
-                PartitionOp::NullFilter { idxs } => {
-                    let _ = writeln!(s, "  null-filter [{}]", list(idxs));
-                }
-                PartitionOp::HashKeys { idxs } => {
-                    dedup = true;
-                    let _ = writeln!(s, "  hash-keys [{}] (128-bit)", list(idxs));
-                }
-                PartitionOp::Stage { stage, in_idx, out_idx } => {
-                    let mode = if in_idx == out_idx { "in-place sweep" } else { "append" };
-                    let _ = writeln!(s, "  {} ({mode})", stage.describe());
-                }
-                PartitionOp::EmptyFilter { idxs } => {
-                    let _ = writeln!(s, "  empty-filter [{}]", list(idxs));
-                }
-            }
+        for line in self.op_lines() {
+            let _ = writeln!(s, "  {line}");
         }
-        if dedup {
+        if self.has_dedup() {
             let _ = writeln!(s, "Driver: ordered dedup merge (HashSet) -> collect(LocalFrame)");
         } else {
             let _ = writeln!(s, "Driver: collect(LocalFrame)");
+        }
+        s
+    }
+
+    /// Render the streaming topology (EXPLAIN's third section when the
+    /// streaming executor is selected): reader count, queue bound and
+    /// worker count around the same per-partition op program. When the
+    /// executor would delegate to the single pass (fewer shards than
+    /// cleaning workers — see [`StreamExecutor`]), that is rendered
+    /// instead, so EXPLAIN always shows the schedule that actually runs.
+    pub fn render_stream(&self, opts: &StreamOptions) -> String {
+        use std::fmt::Write;
+        let (readers, workers, queue_cap) = opts.resolve(self.files.len());
+        if !self.files.is_empty() && self.files.len() < workers {
+            let mut s = String::new();
+            let _ = writeln!(
+                s,
+                "StreamPipeline fallback ({} file-partitions < {workers} workers) -> single pass:",
+                self.files.len()
+            );
+            s.push_str(&self.render(readers + workers));
+            return s;
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "StreamPipeline [{} file-partitions]", self.files.len());
+        let _ = writeln!(s, "  readers: {readers} x parse+project [{}]", self.fields.join(", "));
+        let _ = writeln!(s, "  queue:   bounded({queue_cap} partitions, backpressure)");
+        let _ = writeln!(s, "  workers: {workers} x op-program");
+        for line in self.op_lines() {
+            let _ = writeln!(s, "    {line}");
+        }
+        if self.has_dedup() {
+            let _ = writeln!(
+                s,
+                "Driver: streaming ordered dedup merge (reorder buffer) -> collect(LocalFrame)"
+            );
+        } else {
+            let _ = writeln!(s, "Driver: streaming ordered collect(LocalFrame)");
         }
         s
     }

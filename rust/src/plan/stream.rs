@@ -1,0 +1,416 @@
+//! Streaming plan execution: overlap shard **parsing** with shard
+//! **cleaning**.
+//!
+//! The fused single pass ([`PhysicalPlan::execute`]) already removed the
+//! barriers between the paper's stages, but it still runs parse and
+//! clean for one shard inside the same worker task — ingest and compute
+//! remain serialized *per shard*. This module splits them into a
+//! producer/consumer pipeline, the overlap the paper (and Spark's own
+//! ingestion) attributes its throughput to:
+//!
+//! ```text
+//! readers (I/O-bound)        bounded queue         workers (CPU-bound)
+//! parse shard i+1..i+k  -->  cap partitions  -->   op program on shard i
+//!                                                       |
+//!                                    driver: reorder buffer -> ordered
+//!                                    dedup merge -> collect(LocalFrame)
+//! ```
+//!
+//! The queue reuses the backpressure `sync_channel` pattern from
+//! [`crate::ingest::spark`]: readers stall when they get more than
+//! `queue_cap` partitions ahead of the workers, bounding how far
+//! *parsing* can run ahead of cleaning. Cleaned results, by contrast,
+//! are not memory-bounded: the driver drains its channel eagerly into a
+//! reorder buffer, so under extreme skew the cleaned shards waiting on
+//! one slow predecessor accumulate there — the same O(corpus) driver
+//! footprint the single pass has when it collects its result vector,
+//! and `ingest::spark`'s collector has for parsed partitions.
+//!
+//! **Ordering.** The ordered first-occurrence-wins dedup merge requires
+//! results in shard order, but workers finish out of order. The driver
+//! therefore holds a reorder buffer and only feeds the merger contiguous
+//! prefixes — a slow first shard can never be overtaken in output order,
+//! so the streaming path is byte-identical to the single-pass path (and
+//! to the staged reference; see `rust/tests/plan_equivalence.rs`).
+//!
+//! ```
+//! use p3sapp::pipeline::presets::case_study_plan;
+//! use p3sapp::plan::StreamOptions;
+//!
+//! // Empty scan: executes instantly, but exercises the whole topology.
+//! let plan = case_study_plan(&[], "title", "abstract").optimize();
+//! let opts = StreamOptions { readers: 2, workers: 2, queue_cap: 4 };
+//! let out = plan.execute_stream(&opts).unwrap();
+//! assert_eq!(out.rows_out, 0);
+//! ```
+
+use super::physical::{Merger, PartResult, PhysicalPlan, PlanOutput};
+use crate::frame::Partition;
+use crate::Result;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Tuning knobs for the streaming executor: the reader/worker split and
+/// the backpressure window between them.
+#[derive(Debug, Clone)]
+pub struct StreamOptions {
+    /// Parse/reader threads (0 = a quarter of the logical cores, at
+    /// least one). Readers are I/O-bound, so they need far fewer threads
+    /// than the cleaning workers.
+    pub readers: usize,
+    /// Cleaning worker threads (0 = remaining logical cores).
+    pub workers: usize,
+    /// Bounded-queue capacity in partitions, for both the parsed queue
+    /// and the cleaned queue (backpressure window; minimum 1).
+    pub queue_cap: usize,
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        StreamOptions { readers: 0, workers: 0, queue_cap: 16 }
+    }
+}
+
+impl StreamOptions {
+    /// Default split with an explicit backpressure window.
+    pub fn with_queue_cap(queue_cap: usize) -> Self {
+        StreamOptions { queue_cap, ..Default::default() }
+    }
+
+    /// Resolve the knobs against a concrete shard count, returning
+    /// `(readers, workers, queue_cap)`. Zero values auto-size from the
+    /// logical core count; readers are clamped to the shard count so no
+    /// reader thread is spawned with nothing to parse.
+    pub fn resolve(&self, n_files: usize) -> (usize, usize, usize) {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        let readers = if self.readers == 0 { (cores / 4).max(1) } else { self.readers };
+        let readers = readers.min(n_files.max(1));
+        let workers = if self.workers == 0 {
+            cores.saturating_sub(readers).max(1)
+        } else {
+            self.workers
+        };
+        (readers, workers, self.queue_cap.max(1))
+    }
+}
+
+/// Two-stage streaming executor over a lowered [`PhysicalPlan`]: a
+/// bounded parse/producer stage feeding a consumer pool that runs the
+/// per-partition op program (null mask → dedup keys → fused cleaning →
+/// empty sweep) while later shards are still parsing.
+///
+/// Construction is cheap — the executor is just its options; threads
+/// live only for the duration of one [`StreamExecutor::execute`] call.
+pub struct StreamExecutor {
+    opts: StreamOptions,
+}
+
+impl StreamExecutor {
+    pub fn new(opts: StreamOptions) -> Self {
+        StreamExecutor { opts }
+    }
+
+    pub fn options(&self) -> &StreamOptions {
+        &self.opts
+    }
+
+    /// Run `plan` through the streaming pipeline. Output (frame bytes,
+    /// row order, drop accounting) is identical to
+    /// [`PhysicalPlan::execute`]; only the schedule differs.
+    pub fn execute(&self, plan: &PhysicalPlan) -> Result<PlanOutput> {
+        let t_pass = Instant::now();
+        let files: Vec<PathBuf> = plan.files().to_vec();
+        let n = files.len();
+        if n == 0 {
+            return Ok(Merger::new(plan.output_schema().clone())
+                .finish_overlapped(t_pass.elapsed()));
+        }
+        let (readers, workers, queue_cap) = self.opts.resolve(n);
+
+        // The shard file is this pipeline's unit of work, so with fewer
+        // shards than cleaning workers most of the pool would sit idle.
+        // The single-pass executor re-chunks parsed partitions to fill
+        // its pool in exactly this case — delegate to it (same bytes
+        // out, better schedule) with the full thread budget.
+        if n < workers {
+            return plan.execute(readers + workers);
+        }
+
+        // Reader work queue, indexed so the driver can restore shard
+        // order after out-of-order completion.
+        let jobs: Mutex<VecDeque<(usize, PathBuf)>> =
+            Mutex::new(files.into_iter().enumerate().collect());
+        // Set when the driver hits a terminal error: readers skip the
+        // remaining shards instead of parsing work nobody will merge.
+        let abort = AtomicBool::new(false);
+
+        // Stage 1 -> stage 2: parsed partitions (with their parse span),
+        // bounded for backpressure — this is the knob that keeps parsing
+        // from racing arbitrarily far ahead of cleaning.
+        let (parsed_tx, parsed_rx) =
+            sync_channel::<(usize, Result<(Partition, Duration)>)>(queue_cap);
+        let parsed_rx = Mutex::new(parsed_rx);
+        // Stage 2 -> driver: cleaned shard results. Bounded only to keep
+        // the handoff allocation small — the driver drains it eagerly
+        // into the reorder buffer, so this cap is not a memory bound.
+        let (done_tx, done_rx) = sync_channel::<(usize, Result<PartResult>)>(queue_cap);
+
+        std::thread::scope(|scope| -> Result<PlanOutput> {
+            for _ in 0..readers {
+                let jobs = &jobs;
+                let abort = &abort;
+                let parsed_tx = parsed_tx.clone();
+                let fields = plan.fields();
+                scope.spawn(move || loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let job = jobs.lock().unwrap().pop_front();
+                    let Some((idx, path)) = job else { break };
+                    let t0 = Instant::now();
+                    let parsed = crate::ingest::spark::read_shard(&path, fields)
+                        .map(|part| (part, t0.elapsed()));
+                    if parsed_tx.send((idx, parsed)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(parsed_tx); // workers see EOF once all readers finish
+
+            for _ in 0..workers {
+                let parsed_rx = &parsed_rx;
+                let abort = &abort;
+                let done_tx = done_tx.clone();
+                scope.spawn(move || {
+                    // After the driver bails, keep draining the parsed
+                    // queue (without cleaning) so blocked readers can
+                    // finish their in-flight send and exit.
+                    let mut sink = false;
+                    loop {
+                        let msg = parsed_rx.lock().unwrap().recv();
+                        let Ok((idx, parsed)) = msg else { break };
+                        if sink {
+                            continue;
+                        }
+                        // Contain panics from transformer bugs: a worker
+                        // that unwound here would stop draining, leaving
+                        // readers blocked mid-send and the scope join
+                        // hung. Convert to an error the driver reports.
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || parsed.map(|(part, span)| plan.run_ops(part, span)),
+                        ))
+                        .unwrap_or_else(|_| {
+                            Err(anyhow::anyhow!("worker panicked while cleaning shard {idx}"))
+                        });
+                        if done_tx.send((idx, out)).is_err() {
+                            sink = true;
+                            abort.store(true, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+            drop(done_tx); // driver sees EOF once all workers finish
+
+            // Driver: re-sequence out-of-order completions, feed the
+            // ordered dedup merge with contiguous prefixes only. Runs
+            // concurrently with both pools — the merge of shard i
+            // overlaps the cleaning of i+1 and the parsing of i+2.
+            let mut merger = Merger::new(plan.output_schema().clone());
+            let mut pending: Vec<Option<PartResult>> = (0..n).map(|_| None).collect();
+            let mut next = 0usize;
+            for (idx, res) in done_rx {
+                pending[idx] = Some(res?);
+                while next < n {
+                    match pending[next].take() {
+                        Some(r) => {
+                            merger.push(r);
+                            next += 1;
+                        }
+                        None => break,
+                    }
+                }
+            }
+            anyhow::ensure!(next == n, "streaming execution incomplete: {next}/{n} shards");
+            Ok(merger.finish_overlapped(t_pass.elapsed()))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generate_corpus, CorpusSpec};
+    use crate::ingest::list_shards;
+    use crate::pipeline::presets::case_study_plan;
+
+    fn corpus(name: &str, seed: u64) -> (PathBuf, Vec<PathBuf>) {
+        let dir =
+            std::env::temp_dir().join(format!("p3sapp-stream-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        generate_corpus(&CorpusSpec::tiny(seed), &dir).unwrap();
+        let files = list_shards(&dir).unwrap();
+        (dir, files)
+    }
+
+    #[test]
+    fn resolve_clamps_and_auto_sizes() {
+        let auto = StreamOptions::default();
+        let (r, w, cap) = auto.resolve(100);
+        assert!(r >= 1 && w >= 1 && cap >= 1);
+        // Readers never exceed the shard count.
+        let (r, _, _) = StreamOptions { readers: 8, workers: 2, queue_cap: 4 }.resolve(3);
+        assert_eq!(r, 3);
+        // Explicit values pass through; a zero queue cap is bumped to 1.
+        let (r, w, cap) = StreamOptions { readers: 2, workers: 5, queue_cap: 0 }.resolve(10);
+        assert_eq!((r, w, cap), (2, 5, 1));
+    }
+
+    #[test]
+    fn empty_file_list_yields_empty_output() {
+        let plan = case_study_plan(&[], "title", "abstract").optimize();
+        let out = plan.execute_stream(&StreamOptions::default()).unwrap();
+        assert_eq!(out.rows_ingested, 0);
+        assert_eq!(out.rows_out, 0);
+        assert_eq!(out.frame.num_rows(), 0);
+    }
+
+    #[test]
+    fn streaming_matches_single_pass_output() {
+        let (dir, files) = corpus("match", 23);
+        let plan = case_study_plan(&files, "title", "abstract").optimize();
+        let single = plan.execute(2).unwrap();
+        for opts in [
+            StreamOptions::default(),
+            StreamOptions { readers: 1, workers: 1, queue_cap: 1 },
+            StreamOptions { readers: 3, workers: 2, queue_cap: 2 },
+            // More workers than shards: exercises the single-pass
+            // delegation, which must produce the same bytes too.
+            StreamOptions { readers: 2, workers: 32, queue_cap: 4 },
+        ] {
+            let streamed = plan.execute_stream(&opts).unwrap();
+            assert_eq!(streamed.frame, single.frame, "{opts:?}");
+            assert_eq!(streamed.rows_ingested, single.rows_ingested, "{opts:?}");
+            assert_eq!(streamed.rows_out, single.rows_out, "{opts:?}");
+            assert_eq!(streamed.nulls_dropped, single.nulls_dropped, "{opts:?}");
+            assert_eq!(streamed.dups_dropped, single.dups_dropped, "{opts:?}");
+            assert_eq!(streamed.empties_dropped, single.empties_dropped, "{opts:?}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn slow_first_shard_is_not_overtaken_in_output_order() {
+        // Shard 0 carries ~200x the rows of shards 1..5, so with
+        // several readers the small shards finish parsing and cleaning
+        // long before shard 0 — the reorder buffer must hold them back
+        // until shard 0's rows have been merged. JSON-lines layout,
+        // every row unique and non-null so nothing is dropped and row
+        // order is fully observable.
+        let dir =
+            std::env::temp_dir().join(format!("p3sapp-stream-order-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Letters-only payloads: the cleaning sweeps keep them verbatim
+        // (digits/punctuation would be stripped), so every row survives
+        // and the title column stays unique per (file, row).
+        fn word(mut x: usize) -> String {
+            let mut s = String::new();
+            loop {
+                s.push((b'a' + (x % 26) as u8) as char);
+                x /= 26;
+                if x == 0 {
+                    break;
+                }
+            }
+            s
+        }
+        let row = |f: usize, r: usize| {
+            let fid = (b'a' + f as u8) as char;
+            format!(
+                "{{\"title\": \"title {fid} {w}\", \"abstract\": \"zebra {fid} {w} quartz\"}}\n",
+                w = word(r)
+            )
+        };
+        let mut big = String::new();
+        for r in 0..2000 {
+            big.push_str(&row(0, r));
+        }
+        std::fs::write(dir.join("shard-a.json"), big).unwrap();
+        for f in 1..6 {
+            let fid = (b'a' + f as u8) as char;
+            let mut small = String::new();
+            for r in 0..10 {
+                small.push_str(&row(f, r));
+            }
+            std::fs::write(dir.join(format!("shard-{fid}.json")), small).unwrap();
+        }
+        let files = list_shards(&dir).unwrap();
+        let plan = case_study_plan(&files, "title", "abstract").optimize();
+        let reference = plan.execute(1).unwrap();
+        assert_eq!(reference.rows_out, 2000 + 5 * 10);
+        // The shard boundary is observable in the title column.
+        assert_ne!(
+            reference.frame.column(0).get_str(1999),
+            reference.frame.column(0).get_str(2000)
+        );
+        let opts = StreamOptions { readers: 4, workers: 2, queue_cap: 2 };
+        for _ in 0..3 {
+            let streamed = plan.execute_stream(&opts).unwrap();
+            assert_eq!(streamed.frame, reference.frame);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_shard_reports_error_and_terminates() {
+        let dir =
+            std::env::temp_dir().join(format!("p3sapp-stream-bad-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.json"), "{\"title\": \"ok\", \"abstract\": \"fine\"}\n")
+            .unwrap();
+        std::fs::write(dir.join("b.json"), "{not json").unwrap();
+        std::fs::write(dir.join("c.json"), "{\"title\": \"ok2\", \"abstract\": \"fine2\"}\n")
+            .unwrap();
+        let files = list_shards(&dir).unwrap();
+        let plan = case_study_plan(&files, "title", "abstract").optimize();
+        // queue_cap=1 with a mid-list failure exercises the drain path
+        // that keeps blocked readers from deadlocking the scope join.
+        let opts = StreamOptions { readers: 2, workers: 2, queue_cap: 1 };
+        let err = plan.execute_stream(&opts).unwrap_err();
+        assert!(err.to_string().contains("b.json"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn render_stream_shows_fallback_when_shards_are_scarce() {
+        let (dir, files) = corpus("fallback", 9);
+        let phys = case_study_plan(&files, "title", "abstract").optimize().lower().unwrap();
+        // 6 shard files, 32 workers: the executor would delegate to the
+        // single pass, and EXPLAIN must say so instead of rendering a
+        // topology that never runs.
+        let r = phys.render_stream(&StreamOptions { readers: 1, workers: 32, queue_cap: 4 });
+        assert!(r.contains("fallback"), "{r}");
+        assert!(r.contains("SinglePass"), "{r}");
+        assert!(!r.contains("reorder buffer"), "{r}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn render_stream_shows_topology() {
+        let (dir, files) = corpus("render", 5);
+        let phys = case_study_plan(&files, "title", "abstract").optimize().lower().unwrap();
+        let r = phys.render_stream(&StreamOptions { readers: 2, workers: 3, queue_cap: 8 });
+        assert!(r.contains("StreamPipeline"), "{r}");
+        assert!(r.contains("readers: 2 x parse+project [title, abstract]"), "{r}");
+        assert!(r.contains("bounded(8 partitions"), "{r}");
+        assert!(r.contains("workers: 3 x op-program"), "{r}");
+        assert!(r.contains("hash-keys [title, abstract] (128-bit)"), "{r}");
+        assert!(r.contains("reorder buffer"), "{r}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

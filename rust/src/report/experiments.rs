@@ -26,6 +26,10 @@ pub struct SuiteOptions {
     /// once per suite, so perf numbers in a report can be read next to
     /// what was actually fused.
     pub explain: bool,
+    /// When set, P3SAPP runs through the streaming executor (parse ‖
+    /// clean overlap) instead of the fused single pass; the EXPLAIN
+    /// output switches to the streaming topology accordingly.
+    pub stream: Option<crate::plan::StreamOptions>,
 }
 
 impl SuiteOptions {
@@ -38,6 +42,7 @@ impl SuiteOptions {
             tiers: vec![1, 2, 3, 4, 5],
             skip_ca: false,
             explain: false,
+            stream: None,
         }
     }
 }
@@ -85,16 +90,25 @@ pub fn run_tier(opts: &SuiteOptions, tier: usize) -> Result<TierResult> {
     let manifest = ensure_corpus(&spec, &dir)?;
     let files = list_shards(&dir)?;
 
-    let driver_opts = DriverOptions { workers: opts.workers, ..Default::default() };
+    let driver_opts = DriverOptions {
+        workers: opts.workers,
+        stream: opts.stream.clone(),
+        ..Default::default()
+    };
     if opts.explain {
         // Print exactly the plan run_p3sapp is about to execute, built
-        // from the same files and column config.
+        // from the same files, column config and executor choice.
         let plan = crate::pipeline::presets::case_study_plan(
             &files,
             &driver_opts.title_col,
             &driver_opts.abstract_col,
         );
-        eprintln!("{}", crate::plan::explain(&plan, driver_opts.workers)?);
+        let text = crate::plan::explain_with(
+            &plan,
+            driver_opts.workers,
+            driver_opts.stream.as_ref(),
+        )?;
+        eprintln!("{text}");
     }
     let p3sapp = run_p3sapp(&files, &driver_opts)?;
     let ca = if opts.skip_ca { None } else { Some(run_ca(&files, &driver_opts)?) };

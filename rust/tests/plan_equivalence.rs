@@ -8,6 +8,7 @@ use p3sapp::frame::{distinct, drop_nulls, LocalFrame};
 use p3sapp::ingest::list_shards;
 use p3sapp::ingest::spark::{ingest_files, IngestOptions};
 use p3sapp::pipeline::presets::{case_study_pipeline, case_study_plan};
+use p3sapp::plan::StreamOptions;
 use std::path::PathBuf;
 
 const COLS: [&str; 2] = ["title", "abstract"];
@@ -72,6 +73,60 @@ fn fused_plan_is_byte_identical_to_staged_reference() {
             "seed {seed}: dup+empty drops"
         );
         assert_eq!(out.rows_out, reference.frame.num_rows(), "seed {seed}: row count");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn streaming_plan_is_byte_identical_to_staged_and_fused_paths() {
+    // The streaming executor re-schedules the same per-shard program
+    // (parse overlaps clean), so its output must match both the staged
+    // reference and the fused single pass bit for bit — including with
+    // a fully serialized queue (queue_cap = 1) and across seeds.
+    for seed in [2, 77, 123] {
+        let mut spec = CorpusSpec::tiny(seed);
+        spec.dup_rate = 0.15;
+        spec.null_title_rate = 0.1;
+        spec.null_abstract_rate = 0.1;
+        let (dir, files) = corpus(&format!("stream{seed}"), &spec);
+
+        let reference = staged_reference(&files, 3);
+        let plan = case_study_plan(&files, "title", "abstract").optimize();
+        let fused = plan.execute(3).unwrap();
+
+        for opts in [
+            StreamOptions::default(),
+            StreamOptions { readers: 2, workers: 3, queue_cap: 1 },
+            StreamOptions { readers: 1, workers: 1, queue_cap: 2 },
+        ] {
+            let out = plan.execute_stream(&opts).unwrap();
+            assert_eq!(out.frame, reference.frame, "seed {seed} {opts:?}: vs staged");
+            assert_eq!(out.frame, fused.frame, "seed {seed} {opts:?}: vs fused");
+            assert_eq!(out.rows_out, fused.rows_out, "seed {seed} {opts:?}: rows");
+            assert_eq!(
+                out.rows_ingested, fused.rows_ingested,
+                "seed {seed} {opts:?}: ingested"
+            );
+            assert_eq!(
+                out.nulls_dropped, fused.nulls_dropped,
+                "seed {seed} {opts:?}: null drops"
+            );
+            assert_eq!(
+                out.dups_dropped, fused.dups_dropped,
+                "seed {seed} {opts:?}: dup drops"
+            );
+            assert_eq!(
+                out.empties_dropped, fused.empties_dropped,
+                "seed {seed} {opts:?}: empty drops"
+            );
+        }
+
+        // The unoptimized plan streams to the same bytes too.
+        let unfused_streamed = case_study_plan(&files, "title", "abstract")
+            .execute_stream(&StreamOptions { readers: 2, workers: 2, queue_cap: 1 })
+            .unwrap();
+        assert_eq!(unfused_streamed.frame, reference.frame, "seed {seed}: unfused stream");
+
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }
