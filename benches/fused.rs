@@ -12,15 +12,23 @@
 //!   4. streaming  — the optimized plan on the streaming executor
 //!                   (parse of shard i+1 overlaps cleaning of shard i).
 //!
-//! Results are also recorded as machine-readable JSON (default
-//! `target/BENCH_streaming.json` so bench runs never dirty the checked-in
-//! `BENCH_streaming.json`; override with `BENCH_STREAMING_JSON=path`,
-//! disable with `BENCH_STREAMING_JSON=-`).
+//! plus the plan-cache pair measuring what a repeated job costs:
+//!
+//!   5. cache cold — fingerprint + execute + store the artifact;
+//!   6. cache warm — fingerprint + restore from disk (memo disabled, so
+//!                   this is the honest second-process number).
+//!
+//! Results are also recorded as machine-readable JSON (defaults under
+//! `target/` so bench runs never dirty the checked-in schema records
+//! `BENCH_streaming.json` / `BENCH_cache.json` at the repo root;
+//! override with `BENCH_STREAMING_JSON=path` / `BENCH_CACHE_JSON=path`,
+//! disable with `=-`).
 //!
 //!     cargo bench --bench fused
 //!     BENCH_SCALE=4 BENCH_WORKERS=8 cargo bench --bench fused
 
 use p3sapp::benchkit::{bench, black_box, env_f64, env_usize, Measurement};
+use p3sapp::cache::{fingerprint, CacheConfig, CacheManager};
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
 use p3sapp::engine::rebalance;
 use p3sapp::frame::{distinct, drop_nulls};
@@ -109,6 +117,34 @@ fn main() {
         m_fused.mean_secs() / m_stream.mean_secs()
     );
 
+    // Plan-cache arms: what a *repeated* identical job costs. The memo
+    // tier is disabled so the warm arm measures a true disk restore —
+    // the second-process (`report` rerun, train-then-infer) number.
+    let cache = CacheManager::with_config(CacheConfig {
+        dir: dir.join("plan-cache"),
+        max_bytes: 0,
+        memory: false,
+        memory_max_bytes: 0,
+    })
+    .unwrap();
+    let m_cold = bench("cache cold (fingerprint + execute + store)", 1, 5, || {
+        cache.clear().unwrap();
+        let fp = fingerprint(&black_box(&fused_plan).render(), &files).unwrap();
+        let out = fused_plan.execute(workers).unwrap();
+        cache.put(&fp, &out).unwrap();
+        out.rows_out
+    });
+    println!("  {}", m_cold.report());
+    let m_warm = bench("cache warm (fingerprint + disk restore)", 1, 5, || {
+        let fp = fingerprint(&black_box(&fused_plan).render(), &files).unwrap();
+        cache.get(&fp).expect("warm artifact").rows_out
+    });
+    println!("  {}", m_warm.report());
+    println!(
+        "\n  cache restore speedup (cold/warm):              {:.2}x",
+        m_cold.mean_secs() / m_warm.mean_secs()
+    );
+
     let arms: [(&str, &Measurement); 4] = [
         ("staged", &m_staged),
         ("plan", &m_plan),
@@ -119,8 +155,28 @@ fn main() {
     let (s_readers, s_workers, s_cap) = stream_opts.resolve(files.len());
     let resolved = StreamOptions { readers: s_readers, workers: s_workers, queue_cap: s_cap };
     write_json(&manifest, workers, &resolved, &arms);
+    write_cache_json(&manifest, workers, &[("cache_cold", &m_cold), ("cache_warm", &m_warm)]);
 
     std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// One JSON object per arm — shared by both BENCH_*.json writers so the
+/// per-arm schema cannot silently diverge between the two files.
+fn arms_json(arms: &[(&str, &Measurement)]) -> String {
+    let mut out = String::new();
+    for (i, (name, m)) in arms.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"mean_secs\": {:.6}, \"median_secs\": {:.6}, \"stddev_secs\": {:.6}, \"iters\": {}}}",
+            m.mean.as_secs_f64(),
+            m.median.as_secs_f64(),
+            m.stddev.as_secs_f64(),
+            m.iters
+        ));
+    }
+    out
 }
 
 /// Record the run as JSON so CI (and BENCH_streaming.json in the repo)
@@ -136,19 +192,7 @@ fn write_json(
     if path == "-" {
         return;
     }
-    let mut arms_json = String::new();
-    for (i, (name, m)) in arms.iter().enumerate() {
-        if i > 0 {
-            arms_json.push_str(",\n");
-        }
-        arms_json.push_str(&format!(
-            "    {{\"name\": \"{name}\", \"mean_secs\": {:.6}, \"median_secs\": {:.6}, \"stddev_secs\": {:.6}, \"iters\": {}}}",
-            m.mean.as_secs_f64(),
-            m.median.as_secs_f64(),
-            m.stddev.as_secs_f64(),
-            m.iters
-        ));
-    }
+    let arms_json = arms_json(arms);
     let json = format!(
         "{{\n  \"bench\": \"fused\",\n  \"records\": {},\n  \"files\": {},\n  \"bytes\": {},\n  \"workers\": {workers},\n  \"stream\": {{\"readers\": {}, \"workers\": {}, \"queue_cap\": {}}},\n  \"arms\": [\n{arms_json}\n  ]\n}}\n",
         manifest.n_records,
@@ -161,5 +205,35 @@ fn write_json(
     match std::fs::write(&path, json) {
         Ok(()) => println!("\n  wrote {path}"),
         Err(e) => eprintln!("\n  could not write {path}: {e}"),
+    }
+}
+
+/// Record the cold-vs-warm plan-cache timings (schema documented by the
+/// repo-root `BENCH_cache.json`; CI smoke-runs and uploads the measured
+/// file).
+fn write_cache_json(
+    manifest: &p3sapp::corpus::CorpusManifest,
+    workers: usize,
+    arms: &[(&str, &Measurement)],
+) {
+    let path =
+        std::env::var("BENCH_CACHE_JSON").unwrap_or_else(|_| "target/BENCH_cache.json".into());
+    if path == "-" {
+        return;
+    }
+    let arms_json = arms_json(arms);
+    let speedup = match (arms.first(), arms.last()) {
+        (Some((_, cold)), Some((_, warm))) if warm.mean.as_secs_f64() > 0.0 => {
+            cold.mean_secs() / warm.mean_secs()
+        }
+        _ => 0.0,
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"cache\",\n  \"records\": {},\n  \"files\": {},\n  \"bytes\": {},\n  \"workers\": {workers},\n  \"restore_speedup\": {speedup:.3},\n  \"arms\": [\n{arms_json}\n  ]\n}}\n",
+        manifest.n_records, manifest.n_files, manifest.total_bytes
+    );
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
     }
 }

@@ -1,0 +1,490 @@
+//! On-disk artifact format for cached [`PlanOutput`] frames — the
+//! same little-endian binary discipline as the trainer's `P3CK`
+//! checkpoints (`runtime/checkpoint.rs`), applied to a columnar frame.
+//!
+//! Layout (all integers little-endian):
+//! ```text
+//! magic    b"P3PC"        4 bytes
+//! version  u32            (1)
+//! key_len  u32, key bytes (fingerprint hex — verified on load)
+//! rows_ingested  u64      \
+//! nulls_dropped  u64       | the drop accounting the reports consume
+//! dups_dropped   u64       |
+//! empties_dropped u64     /
+//! n_rows   u64
+//! n_cols   u32
+//! per column:
+//!   name_len u32, name bytes (utf-8)
+//!   dtype    u8   (0 = string, 1 = array<string>, 2 = vector)
+//!   per cell (n_rows of them):
+//!     tag u8 (0 = null, 1 = present), then if present:
+//!       string:        len u32, utf-8 bytes
+//!       array<string>: count u32, then per token len u32 + bytes
+//!       vector:        count u32, then count × f32
+//! digest   u64            xxh64 over bytes[4 .. len-8], seed 0
+//! ```
+//!
+//! The trailing digest makes truncation and bit-rot detectable without
+//! parsing; [`load`] additionally bounds-checks every read, so a corrupt
+//! artifact can only ever produce an `Err` — which the
+//! [`super::CacheManager`] maps to a cache **miss**, never a user-facing
+//! error.
+
+use super::fingerprint::xxh64;
+use crate::frame::{Column, DType, Field, LocalFrame, Schema};
+use crate::plan::PlanOutput;
+use crate::Result;
+use std::path::Path;
+
+pub(super) const MAGIC: &[u8; 4] = b"P3PC";
+pub(super) const VERSION: u32 = 1;
+/// Magic + version + key_len is the minimum readable prefix; the digest
+/// trails the file.
+const MIN_LEN: usize = 4 + 4 + 4 + 8;
+
+/// What an artifact restores: the cleaned frame plus the row accounting.
+/// Stage times are *not* stored — a restored run reports its own
+/// `cache_restore` wall time instead (the honest Tables 2–4 number).
+#[derive(Debug, Clone)]
+pub struct CachedFrame {
+    pub frame: LocalFrame,
+    pub rows_ingested: usize,
+    pub nulls_dropped: usize,
+    pub dups_dropped: usize,
+    pub empties_dropped: usize,
+}
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::Str => 0,
+        DType::Tokens => 1,
+        DType::Vector => 2,
+    }
+}
+
+fn dtype_from(code: u8) -> Result<DType> {
+    match code {
+        0 => Ok(DType::Str),
+        1 => Ok(DType::Tokens),
+        2 => Ok(DType::Vector),
+        other => anyhow::bail!("artifact: unknown dtype code {other}"),
+    }
+}
+
+/// Serialize `out` under cache key `key` into the `P3PC` byte layout.
+pub fn encode(key: &str, out: &PlanOutput) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(1024);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
+    buf.extend_from_slice(key.as_bytes());
+    for n in [out.rows_ingested, out.nulls_dropped, out.dups_dropped, out.empties_dropped] {
+        buf.extend_from_slice(&(n as u64).to_le_bytes());
+    }
+    let frame = &out.frame;
+    buf.extend_from_slice(&(frame.num_rows() as u64).to_le_bytes());
+    buf.extend_from_slice(&(frame.num_columns() as u32).to_le_bytes());
+    for (field, col) in frame.schema().fields().iter().zip(frame.columns()) {
+        buf.extend_from_slice(&(field.name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(field.name.as_bytes());
+        buf.push(dtype_code(field.dtype));
+        match col {
+            Column::Str(cells) => {
+                for cell in cells {
+                    match cell {
+                        None => buf.push(0),
+                        Some(s) => {
+                            buf.push(1);
+                            buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                            buf.extend_from_slice(s.as_bytes());
+                        }
+                    }
+                }
+            }
+            Column::Tokens(cells) => {
+                for cell in cells {
+                    match cell {
+                        None => buf.push(0),
+                        Some(tokens) => {
+                            buf.push(1);
+                            buf.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+                            for t in tokens {
+                                buf.extend_from_slice(&(t.len() as u32).to_le_bytes());
+                                buf.extend_from_slice(t.as_bytes());
+                            }
+                        }
+                    }
+                }
+            }
+            Column::Vecs(cells) => {
+                for cell in cells {
+                    match cell {
+                        None => buf.push(0),
+                        Some(xs) => {
+                            buf.push(1);
+                            buf.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+                            for x in xs {
+                                buf.extend_from_slice(&x.to_le_bytes());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let digest = xxh64(&buf[4..], 0);
+    buf.extend_from_slice(&digest.to_le_bytes());
+    buf
+}
+
+/// Bounds-checked cursor over an artifact's bytes.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow::anyhow!("artifact truncated at offset {}", self.pos))?;
+        let slice = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(slice)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(len)?.to_vec())?)
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Verify an artifact's full envelope (magic, version, key, trailing
+/// digest) without deserializing the frame. Reads — and digests — the
+/// whole file; `false` for any unreadable, foreign, stale-versioned or
+/// corrupt file.
+pub fn verify(path: &Path, key: &str) -> bool {
+    let Ok(bytes) = std::fs::read(path) else { return false };
+    check_envelope(&bytes, key).is_ok()
+}
+
+/// O(header) probe: check magic, version and key from the first few
+/// dozen bytes only, never touching the payload or digest. Suitable for
+/// EXPLAIN's hit rendering, where reading a multi-hundred-MB artifact
+/// just to print one line would double the warm run's I/O. A file that
+/// passes this but is truncated mid-payload still loads as a miss —
+/// [`load`] revalidates everything.
+pub fn verify_header(path: &Path, key: &str) -> bool {
+    use std::io::Read;
+    let Ok(mut f) = std::fs::File::open(path) else { return false };
+    let mut head = [0u8; 12];
+    if f.read_exact(&mut head).is_err()
+        || &head[..4] != MAGIC
+        || u32::from_le_bytes(head[4..8].try_into().unwrap()) != VERSION
+    {
+        return false;
+    }
+    let key_len = u32::from_le_bytes(head[8..12].try_into().unwrap()) as usize;
+    if key_len != key.len() {
+        return false;
+    }
+    let mut got = vec![0u8; key_len];
+    f.read_exact(&mut got).is_ok() && got == key.as_bytes()
+}
+
+fn check_envelope<'a>(bytes: &'a [u8], key: &str) -> Result<Cursor<'a>> {
+    anyhow::ensure!(bytes.len() >= MIN_LEN, "artifact too short ({} bytes)", bytes.len());
+    anyhow::ensure!(&bytes[..4] == MAGIC, "not a p3sapp plan-cache artifact (bad magic)");
+    let body = &bytes[..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    anyhow::ensure!(xxh64(&body[4..], 0) == stored, "artifact digest mismatch");
+    let mut cur = Cursor { buf: body, pos: 4 };
+    let version = cur.u32()?;
+    anyhow::ensure!(version == VERSION, "unsupported artifact version {version}");
+    let got_key = cur.str()?;
+    anyhow::ensure!(
+        got_key == key,
+        "artifact key mismatch: stored {got_key}, expected {key}"
+    );
+    Ok(cur)
+}
+
+/// Load and fully validate an artifact. Errors on *any* defect —
+/// truncation, digest mismatch, key mismatch, malformed payload; the
+/// cache manager treats every error as a miss.
+pub fn load(path: &Path, key: &str) -> Result<CachedFrame> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("read artifact {}: {e}", path.display()))?;
+    let mut cur = check_envelope(&bytes, key)?;
+    let rows_ingested = cur.u64()? as usize;
+    let nulls_dropped = cur.u64()? as usize;
+    let dups_dropped = cur.u64()? as usize;
+    let empties_dropped = cur.u64()? as usize;
+    let n_rows = cur.u64()? as usize;
+    let n_cols = cur.u32()? as usize;
+    // Never trust declared counts with allocations before checking them
+    // against the bytes actually present (a digest-valid but foreign or
+    // hand-crafted artifact must error, not abort): every column costs
+    // at least name_len(4) + dtype(1) + one tag byte per row.
+    anyhow::ensure!(
+        n_cols.saturating_mul(n_rows.saturating_add(5)) <= cur.remaining(),
+        "artifact declares more cells ({n_cols} cols x {n_rows} rows) than it contains"
+    );
+    let mut fields = Vec::with_capacity(n_cols);
+    let mut columns = Vec::with_capacity(n_cols);
+    for _ in 0..n_cols {
+        let name = cur.str()?;
+        let dtype = dtype_from(cur.u8()?)?;
+        let col = match dtype {
+            DType::Str => {
+                let mut cells = Vec::with_capacity(n_rows);
+                for _ in 0..n_rows {
+                    cells.push(match cur.u8()? {
+                        0 => None,
+                        _ => Some(cur.str()?),
+                    });
+                }
+                Column::Str(cells)
+            }
+            DType::Tokens => {
+                let mut cells = Vec::with_capacity(n_rows);
+                for _ in 0..n_rows {
+                    cells.push(match cur.u8()? {
+                        0 => None,
+                        _ => {
+                            let count = cur.u32()? as usize;
+                            // Each token costs at least its 4-byte length.
+                            anyhow::ensure!(
+                                count.saturating_mul(4) <= cur.remaining(),
+                                "artifact token count {count} exceeds remaining bytes"
+                            );
+                            let mut tokens = Vec::with_capacity(count);
+                            for _ in 0..count {
+                                tokens.push(cur.str()?);
+                            }
+                            Some(tokens)
+                        }
+                    });
+                }
+                Column::Tokens(cells)
+            }
+            DType::Vector => {
+                let mut cells = Vec::with_capacity(n_rows);
+                for _ in 0..n_rows {
+                    cells.push(match cur.u8()? {
+                        0 => None,
+                        _ => {
+                            let count = cur.u32()? as usize;
+                            anyhow::ensure!(
+                                count.saturating_mul(4) <= cur.remaining(),
+                                "artifact vector count {count} exceeds remaining bytes"
+                            );
+                            let mut xs = Vec::with_capacity(count);
+                            for _ in 0..count {
+                                xs.push(f32::from_le_bytes(cur.take(4)?.try_into().unwrap()));
+                            }
+                            Some(xs)
+                        }
+                    });
+                }
+                Column::Vecs(cells)
+            }
+        };
+        fields.push(Field::new(name, dtype));
+        columns.push(col);
+    }
+    anyhow::ensure!(
+        cur.pos == cur.buf.len(),
+        "artifact has {} trailing payload bytes",
+        cur.buf.len() - cur.pos
+    );
+    let frame = LocalFrame::from_columns(Schema::new(fields), columns)?;
+    anyhow::ensure!(
+        frame.num_rows() == n_rows,
+        "artifact row count mismatch: {} != {n_rows}",
+        frame.num_rows()
+    );
+    Ok(CachedFrame { frame, rows_ingested, nulls_dropped, dups_dropped, empties_dropped })
+}
+
+/// Atomically persist `out` to `path` (write to a sibling temp file,
+/// then rename). The temp name is unique per process *and* per call, so
+/// two processes sharing a cache dir that store the same key cannot
+/// interleave writes into one temp file — each renames its own complete
+/// artifact, last one wins, and readers only ever observe whole files.
+pub fn save(path: &Path, key: &str, out: &PlanOutput) -> Result<()> {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let bytes = encode(key, out);
+    let tmp = path.with_extension(format!(
+        "{}-{}.tmp",
+        std::process::id(),
+        SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    if let Err(e) = std::fs::write(&tmp, &bytes) {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::bail!("write artifact {}: {e}", tmp.display());
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::bail!("rename artifact into {}: {e}", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::StageTimes;
+    use std::path::PathBuf;
+
+    fn sample_output() -> PlanOutput {
+        let frame = LocalFrame::from_columns(
+            Schema::new(vec![
+                Field::new("title", DType::Str),
+                Field::new("words", DType::Tokens),
+                Field::new("tfidf", DType::Vector),
+            ]),
+            vec![
+                Column::Str(vec![Some("deep nets".into()), None, Some(String::new())]),
+                Column::Tokens(vec![Some(vec!["deep".into(), "nets".into()]), Some(vec![]), None]),
+                Column::Vecs(vec![None, Some(vec![0.5, -1.25]), Some(vec![])]),
+            ],
+        )
+        .unwrap();
+        PlanOutput {
+            frame,
+            times: StageTimes::new(),
+            rows_ingested: 9,
+            rows_out: 3,
+            nulls_dropped: 4,
+            dups_dropped: 1,
+            empties_dropped: 1,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("p3pc-art-{name}-{}.p3pc", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_is_byte_identical() {
+        let out = sample_output();
+        let path = tmp("rt");
+        save(&path, "deadbeef", &out).unwrap();
+        assert!(verify(&path, "deadbeef"));
+        let restored = load(&path, "deadbeef").unwrap();
+        assert_eq!(restored.frame, out.frame);
+        assert_eq!(restored.rows_ingested, 9);
+        assert_eq!(restored.nulls_dropped, 4);
+        assert_eq!(restored.dups_dropped, 1);
+        assert_eq!(restored.empties_dropped, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_key_and_version() {
+        let out = sample_output();
+        let path = tmp("key");
+        save(&path, "key-a", &out).unwrap();
+        assert!(!verify(&path, "key-b"));
+        assert!(load(&path, "key-b").is_err());
+        // Version bump (with a re-stamped digest) must be rejected too.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 99;
+        let n = bytes.len();
+        let digest = xxh64(&bytes[4..n - 8], 0);
+        bytes[n - 8..].copy_from_slice(&digest.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(!verify(&path, "key-a"));
+        assert!(load(&path, "key-a").is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn detects_truncation_and_bitflips() {
+        let out = sample_output();
+        let path = tmp("corrupt");
+        save(&path, "k", &out).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // Truncate at every structurally interesting point.
+        for cut in [0, 3, MIN_LEN - 1, good.len() / 2, good.len() - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(load(&path, "k").is_err(), "cut at {cut}");
+            assert!(!verify(&path, "k"), "cut at {cut}");
+        }
+        // Single bit flip in the payload flips the digest.
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x10;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(load(&path, "k").is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn digest_valid_but_absurd_counts_error_instead_of_allocating() {
+        // A foreign artifact can carry a correct (unkeyed) digest, so
+        // declared counts must be validated against the bytes actually
+        // present before any allocation sized from them.
+        let path = tmp("absurd");
+        save(&path, "k", &sample_output()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // n_rows sits after magic(4) + version(4) + key_len(4) + key(1)
+        // + four u64 counters(32).
+        let n_rows_at = 13 + 32;
+        bytes[n_rows_at..n_rows_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let n = bytes.len();
+        let digest = xxh64(&bytes[4..n - 8], 0);
+        bytes[n - 8..].copy_from_slice(&digest.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(verify(&path, "k"), "digest is deliberately valid");
+        assert!(load(&path, "k").is_err(), "counts exceed payload -> error, not abort");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn garbage_file_is_an_error_not_a_panic() {
+        let path = tmp("junk");
+        std::fs::write(&path, b"not an artifact at all").unwrap();
+        assert!(load(&path, "k").is_err());
+        assert!(!verify(&path, "k"));
+        assert!(!verify_header(&path, "k"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn verify_header_checks_only_the_envelope_prefix() {
+        let path = tmp("hdr");
+        save(&path, "hdr-key", &sample_output()).unwrap();
+        assert!(verify_header(&path, "hdr-key"));
+        assert!(!verify_header(&path, "other-key"));
+        assert!(!verify_header(&path.with_extension("missing"), "hdr-key"));
+        // Payload truncation is invisible to the header probe by design
+        // (load() still rejects it) — but losing the header itself is not.
+        let good = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &good[..good.len() - 10]).unwrap();
+        assert!(verify_header(&path, "hdr-key"));
+        assert!(load(&path, "hdr-key").is_err());
+        std::fs::write(&path, &good[..10]).unwrap();
+        assert!(!verify_header(&path, "hdr-key"));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

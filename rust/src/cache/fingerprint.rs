@@ -1,0 +1,252 @@
+//! Cache-key derivation: what makes two preprocessing runs "the same
+//! work".
+//!
+//! A [`PlanFingerprint`] hashes two things together:
+//!
+//! 1. the **optimized logical plan render** — any change to the op list
+//!    (different columns, an extra stage, a different fusion outcome)
+//!    changes the key, so a plan-shape change can never restore a stale
+//!    frame; and
+//! 2. the **per-shard identity** of every input file: path, byte
+//!    length and an xxhash-style content digest.
+//!
+//! The shard mtime is captured in [`ShardIdentity`] for diagnostics
+//! (`repro cache stats` age reporting) but deliberately **excluded from
+//! the key bits**: a shard that was touched (or re-downloaded) with
+//! byte-identical content still hits, because the digest — not the
+//! timestamp — is what names the bytes. Conversely an edit that
+//! carefully preserves length and mtime still misses, because the
+//! digest changes. `rust/tests/cache_roundtrip.rs` pins both
+//! behaviours.
+
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+const PRIME64_1: u64 = 0x9E37_79B1_85EB_CA87;
+const PRIME64_2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const PRIME64_3: u64 = 0x1656_67B1_9E37_79F9;
+const PRIME64_4: u64 = 0x85EB_CA77_C2B2_AE63;
+const PRIME64_5: u64 = 0x27D4_EB2F_1656_67C5;
+
+#[inline]
+fn round(acc: u64, input: u64) -> u64 {
+    acc.wrapping_add(input.wrapping_mul(PRIME64_2))
+        .rotate_left(31)
+        .wrapping_mul(PRIME64_1)
+}
+
+#[inline]
+fn merge_round(acc: u64, val: u64) -> u64 {
+    (acc ^ round(0, val)).wrapping_mul(PRIME64_1).wrapping_add(PRIME64_4)
+}
+
+#[inline]
+fn read_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().unwrap())
+}
+
+#[inline]
+fn read_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[..4].try_into().unwrap())
+}
+
+/// XXH64 — the dependency-free 64-bit content digest used for shard
+/// identities and artifact integrity (same role xxhash plays in Spark's
+/// shuffle checksums). One pass, 8 bytes/step on the wide loop.
+///
+/// ```
+/// use p3sapp::cache::xxh64;
+///
+/// assert_eq!(xxh64(b"abc", 0), xxh64(b"abc", 0)); // deterministic
+/// assert_ne!(xxh64(b"abc", 0), xxh64(b"abd", 0)); // content-sensitive
+/// assert_ne!(xxh64(b"abc", 0), xxh64(b"abc", 1)); // seed-sensitive
+/// ```
+pub fn xxh64(data: &[u8], seed: u64) -> u64 {
+    let mut p = data;
+    let mut h = if data.len() >= 32 {
+        let mut v1 = seed.wrapping_add(PRIME64_1).wrapping_add(PRIME64_2);
+        let mut v2 = seed.wrapping_add(PRIME64_2);
+        let mut v3 = seed;
+        let mut v4 = seed.wrapping_sub(PRIME64_1);
+        while p.len() >= 32 {
+            v1 = round(v1, read_u64(&p[0..8]));
+            v2 = round(v2, read_u64(&p[8..16]));
+            v3 = round(v3, read_u64(&p[16..24]));
+            v4 = round(v4, read_u64(&p[24..32]));
+            p = &p[32..];
+        }
+        let mut h = v1
+            .rotate_left(1)
+            .wrapping_add(v2.rotate_left(7))
+            .wrapping_add(v3.rotate_left(12))
+            .wrapping_add(v4.rotate_left(18));
+        h = merge_round(h, v1);
+        h = merge_round(h, v2);
+        h = merge_round(h, v3);
+        merge_round(h, v4)
+    } else {
+        seed.wrapping_add(PRIME64_5)
+    };
+    h = h.wrapping_add(data.len() as u64);
+    while p.len() >= 8 {
+        h ^= round(0, read_u64(p));
+        h = h.rotate_left(27).wrapping_mul(PRIME64_1).wrapping_add(PRIME64_4);
+        p = &p[8..];
+    }
+    if p.len() >= 4 {
+        h ^= (read_u32(p) as u64).wrapping_mul(PRIME64_1);
+        h = h.rotate_left(23).wrapping_mul(PRIME64_2).wrapping_add(PRIME64_3);
+        p = &p[4..];
+    }
+    for &b in p {
+        h ^= (b as u64).wrapping_mul(PRIME64_5);
+        h = h.rotate_left(11).wrapping_mul(PRIME64_1);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(PRIME64_2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(PRIME64_3);
+    h ^= h >> 32;
+    h
+}
+
+/// Identity of one input shard at fingerprint time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardIdentity {
+    pub path: PathBuf,
+    /// Byte length (part of the key).
+    pub len: u64,
+    /// Modification time in nanos since the epoch, as observed when the
+    /// fingerprint was taken — **not part of the key** (see module
+    /// docs); carried so callers inspecting a [`PlanFingerprint`] can
+    /// see the stat-level identity next to the digest. Zero when the
+    /// filesystem reports no mtime.
+    pub mtime_nanos: u128,
+    /// xxhash-style digest of the full file contents (part of the key).
+    pub digest: u64,
+}
+
+/// Fingerprint one shard: stat + full-content digest.
+pub fn shard_identity(path: &Path) -> Result<ShardIdentity> {
+    let meta = std::fs::metadata(path)
+        .map_err(|e| anyhow::anyhow!("fingerprint stat {}: {e}", path.display()))?;
+    let mtime_nanos = meta
+        .modified()
+        .ok()
+        .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("fingerprint read {}: {e}", path.display()))?;
+    Ok(ShardIdentity {
+        path: path.to_path_buf(),
+        len: bytes.len() as u64,
+        mtime_nanos,
+        digest: xxh64(&bytes, 0),
+    })
+}
+
+/// A complete cache key: the 128-bit hex key plus the shard identities
+/// it was derived from (kept for `cache stats` style diagnostics).
+#[derive(Debug, Clone)]
+pub struct PlanFingerprint {
+    key: String,
+    shards: Vec<ShardIdentity>,
+}
+
+impl PlanFingerprint {
+    /// The 32-hex-char content-addressed key (artifact file stem).
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    pub fn shards(&self) -> &[ShardIdentity] {
+        &self.shards
+    }
+}
+
+/// Derive the cache key for running `plan_render` (the **optimized**
+/// logical plan's [`crate::plan::LogicalPlan::render`] output) over
+/// `files`. Reads every shard once to digest it — a sequential pass that
+/// is orders of magnitude cheaper than parsing and cleaning the same
+/// bytes.
+///
+/// ```
+/// use p3sapp::cache::fingerprint;
+///
+/// // No shard files: the key still covers the plan shape.
+/// let a = fingerprint("Ingest\nCollect\n", &[]).unwrap();
+/// let b = fingerprint("Ingest\nDropNulls\nCollect\n", &[]).unwrap();
+/// assert_ne!(a.key(), b.key());
+/// assert_eq!(a.key().len(), 32);
+/// ```
+pub fn fingerprint(plan_render: &str, files: &[std::path::PathBuf]) -> Result<PlanFingerprint> {
+    let mut shards = Vec::with_capacity(files.len());
+    let mut material = Vec::with_capacity(plan_render.len() + files.len() * 64);
+    material.extend_from_slice(plan_render.as_bytes());
+    for path in files {
+        let id = shard_identity(path)?;
+        // Key bits: path, length, content digest. NOT mtime (module docs).
+        material.push(0);
+        material.extend_from_slice(id.path.to_string_lossy().as_bytes());
+        material.extend_from_slice(&id.len.to_le_bytes());
+        material.extend_from_slice(&id.digest.to_le_bytes());
+        shards.push(id);
+    }
+    let lo = xxh64(&material, 0);
+    let hi = xxh64(&material, PRIME64_5);
+    Ok(PlanFingerprint { key: format!("{hi:016x}{lo:016x}"), shards })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xxh64_is_deterministic_and_sensitive() {
+        let data = b"the quick brown fox jumps over the lazy dog, twice over";
+        assert!(data.len() > 32, "exercise the wide loop");
+        assert_eq!(xxh64(data, 7), xxh64(data, 7));
+        assert_ne!(xxh64(data, 7), xxh64(data, 8));
+        let mut edited = data.to_vec();
+        edited[40] ^= 1;
+        assert_ne!(xxh64(data, 7), xxh64(&edited, 7));
+        // Every tail length hashes (and differs from its neighbours).
+        let mut seen = std::collections::HashSet::new();
+        for n in 0..data.len() {
+            assert!(seen.insert(xxh64(&data[..n], 0)), "collision at len {n}");
+        }
+    }
+
+    #[test]
+    fn fingerprint_covers_plan_and_content_but_not_mtime() {
+        let dir = std::env::temp_dir().join(format!("p3pc-fp-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let shard = dir.join("s.json");
+        std::fs::write(&shard, b"{\"title\": \"a\"}\n").unwrap();
+        let files = vec![shard.clone()];
+
+        let base = fingerprint("plan-a", &files).unwrap();
+        assert_eq!(base.key().len(), 32);
+        assert_eq!(base.shards().len(), 1);
+        let identity = &base.shards()[0];
+        assert_eq!(identity.len, 15);
+        assert!(identity.mtime_nanos > 0, "stat identity captured for inspection");
+        // Plan shape changes the key.
+        assert_ne!(base.key(), fingerprint("plan-b", &files).unwrap().key());
+        // Rewriting identical bytes (mtime moves) does not.
+        std::fs::write(&shard, b"{\"title\": \"a\"}\n").unwrap();
+        assert_eq!(base.key(), fingerprint("plan-a", &files).unwrap().key());
+        // A same-length content edit does.
+        std::fs::write(&shard, b"{\"title\": \"b\"}\n").unwrap();
+        assert_ne!(base.key(), fingerprint("plan-a", &files).unwrap().key());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fingerprint_fails_on_missing_shard() {
+        let missing = vec![PathBuf::from("/nonexistent/p3pc-shard.json")];
+        assert!(fingerprint("plan", &missing).is_err());
+    }
+}

@@ -1,0 +1,575 @@
+//! The cache manager: a two-tier (in-memory memo + content-addressed
+//! disk store) cache of preprocessed frames, with hit/miss/evict
+//! accounting and size-capped LRU eviction of the disk tier.
+//!
+//! Tiering. The memo tier serves repeats **within** one process (a
+//! `report` suite re-running a tier, the train side of `train`/`infer`)
+//! from a clone — no I/O at all. The disk tier serves repeats **across**
+//! processes (a second `repro report`, `train` after `infer`) from a
+//! `P3PC` artifact. A disk hit re-populates the memo and touches the
+//! artifact's mtime, which is what the LRU eviction orders by.
+//!
+//! Failure posture: the cache must never turn a working run into a
+//! failing one. Corrupt, truncated, foreign or stale-versioned artifacts
+//! are counted (`CacheStats::corrupt`) and treated as misses; a failed
+//! store is reported by the caller but does not fail the run.
+
+use super::artifact::{self, CachedFrame};
+use super::fingerprint::PlanFingerprint;
+use crate::driver::CACHE_RESTORE;
+use crate::metrics::StageTimes;
+use crate::plan::PlanOutput;
+use crate::Result;
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Instant, SystemTime};
+
+/// Artifact file extension (content-addressed stem = fingerprint key).
+pub const ARTIFACT_EXT: &str = "p3pc";
+
+/// Default disk-tier size cap: 1 GiB.
+pub const DEFAULT_MAX_BYTES: u64 = 1 << 30;
+
+/// Default memo-tier (in-memory) size cap: 256 MiB of frame payload.
+pub const DEFAULT_MEMO_MAX_BYTES: u64 = 256 << 20;
+
+/// Cache construction knobs.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Directory holding the `<key>.p3pc` artifacts (created on open).
+    pub dir: PathBuf,
+    /// Disk-tier size cap in bytes; least-recently-used artifacts are
+    /// evicted past it. `0` disables eviction.
+    pub max_bytes: u64,
+    /// Enable the in-memory memo tier (disable to measure true disk
+    /// restores, as `benches/fused.rs` does for its warm arm).
+    pub memory: bool,
+    /// Memo-tier size cap in approximate frame-payload bytes — without
+    /// it a multi-tier suite would keep every tier's frame resident for
+    /// the process lifetime. Oldest-inserted entries are dropped past
+    /// the cap (they remain on disk); `0` disables the cap.
+    pub memory_max_bytes: u64,
+}
+
+/// In-process counters, surfaced via [`CacheManager::stats`] (and the
+/// driver's bench/test assertions). They live in memory only — a fresh
+/// process starts from zero; `repro cache stats` reports the *disk*
+/// tier (artifact list, sizes, ages), not these.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Hits served from the in-memory memo.
+    pub mem_hits: u64,
+    /// Hits served by deserializing a disk artifact.
+    pub disk_hits: u64,
+    /// Lookups that found nothing usable.
+    pub misses: u64,
+    /// Artifacts written.
+    pub stores: u64,
+    /// Artifacts removed by the LRU size cap.
+    pub evictions: u64,
+    /// Misses caused by a corrupt/unreadable artifact (subset of
+    /// `misses`).
+    pub corrupt: u64,
+}
+
+impl CacheStats {
+    pub fn hits(&self) -> u64 {
+        self.mem_hits + self.disk_hits
+    }
+}
+
+/// One disk-tier entry, as listed by [`CacheManager::entries`].
+#[derive(Debug, Clone)]
+pub struct CacheEntry {
+    pub key: String,
+    pub path: PathBuf,
+    pub bytes: u64,
+    pub modified: Option<SystemTime>,
+}
+
+/// The byte-capped, insertion-ordered memo tier. Insertion order is the
+/// eviction order — close enough to LRU for the repeat patterns this
+/// tier serves (suite reruns, train/infer), and O(1) on the hot path.
+#[derive(Debug, Default)]
+struct Memo {
+    map: HashMap<String, CachedFrame>,
+    /// Keys oldest-inserted first.
+    order: VecDeque<String>,
+    /// Approximate frame-payload bytes currently held.
+    bytes: u64,
+}
+
+fn frame_bytes(hit: &CachedFrame) -> u64 {
+    hit.frame.columns().iter().map(|c| c.approx_bytes() as u64).sum()
+}
+
+impl Memo {
+    /// Insert under the byte cap (`0` = uncapped): entries larger than
+    /// the whole cap are not memoized at all (the disk tier serves
+    /// them); otherwise oldest entries are dropped until this one fits.
+    fn insert(&mut self, key: String, hit: CachedFrame, max_bytes: u64) {
+        self.remove(&key);
+        let size = frame_bytes(&hit);
+        if max_bytes > 0 && size > max_bytes {
+            return;
+        }
+        self.bytes += size;
+        self.order.push_back(key.clone());
+        self.map.insert(key, hit);
+        // size <= max_bytes, so anything over the cap is an older entry.
+        while max_bytes > 0 && self.bytes > max_bytes {
+            let Some(oldest) = self.order.front().cloned() else { break };
+            self.remove(&oldest);
+        }
+    }
+
+    fn remove(&mut self, key: &str) {
+        if let Some(old) = self.map.remove(key) {
+            self.bytes = self.bytes.saturating_sub(frame_bytes(&old));
+            self.order.retain(|k| k != key);
+        }
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.order.clear();
+        self.bytes = 0;
+    }
+}
+
+/// The plan cache: memoizes a [`PlanOutput`] under its
+/// [`PlanFingerprint`] so a byte-identical preprocessing job restores
+/// its frame instead of re-executing the pass.
+///
+/// ```no_run
+/// use p3sapp::cache::{fingerprint, CacheManager};
+/// use p3sapp::pipeline::presets::case_study_plan;
+///
+/// let files = p3sapp::ingest::list_shards(std::path::Path::new("/tmp/corpus")).unwrap();
+/// let plan = case_study_plan(&files, "title", "abstract").optimize();
+/// let cache = CacheManager::open("/tmp/p3sapp-cache").unwrap();
+/// let fp = fingerprint(&plan.render(), &files).unwrap();
+/// let out = match cache.get(&fp) {
+///     Some(hit) => hit, // times = one `cache_restore` stage
+///     None => {
+///         let out = plan.execute(4).unwrap();
+///         cache.put(&fp, &out).unwrap();
+///         out
+///     }
+/// };
+/// println!("{} rows ({:?})", out.rows_out, cache.stats());
+/// ```
+#[derive(Debug)]
+pub struct CacheManager {
+    cfg: CacheConfig,
+    memo: Mutex<Memo>,
+    stats: Mutex<CacheStats>,
+}
+
+impl CacheManager {
+    /// Open (creating if needed) a cache rooted at `dir` with the
+    /// default size caps and the memo tier enabled.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<CacheManager> {
+        CacheManager::with_config(CacheConfig {
+            dir: dir.into(),
+            max_bytes: DEFAULT_MAX_BYTES,
+            memory: true,
+            memory_max_bytes: DEFAULT_MEMO_MAX_BYTES,
+        })
+    }
+
+    pub fn with_config(cfg: CacheConfig) -> Result<CacheManager> {
+        std::fs::create_dir_all(&cfg.dir)
+            .map_err(|e| anyhow::anyhow!("create cache dir {}: {e}", cfg.dir.display()))?;
+        Ok(CacheManager {
+            cfg,
+            memo: Mutex::new(Memo::default()),
+            stats: Mutex::new(CacheStats::default()),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.cfg.dir
+    }
+
+    fn artifact_path(&self, key: &str) -> PathBuf {
+        self.cfg.dir.join(format!("{key}.{ARTIFACT_EXT}"))
+    }
+
+    /// Cheap hit probe for EXPLAIN rendering: validates only the
+    /// artifact's header (magic, version, key — O(header) I/O, not a
+    /// full read+digest of a potentially huge file), and does not skew
+    /// the hit/miss counters. A header-valid but payload-corrupt
+    /// artifact renders as a hit here and then misses in [`Self::get`],
+    /// which revalidates everything.
+    pub fn probe(&self, fp: &PlanFingerprint) -> bool {
+        if self.cfg.memory && self.memo.lock().unwrap().map.contains_key(fp.key()) {
+            return true;
+        }
+        artifact::verify_header(&self.artifact_path(fp.key()), fp.key())
+    }
+
+    /// Look up `fp`. On a hit, returns a [`PlanOutput`] whose stage
+    /// times hold exactly one entry — [`CACHE_RESTORE`], the measured
+    /// memo-clone or deserialization wall time — so the paper's
+    /// cumulative-time accounting reports the restore honestly instead
+    /// of pretending the stages re-ran.
+    pub fn get(&self, fp: &PlanFingerprint) -> Option<PlanOutput> {
+        let t0 = Instant::now();
+        if self.cfg.memory {
+            if let Some(hit) = self.memo.lock().unwrap().map.get(fp.key()).cloned() {
+                self.stats.lock().unwrap().mem_hits += 1;
+                return Some(restored(hit, t0));
+            }
+        }
+        let path = self.artifact_path(fp.key());
+        if !path.exists() {
+            self.stats.lock().unwrap().misses += 1;
+            return None;
+        }
+        match artifact::load(&path, fp.key()) {
+            Ok(hit) => {
+                // Touch for LRU, refill the memo for in-process repeats.
+                let _ = std::fs::File::options()
+                    .write(true)
+                    .open(&path)
+                    .and_then(|f| f.set_modified(SystemTime::now()));
+                if self.cfg.memory {
+                    self.memo.lock().unwrap().insert(
+                        fp.key().to_string(),
+                        hit.clone(),
+                        self.cfg.memory_max_bytes,
+                    );
+                }
+                self.stats.lock().unwrap().disk_hits += 1;
+                Some(restored(hit, t0))
+            }
+            Err(_) => {
+                // Corrupt or stale: a miss, never an error. Drop the
+                // defective artifact so the re-executed pass can store a
+                // fresh one over it.
+                let _ = std::fs::remove_file(&path);
+                let mut stats = self.stats.lock().unwrap();
+                stats.misses += 1;
+                stats.corrupt += 1;
+                None
+            }
+        }
+    }
+
+    /// Store `out` under `fp`, then enforce the size cap. The write is
+    /// atomic (temp file + rename), so concurrent readers only ever see
+    /// whole artifacts.
+    pub fn put(&self, fp: &PlanFingerprint, out: &PlanOutput) -> Result<()> {
+        artifact::save(&self.artifact_path(fp.key()), fp.key(), out)?;
+        if self.cfg.memory {
+            self.memo.lock().unwrap().insert(
+                fp.key().to_string(),
+                CachedFrame {
+                    frame: out.frame.clone(),
+                    rows_ingested: out.rows_ingested,
+                    nulls_dropped: out.nulls_dropped,
+                    dups_dropped: out.dups_dropped,
+                    empties_dropped: out.empties_dropped,
+                },
+                self.cfg.memory_max_bytes,
+            );
+        }
+        self.stats.lock().unwrap().stores += 1;
+        self.evict(fp.key())?;
+        Ok(())
+    }
+
+    /// LRU eviction: drop oldest-touched artifacts until the disk tier
+    /// fits `max_bytes`. `protect` (the key just stored) is exempt —
+    /// mtime ordering alone cannot guarantee it survives on filesystems
+    /// with coarse timestamp granularity, where a same-second tie would
+    /// otherwise fall back to key order — unless it alone exceeds the
+    /// cap, in which case it is the last thing removed.
+    fn evict(&self, protect: &str) -> Result<()> {
+        if self.cfg.max_bytes == 0 {
+            return Ok(());
+        }
+        let mut entries = self.entries()?;
+        let mut total: u64 = entries.iter().map(|e| e.bytes).sum();
+        if total <= self.cfg.max_bytes {
+            return Ok(());
+        }
+        // Oldest first; entries without an mtime evict first, and the
+        // just-stored entry is considered newest regardless of mtime.
+        entries.sort_by_key(|e| (e.key == protect, e.modified));
+        for e in entries {
+            if total <= self.cfg.max_bytes {
+                break;
+            }
+            std::fs::remove_file(&e.path)
+                .map_err(|err| anyhow::anyhow!("evict {}: {err}", e.path.display()))?;
+            self.memo.lock().unwrap().remove(&e.key);
+            total = total.saturating_sub(e.bytes);
+            self.stats.lock().unwrap().evictions += 1;
+        }
+        Ok(())
+    }
+
+    /// List the disk tier (every `*.p3pc` under the cache dir).
+    pub fn entries(&self) -> Result<Vec<CacheEntry>> {
+        let mut out = Vec::new();
+        let rd = std::fs::read_dir(&self.cfg.dir)
+            .map_err(|e| anyhow::anyhow!("read cache dir {}: {e}", self.cfg.dir.display()))?;
+        for entry in rd {
+            let entry = entry?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some(ARTIFACT_EXT) {
+                continue;
+            }
+            let key = match path.file_stem().and_then(|s| s.to_str()) {
+                Some(s) => s.to_string(),
+                None => continue,
+            };
+            let meta = entry.metadata()?;
+            out.push(CacheEntry {
+                key,
+                path,
+                bytes: meta.len(),
+                modified: meta.modified().ok(),
+            });
+        }
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        Ok(out)
+    }
+
+    /// Remove every artifact (and the memo); returns how many artifacts
+    /// were removed. Also sweeps orphaned `*.tmp` files — a crash
+    /// between [`artifact::save`]'s write and rename can strand one,
+    /// and those are invisible to [`Self::entries`] and the size cap.
+    /// `repro cache clear`.
+    pub fn clear(&self) -> Result<usize> {
+        let entries = self.entries()?;
+        for e in &entries {
+            std::fs::remove_file(&e.path)
+                .map_err(|err| anyhow::anyhow!("remove {}: {err}", e.path.display()))?;
+        }
+        for entry in std::fs::read_dir(&self.cfg.dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("tmp") {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        self.memo.lock().unwrap().clear();
+        Ok(entries.len())
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// Wrap a restored frame as a [`PlanOutput`] whose only stage time is
+/// the restore itself.
+fn restored(hit: CachedFrame, t0: Instant) -> PlanOutput {
+    let rows_out = hit.frame.num_rows();
+    let mut times = StageTimes::new();
+    times.add(CACHE_RESTORE, t0.elapsed());
+    PlanOutput {
+        frame: hit.frame,
+        times,
+        rows_ingested: hit.rows_ingested,
+        rows_out,
+        nulls_dropped: hit.nulls_dropped,
+        dups_dropped: hit.dups_dropped,
+        empties_dropped: hit.empties_dropped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frame::{Column, DType, Field, LocalFrame, Schema};
+    use crate::plan::PlanOutput;
+
+    fn output(rows: usize, payload: &str) -> PlanOutput {
+        let cells: Vec<Option<String>> =
+            (0..rows).map(|i| Some(format!("{payload}-{i}"))).collect();
+        let frame = LocalFrame::from_columns(
+            Schema::new(vec![Field::new("title", DType::Str)]),
+            vec![Column::Str(cells)],
+        )
+        .unwrap();
+        PlanOutput {
+            frame,
+            times: StageTimes::new(),
+            rows_ingested: rows + 2,
+            rows_out: rows,
+            nulls_dropped: 1,
+            dups_dropped: 1,
+            empties_dropped: 0,
+        }
+    }
+
+    fn fp(plan: &str) -> PlanFingerprint {
+        super::super::fingerprint::fingerprint(plan, &[]).unwrap()
+    }
+
+    fn mgr(name: &str, max_bytes: u64, memory: bool) -> CacheManager {
+        let dir = std::env::temp_dir().join(format!("p3pc-mgr-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        CacheManager::with_config(CacheConfig {
+            dir,
+            max_bytes,
+            memory,
+            memory_max_bytes: 0,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn miss_store_hit_lifecycle() {
+        let m = mgr("life", 0, true);
+        let fp = fp("plan-life");
+        assert!(m.get(&fp).is_none());
+        assert!(!m.probe(&fp));
+        let out = output(5, "row");
+        m.put(&fp, &out).unwrap();
+        assert!(m.probe(&fp));
+        // Memo tier serves the repeat.
+        let hit = m.get(&fp).expect("memo hit");
+        assert_eq!(hit.frame, out.frame);
+        assert_eq!(hit.rows_out, 5);
+        assert_eq!(hit.rows_ingested, 7);
+        assert!(hit.times.secs(CACHE_RESTORE) >= 0.0);
+        assert_eq!(hit.times.stages().count(), 1, "restore is the only stage");
+        let s = m.stats();
+        assert_eq!((s.mem_hits, s.disk_hits, s.misses, s.stores), (1, 0, 1, 1));
+        std::fs::remove_dir_all(m.dir()).unwrap();
+    }
+
+    #[test]
+    fn disk_tier_survives_a_fresh_manager() {
+        let m = mgr("disk", 0, true);
+        let fp = fp("plan-disk");
+        m.put(&fp, &output(3, "d")).unwrap();
+        // A new manager over the same dir (a "second process").
+        let m2 = CacheManager::with_config(CacheConfig {
+            dir: m.dir().to_path_buf(),
+            max_bytes: 0,
+            memory: true,
+            memory_max_bytes: 0,
+        })
+        .unwrap();
+        let hit = m2.get(&fp).expect("disk hit");
+        assert_eq!(hit.frame, output(3, "d").frame);
+        assert_eq!(m2.stats().disk_hits, 1);
+        // The disk hit refilled the memo.
+        let again = m2.get(&fp).unwrap();
+        assert_eq!(again.frame, hit.frame);
+        assert_eq!(m2.stats().mem_hits, 1);
+        std::fs::remove_dir_all(m.dir()).unwrap();
+    }
+
+    #[test]
+    fn corrupt_artifact_is_a_counted_miss_and_is_removed() {
+        let m = mgr("corrupt", 0, false);
+        let fp = fp("plan-corrupt");
+        m.put(&fp, &output(4, "c")).unwrap();
+        let path = m.artifact_path(fp.key());
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(m.get(&fp).is_none());
+        let s = m.stats();
+        assert_eq!((s.misses, s.corrupt), (1, 1));
+        assert!(!path.exists(), "defective artifact dropped");
+        // Re-store over it works.
+        m.put(&fp, &output(4, "c")).unwrap();
+        assert!(m.get(&fp).is_some());
+        std::fs::remove_dir_all(m.dir()).unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_caps_the_disk_tier() {
+        let m = mgr("evict", 1, true); // 1-byte cap: every artifact alone exceeds it
+        let fp_a = fp("plan-a");
+        let fp_b = fp("plan-b");
+        m.put(&fp_a, &output(2, "a")).unwrap();
+        m.put(&fp_b, &output(2, "b")).unwrap();
+        assert!(m.stats().evictions >= 1);
+        // Evicted entries are gone from the memo too (memo mirrors disk).
+        let remaining = m.entries().unwrap();
+        assert!(remaining.len() <= 1, "{remaining:?}");
+        std::fs::remove_dir_all(m.dir()).unwrap();
+    }
+
+    #[test]
+    fn memo_tier_is_byte_capped_but_disk_still_serves() {
+        let dir = std::env::temp_dir()
+            .join(format!("p3pc-mgr-memocap-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // Cap the memo far below one frame's payload: nothing memoizes,
+        // every repeat is served (correctly) by the disk tier.
+        let m = CacheManager::with_config(CacheConfig {
+            dir,
+            max_bytes: 0,
+            memory: true,
+            memory_max_bytes: 8,
+        })
+        .unwrap();
+        let fp = fp("plan-memocap");
+        let out = output(50, "payload-row");
+        m.put(&fp, &out).unwrap();
+        assert_eq!(m.memo.lock().unwrap().map.len(), 0, "over-cap frame not memoized");
+        let hit = m.get(&fp).expect("disk hit");
+        assert_eq!(hit.frame, out.frame);
+        assert_eq!(m.stats().disk_hits, 1);
+        assert_eq!(m.memo.lock().unwrap().bytes, 0);
+        std::fs::remove_dir_all(m.dir()).unwrap();
+    }
+
+    #[test]
+    fn memo_evicts_oldest_insertion_past_the_cap() {
+        let mut memo = Memo::default();
+        let frame_a = output(10, "aaaa");
+        let size = frame_bytes(&CachedFrame {
+            frame: frame_a.frame.clone(),
+            rows_ingested: 0,
+            nulls_dropped: 0,
+            dups_dropped: 0,
+            empties_dropped: 0,
+        });
+        let entry = |o: &PlanOutput| CachedFrame {
+            frame: o.frame.clone(),
+            rows_ingested: o.rows_ingested,
+            nulls_dropped: o.nulls_dropped,
+            dups_dropped: o.dups_dropped,
+            empties_dropped: o.empties_dropped,
+        };
+        // Cap fits two same-sized entries but not three.
+        let cap = size * 2;
+        memo.insert("a".into(), entry(&frame_a), cap);
+        memo.insert("b".into(), entry(&output(10, "bbbb")), cap);
+        memo.insert("c".into(), entry(&output(10, "cccc")), cap);
+        assert!(!memo.map.contains_key("a"), "oldest evicted");
+        assert!(memo.map.contains_key("b") && memo.map.contains_key("c"));
+        assert!(memo.bytes <= cap);
+        // Re-inserting an existing key replaces, not duplicates.
+        memo.insert("c".into(), entry(&output(10, "cccc")), cap);
+        assert_eq!(memo.order.len(), 2);
+        memo.clear();
+        assert_eq!((memo.map.len(), memo.order.len(), memo.bytes), (0, 0, 0));
+    }
+
+    #[test]
+    fn clear_empties_the_cache_and_sweeps_orphaned_temps() {
+        let m = mgr("clear", 0, true);
+        m.put(&fp("p1"), &output(1, "x")).unwrap();
+        m.put(&fp("p2"), &output(1, "y")).unwrap();
+        assert_eq!(m.entries().unwrap().len(), 2);
+        // A crash between write and rename strands a temp file.
+        let orphan = m.dir().join("deadbeef.1234-0.tmp");
+        std::fs::write(&orphan, b"half-written").unwrap();
+        assert_eq!(m.clear().unwrap(), 2, "temps are swept but not counted");
+        assert_eq!(m.entries().unwrap().len(), 0);
+        assert!(!orphan.exists(), "orphaned temp swept");
+        assert!(m.get(&fp("p1")).is_none());
+        std::fs::remove_dir_all(m.dir()).unwrap();
+    }
+}

@@ -1,5 +1,5 @@
 //! Minimal CLI argument parsing (no clap in the vendored closure):
-//! `repro <command> [--key value] [--key=value] [--flag]`.
+//! `repro <command> [subcommand] [--key value] [--key=value] [--flag]`.
 
 use crate::Result;
 use std::collections::BTreeMap;
@@ -8,6 +8,9 @@ use std::collections::BTreeMap;
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
+    /// Optional action word directly after the command (`cache stats`,
+    /// `cache clear`). Commands that take none reject it in `main`.
+    pub subcommand: Option<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
 }
@@ -20,6 +23,9 @@ impl Args {
         if let Some(cmd) = iter.next() {
             anyhow::ensure!(!cmd.starts_with('-'), "expected a command, got '{cmd}'");
             out.command = cmd;
+        }
+        if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+            out.subcommand = iter.next();
         }
         while let Some(arg) = iter.next() {
             let Some(name) = arg.strip_prefix("--") else {
@@ -125,7 +131,21 @@ mod tests {
     }
 
     #[test]
+    fn subcommand_word_is_captured() {
+        let a = parse(&["cache", "stats", "--cache-dir", "/tmp/c"]);
+        assert_eq!(a.command, "cache");
+        assert_eq!(a.subcommand.as_deref(), Some("stats"));
+        assert_eq!(a.get("cache-dir"), Some("/tmp/c"));
+        // No subcommand: options parse as before.
+        let b = parse(&["preprocess", "--dir", "/tmp/d"]);
+        assert_eq!(b.subcommand, None);
+        assert_eq!(b.get("dir"), Some("/tmp/d"));
+    }
+
+    #[test]
     fn rejects_stray_positional() {
-        assert!(Args::parse(["cmd", "stray"].iter().map(|s| s.to_string())).is_err());
+        // One action word is allowed (the subcommand slot); a second
+        // positional is still an error.
+        assert!(Args::parse(["cmd", "sub", "stray"].iter().map(|s| s.to_string())).is_err());
     }
 }

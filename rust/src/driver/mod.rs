@@ -18,18 +18,26 @@
 //! control and must keep its measured cost profile.
 
 use crate::baseline::{clean_frame_rows, RowCleaner};
+use crate::cache::CacheManager;
 use crate::frame::LocalFrame;
 use crate::ingest::append::ingest_files_append;
 use crate::metrics::{StageClock, StageTimes};
 use crate::pipeline::presets::case_study_plan;
+use crate::plan::{LogicalPlan, PlanOutput};
 use crate::Result;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Stage keys used across drivers, reports and benches.
 pub const INGESTION: &str = "ingestion";
 pub const PRE_CLEANING: &str = "pre_cleaning";
 pub const CLEANING: &str = "cleaning";
 pub const POST_CLEANING: &str = "post_cleaning";
+/// Restore-from-cache stage: the only stage a cache-hit run records.
+/// Kept distinct from the paper's four keys so Tables 2–4 report a warm
+/// run honestly (t_c collapses to deserialization) instead of
+/// pretending the stages re-ran.
+pub const CACHE_RESTORE: &str = "cache_restore";
 
 /// Output of one preprocessing run.
 #[derive(Debug, Clone)]
@@ -51,9 +59,36 @@ impl PreprocessResult {
         self.times.secs(INGESTION)
     }
 
-    /// Cumulative time t_c = t_i + t_pp (eq. 7, Table 4).
+    /// Restore time for a cache-hit run (0 for an executed run).
+    pub fn cache_restore_secs(&self) -> f64 {
+        self.times.secs(CACHE_RESTORE)
+    }
+
+    /// Whether this result was restored from the plan cache rather than
+    /// executed (the restore stage exists only on a hit — keyed on
+    /// presence, not magnitude, so a sub-tick restore still counts).
+    pub fn from_cache(&self) -> bool {
+        self.times.stages().any(|(stage, _)| stage == CACHE_RESTORE)
+    }
+
+    /// Cumulative time t_c = t_i + t_pp (eq. 7, Table 4) — plus the
+    /// restore time on a cache hit, where it *is* the cumulative cost.
     pub fn cumulative_secs(&self) -> f64 {
-        self.ingestion_secs() + self.preprocessing_secs()
+        self.ingestion_secs() + self.preprocessing_secs() + self.cache_restore_secs()
+    }
+}
+
+/// A plan execution *is* a preprocessing result — same frame, same
+/// stage-time and row accounting. Used by [`run_p3sapp`] and anywhere
+/// else a [`crate::plan::PlanOutput`] crosses into driver/report land.
+impl From<PlanOutput> for PreprocessResult {
+    fn from(out: PlanOutput) -> Self {
+        PreprocessResult {
+            frame: out.frame,
+            times: out.times,
+            rows_ingested: out.rows_ingested,
+            rows_out: out.rows_out,
+        }
     }
 }
 
@@ -71,6 +106,13 @@ pub struct DriverOptions {
     /// byte-identical either way; only the schedule differs. Ignored by
     /// the CA driver, which is the paper's eager control.
     pub stream: Option<crate::plan::StreamOptions>,
+    /// When set, P3SAPP consults the persistent plan cache before
+    /// executing: a fingerprint hit restores the frame (recorded under
+    /// the [`CACHE_RESTORE`] stage) and a miss executes then stores.
+    /// `None` (the default, and what `--no-cache` forces) is exactly
+    /// today's always-execute behavior. Ignored by the CA driver — the
+    /// paper's control must keep its measured cost profile.
+    pub cache: Option<Arc<CacheManager>>,
 }
 
 impl Default for DriverOptions {
@@ -80,6 +122,7 @@ impl Default for DriverOptions {
             title_col: "title".into(),
             abstract_col: "abstract".into(),
             stream: None,
+            cache: None,
         }
     }
 }
@@ -103,16 +146,32 @@ fn nullify_empty(frame: &mut LocalFrame) {
 /// Tables 2–4 accounting keeps working.
 pub fn run_p3sapp(files: &[PathBuf], opts: &DriverOptions) -> Result<PreprocessResult> {
     let plan = case_study_plan(files, &opts.title_col, &opts.abstract_col).optimize();
-    let out = match &opts.stream {
-        Some(stream) => plan.execute_stream(stream)?,
-        None => plan.execute(opts.workers)?,
-    };
-    Ok(PreprocessResult {
-        frame: out.frame,
-        times: out.times,
-        rows_ingested: out.rows_ingested,
-        rows_out: out.rows_out,
-    })
+    if let Some(cache) = &opts.cache {
+        // A shard we cannot stat/digest would also fail the executor —
+        // fall through so the executor reports the real error, rather
+        // than failing the run from inside the cache layer.
+        if let Ok(fp) = crate::cache::fingerprint(&plan.render(), files) {
+            if let Some(hit) = cache.get(&fp) {
+                return Ok(hit.into());
+            }
+            let out = execute_plan(&plan, opts)?;
+            if let Err(e) = cache.put(&fp, &out) {
+                // A full disk must not fail a run that already computed
+                // its result; the next run simply misses again.
+                eprintln!("[cache] store failed (continuing uncached): {e:#}");
+            }
+            return Ok(out.into());
+        }
+    }
+    Ok(execute_plan(&plan, opts)?.into())
+}
+
+/// Execute an (already optimized) plan with the executor `opts` selects.
+fn execute_plan(plan: &LogicalPlan, opts: &DriverOptions) -> Result<PlanOutput> {
+    match &opts.stream {
+        Some(stream) => plan.execute_stream(stream),
+        None => plan.execute(opts.workers),
+    }
 }
 
 /// Algorithm 2 — conventional approach. Sequential append ingestion,
@@ -219,6 +278,36 @@ mod tests {
         assert_eq!(single.frame, streamed.frame);
         assert_eq!(single.rows_ingested, streamed.rows_ingested);
         assert_eq!(single.rows_out, streamed.rows_out);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cached_p3sapp_restores_byte_identical_frames() {
+        let (dir, files) = corpus("cache");
+        let cache = Arc::new(CacheManager::open(dir.join("plan-cache")).unwrap());
+        let cached_opts = DriverOptions {
+            workers: 2,
+            cache: Some(Arc::clone(&cache)),
+            ..Default::default()
+        };
+        let plain = run_p3sapp(&files, &DriverOptions { workers: 2, ..Default::default() })
+            .unwrap();
+
+        // Cold: executes (and stores) — not a restore.
+        let cold = run_p3sapp(&files, &cached_opts).unwrap();
+        assert!(!cold.from_cache());
+        assert_eq!(cold.frame, plain.frame, "--cache-dir must not change output");
+        assert_eq!(cache.stats().stores, 1);
+
+        // Warm: restored, byte-identical, honest stage accounting.
+        let warm = run_p3sapp(&files, &cached_opts).unwrap();
+        assert!(warm.from_cache());
+        assert_eq!(warm.frame, plain.frame);
+        assert_eq!(warm.rows_ingested, plain.rows_ingested);
+        assert_eq!(warm.rows_out, plain.rows_out);
+        assert_eq!(warm.times.stages().count(), 1, "only cache_restore");
+        assert_eq!(warm.cumulative_secs(), warm.cache_restore_secs());
+        assert!(cache.stats().hits() >= 1);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -9,8 +9,11 @@
 //!   by a Catalyst/Tungsten-style plan layer (`plan`: lazy logical
 //!   plans, an optimizer that fuses adjacent string stages, a
 //!   single-pass physical executor, and a streaming executor that
-//!   overlaps shard parsing with cleaning), the conventional sequential
-//!   baseline (`baseline`), the PJRT runtime that drives the
+//!   overlaps shard parsing with cleaning), a persistent plan cache
+//!   (`cache`: fingerprinted, content-addressed artifacts so repeated
+//!   jobs restore their frame instead of re-executing), the
+//!   conventional sequential baseline (`baseline`), the PJRT runtime
+//!   that drives the
 //!   AOT-compiled seq2seq model (`runtime`), and the analysis/reporting
 //!   layer regenerating every table and figure of the paper
 //!   (`analysis`, `report`).
@@ -71,6 +74,7 @@
 pub mod analysis;
 pub mod baseline;
 pub mod benchkit;
+pub mod cache;
 pub mod cli;
 pub mod config;
 pub mod corpus;

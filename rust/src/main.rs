@@ -8,10 +8,12 @@
 //!   train        preprocess then train the seq2seq model (AOT/PJRT)
 //!   infer        generate titles with a freshly trained model
 //!   report       regenerate the paper's tables/figures (e1..e9, all)
+//!   cache        inspect (stats) or empty (clear) the plan cache
 //!
 //! Run `repro help` for options.
 
 use p3sapp::analysis::accuracy::match_column;
+use p3sapp::cache::CacheManager;
 use p3sapp::cli::Args;
 use p3sapp::config::AppConfig;
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
@@ -22,6 +24,7 @@ use p3sapp::runtime::{Generator, Session, Trainer};
 use p3sapp::vocab::{Batcher, Vocabulary};
 use p3sapp::Result;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -57,6 +60,7 @@ fn usage() {
          \x20 report      [--exp all|e1|...|e9] [--base-dir B] [--scale F]\n\
          \x20             [--tiers 1,2,3] [--workers N] [--artifacts A] [--csv]\n\
          \x20             [--explain]\n\
+         \x20 cache       stats|clear --cache-dir D\n\
          \x20 help\n\
          \n\
          common options:\n\
@@ -67,7 +71,11 @@ fn usage() {
          \x20 --queue-cap N   streaming backpressure window in partitions\n\
          \x20                 (implies --stream; default 16)\n\
          \x20 --readers N     streaming parse threads (implies --stream;\n\
-         \x20                 default: a quarter of the cores)\n"
+         \x20                 default: a quarter of the cores)\n\
+         \x20 --cache-dir D   persistent plan cache: P3SAPP runs restore a\n\
+         \x20                 fingerprint-identical preprocessed frame instead\n\
+         \x20                 of re-executing (report repeats, train/infer)\n\
+         \x20 --no-cache      ignore --cache-dir (always execute)\n"
     );
 }
 
@@ -79,6 +87,11 @@ fn load_config(args: &Args) -> Result<AppConfig> {
 }
 
 fn run(args: &Args) -> Result<()> {
+    if let Some(sub) = &args.subcommand {
+        // Only `cache` takes an action word; elsewhere a stray
+        // positional is the error it always was.
+        anyhow::ensure!(args.command == "cache", "unexpected argument '{sub}'");
+    }
     match args.command.as_str() {
         "gen-corpus" => cmd_gen_corpus(args),
         "preprocess" => cmd_preprocess(args),
@@ -87,6 +100,7 @@ fn run(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "infer" => cmd_infer(args),
         "report" => cmd_report(args),
+        "cache" => cmd_cache(args),
         "help" | "" => {
             usage();
             Ok(())
@@ -128,6 +142,21 @@ fn cmd_gen_corpus(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Execution options shared by every command that runs the P3SAPP
+/// driver (`preprocess` / `explain` / `compare` / `train` / `infer` /
+/// `report`), parsed in exactly one place: the worker count, the
+/// streaming-executor knobs and the plan-cache flags.
+struct CommonOpts {
+    workers: usize,
+    stream: Option<p3sapp::plan::StreamOptions>,
+    cache: Option<Arc<CacheManager>>,
+}
+
+fn common_opts(args: &Args, cfg: &AppConfig) -> Result<CommonOpts> {
+    let workers = args.get_usize("workers", cfg.engine.workers)?;
+    Ok(CommonOpts { workers, stream: stream_opts(args, workers)?, cache: cache_opt(args)? })
+}
+
 /// `--stream` / `--queue-cap N` / `--readers N` → streaming executor
 /// options (the latter two imply `--stream`). `workers` is the resolved
 /// `--workers` value, reused as the streaming cleaning-pool size.
@@ -144,9 +173,26 @@ fn stream_opts(args: &Args, workers: usize) -> Result<Option<p3sapp::plan::Strea
     }))
 }
 
+/// `--cache-dir D` opens the persistent plan cache; `--no-cache`
+/// disables it even when a dir is given (today's always-execute
+/// behavior, exactly).
+fn cache_opt(args: &Args) -> Result<Option<Arc<CacheManager>>> {
+    match args.get("cache-dir") {
+        Some(dir) if !args.flag("no-cache") => {
+            Ok(Some(Arc::new(CacheManager::open(PathBuf::from(dir))?)))
+        }
+        _ => Ok(None),
+    }
+}
+
 fn driver_opts(args: &Args, cfg: &AppConfig) -> Result<DriverOptions> {
-    let workers = args.get_usize("workers", cfg.engine.workers)?;
-    Ok(DriverOptions { workers, stream: stream_opts(args, workers)?, ..Default::default() })
+    let common = common_opts(args, cfg)?;
+    Ok(DriverOptions {
+        workers: common.workers,
+        stream: common.stream,
+        cache: common.cache,
+        ..Default::default()
+    })
 }
 
 /// Build the case-study plan for a corpus dir (what `run_p3sapp`
@@ -156,10 +202,16 @@ fn case_plan(files: &[PathBuf], opts: &DriverOptions) -> p3sapp::plan::LogicalPl
     p3sapp::pipeline::presets::case_study_plan(files, &opts.title_col, &opts.abstract_col)
 }
 
-/// EXPLAIN rendering matching the executor `opts` selects: streaming
-/// topology when `--stream` is on, the single-pass program otherwise.
+/// EXPLAIN rendering matching the execution `opts` select: the
+/// cache-restore path on a warm cache, else the streaming topology when
+/// `--stream` is on, else the single-pass program.
 fn render_explain(files: &[PathBuf], opts: &DriverOptions) -> Result<String> {
-    p3sapp::plan::explain_with(&case_plan(files, opts), opts.workers, opts.stream.as_ref())
+    p3sapp::cache::explain_with_cache(
+        &case_plan(files, opts),
+        opts.workers,
+        opts.stream.as_ref(),
+        opts.cache.as_deref(),
+    )
 }
 
 fn cmd_explain(args: &Args) -> Result<()> {
@@ -360,13 +412,15 @@ fn cmd_report(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let exp = args.get_or("exp", "all");
     let base = PathBuf::from(args.get_or("base-dir", "/tmp/p3sapp-experiments"));
+    let common = common_opts(args, &cfg)?;
     let mut opts = rpt::SuiteOptions::new(&base);
     opts.seed = args.get_u64("seed", cfg.corpus.seed)?;
     opts.scale = args.get_f64("scale", cfg.corpus.scale)?;
-    opts.workers = args.get_usize("workers", cfg.engine.workers)?;
+    opts.workers = common.workers;
     opts.tiers = args.get_usize_list("tiers", &[1, 2, 3, 4, 5])?;
     opts.explain = args.flag("explain");
-    opts.stream = stream_opts(args, opts.workers)?;
+    opts.stream = common.stream;
+    opts.cache = common.cache;
     let csv = args.flag("csv");
 
     let needs_mtt = matches!(exp, "all" | "e5" | "e6");
@@ -416,6 +470,57 @@ fn cmd_report(args: &Args) -> Result<()> {
     }
     if want("e9") {
         report_inference_time(args, &cfg)?;
+    }
+    Ok(())
+}
+
+/// `repro cache stats|clear --cache-dir D` — inspect or empty the
+/// persistent plan cache without running any preprocessing.
+fn cmd_cache(args: &Args) -> Result<()> {
+    let dir = args
+        .get("cache-dir")
+        .ok_or_else(|| anyhow::anyhow!("--cache-dir is required"))?;
+    let sub = args.subcommand.as_deref().unwrap_or("stats");
+    anyhow::ensure!(
+        sub == "stats" || sub == "clear",
+        "cache takes 'stats' or 'clear', got '{sub}'"
+    );
+    // Inspection must not create directories: a typo'd --cache-dir
+    // should be reported, not silently materialized as an empty cache.
+    if !Path::new(dir).is_dir() {
+        anyhow::bail!("no cache directory at {dir}");
+    }
+    let mgr = CacheManager::open(PathBuf::from(dir))?;
+    match sub {
+        "stats" => {
+            let entries = mgr.entries()?;
+            let mut t = rpt::TextTable::new(
+                format!("Plan cache at {dir}"),
+                &["key", "size (KB)", "age (s)"],
+            );
+            let now = std::time::SystemTime::now();
+            let mut total = 0u64;
+            for e in &entries {
+                total += e.bytes;
+                let age = e
+                    .modified
+                    .and_then(|m| now.duration_since(m).ok())
+                    .map(|d| format!("{:.0}", d.as_secs_f64()))
+                    .unwrap_or_else(|| "-".into());
+                t.row(vec![e.key.clone(), format!("{:.1}", e.bytes as f64 / 1024.0), age]);
+            }
+            print!("{}", t.render());
+            println!(
+                "{} artifacts, {:.2} MB total",
+                entries.len(),
+                total as f64 / (1024.0 * 1024.0)
+            );
+        }
+        "clear" => {
+            let n = mgr.clear()?;
+            println!("removed {n} cached artifacts from {dir}");
+        }
+        _ => unreachable!("validated above"),
     }
     Ok(())
 }

@@ -30,6 +30,12 @@ pub struct SuiteOptions {
     /// clean overlap) instead of the fused single pass; the EXPLAIN
     /// output switches to the streaming topology accordingly.
     pub stream: Option<crate::plan::StreamOptions>,
+    /// When set, each tier's P3SAPP run consults the persistent plan
+    /// cache ([`crate::cache::CacheManager`]): a repeated `report` run
+    /// (same corpus, same plan) restores every tier's frame instead of
+    /// re-executing, and the EXPLAIN output renders the cache-hit path.
+    /// The CA control never uses the cache.
+    pub cache: Option<std::sync::Arc<crate::cache::CacheManager>>,
 }
 
 impl SuiteOptions {
@@ -43,6 +49,7 @@ impl SuiteOptions {
             skip_ca: false,
             explain: false,
             stream: None,
+            cache: None,
         }
     }
 }
@@ -93,20 +100,23 @@ pub fn run_tier(opts: &SuiteOptions, tier: usize) -> Result<TierResult> {
     let driver_opts = DriverOptions {
         workers: opts.workers,
         stream: opts.stream.clone(),
+        cache: opts.cache.clone(),
         ..Default::default()
     };
     if opts.explain {
         // Print exactly the plan run_p3sapp is about to execute, built
-        // from the same files, column config and executor choice.
+        // from the same files, column config, executor choice and cache
+        // state (a warm cache renders the restore path).
         let plan = crate::pipeline::presets::case_study_plan(
             &files,
             &driver_opts.title_col,
             &driver_opts.abstract_col,
         );
-        let text = crate::plan::explain_with(
+        let text = crate::cache::explain_with_cache(
             &plan,
             driver_opts.workers,
             driver_opts.stream.as_ref(),
+            driver_opts.cache.as_deref(),
         )?;
         eprintln!("{text}");
     }
@@ -206,6 +216,30 @@ mod tests {
         // Second run reuses the corpus (manifest match).
         let again = run_tier(&opts, 1).unwrap();
         assert_eq!(again.size_bytes, t.size_bytes);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn repeated_report_run_hits_the_plan_cache() {
+        let base =
+            std::env::temp_dir().join(format!("p3sapp-suite-cache-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let mut opts = SuiteOptions::new(&base);
+        opts.scale = 0.1;
+        opts.workers = 2;
+        opts.tiers = vec![1];
+        opts.skip_ca = true; // the control never caches anyway
+        let cache =
+            std::sync::Arc::new(crate::cache::CacheManager::open(base.join("cache")).unwrap());
+        opts.cache = Some(std::sync::Arc::clone(&cache));
+
+        let first = run_suite(&opts).unwrap();
+        assert!(!first.tiers[0].p3sapp.from_cache());
+        let second = run_suite(&opts).unwrap();
+        assert!(second.tiers[0].p3sapp.from_cache(), "repeat must restore");
+        assert_eq!(second.tiers[0].p3sapp.frame, first.tiers[0].p3sapp.frame);
+        assert_eq!(cache.stats().stores, 1);
+        assert!(cache.stats().hits() >= 1);
         std::fs::remove_dir_all(&base).unwrap();
     }
 }

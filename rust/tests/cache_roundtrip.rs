@@ -1,0 +1,185 @@
+//! Plan-cache correctness contract: a warm restore must be
+//! byte-identical to the live execution; anything that changes the work
+//! (shard content, plan shape) must miss; a damaged artifact must be a
+//! miss that re-executes, never an error.
+
+use p3sapp::cache::{fingerprint, CacheConfig, CacheManager};
+use p3sapp::corpus::{generate_corpus, CorpusSpec};
+use p3sapp::driver::{run_p3sapp, DriverOptions};
+use p3sapp::ingest::list_shards;
+use p3sapp::pipeline::presets::case_study_plan;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn corpus(name: &str, seed: u64) -> (PathBuf, Vec<PathBuf>) {
+    let dir =
+        std::env::temp_dir().join(format!("p3sapp-cachert-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut spec = CorpusSpec::tiny(seed);
+    spec.dup_rate = 0.15;
+    spec.null_title_rate = 0.1;
+    generate_corpus(&spec, &dir).unwrap();
+    let files = list_shards(&dir).unwrap();
+    (dir, files)
+}
+
+/// A disk-only manager over `dir` — a fresh one per call models a new
+/// process (empty memo), which is the tier the cross-run guarantees
+/// live in.
+fn disk_manager(dir: &std::path::Path) -> CacheManager {
+    CacheManager::with_config(CacheConfig {
+        dir: dir.to_path_buf(),
+        max_bytes: 0,
+        memory: false,
+        memory_max_bytes: 0,
+    })
+    .unwrap()
+}
+
+#[test]
+fn round_trip_restores_the_live_frame_byte_for_byte() {
+    let (dir, files) = corpus("rt", 11);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let live = plan.execute(2).unwrap();
+
+    let cache_dir = dir.join("cache");
+    let fp = fingerprint(&plan.render(), &files).unwrap();
+    disk_manager(&cache_dir).put(&fp, &live).unwrap();
+
+    // A different manager instance (fresh process, no memo) restores.
+    let restored = disk_manager(&cache_dir).get(&fp).expect("warm hit");
+    assert_eq!(restored.frame, live.frame, "restored frame must be byte-identical");
+    assert_eq!(restored.rows_ingested, live.rows_ingested);
+    assert_eq!(restored.rows_out, live.rows_out);
+    assert_eq!(restored.nulls_dropped, live.nulls_dropped);
+    assert_eq!(restored.dups_dropped, live.dups_dropped);
+    assert_eq!(restored.empties_dropped, live.empties_dropped);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn touched_but_identical_shard_still_hits() {
+    let (dir, files) = corpus("touch", 19);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let cache_dir = dir.join("cache");
+    let fp = fingerprint(&plan.render(), &files).unwrap();
+    disk_manager(&cache_dir).put(&fp, &plan.execute(2).unwrap()).unwrap();
+
+    // Rewrite a shard with its own bytes: mtime moves, content doesn't.
+    let bytes = std::fs::read(&files[0]).unwrap();
+    std::fs::write(&files[0], &bytes).unwrap();
+
+    let fp2 = fingerprint(&plan.render(), &files).unwrap();
+    assert_eq!(fp.key(), fp2.key(), "the digest names the bytes, not the mtime");
+    assert!(disk_manager(&cache_dir).get(&fp2).is_some());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn content_edit_with_forced_equal_mtime_misses() {
+    let (dir, files) = corpus("edit", 29);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let cache_dir = dir.join("cache");
+    let fp = fingerprint(&plan.render(), &files).unwrap();
+    disk_manager(&cache_dir).put(&fp, &plan.execute(2).unwrap()).unwrap();
+
+    // Same-length edit, then force the original mtime back — the
+    // stat-visible identity is unchanged; only the bytes differ.
+    let shard = &files[0];
+    let old_mtime = std::fs::metadata(shard).unwrap().modified().unwrap();
+    let mut bytes = std::fs::read(shard).unwrap();
+    let i = bytes.iter().position(|&b| b.is_ascii_lowercase()).unwrap();
+    bytes[i] = if bytes[i] == b'z' { b'y' } else { b'z' };
+    std::fs::write(shard, &bytes).unwrap();
+    std::fs::File::options()
+        .write(true)
+        .open(shard)
+        .unwrap()
+        .set_modified(old_mtime)
+        .unwrap();
+    assert_eq!(
+        std::fs::metadata(shard).unwrap().modified().unwrap(),
+        old_mtime,
+        "mtime restoration must hold for this test to mean anything"
+    );
+
+    let fp2 = fingerprint(&plan.render(), &files).unwrap();
+    assert_ne!(fp.key(), fp2.key(), "content digest must see through the mtime");
+    assert!(disk_manager(&cache_dir).get(&fp2).is_none());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn plan_shape_change_misses() {
+    let (dir, files) = corpus("shape", 37);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let cache_dir = dir.join("cache");
+    let fp = fingerprint(&plan.render(), &files).unwrap();
+    disk_manager(&cache_dir).put(&fp, &plan.execute(2).unwrap()).unwrap();
+
+    // The same corpus under a different plan (unoptimized: more ops in
+    // the render) must derive a different key and miss.
+    let other = case_study_plan(&files, "title", "abstract");
+    let fp2 = fingerprint(&other.render(), &files).unwrap();
+    assert_ne!(fp.key(), fp2.key());
+    assert!(disk_manager(&cache_dir).get(&fp2).is_none());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn truncated_artifact_is_a_miss_and_the_driver_reexecutes() {
+    let (dir, files) = corpus("trunc", 43);
+    let cache_dir = dir.join("cache");
+    let cache = Arc::new(CacheManager::open(&cache_dir).unwrap());
+    let opts = DriverOptions { workers: 2, cache: Some(Arc::clone(&cache)), ..Default::default() };
+
+    let cold = run_p3sapp(&files, &opts).unwrap();
+    assert!(!cold.from_cache());
+
+    // Truncate the stored artifact mid-payload.
+    let entries = cache.entries().unwrap();
+    assert_eq!(entries.len(), 1);
+    let artifact = entries[0].path.clone();
+    let bytes = std::fs::read(&artifact).unwrap();
+    std::fs::write(&artifact, &bytes[..bytes.len() / 3]).unwrap();
+
+    // Fresh manager (no memo): the damaged artifact must be treated as
+    // a miss and the run must re-execute to the same bytes — no error.
+    let cache2 = Arc::new(disk_manager(&cache_dir));
+    let opts2 =
+        DriverOptions { workers: 2, cache: Some(Arc::clone(&cache2)), ..Default::default() };
+    let rerun = run_p3sapp(&files, &opts2).unwrap();
+    assert!(!rerun.from_cache(), "corrupt artifact must not restore");
+    assert_eq!(rerun.frame, cold.frame);
+    assert_eq!(cache2.stats().corrupt, 1);
+    assert_eq!(cache2.stats().stores, 1, "re-executed result re-stored");
+
+    // And the re-stored artifact is valid again.
+    let warm = run_p3sapp(&files, &opts2).unwrap();
+    assert!(warm.from_cache());
+    assert_eq!(warm.frame, cold.frame);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn no_cache_matches_cached_outputs_exactly() {
+    let (dir, files) = corpus("nocache", 53);
+    let cache = Arc::new(CacheManager::open(dir.join("cache")).unwrap());
+    let without = run_p3sapp(&files, &DriverOptions { workers: 2, ..Default::default() })
+        .unwrap();
+    let with_cold = run_p3sapp(
+        &files,
+        &DriverOptions { workers: 2, cache: Some(Arc::clone(&cache)), ..Default::default() },
+    )
+    .unwrap();
+    let with_warm = run_p3sapp(
+        &files,
+        &DriverOptions { workers: 2, cache: Some(Arc::clone(&cache)), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(without.frame, with_cold.frame);
+    assert_eq!(without.frame, with_warm.frame);
+    assert_eq!(without.rows_out, with_warm.rows_out);
+    assert!(!without.from_cache() && !with_cold.from_cache() && with_warm.from_cache());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
