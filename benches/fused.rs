@@ -16,13 +16,25 @@
 //!
 //!   5. cache cold — fingerprint + execute + store the artifact;
 //!   6. cache warm — fingerprint + restore from disk (memo disabled, so
-//!                   this is the honest second-process number).
+//!                   this is the honest second-process number);
+//!
+//! plus the estimator pair measuring the two-pass Idf lowering against
+//! the staged `Pipeline::fit`/`transform` path it replaces:
+//!
+//!   7. staged tfidf — eager ingest/clean, then Pipeline::fit (which
+//!                     materializes the frame once per estimator) and
+//!                     transform;
+//!   8. twopass      — the same job lowered into the plan: fit pass
+//!                     (df accumulation, no materialization) + fused
+//!                     pass 2; also measured on the streaming executor.
 //!
 //! Results are also recorded as machine-readable JSON (defaults under
 //! `target/` so bench runs never dirty the checked-in schema records
-//! `BENCH_streaming.json` / `BENCH_cache.json` at the repo root;
-//! override with `BENCH_STREAMING_JSON=path` / `BENCH_CACHE_JSON=path`,
-//! disable with `=-`).
+//! `BENCH_streaming.json` / `BENCH_cache.json` / `BENCH_twopass.json`
+//! at the repo root; override with `BENCH_STREAMING_JSON=path` /
+//! `BENCH_CACHE_JSON=path` / `BENCH_TWOPASS_JSON=path`, disable with
+//! `=-`). CI's bench-smoke job regenerates all three and runs the
+//! `benchgate` comparator against the repo-root records.
 //!
 //!     cargo bench --bench fused
 //!     BENCH_SCALE=4 BENCH_WORKERS=8 cargo bench --bench fused
@@ -31,21 +43,42 @@ use p3sapp::benchkit::{bench, black_box, env_f64, env_usize, Measurement};
 use p3sapp::cache::{fingerprint, CacheConfig, CacheManager};
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
 use p3sapp::engine::rebalance;
-use p3sapp::frame::{distinct, drop_nulls};
+use p3sapp::frame::{distinct, drop_nulls, Frame};
 use p3sapp::ingest::list_shards;
 use p3sapp::ingest::spark::{ingest_files, IngestOptions};
-use p3sapp::pipeline::presets::{case_study_pipeline, case_study_plan};
+use p3sapp::pipeline::presets::{
+    case_study_features_pipeline, case_study_features_plan, case_study_pipeline, case_study_plan,
+};
 use p3sapp::plan::StreamOptions;
 use std::path::PathBuf;
 
 const COLS: [&str; 2] = ["title", "abstract"];
 
-fn staged(files: &[PathBuf], workers: usize) -> usize {
+fn staged_cleaned(files: &[PathBuf], workers: usize) -> Frame {
     let frame = ingest_files(files, &COLS, &IngestOptions::with_workers(workers)).unwrap();
     let (frame, _) = drop_nulls(frame, &COLS).unwrap();
     let (frame, _) = distinct(frame, &COLS).unwrap();
-    let frame = rebalance(frame, workers);
+    rebalance(frame, workers)
+}
+
+fn staged(files: &[PathBuf], workers: usize) -> usize {
+    let frame = staged_cleaned(files, workers);
     let model = case_study_pipeline("title", "abstract").fit(&frame).unwrap();
+    let frame = model.transform(frame, workers).unwrap();
+    let mut local = frame.collect();
+    for ci in 0..local.num_columns() {
+        local.column_mut(ci).nullify_empty_strs();
+    }
+    local.drop_nulls(&COLS).unwrap();
+    local.num_rows()
+}
+
+/// The pre-plan shape of the full Table-2 pipeline: `Pipeline::fit`
+/// materializes the working frame stage by stage to fit the IDF
+/// estimator, then transforms — the path the two-pass lowering replaces.
+fn staged_tfidf(files: &[PathBuf], workers: usize) -> usize {
+    let frame = staged_cleaned(files, workers);
+    let model = case_study_features_pipeline("title", "abstract").fit(&frame).unwrap();
     let frame = model.transform(frame, workers).unwrap();
     let mut local = frame.collect();
     for ci in 0..local.num_columns() {
@@ -145,6 +178,26 @@ fn main() {
         m_cold.mean_secs() / m_warm.mean_secs()
     );
 
+    // Two-pass estimator arms: the full Table-2 pipeline (cleaning +
+    // Tokenizer → HashingTF → IDF), staged vs lowered into the plan.
+    let features_plan = case_study_features_plan(&files, "title", "abstract").optimize();
+    let m_staged_tfidf = bench("staged tfidf (Pipeline::fit + transform)", 1, 5, || {
+        staged_tfidf(black_box(&files), workers)
+    });
+    println!("\n  {}", m_staged_tfidf.report());
+    let m_twopass = bench("plan twopass (fit pass + fused pass)", 1, 5, || {
+        black_box(&features_plan).execute(workers).unwrap().rows_out
+    });
+    println!("  {}", m_twopass.report());
+    let m_twopass_stream = bench("plan twopass streaming (both passes)", 1, 5, || {
+        black_box(&features_plan).execute_stream(&stream_opts).unwrap().rows_out
+    });
+    println!("  {}", m_twopass_stream.report());
+    println!(
+        "\n  twopass speedup (staged_tfidf/twopass):         {:.2}x",
+        m_staged_tfidf.mean_secs() / m_twopass.mean_secs()
+    );
+
     let arms: [(&str, &Measurement); 4] = [
         ("staged", &m_staged),
         ("plan", &m_plan),
@@ -156,6 +209,15 @@ fn main() {
     let resolved = StreamOptions { readers: s_readers, workers: s_workers, queue_cap: s_cap };
     write_json(&manifest, workers, &resolved, &arms);
     write_cache_json(&manifest, workers, &[("cache_cold", &m_cold), ("cache_warm", &m_warm)]);
+    write_twopass_json(
+        &manifest,
+        workers,
+        &[
+            ("staged_tfidf", &m_staged_tfidf),
+            ("twopass", &m_twopass),
+            ("twopass_stream", &m_twopass_stream),
+        ],
+    );
 
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -205,6 +267,30 @@ fn write_json(
     match std::fs::write(&path, json) {
         Ok(()) => println!("\n  wrote {path}"),
         Err(e) => eprintln!("\n  could not write {path}: {e}"),
+    }
+}
+
+/// Record the staged-vs-two-pass estimator timings (schema documented
+/// by the repo-root `BENCH_twopass.json`; CI smoke-runs the file and
+/// gates it with `benchgate`).
+fn write_twopass_json(
+    manifest: &p3sapp::corpus::CorpusManifest,
+    workers: usize,
+    arms: &[(&str, &Measurement)],
+) {
+    let path = std::env::var("BENCH_TWOPASS_JSON")
+        .unwrap_or_else(|_| "target/BENCH_twopass.json".into());
+    if path == "-" {
+        return;
+    }
+    let arms_json = arms_json(arms);
+    let json = format!(
+        "{{\n  \"bench\": \"twopass\",\n  \"records\": {},\n  \"files\": {},\n  \"bytes\": {},\n  \"workers\": {workers},\n  \"arms\": [\n{arms_json}\n  ]\n}}\n",
+        manifest.n_records, manifest.n_files, manifest.total_bytes
+    );
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
     }
 }
 

@@ -1,7 +1,18 @@
 //! Micro-benchmark support (no criterion in the vendored dependency
 //! closure): warmup + N timed iterations, mean/median/stddev reporting,
 //! and a tiny black_box. Used by the `benches/` harnesses.
+//!
+//! Also home of the **bench-regression comparator** behind the
+//! `benchgate` binary: it diffs a freshly measured `BENCH_*.json`
+//! against the checked-in repo-root record and fails CI when a tracked
+//! arm regresses. Because absolute seconds are meaningless across
+//! runner hardware, arms are compared as **ratios to the record's first
+//! arm** (the reference workload measured in the same run — `staged`,
+//! `cache_cold`, `staged_tfidf`): a real regression in, say, the
+//! streaming executor moves `streaming/staged` no matter how fast the
+//! machine is.
 
+use crate::json::Json;
 use std::hint;
 use std::time::{Duration, Instant};
 
@@ -86,6 +97,118 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
     }
 }
 
+/// One parsed `BENCH_*.json`: the per-arm mean times, in file order.
+/// The first arm is the comparison reference (see [`gate`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    pub arms: Vec<(String, f64)>,
+    /// `"provisional": true` marks a baseline whose ratios were not
+    /// measured on the gating hardware (e.g. authored before a CI run
+    /// existed). The gate still compares and reports, but regressions
+    /// are demoted to warnings — re-baseline from a measured run and
+    /// drop the flag to arm the gate for real.
+    pub provisional: bool,
+}
+
+impl BenchRecord {
+    fn mean_of(&self, name: &str) -> Option<f64> {
+        self.arms.iter().find(|(n, _)| n == name).map(|(_, m)| *m)
+    }
+}
+
+/// Parse the `arms` array of a `BENCH_*.json` document (the shape
+/// `benches/fused.rs` writes and the repo-root schema records pin).
+/// A record whose `arms` is empty parses fine — the gate treats it as
+/// "no baseline yet" and only warns.
+pub fn parse_bench_record(text: &str) -> crate::Result<BenchRecord> {
+    let doc = crate::json::parse(text)?;
+    let Json::Obj(obj) = &doc else {
+        anyhow::bail!("bench record is not a JSON object");
+    };
+    let arms_json = match obj.get("arms") {
+        Some(Json::Arr(a)) => a.as_slice(),
+        Some(Json::Null) | None => &[],
+        Some(other) => anyhow::bail!("bench record 'arms' is not an array: {other:?}"),
+    };
+    let mut arms = Vec::with_capacity(arms_json.len());
+    for arm in arms_json {
+        let Json::Obj(fields) = arm else {
+            anyhow::bail!("bench arm is not a JSON object: {arm:?}");
+        };
+        let name = fields
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("bench arm without a 'name'"))?;
+        let mean = fields
+            .get("mean_secs")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("bench arm '{name}' without 'mean_secs'"))?;
+        arms.push((name.to_string(), mean));
+    }
+    let provisional = matches!(obj.get("provisional"), Some(Json::Bool(true)));
+    Ok(BenchRecord { arms, provisional })
+}
+
+/// Outcome of gating one `record` (the checked-in baseline) against one
+/// `current` (the freshly measured run).
+#[derive(Debug)]
+pub struct GateReport {
+    /// Human-readable per-arm lines (always populated when compared).
+    pub lines: Vec<String>,
+    /// Failures that should fail the CI job; empty = pass.
+    pub failures: Vec<String>,
+    /// True when the record carries no baseline arms (warn-only mode).
+    pub no_baseline: bool,
+}
+
+/// Compare `current` against `record`. Every tracked arm (all record
+/// arms past the first) is compared as its ratio to the record's first
+/// arm; a ratio that grew by more than `threshold` (0.25 = +25%) is a
+/// failure, as is a tracked arm or the reference arm missing from the
+/// current run. An empty-`arms` record yields warn-only (no baseline).
+pub fn gate(record: &BenchRecord, current: &BenchRecord, threshold: f64) -> GateReport {
+    let mut report = GateReport { lines: Vec::new(), failures: Vec::new(), no_baseline: false };
+    let Some((ref_name, ref_rec_mean)) = record.arms.first().cloned() else {
+        report.no_baseline = true;
+        return report;
+    };
+    let Some(ref_cur_mean) = current.mean_of(&ref_name) else {
+        report
+            .failures
+            .push(format!("reference arm '{ref_name}' missing from the current run"));
+        return report;
+    };
+    if ref_rec_mean <= 0.0 || ref_cur_mean <= 0.0 {
+        report.failures.push(format!(
+            "reference arm '{ref_name}' has a non-positive mean (record {ref_rec_mean}, \
+             current {ref_cur_mean})"
+        ));
+        return report;
+    }
+    for (name, rec_mean) in record.arms.iter().skip(1) {
+        let Some(cur_mean) = current.mean_of(name) else {
+            report.failures.push(format!("tracked arm '{name}' missing from the current run"));
+            continue;
+        };
+        let rel_rec = rec_mean / ref_rec_mean;
+        let rel_cur = cur_mean / ref_cur_mean;
+        let regression = rel_cur / rel_rec - 1.0;
+        report.lines.push(format!(
+            "{name:24} ratio-to-{ref_name}: record {rel_rec:.3}, current {rel_cur:.3} \
+             ({:+.1}%)",
+            regression * 100.0
+        ));
+        if regression > threshold {
+            report.failures.push(format!(
+                "arm '{name}' regressed {:.1}% vs '{ref_name}' (threshold {:.0}%)",
+                regression * 100.0,
+                threshold * 100.0
+            ));
+        }
+    }
+    report
+}
+
 /// Environment knob helper for benches (`BENCH_SCALE=2 cargo bench`).
 pub fn env_f64(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -113,5 +236,69 @@ mod tests {
         let r = m.report();
         assert!(r.contains("fast"));
         assert!(r.contains("n=5"));
+    }
+
+    fn record(arms: &[(&str, f64)]) -> BenchRecord {
+        BenchRecord {
+            arms: arms.iter().map(|(n, m)| (n.to_string(), *m)).collect(),
+            provisional: false,
+        }
+    }
+
+    #[test]
+    fn parse_bench_record_reads_the_fused_schema() {
+        let text = r#"{
+  "bench": "fused", "records": 100, "workers": 4,
+  "arms": [
+    {"name": "staged", "mean_secs": 0.9, "median_secs": 0.9, "stddev_secs": 0.01, "iters": 5},
+    {"name": "streaming", "mean_secs": 0.4, "median_secs": 0.4, "stddev_secs": 0.02, "iters": 5}
+  ]
+}"#;
+        let r = parse_bench_record(text).unwrap();
+        assert_eq!(r, record(&[("staged", 0.9), ("streaming", 0.4)]));
+        assert!(!r.provisional, "absent flag defaults to a real baseline");
+        // Null schema record (repo-root placeholder): empty arms, no error.
+        let null = parse_bench_record(r#"{"bench": "fused", "records": null, "arms": []}"#)
+            .unwrap();
+        assert!(null.arms.is_empty());
+        // The provisional marker is read from the top level.
+        let prov =
+            parse_bench_record(r#"{"provisional": true, "arms": []}"#).unwrap();
+        assert!(prov.provisional);
+        // Malformed arm: an error, not a silent skip.
+        assert!(parse_bench_record(r#"{"arms": [{"mean_secs": 1.0}]}"#).is_err());
+        assert!(parse_bench_record("[1, 2]").is_err());
+    }
+
+    #[test]
+    fn gate_passes_within_threshold_and_fails_past_it() {
+        let rec = record(&[("staged", 1.0), ("fast", 0.5)]);
+        // Machine 2x slower overall: ratios identical → pass.
+        let pass = gate(&rec, &record(&[("staged", 2.0), ("fast", 1.0)]), 0.25);
+        assert!(pass.failures.is_empty(), "{:?}", pass.failures);
+        assert!(!pass.no_baseline);
+        assert_eq!(pass.lines.len(), 1);
+        // Tracked arm 30% worse relative to the reference → fail.
+        let fail = gate(&rec, &record(&[("staged", 1.0), ("fast", 0.65)]), 0.25);
+        assert_eq!(fail.failures.len(), 1, "{:?}", fail.failures);
+        assert!(fail.failures[0].contains("'fast' regressed"), "{:?}", fail.failures);
+        // Improvements never fail.
+        let ok = gate(&rec, &record(&[("staged", 1.0), ("fast", 0.2)]), 0.25);
+        assert!(ok.failures.is_empty());
+    }
+
+    #[test]
+    fn gate_handles_missing_arms_and_empty_baselines() {
+        let rec = record(&[("staged", 1.0), ("fast", 0.5)]);
+        // Empty baseline: warn-only.
+        let warn = gate(&record(&[]), &rec, 0.25);
+        assert!(warn.no_baseline && warn.failures.is_empty());
+        // Tracked arm vanished from the current run: fail.
+        let gone = gate(&rec, &record(&[("staged", 1.0)]), 0.25);
+        assert_eq!(gone.failures.len(), 1);
+        assert!(gone.failures[0].contains("missing"), "{:?}", gone.failures);
+        // Reference arm vanished: fail.
+        let noref = gate(&rec, &record(&[("fast", 0.5)]), 0.25);
+        assert!(noref.failures[0].contains("reference"), "{:?}", noref.failures);
     }
 }

@@ -1,0 +1,101 @@
+//! `benchgate` — the CI bench-regression gate.
+//!
+//! Usage: `benchgate [--threshold 0.25] <record.json> <current.json> [...]`
+//! (paths in pairs: the checked-in repo-root record, then the freshly
+//! measured `target/BENCH_*.json`).
+//!
+//! For every pair, each tracked arm (every record arm past the first)
+//! is compared as its **ratio to the record's first arm** — absolute
+//! seconds differ per runner, ratios to a reference workload measured
+//! in the same run do not. A ratio that grew more than the threshold
+//! (default +25%) fails the gate; a record with an empty `arms` list
+//! (the pre-baseline schema placeholder) only warns, so the gate can be
+//! landed before a baseline exists.
+//!
+//!     cargo run --release --bin benchgate -- \
+//!         BENCH_streaming.json target/BENCH_streaming.json \
+//!         BENCH_cache.json     target/BENCH_cache.json
+
+use p3sapp::benchkit::{gate, parse_bench_record, BenchRecord};
+
+fn load(path: &str) -> p3sapp::Result<BenchRecord> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+    parse_bench_record(&text).map_err(|e| anyhow::anyhow!("parse {path}: {e}"))
+}
+
+fn run(args: &[String]) -> p3sapp::Result<bool> {
+    let mut threshold = 0.25f64;
+    let mut paths: Vec<&str> = Vec::new();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        if arg == "--threshold" {
+            let v = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--threshold expects a value"))?;
+            threshold = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--threshold expects a number, got '{v}'"))?;
+        } else {
+            paths.push(arg);
+        }
+    }
+    anyhow::ensure!(
+        !paths.is_empty() && paths.len() % 2 == 0,
+        "usage: benchgate [--threshold F] <record.json> <current.json> [more pairs...]"
+    );
+
+    let mut all_pass = true;
+    for pair in paths.chunks(2) {
+        let (record_path, current_path) = (pair[0], pair[1]);
+        let record = load(record_path)?;
+        let current = load(current_path)?;
+        let report = gate(&record, &current, threshold);
+        println!("== {record_path} vs {current_path} ==");
+        if report.no_baseline {
+            println!(
+                "  warn: no baseline arms in {record_path} — gate skipped \
+                 (populate the record to arm it)"
+            );
+            continue;
+        }
+        for line in &report.lines {
+            println!("  {line}");
+        }
+        // A provisional baseline (ratios not yet measured on the gating
+        // hardware) reports regressions without failing the build — the
+        // record must be re-baselined from a measured run to arm it.
+        for f in &report.failures {
+            if record.provisional {
+                println!("  WARN (provisional baseline): {f}");
+            } else {
+                println!("  FAIL: {f}");
+                all_pass = false;
+            }
+        }
+        if report.failures.is_empty() {
+            println!("  pass (threshold {:.0}%)", threshold * 100.0);
+        } else if record.provisional {
+            println!(
+                "  provisional pass — re-baseline {record_path} from a measured \
+                 run and drop \"provisional\" to arm the gate"
+            );
+        }
+    }
+    Ok(all_pass)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(true) => {}
+        Ok(false) => {
+            eprintln!("benchgate: tracked arm regression detected");
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("benchgate: error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -5,12 +5,14 @@
 //! Layout (all integers little-endian):
 //! ```text
 //! magic    b"P3PC"        4 bytes
-//! version  u32            (1)
+//! version  u32            (2)
 //! key_len  u32, key bytes (fingerprint hex — verified on load)
 //! rows_ingested  u64      \
-//! nulls_dropped  u64       | the drop accounting the reports consume
-//! dups_dropped   u64       |
-//! empties_dropped u64     /
+//! nulls_dropped  u64       |
+//! dups_dropped   u64       | the drop accounting the reports consume
+//! empties_dropped u64      | (sampled/limited: rows a Sample/Limit
+//! sampled_out    u64       |  op excluded — v2 addition)
+//! limited_out    u64      /
 //! n_rows   u64
 //! n_cols   u32
 //! per column:
@@ -37,7 +39,10 @@ use crate::Result;
 use std::path::Path;
 
 pub(super) const MAGIC: &[u8; 4] = b"P3PC";
-pub(super) const VERSION: u32 = 1;
+/// v2: the accounting block grew `sampled_out` / `limited_out` (plan
+/// `Sample`/`Limit` support). v1 artifacts fail the version check and
+/// are treated as misses — the pass re-executes and re-stores.
+pub(super) const VERSION: u32 = 2;
 /// Magic + version + key_len is the minimum readable prefix; the digest
 /// trails the file.
 const MIN_LEN: usize = 4 + 4 + 4 + 8;
@@ -52,6 +57,8 @@ pub struct CachedFrame {
     pub nulls_dropped: usize,
     pub dups_dropped: usize,
     pub empties_dropped: usize,
+    pub sampled_out: usize,
+    pub limited_out: usize,
 }
 
 fn dtype_code(d: DType) -> u8 {
@@ -78,7 +85,14 @@ pub fn encode(key: &str, out: &PlanOutput) -> Vec<u8> {
     buf.extend_from_slice(&VERSION.to_le_bytes());
     buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
     buf.extend_from_slice(key.as_bytes());
-    for n in [out.rows_ingested, out.nulls_dropped, out.dups_dropped, out.empties_dropped] {
+    for n in [
+        out.rows_ingested,
+        out.nulls_dropped,
+        out.dups_dropped,
+        out.empties_dropped,
+        out.sampled_out,
+        out.limited_out,
+    ] {
         buf.extend_from_slice(&(n as u64).to_le_bytes());
     }
     let frame = &out.frame;
@@ -238,6 +252,8 @@ pub fn load(path: &Path, key: &str) -> Result<CachedFrame> {
     let nulls_dropped = cur.u64()? as usize;
     let dups_dropped = cur.u64()? as usize;
     let empties_dropped = cur.u64()? as usize;
+    let sampled_out = cur.u64()? as usize;
+    let limited_out = cur.u64()? as usize;
     let n_rows = cur.u64()? as usize;
     let n_cols = cur.u32()? as usize;
     // Never trust declared counts with allocations before checking them
@@ -322,7 +338,15 @@ pub fn load(path: &Path, key: &str) -> Result<CachedFrame> {
         "artifact row count mismatch: {} != {n_rows}",
         frame.num_rows()
     );
-    Ok(CachedFrame { frame, rows_ingested, nulls_dropped, dups_dropped, empties_dropped })
+    Ok(CachedFrame {
+        frame,
+        rows_ingested,
+        nulls_dropped,
+        dups_dropped,
+        empties_dropped,
+        sampled_out,
+        limited_out,
+    })
 }
 
 /// Atomically persist `out` to `path` (write to a sibling temp file,
@@ -374,9 +398,11 @@ mod tests {
             times: StageTimes::new(),
             rows_ingested: 9,
             rows_out: 3,
-            nulls_dropped: 4,
+            nulls_dropped: 2,
             dups_dropped: 1,
             empties_dropped: 1,
+            sampled_out: 1,
+            limited_out: 1,
         }
     }
 
@@ -393,9 +419,11 @@ mod tests {
         let restored = load(&path, "deadbeef").unwrap();
         assert_eq!(restored.frame, out.frame);
         assert_eq!(restored.rows_ingested, 9);
-        assert_eq!(restored.nulls_dropped, 4);
+        assert_eq!(restored.nulls_dropped, 2);
         assert_eq!(restored.dups_dropped, 1);
         assert_eq!(restored.empties_dropped, 1);
+        assert_eq!(restored.sampled_out, 1);
+        assert_eq!(restored.limited_out, 1);
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -448,8 +476,8 @@ mod tests {
         save(&path, "k", &sample_output()).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         // n_rows sits after magic(4) + version(4) + key_len(4) + key(1)
-        // + four u64 counters(32).
-        let n_rows_at = 13 + 32;
+        // + six u64 counters(48).
+        let n_rows_at = 13 + 48;
         bytes[n_rows_at..n_rows_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
         let n = bytes.len();
         let digest = xxh64(&bytes[4..n - 8], 0);

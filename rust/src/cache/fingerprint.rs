@@ -169,7 +169,14 @@ impl PlanFingerprint {
 /// logical plan's [`crate::plan::LogicalPlan::render`] output) over
 /// `files`. Reads every shard once to digest it — a sequential pass that
 /// is orders of magnitude cheaper than parsing and cleaning the same
-/// bytes.
+/// bytes. Because stage and estimator `describe()` output carries every
+/// fit-relevant parameter (`IDF` min_df, `HashingTF` bucket count), the
+/// key covers the fitted-model state too: same key ⟹ same fitted model.
+///
+/// Callers that hold a [`super::CacheManager`] should go through
+/// [`super::CacheManager::fingerprint_for`], which memoizes the digest
+/// pass in-process (a stat per shard revalidates it) so EXPLAIN and the
+/// driver run that follows read the corpus once, not three times.
 ///
 /// ```
 /// use p3sapp::cache::fingerprint;

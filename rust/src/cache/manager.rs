@@ -15,7 +15,7 @@
 //! store is reported by the caller but does not fail the run.
 
 use super::artifact::{self, CachedFrame};
-use super::fingerprint::PlanFingerprint;
+use super::fingerprint::{fingerprint, xxh64, PlanFingerprint};
 use crate::driver::CACHE_RESTORE;
 use crate::metrics::StageTimes;
 use crate::plan::PlanOutput;
@@ -164,6 +164,13 @@ impl Memo {
 pub struct CacheManager {
     cfg: CacheConfig,
     memo: Mutex<Memo>,
+    /// In-process fingerprint memo: (plan render, file list) → the last
+    /// computed [`PlanFingerprint`], reused while every shard's
+    /// stat-level identity (length + mtime) is unchanged. This is what
+    /// lets `--explain --cache-dir` and the driver run that follows
+    /// share one digest pass instead of reading every shard twice
+    /// before execution even starts. See [`CacheManager::fingerprint_for`].
+    fingerprints: Mutex<HashMap<u64, PlanFingerprint>>,
     stats: Mutex<CacheStats>,
 }
 
@@ -185,8 +192,46 @@ impl CacheManager {
         Ok(CacheManager {
             cfg,
             memo: Mutex::new(Memo::default()),
+            fingerprints: Mutex::new(HashMap::new()),
             stats: Mutex::new(CacheStats::default()),
         })
+    }
+
+    /// Memoized [`fingerprint`]: returns the cached
+    /// [`PlanFingerprint`] for this exact (plan render, file list) pair
+    /// when every shard's stat identity (path order, byte length,
+    /// mtime) is unchanged since it was computed, re-digesting
+    /// otherwise. A cold `--explain --cache-dir` run used to read every
+    /// shard three times (EXPLAIN probe digest, driver fingerprint
+    /// digest, executor parse); with both callers routed through here
+    /// the second digest pass collapses to a stat per shard.
+    ///
+    /// Scope: the memo lives in this process only, so the cross-run
+    /// guarantee is untouched — a fresh process always digests. Within
+    /// a process, an edit that preserves a shard's length *and* mtime
+    /// is served the memoized digest (the pure [`fingerprint`] function
+    /// still sees through it); files with no readable mtime are never
+    /// memo-served.
+    pub fn fingerprint_for(
+        &self,
+        plan_render: &str,
+        files: &[PathBuf],
+    ) -> crate::Result<PlanFingerprint> {
+        let mut material = Vec::with_capacity(plan_render.len() + files.len() * 32);
+        material.extend_from_slice(plan_render.as_bytes());
+        for f in files {
+            material.push(0);
+            material.extend_from_slice(f.to_string_lossy().as_bytes());
+        }
+        let memo_key = xxh64(&material, 0x5eed);
+        if let Some(fp) = self.fingerprints.lock().unwrap().get(&memo_key) {
+            if stat_identity_unchanged(fp, files) {
+                return Ok(fp.clone());
+            }
+        }
+        let fp = fingerprint(plan_render, files)?;
+        self.fingerprints.lock().unwrap().insert(memo_key, fp.clone());
+        Ok(fp)
     }
 
     pub fn dir(&self) -> &Path {
@@ -272,6 +317,8 @@ impl CacheManager {
                     nulls_dropped: out.nulls_dropped,
                     dups_dropped: out.dups_dropped,
                     empties_dropped: out.empties_dropped,
+                    sampled_out: out.sampled_out,
+                    limited_out: out.limited_out,
                 },
                 self.cfg.memory_max_bytes,
             );
@@ -365,6 +412,36 @@ impl CacheManager {
     }
 }
 
+/// True when every shard's stat identity (path order, length, mtime)
+/// matches what `fp` recorded — the revalidation gate of
+/// [`CacheManager::fingerprint_for`]. Any anomaly (missing file, zero
+/// mtime, reordered list) forces a fresh digest.
+fn stat_identity_unchanged(fp: &PlanFingerprint, files: &[PathBuf]) -> bool {
+    let shards = fp.shards();
+    if shards.len() != files.len() {
+        return false;
+    }
+    for (id, path) in shards.iter().zip(files) {
+        if &id.path != path || id.mtime_nanos == 0 {
+            return false;
+        }
+        let Ok(meta) = std::fs::metadata(path) else { return false };
+        if meta.len() != id.len {
+            return false;
+        }
+        let mtime = meta
+            .modified()
+            .ok()
+            .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+            .map(|d| d.as_nanos())
+            .unwrap_or(0);
+        if mtime == 0 || mtime != id.mtime_nanos {
+            return false;
+        }
+    }
+    true
+}
+
 /// Wrap a restored frame as a [`PlanOutput`] whose only stage time is
 /// the restore itself.
 fn restored(hit: CachedFrame, t0: Instant) -> PlanOutput {
@@ -379,6 +456,8 @@ fn restored(hit: CachedFrame, t0: Instant) -> PlanOutput {
         nulls_dropped: hit.nulls_dropped,
         dups_dropped: hit.dups_dropped,
         empties_dropped: hit.empties_dropped,
+        sampled_out: hit.sampled_out,
+        limited_out: hit.limited_out,
     }
 }
 
@@ -404,6 +483,8 @@ mod tests {
             nulls_dropped: 1,
             dups_dropped: 1,
             empties_dropped: 0,
+            sampled_out: 0,
+            limited_out: 0,
         }
     }
 
@@ -527,21 +608,17 @@ mod tests {
     #[test]
     fn memo_evicts_oldest_insertion_past_the_cap() {
         let mut memo = Memo::default();
-        let frame_a = output(10, "aaaa");
-        let size = frame_bytes(&CachedFrame {
-            frame: frame_a.frame.clone(),
-            rows_ingested: 0,
-            nulls_dropped: 0,
-            dups_dropped: 0,
-            empties_dropped: 0,
-        });
         let entry = |o: &PlanOutput| CachedFrame {
             frame: o.frame.clone(),
             rows_ingested: o.rows_ingested,
             nulls_dropped: o.nulls_dropped,
             dups_dropped: o.dups_dropped,
             empties_dropped: o.empties_dropped,
+            sampled_out: o.sampled_out,
+            limited_out: o.limited_out,
         };
+        let frame_a = output(10, "aaaa");
+        let size = frame_bytes(&entry(&frame_a));
         // Cap fits two same-sized entries but not three.
         let cap = size * 2;
         memo.insert("a".into(), entry(&frame_a), cap);
@@ -555,6 +632,49 @@ mod tests {
         assert_eq!(memo.order.len(), 2);
         memo.clear();
         assert_eq!((memo.map.len(), memo.order.len(), memo.bytes), (0, 0, 0));
+    }
+
+    #[test]
+    fn fingerprint_memo_reuses_digests_while_stat_identity_holds() {
+        let m = mgr("fpmemo", 0, false);
+        let shard = m.dir().join("s.json");
+        std::fs::write(&shard, b"{\"title\": \"a\"}\n").unwrap();
+        let files = vec![shard.clone()];
+
+        let first = m.fingerprint_for("plan", &files).unwrap();
+        assert_eq!(
+            first.key(),
+            super::super::fingerprint::fingerprint("plan", &files).unwrap().key(),
+            "memoized derivation must match the pure function"
+        );
+        // Unchanged file: the memo serves the same key (stat-only path).
+        assert_eq!(m.fingerprint_for("plan", &files).unwrap().key(), first.key());
+        // A different plan render over the same files is a different
+        // memo entry, not a stale reuse.
+        assert_ne!(m.fingerprint_for("plan-b", &files).unwrap().key(), first.key());
+
+        // Content edit that moves the mtime: re-digested, key changes.
+        // The mtime bump is explicit so coarse-granularity filesystems
+        // cannot leave the stat identity accidentally unchanged.
+        std::fs::write(&shard, b"{\"title\": \"b\"}\n").unwrap();
+        let bumped = std::fs::metadata(&shard).unwrap().modified().unwrap()
+            + std::time::Duration::from_secs(2);
+        std::fs::File::options().write(true).open(&shard).unwrap().set_modified(bumped).unwrap();
+        let edited = m.fingerprint_for("plan", &files).unwrap();
+        assert_ne!(edited.key(), first.key());
+
+        // The documented in-process trade-off: an edit that restores
+        // length *and* mtime is served the memoized digest (a fresh
+        // process — or the pure fingerprint() — still sees through it).
+        let mtime = std::fs::metadata(&shard).unwrap().modified().unwrap();
+        std::fs::write(&shard, b"{\"title\": \"c\"}\n").unwrap();
+        std::fs::File::options().write(true).open(&shard).unwrap().set_modified(mtime).unwrap();
+        assert_eq!(m.fingerprint_for("plan", &files).unwrap().key(), edited.key());
+        assert_ne!(
+            super::super::fingerprint::fingerprint("plan", &files).unwrap().key(),
+            edited.key()
+        );
+        std::fs::remove_dir_all(m.dir()).unwrap();
     }
 
     #[test]

@@ -62,11 +62,11 @@ pub fn plan_files(plan: &LogicalPlan) -> &[PathBuf] {
 /// `[cache hit <key>]` — instead of a topology that will not run. On a
 /// miss (or with no cache) the full topology renders as before.
 ///
-/// Note the fingerprint computed here digests every shard, and a
-/// driver run that follows (`preprocess --explain`) digests them again
-/// — EXPLAIN is an opt-in diagnostic, so the duplicate sequential read
-/// is accepted for now; sharing one digest pass between EXPLAIN,
-/// fingerprinting and parsing is a ROADMAP follow-up.
+/// The fingerprint is derived through the manager's in-process memo
+/// ([`CacheManager::fingerprint_for`]), so the driver run that follows
+/// (`preprocess --explain --cache-dir`) revalidates it with a stat per
+/// shard instead of re-digesting every byte — EXPLAIN probing, cache
+/// fingerprinting and execution share one read of the corpus cold.
 pub fn explain_with_cache(
     plan: &LogicalPlan,
     workers: usize,
@@ -77,7 +77,7 @@ pub fn explain_with_cache(
         let optimized = plan.clone().optimize();
         // An unreadable shard fails the fingerprint; fall through to the
         // normal EXPLAIN, whose executor will report the real error.
-        if let Ok(fp) = fingerprint(&optimized.render(), plan_files(plan)) {
+        if let Ok(fp) = mgr.fingerprint_for(&optimized.render(), plan_files(plan)) {
             if mgr.probe(&fp) {
                 // Lowering still validates the plan shape, so EXPLAIN
                 // rejects unexecutable plans with or without a cache.

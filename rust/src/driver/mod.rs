@@ -22,7 +22,7 @@ use crate::cache::CacheManager;
 use crate::frame::LocalFrame;
 use crate::ingest::append::ingest_files_append;
 use crate::metrics::{StageClock, StageTimes};
-use crate::pipeline::presets::case_study_plan;
+use crate::pipeline::presets::{case_study_plan_with, CaseStudyOptions};
 use crate::plan::{LogicalPlan, PlanOutput};
 use crate::Result;
 use std::path::PathBuf;
@@ -113,6 +113,20 @@ pub struct DriverOptions {
     /// today's always-execute behavior. Ignored by the CA driver — the
     /// paper's control must keep its measured cost profile.
     pub cache: Option<Arc<CacheManager>>,
+    /// Deterministic input sample `(fraction, seed)` (`--sample` /
+    /// `--sample-seed`): the plan gains a positional `Sample` op right
+    /// after the scan, so skipped records are never cleaned — the cheap
+    /// way to repeat the accuracy tables. Ignored by the CA driver.
+    pub sample: Option<(f64, u64)>,
+    /// Keep only the first `n` clean rows (`--limit`): the plan gains a
+    /// `Limit` op before collect, enforced exactly by the driver-side
+    /// merge. Ignored by the CA driver.
+    pub limit: Option<usize>,
+    /// Run the full Table-2 pipeline (`--features`): cleaning plus the
+    /// Tokenizer → HashingTF → IDF feature tail. The `IDF` estimator
+    /// lowers into the plan's two-pass physical strategy — no staged
+    /// `Pipeline::fit` fallback. Ignored by the CA driver.
+    pub features: bool,
 }
 
 impl Default for DriverOptions {
@@ -123,7 +137,25 @@ impl Default for DriverOptions {
             abstract_col: "abstract".into(),
             stream: None,
             cache: None,
+            sample: None,
+            limit: None,
+            features: false,
         }
+    }
+}
+
+impl DriverOptions {
+    /// The plan-variant knobs of these options, in the form
+    /// [`case_study_plan_with`] takes — one derivation shared by the
+    /// driver and every EXPLAIN caller so they always describe the same
+    /// plan.
+    pub fn plan_options(&self) -> CaseStudyOptions {
+        CaseStudyOptions { sample: self.sample, limit: self.limit, features: self.features }
+    }
+
+    /// The exact logical plan [`run_p3sapp`] will execute over `files`.
+    pub fn build_plan(&self, files: &[PathBuf]) -> LogicalPlan {
+        case_study_plan_with(files, &self.title_col, &self.abstract_col, &self.plan_options())
     }
 }
 
@@ -145,12 +177,14 @@ fn nullify_empty(frame: &mut LocalFrame) {
 /// proportional attribution of the pass (see `plan::physical`), so the
 /// Tables 2–4 accounting keeps working.
 pub fn run_p3sapp(files: &[PathBuf], opts: &DriverOptions) -> Result<PreprocessResult> {
-    let plan = case_study_plan(files, &opts.title_col, &opts.abstract_col).optimize();
+    let plan = opts.build_plan(files).optimize();
     if let Some(cache) = &opts.cache {
         // A shard we cannot stat/digest would also fail the executor —
         // fall through so the executor reports the real error, rather
-        // than failing the run from inside the cache layer.
-        if let Ok(fp) = crate::cache::fingerprint(&plan.render(), files) {
+        // than failing the run from inside the cache layer. The
+        // memoized derivation lets a preceding EXPLAIN's digest pass be
+        // revalidated with a stat instead of re-read.
+        if let Ok(fp) = cache.fingerprint_for(&plan.render(), files) {
             if let Some(hit) = cache.get(&fp) {
                 return Ok(hit.into());
             }
@@ -308,6 +342,77 @@ mod tests {
         assert_eq!(warm.times.stages().count(), 1, "only cache_restore");
         assert_eq!(warm.cumulative_secs(), warm.cache_restore_secs());
         assert!(cache.stats().hits() >= 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sampled_and_limited_runs_are_deterministic_subsets() {
+        let (dir, files) = corpus("samplim");
+        let full = run_p3sapp(&files, &DriverOptions { workers: 2, ..Default::default() })
+            .unwrap();
+        let sampled_opts = DriverOptions {
+            workers: 2,
+            sample: Some((0.5, 42)),
+            ..Default::default()
+        };
+        let s1 = run_p3sapp(&files, &sampled_opts).unwrap();
+        let s2 = run_p3sapp(&files, &sampled_opts).unwrap();
+        assert_eq!(s1.frame, s2.frame, "positional sampling must be reproducible");
+        assert!(s1.rows_out < full.rows_out, "{} !< {}", s1.rows_out, full.rows_out);
+
+        let n = full.rows_out / 3;
+        let limited = run_p3sapp(
+            &files,
+            &DriverOptions { workers: 2, limit: Some(n), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(limited.rows_out, n);
+        // The limited frame is the full clean frame's prefix.
+        for ci in 0..limited.frame.num_columns() {
+            for ri in 0..n {
+                assert_eq!(
+                    limited.frame.column(ci).get_str(ri),
+                    full.frame.column(ci).get_str(ri)
+                );
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn featured_run_produces_tfidf_and_caches() {
+        use crate::frame::DType;
+        let (dir, files) = corpus("featdrv");
+        let cache = Arc::new(CacheManager::open(dir.join("plan-cache")).unwrap());
+        let opts = DriverOptions {
+            workers: 2,
+            features: true,
+            cache: Some(Arc::clone(&cache)),
+            ..Default::default()
+        };
+        let cold = run_p3sapp(&files, &opts).unwrap();
+        assert!(!cold.from_cache());
+        assert_eq!(
+            cold.frame.schema().field_names(),
+            vec!["title", "abstract", "tokens", "tf", "tfidf"]
+        );
+        assert_eq!(cold.frame.schema().dtype_of("tfidf"), Some(DType::Vector));
+        // Vector columns survive the artifact round trip byte for byte.
+        let warm = run_p3sapp(&files, &opts).unwrap();
+        assert!(warm.from_cache());
+        assert_eq!(warm.frame, cold.frame);
+        // The plain cleaning plan must not share a key with the
+        // featured plan (its render differs).
+        let plain = run_p3sapp(
+            &files,
+            &DriverOptions {
+                workers: 2,
+                cache: Some(Arc::clone(&cache)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(!plain.from_cache(), "featured and plain plans must not collide");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

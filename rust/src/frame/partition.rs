@@ -102,6 +102,18 @@ impl Partition {
         out
     }
 
+    /// Truncate to the first `n` rows in place (no-op when `n` is not
+    /// smaller than the row count). Used by the plan executor's `Limit`
+    /// enforcement — per-partition prefix caps and the driver-side
+    /// global budget.
+    pub fn truncate_rows(&mut self, n: usize) {
+        if n < self.num_rows() {
+            for c in &mut self.columns {
+                let _ = c.split_off(n);
+            }
+        }
+    }
+
     /// Keep only rows where `mask[i]` is true.
     pub fn filter_by_mask(&self, mask: &[bool]) -> Partition {
         Partition { columns: self.columns.iter().map(|c| c.filter_by_mask(mask)).collect() }
@@ -164,6 +176,20 @@ mod tests {
         // Degenerate cases.
         assert_eq!(p().split_rows(1).len(), 1);
         assert_eq!(p().split_rows(100).len(), 2, "capped by row count");
+    }
+
+    #[test]
+    fn truncate_rows_keeps_the_prefix() {
+        let mut part = Partition::new(vec![
+            Column::from_strs((0..5).map(|i| Some(format!("t{i}"))).collect()),
+            Column::from_strs((0..5).map(|i| Some(format!("a{i}"))).collect()),
+        ]);
+        part.truncate_rows(2);
+        assert_eq!(part.num_rows(), 2);
+        assert_eq!(part.column(0).get_str(1), Some("t1"));
+        // Not smaller than the row count: no-op.
+        part.truncate_rows(10);
+        assert_eq!(part.num_rows(), 2);
     }
 
     #[test]

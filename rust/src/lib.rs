@@ -7,9 +7,11 @@
 //! - **L3 (this crate)** — the coordination layer: a from-scratch
 //!   Spark-like engine (`frame`, `pipeline`, `engine`, `ingest`) topped
 //!   by a Catalyst/Tungsten-style plan layer (`plan`: lazy logical
-//!   plans, an optimizer that fuses adjacent string stages, a
-//!   single-pass physical executor, and a streaming executor that
-//!   overlaps shard parsing with cleaning), a persistent plan cache
+//!   plans with sample/limit/multi-distinct ops, an optimizer that
+//!   fuses adjacent string stages, a single-pass physical executor, a
+//!   streaming executor that overlaps shard parsing with cleaning, and
+//!   a two-pass strategy that lowers estimator stages like `IDF` into
+//!   the plan), a persistent plan cache
 //!   (`cache`: fingerprinted, content-addressed artifacts so repeated
 //!   jobs restore their frame instead of re-executing), the
 //!   conventional sequential baseline (`baseline`), the PJRT runtime

@@ -59,7 +59,7 @@ fn usage() {
          \x20 infer       --dir D [--steps N] [--titles K] [--artifacts A]\n\
          \x20 report      [--exp all|e1|...|e9] [--base-dir B] [--scale F]\n\
          \x20             [--tiers 1,2,3] [--workers N] [--artifacts A] [--csv]\n\
-         \x20             [--explain]\n\
+         \x20             [--explain] [--skip-ca]\n\
          \x20 cache       stats|clear --cache-dir D\n\
          \x20 help\n\
          \n\
@@ -75,7 +75,19 @@ fn usage() {
          \x20 --cache-dir D   persistent plan cache: P3SAPP runs restore a\n\
          \x20                 fingerprint-identical preprocessed frame instead\n\
          \x20                 of re-executing (report repeats, train/infer)\n\
-         \x20 --no-cache      ignore --cache-dir (always execute)\n"
+         \x20 --no-cache      ignore --cache-dir (always execute)\n\
+         \x20 --sample F      keep each input record with probability F —\n\
+         \x20                 a deterministic positional sample; applies to\n\
+         \x20                 every P3SAPP run (preprocess/explain/train/\n\
+         \x20                 infer, and report with --skip-ca); the CA\n\
+         \x20                 control never samples (compare rejects it)\n\
+         \x20 --sample-seed S sample seed (default 42)\n\
+         \x20 --limit N       keep only the first N clean rows (same scope\n\
+         \x20                 as --sample)\n\
+         \x20 --features      run the full Table-2 pipeline: cleaning plus\n\
+         \x20                 Tokenizer -> HashingTF -> IDF; the IDF estimator\n\
+         \x20                 lowers to a two-pass plan (preprocess/explain/\n\
+         \x20                 train/infer; not compare/report)\n"
     );
 }
 
@@ -145,16 +157,48 @@ fn cmd_gen_corpus(args: &Args) -> Result<()> {
 /// Execution options shared by every command that runs the P3SAPP
 /// driver (`preprocess` / `explain` / `compare` / `train` / `infer` /
 /// `report`), parsed in exactly one place: the worker count, the
-/// streaming-executor knobs and the plan-cache flags.
+/// streaming-executor knobs, the plan-cache flags, and the plan-variant
+/// knobs (`--sample`, `--limit`).
 struct CommonOpts {
     workers: usize,
     stream: Option<p3sapp::plan::StreamOptions>,
     cache: Option<Arc<CacheManager>>,
+    sample: Option<(f64, u64)>,
+    limit: Option<usize>,
 }
 
 fn common_opts(args: &Args, cfg: &AppConfig) -> Result<CommonOpts> {
     let workers = args.get_usize("workers", cfg.engine.workers)?;
-    Ok(CommonOpts { workers, stream: stream_opts(args, workers)?, cache: cache_opt(args)? })
+    Ok(CommonOpts {
+        workers,
+        stream: stream_opts(args, workers)?,
+        cache: cache_opt(args)?,
+        sample: sample_opt(args)?,
+        limit: match args.get("limit") {
+            Some(_) => Some(args.get_usize("limit", 0)?),
+            None => None,
+        },
+    })
+}
+
+/// `--sample F` (+ optional `--sample-seed S`, default 42) → a
+/// deterministic positional input sample for cheap accuracy-table
+/// repeats. Applies to the P3SAPP plan only; the CA control never
+/// samples.
+fn sample_opt(args: &Args) -> Result<Option<(f64, u64)>> {
+    if args.get("sample").is_none() {
+        anyhow::ensure!(
+            args.get("sample-seed").is_none(),
+            "--sample-seed requires --sample"
+        );
+        return Ok(None);
+    }
+    let fraction = args.get_f64("sample", 1.0)?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&fraction),
+        "--sample expects a fraction in [0, 1], got {fraction}"
+    );
+    Ok(Some((fraction, args.get_u64("sample-seed", 42)?)))
 }
 
 /// `--stream` / `--queue-cap N` / `--readers N` → streaming executor
@@ -191,23 +235,21 @@ fn driver_opts(args: &Args, cfg: &AppConfig) -> Result<DriverOptions> {
         workers: common.workers,
         stream: common.stream,
         cache: common.cache,
+        sample: common.sample,
+        limit: common.limit,
+        features: args.flag("features"),
         ..Default::default()
     })
 }
 
-/// Build the case-study plan for a corpus dir (what `run_p3sapp`
-/// executes) so `explain` and `preprocess --explain` show exactly the
-/// plan that runs.
-fn case_plan(files: &[PathBuf], opts: &DriverOptions) -> p3sapp::plan::LogicalPlan {
-    p3sapp::pipeline::presets::case_study_plan(files, &opts.title_col, &opts.abstract_col)
-}
-
 /// EXPLAIN rendering matching the execution `opts` select: the
 /// cache-restore path on a warm cache, else the streaming topology when
-/// `--stream` is on, else the single-pass program.
+/// `--stream` is on, else the single-pass (or two-pass, with
+/// `--features`) program — built by `DriverOptions::build_plan`, the
+/// same derivation `run_p3sapp` executes.
 fn render_explain(files: &[PathBuf], opts: &DriverOptions) -> Result<String> {
     p3sapp::cache::explain_with_cache(
-        &case_plan(files, opts),
+        &opts.build_plan(files),
         opts.workers,
         opts.stream.as_ref(),
         opts.cache.as_deref(),
@@ -260,6 +302,14 @@ fn cmd_compare(args: &Args) -> Result<()> {
     );
     let files = list_shards(&dir)?;
     let opts = driver_opts(args, &cfg)?;
+    // The comparison's whole point is identical work on both sides; the
+    // CA control has no sample/limit/feature path, so a lopsided run
+    // would report meaningless reductions and accuracy.
+    anyhow::ensure!(
+        opts.sample.is_none() && opts.limit.is_none() && !opts.features,
+        "--sample/--limit/--features do not apply to compare (the CA control \
+         always runs the full cleaning workload)"
+    );
     println!("running P3SAPP ...");
     let pa = run_p3sapp(&files, &opts)?;
     println!("running conventional approach ...");
@@ -421,6 +471,22 @@ fn cmd_report(args: &Args) -> Result<()> {
     opts.explain = args.flag("explain");
     opts.stream = common.stream;
     opts.cache = common.cache;
+    opts.sample = common.sample;
+    opts.limit = common.limit;
+    opts.skip_ca = args.flag("skip-ca");
+    // A sampled/limited suite only preprocesses a subset on the P3SAPP
+    // side; the CA control has no sample path, so running it would
+    // produce inflated reductions and collapsed accuracy tables.
+    // Require the explicit opt-out rather than silently skewing Tables
+    // 2–6.
+    anyhow::ensure!(
+        (common.sample.is_none() && common.limit.is_none()) || opts.skip_ca,
+        "--sample/--limit make the CA control incomparable; add --skip-ca \
+         (and drop --exp e4, which needs the CA frames)"
+    );
+    // The suite has no feature-tail path (its tables are about the
+    // cleaning workload); reject rather than silently ignore the flag.
+    anyhow::ensure!(!args.flag("features"), "report does not support --features");
     let csv = args.flag("csv");
 
     let needs_mtt = matches!(exp, "all" | "e5" | "e6");

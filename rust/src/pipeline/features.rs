@@ -6,9 +6,10 @@
 //! `Pipeline` contract. Together they give the TF-IDF feature pipeline
 //! the paper's §2 cites as the classic scholarly-analytics workload.
 
-use super::{Estimator, Transformer};
+use super::{Estimator, FitAccumulator, Transformer};
 use crate::frame::{Column, DType, Frame};
 use crate::Result;
+use std::sync::Arc;
 
 /// Spark ML `NGram`: token sequence → sequence of space-joined n-grams.
 pub struct NGram {
@@ -53,6 +54,12 @@ impl Transformer for NGram {
                 })
                 .collect(),
         )
+    }
+    fn describe(&self) -> String {
+        // `n` must reach EXPLAIN output: the rendered plan is hashed
+        // into the cache fingerprint, and bigram vs trigram plans must
+        // not share a key.
+        format!("NGram({} -> {}, n={})", self.input, self.output, self.n)
     }
 }
 
@@ -112,6 +119,11 @@ impl Transformer for HashingTF {
                 .collect(),
         )
     }
+    fn describe(&self) -> String {
+        // The bucket count shapes every downstream vector, so it must
+        // be part of the rendered plan (and thus the cache key).
+        format!("HashingTF({} -> {}, features={})", self.input, self.output, self.num_features)
+    }
 }
 
 /// Spark ML `IDF` — an **estimator**: `fit` scans the corpus for
@@ -149,29 +161,85 @@ impl Estimator for Idf {
     }
 
     fn fit_transformer(&self, frame: &Frame, in_idx: usize) -> Result<Box<dyn Transformer>> {
-        let mut df: Vec<u64> = Vec::new();
-        let mut n_docs = 0u64;
+        // One fit code path: the eager Pipeline fit folds partitions
+        // through the same accumulator the plan executor's pass 1 uses,
+        // so the two can never diverge on the smoothing formula.
+        let mut acc = self.make_accumulator();
         for part in frame.partitions() {
-            let col = part.column(in_idx);
-            if col.dtype() != DType::Vector {
-                anyhow::bail!("IDF input column must be vector (got {})", col.dtype());
+            acc.accumulate(part.column(in_idx))?;
+        }
+        Ok(Box::new(acc.finish_model()))
+    }
+
+    fn accumulator(&self) -> Option<Box<dyn FitAccumulator>> {
+        Some(Box::new(self.make_accumulator()))
+    }
+
+    fn describe(&self) -> String {
+        format!("IDF({} -> {}, min_df={})", self.input, self.output, self.min_doc_freq)
+    }
+}
+
+impl Idf {
+    fn make_accumulator(&self) -> IdfAccumulator {
+        IdfAccumulator {
+            input: self.input.clone(),
+            output: self.output.clone(),
+            min_doc_freq: self.min_doc_freq,
+            df: Vec::new(),
+            n_docs: 0,
+        }
+    }
+}
+
+/// Streaming document-frequency accumulation for [`Idf`] — the fit state
+/// the plan executor's pass 1 folds shard partitions into.
+struct IdfAccumulator {
+    input: String,
+    output: String,
+    min_doc_freq: usize,
+    df: Vec<u64>,
+    n_docs: u64,
+}
+
+impl FitAccumulator for IdfAccumulator {
+    fn accumulate(&mut self, col: &Column) -> Result<()> {
+        if col.dtype() != DType::Vector {
+            anyhow::bail!("IDF input column must be vector (got {})", col.dtype());
+        }
+        for row in col.vectors().iter().flatten() {
+            if self.df.is_empty() {
+                self.df = vec![0; row.len()];
+            } else if self.df.len() != row.len() {
+                anyhow::bail!(
+                    "IDF: inconsistent vector widths ({} vs {})",
+                    self.df.len(),
+                    row.len()
+                );
             }
-            for row in col.vectors().iter().flatten() {
-                if df.is_empty() {
-                    df = vec![0; row.len()];
-                } else if df.len() != row.len() {
-                    anyhow::bail!("IDF: inconsistent vector widths ({} vs {})", df.len(), row.len());
-                }
-                n_docs += 1;
-                for (slot, &v) in df.iter_mut().zip(row) {
-                    if v > 0.0 {
-                        *slot += 1;
-                    }
+            self.n_docs += 1;
+            for (slot, &v) in self.df.iter_mut().zip(row) {
+                if v > 0.0 {
+                    *slot += 1;
                 }
             }
         }
+        Ok(())
+    }
+
+    fn finish(self: Box<Self>) -> Result<Arc<dyn Transformer>> {
+        Ok(Arc::new(self.finish_model()))
+    }
+}
+
+impl IdfAccumulator {
+    /// Spark's smoothed formula: idf(t) = ln((N + 1) / (df_t + 1)),
+    /// zeroed below `min_doc_freq`.
+    fn finish_model(self) -> IdfModel {
         let min_df = self.min_doc_freq as u64;
-        let idf: Vec<f32> = df
+        let n_docs = self.n_docs;
+        let idf: Vec<f32> = self
+            .df
             .iter()
             .map(|&d| {
                 if d < min_df {
@@ -181,7 +249,7 @@ impl Estimator for Idf {
                 }
             })
             .collect();
-        Ok(Box::new(IdfModel { input: self.input.clone(), output: self.output.clone(), idf }))
+        IdfModel { input: self.input, output: self.output, idf }
     }
 }
 
@@ -302,6 +370,63 @@ mod tests {
         let f = token_frame(&["a"]);
         let pipe = Pipeline::new().estimator(Idf::new("tokens", "tfidf"));
         assert!(pipe.fit(&f).is_err());
+    }
+
+    #[test]
+    fn describes_carry_fit_relevant_parameters() {
+        assert_eq!(NGram::new("t", "b", 3).describe(), "NGram(t -> b, n=3)");
+        assert_eq!(
+            HashingTF::new("t", "tf", 128).describe(),
+            "HashingTF(t -> tf, features=128)"
+        );
+        assert_eq!(
+            Idf::new("tf", "tfidf").with_min_doc_freq(2).describe(),
+            "IDF(tf -> tfidf, min_df=2)"
+        );
+    }
+
+    #[test]
+    fn incremental_accumulator_matches_whole_frame_fit() {
+        let f = token_frame(&["the quantum", "the cat", "the dog"]);
+        let idx = f.column_index("tokens").unwrap();
+        let tf = HashingTF::new("tokens", "tf", 32);
+        let tf_cols: Vec<Column> =
+            f.partitions().iter().map(|p| tf.transform_column(p.column(idx))).collect();
+
+        let est = Idf::new("tf", "tfidf").with_min_doc_freq(1);
+        // Whole-frame fit on a single assembled column ...
+        let whole = {
+            let frame = Frame::from_partition(
+                Schema::new(vec![Field::new("tf", DType::Vector)]),
+                Partition::new(vec![tf_cols[0].clone()]),
+            )
+            .unwrap();
+            est.fit_transformer(&frame, 0).unwrap()
+        };
+        // ... and the same rows split cell-by-cell through the
+        // incremental accumulator must fit identical weights.
+        let mut acc = est.accumulator().expect("IDF supports incremental fit");
+        let rows = tf_cols[0].vectors().to_vec();
+        for cell in rows {
+            acc.accumulate(&Column::from_vectors(vec![cell])).unwrap();
+        }
+        let streamed = acc.finish().unwrap();
+        let probe = Column::from_vectors(vec![Some(vec![1.0; 32])]);
+        assert_eq!(
+            whole.transform_column(&probe),
+            streamed.transform_column(&probe),
+            "incremental and whole-frame fits diverge"
+        );
+    }
+
+    #[test]
+    fn accumulator_rejects_wrong_dtype_and_width() {
+        let est = Idf::new("tf", "tfidf");
+        let mut acc = est.accumulator().unwrap();
+        assert!(acc.accumulate(&Column::from_strs(vec![Some("x".into())])).is_err());
+        let mut acc = est.accumulator().unwrap();
+        acc.accumulate(&Column::from_vectors(vec![Some(vec![1.0, 0.0])])).unwrap();
+        assert!(acc.accumulate(&Column::from_vectors(vec![Some(vec![1.0])])).is_err());
     }
 
     #[test]

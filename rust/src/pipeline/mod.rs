@@ -85,6 +85,37 @@ pub trait Estimator: Send + Sync {
     fn output_col(&self) -> &str;
     fn output_dtype(&self, input: DType) -> DType;
     fn fit_transformer(&self, frame: &Frame, in_idx: usize) -> Result<Box<dyn Transformer>>;
+
+    /// Incremental fitting hook for the plan layer's two-pass physical
+    /// strategy ([`crate::plan`]): pass 1 streams shards through the
+    /// pre-estimator program and feeds each surviving partition's input
+    /// column to this accumulator instead of materializing a frame.
+    /// Estimators returning `None` (the default) cannot be lowered into
+    /// a plan and must go through the eager [`Pipeline::fit`] path.
+    fn accumulator(&self) -> Option<Box<dyn FitAccumulator>> {
+        None
+    }
+
+    /// Stage label for plan EXPLAIN output **and** cache fingerprints.
+    /// Implementations must include every fit-relevant parameter (e.g.
+    /// `IDF`'s `min_doc_freq`): the rendered plan is hashed into the
+    /// plan-cache key, so two estimators that would fit different models
+    /// must describe themselves differently.
+    fn describe(&self) -> String {
+        format!("{}({} -> {})", self.name(), self.input_col(), self.output_col())
+    }
+}
+
+/// Streaming fit state for one [`Estimator`]: the plan executor's pass 1
+/// calls [`FitAccumulator::accumulate`] once per surviving partition (in
+/// shard order, after dedup and any `Limit`), then
+/// [`FitAccumulator::finish`] to obtain the fitted transformer that
+/// pass 2 splices into the program.
+pub trait FitAccumulator: Send {
+    /// Fold one partition's input column into the fit state.
+    fn accumulate(&mut self, col: &Column) -> Result<()>;
+    /// Close the accumulation and build the fitted transformer.
+    fn finish(self: Box<Self>) -> Result<Arc<dyn Transformer>>;
 }
 
 /// One pipeline entry: transformer or estimator (Spark `PipelineStage`).

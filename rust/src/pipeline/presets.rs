@@ -9,11 +9,23 @@
 //!   (scan → pre-clean → clean → post-clean → collect) as a plan the
 //!   optimizer can fuse and the executor can run in a single pass.
 
+use super::features::{HashingTF, Idf};
 use super::stages::*;
 use super::{Pipeline, Transformer};
 use crate::plan::LogicalPlan;
 use std::path::PathBuf;
 use std::sync::Arc;
+
+/// HashingTF bucket count for the case-study TF-IDF feature tail. Small
+/// enough that per-row vectors stay cheap on the synthetic tiers, large
+/// enough that bucket collisions are rare at abstract-vocabulary scale.
+pub const TFIDF_FEATURES: usize = 1024;
+
+/// Column names of the feature tail (cleaned abstract → tokens → term
+/// frequencies → TF-IDF weights).
+pub const TOKENS_COL: &str = "tokens";
+pub const TF_COL: &str = "tf";
+pub const TFIDF_COL: &str = "tfidf";
 
 /// Abstract-cleaning stages (Fig. 2): the abstract is the model
 /// *feature*, so it gets the full treatment —
@@ -66,6 +78,23 @@ pub fn case_study_pipeline(title_col: &str, abstract_col: &str) -> Pipeline {
     from_stages(case_study_stages(title_col, abstract_col))
 }
 
+/// Variant knobs for the case-study plan, surfaced by the CLI and the
+/// report suite (`--sample`, `--limit`, `--features`).
+#[derive(Debug, Clone, Default)]
+pub struct CaseStudyOptions {
+    /// Deterministic input sample `(fraction, seed)`, applied directly
+    /// after the scan — skipped records are never cleaned, which is what
+    /// makes sampled accuracy-table repeats cheap.
+    pub sample: Option<(f64, u64)>,
+    /// Keep only the first `n` *clean* rows (applied after the empty
+    /// sweep, before collect — the same clean-row subset every executor
+    /// and the staged reference agree on).
+    pub limit: Option<usize>,
+    /// Append the Table-2 feature tail (Tokenizer → HashingTF → IDF);
+    /// the `IDF` estimator lowers to the two-pass physical strategy.
+    pub features: bool,
+}
+
 /// The paper's Algorithm 1 (P3SAPP) as a lazy logical plan:
 /// scan → null-drop + dedup on the raw columns (steps 9–10) → the
 /// cleaning stages (11–14) → empty-string sweep (15–16) → collect.
@@ -74,13 +103,67 @@ pub fn case_study_pipeline(title_col: &str, abstract_col: &str) -> Pipeline {
 /// one `FusedStringStage` per column and the whole plan executes as a
 /// single parallel pass per shard file (see [`crate::plan`]).
 pub fn case_study_plan(files: &[PathBuf], title_col: &str, abstract_col: &str) -> LogicalPlan {
+    case_study_plan_with(files, title_col, abstract_col, &CaseStudyOptions::default())
+}
+
+/// [`case_study_plan`] with the full Table-2 feature tail: after the
+/// cleaning stages and before the empty sweep, the cleaned abstract is
+/// tokenized, hashed to term frequencies and IDF-weighted. The `IDF`
+/// stage is an estimator, so the lowered plan executes as two passes —
+/// no staged-path fallback (see [`crate::plan`]).
+pub fn case_study_features_plan(
+    files: &[PathBuf],
+    title_col: &str,
+    abstract_col: &str,
+) -> LogicalPlan {
+    case_study_plan_with(
+        files,
+        title_col,
+        abstract_col,
+        &CaseStudyOptions { features: true, ..Default::default() },
+    )
+}
+
+/// The configurable case-study plan: optional input sample directly
+/// after the scan, optional feature tail, optional clean-row limit
+/// before collect.
+pub fn case_study_plan_with(
+    files: &[PathBuf],
+    title_col: &str,
+    abstract_col: &str,
+    opts: &CaseStudyOptions,
+) -> LogicalPlan {
     let cols = [title_col, abstract_col];
-    LogicalPlan::scan(files.to_vec(), &cols)
+    let mut plan = LogicalPlan::scan(files.to_vec(), &cols);
+    if let Some((fraction, seed)) = opts.sample {
+        plan = plan.sample(fraction, seed);
+    }
+    plan = plan
         .drop_nulls(&cols)
         .distinct(&cols)
-        .transforms(case_study_stages(title_col, abstract_col))
-        .drop_empty(&cols)
-        .collect()
+        .transforms(case_study_stages(title_col, abstract_col));
+    if opts.features {
+        plan = plan
+            .transform(Tokenizer::new(abstract_col, TOKENS_COL))
+            .transform(HashingTF::new(TOKENS_COL, TF_COL, TFIDF_FEATURES))
+            .fit(Idf::new(TF_COL, TFIDF_COL));
+    }
+    plan = plan.drop_empty(&cols);
+    if let Some(n) = opts.limit {
+        plan = plan.limit(n);
+    }
+    plan.collect()
+}
+
+/// The staged reference of [`case_study_features_plan`]: the same stage
+/// list (cleaning + Tokenizer → HashingTF → IDF) as an eager
+/// [`Pipeline`] whose `fit`/`transform` pair is what the two-pass plan
+/// must reproduce byte for byte.
+pub fn case_study_features_pipeline(title_col: &str, abstract_col: &str) -> Pipeline {
+    from_stages(case_study_stages(title_col, abstract_col))
+        .stage(Tokenizer::new(abstract_col, TOKENS_COL))
+        .stage(HashingTF::new(TOKENS_COL, TF_COL, TFIDF_FEATURES))
+        .estimator(Idf::new(TF_COL, TFIDF_COL))
 }
 
 #[cfg(test)]
@@ -132,5 +215,43 @@ mod tests {
         let rendered = plan.render();
         assert!(rendered.starts_with("Ingest"), "{rendered}");
         assert!(rendered.trim_end().ends_with("Collect"), "{rendered}");
+    }
+
+    #[test]
+    fn features_plan_appends_the_tfidf_tail_before_the_sweep() {
+        let plan = case_study_features_plan(&[], "title", "abstract");
+        let rendered = plan.render();
+        let lines: Vec<&str> = rendered.lines().collect();
+        // 13 base ops + Tokenizer + HashingTF + Fit = 16.
+        assert_eq!(lines.len(), 16, "{rendered}");
+        assert!(lines[11].contains("Tokenizer(abstract -> tokens)"), "{rendered}");
+        assert!(lines[12].contains("HashingTF(tokens -> tf, features=1024)"), "{rendered}");
+        assert!(lines[13].contains("Fit IDF(tf -> tfidf, min_df=0)"), "{rendered}");
+        // The empty sweep stays after the feature tail, mirroring the
+        // staged path (Pipeline transform, then the post-clean sweep) so
+        // the IDF fit sees the same rows in both worlds.
+        assert!(lines[14].starts_with("DropEmpty"), "{rendered}");
+    }
+
+    #[test]
+    fn sample_and_limit_options_place_their_ops() {
+        let opts = CaseStudyOptions {
+            sample: Some((0.5, 9)),
+            limit: Some(20),
+            features: false,
+        };
+        let plan = case_study_plan_with(&[], "title", "abstract", &opts);
+        let rendered = plan.render();
+        let lines: Vec<&str> = rendered.lines().collect();
+        assert_eq!(lines[1], "Sample [fraction=0.5, seed=9]", "{rendered}");
+        assert_eq!(lines[lines.len() - 2], "Limit [20]", "{rendered}");
+        // The configured plan still lowers (the shape is executable).
+        assert!(plan.optimize().lower().is_ok());
+    }
+
+    #[test]
+    fn features_pipeline_mirrors_the_features_plan_stages() {
+        // 8 cleaning stages + Tokenizer + HashingTF + IDF.
+        assert_eq!(case_study_features_pipeline("t", "a").stages().len(), 11);
     }
 }

@@ -75,6 +75,23 @@ mod tests {
     }
 
     #[test]
+    fn explain_renders_two_pass_for_estimator_plans() {
+        use crate::pipeline::presets::case_study_features_plan;
+        let plan = case_study_features_plan(&[], "title", "abstract");
+        for text in [
+            explain(&plan, 2).unwrap(),
+            explain_stream(&plan, &StreamOptions { readers: 2, workers: 3, queue_cap: 4 })
+                .unwrap(),
+        ] {
+            assert!(text.contains("Fit IDF(tf -> tfidf"), "{text}");
+            assert!(text.contains("TwoPass"), "{text}");
+            assert!(text.contains("Pass 1 — fit IDF"), "{text}");
+            assert!(text.contains("Pass 2 — apply fitted model"), "{text}");
+            assert!(!text.contains("staged"), "no staged-path fallback: {text}");
+        }
+    }
+
+    #[test]
     fn explain_fails_on_unexecutable_plans() {
         let plan = LogicalPlan::scan(vec![], &["c"]); // no Collect
         assert!(explain(&plan, 1).is_err());

@@ -9,7 +9,8 @@ use crate::pipeline::stages::StringKernel;
 use crate::pipeline::Transformer;
 
 /// A chain of [`StringKernel`]s fused into one transformer. Built by the
-/// optimizer (rule 3 of [`LogicalPlan::optimize`](super::LogicalPlan::optimize));
+/// optimizer (rule 4 of [`LogicalPlan::optimize`](super::LogicalPlan::optimize),
+/// after sample/limit pushdown has moved row filters out of the way);
 /// can also be constructed directly for ad-hoc pipelines and benches.
 pub struct FusedStringStage {
     col: String,

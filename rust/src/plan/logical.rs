@@ -6,7 +6,7 @@
 
 use super::physical::{self, PhysicalPlan, PlanOutput};
 use super::stream::StreamOptions;
-use crate::pipeline::Transformer;
+use crate::pipeline::{Estimator, Transformer};
 use crate::Result;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -22,6 +22,21 @@ pub enum LogicalOp {
     Project { cols: Vec<String> },
     /// Apply one transformer stage (steps 11–14).
     Transform { stage: Arc<dyn Transformer> },
+    /// Fit an estimator stage on the stream *at this point* in the plan
+    /// (Spark `Pipeline.fit` semantics), then apply the fitted model.
+    /// Lowered by [`super::lower`] into a two-pass physical strategy:
+    /// pass 1 streams shards through the preceding ops to accumulate the
+    /// fit state, pass 2 re-runs the program with the fitted model
+    /// spliced in as an ordinary stage.
+    Fit { est: Arc<dyn Estimator> },
+    /// Deterministic Bernoulli row sample: keep each row of the stream
+    /// at this point with probability `fraction`, decided by a
+    /// position-seeded hash (shard index × row index × `seed`) so every
+    /// executor — sequential, fused, streaming — keeps the same rows.
+    Sample { fraction: f64, seed: u64 },
+    /// Keep the first `n` rows of the stream at this point (in shard
+    /// order). Enforced exactly by the driver-side merge.
+    Limit { n: usize },
     /// Drop rows with a null in any of `cols` (step 9).
     DropNulls { cols: Vec<String> },
     /// Drop duplicate rows keyed on `cols`, first occurrence wins
@@ -45,6 +60,11 @@ impl LogicalOp {
             }
             LogicalOp::Project { cols } => format!("Project [{}]", cols.join(", ")),
             LogicalOp::Transform { stage } => format!("Transform {}", stage.describe()),
+            LogicalOp::Fit { est } => format!("Fit {}", est.describe()),
+            LogicalOp::Sample { fraction, seed } => {
+                format!("Sample [fraction={fraction}, seed={seed}]")
+            }
+            LogicalOp::Limit { n } => format!("Limit [{n}]"),
             LogicalOp::DropNulls { cols } => format!("DropNulls [{}]", cols.join(", ")),
             LogicalOp::Distinct { cols } => format!("Distinct [{}]", cols.join(", ")),
             LogicalOp::DropEmpty { cols } => format!("DropEmpty [{}]", cols.join(", ")),
@@ -112,6 +132,31 @@ impl LogicalPlan {
             self.ops.push(LogicalOp::Transform { stage });
         }
         self
+    }
+
+    /// Append an estimator stage, fit on the stream at this point and
+    /// applied in place (lowers to the two-pass physical strategy).
+    pub fn fit(self, est: impl Estimator + 'static) -> Self {
+        self.fit_arc(Arc::new(est))
+    }
+
+    /// Append an already-shared estimator stage.
+    pub fn fit_arc(self, est: Arc<dyn Estimator>) -> Self {
+        self.push(LogicalOp::Fit { est })
+    }
+
+    /// Deterministic Bernoulli sample of the stream at this point: keep
+    /// each row with probability `fraction` (position-hashed with
+    /// `seed`, identical across executors). The optimizer hoists the
+    /// sample ahead of row-preserving transforms so skipped rows are
+    /// never cleaned.
+    pub fn sample(self, fraction: f64, seed: u64) -> Self {
+        self.push(LogicalOp::Sample { fraction, seed })
+    }
+
+    /// Keep the first `n` rows of the stream at this point.
+    pub fn limit(self, n: usize) -> Self {
+        self.push(LogicalOp::Limit { n })
     }
 
     /// Drop rows null in any of `cols`.
@@ -204,5 +249,19 @@ mod tests {
     fn render_is_one_op_per_line() {
         let plan = LogicalPlan::scan(vec![], &["c"]).collect();
         assert_eq!(plan.render(), "Ingest [0 files] project=[c]\nCollect\n");
+    }
+
+    #[test]
+    fn sample_limit_and_fit_render_their_state() {
+        use crate::pipeline::features::Idf;
+        let plan = LogicalPlan::scan(vec![], &["c"])
+            .sample(0.25, 7)
+            .limit(100)
+            .fit(Idf::new("c", "v").with_min_doc_freq(3))
+            .collect();
+        let labels: Vec<String> = plan.ops().iter().map(|o| o.label()).collect();
+        assert_eq!(labels[1], "Sample [fraction=0.25, seed=7]");
+        assert_eq!(labels[2], "Limit [100]");
+        assert_eq!(labels[3], "Fit IDF(c -> v, min_df=3)");
     }
 }

@@ -3,20 +3,31 @@
 //! executes through.
 //!
 //! A preprocessing job is described lazily as a [`LogicalPlan`]
-//! (Ingest → Project → Transform* → DropNulls → Distinct → DropEmpty →
-//! Collect), rewritten by the [`optimize`](LogicalPlan::optimize) rules
+//! (Ingest → Project → Sample/Limit → Transform*/Fit → DropNulls →
+//! Distinct* → DropEmpty → Collect), rewritten by the
+//! [`optimize`](LogicalPlan::optimize) rules
 //!
 //! 1. projection pushdown into ingestion,
-//! 2. null-drop pushdown ahead of cleaning, and
-//! 3. fusion of adjacent same-column string stages into one
+//! 2. null-drop pushdown ahead of cleaning,
+//! 3. sample/limit pushdown ahead of row-preserving transforms, and
+//! 4. fusion of adjacent same-column string stages into one
 //!    [`FusedStringStage`],
 //!
 //! then lowered to a [`PhysicalPlan`] that runs everything — parse,
-//! null masks, pre-hashed dedup keys, fused cleaning sweeps, the
-//! empty-string sweep — inside **one** parallel pass per shard file.
-//! Only the ordered first-occurrence dedup merge and the final collect
-//! remain on the driver, eliminating the ingest/clean/dedup barriers of
-//! the eager path.
+//! null masks, positional sampling, pre-hashed dedup keys (any number
+//! of `Distinct` ops), fused cleaning sweeps, the empty-string sweep —
+//! inside **one** parallel pass per shard file. Only the ordered
+//! first-occurrence dedup merge, the global `Limit` budget and the
+//! final collect remain on the driver, eliminating the
+//! ingest/clean/dedup barriers of the eager path.
+//!
+//! Plans with an `Estimator` stage (`IDF`) lower to a **two-pass**
+//! strategy instead of bailing out to the staged `Pipeline::fit` path:
+//! pass 1 streams shards through the pre-estimator program and folds
+//! surviving rows into the estimator's accumulator (document
+//! frequencies), pass 2 re-runs the program with the fitted model
+//! spliced in as an ordinary fused stage. Output is byte-identical to
+//! `Pipeline::fit` + `transform` (`rust/tests/plan_equivalence.rs`).
 //!
 //! Two executors share that lowered program:
 //!
@@ -55,5 +66,5 @@ mod stream;
 pub use explain::{explain, explain_stream, explain_with};
 pub use fused::FusedStringStage;
 pub use logical::{LogicalOp, LogicalPlan};
-pub use physical::{lower, PhysicalPlan, PlanOutput};
+pub use physical::{lower, sample_keeps, PhysicalPlan, PlanOutput};
 pub use stream::{StreamExecutor, StreamOptions};

@@ -7,7 +7,13 @@
 //! 2. **Null-drop pushdown** — `DropNulls` hoists ahead of any
 //!    null-preserving same-column string rewrite, so rows that are going
 //!    to be dropped are never cleaned.
-//! 3. **String-stage fusion** — adjacent same-column `string -> string`
+//! 3. **Sample/Limit pushdown** — `Sample` and `Limit` hoist ahead of
+//!    row-preserving `Transform` stages (a 1:1 map keeps the same rows
+//!    on either side of a positional sample or a prefix limit), so rows
+//!    the sample skips or the limit cuts are never cleaned. They never
+//!    cross filters, `Distinct`, `Fit` (the fit input would change), or
+//!    each other.
+//! 4. **String-stage fusion** — adjacent same-column `string -> string`
 //!    stages collapse into one [`FusedStringStage`] whose kernel chain
 //!    sweeps the partition once (whole-stage codegen, scaled down).
 //!
@@ -25,6 +31,7 @@ use std::sync::Arc;
 pub fn optimize(plan: LogicalPlan) -> LogicalPlan {
     let ops = push_projection(plan.ops);
     let ops = push_null_drop(ops);
+    let ops = push_sample_limit(ops);
     let ops = fuse_string_stages(ops);
     LogicalPlan { ops }
 }
@@ -71,6 +78,26 @@ fn hoistable(op: &LogicalOp) -> bool {
         }
         _ => false,
     }
+}
+
+/// Rule 3: bubble `Sample` and `Limit` leftwards over `Transform` ops.
+/// A transform is a 1:1 row map, so the rows a positional sample keeps
+/// (or a prefix limit admits) are identical on either side — but hoisted
+/// ahead, the skipped rows are never transformed. Everything else is a
+/// barrier: crossing a filter would change which rows the sample/limit
+/// indexes, crossing a `Fit` would change the fit input, and crossing
+/// each other would reorder their (non-commutative) composition.
+fn push_sample_limit(mut ops: Vec<LogicalOp>) -> Vec<LogicalOp> {
+    for i in 1..ops.len() {
+        if matches!(ops[i], LogicalOp::Sample { .. } | LogicalOp::Limit { .. }) {
+            let mut j = i;
+            while j > 0 && matches!(ops[j - 1], LogicalOp::Transform { .. }) {
+                ops.swap(j - 1, j);
+                j -= 1;
+            }
+        }
+    }
+    ops
 }
 
 /// Rule 3: collapse runs of adjacent fusable stages on the same string
@@ -134,10 +161,18 @@ fn fuse_string_stages(ops: Vec<LogicalOp>) -> Vec<LogicalOp> {
                     out.push(LogicalOp::Transform { stage });
                 }
             }
+            LogicalOp::Fit { est } => {
+                // An estimator is a fusion barrier and, like a
+                // transform, may retype (or create) its output column.
+                flush(&mut out, &mut run, &mut run_col);
+                let in_dtype = dtypes.get(est.input_col()).copied().unwrap_or(DType::Str);
+                dtypes.insert(est.output_col().to_string(), est.output_dtype(in_dtype));
+                out.push(LogicalOp::Fit { est });
+            }
             other => {
-                // Filters, dedup, project and collect are fusion
-                // barriers: a filter between two rewrites changes which
-                // rows the second rewrite sees.
+                // Filters, dedup, sample/limit, project and collect are
+                // fusion barriers: a filter between two rewrites changes
+                // which rows the second rewrite sees.
                 flush(&mut out, &mut run, &mut run_col);
                 out.push(other);
             }
@@ -237,5 +272,61 @@ mod tests {
         let once = case_study_plan(&[], "title", "abstract").optimize();
         let twice = once.clone().optimize();
         assert_eq!(once.render(), twice.render());
+    }
+
+    #[test]
+    fn sample_and_limit_hoist_ahead_of_transforms_only() {
+        let plan = LogicalPlan::scan(vec![], &["t"])
+            .drop_nulls(&["t"])
+            .transform(ConvertToLower::new("t"))
+            .transform(RemoveHtmlTags::new("t"))
+            .sample(0.5, 9)
+            .limit(10)
+            .collect()
+            .optimize();
+        let labels: Vec<String> = plan.ops().iter().map(|o| o.label()).collect();
+        // Both hoisted past the (now fused) rewrites, stopping at the
+        // filter; their relative order is preserved.
+        assert_eq!(labels[1], "DropNulls [t]", "{}", plan.render());
+        assert_eq!(labels[2], "Sample [fraction=0.5, seed=9]", "{}", plan.render());
+        assert_eq!(labels[3], "Limit [10]", "{}", plan.render());
+        assert!(labels[4].contains("FusedStringStage"), "{}", plan.render());
+    }
+
+    #[test]
+    fn sample_does_not_cross_distinct_or_fit() {
+        use crate::pipeline::features::{HashingTF, Idf};
+        use crate::pipeline::stages::Tokenizer;
+        let plan = LogicalPlan::scan(vec![], &["t"])
+            .distinct(&["t"])
+            .sample(0.5, 1)
+            .transform(Tokenizer::new("t", "w"))
+            .transform(HashingTF::new("w", "tf", 16))
+            .fit(Idf::new("tf", "tfidf"))
+            .limit(5)
+            .collect()
+            .optimize();
+        let labels: Vec<String> = plan.ops().iter().map(|o| o.label()).collect();
+        assert_eq!(labels[1], "Distinct [t]", "{}", plan.render());
+        assert_eq!(labels[2], "Sample [fraction=0.5, seed=1]", "{}", plan.render());
+        // Limit hoists over nothing here: Fit is a barrier.
+        assert!(labels[5].starts_with("Fit IDF"), "{}", plan.render());
+        assert_eq!(labels[6], "Limit [5]", "{}", plan.render());
+    }
+
+    #[test]
+    fn fusion_resumes_after_a_fit_barrier() {
+        use crate::pipeline::features::Idf;
+        // A Fit between two fusable rewrites must keep them apart.
+        let plan = LogicalPlan::scan(vec![], &["t"])
+            .transform(ConvertToLower::new("t"))
+            .fit(Idf::new("t", "v"))
+            .transform(RemoveHtmlTags::new("t"))
+            .collect()
+            .optimize();
+        let labels: Vec<String> = plan.ops().iter().map(|o| o.label()).collect();
+        assert_eq!(labels[1], "Transform ConvertToLower(t)", "{}", plan.render());
+        assert!(labels[2].starts_with("Fit IDF"), "{}", plan.render());
+        assert_eq!(labels[3], "Transform RemoveHTMLTags(t)", "{}", plan.render());
     }
 }

@@ -1,9 +1,21 @@
 //! Physical execution: the whole lowered plan runs inside **one**
 //! parallel pass over the shard files. Each worker, per file:
-//! parse+project → null mask → 128-bit dedup keys → (fused) cleaning
-//! sweeps → empty-string sweep. The driver is left with the only
-//! inherently ordered work: the first-occurrence-wins dedup merge and
-//! the final extend into a contiguous [`LocalFrame`].
+//! parse+project → null mask → positional sample → 128-bit dedup keys →
+//! (fused) cleaning sweeps → empty-string sweep. The driver is left with
+//! the only inherently ordered work: the first-occurrence-wins dedup
+//! merge, the global `Limit` budget, and the final extend into a
+//! contiguous [`LocalFrame`].
+//!
+//! Plans carrying an `Estimator` stage ([`LogicalOp::Fit`]) lower to a
+//! **two-pass strategy**: pass 1 runs the pre-estimator program over the
+//! shards and folds each surviving partition's input column into the
+//! estimator's [`FitAccumulator`](crate::pipeline::FitAccumulator)
+//! (document frequencies for `IDF`) — no frame is materialized — then
+//! pass 2 re-runs the program with the fitted model spliced in as an
+//! ordinary stage, fused with the remaining ops. Both passes run on
+//! whichever executor the caller picked (fused single pass or the
+//! streaming pipeline), so estimator-bearing pipelines no longer bail
+//! out to the staged `Pipeline::fit`/`transform` path.
 //!
 //! This replaces the eager driver's four barrier-separated phases
 //! (ingest ‖ → pre-clean → clean ‖ → post-clean) with a single
@@ -15,15 +27,18 @@
 //! but a fused pass has no per-stage walls. Workers therefore record
 //! per-phase CPU spans, and the pass's wall time is attributed to the
 //! four stage keys proportionally; the driver-side dedup merge and
-//! collect are measured directly and added to pre-/post-cleaning.
+//! collect are measured directly and added to pre-/post-cleaning. A fit
+//! pass's wall time is added to the cleaning stage (fitting is
+//! preprocessing work the staged path pays inside `Pipeline::fit`).
 
 use super::logical::{LogicalOp, LogicalPlan};
 use super::stream::{StreamExecutor, StreamOptions};
+use crate::cache::xxh64;
 use crate::driver::{CLEANING, INGESTION, POST_CLEANING, PRE_CLEANING};
 use crate::engine::Executor;
 use crate::frame::{hash_row_wide, Field, LocalFrame, Partition, Schema};
 use crate::metrics::StageTimes;
-use crate::pipeline::Transformer;
+use crate::pipeline::{Estimator, Transformer};
 use crate::Result;
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
@@ -35,14 +50,39 @@ use std::time::{Duration, Instant};
 enum PartitionOp {
     /// Drop rows null in any of the columns (pre-cleaning).
     NullFilter { idxs: Vec<usize> },
-    /// Compute 128-bit dedup keys over the columns *at this point* in
-    /// the program — i.e. over raw values when `Distinct` precedes the
-    /// cleaning stages, as in Algorithm 1.
-    HashKeys { idxs: Vec<usize> },
+    /// Compute 128-bit dedup keys for distinct op `slot` over the
+    /// columns *at this point* in the program — i.e. over raw values
+    /// when `Distinct` precedes the cleaning stages, as in Algorithm 1.
+    HashKeys { slot: usize, idxs: Vec<usize> },
+    /// Positional Bernoulli sample: keep row `i` of shard `s` (at this
+    /// point in the program) iff `hash(s, i, seed)` lands under
+    /// `fraction`. Position-based — not content-based — so the optimizer
+    /// may hoist it over row-preserving transforms without changing
+    /// which rows are kept.
+    SampleFilter { fraction: f64, seed: u64 },
+    /// Per-partition prefix cap for a `Limit` — emitted only when the
+    /// plan has no `Distinct` (a pending dedup could need rows past the
+    /// local cap). The global budget is always enforced at the merge.
+    LimitCap { n: usize },
     /// Apply one (possibly fused) transformer stage.
     Stage { stage: Arc<dyn Transformer>, in_idx: usize, out_idx: usize },
     /// Empty-string → null sweep + null filter (post-cleaning).
     EmptyFilter { idxs: Vec<usize> },
+}
+
+/// The lowered form of a [`LogicalOp::Fit`]: everything pass 1 and
+/// pass 2 need to fit the estimator and splice the fitted model.
+struct TwoPass {
+    /// `ops[..prefix_len]` is the pass-1 (pre-estimator) program.
+    prefix_len: usize,
+    /// Schema at the estimator's position (pass-1 output schema).
+    prefix_schema: Schema,
+    est: Arc<dyn Estimator>,
+    in_idx: usize,
+    out_idx: usize,
+    /// Whether the plan's `Limit` precedes the estimator (then the fit
+    /// pass must enforce it — the fit sees only the limited stream).
+    limit_in_prefix: bool,
 }
 
 /// A lowered, executable plan: the ingestion spec plus the straight-line
@@ -52,12 +92,21 @@ pub struct PhysicalPlan {
     fields: Vec<String>,
     ops: Vec<PartitionOp>,
     output_schema: Schema,
+    /// Number of `Distinct` ops lowered into the program.
+    n_distinct: usize,
+    /// Global row budget of the plan's `Limit` op, enforced at the
+    /// driver-side merge (plus an optional per-partition `LimitCap`).
+    limit: Option<usize>,
+    two_pass: Option<TwoPass>,
 }
 
-/// Lower a logical plan. Fails on shapes the single-pass executor cannot
-/// run: no leading `Ingest`, a `Project` that did not fold into the scan
-/// (run [`LogicalPlan::optimize`]), more than one `Distinct`, or a
-/// missing/misplaced `Collect`.
+/// Lower a logical plan. Fails on shapes the executors cannot run: no
+/// leading `Ingest`, a `Project` that did not fold into the scan (run
+/// [`LogicalPlan::optimize`]), a `Sample` after a `Distinct` or `Limit`
+/// (merge-side dedup/budgeting makes downstream row positions unknowable
+/// inside a worker), a `Limit` followed by filters, more than one
+/// `Limit` or estimator, an estimator without incremental-fit support,
+/// or a missing/misplaced `Collect`.
 ///
 /// ```
 /// use p3sapp::plan::{lower, LogicalPlan};
@@ -74,10 +123,24 @@ pub fn lower(plan: &LogicalPlan) -> Result<PhysicalPlan> {
     };
     let mut schema = strings_schema(&fields);
     let mut ops: Vec<PartitionOp> = Vec::new();
-    let mut has_distinct = false;
+    let mut n_distinct = 0usize;
+    let mut limit: Option<usize> = None;
+    let mut two_pass: Option<TwoPass> = None;
     let mut collected = false;
     for op in it {
         anyhow::ensure!(!collected, "Collect must be the final plan op");
+        if limit.is_some() {
+            // Past a Limit only row-preserving ops may follow: a filter
+            // or dedup would need the merge to know each surviving
+            // row's rank at the Limit point, which workers cannot know.
+            anyhow::ensure!(
+                matches!(
+                    op,
+                    LogicalOp::Transform { .. } | LogicalOp::Fit { .. } | LogicalOp::Collect
+                ),
+                "only transform stages may follow Limit (move Limit later in the plan)"
+            );
+        }
         match op {
             LogicalOp::Ingest { .. } => anyhow::bail!("plan has more than one Ingest op"),
             LogicalOp::Project { cols } => {
@@ -95,42 +158,80 @@ pub fn lower(plan: &LogicalPlan) -> Result<PhysicalPlan> {
                 ops.push(PartitionOp::NullFilter { idxs: resolve(&schema, cols)? });
             }
             LogicalOp::Distinct { cols } => {
-                anyhow::ensure!(!has_distinct, "at most one Distinct op is supported");
-                has_distinct = true;
-                ops.push(PartitionOp::HashKeys { idxs: resolve(&schema, cols)? });
+                ops.push(PartitionOp::HashKeys {
+                    slot: n_distinct,
+                    idxs: resolve(&schema, cols)?,
+                });
+                n_distinct += 1;
+            }
+            LogicalOp::Sample { fraction, seed } => {
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(fraction),
+                    "Sample fraction must be in [0, 1], got {fraction}"
+                );
+                anyhow::ensure!(
+                    n_distinct == 0,
+                    "Sample after Distinct is not supported (the merge-side dedup makes \
+                     downstream row positions worker-unknowable); sample before dedup"
+                );
+                ops.push(PartitionOp::SampleFilter { fraction: *fraction, seed: *seed });
+            }
+            LogicalOp::Limit { n } => {
+                anyhow::ensure!(limit.is_none(), "at most one Limit op is supported");
+                limit = Some(*n);
+                if n_distinct == 0 {
+                    // No pending dedup: the global first-n rows at this
+                    // point are a prefix of each shard's local rows, so
+                    // workers may cap early and skip transforming rows
+                    // that can never be admitted.
+                    ops.push(PartitionOp::LimitCap { n: *n });
+                }
             }
             LogicalOp::DropEmpty { cols } => {
                 ops.push(PartitionOp::EmptyFilter { idxs: resolve(&schema, cols)? });
             }
             LogicalOp::Transform { stage } => {
-                let in_idx = schema.index_of(stage.input_col()).ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "stage {}: input column '{}' not found",
-                        stage.name(),
-                        stage.input_col()
-                    )
-                })?;
-                let in_dtype = schema.fields()[in_idx].dtype;
-                let out_dtype = stage.output_dtype(in_dtype);
-                let out_idx = match schema.index_of(stage.output_col()) {
-                    Some(i) => {
-                        schema = schema.with_dtype(stage.output_col(), out_dtype).unwrap();
-                        i
-                    }
-                    None => {
-                        let mut f = schema.fields().to_vec();
-                        f.push(Field::new(stage.output_col(), out_dtype));
-                        schema = Schema::new(f);
-                        schema.len() - 1
-                    }
-                };
+                let (in_idx, out_idx, new_schema) = resolve_stage(
+                    &schema,
+                    stage.name(),
+                    stage.input_col(),
+                    stage.output_col(),
+                    |d| stage.output_dtype(d),
+                )?;
+                schema = new_schema;
                 ops.push(PartitionOp::Stage { stage: Arc::clone(stage), in_idx, out_idx });
+            }
+            LogicalOp::Fit { est } => {
+                anyhow::ensure!(
+                    two_pass.is_none(),
+                    "at most one estimator stage can be lowered (chain plans for more)"
+                );
+                anyhow::ensure!(
+                    est.accumulator().is_some(),
+                    "estimator {} does not support incremental fit (no accumulator); \
+                     use the eager Pipeline::fit path",
+                    est.name()
+                );
+                let prefix_schema = schema.clone();
+                let (in_idx, out_idx, new_schema) =
+                    resolve_stage(&schema, est.name(), est.input_col(), est.output_col(), |d| {
+                        est.output_dtype(d)
+                    })?;
+                schema = new_schema;
+                two_pass = Some(TwoPass {
+                    prefix_len: ops.len(),
+                    prefix_schema,
+                    est: Arc::clone(est),
+                    in_idx,
+                    out_idx,
+                    limit_in_prefix: limit.is_some(),
+                });
             }
             LogicalOp::Collect => collected = true,
         }
     }
     anyhow::ensure!(collected, "plan must end with a Collect op");
-    Ok(PhysicalPlan { files, fields, ops, output_schema: schema })
+    Ok(PhysicalPlan { files, fields, ops, output_schema: schema, n_distinct, limit, two_pass })
 }
 
 fn strings_schema(fields: &[String]) -> Schema {
@@ -145,6 +246,53 @@ fn resolve(schema: &Schema, cols: &[String]) -> Result<Vec<usize>> {
                 .ok_or_else(|| anyhow::anyhow!("no such column: {c}"))
         })
         .collect()
+}
+
+/// Resolve one stage's input/output column indices against `schema`,
+/// returning the updated schema (shared by `Transform` and `Fit`
+/// lowering so the two can never diverge on column resolution).
+fn resolve_stage(
+    schema: &Schema,
+    name: &str,
+    input_col: &str,
+    output_col: &str,
+    output_dtype: impl Fn(crate::frame::DType) -> crate::frame::DType,
+) -> Result<(usize, usize, Schema)> {
+    let in_idx = schema.index_of(input_col).ok_or_else(|| {
+        anyhow::anyhow!("stage {name}: input column '{input_col}' not found")
+    })?;
+    let in_dtype = schema.fields()[in_idx].dtype;
+    let out_dtype = output_dtype(in_dtype);
+    let (out_idx, schema) = match schema.index_of(output_col) {
+        Some(i) => (i, schema.with_dtype(output_col, out_dtype).unwrap()),
+        None => {
+            let mut f = schema.fields().to_vec();
+            f.push(Field::new(output_col, out_dtype));
+            let schema = Schema::new(f);
+            (schema.len() - 1, schema)
+        }
+    };
+    Ok((in_idx, out_idx, schema))
+}
+
+/// The positional sample decision shared by every executor (and by the
+/// staged reference paths in tests/benches): keep row `row` of shard
+/// `shard` iff a seeded position hash lands under `fraction`. The
+/// decision depends only on (seed, shard, row), so sequential, fused and
+/// streaming execution — and any worker count — keep the same rows.
+pub fn sample_keeps(seed: u64, shard: usize, row: usize, fraction: f64) -> bool {
+    if fraction >= 1.0 {
+        return true;
+    }
+    if fraction <= 0.0 {
+        return false;
+    }
+    let mut buf = [0u8; 16];
+    buf[..8].copy_from_slice(&(shard as u64).to_le_bytes());
+    buf[8..].copy_from_slice(&(row as u64).to_le_bytes());
+    // Top 53 bits → uniform f64 in [0, 1).
+    let h = xxh64(&buf, seed);
+    ((h >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < fraction
 }
 
 /// Per-worker time spent in each of the paper's stages during the pass.
@@ -162,17 +310,32 @@ impl Phases {
     }
 }
 
-/// What one worker hands back for one shard file. Opaque outside the
-/// plan layer; the streaming executor moves these from its worker pool
-/// to the driver-side [`Merger`] without looking inside.
+/// Keys for one `Distinct` op as hashed by a worker: the key values and
+/// the provenance ids (into the partition's row domain) of the rows that
+/// were alive when this slot's `HashKeys` ran. Keeping ids — rather than
+/// masking keys away when later filters drop rows — lets the merge
+/// register a first occurrence that a later filter removed, which is
+/// what makes multi-`Distinct` plans byte-identical to the staged path.
+pub(super) struct KeySlot {
+    keys: Vec<u128>,
+    ids: Vec<u32>,
+}
+
+/// What one worker hands back for one shard file (or chunk). Opaque
+/// outside the plan layer; the streaming executor moves these from its
+/// worker pool to the driver-side [`Merger`] without looking inside.
 pub(super) struct PartResult {
     part: Partition,
-    /// Dedup keys aligned with `part` rows (present iff the plan has a
-    /// `Distinct`); masked along with the rows by later filters.
-    keys: Option<Vec<u128>>,
+    /// One entry per `Distinct` op in the program, in slot order; empty
+    /// when the plan does not dedup.
+    slots: Vec<KeySlot>,
+    /// Final rows → provenance ids; `None` when the plan does not dedup.
+    final_ids: Option<Vec<u32>>,
     rows_ingested: usize,
     nulls_dropped: usize,
     empties_dropped: usize,
+    sampled_out: usize,
+    limited_out: usize,
     phases: Phases,
 }
 
@@ -187,37 +350,121 @@ pub struct PlanOutput {
     pub nulls_dropped: usize,
     pub dups_dropped: usize,
     pub empties_dropped: usize,
+    /// Rows skipped by a `Sample` op.
+    pub sampled_out: usize,
+    /// Rows cut by a `Limit` op (per-partition cap + global budget).
+    pub limited_out: usize,
+}
+
+/// The global, order-sensitive admission logic shared by the collect
+/// merge and the fit pass: first-occurrence-wins dedup across all
+/// `Distinct` slots, then the `Limit` budget. Must be fed partitions in
+/// shard order — push order *is* stream order.
+pub(super) struct Admitter {
+    seen: Vec<HashSet<u128>>,
+    remaining: Option<usize>,
+}
+
+impl Admitter {
+    pub(super) fn new(n_slots: usize, limit: Option<usize>) -> Admitter {
+        Admitter { seen: (0..n_slots).map(|_| HashSet::new()).collect(), remaining: limit }
+    }
+
+    /// Admit one partition's rows: apply every distinct op in slot
+    /// (= program) order over the provenance domain, mask the final
+    /// rows, then charge the limit budget. Returns the admitted
+    /// partition plus (dups dropped, rows cut by the limit).
+    fn admit(
+        &mut self,
+        part: Partition,
+        domain: usize,
+        slots: &[KeySlot],
+        final_ids: Option<&[u32]>,
+    ) -> (Partition, usize, usize) {
+        let (part, dups) = if self.seen.is_empty() {
+            (part, 0)
+        } else {
+            debug_assert_eq!(slots.len(), self.seen.len());
+            let mut dup = vec![false; domain];
+            for (slot, ks) in slots.iter().enumerate() {
+                let seen = &mut self.seen[slot];
+                for (i, &id) in ks.ids.iter().enumerate() {
+                    // A row dropped by an earlier distinct never
+                    // reaches this one, so it must not register here.
+                    if dup[id as usize] {
+                        continue;
+                    }
+                    if !seen.insert(ks.keys[i]) {
+                        dup[id as usize] = true;
+                    }
+                }
+            }
+            let ids = final_ids.expect("dedup plans carry final row ids");
+            debug_assert_eq!(ids.len(), part.num_rows());
+            let mut mask = vec![true; ids.len()];
+            let mut dropped = 0usize;
+            for (i, &id) in ids.iter().enumerate() {
+                if dup[id as usize] {
+                    mask[i] = false;
+                    dropped += 1;
+                }
+            }
+            let part = if dropped > 0 { part.filter_by_mask(&mask) } else { part };
+            (part, dropped)
+        };
+        let (part, cut) = match &mut self.remaining {
+            Some(budget) => {
+                let rows = part.num_rows();
+                if rows > *budget {
+                    let cut = rows - *budget;
+                    let mut part = part;
+                    part.truncate_rows(*budget);
+                    *budget = 0;
+                    (part, cut)
+                } else {
+                    *budget -= rows;
+                    (part, 0)
+                }
+            }
+            None => (part, 0),
+        };
+        (part, dups, cut)
+    }
 }
 
 /// Driver-side accumulator shared by the single-pass and streaming
-/// executors: counters, the first-occurrence-wins dedup merge over the
-/// pre-hashed keys, and the extend into one contiguous [`LocalFrame`].
+/// executors: counters, the ordered dedup/limit admission
+/// ([`Admitter`]), and the extend into one contiguous [`LocalFrame`].
 ///
 /// Push order **is** output row order and decides which duplicate
 /// survives, so callers must push results in input shard order — the
 /// streaming executor re-sequences out-of-order arrivals before pushing.
 pub(super) struct Merger {
     local: LocalFrame,
-    seen: HashSet<u128>,
+    admitter: Admitter,
     phases: Phases,
     rows_ingested: usize,
     nulls_dropped: usize,
     empties_dropped: usize,
     dups_dropped: usize,
+    sampled_out: usize,
+    limited_out: usize,
     dedup_wall: Duration,
     collect_wall: Duration,
 }
 
 impl Merger {
-    pub(super) fn new(schema: Schema) -> Merger {
+    pub(super) fn new(schema: Schema, n_slots: usize, limit: Option<usize>) -> Merger {
         Merger {
             local: LocalFrame::empty(schema),
-            seen: HashSet::new(),
+            admitter: Admitter::new(n_slots, limit),
             phases: Phases::default(),
             rows_ingested: 0,
             nulls_dropped: 0,
             empties_dropped: 0,
             dups_dropped: 0,
+            sampled_out: 0,
+            limited_out: 0,
             dedup_wall: Duration::ZERO,
             collect_wall: Duration::ZERO,
         }
@@ -225,7 +472,17 @@ impl Merger {
 
     /// Fold one shard's result in (must be called in shard order).
     pub(super) fn push(&mut self, r: PartResult) {
-        let PartResult { part, keys, rows_ingested, nulls_dropped, empties_dropped, phases } = r;
+        let PartResult {
+            part,
+            slots,
+            final_ids,
+            rows_ingested,
+            nulls_dropped,
+            empties_dropped,
+            sampled_out,
+            limited_out,
+            phases,
+        } = r;
         self.phases.ingest += phases.ingest;
         self.phases.pre += phases.pre;
         self.phases.clean += phases.clean;
@@ -233,25 +490,14 @@ impl Merger {
         self.rows_ingested += rows_ingested;
         self.nulls_dropped += nulls_dropped;
         self.empties_dropped += empties_dropped;
-        let part = match keys {
-            Some(keys) => {
-                let t = Instant::now();
-                debug_assert_eq!(keys.len(), part.num_rows());
-                let mut mask = vec![true; keys.len()];
-                let mut local_drop = 0usize;
-                for (i, k) in keys.iter().enumerate() {
-                    if !self.seen.insert(*k) {
-                        mask[i] = false;
-                        local_drop += 1;
-                    }
-                }
-                self.dups_dropped += local_drop;
-                let part = if local_drop > 0 { part.filter_by_mask(&mask) } else { part };
-                self.dedup_wall += t.elapsed();
-                part
-            }
-            None => part,
-        };
+        self.sampled_out += sampled_out;
+        self.limited_out += limited_out;
+        let t = Instant::now();
+        let (part, dups, cut) =
+            self.admitter.admit(part, rows_ingested, &slots, final_ids.as_deref());
+        self.dups_dropped += dups;
+        self.limited_out += cut;
+        self.dedup_wall += t.elapsed();
         let t = Instant::now();
         self.local.extend_from_partition(part);
         self.collect_wall += t.elapsed();
@@ -312,6 +558,8 @@ impl Merger {
             nulls_dropped: self.nulls_dropped,
             dups_dropped: self.dups_dropped,
             empties_dropped: self.empties_dropped,
+            sampled_out: self.sampled_out,
+            limited_out: self.limited_out,
         }
     }
 }
@@ -331,10 +579,53 @@ impl PhysicalPlan {
         &self.fields
     }
 
+    pub(super) fn n_distinct(&self) -> usize {
+        self.n_distinct
+    }
+
+    pub(super) fn limit_n(&self) -> Option<usize> {
+        self.limit
+    }
+
+    pub(super) fn is_two_pass(&self) -> bool {
+        self.two_pass.is_some()
+    }
+
+    fn has_sample(&self) -> bool {
+        self.ops.iter().any(|op| matches!(op, PartitionOp::SampleFilter { .. }))
+    }
+
     /// Execute with `workers` threads (0 = all cores).
     pub fn execute(&self, workers: usize) -> Result<PlanOutput> {
-        let exec = Executor::new(workers);
+        if let Some(tp) = &self.two_pass {
+            // Pass 1: stream shards through the prefix program to fit
+            // the estimator; pass 2: the fused single pass with the
+            // fitted model spliced in.
+            let t0 = Instant::now();
+            let fitted = self.run_fit_fused(tp, workers)?;
+            let fit_wall = t0.elapsed();
+            let mut out = self.with_model(tp, fitted).execute(workers)?;
+            out.times.add(CLEANING, fit_wall);
+            return Ok(out);
+        }
         let t_pass = Instant::now();
+        let (results, extra_ingest) = self.collect_results(workers)?;
+        let pass_wall = t_pass.elapsed();
+
+        let mut merger =
+            Merger::new(self.output_schema.clone(), self.n_distinct, self.limit_n());
+        for r in results {
+            merger.push(r);
+        }
+        Ok(merger.finish(pass_wall, extra_ingest))
+    }
+
+    /// Run the per-shard programs and return their results in shard
+    /// order, plus parse time measured outside the programs (re-chunk
+    /// path). Shared by [`Self::execute`], the fit pass, and the
+    /// streaming executor's scarce-shard fallback.
+    pub(super) fn collect_results(&self, workers: usize) -> Result<(Vec<PartResult>, Duration)> {
+        let exec = Executor::new(workers);
         // The shard file is the unit of parallelism — unless files are
         // scarcer than threads or one oversized shard would serialize
         // the cleaning (the straggler problem `engine::rebalance` solved
@@ -344,7 +635,9 @@ impl PhysicalPlan {
         // identical either way.
         let mut extra_ingest = Duration::ZERO;
         let results: Vec<PartResult> = if !self.needs_rechunk(exec.workers()) {
-            exec.map_items(self.files.clone(), |path| self.run_partition(&path))
+            let jobs: Vec<(usize, PathBuf)> =
+                self.files.iter().cloned().enumerate().collect();
+            exec.map_items(jobs, |(idx, path)| self.run_partition(idx, &path))
                 .into_iter()
                 .collect::<Result<Vec<_>>>()?
         } else {
@@ -369,15 +662,13 @@ impl PhysicalPlan {
                 let pieces = part.num_rows().div_ceil(target_rows).max(1);
                 chunks.extend(part.split_rows(pieces));
             }
-            exec.map_items(chunks, |part| self.run_ops(part, Duration::ZERO))
+            // Chunks are order-contiguous, so dedup provenance and the
+            // limit budget work per chunk exactly as per shard; shard
+            // identity is only needed by SampleFilter, which disables
+            // re-chunking (`needs_rechunk`), so the index is unused.
+            exec.map_items(chunks, |part| self.run_ops(part, 0, Duration::ZERO))
         };
-        let pass_wall = t_pass.elapsed();
-
-        let mut merger = Merger::new(self.output_schema.clone());
-        for r in results {
-            merger.push(r);
-        }
-        Ok(merger.finish(pass_wall, extra_ingest))
+        Ok((results, extra_ingest))
     }
 
     /// Execute through the two-stage streaming pipeline instead of the
@@ -385,7 +676,77 @@ impl PhysicalPlan {
     /// worker pool runs the op program on shards already parsed (see
     /// [`StreamExecutor`]). Output is byte-identical to [`Self::execute`].
     pub fn execute_stream(&self, opts: &StreamOptions) -> Result<PlanOutput> {
+        if let Some(tp) = &self.two_pass {
+            // Pass 1 reuses the streaming reader pool over the prefix
+            // program; pass 2 streams the full fitted program.
+            let t0 = Instant::now();
+            let fitted = self.run_fit_stream(tp, opts)?;
+            let fit_wall = t0.elapsed();
+            let mut out = self.with_model(tp, fitted).execute_stream(opts)?;
+            out.times.add(CLEANING, fit_wall);
+            return Ok(out);
+        }
         StreamExecutor::new(opts.clone()).execute(self)
+    }
+
+    /// The pass-1 plan: the pre-estimator program with the estimator's
+    /// input schema (no fitted stage, no suffix ops).
+    fn prefix_plan(&self, tp: &TwoPass) -> PhysicalPlan {
+        let ops: Vec<PartitionOp> = self.ops[..tp.prefix_len].to_vec();
+        let n_distinct = ops
+            .iter()
+            .filter(|op| matches!(op, PartitionOp::HashKeys { .. }))
+            .count();
+        PhysicalPlan {
+            files: self.files.clone(),
+            fields: self.fields.clone(),
+            ops,
+            output_schema: tp.prefix_schema.clone(),
+            n_distinct,
+            limit: self.limit.filter(|_| tp.limit_in_prefix),
+            two_pass: None,
+        }
+    }
+
+    /// The pass-2 plan: the full program with the fitted model spliced
+    /// in at the estimator's position as an ordinary stage.
+    fn with_model(&self, tp: &TwoPass, fitted: Arc<dyn Transformer>) -> PhysicalPlan {
+        let mut ops = self.ops.clone();
+        ops.insert(
+            tp.prefix_len,
+            PartitionOp::Stage { stage: fitted, in_idx: tp.in_idx, out_idx: tp.out_idx },
+        );
+        PhysicalPlan {
+            files: self.files.clone(),
+            fields: self.fields.clone(),
+            ops,
+            output_schema: self.output_schema.clone(),
+            n_distinct: self.n_distinct,
+            limit: self.limit,
+            two_pass: None,
+        }
+    }
+
+    /// Pass 1 when the caller picked the fused executor. The fit pass
+    /// only produces accumulator state (document frequencies), so even
+    /// here it folds incrementally through the bounded streaming
+    /// pipeline — barriering every shard's cleaned+tokenized partitions
+    /// into one `Vec` before folding would give pass 1 the peak memory
+    /// of a full frame materialization for no benefit. (With fewer
+    /// shards than workers, [`StreamExecutor::run`] itself falls back
+    /// to the parallel collect, where the partition count is small.)
+    fn run_fit_fused(&self, tp: &TwoPass, workers: usize) -> Result<Arc<dyn Transformer>> {
+        self.run_fit_stream(tp, &StreamOptions { readers: 0, workers, queue_cap: 16 })
+    }
+
+    /// Pass 1 on the streaming executor: the reader pool parses shards
+    /// while workers run the prefix program; the driver's reorder
+    /// buffer feeds the accumulator in shard order.
+    fn run_fit_stream(&self, tp: &TwoPass, opts: &StreamOptions) -> Result<Arc<dyn Transformer>> {
+        let prefix = self.prefix_plan(tp);
+        let mut sink = FitSink::new(tp, &prefix)?;
+        StreamExecutor::new(opts.clone()).run(&prefix, &mut |r| sink.push(r))?;
+        sink.finish()
     }
 
     /// File-granularity parallelism serializes when files are scarcer
@@ -393,9 +754,11 @@ impl PhysicalPlan {
     /// (mirrors `engine::needs_rebalance`'s `max_share = 0.25` rule,
     /// judged from file metadata so no parse is wasted). Unreadable
     /// metadata defers to the single-pass path, where `read_shard`
-    /// reports the real error.
+    /// reports the real error. Plans with a `Sample` never re-chunk:
+    /// the positional sample is keyed on (shard, row) and a chunk has
+    /// no shard identity.
     fn needs_rechunk(&self, workers: usize) -> bool {
-        if self.files.is_empty() || workers <= 1 {
+        if self.files.is_empty() || workers <= 1 || self.has_sample() {
             return false;
         }
         if self.files.len() < workers {
@@ -412,22 +775,42 @@ impl PhysicalPlan {
     }
 
     /// The whole per-shard program, run by one worker: parse + op chain.
-    fn run_partition(&self, path: &Path) -> Result<PartResult> {
+    fn run_partition(&self, shard: usize, path: &Path) -> Result<PartResult> {
         let t0 = Instant::now();
         let part = crate::ingest::spark::read_shard(path, &self.fields)?;
-        Ok(self.run_ops(part, t0.elapsed()))
+        Ok(self.run_ops(part, shard, t0.elapsed()))
     }
 
     /// The op chain over one already-parsed partition (or chunk of one).
+    /// `shard` is the shard index (used only by `SampleFilter`);
     /// `ingest_span` is the parse time to attribute to the ingestion
     /// stage — measured by the caller when parsing happened elsewhere
     /// (the streaming executor's reader stage, the re-chunk path).
-    pub(super) fn run_ops(&self, mut part: Partition, ingest_span: Duration) -> PartResult {
+    pub(super) fn run_ops(
+        &self,
+        mut part: Partition,
+        shard: usize,
+        ingest_span: Duration,
+    ) -> PartResult {
         let mut phases = Phases { ingest: ingest_span, ..Default::default() };
         let rows_ingested = part.num_rows();
-        let mut keys: Option<Vec<u128>> = None;
+        // Provenance ids (current rows → parsed-row domain), tracked
+        // only when the plan dedups: they let the merge register first
+        // occurrences that later filters removed.
+        let mut ids: Option<Vec<u32>> =
+            (self.n_distinct > 0).then(|| (0..rows_ingested as u32).collect());
+        let mut slots: Vec<KeySlot> = Vec::new();
         let mut nulls_dropped = 0usize;
         let mut empties_dropped = 0usize;
+        let mut sampled_out = 0usize;
+        let mut limited_out = 0usize;
+
+        let apply_mask = |part: &mut Partition, ids: &mut Option<Vec<u32>>, mask: &[bool]| {
+            *part = part.filter_by_mask(mask);
+            if let Some(ids) = ids {
+                retain_by_mask(ids, mask);
+            }
+        };
 
         for op in &self.ops {
             match op {
@@ -435,19 +818,50 @@ impl PhysicalPlan {
                     let t = Instant::now();
                     let (mask, dropped) = crate::frame::null_mask(&part, idxs);
                     if dropped > 0 {
-                        part = part.filter_by_mask(&mask);
-                        if let Some(k) = &mut keys {
-                            retain_by_mask(k, &mask);
-                        }
+                        apply_mask(&mut part, &mut ids, &mask);
                     }
                     nulls_dropped += dropped;
                     phases.pre += t.elapsed();
                 }
-                PartitionOp::HashKeys { idxs } => {
+                PartitionOp::HashKeys { slot, idxs } => {
                     let t = Instant::now();
-                    keys = Some(
-                        (0..part.num_rows()).map(|i| hash_row_wide(&part, idxs, i)).collect(),
-                    );
+                    debug_assert_eq!(*slot, slots.len(), "HashKeys slots out of order");
+                    let keys: Vec<u128> =
+                        (0..part.num_rows()).map(|i| hash_row_wide(&part, idxs, i)).collect();
+                    slots.push(KeySlot {
+                        keys,
+                        ids: ids.as_ref().expect("dedup plans track ids").clone(),
+                    });
+                    phases.pre += t.elapsed();
+                }
+                PartitionOp::SampleFilter { fraction, seed } => {
+                    let t = Instant::now();
+                    let mut dropped = 0usize;
+                    let mask: Vec<bool> = (0..part.num_rows())
+                        .map(|i| {
+                            let keep = sample_keeps(*seed, shard, i, *fraction);
+                            if !keep {
+                                dropped += 1;
+                            }
+                            keep
+                        })
+                        .collect();
+                    if dropped > 0 {
+                        apply_mask(&mut part, &mut ids, &mask);
+                    }
+                    sampled_out += dropped;
+                    phases.pre += t.elapsed();
+                }
+                PartitionOp::LimitCap { n } => {
+                    let t = Instant::now();
+                    let rows = part.num_rows();
+                    if rows > *n {
+                        limited_out += rows - n;
+                        part.truncate_rows(*n);
+                        if let Some(ids) = &mut ids {
+                            ids.truncate(*n);
+                        }
+                    }
                     phases.pre += t.elapsed();
                 }
                 PartitionOp::Stage { stage, in_idx, out_idx } => {
@@ -474,53 +888,65 @@ impl PhysicalPlan {
                     }
                     let (mask, dropped) = crate::frame::null_mask(&part, idxs);
                     if dropped > 0 {
-                        part = part.filter_by_mask(&mask);
-                        if let Some(k) = &mut keys {
-                            retain_by_mask(k, &mask);
-                        }
+                        apply_mask(&mut part, &mut ids, &mask);
                     }
                     empties_dropped += dropped;
                     phases.post += t.elapsed();
                 }
             }
         }
-        PartResult { part, keys, rows_ingested, nulls_dropped, empties_dropped, phases }
+        PartResult {
+            part,
+            slots,
+            final_ids: ids,
+            rows_ingested,
+            nulls_dropped,
+            empties_dropped,
+            sampled_out,
+            limited_out,
+            phases,
+        }
     }
 
     /// One rendered line per op of the per-partition program, shared by
-    /// the single-pass and streaming EXPLAIN renderings.
+    /// the single-pass, streaming and two-pass EXPLAIN renderings.
     fn op_lines(&self) -> Vec<String> {
-        let name = |i: usize| self.output_schema.fields()[i].name.as_str();
-        let list =
-            |idxs: &[usize]| idxs.iter().map(|&i| name(i)).collect::<Vec<_>>().join(", ");
-        let mut lines = Vec::with_capacity(self.ops.len());
-        for op in &self.ops {
-            match op {
-                PartitionOp::NullFilter { idxs } => {
-                    lines.push(format!("null-filter [{}]", list(idxs)));
-                }
-                PartitionOp::HashKeys { idxs } => {
-                    lines.push(format!("hash-keys [{}] (128-bit)", list(idxs)));
-                }
-                PartitionOp::Stage { stage, in_idx, out_idx } => {
-                    let mode = if in_idx == out_idx { "in-place sweep" } else { "append" };
-                    lines.push(format!("{} ({mode})", stage.describe()));
-                }
-                PartitionOp::EmptyFilter { idxs } => {
-                    lines.push(format!("empty-filter [{}]", list(idxs)));
-                }
-            }
-        }
-        lines
+        op_lines_of(&self.ops, &self.output_schema)
     }
 
     fn has_dedup(&self) -> bool {
-        self.ops.iter().any(|op| matches!(op, PartitionOp::HashKeys { .. }))
+        self.n_distinct > 0
+    }
+
+    /// The driver line of an EXPLAIN rendering: dedup merge, limit
+    /// budget and collect, in the order they apply.
+    fn driver_line(&self, streaming: bool) -> String {
+        let mut steps: Vec<String> = Vec::new();
+        if self.has_dedup() {
+            steps.push(if streaming {
+                "streaming ordered dedup merge (reorder buffer)".into()
+            } else {
+                "ordered dedup merge (HashSet)".into()
+            });
+        }
+        if let Some(n) = self.limit_n() {
+            steps.push(format!("limit({n})"));
+        }
+        steps.push(if streaming && !self.has_dedup() {
+            "streaming ordered collect(LocalFrame)".into()
+        } else {
+            "collect(LocalFrame)".into()
+        });
+        format!("Driver: {}", steps.join(" -> "))
     }
 
     /// Render the physical program (EXPLAIN's third section).
     pub fn render(&self, workers: usize) -> String {
         use std::fmt::Write;
+        if let Some(tp) = &self.two_pass {
+            let sched = format!("{} workers", Executor::new(workers).workers());
+            return self.render_two_pass(tp, &sched, None);
+        }
         let mut s = String::new();
         let _ = writeln!(
             s,
@@ -532,11 +958,7 @@ impl PhysicalPlan {
         for line in self.op_lines() {
             let _ = writeln!(s, "  {line}");
         }
-        if self.has_dedup() {
-            let _ = writeln!(s, "Driver: ordered dedup merge (HashSet) -> collect(LocalFrame)");
-        } else {
-            let _ = writeln!(s, "Driver: collect(LocalFrame)");
-        }
+        let _ = writeln!(s, "{}", self.driver_line(false));
         s
     }
 
@@ -549,6 +971,13 @@ impl PhysicalPlan {
     pub fn render_stream(&self, opts: &StreamOptions) -> String {
         use std::fmt::Write;
         let (readers, workers, queue_cap) = opts.resolve(self.files.len());
+        if let Some(tp) = &self.two_pass {
+            return self.render_two_pass(
+                tp,
+                &format!("streaming, {readers} readers + {workers} workers, queue {queue_cap}"),
+                Some(opts),
+            );
+        }
         if !self.files.is_empty() && self.files.len() < workers {
             let mut s = String::new();
             let _ = writeln!(
@@ -567,22 +996,126 @@ impl PhysicalPlan {
         for line in self.op_lines() {
             let _ = writeln!(s, "    {line}");
         }
-        if self.has_dedup() {
-            let _ = writeln!(
-                s,
-                "Driver: streaming ordered dedup merge (reorder buffer) -> collect(LocalFrame)"
-            );
-        } else {
-            let _ = writeln!(s, "Driver: streaming ordered collect(LocalFrame)");
+        let _ = writeln!(s, "{}", self.driver_line(true));
+        s
+    }
+
+    /// Render the two-pass topology: the fit pass over the prefix
+    /// program, then the full program with the fitted model spliced in.
+    fn render_two_pass(&self, tp: &TwoPass, sched: &str, stream: Option<&StreamOptions>) -> String {
+        use std::fmt::Write;
+        let prefix = self.prefix_plan(tp);
+        let mut s = String::new();
+        let _ = writeln!(s, "TwoPass [{} file-partitions, {sched}]", self.files.len());
+        let _ = writeln!(s, "  Pass 1 — fit {}:", tp.est.describe());
+        let _ = writeln!(s, "    parse+project [{}]", self.fields.join(", "));
+        for line in prefix.op_lines() {
+            let _ = writeln!(s, "    {line}");
         }
+        let fit_driver = if prefix.has_dedup() {
+            "ordered dedup merge"
+        } else {
+            "ordered fold"
+        };
+        let limit_note = if tp.limit_in_prefix {
+            self.limit.map(|n| format!(" -> limit({n})")).unwrap_or_default()
+        } else {
+            String::new()
+        };
+        let _ = writeln!(
+            s,
+            "    Driver: {fit_driver}{limit_note} -> {}.accumulate -> fit",
+            tp.est.name()
+        );
+        let _ = writeln!(s, "  Pass 2 — apply fitted model, fused with remaining ops:");
+        let _ = writeln!(s, "    parse+project [{}]", self.fields.join(", "));
+        let mode = if tp.in_idx == tp.out_idx { "in-place sweep" } else { "append" };
+        for (i, line) in op_lines_of(&self.ops, &self.output_schema).iter().enumerate() {
+            if i == tp.prefix_len {
+                let _ = writeln!(s, "    fitted {} ({mode})", tp.est.describe());
+            }
+            let _ = writeln!(s, "    {line}");
+        }
+        if tp.prefix_len == self.ops.len() {
+            let _ = writeln!(s, "    fitted {} ({mode})", tp.est.describe());
+        }
+        let _ = writeln!(s, "  {}", self.driver_line(stream.is_some()));
         s
     }
 }
 
-fn retain_by_mask(keys: &mut Vec<u128>, mask: &[bool]) {
-    debug_assert_eq!(keys.len(), mask.len());
+/// Render one op per line against `schema` (column-name lookup).
+fn op_lines_of(ops: &[PartitionOp], schema: &Schema) -> Vec<String> {
+    let name = |i: usize| schema.fields()[i].name.as_str();
+    let list = |idxs: &[usize]| idxs.iter().map(|&i| name(i)).collect::<Vec<_>>().join(", ");
+    let mut lines = Vec::with_capacity(ops.len());
+    for op in ops {
+        match op {
+            PartitionOp::NullFilter { idxs } => {
+                lines.push(format!("null-filter [{}]", list(idxs)));
+            }
+            PartitionOp::HashKeys { slot, idxs } => {
+                lines.push(format!("hash-keys #{slot} [{}] (128-bit)", list(idxs)));
+            }
+            PartitionOp::SampleFilter { fraction, seed } => {
+                lines.push(format!("sample [fraction={fraction}, seed={seed}] (positional)"));
+            }
+            PartitionOp::LimitCap { n } => {
+                lines.push(format!("limit-cap [{n}] (per-partition prefix)"));
+            }
+            PartitionOp::Stage { stage, in_idx, out_idx } => {
+                let mode = if in_idx == out_idx { "in-place sweep" } else { "append" };
+                lines.push(format!("{} ({mode})", stage.describe()));
+            }
+            PartitionOp::EmptyFilter { idxs } => {
+                lines.push(format!("empty-filter [{}]", list(idxs)));
+            }
+        }
+    }
+    lines
+}
+
+/// Pass-1 sink: admit partitions in stream order (dedup + limit), feed
+/// the estimator's accumulator, discard the rows.
+struct FitSink {
+    admitter: Admitter,
+    acc: Box<dyn crate::pipeline::FitAccumulator>,
+    in_idx: usize,
+}
+
+impl FitSink {
+    fn new(tp: &TwoPass, prefix: &PhysicalPlan) -> Result<FitSink> {
+        let acc = tp.est.accumulator().ok_or_else(|| {
+            anyhow::anyhow!(
+                "estimator {} lost its accumulator between lower and execute",
+                tp.est.name()
+            )
+        })?;
+        Ok(FitSink {
+            admitter: Admitter::new(prefix.n_distinct, prefix.limit_n()),
+            acc,
+            in_idx: tp.in_idx,
+        })
+    }
+
+    fn push(&mut self, r: PartResult) -> Result<()> {
+        let (part, _, _) =
+            self.admitter.admit(r.part, r.rows_ingested, &r.slots, r.final_ids.as_deref());
+        if part.num_rows() > 0 {
+            self.acc.accumulate(part.column(self.in_idx))?;
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> Result<Arc<dyn Transformer>> {
+        self.acc.finish()
+    }
+}
+
+fn retain_by_mask<T>(items: &mut Vec<T>, mask: &[bool]) {
+    debug_assert_eq!(items.len(), mask.len());
     let mut i = 0;
-    keys.retain(|_| {
+    items.retain(|_| {
         let keep = mask[i];
         i += 1;
         keep
@@ -594,6 +1127,7 @@ mod tests {
     use super::*;
     use crate::corpus::{generate_corpus, CorpusSpec};
     use crate::ingest::list_shards;
+    use crate::pipeline::features::{HashingTF, Idf};
     use crate::pipeline::presets::case_study_plan;
     use crate::pipeline::stages::Tokenizer;
 
@@ -612,15 +1146,42 @@ mod tests {
         assert!(lower(&bare).is_err());
         // No Collect.
         assert!(lower(&LogicalPlan::scan(vec![], &["c"])).is_err());
-        // Two Distincts.
-        let twice = LogicalPlan::scan(vec![], &["c"])
-            .distinct(&["c"])
-            .distinct(&["c"])
-            .collect();
-        assert!(lower(&twice).is_err());
         // Unknown column.
         let bad = LogicalPlan::scan(vec![], &["c"]).drop_nulls(&["nope"]).collect();
         assert!(lower(&bad).is_err());
+        // Sample after Distinct.
+        let sad = LogicalPlan::scan(vec![], &["c"]).distinct(&["c"]).sample(0.5, 1).collect();
+        assert!(lower(&sad).is_err());
+        // Sample fraction out of range.
+        let oor = LogicalPlan::scan(vec![], &["c"]).sample(1.5, 1).collect();
+        assert!(lower(&oor).is_err());
+        // A filter after Limit.
+        let laf = LogicalPlan::scan(vec![], &["c"]).limit(5).drop_nulls(&["c"]).collect();
+        assert!(lower(&laf).is_err());
+        // Two Limits.
+        let ll = LogicalPlan::scan(vec![], &["c"]).limit(5).limit(3).collect();
+        assert!(lower(&ll).is_err());
+        // Two estimators.
+        let ee = LogicalPlan::scan(vec![], &["c"])
+            .transform(Tokenizer::new("c", "w"))
+            .transform(HashingTF::new("w", "tf", 8))
+            .fit(Idf::new("tf", "v1"))
+            .fit(Idf::new("v1", "v2"))
+            .collect();
+        assert!(lower(&ee).is_err());
+    }
+
+    #[test]
+    fn lower_accepts_multiple_distincts() {
+        let plan = LogicalPlan::scan(vec![], &["a", "b"])
+            .distinct(&["a"])
+            .distinct(&["b"])
+            .collect();
+        let phys = lower(&plan).unwrap();
+        assert_eq!(phys.n_distinct(), 2);
+        let r = phys.render(2);
+        assert!(r.contains("hash-keys #0 [a]"), "{r}");
+        assert!(r.contains("hash-keys #1 [b]"), "{r}");
     }
 
     #[test]
@@ -630,6 +1191,40 @@ mod tests {
             .collect();
         let phys = lower(&plan).unwrap();
         assert_eq!(phys.output_schema().field_names(), vec!["abstract", "words"]);
+    }
+
+    #[test]
+    fn lower_tracks_schema_through_estimators() {
+        let plan = LogicalPlan::scan(vec![], &["abstract"])
+            .transform(Tokenizer::new("abstract", "words"))
+            .transform(HashingTF::new("words", "tf", 16))
+            .fit(Idf::new("tf", "tfidf"))
+            .collect();
+        let phys = lower(&plan).unwrap();
+        assert!(phys.is_two_pass());
+        assert_eq!(
+            phys.output_schema().field_names(),
+            vec!["abstract", "words", "tf", "tfidf"]
+        );
+        assert_eq!(
+            phys.output_schema().dtype_of("tfidf"),
+            Some(crate::frame::DType::Vector)
+        );
+    }
+
+    #[test]
+    fn sample_keeps_is_deterministic_and_roughly_proportional() {
+        let kept: Vec<bool> = (0..1000).map(|i| sample_keeps(7, 3, i, 0.25)).collect();
+        let again: Vec<bool> = (0..1000).map(|i| sample_keeps(7, 3, i, 0.25)).collect();
+        assert_eq!(kept, again, "positional sampling must be deterministic");
+        let n = kept.iter().filter(|&&k| k).count();
+        assert!((150..350).contains(&n), "kept {n}/1000 at fraction 0.25");
+        // Extremes are exact.
+        assert!((0..100).all(|i| sample_keeps(1, 0, i, 1.0)));
+        assert!((0..100).all(|i| !sample_keeps(1, 0, i, 0.0)));
+        // Seed and shard matter.
+        let other: Vec<bool> = (0..1000).map(|i| sample_keeps(8, 3, i, 0.25)).collect();
+        assert_ne!(kept, other);
     }
 
     #[test]
@@ -654,6 +1249,8 @@ mod tests {
             out.rows_out,
             out.rows_ingested - out.nulls_dropped - out.dups_dropped - out.empties_dropped
         );
+        assert_eq!(out.sampled_out, 0);
+        assert_eq!(out.limited_out, 0);
         for key in [INGESTION, PRE_CLEANING, CLEANING, POST_CLEANING] {
             assert!(out.times.secs(key) >= 0.0);
         }
@@ -681,11 +1278,61 @@ mod tests {
         let plan = case_study_plan(&files, "title", "abstract").optimize();
         let r1 = plan.execute(1).unwrap();
         let r4 = plan.execute(4).unwrap();
-        // More workers than shard files exercises the re-chunking path.
+        // More workers than shards exercises the re-chunking path.
         let r16 = plan.execute(files.len() * 3).unwrap();
         assert_eq!(r1.frame, r4.frame);
         assert_eq!(r1.frame, r16.frame);
         assert_eq!(r1.rows_ingested, r16.rows_ingested);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sampled_plan_is_worker_count_invariant() {
+        let (dir, files) = corpus("sampleworkers");
+        let plan = LogicalPlan::scan(files.clone(), &["title", "abstract"])
+            .sample(0.5, 11)
+            .drop_nulls(&["title", "abstract"])
+            .collect();
+        let r1 = plan.execute(1).unwrap();
+        let r4 = plan.execute(4).unwrap();
+        let r16 = plan.execute(files.len() * 3).unwrap();
+        assert!(r1.sampled_out > 0, "a 50% sample must drop something");
+        assert_eq!(r1.frame, r4.frame);
+        assert_eq!(r1.frame, r16.frame);
+        assert_eq!(r1.sampled_out, r16.sampled_out);
+        assert_eq!(
+            r1.rows_out,
+            r1.rows_ingested - r1.nulls_dropped - r1.sampled_out
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn limited_plan_truncates_exactly_and_counts() {
+        let (dir, files) = corpus("limit");
+        let full = case_study_plan(&files, "title", "abstract").optimize().execute(2).unwrap();
+        let n = full.rows_out / 2;
+        let plan = crate::pipeline::presets::case_study_plan(&files, "title", "abstract");
+        // Insert the limit before Collect (the CLI's --limit shape).
+        let mut ops = plan.ops().to_vec();
+        let collect = ops.pop().unwrap();
+        ops.push(LogicalOp::Limit { n });
+        ops.push(collect);
+        let limited = LogicalPlan { ops }.optimize();
+        for workers in [1, 2, 8] {
+            let out = limited.execute(workers).unwrap();
+            assert_eq!(out.rows_out, n, "workers {workers}");
+            assert_eq!(out.limited_out, full.rows_out - n, "workers {workers}");
+            // The limited frame is the full frame's prefix.
+            for ci in 0..out.frame.num_columns() {
+                for ri in 0..n {
+                    assert_eq!(
+                        out.frame.column(ci).get_str(ri),
+                        full.frame.column(ci).get_str(ri)
+                    );
+                }
+            }
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -705,6 +1352,14 @@ mod tests {
         assert!(phys.needs_rechunk(8), "fewer files than workers");
         assert!(phys.needs_rechunk(4), "one shard holds >25% of the bytes");
         assert!(!phys.needs_rechunk(1), "single worker has nothing to balance");
+        // A sampled plan must never re-chunk (positional sampling needs
+        // shard identity).
+        let sampled = LogicalPlan::scan(files.clone(), &["title", "abstract"])
+            .sample(0.5, 1)
+            .collect()
+            .lower()
+            .unwrap();
+        assert!(!sampled.needs_rechunk(8));
         // Balanced files at matching worker count pass through.
         let balanced: Vec<PathBuf> = files[..3].to_vec();
         let phys = case_study_plan(&balanced, "title", "abstract").lower().unwrap();
@@ -718,8 +1373,96 @@ mod tests {
         let phys = plan.lower().unwrap();
         let r = phys.render(2);
         assert!(r.contains("SinglePass"), "{r}");
-        assert!(r.contains("hash-keys [title, abstract]"), "{r}");
+        assert!(r.contains("hash-keys #0 [title, abstract]"), "{r}");
         assert!(r.contains("FusedStringStage"), "{r}");
         assert!(r.contains("dedup merge"), "{r}");
+    }
+
+    #[test]
+    fn render_shows_sample_and_limit() {
+        let plan = LogicalPlan::scan(vec![], &["t"])
+            .sample(0.25, 42)
+            .limit(10)
+            .collect();
+        let phys = plan.lower().unwrap();
+        let r = phys.render(2);
+        assert!(r.contains("sample [fraction=0.25, seed=42] (positional)"), "{r}");
+        assert!(r.contains("limit-cap [10] (per-partition prefix)"), "{r}");
+        assert!(r.contains("limit(10)"), "{r}");
+        // With a dedup in the plan the per-partition cap must vanish
+        // (the merge could need rows past it) but the driver limit stays.
+        let plan = LogicalPlan::scan(vec![], &["t"]).distinct(&["t"]).limit(10).collect();
+        let r = plan.lower().unwrap().render(2);
+        assert!(!r.contains("limit-cap"), "{r}");
+        assert!(r.contains("limit(10)"), "{r}");
+    }
+
+    #[test]
+    fn render_two_pass_topology() {
+        let plan = LogicalPlan::scan(vec![], &["abstract"])
+            .drop_nulls(&["abstract"])
+            .transform(Tokenizer::new("abstract", "words"))
+            .transform(HashingTF::new("words", "tf", 64))
+            .fit(Idf::new("tf", "tfidf").with_min_doc_freq(2))
+            .collect();
+        let phys = plan.lower().unwrap();
+        let r = phys.render(4);
+        assert!(r.contains("TwoPass"), "{r}");
+        assert!(r.contains("Pass 1 — fit IDF(tf -> tfidf, min_df=2)"), "{r}");
+        assert!(r.contains("IDF.accumulate -> fit"), "{r}");
+        assert!(r.contains("Pass 2 — apply fitted model"), "{r}");
+        assert!(r.contains("fitted IDF(tf -> tfidf, min_df=2) (append)"), "{r}");
+        let rs = phys.render_stream(&StreamOptions { readers: 2, workers: 3, queue_cap: 8 });
+        assert!(rs.contains("TwoPass"), "{rs}");
+        // readers clamped to 1: zero files.
+        assert!(rs.contains("streaming, 1 readers + 3 workers"), "{rs}");
+    }
+
+    #[test]
+    fn two_pass_plan_executes_and_matches_staged_fit() {
+        use crate::frame::DType;
+        let (dir, files) = corpus("twopass");
+        let plan = LogicalPlan::scan(files.clone(), &["title", "abstract"])
+            .drop_nulls(&["title", "abstract"])
+            .distinct(&["title", "abstract"])
+            .transform(Tokenizer::new("abstract", "tokens"))
+            .transform(HashingTF::new("tokens", "tf", 64))
+            .fit(Idf::new("tf", "tfidf"))
+            .collect();
+        let out = plan.execute(2).unwrap();
+        assert!(out.rows_out > 0);
+        assert_eq!(out.frame.schema().dtype_of("tfidf"), Some(DType::Vector));
+        // Workers must not change the fit or the bytes.
+        let seq = plan.execute(1).unwrap();
+        assert_eq!(out.frame, seq.frame);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn admitter_registers_first_occurrences_that_filters_removed() {
+        use crate::frame::Column;
+        // Shard 1 row: key K, but the row itself was dropped by a later
+        // filter. Shard 2 row: same key K, survives its filters. The
+        // staged path would have dropped shard 2's row (dup of a row
+        // that existed at the distinct point), so the admitter must too.
+        let mut adm = Admitter::new(1, None);
+        let empty = Partition::new(vec![Column::from_strs(vec![])]);
+        let (p, dups, _) = adm.admit(
+            empty,
+            1,
+            &[KeySlot { keys: vec![42], ids: vec![0] }],
+            Some(&[]),
+        );
+        assert_eq!(p.num_rows(), 0);
+        assert_eq!(dups, 0);
+        let row = Partition::new(vec![Column::from_strs(vec![Some("x".into())])]);
+        let (p, dups, _) = adm.admit(
+            row,
+            1,
+            &[KeySlot { keys: vec![42], ids: vec![0] }],
+            Some(&[0]),
+        );
+        assert_eq!(p.num_rows(), 0, "duplicate of a filtered first occurrence must drop");
+        assert_eq!(dups, 1);
     }
 }

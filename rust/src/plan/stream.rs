@@ -122,14 +122,19 @@ impl StreamExecutor {
     /// row order, drop accounting) is identical to
     /// [`PhysicalPlan::execute`]; only the schedule differs.
     pub fn execute(&self, plan: &PhysicalPlan) -> Result<PlanOutput> {
+        // Estimator-bearing plans orchestrate their two passes in
+        // `PhysicalPlan::execute_stream` (fit pass over the prefix, then
+        // the fitted program back through here).
+        if plan.is_two_pass() {
+            return plan.execute_stream(&self.opts);
+        }
         let t_pass = Instant::now();
-        let files: Vec<PathBuf> = plan.files().to_vec();
-        let n = files.len();
+        let n = plan.files().len();
         if n == 0 {
-            return Ok(Merger::new(plan.output_schema().clone())
+            return Ok(Merger::new(plan.output_schema().clone(), plan.n_distinct(), plan.limit_n())
                 .finish_overlapped(t_pass.elapsed()));
         }
-        let (readers, workers, queue_cap) = self.opts.resolve(n);
+        let (readers, workers, _) = self.opts.resolve(n);
 
         // The shard file is this pipeline's unit of work, so with fewer
         // shards than cleaning workers most of the pool would sit idle.
@@ -139,6 +144,54 @@ impl StreamExecutor {
         if n < workers {
             return plan.execute(readers + workers);
         }
+
+        let mut merger =
+            Merger::new(plan.output_schema().clone(), plan.n_distinct(), plan.limit_n());
+        self.run_pipeline(plan, &mut |r| {
+            merger.push(r);
+            Ok(())
+        })?;
+        Ok(merger.finish_overlapped(t_pass.elapsed()))
+    }
+
+    /// Sink-based variant of [`Self::execute`]: run `plan`'s per-shard
+    /// programs through the reader/worker pipeline and hand each
+    /// [`PartResult`] to `sink` **in shard order**, without merging.
+    /// Used by the two-pass strategy's fit pass, which folds results
+    /// into the estimator's accumulator instead of a frame. Delegates
+    /// to the single-pass executor when shards are scarcer than the
+    /// worker pool (same delegation rule as `execute`).
+    pub(super) fn run(
+        &self,
+        plan: &PhysicalPlan,
+        sink: &mut dyn FnMut(PartResult) -> Result<()>,
+    ) -> Result<()> {
+        let n = plan.files().len();
+        if n == 0 {
+            return Ok(());
+        }
+        let (readers, workers, _) = self.opts.resolve(n);
+        if n < workers {
+            let (results, _) = plan.collect_results(readers + workers)?;
+            for r in results {
+                sink(r)?;
+            }
+            return Ok(());
+        }
+        self.run_pipeline(plan, sink)
+    }
+
+    /// The two-stage pipeline itself: a bounded reader pool parsing
+    /// shards, a worker pool running the op program, and the driver's
+    /// reorder buffer releasing contiguous shard prefixes to `sink`.
+    fn run_pipeline(
+        &self,
+        plan: &PhysicalPlan,
+        sink: &mut dyn FnMut(PartResult) -> Result<()>,
+    ) -> Result<()> {
+        let files: Vec<PathBuf> = plan.files().to_vec();
+        let n = files.len();
+        let (readers, workers, queue_cap) = self.opts.resolve(n);
 
         // Reader work queue, indexed so the driver can restore shard
         // order after out-of-order completion.
@@ -159,7 +212,7 @@ impl StreamExecutor {
         // into the reorder buffer, so this cap is not a memory bound.
         let (done_tx, done_rx) = sync_channel::<(usize, Result<PartResult>)>(queue_cap);
 
-        std::thread::scope(|scope| -> Result<PlanOutput> {
+        std::thread::scope(|scope| -> Result<()> {
             for _ in 0..readers {
                 let jobs = &jobs;
                 let abort = &abort;
@@ -189,11 +242,11 @@ impl StreamExecutor {
                     // After the driver bails, keep draining the parsed
                     // queue (without cleaning) so blocked readers can
                     // finish their in-flight send and exit.
-                    let mut sink = false;
+                    let mut drain = false;
                     loop {
                         let msg = parsed_rx.lock().unwrap().recv();
                         let Ok((idx, parsed)) = msg else { break };
-                        if sink {
+                        if drain {
                             continue;
                         }
                         // Contain panics from transformer bugs: a worker
@@ -201,13 +254,13 @@ impl StreamExecutor {
                         // readers blocked mid-send and the scope join
                         // hung. Convert to an error the driver reports.
                         let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                            || parsed.map(|(part, span)| plan.run_ops(part, span)),
+                            || parsed.map(|(part, span)| plan.run_ops(part, idx, span)),
                         ))
                         .unwrap_or_else(|_| {
                             Err(anyhow::anyhow!("worker panicked while cleaning shard {idx}"))
                         });
                         if done_tx.send((idx, out)).is_err() {
-                            sink = true;
+                            drain = true;
                             abort.store(true, Ordering::Relaxed);
                         }
                     }
@@ -215,11 +268,10 @@ impl StreamExecutor {
             }
             drop(done_tx); // driver sees EOF once all workers finish
 
-            // Driver: re-sequence out-of-order completions, feed the
-            // ordered dedup merge with contiguous prefixes only. Runs
-            // concurrently with both pools — the merge of shard i
-            // overlaps the cleaning of i+1 and the parsing of i+2.
-            let mut merger = Merger::new(plan.output_schema().clone());
+            // Driver: re-sequence out-of-order completions, release
+            // contiguous prefixes only. Runs concurrently with both
+            // pools — the sink's work on shard i overlaps the cleaning
+            // of i+1 and the parsing of i+2.
             let mut pending: Vec<Option<PartResult>> = (0..n).map(|_| None).collect();
             let mut next = 0usize;
             for (idx, res) in done_rx {
@@ -227,7 +279,7 @@ impl StreamExecutor {
                 while next < n {
                     match pending[next].take() {
                         Some(r) => {
-                            merger.push(r);
+                            sink(r)?;
                             next += 1;
                         }
                         None => break,
@@ -235,7 +287,7 @@ impl StreamExecutor {
                 }
             }
             anyhow::ensure!(next == n, "streaming execution incomplete: {next}/{n} shards");
-            Ok(merger.finish_overlapped(t_pass.elapsed()))
+            Ok(())
         })
     }
 }
@@ -366,6 +418,33 @@ mod tests {
     }
 
     #[test]
+    fn streaming_two_pass_matches_fused_two_pass() {
+        use crate::pipeline::features::{HashingTF, Idf};
+        use crate::pipeline::stages::Tokenizer;
+        use crate::plan::LogicalPlan;
+        let (dir, files) = corpus("twopass", 31);
+        let plan = LogicalPlan::scan(files, &["title", "abstract"])
+            .drop_nulls(&["title", "abstract"])
+            .distinct(&["title", "abstract"])
+            .transform(Tokenizer::new("abstract", "tokens"))
+            .transform(HashingTF::new("tokens", "tf", 32))
+            .fit(Idf::new("tf", "tfidf"))
+            .collect();
+        let fused = plan.execute(2).unwrap();
+        assert!(fused.rows_out > 0);
+        for opts in [
+            StreamOptions { readers: 2, workers: 2, queue_cap: 1 },
+            // Scarce-shard delegation inside both passes.
+            StreamOptions { readers: 1, workers: 32, queue_cap: 4 },
+        ] {
+            let streamed = plan.execute_stream(&opts).unwrap();
+            assert_eq!(streamed.frame, fused.frame, "{opts:?}");
+            assert_eq!(streamed.rows_out, fused.rows_out, "{opts:?}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn bad_shard_reports_error_and_terminates() {
         let dir =
             std::env::temp_dir().join(format!("p3sapp-stream-bad-{}", std::process::id()));
@@ -409,7 +488,7 @@ mod tests {
         assert!(r.contains("readers: 2 x parse+project [title, abstract]"), "{r}");
         assert!(r.contains("bounded(8 partitions"), "{r}");
         assert!(r.contains("workers: 3 x op-program"), "{r}");
-        assert!(r.contains("hash-keys [title, abstract] (128-bit)"), "{r}");
+        assert!(r.contains("hash-keys #0 [title, abstract] (128-bit)"), "{r}");
         assert!(r.contains("reorder buffer"), "{r}");
         std::fs::remove_dir_all(&dir).unwrap();
     }

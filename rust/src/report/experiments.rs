@@ -36,6 +36,13 @@ pub struct SuiteOptions {
     /// re-executing, and the EXPLAIN output renders the cache-hit path.
     /// The CA control never uses the cache.
     pub cache: Option<std::sync::Arc<crate::cache::CacheManager>>,
+    /// Deterministic input sample `(fraction, seed)` for the P3SAPP
+    /// runs (`--sample`): skipped records are never cleaned, so a
+    /// sampled suite repeats the accuracy tables at a fraction of the
+    /// cost. The CA control never samples — combine with `skip_ca`.
+    pub sample: Option<(f64, u64)>,
+    /// Clean-row cap for the P3SAPP runs (`--limit`).
+    pub limit: Option<usize>,
 }
 
 impl SuiteOptions {
@@ -50,6 +57,8 @@ impl SuiteOptions {
             explain: false,
             stream: None,
             cache: None,
+            sample: None,
+            limit: None,
         }
     }
 }
@@ -101,19 +110,17 @@ pub fn run_tier(opts: &SuiteOptions, tier: usize) -> Result<TierResult> {
         workers: opts.workers,
         stream: opts.stream.clone(),
         cache: opts.cache.clone(),
+        sample: opts.sample,
+        limit: opts.limit,
         ..Default::default()
     };
     if opts.explain {
         // Print exactly the plan run_p3sapp is about to execute, built
-        // from the same files, column config, executor choice and cache
-        // state (a warm cache renders the restore path).
-        let plan = crate::pipeline::presets::case_study_plan(
-            &files,
-            &driver_opts.title_col,
-            &driver_opts.abstract_col,
-        );
+        // from the same files, column config, plan variant (sample/
+        // limit), executor choice and cache state (a warm cache renders
+        // the restore path).
         let text = crate::cache::explain_with_cache(
-            &plan,
+            &driver_opts.build_plan(&files),
             driver_opts.workers,
             driver_opts.stream.as_ref(),
             driver_opts.cache.as_deref(),
@@ -216,6 +223,28 @@ mod tests {
         // Second run reuses the corpus (manifest match).
         let again = run_tier(&opts, 1).unwrap();
         assert_eq!(again.size_bytes, t.size_bytes);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
+    fn sampled_suite_runs_cheaper_and_deterministically() {
+        let base = std::env::temp_dir()
+            .join(format!("p3sapp-suite-sample-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let mut opts = SuiteOptions::new(&base);
+        opts.scale = 0.1;
+        opts.workers = 2;
+        opts.tiers = vec![1];
+        opts.skip_ca = true; // the control has no sample path
+        let full = run_suite(&opts).unwrap();
+        opts.sample = Some((0.5, 7));
+        let sampled = run_suite(&opts).unwrap();
+        let again = run_suite(&opts).unwrap();
+        assert!(
+            sampled.tiers[0].p3sapp.rows_out < full.tiers[0].p3sapp.rows_out,
+            "a 50% sample must shrink the clean row count"
+        );
+        assert_eq!(sampled.tiers[0].p3sapp.frame, again.tiers[0].p3sapp.frame);
         std::fs::remove_dir_all(&base).unwrap();
     }
 

@@ -2,14 +2,26 @@
 //! stage-by-stage reference path (ingest → drop_nulls → distinct →
 //! PipelineModel::transform → collect → empty sweep) on seeded corpora —
 //! same schema, same rows in the same order, same drop accounting.
+//!
+//! The same contract extends to every plan-layer feature: positional
+//! `Sample`, `Limit`, multiple `Distinct` ops, and the two-pass `IDF`
+//! lowering, each checked staged-vs-fused-vs-streaming (including
+//! `queue_cap = 1` and fewer-shards-than-workers) and — for the
+//! estimator pipeline — against a cache round trip.
 
+use p3sapp::cache::CacheManager;
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
-use p3sapp::frame::{distinct, drop_nulls, LocalFrame};
+use p3sapp::driver::{run_p3sapp, DriverOptions};
+use p3sapp::frame::{distinct, drop_nulls, Frame, LocalFrame};
 use p3sapp::ingest::list_shards;
 use p3sapp::ingest::spark::{ingest_files, IngestOptions};
-use p3sapp::pipeline::presets::{case_study_pipeline, case_study_plan};
-use p3sapp::plan::StreamOptions;
+use p3sapp::pipeline::presets::{
+    abstract_stages, case_study_features_pipeline, case_study_pipeline, case_study_plan,
+    case_study_plan_with, CaseStudyOptions,
+};
+use p3sapp::plan::{sample_keeps, LogicalPlan, StreamOptions};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 const COLS: [&str; 2] = ["title", "abstract"];
 
@@ -143,6 +155,270 @@ fn fused_plan_equivalence_survives_worker_skew() {
         assert_eq!(out.frame, reference.frame, "workers {workers}");
     }
     std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Finish a staged run: collect, empty-sweep the string columns, drop
+/// the swept rows (the DropEmpty analog shared by every reference here).
+fn collect_and_sweep(frame: Frame) -> LocalFrame {
+    let mut local = frame.collect();
+    for ci in 0..local.num_columns() {
+        local.column_mut(ci).nullify_empty_strs();
+    }
+    local.drop_nulls(&COLS).unwrap();
+    local
+}
+
+#[test]
+fn sampled_plan_matches_the_positionally_sampled_staged_reference() {
+    let (fraction, seed) = (0.5, 42u64);
+    for corpus_seed in [2, 77] {
+        let mut spec = CorpusSpec::tiny(corpus_seed);
+        spec.dup_rate = 0.15;
+        spec.null_title_rate = 0.1;
+        let (dir, files) = corpus(&format!("sample{corpus_seed}"), &spec);
+
+        // Staged reference: ingest (one partition per shard, in shard
+        // order), apply the same positional mask the plan's Sample op
+        // uses, then the usual staged path.
+        let mut frame =
+            ingest_files(&files, &COLS, &IngestOptions::with_workers(3)).unwrap();
+        assert_eq!(frame.num_partitions(), files.len(), "one partition per shard");
+        let mut sampled_out = 0usize;
+        for (shard, part) in frame.partitions_mut().iter_mut().enumerate() {
+            let mask: Vec<bool> = (0..part.num_rows())
+                .map(|i| sample_keeps(seed, shard, i, fraction))
+                .collect();
+            sampled_out += mask.iter().filter(|&&k| !k).count();
+            *part = part.filter_by_mask(&mask);
+        }
+        let (frame, nulls_dropped) = drop_nulls(frame, &COLS).unwrap();
+        let (frame, _) = distinct(frame, &COLS).unwrap();
+        let model = case_study_pipeline("title", "abstract").fit(&frame).unwrap();
+        let reference = collect_and_sweep(model.transform(frame, 3).unwrap());
+        assert!(sampled_out > 0, "a 50% sample must skip rows");
+
+        let opts = CaseStudyOptions { sample: Some((fraction, seed)), ..Default::default() };
+        let plan = case_study_plan_with(&files, "title", "abstract", &opts).optimize();
+        let fused = plan.execute(3).unwrap();
+        assert_eq!(fused.frame, reference, "seed {corpus_seed}: fused vs staged");
+        assert_eq!(fused.sampled_out, sampled_out, "seed {corpus_seed}: sample count");
+        assert_eq!(fused.nulls_dropped, nulls_dropped, "seed {corpus_seed}: null drops");
+        for stream in [
+            StreamOptions { readers: 2, workers: 3, queue_cap: 1 },
+            // More workers than shards: the scarce-shard delegation
+            // must keep positional sampling intact too.
+            StreamOptions { readers: 2, workers: 64, queue_cap: 4 },
+        ] {
+            let streamed = plan.execute_stream(&stream).unwrap();
+            assert_eq!(streamed.frame, reference, "seed {corpus_seed} {stream:?}");
+            assert_eq!(streamed.sampled_out, sampled_out, "seed {corpus_seed} {stream:?}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn limited_plan_is_the_staged_reference_prefix_everywhere() {
+    let mut spec = CorpusSpec::tiny(41);
+    spec.dup_rate = 0.15;
+    let (dir, files) = corpus("limit", &spec);
+    let reference = staged_reference(&files, 3);
+    let n = reference.frame.num_rows() / 2;
+    assert!(n > 0, "corpus too small to exercise Limit");
+
+    let opts = CaseStudyOptions { limit: Some(n), ..Default::default() };
+    let plan = case_study_plan_with(&files, "title", "abstract", &opts).optimize();
+    let mut outputs = vec![plan.execute(1).unwrap(), plan.execute(3).unwrap()];
+    for stream in [
+        StreamOptions { readers: 2, workers: 3, queue_cap: 1 },
+        StreamOptions { readers: 2, workers: 64, queue_cap: 4 },
+    ] {
+        outputs.push(plan.execute_stream(&stream).unwrap());
+    }
+    for out in &outputs {
+        assert_eq!(out.rows_out, n);
+        assert_eq!(out.limited_out, reference.frame.num_rows() - n);
+        assert_eq!(out.frame, outputs[0].frame, "executors disagree under Limit");
+        for ci in 0..out.frame.num_columns() {
+            for ri in 0..n {
+                assert_eq!(
+                    out.frame.column(ci).get_str(ri),
+                    reference.frame.column(ci).get_str(ri),
+                    "row {ri} col {ci} is not the staged prefix"
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn multi_distinct_plan_matches_the_double_distinct_staged_reference() {
+    for seed in [2, 123] {
+        let mut spec = CorpusSpec::tiny(seed);
+        spec.dup_rate = 0.2;
+        spec.null_title_rate = 0.1;
+        let (dir, files) = corpus(&format!("multidistinct{seed}"), &spec);
+
+        // Staged: drop nulls, distinct on title, then distinct on
+        // abstract, then the cleaning pipeline and the empty sweep.
+        let frame = ingest_files(&files, &COLS, &IngestOptions::with_workers(3)).unwrap();
+        let (frame, _) = drop_nulls(frame, &COLS).unwrap();
+        let (frame, dups_title) = distinct(frame, &["title"]).unwrap();
+        let (frame, dups_abstract) = distinct(frame, &["abstract"]).unwrap();
+        let rows_after_dedup = frame.num_rows();
+        let model = case_study_pipeline("title", "abstract").fit(&frame).unwrap();
+        let reference = collect_and_sweep(model.transform(frame, 3).unwrap());
+        let staged_empties = rows_after_dedup - reference.num_rows();
+
+        let plan = LogicalPlan::scan(files.clone(), &COLS)
+            .drop_nulls(&COLS)
+            .distinct(&["title"])
+            .distinct(&["abstract"])
+            .transforms(p3sapp::pipeline::presets::case_study_stages("title", "abstract"))
+            .drop_empty(&COLS)
+            .collect();
+        for optimized in [plan.clone(), plan.clone().optimize()] {
+            let fused = optimized.execute(3).unwrap();
+            assert_eq!(fused.frame, reference, "seed {seed}: fused vs staged");
+            // A duplicate that itself cleans to empty is attributed to
+            // the dup counter by the staged path (dedup runs first) but
+            // to the empty counter by the fused pass (the worker-side
+            // sweep removes it before the merge), so only the sum is
+            // attribution-independent — same contract as the
+            // single-distinct property test above.
+            assert_eq!(
+                fused.dups_dropped + fused.empties_dropped,
+                dups_title + dups_abstract + staged_empties,
+                "seed {seed}: dup+empty accounting"
+            );
+            let seq = optimized.execute(1).unwrap();
+            assert_eq!(seq.frame, fused.frame, "seed {seed}: seq vs par");
+            for stream in [
+                StreamOptions { readers: 2, workers: 3, queue_cap: 1 },
+                StreamOptions { readers: 2, workers: 64, queue_cap: 4 },
+            ] {
+                let streamed = optimized.execute_stream(&stream).unwrap();
+                assert_eq!(streamed.frame, reference, "seed {seed} {stream:?}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn distinct_registers_first_occurrences_that_later_filters_remove() {
+    // Shard a's row claims title "dup title" but its abstract sweeps to
+    // empty; shard b's row shares the title with a different abstract.
+    // The staged order (dedup globally, then clean, then sweep) drops
+    // BOTH: b as a duplicate, a as empty. The fused merge must reproduce
+    // that even though a's row is filtered inside its worker before the
+    // driver ever sees it — its dedup key still has to register.
+    let dir = std::env::temp_dir()
+        .join(format!("p3sapp-planeq-dupreg-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("a.json"),
+        "{\"title\": \"dup title\", \"abstract\": \"\"}\n",
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("b.json"),
+        "{\"title\": \"dup title\", \"abstract\": \"perfectly good words\"}\n\
+         {\"title\": \"other title\", \"abstract\": \"more good words\"}\n",
+    )
+    .unwrap();
+    let files = list_shards(&dir).unwrap();
+
+    // Staged reference.
+    let frame = ingest_files(&files, &COLS, &IngestOptions::with_workers(2)).unwrap();
+    let (frame, dups) = distinct(frame, &["title"]).unwrap();
+    assert_eq!(dups, 1, "staged path drops b's first row as a title dup");
+    let reference = collect_and_sweep(frame);
+    assert_eq!(reference.num_rows(), 1, "only 'other title' survives");
+
+    let plan = LogicalPlan::scan(files, &COLS)
+        .distinct(&["title"])
+        .transforms(abstract_stages("abstract"))
+        .drop_empty(&["abstract"])
+        .collect();
+    for optimized in [plan.clone(), plan.clone().optimize()] {
+        let fused = optimized.execute(2).unwrap();
+        assert_eq!(fused.rows_out, 1, "a filtered first occurrence must still claim its key");
+        assert_eq!(fused.frame.column(0).get_str(0), Some("other title"));
+        let streamed = optimized
+            .execute_stream(&StreamOptions { readers: 1, workers: 2, queue_cap: 1 })
+            .unwrap();
+        assert_eq!(streamed.frame, fused.frame);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn lowered_idf_matches_pipeline_fit_transform_across_all_executors() {
+    for seed in [2, 77] {
+        let mut spec = CorpusSpec::tiny(seed);
+        spec.dup_rate = 0.15;
+        spec.null_title_rate = 0.1;
+        spec.null_abstract_rate = 0.1;
+        let (dir, files) = corpus(&format!("idf{seed}"), &spec);
+
+        // Staged reference: the full Table-2 pipeline (cleaning +
+        // Tokenizer → HashingTF → IDF) through Pipeline::fit +
+        // transform, then the empty sweep — exactly what the two-pass
+        // lowering must reproduce byte for byte.
+        let frame = ingest_files(&files, &COLS, &IngestOptions::with_workers(3)).unwrap();
+        let (frame, _) = drop_nulls(frame, &COLS).unwrap();
+        let (frame, _) = distinct(frame, &COLS).unwrap();
+        let model = case_study_features_pipeline("title", "abstract").fit(&frame).unwrap();
+        let reference = collect_and_sweep(model.transform(frame, 3).unwrap());
+        assert!(reference.num_rows() > 0);
+
+        let opts = DriverOptions { workers: 3, features: true, ..Default::default() };
+        let plan = opts.build_plan(&files).optimize();
+
+        // Fused two-pass, sequential and parallel.
+        let fused = plan.execute(3).unwrap();
+        assert_eq!(fused.frame, reference, "seed {seed}: fused two-pass vs Pipeline::fit");
+        assert_eq!(plan.execute(1).unwrap().frame, reference, "seed {seed}: sequential");
+        assert_eq!(
+            fused.rows_out,
+            fused.rows_ingested
+                - fused.nulls_dropped
+                - fused.dups_dropped
+                - fused.empties_dropped,
+            "seed {seed}: accounting"
+        );
+
+        // Streaming two-pass, including a fully serialized queue and
+        // the fewer-shards-than-workers delegation.
+        for stream in [
+            StreamOptions { readers: 2, workers: 3, queue_cap: 1 },
+            StreamOptions { readers: 2, workers: 64, queue_cap: 4 },
+        ] {
+            let streamed = plan.execute_stream(&stream).unwrap();
+            assert_eq!(streamed.frame, reference, "seed {seed} {stream:?}: streaming");
+        }
+
+        // Cached: cold run stores (vectors and all), warm run restores
+        // the identical frame.
+        let cache = Arc::new(CacheManager::open(dir.join("plan-cache")).unwrap());
+        let cached_opts = DriverOptions {
+            workers: 3,
+            features: true,
+            cache: Some(Arc::clone(&cache)),
+            ..Default::default()
+        };
+        let cold = run_p3sapp(&files, &cached_opts).unwrap();
+        assert!(!cold.from_cache());
+        assert_eq!(cold.frame, reference, "seed {seed}: cached cold");
+        let warm = run_p3sapp(&files, &cached_opts).unwrap();
+        assert!(warm.from_cache());
+        assert_eq!(warm.frame, reference, "seed {seed}: cached warm restore");
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
 }
 
 #[test]
