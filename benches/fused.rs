@@ -26,20 +26,31 @@
 //!                     transform;
 //!   8. twopass      — the same job lowered into the plan: fit pass
 //!                     (df accumulation, no materialization) + fused
-//!                     pass 2; also measured on the streaming executor.
+//!                     pass 2; also measured on the streaming executor;
+//!
+//! plus the multi-process pair (the Spark-executor analogy): the same
+//! optimized program shipped to worker OS processes over the P3PJ wire
+//! format, for the cleaning plan and for the two-pass estimator plan
+//! (fit partials are folded driver-side when the prefix is dedup-free).
+//! On smoke-scale corpora these arms mostly price the spawn +
+//! serialization overhead — the record's conservative ratios reflect
+//! that.
 //!
 //! Results are also recorded as machine-readable JSON (defaults under
 //! `target/` so bench runs never dirty the checked-in schema records
-//! `BENCH_streaming.json` / `BENCH_cache.json` / `BENCH_twopass.json`
-//! at the repo root; override with `BENCH_STREAMING_JSON=path` /
-//! `BENCH_CACHE_JSON=path` / `BENCH_TWOPASS_JSON=path`, disable with
-//! `=-`). CI's bench-smoke job regenerates all three and runs the
+//! `BENCH_streaming.json` / `BENCH_cache.json` / `BENCH_twopass.json` /
+//! `BENCH_process.json` at the repo root; override with
+//! `BENCH_STREAMING_JSON=path` / `BENCH_CACHE_JSON=path` /
+//! `BENCH_TWOPASS_JSON=path` / `BENCH_PROCESS_JSON=path`, disable with
+//! `=-`). CI's bench-smoke job regenerates all four and runs the
 //! `benchgate` comparator against the repo-root records.
 //!
 //!     cargo bench --bench fused
 //!     BENCH_SCALE=4 BENCH_WORKERS=8 cargo bench --bench fused
 
-use p3sapp::benchkit::{bench, black_box, env_f64, env_usize, Measurement};
+use p3sapp::benchkit::{
+    bench, bench_record_json, black_box, env_f64, env_usize, write_bench_record, Measurement,
+};
 use p3sapp::cache::{fingerprint, CacheConfig, CacheManager};
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
 use p3sapp::engine::rebalance;
@@ -49,7 +60,7 @@ use p3sapp::ingest::spark::{ingest_files, IngestOptions};
 use p3sapp::pipeline::presets::{
     case_study_features_pipeline, case_study_features_plan, case_study_pipeline, case_study_plan,
 };
-use p3sapp::plan::StreamOptions;
+use p3sapp::plan::{ProcessOptions, StreamOptions};
 use std::path::PathBuf;
 
 const COLS: [&str; 2] = ["title", "abstract"];
@@ -198,6 +209,27 @@ fn main() {
         m_staged_tfidf.mean_secs() / m_twopass.mean_secs()
     );
 
+    // Multi-process arms: the same optimized programs shipped to worker
+    // OS processes (self-exec `plan-worker`). The bench harness binary
+    // has no worker mode, so point the executor at the built `repro`
+    // binary (cargo sets CARGO_BIN_EXE_* for benchmarks).
+    let proc_opts = ProcessOptions {
+        processes: workers.min(files.len()),
+        worker_cmd: Some(PathBuf::from(env!("CARGO_BIN_EXE_repro"))),
+    };
+    let m_process = bench("plan process (multi-process workers)", 1, 5, || {
+        black_box(&fused_plan).execute_process(&proc_opts).unwrap().rows_out
+    });
+    println!("\n  {}", m_process.report());
+    let m_process_twopass = bench("plan twopass process (fit + fused pass)", 1, 5, || {
+        black_box(&features_plan).execute_process(&proc_opts).unwrap().rows_out
+    });
+    println!("  {}", m_process_twopass.report());
+    println!(
+        "\n  process vs in-process (process/plan+fuse):      {:.2}x",
+        m_process.mean_secs() / m_fused.mean_secs()
+    );
+
     let arms: [(&str, &Measurement); 4] = [
         ("staged", &m_staged),
         ("plan", &m_plan),
@@ -206,120 +238,74 @@ fn main() {
     ];
     // Record the resolved topology (readers: 0 is just the auto sentinel).
     let (s_readers, s_workers, s_cap) = stream_opts.resolve(files.len());
-    let resolved = StreamOptions { readers: s_readers, workers: s_workers, queue_cap: s_cap };
-    write_json(&manifest, workers, &resolved, &arms);
-    write_cache_json(&manifest, workers, &[("cache_cold", &m_cold), ("cache_warm", &m_warm)]);
-    write_twopass_json(
-        &manifest,
-        workers,
-        &[
-            ("staged_tfidf", &m_staged_tfidf),
-            ("twopass", &m_twopass),
-            ("twopass_stream", &m_twopass_stream),
-        ],
+    println!();
+    let corpus_extra = |extra: &mut Vec<(&'static str, String)>| {
+        extra.push(("records", manifest.n_records.to_string()));
+        extra.push(("files", manifest.n_files.to_string()));
+        extra.push(("bytes", manifest.total_bytes.to_string()));
+        extra.push(("workers", workers.to_string()));
+    };
+
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    corpus_extra(&mut extra);
+    extra.push((
+        "stream",
+        format!(
+            "{{\"readers\": {s_readers}, \"workers\": {s_workers}, \"queue_cap\": {s_cap}}}"
+        ),
+    ));
+    write_bench_record(
+        "BENCH_STREAMING_JSON",
+        "target/BENCH_streaming.json",
+        &bench_record_json("fused", &extra, &arms),
+    );
+
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    corpus_extra(&mut extra);
+    let restore_speedup = if m_warm.mean_secs() > 0.0 {
+        m_cold.mean_secs() / m_warm.mean_secs()
+    } else {
+        0.0
+    };
+    extra.push(("restore_speedup", format!("{restore_speedup:.3}")));
+    write_bench_record(
+        "BENCH_CACHE_JSON",
+        "target/BENCH_cache.json",
+        &bench_record_json("cache", &extra, &[("cache_cold", &m_cold), ("cache_warm", &m_warm)]),
+    );
+
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    corpus_extra(&mut extra);
+    write_bench_record(
+        "BENCH_TWOPASS_JSON",
+        "target/BENCH_twopass.json",
+        &bench_record_json(
+            "twopass",
+            &extra,
+            &[
+                ("staged_tfidf", &m_staged_tfidf),
+                ("twopass", &m_twopass),
+                ("twopass_stream", &m_twopass_stream),
+            ],
+        ),
+    );
+
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    corpus_extra(&mut extra);
+    extra.push(("processes", proc_opts.processes.to_string()));
+    write_bench_record(
+        "BENCH_PROCESS_JSON",
+        "target/BENCH_process.json",
+        &bench_record_json(
+            "process",
+            &extra,
+            &[
+                ("plan_fused", &m_fused),
+                ("process", &m_process),
+                ("process_twopass", &m_process_twopass),
+            ],
+        ),
     );
 
     std::fs::remove_dir_all(&dir).unwrap();
-}
-
-/// One JSON object per arm — shared by both BENCH_*.json writers so the
-/// per-arm schema cannot silently diverge between the two files.
-fn arms_json(arms: &[(&str, &Measurement)]) -> String {
-    let mut out = String::new();
-    for (i, (name, m)) in arms.iter().enumerate() {
-        if i > 0 {
-            out.push_str(",\n");
-        }
-        out.push_str(&format!(
-            "    {{\"name\": \"{name}\", \"mean_secs\": {:.6}, \"median_secs\": {:.6}, \"stddev_secs\": {:.6}, \"iters\": {}}}",
-            m.mean.as_secs_f64(),
-            m.median.as_secs_f64(),
-            m.stddev.as_secs_f64(),
-            m.iters
-        ));
-    }
-    out
-}
-
-/// Record the run as JSON so CI (and BENCH_streaming.json in the repo)
-/// can track the streaming arm against the single-pass arms.
-fn write_json(
-    manifest: &p3sapp::corpus::CorpusManifest,
-    workers: usize,
-    stream_opts: &StreamOptions,
-    arms: &[(&str, &Measurement)],
-) {
-    let path = std::env::var("BENCH_STREAMING_JSON")
-        .unwrap_or_else(|_| "target/BENCH_streaming.json".into());
-    if path == "-" {
-        return;
-    }
-    let arms_json = arms_json(arms);
-    let json = format!(
-        "{{\n  \"bench\": \"fused\",\n  \"records\": {},\n  \"files\": {},\n  \"bytes\": {},\n  \"workers\": {workers},\n  \"stream\": {{\"readers\": {}, \"workers\": {}, \"queue_cap\": {}}},\n  \"arms\": [\n{arms_json}\n  ]\n}}\n",
-        manifest.n_records,
-        manifest.n_files,
-        manifest.total_bytes,
-        stream_opts.readers,
-        stream_opts.workers,
-        stream_opts.queue_cap
-    );
-    match std::fs::write(&path, json) {
-        Ok(()) => println!("\n  wrote {path}"),
-        Err(e) => eprintln!("\n  could not write {path}: {e}"),
-    }
-}
-
-/// Record the staged-vs-two-pass estimator timings (schema documented
-/// by the repo-root `BENCH_twopass.json`; CI smoke-runs the file and
-/// gates it with `benchgate`).
-fn write_twopass_json(
-    manifest: &p3sapp::corpus::CorpusManifest,
-    workers: usize,
-    arms: &[(&str, &Measurement)],
-) {
-    let path = std::env::var("BENCH_TWOPASS_JSON")
-        .unwrap_or_else(|_| "target/BENCH_twopass.json".into());
-    if path == "-" {
-        return;
-    }
-    let arms_json = arms_json(arms);
-    let json = format!(
-        "{{\n  \"bench\": \"twopass\",\n  \"records\": {},\n  \"files\": {},\n  \"bytes\": {},\n  \"workers\": {workers},\n  \"arms\": [\n{arms_json}\n  ]\n}}\n",
-        manifest.n_records, manifest.n_files, manifest.total_bytes
-    );
-    match std::fs::write(&path, json) {
-        Ok(()) => println!("  wrote {path}"),
-        Err(e) => eprintln!("  could not write {path}: {e}"),
-    }
-}
-
-/// Record the cold-vs-warm plan-cache timings (schema documented by the
-/// repo-root `BENCH_cache.json`; CI smoke-runs and uploads the measured
-/// file).
-fn write_cache_json(
-    manifest: &p3sapp::corpus::CorpusManifest,
-    workers: usize,
-    arms: &[(&str, &Measurement)],
-) {
-    let path =
-        std::env::var("BENCH_CACHE_JSON").unwrap_or_else(|_| "target/BENCH_cache.json".into());
-    if path == "-" {
-        return;
-    }
-    let arms_json = arms_json(arms);
-    let speedup = match (arms.first(), arms.last()) {
-        (Some((_, cold)), Some((_, warm))) if warm.mean.as_secs_f64() > 0.0 => {
-            cold.mean_secs() / warm.mean_secs()
-        }
-        _ => 0.0,
-    };
-    let json = format!(
-        "{{\n  \"bench\": \"cache\",\n  \"records\": {},\n  \"files\": {},\n  \"bytes\": {},\n  \"workers\": {workers},\n  \"restore_speedup\": {speedup:.3},\n  \"arms\": [\n{arms_json}\n  ]\n}}\n",
-        manifest.n_records, manifest.n_files, manifest.total_bytes
-    );
-    match std::fs::write(&path, json) {
-        Ok(()) => println!("  wrote {path}"),
-        Err(e) => eprintln!("  could not write {path}: {e}"),
-    }
 }

@@ -3,9 +3,17 @@
 //! both ingestion modes identical pre-parsed partitions, then shows the
 //! full file-to-frame paths.
 //!
+//! The file-to-frame arms are recorded in the shared `BENCH_*.json`
+//! schema (default `target/BENCH_ingest.json`, override
+//! `BENCH_INGEST_JSON=path`, disable `=-`); CI's bench-smoke job gates
+//! them with `benchgate` against the repo-root `BENCH_ingest.json` as
+//! ratios to the sequential-append reference. The isolated frame-growth
+//! arms stay out of the gated record — their absolute times are tiny
+//! and machine-noise-dominated.
+//!
 //!     cargo bench --bench ingest_modes
 
-use p3sapp::benchkit::{bench, black_box, env_usize};
+use p3sapp::benchkit::{bench, bench_record_json, black_box, env_usize, write_bench_record};
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
 use p3sapp::frame::{Column, Frame, LocalFrame, Partition, Schema};
 use p3sapp::ingest::append::ingest_files_append;
@@ -65,6 +73,7 @@ fn main() {
         ingest_files_append(black_box(&files), &["title", "abstract"]).unwrap().num_rows()
     });
     println!("  {}", m_ca.report());
+    let mut parallel = Vec::new();
     for workers in [1usize, 2, 4] {
         let opts = IngestOptions { workers, queue_cap: 16 };
         let m = bench(&format!("P3SAPP parallel x{workers}"), 1, 3, || {
@@ -73,5 +82,19 @@ fn main() {
                 .num_rows()
         });
         println!("  {}  vs CA: {:.1}x", m.report(), m_ca.mean_secs() / m.mean_secs());
+        parallel.push((workers, m));
     }
+
+    println!();
+    let arm_names: Vec<String> =
+        parallel.iter().map(|(w, _)| format!("parallel_x{w}")).collect();
+    let mut arms: Vec<(&str, &p3sapp::benchkit::Measurement)> = vec![("append_files", &m_ca)];
+    for (name, (_, m)) in arm_names.iter().zip(&parallel) {
+        arms.push((name.as_str(), m));
+    }
+    write_bench_record(
+        "BENCH_INGEST_JSON",
+        "target/BENCH_ingest.json",
+        &bench_record_json("ingest", &[("files", files.len().to_string())], &arms),
+    );
 }

@@ -4,10 +4,17 @@
 //! column-sweep (P3SAPP) vs row-loop (CA) cleaning comparison at equal
 //! thread count (isolates the *pipeline* win from the *parallelism* win).
 //!
+//! The three architecture arms (row loop, column sweep, fused sweep) are
+//! recorded in the shared `BENCH_*.json` schema (default
+//! `target/BENCH_stages.json`, override `BENCH_STAGES_JSON=path`,
+//! disable `=-`); CI's bench-smoke job gates them with `benchgate`
+//! against the repo-root `BENCH_stages.json` as ratios to the row loop.
+//! The noisier per-stage micro arms stay out of the gated record.
+//!
 //!     cargo bench --bench stages
 
 use p3sapp::baseline::{clean_abstract_row, clean_title_row};
-use p3sapp::benchkit::{bench, black_box, env_usize};
+use p3sapp::benchkit::{bench, bench_record_json, black_box, env_usize, write_bench_record};
 use p3sapp::corpus::{record, Rng};
 use p3sapp::frame::Column;
 use p3sapp::pipeline::stages::*;
@@ -100,5 +107,16 @@ fn main() {
         "  fused/column speedup: {:.2}x  (fused/row: {:.2}x)",
         m_cols.mean_secs() / m_fused.mean_secs(),
         m_rows.mean_secs() / m_fused.mean_secs()
+    );
+
+    println!();
+    write_bench_record(
+        "BENCH_STAGES_JSON",
+        "target/BENCH_stages.json",
+        &bench_record_json(
+            "stages",
+            &[("rows", rows.to_string())],
+            &[("row_loop", &m_rows), ("column_sweep", &m_cols), ("fused_sweep", &m_fused)],
+        ),
     );
 }

@@ -209,6 +209,53 @@ pub fn gate(record: &BenchRecord, current: &BenchRecord, threshold: f64) -> Gate
     report
 }
 
+/// Serialize measurements in the shared `BENCH_*.json` record schema:
+/// a `bench` name, free-form extra fields (values are raw JSON — quote
+/// strings yourself), then the `arms` array [`parse_bench_record`]
+/// reads. Every bench harness emits through this one serializer so the
+/// per-arm schema cannot drift between records.
+pub fn bench_record_json(
+    bench: &str,
+    extra: &[(&str, String)],
+    arms: &[(&str, &Measurement)],
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{{\n  \"bench\": \"{bench}\""));
+    for (key, value) in extra {
+        out.push_str(&format!(",\n  \"{key}\": {value}"));
+    }
+    out.push_str(",\n  \"arms\": [\n");
+    for (i, (name, m)) in arms.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"mean_secs\": {:.6}, \"median_secs\": {:.6}, \"stddev_secs\": {:.6}, \"iters\": {}}}",
+            m.mean.as_secs_f64(),
+            m.median.as_secs_f64(),
+            m.stddev.as_secs_f64(),
+            m.iters
+        ));
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Write a bench record to the path named by `$env_key` (default
+/// `default_path`; the value `-` disables the write). Prints the
+/// destination or the write error — bench harnesses never fail a run
+/// over a record file.
+pub fn write_bench_record(env_key: &str, default_path: &str, json: &str) {
+    let path = std::env::var(env_key).unwrap_or_else(|_| default_path.to_string());
+    if path == "-" {
+        return;
+    }
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("  wrote {path}"),
+        Err(e) => eprintln!("  could not write {path}: {e}"),
+    }
+}
+
 /// Environment knob helper for benches (`BENCH_SCALE=2 cargo bench`).
 pub fn env_f64(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -285,6 +332,22 @@ mod tests {
         // Improvements never fail.
         let ok = gate(&rec, &record(&[("staged", 1.0), ("fast", 0.2)]), 0.25);
         assert!(ok.failures.is_empty());
+    }
+
+    #[test]
+    fn bench_record_json_roundtrips_through_the_parser() {
+        let a = bench("a", 0, 1, || 1);
+        let b = bench("b", 0, 1, || 2);
+        let json = bench_record_json(
+            "demo",
+            &[("records", "100".into()), ("note", "\"free text\"".into())],
+            &[("ref_arm", &a), ("tracked", &b)],
+        );
+        let rec = parse_bench_record(&json).unwrap();
+        assert_eq!(rec.arms.len(), 2);
+        assert_eq!(rec.arms[0].0, "ref_arm");
+        assert_eq!(rec.arms[1].0, "tracked");
+        assert!(!rec.provisional);
     }
 
     #[test]

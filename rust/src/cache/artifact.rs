@@ -61,7 +61,7 @@ pub struct CachedFrame {
     pub limited_out: usize,
 }
 
-fn dtype_code(d: DType) -> u8 {
+pub(crate) fn dtype_code(d: DType) -> u8 {
     match d {
         DType::Str => 0,
         DType::Tokens => 1,
@@ -69,7 +69,7 @@ fn dtype_code(d: DType) -> u8 {
     }
 }
 
-fn dtype_from(code: u8) -> Result<DType> {
+pub(crate) fn dtype_from(code: u8) -> Result<DType> {
     match code {
         0 => Ok(DType::Str),
         1 => Ok(DType::Tokens),
@@ -102,63 +102,141 @@ pub fn encode(key: &str, out: &PlanOutput) -> Vec<u8> {
         buf.extend_from_slice(&(field.name.len() as u32).to_le_bytes());
         buf.extend_from_slice(field.name.as_bytes());
         buf.push(dtype_code(field.dtype));
-        match col {
-            Column::Str(cells) => {
-                for cell in cells {
-                    match cell {
-                        None => buf.push(0),
-                        Some(s) => {
-                            buf.push(1);
-                            buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
-                            buf.extend_from_slice(s.as_bytes());
-                        }
-                    }
-                }
-            }
-            Column::Tokens(cells) => {
-                for cell in cells {
-                    match cell {
-                        None => buf.push(0),
-                        Some(tokens) => {
-                            buf.push(1);
-                            buf.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
-                            for t in tokens {
-                                buf.extend_from_slice(&(t.len() as u32).to_le_bytes());
-                                buf.extend_from_slice(t.as_bytes());
-                            }
-                        }
-                    }
-                }
-            }
-            Column::Vecs(cells) => {
-                for cell in cells {
-                    match cell {
-                        None => buf.push(0),
-                        Some(xs) => {
-                            buf.push(1);
-                            buf.extend_from_slice(&(xs.len() as u32).to_le_bytes());
-                            for x in xs {
-                                buf.extend_from_slice(&x.to_le_bytes());
-                            }
-                        }
-                    }
-                }
-            }
-        }
+        encode_cells(&mut buf, col);
     }
     let digest = xxh64(&buf[4..], 0);
     buf.extend_from_slice(&digest.to_le_bytes());
     buf
 }
 
-/// Bounds-checked cursor over an artifact's bytes.
-struct Cursor<'a> {
+/// Append one column's cells (a tag byte per row, then the payload) in
+/// the `P3PC` cell layout. Shared with the multi-process executor's wire
+/// format (`crate::plan::process`), which frames whole partitions with
+/// the same discipline.
+pub(crate) fn encode_cells(buf: &mut Vec<u8>, col: &Column) {
+    match col {
+        Column::Str(cells) => {
+            for cell in cells {
+                match cell {
+                    None => buf.push(0),
+                    Some(s) => {
+                        buf.push(1);
+                        buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                        buf.extend_from_slice(s.as_bytes());
+                    }
+                }
+            }
+        }
+        Column::Tokens(cells) => {
+            for cell in cells {
+                match cell {
+                    None => buf.push(0),
+                    Some(tokens) => {
+                        buf.push(1);
+                        buf.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+                        for t in tokens {
+                            buf.extend_from_slice(&(t.len() as u32).to_le_bytes());
+                            buf.extend_from_slice(t.as_bytes());
+                        }
+                    }
+                }
+            }
+        }
+        Column::Vecs(cells) => {
+            for cell in cells {
+                match cell {
+                    None => buf.push(0),
+                    Some(xs) => {
+                        buf.push(1);
+                        buf.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+                        for x in xs {
+                            buf.extend_from_slice(&x.to_le_bytes());
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Decode `n_rows` cells of `dtype` written by [`encode_cells`]. Every
+/// read is bounds-checked and declared token/vector counts are validated
+/// against the bytes actually present before any allocation sized from
+/// them.
+pub(crate) fn decode_cells(cur: &mut Cursor<'_>, dtype: DType, n_rows: usize) -> Result<Column> {
+    let col = match dtype {
+        DType::Str => {
+            let mut cells = Vec::with_capacity(n_rows);
+            for _ in 0..n_rows {
+                cells.push(match cur.u8()? {
+                    0 => None,
+                    _ => Some(cur.str()?),
+                });
+            }
+            Column::Str(cells)
+        }
+        DType::Tokens => {
+            let mut cells = Vec::with_capacity(n_rows);
+            for _ in 0..n_rows {
+                cells.push(match cur.u8()? {
+                    0 => None,
+                    _ => {
+                        let count = cur.u32()? as usize;
+                        // Each token costs at least its 4-byte length.
+                        anyhow::ensure!(
+                            count.saturating_mul(4) <= cur.remaining(),
+                            "artifact token count {count} exceeds remaining bytes"
+                        );
+                        let mut tokens = Vec::with_capacity(count);
+                        for _ in 0..count {
+                            tokens.push(cur.str()?);
+                        }
+                        Some(tokens)
+                    }
+                });
+            }
+            Column::Tokens(cells)
+        }
+        DType::Vector => {
+            let mut cells = Vec::with_capacity(n_rows);
+            for _ in 0..n_rows {
+                cells.push(match cur.u8()? {
+                    0 => None,
+                    _ => {
+                        let count = cur.u32()? as usize;
+                        anyhow::ensure!(
+                            count.saturating_mul(4) <= cur.remaining(),
+                            "artifact vector count {count} exceeds remaining bytes"
+                        );
+                        let mut xs = Vec::with_capacity(count);
+                        for _ in 0..count {
+                            xs.push(f32::from_le_bytes(cur.take(4)?.try_into().unwrap()));
+                        }
+                        Some(xs)
+                    }
+                });
+            }
+            Column::Vecs(cells)
+        }
+    };
+    Ok(col)
+}
+
+/// Bounds-checked cursor over an artifact's (or wire frame's) bytes.
+/// Shared with `crate::plan::process`, whose job/result frames follow
+/// the same little-endian + trailing-digest conventions.
+pub(crate) struct Cursor<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    /// Cursor over `buf` starting at byte offset `pos`.
+    pub(crate) fn new(buf: &'a [u8], pos: usize) -> Cursor<'a> {
+        Cursor { buf, pos }
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         let end = self
             .pos
             .checked_add(n)
@@ -169,24 +247,28 @@ impl<'a> Cursor<'a> {
         Ok(slice)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn str(&mut self) -> Result<String> {
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String> {
         let len = self.u32()? as usize;
         Ok(String::from_utf8(self.take(len)?.to_vec())?)
     }
 
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 }
@@ -269,61 +351,7 @@ pub fn load(path: &Path, key: &str) -> Result<CachedFrame> {
     for _ in 0..n_cols {
         let name = cur.str()?;
         let dtype = dtype_from(cur.u8()?)?;
-        let col = match dtype {
-            DType::Str => {
-                let mut cells = Vec::with_capacity(n_rows);
-                for _ in 0..n_rows {
-                    cells.push(match cur.u8()? {
-                        0 => None,
-                        _ => Some(cur.str()?),
-                    });
-                }
-                Column::Str(cells)
-            }
-            DType::Tokens => {
-                let mut cells = Vec::with_capacity(n_rows);
-                for _ in 0..n_rows {
-                    cells.push(match cur.u8()? {
-                        0 => None,
-                        _ => {
-                            let count = cur.u32()? as usize;
-                            // Each token costs at least its 4-byte length.
-                            anyhow::ensure!(
-                                count.saturating_mul(4) <= cur.remaining(),
-                                "artifact token count {count} exceeds remaining bytes"
-                            );
-                            let mut tokens = Vec::with_capacity(count);
-                            for _ in 0..count {
-                                tokens.push(cur.str()?);
-                            }
-                            Some(tokens)
-                        }
-                    });
-                }
-                Column::Tokens(cells)
-            }
-            DType::Vector => {
-                let mut cells = Vec::with_capacity(n_rows);
-                for _ in 0..n_rows {
-                    cells.push(match cur.u8()? {
-                        0 => None,
-                        _ => {
-                            let count = cur.u32()? as usize;
-                            anyhow::ensure!(
-                                count.saturating_mul(4) <= cur.remaining(),
-                                "artifact vector count {count} exceeds remaining bytes"
-                            );
-                            let mut xs = Vec::with_capacity(count);
-                            for _ in 0..count {
-                                xs.push(f32::from_le_bytes(cur.take(4)?.try_into().unwrap()));
-                            }
-                            Some(xs)
-                        }
-                    });
-                }
-                Column::Vecs(cells)
-            }
-        };
+        let col = decode_cells(&mut cur, dtype, n_rows)?;
         fields.push(Field::new(name, dtype));
         columns.push(col);
     }

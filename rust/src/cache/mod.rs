@@ -43,7 +43,7 @@ pub use manager::{
     DEFAULT_MEMO_MAX_BYTES,
 };
 
-use crate::plan::{LogicalOp, LogicalPlan, StreamOptions};
+use crate::plan::{LogicalOp, LogicalPlan, ProcessOptions, StreamOptions};
 use crate::Result;
 use std::path::PathBuf;
 
@@ -71,6 +71,7 @@ pub fn explain_with_cache(
     plan: &LogicalPlan,
     workers: usize,
     stream: Option<&StreamOptions>,
+    process: Option<&ProcessOptions>,
     cache: Option<&CacheManager>,
 ) -> Result<String> {
     if let Some(mgr) = cache {
@@ -96,7 +97,7 @@ pub fn explain_with_cache(
             }
         }
     }
-    crate::plan::explain_with(plan, workers, stream)
+    crate::plan::explain_with(plan, workers, stream, process)
 }
 
 #[cfg(test)]
@@ -116,7 +117,7 @@ mod tests {
         let cache = CacheManager::open(dir.join("cache")).unwrap();
 
         // Cold: the normal topology renders.
-        let cold = explain_with_cache(&plan, 2, None, Some(&cache)).unwrap();
+        let cold = explain_with_cache(&plan, 2, None, None, Some(&cache)).unwrap();
         assert!(cold.contains("SinglePass"), "{cold}");
         assert!(!cold.contains("cache hit"), "{cold}");
 
@@ -125,13 +126,13 @@ mod tests {
         let fp = fingerprint(&optimized.render(), &files).unwrap();
         let out = optimized.execute(2).unwrap();
         cache.put(&fp, &out).unwrap();
-        let warm = explain_with_cache(&plan, 2, None, Some(&cache)).unwrap();
+        let warm = explain_with_cache(&plan, 2, None, None, Some(&cache)).unwrap();
         assert!(warm.contains(&format!("[cache hit {}]", fp.key())), "{warm}");
         assert!(warm.contains("== Optimized Logical Plan =="), "{warm}");
         assert!(!warm.contains("SinglePass"), "{warm}");
 
         // No cache manager: identical to the plain EXPLAIN.
-        let plain = explain_with_cache(&plan, 2, None, None).unwrap();
+        let plain = explain_with_cache(&plan, 2, None, None, None).unwrap();
         assert_eq!(plain, crate::plan::explain(&plan, 2).unwrap());
         std::fs::remove_dir_all(&dir).unwrap();
     }

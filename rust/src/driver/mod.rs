@@ -106,6 +106,14 @@ pub struct DriverOptions {
     /// byte-identical either way; only the schedule differs. Ignored by
     /// the CA driver, which is the paper's eager control.
     pub stream: Option<crate::plan::StreamOptions>,
+    /// When set, P3SAPP executes through the multi-process sharded
+    /// executor ([`crate::plan::ProcessExecutor`]): the op program and
+    /// per-worker shard assignments ship to `n` worker OS processes over
+    /// a versioned wire format, and the driver folds their result frames
+    /// (the Spark-executor analogy). Takes precedence over `stream` —
+    /// the CLI rejects setting both. Byte-identical output; ignored by
+    /// the CA driver.
+    pub processes: Option<usize>,
     /// When set, P3SAPP consults the persistent plan cache before
     /// executing: a fingerprint hit restores the frame (recorded under
     /// the [`CACHE_RESTORE`] stage) and a miss executes then stores.
@@ -136,6 +144,7 @@ impl Default for DriverOptions {
             title_col: "title".into(),
             abstract_col: "abstract".into(),
             stream: None,
+            processes: None,
             cache: None,
             sample: None,
             limit: None,
@@ -156,6 +165,14 @@ impl DriverOptions {
     /// The exact logical plan [`run_p3sapp`] will execute over `files`.
     pub fn build_plan(&self, files: &[PathBuf]) -> LogicalPlan {
         case_study_plan_with(files, &self.title_col, &self.abstract_col, &self.plan_options())
+    }
+
+    /// The multi-process executor config `processes` selects (`None`
+    /// when the in-process executors run). Shared by the driver and
+    /// EXPLAIN so both describe the same schedule.
+    pub fn process_options(&self) -> Option<crate::plan::ProcessOptions> {
+        self.processes
+            .map(|n| crate::plan::ProcessOptions { processes: n, worker_cmd: None })
     }
 }
 
@@ -202,6 +219,9 @@ pub fn run_p3sapp(files: &[PathBuf], opts: &DriverOptions) -> Result<PreprocessR
 
 /// Execute an (already optimized) plan with the executor `opts` selects.
 fn execute_plan(plan: &LogicalPlan, opts: &DriverOptions) -> Result<PlanOutput> {
+    if let Some(process) = opts.process_options() {
+        return plan.execute_process(&process);
+    }
     match &opts.stream {
         Some(stream) => plan.execute_stream(stream),
         None => plan.execute(opts.workers),

@@ -9,7 +9,9 @@
 //!   by a Catalyst/Tungsten-style plan layer (`plan`: lazy logical
 //!   plans with sample/limit/multi-distinct ops, an optimizer that
 //!   fuses adjacent string stages, a single-pass physical executor, a
-//!   streaming executor that overlaps shard parsing with cleaning, and
+//!   streaming executor that overlaps shard parsing with cleaning, a
+//!   multi-process sharded executor that ships the op program to
+//!   worker OS processes over a versioned wire format, and
 //!   a two-pass strategy that lowers estimator stages like `IDF` into
 //!   the plan), a persistent plan cache
 //!   (`cache`: fingerprinted, content-addressed artifacts so repeated

@@ -27,6 +27,15 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 fn main() {
+    // Hidden worker mode (`repro plan-worker`): the multi-process plan
+    // executor self-execs this binary, ships a P3PJ job on stdin, and
+    // reads a P3PW result frame from stdout. Checked before normal CLI
+    // parsing so the worker protocol can never collide with user flags;
+    // deliberately absent from `usage()` — it is an implementation
+    // detail of `--processes`, not a user-facing command.
+    if std::env::args().nth(1).as_deref() == Some("plan-worker") {
+        std::process::exit(p3sapp::plan::process::worker_main());
+    }
     let args = match Args::parse(std::env::args().skip(1)) {
         Ok(a) => a,
         Err(e) => {
@@ -72,6 +81,13 @@ fn usage() {
          \x20                 (implies --stream; default 16)\n\
          \x20 --readers N     streaming parse threads (implies --stream;\n\
          \x20                 default: a quarter of the cores)\n\
+         \x20 --processes N   run P3SAPP across N worker OS processes\n\
+         \x20                 (0 = one per core): the op program + shard\n\
+         \x20                 assignments ship over a versioned wire\n\
+         \x20                 format, the driver folds the result frames;\n\
+         \x20                 byte-identical output; excludes --stream;\n\
+         \x20                 applies to preprocess/explain/compare/train/\n\
+         \x20                 infer/report\n\
          \x20 --cache-dir D   persistent plan cache: P3SAPP runs restore a\n\
          \x20                 fingerprint-identical preprocessed frame instead\n\
          \x20                 of re-executing (report repeats, train/infer)\n\
@@ -162,6 +178,7 @@ fn cmd_gen_corpus(args: &Args) -> Result<()> {
 struct CommonOpts {
     workers: usize,
     stream: Option<p3sapp::plan::StreamOptions>,
+    processes: Option<usize>,
     cache: Option<Arc<CacheManager>>,
     sample: Option<(f64, u64)>,
     limit: Option<usize>,
@@ -169,9 +186,22 @@ struct CommonOpts {
 
 fn common_opts(args: &Args, cfg: &AppConfig) -> Result<CommonOpts> {
     let workers = args.get_usize("workers", cfg.engine.workers)?;
+    let stream = stream_opts(args, workers)?;
+    let processes = match args.get("processes") {
+        Some(_) => Some(args.get_usize("processes", 0)?),
+        None => None,
+    };
+    // One executor per run: the two schedules are alternatives, and
+    // silently preferring one would make the other's flags dead knobs.
+    anyhow::ensure!(
+        processes.is_none() || stream.is_none(),
+        "--processes and --stream/--queue-cap/--readers select different executors; \
+         pick one"
+    );
     Ok(CommonOpts {
         workers,
-        stream: stream_opts(args, workers)?,
+        stream,
+        processes,
         cache: cache_opt(args)?,
         sample: sample_opt(args)?,
         limit: match args.get("limit") {
@@ -234,6 +264,7 @@ fn driver_opts(args: &Args, cfg: &AppConfig) -> Result<DriverOptions> {
     Ok(DriverOptions {
         workers: common.workers,
         stream: common.stream,
+        processes: common.processes,
         cache: common.cache,
         sample: common.sample,
         limit: common.limit,
@@ -252,6 +283,7 @@ fn render_explain(files: &[PathBuf], opts: &DriverOptions) -> Result<String> {
         &opts.build_plan(files),
         opts.workers,
         opts.stream.as_ref(),
+        opts.process_options().as_ref(),
         opts.cache.as_deref(),
     )
 }
@@ -470,6 +502,7 @@ fn cmd_report(args: &Args) -> Result<()> {
     opts.tiers = args.get_usize_list("tiers", &[1, 2, 3, 4, 5])?;
     opts.explain = args.flag("explain");
     opts.stream = common.stream;
+    opts.processes = common.processes;
     opts.cache = common.cache;
     opts.sample = common.sample;
     opts.limit = common.limit;

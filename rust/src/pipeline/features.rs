@@ -8,6 +8,7 @@
 
 use super::{Estimator, FitAccumulator, Transformer};
 use crate::frame::{Column, DType, Frame};
+use crate::plan::process::{WireEstimator, WireStage};
 use crate::Result;
 use std::sync::Arc;
 
@@ -60,6 +61,13 @@ impl Transformer for NGram {
         // into the cache fingerprint, and bigram vs trigram plans must
         // not share a key.
         format!("NGram({} -> {}, n={})", self.input, self.output, self.n)
+    }
+    fn wire_spec(&self) -> Option<WireStage> {
+        Some(WireStage::NGram {
+            input: self.input.clone(),
+            output: self.output.clone(),
+            n: self.n,
+        })
     }
 }
 
@@ -124,6 +132,13 @@ impl Transformer for HashingTF {
         // be part of the rendered plan (and thus the cache key).
         format!("HashingTF({} -> {}, features={})", self.input, self.output, self.num_features)
     }
+    fn wire_spec(&self) -> Option<WireStage> {
+        Some(WireStage::HashingTF {
+            input: self.input.clone(),
+            output: self.output.clone(),
+            num_features: self.num_features,
+        })
+    }
 }
 
 /// Spark ML `IDF` — an **estimator**: `fit` scans the corpus for
@@ -178,6 +193,14 @@ impl Estimator for Idf {
     fn describe(&self) -> String {
         format!("IDF({} -> {}, min_df={})", self.input, self.output, self.min_doc_freq)
     }
+
+    fn wire_spec(&self) -> Option<WireEstimator> {
+        Some(WireEstimator::Idf {
+            input: self.input.clone(),
+            output: self.output.clone(),
+            min_doc_freq: self.min_doc_freq,
+        })
+    }
 }
 
 impl Idf {
@@ -230,6 +253,53 @@ impl FitAccumulator for IdfAccumulator {
     fn finish(self: Box<Self>) -> Result<Arc<dyn Transformer>> {
         Ok(Arc::new(self.finish_model()))
     }
+
+    /// Cross-process partial: `[n_docs u64][width u64][df u64 × width]`,
+    /// little-endian. Document-frequency accumulation is a sum, so the
+    /// fold is order-insensitive — any worker merge order fits the same
+    /// model the single-process pass fits.
+    fn partial(&self) -> Option<Vec<u8>> {
+        let mut buf = Vec::with_capacity(16 + self.df.len() * 8);
+        buf.extend_from_slice(&self.n_docs.to_le_bytes());
+        buf.extend_from_slice(&(self.df.len() as u64).to_le_bytes());
+        for &d in &self.df {
+            buf.extend_from_slice(&d.to_le_bytes());
+        }
+        Some(buf)
+    }
+
+    fn merge_partial(&mut self, bytes: &[u8]) -> Result<()> {
+        anyhow::ensure!(bytes.len() >= 16, "IDF partial too short ({} bytes)", bytes.len());
+        let n_docs = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+        let width = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        // Checked math: an absurd declared width must error, not
+        // overflow (which would panic in debug builds).
+        let expect = width.checked_mul(8).and_then(|b| b.checked_add(16));
+        anyhow::ensure!(
+            expect == Some(bytes.len()),
+            "IDF partial declares width {width} but carries {} bytes",
+            bytes.len()
+        );
+        if width == 0 {
+            // A worker whose shards held no non-null rows contributes
+            // nothing (its accumulator never learned the vector width).
+            anyhow::ensure!(n_docs == 0, "IDF partial counts docs without a width");
+            return Ok(());
+        }
+        if self.df.is_empty() {
+            self.df = vec![0; width];
+        }
+        anyhow::ensure!(
+            self.df.len() == width,
+            "IDF: inconsistent vector widths ({} vs {width})",
+            self.df.len()
+        );
+        self.n_docs += n_docs;
+        for (slot, chunk) in self.df.iter_mut().zip(bytes[16..].chunks_exact(8)) {
+            *slot += u64::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(())
+    }
 }
 
 impl IdfAccumulator {
@@ -260,6 +330,15 @@ pub struct IdfModel {
     pub idf: Vec<f32>,
 }
 
+impl IdfModel {
+    /// Assemble a fitted model from its weights — the multi-process
+    /// executor uses this to rebuild the pass-2 model a driver fit and
+    /// broadcast over the wire.
+    pub fn new(input: impl Into<String>, output: impl Into<String>, idf: Vec<f32>) -> Self {
+        IdfModel { input: input.into(), output: output.into(), idf }
+    }
+}
+
 impl Transformer for IdfModel {
     fn name(&self) -> &'static str {
         "IDFModel"
@@ -272,6 +351,13 @@ impl Transformer for IdfModel {
     }
     fn output_dtype(&self, _input: DType) -> DType {
         DType::Vector
+    }
+    fn wire_spec(&self) -> Option<WireStage> {
+        Some(WireStage::IdfModel {
+            input: self.input.clone(),
+            output: self.output.clone(),
+            idf: self.idf.clone(),
+        })
     }
     fn transform_column(&self, input: &Column) -> Column {
         Column::from_vectors(
@@ -417,6 +503,57 @@ mod tests {
             streamed.transform_column(&probe),
             "incremental and whole-frame fits diverge"
         );
+    }
+
+    #[test]
+    fn merged_partials_fit_the_same_model_as_one_accumulator() {
+        let est = Idf::new("tf", "tfidf").with_min_doc_freq(1);
+        let rows: Vec<Option<Vec<f32>>> = vec![
+            Some(vec![1.0, 0.0, 2.0]),
+            Some(vec![0.0, 1.0, 1.0]),
+            None,
+            Some(vec![3.0, 0.0, 0.0]),
+        ];
+        // One accumulator over everything vs two worker-local
+        // accumulators merged as partials (in either order — the fold
+        // must be order-insensitive).
+        for order in [[0usize, 1], [1, 0]] {
+            let mut a = est.accumulator().unwrap();
+            a.accumulate(&Column::from_vectors(rows[..2].to_vec())).unwrap();
+            let mut b = est.accumulator().unwrap();
+            b.accumulate(&Column::from_vectors(rows[2..].to_vec())).unwrap();
+            let partials = [a.partial().unwrap(), b.partial().unwrap()];
+            let mut merged = est.accumulator().unwrap();
+            for &i in &order {
+                merged.merge_partial(&partials[i]).unwrap();
+            }
+            let probe = Column::from_vectors(vec![Some(vec![1.0; 3])]);
+            let whole_model = {
+                let mut w = est.accumulator().unwrap();
+                w.accumulate(&Column::from_vectors(rows.clone())).unwrap();
+                w.finish().unwrap()
+            };
+            let merged_model = merged.finish().unwrap();
+            assert_eq!(
+                whole_model.transform_column(&probe),
+                merged_model.transform_column(&probe),
+                "merged partials diverge from the single accumulator"
+            );
+        }
+        // An empty worker contributes a width-0 partial that merges as
+        // a no-op; malformed partials error.
+        let empty = est.accumulator().unwrap();
+        let mut acc = est.accumulator().unwrap();
+        acc.merge_partial(&empty.partial().unwrap()).unwrap();
+        assert!(acc.merge_partial(b"junk").is_err());
+        // Width mismatch across partials is an error, not a silent skew.
+        let mut narrow = est.accumulator().unwrap();
+        narrow.accumulate(&Column::from_vectors(vec![Some(vec![1.0])])).unwrap();
+        let mut wide = est.accumulator().unwrap();
+        wide.accumulate(&Column::from_vectors(vec![Some(vec![1.0, 2.0])])).unwrap();
+        let mut merged = est.accumulator().unwrap();
+        merged.merge_partial(&narrow.partial().unwrap()).unwrap();
+        assert!(merged.merge_partial(&wide.partial().unwrap()).is_err());
     }
 
     #[test]

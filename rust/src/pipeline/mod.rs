@@ -72,6 +72,16 @@ pub trait Transformer: Send + Sync {
             format!("{}({} -> {})", self.name(), self.input_col(), self.output_col())
         }
     }
+
+    /// Serializable description of this stage for the multi-process
+    /// executor's wire format ([`crate::plan::process`]): a worker
+    /// process rebuilds an equivalent transformer from the spec.
+    /// Stages returning `None` (the default) cannot cross a process
+    /// boundary, and a plan containing one fails `--processes` lowering
+    /// with a clear error instead of silently running in-process.
+    fn wire_spec(&self) -> Option<crate::plan::process::WireStage> {
+        None
+    }
 }
 
 /// An estimator: a stage that must scan the data before it can
@@ -104,6 +114,16 @@ pub trait Estimator: Send + Sync {
     fn describe(&self) -> String {
         format!("{}({} -> {})", self.name(), self.input_col(), self.output_col())
     }
+
+    /// Serializable description of this estimator for the multi-process
+    /// executor's partial-aggregate fit pass ([`crate::plan::process`]):
+    /// each worker rebuilds the estimator, folds its shards into a local
+    /// [`FitAccumulator`], and ships the accumulated state back for the
+    /// driver to merge. `None` (the default) keeps the fit fold on the
+    /// driver (workers ship admitted partitions instead).
+    fn wire_spec(&self) -> Option<crate::plan::process::WireEstimator> {
+        None
+    }
 }
 
 /// Streaming fit state for one [`Estimator`]: the plan executor's pass 1
@@ -116,6 +136,22 @@ pub trait FitAccumulator: Send {
     fn accumulate(&mut self, col: &Column) -> Result<()>;
     /// Close the accumulation and build the fitted transformer.
     fn finish(self: Box<Self>) -> Result<Arc<dyn Transformer>>;
+
+    /// Serialize the accumulated state for a cross-process fold (the
+    /// multi-process executor's fit pass, [`crate::plan::process`]).
+    /// `None` (the default) disables the partial-aggregate path; the
+    /// executor then ships admitted partitions to the driver instead.
+    fn partial(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Fold a state produced by [`FitAccumulator::partial`] in another
+    /// process into this accumulator. Implementations must be
+    /// order-insensitive across partials (worker completion order is
+    /// nondeterministic) and reject malformed bytes with an error.
+    fn merge_partial(&mut self, _bytes: &[u8]) -> Result<()> {
+        anyhow::bail!("this accumulator does not support cross-process partial folds")
+    }
 }
 
 /// One pipeline entry: transformer or estimator (Spark `PipelineStage`).

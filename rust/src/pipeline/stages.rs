@@ -7,6 +7,7 @@
 
 use super::Transformer;
 use crate::frame::{Column, DType};
+use crate::plan::process::WireStage;
 use crate::textutil;
 
 /// The per-row rewrite at the core of each fusable string stage.
@@ -127,6 +128,9 @@ impl Transformer for ConvertToLower {
     fn string_kernel(&self) -> Option<StringKernel> {
         Some(StringKernel::Lower)
     }
+    fn wire_spec(&self) -> Option<WireStage> {
+        Some(WireStage::Lower { col: self.col.clone() })
+    }
     fn transform_column(&self, input: &Column) -> Column {
         map_str_column(input, |s, _scratch, out| textutil::to_lowercase_into(s, out))
     }
@@ -176,6 +180,9 @@ impl Transformer for RemoveHtmlTags {
     fn string_kernel(&self) -> Option<StringKernel> {
         Some(StringKernel::StripHtml)
     }
+    fn wire_spec(&self) -> Option<WireStage> {
+        Some(WireStage::Html { col: self.col.clone() })
+    }
     fn transform_column(&self, input: &Column) -> Column {
         map_str_column(input, |s, _scratch, out| textutil::strip_html(s, out))
     }
@@ -211,6 +218,9 @@ impl Transformer for RemoveUnwantedCharacters {
     }
     fn string_kernel(&self) -> Option<StringKernel> {
         Some(StringKernel::RemoveUnwanted)
+    }
+    fn wire_spec(&self) -> Option<WireStage> {
+        Some(WireStage::Unwanted { col: self.col.clone() })
     }
     fn transform_column(&self, input: &Column) -> Column {
         map_str_column(input, |s, scratch, out| textutil::remove_unwanted(s, scratch, out))
@@ -250,6 +260,9 @@ impl Transformer for RemoveShortWords {
         // Only valid on `string` columns; the plan optimizer checks the
         // column dtype before fusing (the token path is not fusable).
         Some(StringKernel::RemoveShortWords(self.threshold))
+    }
+    fn wire_spec(&self) -> Option<WireStage> {
+        Some(WireStage::ShortWords { col: self.col.clone(), threshold: self.threshold })
     }
     fn transform_column(&self, input: &Column) -> Column {
         match input {
@@ -309,6 +322,9 @@ impl Transformer for Tokenizer {
     fn output_dtype(&self, _input: DType) -> DType {
         DType::Tokens
     }
+    fn wire_spec(&self) -> Option<WireStage> {
+        Some(WireStage::Tokenizer { input: self.input.clone(), output: self.output.clone() })
+    }
     fn transform_column(&self, input: &Column) -> Column {
         Column::from_token_lists(
             input
@@ -345,6 +361,12 @@ impl Transformer for StopWordsRemover {
     }
     fn output_dtype(&self, _input: DType) -> DType {
         DType::Tokens
+    }
+    fn wire_spec(&self) -> Option<WireStage> {
+        Some(WireStage::StopwordsTokens {
+            input: self.input.clone(),
+            output: self.output.clone(),
+        })
     }
     fn transform_column(&self, input: &Column) -> Column {
         Column::from_token_lists(
@@ -385,6 +407,9 @@ impl Transformer for StopWordsRemoverStr {
     }
     fn string_kernel(&self) -> Option<StringKernel> {
         Some(StringKernel::RemoveStopwords)
+    }
+    fn wire_spec(&self) -> Option<WireStage> {
+        Some(WireStage::StopwordsStr { col: self.col.clone() })
     }
     fn transform_column(&self, input: &Column) -> Column {
         map_str_column(input, |s, _scratch, out| textutil::remove_stopwords(s, out))

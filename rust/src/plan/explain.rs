@@ -4,6 +4,7 @@
 //! `explain` command, `preprocess --explain`, and the report suite.
 
 use super::logical::LogicalPlan;
+use super::process::ProcessOptions;
 use super::stream::StreamOptions;
 use crate::Result;
 
@@ -27,18 +28,37 @@ pub fn explain(plan: &LogicalPlan, workers: usize) -> Result<String> {
     ))
 }
 
-/// Dispatch for callers holding an optional streaming config (the CLI's
-/// `--stream`, the report suite's `SuiteOptions::stream`):
-/// [`explain_stream`] when one is set, [`explain`] otherwise.
+/// Dispatch for callers holding the CLI/report executor choice
+/// (`--processes` / `--stream` / default): [`explain_process`] when a
+/// process config is set, else [`explain_stream`] when a streaming
+/// config is set, else [`explain`]. The CLI rejects setting both, so
+/// precedence here never decides a real invocation.
 pub fn explain_with(
     plan: &LogicalPlan,
     workers: usize,
     stream: Option<&StreamOptions>,
+    process: Option<&ProcessOptions>,
 ) -> Result<String> {
-    match stream {
-        Some(opts) => explain_stream(plan, opts),
-        None => explain(plan, workers),
+    match (process, stream) {
+        (Some(opts), _) => explain_process(plan, opts),
+        (None, Some(opts)) => explain_stream(plan, opts),
+        (None, None) => explain(plan, workers),
     }
+}
+
+/// Like [`explain`], but the physical section renders the multi-process
+/// topology (worker-process count, spawn/fold driver steps) that
+/// [`LogicalPlan::execute_process`] would run — including the
+/// single-pass fallback when fewer than two workers resolve.
+pub fn explain_process(plan: &LogicalPlan, opts: &ProcessOptions) -> Result<String> {
+    let optimized = plan.clone().optimize();
+    let physical = optimized.lower()?;
+    Ok(format!(
+        "== Logical Plan ==\n{}\n== Optimized Logical Plan ==\n{}\n== Physical Plan (multi-process) ==\n{}",
+        plan.render(),
+        optimized.render(),
+        physical.render_process(opts)
+    ))
 }
 
 /// Like [`explain`], but the physical section renders the streaming
@@ -96,6 +116,23 @@ mod tests {
         let plan = LogicalPlan::scan(vec![], &["c"]); // no Collect
         assert!(explain(&plan, 1).is_err());
         assert!(explain_stream(&plan, &StreamOptions::default()).is_err());
+        assert!(explain_process(&plan, &ProcessOptions::default()).is_err());
+    }
+
+    #[test]
+    fn explain_process_renders_topology_section() {
+        let files: Vec<std::path::PathBuf> =
+            (0..4).map(|i| std::path::PathBuf::from(format!("/tmp/{i}.json"))).collect();
+        let plan = case_study_plan(&files, "title", "abstract");
+        let opts = ProcessOptions { processes: 2, worker_cmd: None };
+        let text = explain_with(&plan, 2, None, Some(&opts)).unwrap();
+        assert!(text.contains("== Physical Plan (multi-process) =="), "{text}");
+        assert!(text.contains("ProcessPool [4 file-partitions, 2 worker processes]"), "{text}");
+        assert!(text.contains("FusedStringStage"), "{text}");
+        // Process config wins the dispatch when both could apply.
+        let both =
+            explain_with(&plan, 2, Some(&StreamOptions::default()), Some(&opts)).unwrap();
+        assert!(both.contains("multi-process"), "{both}");
     }
 
     #[test]

@@ -107,6 +107,13 @@ impl Transformer for FusedStringStage {
         let chain: Vec<String> = self.kernels.iter().map(|k| k.label()).collect();
         format!("FusedStringStage({} <- {})", self.col, chain.join("|"))
     }
+
+    fn wire_spec(&self) -> Option<super::process::WireStage> {
+        Some(super::process::WireStage::Fused {
+            col: self.col.clone(),
+            kernels: self.kernels.clone(),
+        })
+    }
 }
 
 #[cfg(test)]

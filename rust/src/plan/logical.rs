@@ -206,6 +206,15 @@ impl LogicalPlan {
         self.lower()?.execute_stream(opts)
     }
 
+    /// Lower and execute across worker OS processes
+    /// ([`super::process::ProcessExecutor`]): the op program and shard
+    /// assignments ship over a versioned wire format and the driver
+    /// folds the result frames. Byte-identical output to
+    /// [`LogicalPlan::execute`].
+    pub fn execute_process(&self, opts: &super::process::ProcessOptions) -> Result<PlanOutput> {
+        self.lower()?.execute_process(opts)
+    }
+
     /// Render the op list, one op per line.
     pub fn render(&self) -> String {
         let mut out = String::new();

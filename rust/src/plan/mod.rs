@@ -29,16 +29,21 @@
 //! spliced in as an ordinary fused stage. Output is byte-identical to
 //! `Pipeline::fit` + `transform` (`rust/tests/plan_equivalence.rs`).
 //!
-//! Two executors share that lowered program:
+//! Three executors share that lowered program:
 //!
 //! - [`PhysicalPlan::execute`] — the fused single pass: each worker
 //!   parses *and* cleans one shard end to end;
 //! - [`PhysicalPlan::execute_stream`] — the streaming pipeline
 //!   ([`StreamExecutor`]): a bounded reader stage parses shards while a
 //!   worker pool cleans shards already parsed, so I/O and compute
-//!   overlap *within* the pass too.
+//!   overlap *within* the pass too;
+//! - [`PhysicalPlan::execute_process`] — the multi-process sharded
+//!   executor ([`process::ProcessExecutor`]): the optimized program plus
+//!   per-worker shard assignments serialize into a versioned wire format
+//!   and run in worker OS processes (self-exec `plan-worker`), the
+//!   Spark-executor analogy.
 //!
-//! Both produce byte-identical output; `docs/ARCHITECTURE.md` at the
+//! All produce byte-identical output; `docs/ARCHITECTURE.md` at the
 //! repository root walks the whole layer with a rendered EXPLAIN sample.
 //!
 //! ```no_run
@@ -61,10 +66,12 @@ mod fused;
 mod logical;
 mod optimize;
 mod physical;
+pub mod process;
 mod stream;
 
-pub use explain::{explain, explain_stream, explain_with};
+pub use explain::{explain, explain_process, explain_stream, explain_with};
 pub use fused::FusedStringStage;
 pub use logical::{LogicalOp, LogicalPlan};
 pub use physical::{lower, sample_keeps, PhysicalPlan, PlanOutput};
+pub use process::{ProcessExecutor, ProcessOptions};
 pub use stream::{StreamExecutor, StreamOptions};

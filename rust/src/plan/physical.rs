@@ -45,9 +45,11 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// One step of the per-partition single-pass program.
+/// One step of the per-partition single-pass program. `pub(super)` so
+/// the multi-process executor (`super::process`) can serialize the
+/// program into its wire format and a worker process can rebuild it.
 #[derive(Clone)]
-enum PartitionOp {
+pub(super) enum PartitionOp {
     /// Drop rows null in any of the columns (pre-cleaning).
     NullFilter { idxs: Vec<usize> },
     /// Compute 128-bit dedup keys for distinct op `slot` over the
@@ -297,11 +299,11 @@ pub fn sample_keeps(seed: u64, shard: usize, row: usize, fraction: f64) -> bool 
 
 /// Per-worker time spent in each of the paper's stages during the pass.
 #[derive(Debug, Default, Clone, Copy)]
-struct Phases {
-    ingest: Duration,
-    pre: Duration,
-    clean: Duration,
-    post: Duration,
+pub(super) struct Phases {
+    pub(super) ingest: Duration,
+    pub(super) pre: Duration,
+    pub(super) clean: Duration,
+    pub(super) post: Duration,
 }
 
 impl Phases {
@@ -317,26 +319,26 @@ impl Phases {
 /// register a first occurrence that a later filter removed, which is
 /// what makes multi-`Distinct` plans byte-identical to the staged path.
 pub(super) struct KeySlot {
-    keys: Vec<u128>,
-    ids: Vec<u32>,
+    pub(super) keys: Vec<u128>,
+    pub(super) ids: Vec<u32>,
 }
 
 /// What one worker hands back for one shard file (or chunk). Opaque
 /// outside the plan layer; the streaming executor moves these from its
 /// worker pool to the driver-side [`Merger`] without looking inside.
 pub(super) struct PartResult {
-    part: Partition,
+    pub(super) part: Partition,
     /// One entry per `Distinct` op in the program, in slot order; empty
     /// when the plan does not dedup.
-    slots: Vec<KeySlot>,
+    pub(super) slots: Vec<KeySlot>,
     /// Final rows → provenance ids; `None` when the plan does not dedup.
-    final_ids: Option<Vec<u32>>,
-    rows_ingested: usize,
-    nulls_dropped: usize,
-    empties_dropped: usize,
-    sampled_out: usize,
-    limited_out: usize,
-    phases: Phases,
+    pub(super) final_ids: Option<Vec<u32>>,
+    pub(super) rows_ingested: usize,
+    pub(super) nulls_dropped: usize,
+    pub(super) empties_dropped: usize,
+    pub(super) sampled_out: usize,
+    pub(super) limited_out: usize,
+    pub(super) phases: Phases,
 }
 
 /// Result of executing a plan: the collected frame plus the stage-time
@@ -587,6 +589,32 @@ impl PhysicalPlan {
         self.limit
     }
 
+    /// The per-partition op program (for the wire serializer).
+    pub(super) fn program(&self) -> &[PartitionOp] {
+        &self.ops
+    }
+
+    /// Assemble a worker-side plan from wire-decoded parts
+    /// (`super::process`). The worker only runs [`Self::run_partition`],
+    /// which consults `fields`, `ops` and the derived dedup-slot count —
+    /// the schema slot is a placeholder the worker never reads (the
+    /// driver keeps the real output schema for the merge).
+    pub(super) fn from_wire(fields: Vec<String>, ops: Vec<PartitionOp>) -> PhysicalPlan {
+        let n_distinct = ops
+            .iter()
+            .filter(|op| matches!(op, PartitionOp::HashKeys { .. }))
+            .count();
+        PhysicalPlan {
+            files: Vec::new(),
+            output_schema: strings_schema(&fields),
+            fields,
+            ops,
+            n_distinct,
+            limit: None,
+            two_pass: None,
+        }
+    }
+
     pub(super) fn is_two_pass(&self) -> bool {
         self.two_pass.is_some()
     }
@@ -669,6 +697,61 @@ impl PhysicalPlan {
             exec.map_items(chunks, |part| self.run_ops(part, 0, Duration::ZERO))
         };
         Ok((results, extra_ingest))
+    }
+
+    /// Execute by distributing the op program across worker OS
+    /// processes (see [`super::process::ProcessExecutor`]): the
+    /// optimized program plus per-worker shard assignments are
+    /// serialized into the `P3PJ` wire format, each worker runs its
+    /// shards through the same per-shard program the in-process
+    /// executors run and streams `P3PW` result frames back, and the
+    /// driver folds them through the same `Merger`. Output is
+    /// byte-identical to [`Self::execute`].
+    ///
+    /// Estimator plans fit in a first process pass — workers either ship
+    /// [`crate::pipeline::FitAccumulator`] partials (no dedup/limit
+    /// pending: the driver merges accumulated state) or admitted
+    /// partitions (the driver folds them through the shared
+    /// `Admitter`) — then the fitted model is broadcast inside the
+    /// pass-2 job.
+    pub fn execute_process(&self, opts: &super::process::ProcessOptions) -> Result<PlanOutput> {
+        if let Some(tp) = &self.two_pass {
+            let t0 = Instant::now();
+            let fitted = self.run_fit_process(tp, opts)?;
+            let fit_wall = t0.elapsed();
+            let mut out = self.with_model(tp, fitted).execute_process(opts)?;
+            out.times.add(CLEANING, fit_wall);
+            return Ok(out);
+        }
+        super::process::ProcessExecutor::new(opts.clone()).execute(self)
+    }
+
+    /// Pass 1 on the process executor. Without a pending dedup or
+    /// `Limit` the driver-side admission is the identity, so each worker
+    /// folds its shards into its own accumulator and ships only the
+    /// accumulated state (document frequencies for `IDF`) — the
+    /// Spark-style partial aggregate. With dedup/limit in the prefix (or
+    /// an estimator that cannot cross the wire) workers ship their
+    /// prefix partitions instead and the driver admits + accumulates in
+    /// shard order, exactly like the streaming fit pass.
+    fn run_fit_process(
+        &self,
+        tp: &TwoPass,
+        opts: &super::process::ProcessOptions,
+    ) -> Result<Arc<dyn Transformer>> {
+        let prefix = self.prefix_plan(tp);
+        if partial_fit_available(tp, &prefix) {
+            let spec = tp.est.wire_spec().expect("checked by partial_fit_available");
+            return super::process::ProcessExecutor::new(opts.clone()).run_fit_partial(
+                &prefix,
+                &*tp.est,
+                spec,
+                tp.in_idx,
+            );
+        }
+        let mut sink = FitSink::new(tp, &prefix)?;
+        super::process::ProcessExecutor::new(opts.clone()).run(&prefix, &mut |r| sink.push(r))?;
+        sink.finish()
     }
 
     /// Execute through the two-stage streaming pipeline instead of the
@@ -775,7 +858,10 @@ impl PhysicalPlan {
     }
 
     /// The whole per-shard program, run by one worker: parse + op chain.
-    fn run_partition(&self, shard: usize, path: &Path) -> Result<PartResult> {
+    /// Shared with the multi-process executor's worker entry point
+    /// (`super::process::worker_main`), so an in-process worker thread
+    /// and a worker OS process run the exact same code per shard.
+    pub(super) fn run_partition(&self, shard: usize, path: &Path) -> Result<PartResult> {
         let t0 = Instant::now();
         let part = crate::ingest::spark::read_shard(path, &self.fields)?;
         Ok(self.run_ops(part, shard, t0.elapsed()))
@@ -1000,6 +1086,65 @@ impl PhysicalPlan {
         s
     }
 
+    /// Render the multi-process topology (EXPLAIN's third section when
+    /// `--processes` is selected): the worker-process count around the
+    /// same per-partition op program, plus the spawn/fold driver steps.
+    /// When the executor would delegate to the in-process single pass
+    /// (fewer than two resolved worker processes — see
+    /// [`super::process::ProcessExecutor`]), that is rendered instead,
+    /// so EXPLAIN always shows the schedule that actually runs.
+    pub fn render_process(&self, opts: &super::process::ProcessOptions) -> String {
+        use std::fmt::Write;
+        let procs = opts.resolve(self.files.len());
+        if let Some(tp) = &self.two_pass {
+            // Same predicate the executor uses, so EXPLAIN describes
+            // the fold that actually runs.
+            let mode = if partial_fit_available(tp, &self.prefix_plan(tp)) {
+                "accumulator partials"
+            } else {
+                "admitted partitions"
+            };
+            return self.render_two_pass(
+                tp,
+                &format!("{procs} worker processes, pass-1 fold: {mode}"),
+                None,
+            );
+        }
+        if procs <= 1 {
+            let mut s = String::new();
+            let _ = writeln!(
+                s,
+                "ProcessPool fallback ({} file-partitions, {procs} resolved worker \
+                 processes) -> single pass:",
+                self.files.len()
+            );
+            s.push_str(&self.render(0));
+            return s;
+        }
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "ProcessPool [{} file-partitions, {procs} worker processes]",
+            self.files.len()
+        );
+        let _ = writeln!(
+            s,
+            "  spawn:  {procs} x self-exec `plan-worker` (P3PJ job: op program + shard \
+             assignment on stdin)"
+        );
+        let _ = writeln!(s, "  worker: parse+project [{}] + op-program", self.fields.join(", "));
+        for line in self.op_lines() {
+            let _ = writeln!(s, "    {line}");
+        }
+        let base = self.driver_line(false);
+        let _ = writeln!(
+            s,
+            "Driver: fold P3PW result frames (shard order) -> {}",
+            base.trim_start_matches("Driver: ")
+        );
+        s
+    }
+
     /// Render the two-pass topology: the fit pass over the prefix
     /// program, then the full program with the fitted model spliced in.
     fn render_two_pass(&self, tp: &TwoPass, sched: &str, stream: Option<&StreamOptions>) -> String {
@@ -1073,6 +1218,20 @@ fn op_lines_of(ops: &[PartitionOp], schema: &Schema) -> Vec<String> {
         }
     }
     lines
+}
+
+/// Whether the multi-process fit pass can use the partial-aggregate
+/// fold: the driver-side admission must be the identity (no pending
+/// dedup or limit in the prefix) and the estimator must both cross the
+/// wire and support accumulator partials. One predicate shared by
+/// `run_fit_process` and `render_process`, so `--processes` never picks
+/// a fold its EXPLAIN did not describe — and never errors on a plan the
+/// partition-shipping fallback could run.
+fn partial_fit_available(tp: &TwoPass, prefix: &PhysicalPlan) -> bool {
+    prefix.n_distinct() == 0
+        && prefix.limit_n().is_none()
+        && tp.est.wire_spec().is_some()
+        && tp.est.accumulator().is_some_and(|acc| acc.partial().is_some())
 }
 
 /// Pass-1 sink: admit partitions in stream order (dedup + limit), feed

@@ -1,0 +1,1317 @@
+//! Multi-process sharded execution: distribute a lowered
+//! [`PhysicalPlan`] across worker **OS processes** — the Spark-executor
+//! analog of this crate's plan layer, completing the progression
+//! single-pass → streaming → multi-process.
+//!
+//! ```text
+//! driver                                   worker processes (self-exec)
+//! serialize op program + shard     P3PJ    `repro plan-worker` reads the
+//! assignment, spawn N workers   ───────►   job from stdin, runs parse +
+//!                                          op-program per assigned shard
+//! fold result frames in shard      P3PW
+//! order through the shared      ◄───────   writes partitions + dedup
+//! Admitter/Merger                          KeySlot provenance to stdout
+//! ```
+//!
+//! The wire format reuses the `P3PC` artifact conventions
+//! ([`crate::cache::artifact`]): little-endian integers, a magic +
+//! version header, and a trailing xxh64 digest, so truncation and
+//! corruption are detected before any payload is trusted. A worker that
+//! exits nonzero, dies on a signal, or returns a garbled frame becomes a
+//! **driver error naming the worker** — never a hang (each worker's
+//! stdout is drained to EOF and the child is always reaped) and never a
+//! silent partial result (the driver checks that every assigned shard
+//! came back exactly once).
+//!
+//! Workers are spawned by re-executing the current binary with the
+//! hidden `plan-worker` CLI mode ([`worker_main`]); tests and benches
+//! point [`ProcessOptions::worker_cmd`] (or `P3SAPP_WORKER_CMD`) at the
+//! built `repro` binary, since their own harness executable has no
+//! worker mode.
+//!
+//! Output is **byte-identical** to the fused single pass and the
+//! streaming executor: workers run the exact same per-shard program
+//! (`PhysicalPlan::run_partition`) and the driver folds their results
+//! through the exact same ordered `Merger`
+//! (`rust/tests/plan_equivalence.rs`, `rust/tests/process_executor.rs`).
+//!
+//! Estimator plans fit in a first process pass: when the pre-estimator
+//! program carries no `Distinct`/`Limit` (driver-side admission is the
+//! identity), each worker folds its shards into its own
+//! [`FitAccumulator`](crate::pipeline::FitAccumulator) and ships only
+//! the accumulated state (document frequencies for `IDF`) — a
+//! Spark-style partial aggregate the driver merges before broadcasting
+//! the fitted model inside the pass-2 job. With dedup/limit pending,
+//! workers ship admitted partitions instead and the driver folds them
+//! through the shared `Admitter`, exactly like the streaming fit pass.
+
+use super::physical::{KeySlot, Merger, PartResult, PartitionOp, Phases, PhysicalPlan, PlanOutput};
+use crate::cache::artifact::{decode_cells, dtype_code, dtype_from, encode_cells, Cursor};
+use crate::cache::xxh64;
+use crate::frame::{Partition, Schema};
+use crate::pipeline::features::{HashingTF, Idf, IdfModel, NGram};
+use crate::pipeline::stages::{
+    ConvertToLower, RemoveHtmlTags, RemoveShortWords, RemoveUnwantedCharacters, StopWordsRemover,
+    StopWordsRemoverStr, StringKernel, Tokenizer,
+};
+use crate::pipeline::{Estimator, Transformer};
+use crate::Result;
+use anyhow::Context as _;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Job frame magic (driver → worker, on the worker's stdin).
+const JOB_MAGIC: &[u8; 4] = b"P3PJ";
+/// Result frame magic (worker → driver, on the worker's stdout).
+const REPLY_MAGIC: &[u8; 4] = b"P3PW";
+/// Wire-format version shared by both frames; a mismatch is a hard
+/// error (driver and workers are the same binary, so it only trips when
+/// a foreign `worker_cmd` is pointed at an incompatible build).
+const WIRE_VERSION: u32 = 1;
+/// Job modes: run the op program and return per-shard results, or fold
+/// the shards into a fit accumulator and return its partial state.
+const MODE_MAP: u8 = 0;
+const MODE_FIT: u8 = 1;
+
+/// Tuning knobs for the multi-process executor.
+#[derive(Debug, Clone, Default)]
+pub struct ProcessOptions {
+    /// Worker process count (0 = one per logical core). Always clamped
+    /// to the shard count; fewer than two resolved workers delegate to
+    /// the in-process single pass (same bytes, none of the spawn cost).
+    pub processes: usize,
+    /// Worker executable. `None` resolves `P3SAPP_WORKER_CMD` from the
+    /// environment, then the current executable (the normal case: the
+    /// `repro` binary self-execs its hidden `plan-worker` mode). Test
+    /// and bench harnesses must point this at the built `repro` binary.
+    pub worker_cmd: Option<PathBuf>,
+}
+
+impl ProcessOptions {
+    /// Resolve the worker-process count against a concrete shard count.
+    pub fn resolve(&self, n_files: usize) -> usize {
+        let procs = if self.processes == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
+        } else {
+            self.processes
+        };
+        procs.min(n_files)
+    }
+
+    /// The executable to spawn as `<cmd> plan-worker`.
+    fn worker_command(&self) -> Result<PathBuf> {
+        if let Some(cmd) = &self.worker_cmd {
+            return Ok(cmd.clone());
+        }
+        if let Ok(env) = std::env::var("P3SAPP_WORKER_CMD") {
+            if !env.is_empty() {
+                return Ok(PathBuf::from(env));
+            }
+        }
+        std::env::current_exe().map_err(|e| anyhow::anyhow!("cannot resolve worker binary: {e}"))
+    }
+}
+
+/// Serializable description of one transformer stage — what crosses the
+/// process boundary in place of an `Arc<dyn Transformer>`. Stages map to
+/// specs via [`Transformer::wire_spec`]; a worker rebuilds the concrete
+/// stage with [`WireStage::build`].
+#[derive(Debug, Clone)]
+pub enum WireStage {
+    /// A fused chain of string kernels (`FusedStringStage`).
+    Fused { col: String, kernels: Vec<StringKernel> },
+    Lower { col: String },
+    Html { col: String },
+    Unwanted { col: String },
+    ShortWords { col: String, threshold: usize },
+    StopwordsStr { col: String },
+    Tokenizer { input: String, output: String },
+    StopwordsTokens { input: String, output: String },
+    NGram { input: String, output: String, n: usize },
+    HashingTF { input: String, output: String, num_features: usize },
+    /// A fitted IDF model: the driver broadcasts the fitted weights
+    /// inside the pass-2 job.
+    IdfModel { input: String, output: String, idf: Vec<f32> },
+}
+
+impl WireStage {
+    /// Rebuild the concrete transformer this spec describes.
+    pub fn build(self) -> Arc<dyn Transformer> {
+        match self {
+            WireStage::Fused { col, kernels } => {
+                Arc::new(super::fused::FusedStringStage::new(col, kernels))
+            }
+            WireStage::Lower { col } => Arc::new(ConvertToLower::new(col)),
+            WireStage::Html { col } => Arc::new(RemoveHtmlTags::new(col)),
+            WireStage::Unwanted { col } => Arc::new(RemoveUnwantedCharacters::new(col)),
+            WireStage::ShortWords { col, threshold } => {
+                Arc::new(RemoveShortWords::new(col, threshold))
+            }
+            WireStage::StopwordsStr { col } => Arc::new(StopWordsRemoverStr::new(col)),
+            WireStage::Tokenizer { input, output } => Arc::new(Tokenizer::new(input, output)),
+            WireStage::StopwordsTokens { input, output } => {
+                Arc::new(StopWordsRemover::new(input, output))
+            }
+            WireStage::NGram { input, output, n } => Arc::new(NGram::new(input, output, n)),
+            WireStage::HashingTF { input, output, num_features } => {
+                Arc::new(HashingTF::new(input, output, num_features))
+            }
+            WireStage::IdfModel { input, output, idf } => {
+                Arc::new(IdfModel::new(input, output, idf))
+            }
+        }
+    }
+
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            WireStage::Fused { col, kernels } => {
+                buf.push(0);
+                write_str(buf, col);
+                buf.extend_from_slice(&(kernels.len() as u32).to_le_bytes());
+                for k in kernels {
+                    match *k {
+                        StringKernel::Lower => buf.push(0),
+                        StringKernel::StripHtml => buf.push(1),
+                        StringKernel::RemoveUnwanted => buf.push(2),
+                        StringKernel::RemoveStopwords => buf.push(3),
+                        StringKernel::RemoveShortWords(th) => {
+                            buf.push(4);
+                            buf.extend_from_slice(&(th as u64).to_le_bytes());
+                        }
+                    }
+                }
+            }
+            WireStage::Lower { col } => {
+                buf.push(1);
+                write_str(buf, col);
+            }
+            WireStage::Html { col } => {
+                buf.push(2);
+                write_str(buf, col);
+            }
+            WireStage::Unwanted { col } => {
+                buf.push(3);
+                write_str(buf, col);
+            }
+            WireStage::ShortWords { col, threshold } => {
+                buf.push(4);
+                write_str(buf, col);
+                buf.extend_from_slice(&(*threshold as u64).to_le_bytes());
+            }
+            WireStage::StopwordsStr { col } => {
+                buf.push(5);
+                write_str(buf, col);
+            }
+            WireStage::Tokenizer { input, output } => {
+                buf.push(6);
+                write_str(buf, input);
+                write_str(buf, output);
+            }
+            WireStage::StopwordsTokens { input, output } => {
+                buf.push(7);
+                write_str(buf, input);
+                write_str(buf, output);
+            }
+            WireStage::NGram { input, output, n } => {
+                buf.push(8);
+                write_str(buf, input);
+                write_str(buf, output);
+                buf.extend_from_slice(&(*n as u64).to_le_bytes());
+            }
+            WireStage::HashingTF { input, output, num_features } => {
+                buf.push(9);
+                write_str(buf, input);
+                write_str(buf, output);
+                buf.extend_from_slice(&(*num_features as u64).to_le_bytes());
+            }
+            WireStage::IdfModel { input, output, idf } => {
+                buf.push(10);
+                write_str(buf, input);
+                write_str(buf, output);
+                buf.extend_from_slice(&(idf.len() as u32).to_le_bytes());
+                for x in idf {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    fn decode(cur: &mut Cursor<'_>) -> Result<WireStage> {
+        Ok(match cur.u8()? {
+            0 => {
+                let col = cur.str()?;
+                let n = cur.u32()? as usize;
+                anyhow::ensure!(n >= 1, "fused stage spec with no kernels");
+                anyhow::ensure!(n <= cur.remaining(), "fused stage declares {n} kernels");
+                let mut kernels = Vec::with_capacity(n);
+                for _ in 0..n {
+                    kernels.push(match cur.u8()? {
+                        0 => StringKernel::Lower,
+                        1 => StringKernel::StripHtml,
+                        2 => StringKernel::RemoveUnwanted,
+                        3 => StringKernel::RemoveStopwords,
+                        4 => StringKernel::RemoveShortWords(cur.u64()? as usize),
+                        other => anyhow::bail!("unknown string-kernel code {other}"),
+                    });
+                }
+                WireStage::Fused { col, kernels }
+            }
+            1 => WireStage::Lower { col: cur.str()? },
+            2 => WireStage::Html { col: cur.str()? },
+            3 => WireStage::Unwanted { col: cur.str()? },
+            4 => WireStage::ShortWords { col: cur.str()?, threshold: cur.u64()? as usize },
+            5 => WireStage::StopwordsStr { col: cur.str()? },
+            6 => WireStage::Tokenizer { input: cur.str()?, output: cur.str()? },
+            7 => WireStage::StopwordsTokens { input: cur.str()?, output: cur.str()? },
+            8 => {
+                let (input, output, n) = (cur.str()?, cur.str()?, cur.u64()? as usize);
+                anyhow::ensure!(n >= 1, "NGram spec with n=0");
+                WireStage::NGram { input, output, n }
+            }
+            9 => {
+                let (input, output, nf) = (cur.str()?, cur.str()?, cur.u64()? as usize);
+                anyhow::ensure!(nf >= 1, "HashingTF spec with zero buckets");
+                WireStage::HashingTF { input, output, num_features: nf }
+            }
+            10 => {
+                let (input, output) = (cur.str()?, cur.str()?);
+                let n = cur.u32()? as usize;
+                anyhow::ensure!(
+                    n.saturating_mul(4) <= cur.remaining(),
+                    "IDF model spec declares {n} weights"
+                );
+                let mut idf = Vec::with_capacity(n);
+                for _ in 0..n {
+                    idf.push(f32::from_le_bytes(cur.take(4)?.try_into().unwrap()));
+                }
+                WireStage::IdfModel { input, output, idf }
+            }
+            other => anyhow::bail!("unknown stage spec code {other}"),
+        })
+    }
+}
+
+/// Serializable description of one estimator, for the partial-aggregate
+/// fit pass. Maps via [`Estimator::wire_spec`].
+#[derive(Debug, Clone)]
+pub enum WireEstimator {
+    Idf { input: String, output: String, min_doc_freq: usize },
+}
+
+impl WireEstimator {
+    /// Rebuild the concrete estimator this spec describes.
+    pub fn build(self) -> Box<dyn Estimator> {
+        match self {
+            WireEstimator::Idf { input, output, min_doc_freq } => {
+                Box::new(Idf::new(input, output).with_min_doc_freq(min_doc_freq))
+            }
+        }
+    }
+
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            WireEstimator::Idf { input, output, min_doc_freq } => {
+                buf.push(0);
+                write_str(buf, input);
+                write_str(buf, output);
+                buf.extend_from_slice(&(*min_doc_freq as u64).to_le_bytes());
+            }
+        }
+    }
+
+    fn decode(cur: &mut Cursor<'_>) -> Result<WireEstimator> {
+        Ok(match cur.u8()? {
+            0 => WireEstimator::Idf {
+                input: cur.str()?,
+                output: cur.str()?,
+                min_doc_freq: cur.u64()? as usize,
+            },
+            other => anyhow::bail!("unknown estimator spec code {other}"),
+        })
+    }
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Shard paths cross the wire as raw OS bytes on unix — a POSIX
+/// filename need not be UTF-8, and a lossy round trip would make the
+/// worker fail on a subtly mangled path. Elsewhere (no byte-level path
+/// API) the lossy conversion is the best available.
+fn write_path(buf: &mut Vec<u8>, path: &Path) {
+    #[cfg(unix)]
+    {
+        use std::os::unix::ffi::OsStrExt;
+        let bytes = path.as_os_str().as_bytes();
+        buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        buf.extend_from_slice(bytes);
+    }
+    #[cfg(not(unix))]
+    {
+        write_str(buf, &path.to_string_lossy());
+    }
+}
+
+fn read_path(cur: &mut Cursor<'_>) -> Result<PathBuf> {
+    let len = cur.u32()? as usize;
+    let bytes = cur.take(len)?;
+    #[cfg(unix)]
+    {
+        use std::os::unix::ffi::OsStrExt;
+        Ok(PathBuf::from(std::ffi::OsStr::from_bytes(bytes)))
+    }
+    #[cfg(not(unix))]
+    {
+        Ok(PathBuf::from(String::from_utf8(bytes.to_vec())?))
+    }
+}
+
+fn write_idxs(buf: &mut Vec<u8>, idxs: &[usize]) {
+    buf.extend_from_slice(&(idxs.len() as u32).to_le_bytes());
+    for &i in idxs {
+        buf.extend_from_slice(&(i as u32).to_le_bytes());
+    }
+}
+
+fn read_idxs(cur: &mut Cursor<'_>) -> Result<Vec<usize>> {
+    let n = cur.u32()? as usize;
+    anyhow::ensure!(n.saturating_mul(4) <= cur.remaining(), "index list declares {n} entries");
+    (0..n).map(|_| Ok(cur.u32()? as usize)).collect()
+}
+
+/// Serialize the per-partition op program. Fails on stages without a
+/// [`Transformer::wire_spec`] — those cannot cross a process boundary.
+fn encode_ops(buf: &mut Vec<u8>, ops: &[PartitionOp]) -> Result<()> {
+    buf.extend_from_slice(&(ops.len() as u32).to_le_bytes());
+    for op in ops {
+        match op {
+            PartitionOp::NullFilter { idxs } => {
+                buf.push(0);
+                write_idxs(buf, idxs);
+            }
+            PartitionOp::HashKeys { slot, idxs } => {
+                buf.push(1);
+                buf.extend_from_slice(&(*slot as u32).to_le_bytes());
+                write_idxs(buf, idxs);
+            }
+            PartitionOp::SampleFilter { fraction, seed } => {
+                buf.push(2);
+                buf.extend_from_slice(&fraction.to_le_bytes());
+                buf.extend_from_slice(&seed.to_le_bytes());
+            }
+            PartitionOp::LimitCap { n } => {
+                buf.push(3);
+                buf.extend_from_slice(&(*n as u64).to_le_bytes());
+            }
+            PartitionOp::Stage { stage, in_idx, out_idx } => {
+                buf.push(4);
+                buf.extend_from_slice(&(*in_idx as u32).to_le_bytes());
+                buf.extend_from_slice(&(*out_idx as u32).to_le_bytes());
+                let spec = stage.wire_spec().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "stage {} cannot be serialized for multi-process execution \
+                         (no wire spec); run this plan with the in-process executors",
+                        stage.describe()
+                    )
+                })?;
+                spec.encode(buf);
+            }
+            PartitionOp::EmptyFilter { idxs } => {
+                buf.push(5);
+                write_idxs(buf, idxs);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn decode_ops(cur: &mut Cursor<'_>) -> Result<Vec<PartitionOp>> {
+    let n = cur.u32()? as usize;
+    anyhow::ensure!(n <= cur.remaining(), "op program declares {n} ops");
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        ops.push(match cur.u8()? {
+            0 => PartitionOp::NullFilter { idxs: read_idxs(cur)? },
+            1 => PartitionOp::HashKeys { slot: cur.u32()? as usize, idxs: read_idxs(cur)? },
+            2 => PartitionOp::SampleFilter { fraction: cur.f64()?, seed: cur.u64()? },
+            3 => PartitionOp::LimitCap { n: cur.u64()? as usize },
+            4 => {
+                let in_idx = cur.u32()? as usize;
+                let out_idx = cur.u32()? as usize;
+                let stage = WireStage::decode(cur)?.build();
+                PartitionOp::Stage { stage, in_idx, out_idx }
+            }
+            5 => PartitionOp::EmptyFilter { idxs: read_idxs(cur)? },
+            other => anyhow::bail!("unknown op code {other}"),
+        });
+    }
+    Ok(ops)
+}
+
+/// Assemble one worker's job frame.
+fn encode_job(
+    plan: &PhysicalPlan,
+    worker_id: u32,
+    fit: Option<(&WireEstimator, usize)>,
+    shards: &[(u64, &Path)],
+) -> Result<Vec<u8>> {
+    let mut buf = Vec::with_capacity(256);
+    buf.extend_from_slice(JOB_MAGIC);
+    buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    buf.extend_from_slice(&worker_id.to_le_bytes());
+    buf.push(if fit.is_some() { MODE_FIT } else { MODE_MAP });
+    buf.extend_from_slice(&(plan.fields().len() as u32).to_le_bytes());
+    for f in plan.fields() {
+        write_str(&mut buf, f);
+    }
+    encode_ops(&mut buf, plan.program())?;
+    if let Some((est, in_idx)) = fit {
+        est.encode(&mut buf);
+        buf.extend_from_slice(&(in_idx as u32).to_le_bytes());
+    }
+    buf.extend_from_slice(&(shards.len() as u32).to_le_bytes());
+    for (idx, path) in shards {
+        buf.extend_from_slice(&idx.to_le_bytes());
+        write_path(&mut buf, path);
+    }
+    let digest = xxh64(&buf[4..], 0);
+    buf.extend_from_slice(&digest.to_le_bytes());
+    Ok(buf)
+}
+
+/// Validate a frame's envelope (magic, digest, version) and return a
+/// cursor over its body.
+fn check_frame<'a>(bytes: &'a [u8], magic: &[u8; 4], what: &str) -> Result<Cursor<'a>> {
+    anyhow::ensure!(bytes.len() >= 16, "{what} frame too short ({} bytes)", bytes.len());
+    anyhow::ensure!(&bytes[..4] == magic, "{what} frame has bad magic");
+    let body = &bytes[..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    anyhow::ensure!(xxh64(&body[4..], 0) == stored, "{what} frame digest mismatch");
+    let mut cur = Cursor::new(body, 4);
+    let version = cur.u32()?;
+    anyhow::ensure!(version == WIRE_VERSION, "unsupported {what} frame version {version}");
+    Ok(cur)
+}
+
+/// Serialize one shard's [`PartResult`] into a reply frame body.
+fn encode_part_result(buf: &mut Vec<u8>, idx: u64, r: &PartResult) {
+    buf.extend_from_slice(&idx.to_le_bytes());
+    buf.extend_from_slice(&(r.part.num_rows() as u64).to_le_bytes());
+    buf.extend_from_slice(&(r.part.num_columns() as u32).to_le_bytes());
+    for col in r.part.columns() {
+        buf.push(dtype_code(col.dtype()));
+        encode_cells(buf, col);
+    }
+    buf.extend_from_slice(&(r.slots.len() as u32).to_le_bytes());
+    for slot in &r.slots {
+        buf.extend_from_slice(&(slot.keys.len() as u64).to_le_bytes());
+        for k in &slot.keys {
+            buf.extend_from_slice(&k.to_le_bytes());
+        }
+        for id in &slot.ids {
+            buf.extend_from_slice(&id.to_le_bytes());
+        }
+    }
+    match &r.final_ids {
+        None => buf.push(0),
+        Some(ids) => {
+            buf.push(1);
+            buf.extend_from_slice(&(ids.len() as u64).to_le_bytes());
+            for id in ids {
+                buf.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+    }
+    for n in [r.rows_ingested, r.nulls_dropped, r.empties_dropped, r.sampled_out, r.limited_out] {
+        buf.extend_from_slice(&(n as u64).to_le_bytes());
+    }
+    for d in [r.phases.ingest, r.phases.pre, r.phases.clean, r.phases.post] {
+        buf.extend_from_slice(&(d.as_nanos() as u64).to_le_bytes());
+    }
+}
+
+/// Decode one shard's result, validating every declared count against
+/// the bytes present and the driver's expectations (schema dtypes, slot
+/// count, provenance-id domain) so a corrupt frame can only ever error.
+fn decode_part_result(
+    cur: &mut Cursor<'_>,
+    schema: &Schema,
+    expected_slots: usize,
+) -> Result<(u64, PartResult)> {
+    let idx = cur.u64()?;
+    let n_rows = cur.u64()? as usize;
+    let n_cols = cur.u32()? as usize;
+    anyhow::ensure!(
+        n_cols == schema.len(),
+        "shard {idx}: result has {n_cols} columns, schema expects {}",
+        schema.len()
+    );
+    anyhow::ensure!(
+        n_cols.saturating_mul(n_rows.saturating_add(1)) <= cur.remaining(),
+        "shard {idx}: declares more cells ({n_cols} x {n_rows}) than it contains"
+    );
+    let mut cols = Vec::with_capacity(n_cols);
+    for field in schema.fields() {
+        let dtype = dtype_from(cur.u8()?)?;
+        anyhow::ensure!(
+            dtype == field.dtype,
+            "shard {idx}: column '{}' arrived as {dtype}, schema expects {}",
+            field.name,
+            field.dtype
+        );
+        cols.push(decode_cells(cur, dtype, n_rows)?);
+    }
+    let part = Partition::new(cols);
+
+    let n_slots = cur.u32()? as usize;
+    anyhow::ensure!(
+        n_slots == expected_slots,
+        "shard {idx}: {n_slots} dedup slots, plan has {expected_slots}"
+    );
+    let mut slots = Vec::with_capacity(n_slots);
+    for _ in 0..n_slots {
+        let n = cur.u64()? as usize;
+        anyhow::ensure!(
+            n.saturating_mul(20) <= cur.remaining(),
+            "shard {idx}: dedup slot declares {n} keys"
+        );
+        let mut keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            keys.push(u128::from_le_bytes(cur.take(16)?.try_into().unwrap()));
+        }
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            ids.push(cur.u32()?);
+        }
+        slots.push(KeySlot { keys, ids });
+    }
+    let final_ids = match cur.u8()? {
+        0 => None,
+        _ => {
+            let n = cur.u64()? as usize;
+            anyhow::ensure!(
+                n.saturating_mul(4) <= cur.remaining(),
+                "shard {idx}: declares {n} final row ids"
+            );
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(cur.u32()?);
+            }
+            anyhow::ensure!(
+                ids.len() == part.num_rows(),
+                "shard {idx}: {} final ids for {} rows",
+                ids.len(),
+                part.num_rows()
+            );
+            Some(ids)
+        }
+    };
+    anyhow::ensure!(
+        (expected_slots > 0) == final_ids.is_some(),
+        "shard {idx}: dedup provenance missing or unexpected"
+    );
+    let rows_ingested = cur.u64()? as usize;
+    let nulls_dropped = cur.u64()? as usize;
+    let empties_dropped = cur.u64()? as usize;
+    let sampled_out = cur.u64()? as usize;
+    let limited_out = cur.u64()? as usize;
+    // Provenance ids index the parsed-row domain of this shard; the
+    // Admitter sizes its duplicate mask from `rows_ingested`, so every
+    // id must stay inside it (a corrupt frame must not panic the merge).
+    for slot in &slots {
+        anyhow::ensure!(
+            slot.keys.len() == slot.ids.len()
+                && slot.ids.iter().all(|&id| (id as usize) < rows_ingested),
+            "shard {idx}: dedup provenance out of range"
+        );
+    }
+    if let Some(ids) = &final_ids {
+        anyhow::ensure!(
+            ids.iter().all(|&id| (id as usize) < rows_ingested),
+            "shard {idx}: final row ids out of range"
+        );
+    }
+    let phases = Phases {
+        ingest: Duration::from_nanos(cur.u64()?),
+        pre: Duration::from_nanos(cur.u64()?),
+        clean: Duration::from_nanos(cur.u64()?),
+        post: Duration::from_nanos(cur.u64()?),
+    };
+    Ok((
+        idx,
+        PartResult {
+            part,
+            slots,
+            final_ids,
+            rows_ingested,
+            nulls_dropped,
+            empties_dropped,
+            sampled_out,
+            limited_out,
+            phases,
+        },
+    ))
+}
+
+/// Decode a whole map-mode reply frame into shard results.
+fn decode_map_reply(
+    bytes: &[u8],
+    worker_id: u32,
+    schema: &Schema,
+    expected_slots: usize,
+) -> Result<Vec<(u64, PartResult)>> {
+    let mut cur = check_frame(bytes, REPLY_MAGIC, "result")?;
+    let got_worker = cur.u32()?;
+    anyhow::ensure!(
+        got_worker == worker_id,
+        "result frame from worker {got_worker}, expected {worker_id}"
+    );
+    anyhow::ensure!(cur.u8()? == MODE_MAP, "result frame has the wrong mode");
+    let n_shards = cur.u32()? as usize;
+    anyhow::ensure!(n_shards <= cur.remaining(), "result declares {n_shards} shards");
+    let mut out = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        out.push(decode_part_result(&mut cur, schema, expected_slots)?);
+    }
+    anyhow::ensure!(
+        cur.remaining() == 0,
+        "result frame has {} trailing bytes",
+        cur.remaining()
+    );
+    Ok(out)
+}
+
+/// Decode a fit-mode reply frame into the accumulator partial.
+fn decode_fit_reply(bytes: &[u8], worker_id: u32) -> Result<Vec<u8>> {
+    let mut cur = check_frame(bytes, REPLY_MAGIC, "result")?;
+    let got_worker = cur.u32()?;
+    anyhow::ensure!(
+        got_worker == worker_id,
+        "result frame from worker {got_worker}, expected {worker_id}"
+    );
+    anyhow::ensure!(cur.u8()? == MODE_FIT, "result frame has the wrong mode");
+    let n = cur.u64()? as usize;
+    anyhow::ensure!(n == cur.remaining(), "fit partial length mismatch");
+    Ok(cur.take(n)?.to_vec())
+}
+
+/// The multi-process executor: scatter the op program + shard
+/// assignments to worker processes, gather their result frames, fold
+/// through the shared driver-side `Merger`.
+pub struct ProcessExecutor {
+    opts: ProcessOptions,
+}
+
+impl ProcessExecutor {
+    pub fn new(opts: ProcessOptions) -> Self {
+        ProcessExecutor { opts }
+    }
+
+    /// Run `plan` across worker processes. Output (frame bytes, row
+    /// order, drop accounting) is identical to [`PhysicalPlan::execute`];
+    /// only the schedule differs.
+    pub fn execute(&self, plan: &PhysicalPlan) -> Result<PlanOutput> {
+        // Estimator-bearing plans orchestrate their two passes in
+        // `PhysicalPlan::execute_process`.
+        if plan.is_two_pass() {
+            return plan.execute_process(&self.opts);
+        }
+        let t_pass = Instant::now();
+        let n = plan.files().len();
+        let procs = self.opts.resolve(n);
+        if procs <= 1 {
+            // Scarce shards or a single worker: one process would redo
+            // the in-process single pass with spawn + serialization cost
+            // on top — delegate (same bytes out, better schedule).
+            return plan.execute(0);
+        }
+        let results = self.scatter_gather(plan, procs)?;
+        let pass_wall = t_pass.elapsed();
+        let mut merger =
+            Merger::new(plan.output_schema().clone(), plan.n_distinct(), plan.limit_n());
+        for r in results {
+            merger.push(r);
+        }
+        Ok(merger.finish(pass_wall, Duration::ZERO))
+    }
+
+    /// Sink-based variant: hand each shard's [`PartResult`] to `sink`
+    /// **in shard order** without merging — the partition-shipping fit
+    /// pass of the two-pass strategy. Delegates to the in-process
+    /// collect when fewer than two workers resolve.
+    pub(super) fn run(
+        &self,
+        plan: &PhysicalPlan,
+        sink: &mut dyn FnMut(PartResult) -> Result<()>,
+    ) -> Result<()> {
+        let n = plan.files().len();
+        if n == 0 {
+            return Ok(());
+        }
+        let procs = self.opts.resolve(n);
+        if procs <= 1 {
+            let (results, _) = plan.collect_results(0)?;
+            for r in results {
+                sink(r)?;
+            }
+            return Ok(());
+        }
+        for r in self.scatter_gather(plan, procs)? {
+            sink(r)?;
+        }
+        Ok(())
+    }
+
+    /// Partial-aggregate fit pass: each worker folds its shards into its
+    /// own accumulator and ships the accumulated state; the driver
+    /// merges partials (worker order) and fits the model. Only valid
+    /// when the prefix program has no pending dedup/limit — the caller
+    /// ([`PhysicalPlan::execute_process`]) checks that.
+    pub(super) fn run_fit_partial(
+        &self,
+        prefix: &PhysicalPlan,
+        est: &dyn Estimator,
+        spec: WireEstimator,
+        in_idx: usize,
+    ) -> Result<Arc<dyn Transformer>> {
+        let mut acc = est.accumulator().ok_or_else(|| {
+            anyhow::anyhow!(
+                "estimator {} lost its accumulator between lower and execute",
+                est.name()
+            )
+        })?;
+        let n = prefix.files().len();
+        let procs = self.opts.resolve(n);
+        if procs <= 1 {
+            // In-process fallback: no dedup/limit pending, so admission
+            // is the identity and shard results fold directly.
+            let (results, _) = prefix.collect_results(0)?;
+            for r in results {
+                if r.part.num_rows() > 0 {
+                    acc.accumulate(r.part.column(in_idx))?;
+                }
+            }
+            return acc.finish();
+        }
+        anyhow::ensure!(
+            acc.partial().is_some(),
+            "estimator {} does not support cross-process partial folds",
+            est.name()
+        );
+        let cmd = self.opts.worker_command()?;
+        let assignments = assign_shards(prefix.files(), procs);
+        let jobs: Vec<Vec<u8>> = assignments
+            .iter()
+            .enumerate()
+            .map(|(w, shards)| encode_job(prefix, w as u32, Some((&spec, in_idx)), shards))
+            .collect::<Result<_>>()?;
+        let replies = run_workers(&cmd, &jobs)?;
+        for (w, bytes) in replies.iter().enumerate() {
+            let partial = decode_fit_reply(bytes, w as u32)
+                .with_context(|| format!("plan worker {w} ({})", cmd.display()))?;
+            acc.merge_partial(&partial)
+                .with_context(|| format!("plan worker {w}: merging fit partial"))?;
+        }
+        acc.finish()
+    }
+
+    /// Spawn `procs` workers over the plan's shards and return every
+    /// shard's result in shard order. Any worker failure — spawn error,
+    /// nonzero exit, death by signal, or a garbled/short result frame —
+    /// is a driver error naming the worker; all children are reaped
+    /// before this returns.
+    fn scatter_gather(&self, plan: &PhysicalPlan, procs: usize) -> Result<Vec<PartResult>> {
+        let n = plan.files().len();
+        let cmd = self.opts.worker_command()?;
+        let assignments = assign_shards(plan.files(), procs);
+        let jobs: Vec<Vec<u8>> = assignments
+            .iter()
+            .enumerate()
+            .map(|(w, shards)| encode_job(plan, w as u32, None, shards))
+            .collect::<Result<_>>()?;
+        let replies = run_workers(&cmd, &jobs)?;
+
+        let mut pending: Vec<Option<PartResult>> = (0..n).map(|_| None).collect();
+        for (w, bytes) in replies.iter().enumerate() {
+            let shard_results =
+                decode_map_reply(bytes, w as u32, plan.output_schema(), plan.n_distinct())
+                    .with_context(|| format!("plan worker {w} ({})", cmd.display()))?;
+            anyhow::ensure!(
+                shard_results.len() == assignments[w].len(),
+                "plan worker {w}: returned {} shards, {} were assigned",
+                shard_results.len(),
+                assignments[w].len()
+            );
+            for (idx, r) in shard_results {
+                let slot = pending
+                    .get_mut(idx as usize)
+                    .ok_or_else(|| anyhow::anyhow!("plan worker {w}: unknown shard index {idx}"))?;
+                anyhow::ensure!(slot.is_none(), "plan worker {w}: shard {idx} returned twice");
+                *slot = Some(r);
+            }
+        }
+        let mut out = Vec::with_capacity(n);
+        for (i, slot) in pending.into_iter().enumerate() {
+            out.push(slot.ok_or_else(|| anyhow::anyhow!("shard {i} never came back"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// Stripe shards across workers round-robin (shard `i` → worker
+/// `i % procs`), so early shards land on distinct workers and the
+/// in-order driver fold is never starved by one worker holding the
+/// whole prefix.
+fn assign_shards(files: &[PathBuf], procs: usize) -> Vec<Vec<(u64, &Path)>> {
+    let mut assignments: Vec<Vec<(u64, &Path)>> = (0..procs).map(|_| Vec::new()).collect();
+    for (i, path) in files.iter().enumerate() {
+        assignments[i % procs].push((i as u64, path.as_path()));
+    }
+    assignments
+}
+
+/// Drive every worker process to completion concurrently, returning
+/// their raw reply frames in worker order. Every spawned child is
+/// waited on before this returns — success or failure — so no orphan
+/// survives a driver error.
+fn run_workers(cmd: &Path, jobs: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = jobs
+            .iter()
+            .enumerate()
+            .map(|(w, job)| scope.spawn(move || run_worker(w, cmd, job)))
+            .collect();
+        let mut out = Vec::with_capacity(handles.len());
+        let mut first_err: Option<anyhow::Error> = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(bytes)) => out.push(bytes),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!("worker driver thread panicked"));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    })
+}
+
+/// Run one worker process end to end: spawn, ship the job on stdin,
+/// drain stdout/stderr, reap, and validate the exit status.
+fn run_worker(worker: usize, cmd: &Path, job: &[u8]) -> Result<Vec<u8>> {
+    let mut child = Command::new(cmd)
+        .arg("plan-worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .map_err(|e| anyhow::anyhow!("plan worker {worker}: spawn {}: {e}", cmd.display()))?;
+    let mut stdin = child.stdin.take().expect("piped stdin");
+    let mut stdout = child.stdout.take().expect("piped stdout");
+    let mut stderr = child.stderr.take().expect("piped stderr");
+    let (reply, err_text) = std::thread::scope(|scope| {
+        // Stderr drains on its own thread so a chatty worker can never
+        // fill that pipe while the driver blocks on stdout (and vice
+        // versa). The job ships on its own thread too: a worker that
+        // dies early closes its stdin mid-write, and the stdout read
+        // below must keep draining so the child can be reaped.
+        let err = scope.spawn(move || {
+            let mut t = String::new();
+            let _ = stderr.read_to_string(&mut t);
+            t
+        });
+        let input = scope.spawn(move || {
+            // A write error (worker died before reading its whole job)
+            // is diagnosed by the exit-status check below.
+            let _ = stdin.write_all(job);
+            // stdin drops here -> the worker sees job EOF.
+        });
+        let mut out = Vec::new();
+        let _ = stdout.read_to_end(&mut out);
+        let _ = input.join();
+        (out, err.join().unwrap_or_default())
+    });
+    // stdout hit EOF, so the worker exited (or is exiting): wait() can
+    // no longer block on a full pipe, and always reaps the child.
+    let status = child
+        .wait()
+        .map_err(|e| anyhow::anyhow!("plan worker {worker}: wait: {e}"))?;
+    if !status.success() {
+        let err = err_text.trim();
+        anyhow::bail!(
+            "plan worker {worker} ({}) failed with {status}{}",
+            cmd.display(),
+            if err.is_empty() { String::new() } else { format!(": {err}") }
+        );
+    }
+    Ok(reply)
+}
+
+/// Entry point of the hidden `plan-worker` CLI mode (`repro
+/// plan-worker`): read one `P3PJ` job frame from stdin, run the
+/// assigned shards, write one `P3PW` result frame to stdout. Returns
+/// the process exit code; all diagnostics go to stderr, where the
+/// driver folds them into its error message.
+pub fn worker_main() -> i32 {
+    match worker_run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("plan-worker: {e:#}");
+            1
+        }
+    }
+}
+
+fn worker_run() -> Result<()> {
+    let mut job = Vec::new();
+    std::io::stdin()
+        .lock()
+        .read_to_end(&mut job)
+        .map_err(|e| anyhow::anyhow!("reading job from stdin: {e}"))?;
+    let reply = run_job(&job)?;
+    let mut out = std::io::stdout().lock();
+    out.write_all(&reply)
+        .and_then(|()| out.flush())
+        .map_err(|e| anyhow::anyhow!("writing result to stdout: {e}"))?;
+    Ok(())
+}
+
+/// Decode and execute one job frame, producing the reply frame.
+fn run_job(job: &[u8]) -> Result<Vec<u8>> {
+    let mut cur = check_frame(job, JOB_MAGIC, "job")?;
+    let worker_id = cur.u32()?;
+    let mode = cur.u8()?;
+    anyhow::ensure!(mode == MODE_MAP || mode == MODE_FIT, "job frame has unknown mode {mode}");
+    let n_fields = cur.u32()? as usize;
+    anyhow::ensure!(n_fields <= cur.remaining(), "job declares {n_fields} fields");
+    let mut fields = Vec::with_capacity(n_fields);
+    for _ in 0..n_fields {
+        fields.push(cur.str()?);
+    }
+    let ops = decode_ops(&mut cur)?;
+    let fit = if mode == MODE_FIT {
+        let est = WireEstimator::decode(&mut cur)?;
+        let in_idx = cur.u32()? as usize;
+        Some((est, in_idx))
+    } else {
+        None
+    };
+    let n_shards = cur.u32()? as usize;
+    anyhow::ensure!(n_shards <= cur.remaining(), "job declares {n_shards} shards");
+    let mut shards = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        let idx = cur.u64()?;
+        let path = read_path(&mut cur)?;
+        shards.push((idx, path));
+    }
+    anyhow::ensure!(cur.remaining() == 0, "job frame has {} trailing bytes", cur.remaining());
+
+    let plan = PhysicalPlan::from_wire(fields, ops);
+    let mut buf = Vec::with_capacity(1024);
+    buf.extend_from_slice(REPLY_MAGIC);
+    buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    buf.extend_from_slice(&worker_id.to_le_bytes());
+    buf.push(mode);
+    match fit {
+        None => {
+            buf.extend_from_slice(&(shards.len() as u32).to_le_bytes());
+            for (idx, path) in &shards {
+                let r = plan
+                    .run_partition(*idx as usize, path)
+                    .with_context(|| format!("shard {idx}"))?;
+                encode_part_result(&mut buf, *idx, &r);
+            }
+        }
+        Some((est_spec, in_idx)) => {
+            let est = est_spec.build();
+            let mut acc = est
+                .accumulator()
+                .ok_or_else(|| anyhow::anyhow!("estimator {} has no accumulator", est.name()))?;
+            for (idx, path) in &shards {
+                let r = plan
+                    .run_partition(*idx as usize, path)
+                    .with_context(|| format!("shard {idx}"))?;
+                if r.part.num_rows() > 0 {
+                    anyhow::ensure!(
+                        in_idx < r.part.num_columns(),
+                        "fit input column {in_idx} out of range ({} columns)",
+                        r.part.num_columns()
+                    );
+                    acc.accumulate(r.part.column(in_idx))?;
+                }
+            }
+            let partial = acc
+                .partial()
+                .ok_or_else(|| anyhow::anyhow!("estimator {} has no partial state", est.name()))?;
+            buf.extend_from_slice(&(partial.len() as u64).to_le_bytes());
+            buf.extend_from_slice(&partial);
+        }
+    }
+    let digest = xxh64(&buf[4..], 0);
+    buf.extend_from_slice(&digest.to_le_bytes());
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frame::Column;
+    use crate::pipeline::presets::case_study_plan;
+    use crate::plan::LogicalPlan;
+
+    fn sample_partition() -> Partition {
+        let titles = vec![
+            Some("<b>The FIRST Title</b>".to_string()),
+            Some("plain title".to_string()),
+            None,
+            Some("plain title".to_string()), // duplicate of row 1
+            Some("12345 (all digits)".to_string()),
+        ];
+        let abstracts = vec![
+            Some("Deep LEARNING &amp; networks (see Fig. 1)".to_string()),
+            Some("the model is the best".to_string()),
+            Some("orphaned abstract".to_string()),
+            Some("the model is the best".to_string()),
+            Some("numbers 42 everywhere".to_string()),
+        ];
+        Partition::new(vec![Column::from_strs(titles), Column::from_strs(abstracts)])
+    }
+
+    /// Encode a plan's program, decode it, and check the rebuilt program
+    /// transforms a partition exactly like the original.
+    fn assert_program_roundtrip(plan: &LogicalPlan) {
+        let phys = plan.lower().unwrap();
+        let mut buf = Vec::new();
+        encode_ops(&mut buf, phys.program()).unwrap();
+        let mut cur = Cursor::new(&buf, 0);
+        let ops = decode_ops(&mut cur).unwrap();
+        assert_eq!(cur.remaining(), 0);
+        let rebuilt = PhysicalPlan::from_wire(phys.fields().to_vec(), ops);
+        let a = phys.run_ops(sample_partition(), 3, Duration::ZERO);
+        let b = rebuilt.run_ops(sample_partition(), 3, Duration::ZERO);
+        assert_eq!(a.part, b.part, "rebuilt program diverges");
+        assert_eq!(a.rows_ingested, b.rows_ingested);
+        assert_eq!(a.nulls_dropped, b.nulls_dropped);
+        assert_eq!(a.empties_dropped, b.empties_dropped);
+        assert_eq!(a.sampled_out, b.sampled_out);
+        assert_eq!(a.limited_out, b.limited_out);
+        assert_eq!(a.slots.len(), b.slots.len());
+        for (sa, sb) in a.slots.iter().zip(&b.slots) {
+            assert_eq!(sa.keys, sb.keys);
+            assert_eq!(sa.ids, sb.ids);
+        }
+        assert_eq!(a.final_ids, b.final_ids);
+    }
+
+    #[test]
+    fn program_roundtrips_for_the_case_study_plans() {
+        // Unoptimized (individual stages) and optimized (fused sweeps).
+        let plan = case_study_plan(&[], "title", "abstract");
+        assert_program_roundtrip(&plan);
+        assert_program_roundtrip(&plan.clone().optimize());
+        // Sample + limit ops.
+        let sampled = LogicalPlan::scan(vec![], &["title", "abstract"])
+            .sample(0.5, 7)
+            .drop_nulls(&["title", "abstract"])
+            .limit(3)
+            .collect();
+        assert_program_roundtrip(&sampled);
+    }
+
+    #[test]
+    fn program_roundtrips_for_feature_stages_and_fitted_models() {
+        use crate::pipeline::features::{HashingTF, IdfModel, NGram};
+        use crate::pipeline::stages::{StopWordsRemover, Tokenizer};
+        let plan = LogicalPlan::scan(vec![], &["title", "abstract"])
+            .transform(Tokenizer::new("abstract", "tokens"))
+            .transform(StopWordsRemover::new("tokens", "tokens"))
+            .transform(NGram::new("tokens", "tokens", 1))
+            .transform(HashingTF::new("tokens", "tf", 32))
+            .transform(IdfModel::new("tf", "tfidf", vec![0.5; 32]))
+            .collect();
+        assert_program_roundtrip(&plan);
+    }
+
+    #[test]
+    fn unserializable_stage_fails_encoding_with_a_clear_error() {
+        struct Opaque;
+        impl Transformer for Opaque {
+            fn name(&self) -> &'static str {
+                "Opaque"
+            }
+            fn input_col(&self) -> &str {
+                "title"
+            }
+            fn output_col(&self) -> &str {
+                "title"
+            }
+            fn output_dtype(&self, input: crate::frame::DType) -> crate::frame::DType {
+                input
+            }
+            fn transform_column(&self, input: &Column) -> Column {
+                input.clone()
+            }
+        }
+        let plan = LogicalPlan::scan(vec![], &["title"]).transform(Opaque).collect();
+        let phys = plan.lower().unwrap();
+        let err = encode_ops(&mut Vec::new(), phys.program()).unwrap_err();
+        assert!(err.to_string().contains("wire spec"), "{err}");
+    }
+
+    #[test]
+    fn part_result_roundtrips_through_the_reply_frame() {
+        let plan = case_study_plan(&[], "title", "abstract").optimize();
+        let phys = plan.lower().unwrap();
+        let r = phys.run_ops(sample_partition(), 0, Duration::from_millis(3));
+        let mut buf = Vec::new();
+        buf.extend_from_slice(REPLY_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.extend_from_slice(&7u32.to_le_bytes());
+        buf.push(MODE_MAP);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        encode_part_result(&mut buf, 0, &r);
+        let digest = xxh64(&buf[4..], 0);
+        buf.extend_from_slice(&digest.to_le_bytes());
+
+        let decoded = decode_map_reply(&buf, 7, phys.output_schema(), phys.n_distinct()).unwrap();
+        assert_eq!(decoded.len(), 1);
+        let (idx, d) = &decoded[0];
+        assert_eq!(*idx, 0);
+        assert_eq!(d.part, r.part);
+        assert_eq!(d.rows_ingested, r.rows_ingested);
+        assert_eq!(d.nulls_dropped, r.nulls_dropped);
+        assert_eq!(d.final_ids, r.final_ids);
+        assert_eq!(d.slots.len(), r.slots.len());
+        for (sa, sb) in d.slots.iter().zip(&r.slots) {
+            assert_eq!(sa.keys, sb.keys);
+            assert_eq!(sa.ids, sb.ids);
+        }
+
+        // Wrong worker id, flipped payload byte, and truncation all
+        // error — never panic, never a silent partial.
+        assert!(decode_map_reply(&buf, 8, phys.output_schema(), phys.n_distinct()).is_err());
+        let mut flipped = buf.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x20;
+        assert!(
+            decode_map_reply(&flipped, 7, phys.output_schema(), phys.n_distinct()).is_err(),
+            "bit flip must fail the digest"
+        );
+        for cut in [0, 10, buf.len() / 2, buf.len() - 1] {
+            assert!(
+                decode_map_reply(&buf[..cut], 7, phys.output_schema(), phys.n_distinct())
+                    .is_err(),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn job_frame_roundtrips_and_rejects_corruption() {
+        let files = vec![PathBuf::from("/tmp/a.json"), PathBuf::from("/tmp/b.json")];
+        let plan = case_study_plan(&files, "title", "abstract").optimize();
+        let phys = plan.lower().unwrap();
+        let shards: Vec<(u64, &Path)> =
+            files.iter().enumerate().map(|(i, p)| (i as u64, p.as_path())).collect();
+        let job = encode_job(&phys, 3, None, &shards).unwrap();
+        // A valid frame parses (the worker would then fail on the
+        // nonexistent shard paths, not on the frame).
+        let mut cur = check_frame(&job, JOB_MAGIC, "job").unwrap();
+        assert_eq!(cur.u32().unwrap(), 3, "worker id");
+        assert_eq!(cur.u8().unwrap(), MODE_MAP);
+        // Corruption is detected by the digest.
+        let mut bad = job.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x01;
+        assert!(check_frame(&bad, JOB_MAGIC, "job").is_err());
+        // A job is not a reply.
+        assert!(check_frame(&job, REPLY_MAGIC, "result").is_err());
+    }
+
+    #[test]
+    fn estimator_spec_roundtrips() {
+        let spec = WireEstimator::Idf {
+            input: "tf".into(),
+            output: "tfidf".into(),
+            min_doc_freq: 2,
+        };
+        let mut buf = Vec::new();
+        spec.encode(&mut buf);
+        let mut cur = Cursor::new(&buf, 0);
+        let WireEstimator::Idf { input, output, min_doc_freq } =
+            WireEstimator::decode(&mut cur).unwrap();
+        assert_eq!((input.as_str(), output.as_str(), min_doc_freq), ("tf", "tfidf", 2));
+        assert_eq!(cur.remaining(), 0);
+        let est = spec.build();
+        assert_eq!(est.describe(), "IDF(tf -> tfidf, min_df=2)");
+        assert!(est.accumulator().is_some());
+    }
+
+    #[test]
+    fn resolve_clamps_to_shards_and_auto_sizes() {
+        let auto = ProcessOptions::default();
+        assert!(auto.resolve(100) >= 1);
+        assert_eq!(auto.resolve(0), 0);
+        let four = ProcessOptions { processes: 4, worker_cmd: None };
+        assert_eq!(four.resolve(100), 4);
+        assert_eq!(four.resolve(3), 3, "never more workers than shards");
+        assert_eq!(four.resolve(1), 1);
+    }
+
+    #[test]
+    fn assign_shards_stripes_round_robin() {
+        let files: Vec<PathBuf> = (0..5).map(|i| PathBuf::from(format!("/tmp/{i}"))).collect();
+        let a = assign_shards(&files, 2);
+        assert_eq!(a.len(), 2);
+        let idxs = |w: usize| a[w].iter().map(|(i, _)| *i).collect::<Vec<_>>();
+        assert_eq!(idxs(0), vec![0, 2, 4]);
+        assert_eq!(idxs(1), vec![1, 3]);
+    }
+
+    #[test]
+    fn render_process_shows_topology_and_fallback() {
+        let files: Vec<PathBuf> = (0..6).map(|i| PathBuf::from(format!("/tmp/{i}.json"))).collect();
+        let phys = case_study_plan(&files, "title", "abstract").optimize().lower().unwrap();
+        let r = phys.render_process(&ProcessOptions { processes: 3, worker_cmd: None });
+        assert!(r.contains("ProcessPool [6 file-partitions, 3 worker processes]"), "{r}");
+        assert!(r.contains("plan-worker"), "{r}");
+        assert!(r.contains("fold P3PW result frames"), "{r}");
+        assert!(r.contains("hash-keys #0 [title, abstract]"), "{r}");
+        // One shard: the executor delegates, and EXPLAIN says so.
+        let one = case_study_plan(&files[..1], "title", "abstract").optimize().lower().unwrap();
+        let r = one.render_process(&ProcessOptions { processes: 8, worker_cmd: None });
+        assert!(r.contains("fallback"), "{r}");
+        assert!(r.contains("SinglePass"), "{r}");
+    }
+
+    #[test]
+    fn worker_rejects_bad_jobs() {
+        assert!(run_job(b"garbage").is_err());
+        assert!(run_job(&[]).is_err());
+        // Valid envelope, truncated body.
+        let missing = std::env::temp_dir()
+            .join(format!("p3sapp-proc-missing-{}", std::process::id()))
+            .join("a.json");
+        let files = vec![missing.clone()];
+        let phys = case_study_plan(&files, "title", "abstract").lower().unwrap();
+        let job = encode_job(&phys, 0, None, &[(0, missing.as_path())]).unwrap();
+        assert!(run_job(&job[..job.len() - 9]).is_err(), "lost digest must fail");
+        // Valid job over a missing shard file errors with the path.
+        let err = run_job(&job).unwrap_err();
+        assert!(format!("{err:#}").contains("a.json"), "{err:#}");
+    }
+}

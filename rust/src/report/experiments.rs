@@ -30,6 +30,11 @@ pub struct SuiteOptions {
     /// clean overlap) instead of the fused single pass; the EXPLAIN
     /// output switches to the streaming topology accordingly.
     pub stream: Option<crate::plan::StreamOptions>,
+    /// When set, each tier's P3SAPP run distributes across this many
+    /// worker OS processes ([`crate::plan::ProcessExecutor`]); the
+    /// EXPLAIN output switches to the process topology. The CA control
+    /// stays in-process — it is the paper's eager baseline.
+    pub processes: Option<usize>,
     /// When set, each tier's P3SAPP run consults the persistent plan
     /// cache ([`crate::cache::CacheManager`]): a repeated `report` run
     /// (same corpus, same plan) restores every tier's frame instead of
@@ -56,6 +61,7 @@ impl SuiteOptions {
             skip_ca: false,
             explain: false,
             stream: None,
+            processes: None,
             cache: None,
             sample: None,
             limit: None,
@@ -109,6 +115,7 @@ pub fn run_tier(opts: &SuiteOptions, tier: usize) -> Result<TierResult> {
     let driver_opts = DriverOptions {
         workers: opts.workers,
         stream: opts.stream.clone(),
+        processes: opts.processes,
         cache: opts.cache.clone(),
         sample: opts.sample,
         limit: opts.limit,
@@ -123,6 +130,7 @@ pub fn run_tier(opts: &SuiteOptions, tier: usize) -> Result<TierResult> {
             &driver_opts.build_plan(&files),
             driver_opts.workers,
             driver_opts.stream.as_ref(),
+            driver_opts.process_options().as_ref(),
             driver_opts.cache.as_deref(),
         )?;
         eprintln!("{text}");

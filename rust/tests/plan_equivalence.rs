@@ -5,9 +5,11 @@
 //!
 //! The same contract extends to every plan-layer feature: positional
 //! `Sample`, `Limit`, multiple `Distinct` ops, and the two-pass `IDF`
-//! lowering, each checked staged-vs-fused-vs-streaming (including
-//! `queue_cap = 1` and fewer-shards-than-workers) and — for the
-//! estimator pipeline — against a cache round trip.
+//! lowering, each checked staged-vs-fused-vs-streaming-vs-multi-process
+//! (including `queue_cap = 1` and fewer-shards-than-workers) and — for
+//! the estimator pipeline — against a cache round trip. The process
+//! arms spawn real worker processes (the built `repro` binary's hidden
+//! `plan-worker` mode).
 
 use p3sapp::cache::CacheManager;
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
@@ -19,11 +21,21 @@ use p3sapp::pipeline::presets::{
     abstract_stages, case_study_features_pipeline, case_study_pipeline, case_study_plan,
     case_study_plan_with, CaseStudyOptions,
 };
-use p3sapp::plan::{sample_keeps, LogicalPlan, StreamOptions};
+use p3sapp::plan::{sample_keeps, LogicalPlan, ProcessOptions, StreamOptions};
 use std::path::PathBuf;
 use std::sync::Arc;
 
 const COLS: [&str; 2] = ["title", "abstract"];
+
+/// Multi-process executor options for these tests: the harness
+/// executable has no `plan-worker` mode, so the workers are the built
+/// `repro` binary.
+fn process_opts(processes: usize) -> ProcessOptions {
+    ProcessOptions {
+        processes,
+        worker_cmd: Some(PathBuf::from(env!("CARGO_BIN_EXE_repro"))),
+    }
+}
 
 fn corpus(name: &str, spec: &CorpusSpec) -> (PathBuf, Vec<PathBuf>) {
     let dir = std::env::temp_dir().join(format!("p3sapp-planeq-{name}-{}", std::process::id()));
@@ -73,6 +85,19 @@ fn fused_plan_is_byte_identical_to_staged_reference() {
             .unwrap();
 
         assert_eq!(out.frame, reference.frame, "seed {seed}: frames diverge");
+        // The multi-process executor runs the same program in worker OS
+        // processes and must land on the same bytes and accounting.
+        let processed = case_study_plan(&files, "title", "abstract")
+            .optimize()
+            .execute_process(&process_opts(2))
+            .unwrap();
+        assert_eq!(processed.frame, reference.frame, "seed {seed}: process frames diverge");
+        assert_eq!(processed.nulls_dropped, out.nulls_dropped, "seed {seed}: process nulls");
+        assert_eq!(processed.dups_dropped, out.dups_dropped, "seed {seed}: process dups");
+        assert_eq!(
+            processed.empties_dropped, out.empties_dropped,
+            "seed {seed}: process empties"
+        );
         assert_eq!(out.nulls_dropped, reference.nulls_dropped, "seed {seed}: null drops");
         // A duplicated row that cleans to empty is attributed to the
         // dedup counter by the staged path (dedup runs before cleaning)
@@ -213,6 +238,11 @@ fn sampled_plan_matches_the_positionally_sampled_staged_reference() {
             assert_eq!(streamed.frame, reference, "seed {corpus_seed} {stream:?}");
             assert_eq!(streamed.sampled_out, sampled_out, "seed {corpus_seed} {stream:?}");
         }
+        // Worker processes receive shard indices with their paths, so
+        // positional sampling survives the process boundary too.
+        let processed = plan.execute_process(&process_opts(2)).unwrap();
+        assert_eq!(processed.frame, reference, "seed {corpus_seed}: process");
+        assert_eq!(processed.sampled_out, sampled_out, "seed {corpus_seed}: process sample");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }
@@ -235,6 +265,9 @@ fn limited_plan_is_the_staged_reference_prefix_everywhere() {
     ] {
         outputs.push(plan.execute_stream(&stream).unwrap());
     }
+    // The global Limit budget is enforced at the driver merge, so the
+    // process executor cuts the exact same prefix.
+    outputs.push(plan.execute_process(&process_opts(2)).unwrap());
     for out in &outputs {
         assert_eq!(out.rows_out, n);
         assert_eq!(out.limited_out, reference.frame.num_rows() - n);
@@ -301,6 +334,11 @@ fn multi_distinct_plan_matches_the_double_distinct_staged_reference() {
                 let streamed = optimized.execute_stream(&stream).unwrap();
                 assert_eq!(streamed.frame, reference, "seed {seed} {stream:?}");
             }
+            // Multi-`Distinct` provenance (per-slot KeySlots) crosses
+            // the process boundary in the result frames; the driver's
+            // merge must land on the staged bytes from there too.
+            let processed = optimized.execute_process(&process_opts(2)).unwrap();
+            assert_eq!(processed.frame, reference, "seed {seed}: process multi-distinct");
         }
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -400,6 +438,12 @@ fn lowered_idf_matches_pipeline_fit_transform_across_all_executors() {
             let streamed = plan.execute_stream(&stream).unwrap();
             assert_eq!(streamed.frame, reference, "seed {seed} {stream:?}: streaming");
         }
+
+        // Multi-process two-pass: pass 1 ships admitted partitions (the
+        // plan dedups before the estimator), pass 2 broadcasts the
+        // fitted model inside the job — same bytes as Pipeline::fit.
+        let processed = plan.execute_process(&process_opts(2)).unwrap();
+        assert_eq!(processed.frame, reference, "seed {seed}: process two-pass");
 
         // Cached: cold run stores (vectors and all), warm run restores
         // the identical frame.

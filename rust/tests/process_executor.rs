@@ -1,0 +1,220 @@
+//! Integration tests for the multi-process sharded executor
+//! (`plan::process`): real worker processes (the built `repro` binary's
+//! hidden `plan-worker` mode), byte-identity against the in-process
+//! executors, the scarce-shard fallback, and — most importantly — the
+//! worker-failure paths: a worker that exits nonzero, one killed by a
+//! signal mid-run, and one that emits a garbled result frame must all
+//! surface as clean driver errors naming the worker, with no hang and
+//! no orphan processes.
+//!
+//! The test harness executable has no `plan-worker` mode, so every
+//! spawning test points `ProcessOptions::worker_cmd` (or the
+//! `P3SAPP_WORKER_CMD` environment override used by the driver-level
+//! test) at the built binary via `CARGO_BIN_EXE_repro`.
+
+use p3sapp::corpus::{generate_corpus, CorpusSpec};
+use p3sapp::driver::{run_p3sapp, DriverOptions};
+use p3sapp::ingest::list_shards;
+use p3sapp::pipeline::features::{HashingTF, Idf};
+use p3sapp::pipeline::presets::{case_study_features_plan, case_study_plan};
+use p3sapp::pipeline::stages::Tokenizer;
+use p3sapp::plan::{LogicalPlan, ProcessOptions};
+use std::path::PathBuf;
+
+fn repro_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn process_opts(processes: usize) -> ProcessOptions {
+    ProcessOptions { processes, worker_cmd: Some(repro_bin()) }
+}
+
+fn corpus(name: &str, seed: u64) -> (PathBuf, Vec<PathBuf>) {
+    let dir =
+        std::env::temp_dir().join(format!("p3sapp-procexec-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    generate_corpus(&CorpusSpec::tiny(seed), &dir).unwrap();
+    let files = list_shards(&dir).unwrap();
+    (dir, files)
+}
+
+#[test]
+fn process_execution_is_byte_identical_to_the_fused_single_pass() {
+    let (dir, files) = corpus("ident", 23);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let fused = plan.execute(2).unwrap();
+    for processes in [2, 3] {
+        let out = plan.execute_process(&process_opts(processes)).unwrap();
+        assert_eq!(out.frame, fused.frame, "{processes} processes");
+        assert_eq!(out.rows_ingested, fused.rows_ingested, "{processes} processes");
+        assert_eq!(out.rows_out, fused.rows_out, "{processes} processes");
+        assert_eq!(out.nulls_dropped, fused.nulls_dropped, "{processes} processes");
+        assert_eq!(out.dups_dropped, fused.dups_dropped, "{processes} processes");
+        assert_eq!(out.empties_dropped, fused.empties_dropped, "{processes} processes");
+        assert_eq!(out.sampled_out, fused.sampled_out, "{processes} processes");
+        assert_eq!(out.limited_out, fused.limited_out, "{processes} processes");
+        assert!(out.times.total().as_secs_f64() > 0.0, "stage times must be attributed");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn featured_process_run_matches_in_process_two_pass() {
+    // The case-study feature plan has Distinct before the estimator, so
+    // pass 1 ships admitted partitions (driver-side Admitter fold).
+    let (dir, files) = corpus("feat", 31);
+    let plan = case_study_features_plan(&files, "title", "abstract").optimize();
+    let fused = plan.execute(2).unwrap();
+    let out = plan.execute_process(&process_opts(2)).unwrap();
+    assert_eq!(out.frame, fused.frame);
+    assert_eq!(out.rows_out, fused.rows_out);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn dedup_free_fit_uses_partials_and_still_matches() {
+    // No Distinct/Limit before the estimator: pass 1 runs in partial
+    // mode (workers fold their own accumulators, the driver merges
+    // document-frequency partials). Output must still match the
+    // in-process two-pass bit for bit.
+    let (dir, files) = corpus("fitpartial", 47);
+    let plan = LogicalPlan::scan(files.clone(), &["title", "abstract"])
+        .drop_nulls(&["title", "abstract"])
+        .transform(Tokenizer::new("abstract", "tokens"))
+        .transform(HashingTF::new("tokens", "tf", 64))
+        .fit(Idf::new("tf", "tfidf"))
+        .collect();
+    let fused = plan.execute(2).unwrap();
+    assert!(fused.rows_out > 0);
+    let out = plan.execute_process(&process_opts(2)).unwrap();
+    assert_eq!(out.frame, fused.frame);
+    assert_eq!(out.rows_out, fused.rows_out);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn fewer_shards_than_workers_delegates_to_the_single_pass() {
+    let dir = std::env::temp_dir()
+        .join(format!("p3sapp-procexec-scarce-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("only.json"),
+        "{\"title\": \"solo title\", \"abstract\": \"plenty of words here\"}\n",
+    )
+    .unwrap();
+    let files = list_shards(&dir).unwrap();
+    assert_eq!(files.len(), 1);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let fused = plan.execute(2).unwrap();
+    // 8 requested workers resolve to 1 (one shard) -> in-process
+    // fallback; a bogus worker_cmd proves no process is ever spawned.
+    let opts = ProcessOptions {
+        processes: 8,
+        worker_cmd: Some(PathBuf::from("/nonexistent/worker/binary")),
+    };
+    let out = plan.execute_process(&opts).unwrap();
+    assert_eq!(out.frame, fused.frame);
+    let render = plan.lower().unwrap().render_process(&opts);
+    assert!(render.contains("fallback"), "{render}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn driver_level_processes_option_works_via_env_worker_cmd() {
+    // DriverOptions::processes resolves the worker binary from
+    // P3SAPP_WORKER_CMD when no explicit worker_cmd is given — the hook
+    // that makes `--processes` testable from a harness executable.
+    std::env::set_var("P3SAPP_WORKER_CMD", repro_bin());
+    let (dir, files) = corpus("driver", 13);
+    let plain = run_p3sapp(&files, &DriverOptions { workers: 2, ..Default::default() }).unwrap();
+    let processed = run_p3sapp(
+        &files,
+        &DriverOptions { workers: 2, processes: Some(2), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(processed.frame, plain.frame);
+    assert_eq!(processed.rows_ingested, plain.rows_ingested);
+    assert_eq!(processed.rows_out, plain.rows_out);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[cfg(unix)]
+#[test]
+fn worker_nonzero_exit_is_a_driver_error_naming_the_worker() {
+    let (dir, files) = corpus("exit", 5);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let opts = ProcessOptions {
+        processes: 2,
+        worker_cmd: Some(PathBuf::from("/bin/false")),
+    };
+    let err = plan.execute_process(&opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("plan worker"), "{msg}");
+    assert!(msg.contains("failed"), "{msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[cfg(unix)]
+#[test]
+fn worker_emitting_a_garbled_frame_is_a_driver_error() {
+    // /bin/echo ignores the job and prints its argument — a short,
+    // digest-less frame the driver must reject cleanly.
+    let (dir, files) = corpus("garble", 7);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let opts = ProcessOptions {
+        processes: 2,
+        worker_cmd: Some(PathBuf::from("/bin/echo")),
+    };
+    let err = plan.execute_process(&opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("plan worker"), "{msg}");
+    assert!(
+        msg.contains("frame") || msg.contains("short") || msg.contains("magic"),
+        "{msg}"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[cfg(unix)]
+#[test]
+fn worker_killed_mid_run_is_a_driver_error_not_a_hang() {
+    use std::os::unix::fs::PermissionsExt;
+    let (dir, files) = corpus("killed", 11);
+    // A "worker" that drains its job, emits a partial frame, then kills
+    // itself — simulating a crash mid-stream.
+    let script = dir.join("dying-worker.sh");
+    std::fs::write(
+        &script,
+        "#!/bin/sh\ncat > /dev/null\nprintf 'P3PW'\nkill -9 $$\n",
+    )
+    .unwrap();
+    let mut perms = std::fs::metadata(&script).unwrap().permissions();
+    perms.set_mode(0o755);
+    std::fs::set_permissions(&script, perms).unwrap();
+
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let opts = ProcessOptions { processes: 2, worker_cmd: Some(script) };
+    let err = plan.execute_process(&opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("plan worker"), "{msg}");
+    assert!(msg.contains("signal") || msg.contains("failed"), "{msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn explain_process_renders_the_real_topology() {
+    let (dir, files) = corpus("explain", 3);
+    let plan = case_study_plan(&files, "title", "abstract");
+    let opts = ProcessOptions { processes: 2, worker_cmd: None };
+    let text = p3sapp::plan::explain_process(&plan, &opts).unwrap();
+    assert!(text.contains("== Physical Plan (multi-process) =="), "{text}");
+    assert!(text.contains("worker processes"), "{text}");
+    assert!(text.contains("plan-worker"), "{text}");
+    // Two-pass plans render the fit-fold mode in the schedule line.
+    let featured = case_study_features_plan(&files, "title", "abstract");
+    let text = p3sapp::plan::explain_process(&featured, &opts).unwrap();
+    assert!(text.contains("TwoPass"), "{text}");
+    assert!(text.contains("admitted partitions"), "{text}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
