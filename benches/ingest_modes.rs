@@ -7,9 +7,13 @@
 //! schema (default `target/BENCH_ingest.json`, override
 //! `BENCH_INGEST_JSON=path`, disable `=-`); CI's bench-smoke job gates
 //! them with `benchgate` against the repo-root `BENCH_ingest.json` as
-//! ratios to the sequential-append reference. The isolated frame-growth
-//! arms stay out of the gated record — their absolute times are tiny
-//! and machine-noise-dominated.
+//! ratios to the sequential-append reference. The `parallel_x*` arms
+//! pin the owned recursive-descent parser (`ingest_files_owned`) so the
+//! `cursor_x*` arms — the zero-copy byte-cursor hot path that the
+//! library's `ingest_files` now uses — measure the parser swap alone on
+//! the same pool/queue machinery. Corpus bytes/sec is printed per arm.
+//! The isolated frame-growth arms stay out of the gated record — their
+//! absolute times are tiny and machine-noise-dominated.
 //!
 //!     cargo bench --bench ingest_modes
 
@@ -17,7 +21,7 @@ use p3sapp::benchkit::{bench, bench_record_json, black_box, env_usize, write_ben
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
 use p3sapp::frame::{Column, Frame, LocalFrame, Partition, Schema};
 use p3sapp::ingest::append::ingest_files_append;
-use p3sapp::ingest::spark::{ingest_files, IngestOptions};
+use p3sapp::ingest::spark::{ingest_files, ingest_files_owned, IngestOptions};
 use p3sapp::ingest::list_shards;
 
 fn main() {
@@ -67,29 +71,67 @@ fn main() {
     spec.n_files = files_n.min(60);
     generate_corpus(&spec, &dir).expect("corpus");
     let files = list_shards(&dir).expect("shards");
-    println!("full ingestion paths ({} shard files):\n", files.len());
+    let corpus_bytes: u64 =
+        files.iter().filter_map(|f| std::fs::metadata(f).ok()).map(|m| m.len()).sum();
+    let mib = corpus_bytes as f64 / (1024.0 * 1024.0);
+    println!(
+        "full ingestion paths ({} shard files, {mib:.1} MiB):\n",
+        files.len()
+    );
+    let throughput = |m: &p3sapp::benchkit::Measurement| mib / m.mean_secs();
 
     let m_ca = bench("CA sequential + append", 1, 3, || {
         ingest_files_append(black_box(&files), &["title", "abstract"]).unwrap().num_rows()
     });
-    println!("  {}", m_ca.report());
+    println!("  {}  ({:.1} MiB/s)", m_ca.report(), throughput(&m_ca));
+    // The parallel arms keep the owned recursive-descent parser: they
+    // are the pre-cursor baseline the cursor arms are judged against.
     let mut parallel = Vec::new();
     for workers in [1usize, 2, 4] {
         let opts = IngestOptions { workers, queue_cap: 16 };
-        let m = bench(&format!("P3SAPP parallel x{workers}"), 1, 3, || {
+        let m = bench(&format!("P3SAPP parallel x{workers} (owned parser)"), 1, 3, || {
+            ingest_files_owned(black_box(&files), &["title", "abstract"], &opts)
+                .unwrap()
+                .num_rows()
+        });
+        println!(
+            "  {}  vs CA: {:.1}x  ({:.1} MiB/s)",
+            m.report(),
+            m_ca.mean_secs() / m.mean_secs(),
+            throughput(&m)
+        );
+        parallel.push((workers, m));
+    }
+    // Zero-copy byte-cursor hot path (json::cursor): single read into a
+    // reused buffer, borrowed Cow cells, one copy at materialization.
+    let mut cursor = Vec::new();
+    for workers in [1usize, 4] {
+        let opts = IngestOptions { workers, queue_cap: 16 };
+        let m = bench(&format!("P3SAPP cursor x{workers} (zero-copy)"), 1, 3, || {
             ingest_files(black_box(&files), &["title", "abstract"], &opts)
                 .unwrap()
                 .num_rows()
         });
-        println!("  {}  vs CA: {:.1}x", m.report(), m_ca.mean_secs() / m.mean_secs());
-        parallel.push((workers, m));
+        let owned_peer = &parallel[if workers == 1 { 0 } else { 2 }].1;
+        println!(
+            "  {}  vs CA: {:.1}x  vs owned x{workers}: {:.1}x  ({:.1} MiB/s)",
+            m.report(),
+            m_ca.mean_secs() / m.mean_secs(),
+            owned_peer.mean_secs() / m.mean_secs(),
+            throughput(&m)
+        );
+        cursor.push((workers, m));
     }
 
     println!();
     let arm_names: Vec<String> =
         parallel.iter().map(|(w, _)| format!("parallel_x{w}")).collect();
+    let cursor_names: Vec<String> = cursor.iter().map(|(w, _)| format!("cursor_x{w}")).collect();
     let mut arms: Vec<(&str, &p3sapp::benchkit::Measurement)> = vec![("append_files", &m_ca)];
     for (name, (_, m)) in arm_names.iter().zip(&parallel) {
+        arms.push((name.as_str(), m));
+    }
+    for (name, (_, m)) in cursor_names.iter().zip(&cursor) {
         arms.push((name.as_str(), m));
     }
     write_bench_record(

@@ -26,7 +26,9 @@ mod value;
 pub use column::Column;
 pub use local::LocalFrame;
 pub(crate) use ops::null_mask;
-pub use ops::{distinct, distinct_par, drop_nulls, drop_nulls_par, hash_key, hash_row_wide};
+pub use ops::{
+    distinct, distinct_par, drop_nulls, drop_nulls_par, hash_cells_wide, hash_key, hash_row_wide,
+};
 pub use partition::Partition;
 pub use schema::{Field, Schema};
 pub use value::{DType, Value};

@@ -193,6 +193,36 @@ pub fn hash_row_wide(p: &super::Partition, idxs: &[usize], row: usize) -> u128 {
     ((h1 as u128) << 64) | (h2 as u128)
 }
 
+/// 128-bit key over nullable string cells, byte-identical to
+/// [`hash_row_wide`] on `Str` columns (pinned by a test below). The
+/// plan executor's raw ingest path hashes borrowed `Cow` cells with
+/// this *before* materializing owned columns, and the driver-side merge
+/// mixes keys from both sources — so the encodings must never diverge.
+pub fn hash_cells_wide<'a, I>(cells: I) -> u128
+where
+    I: IntoIterator<Item = Option<&'a str>>,
+{
+    let mut h1 = Fnv(FNV_BASIS);
+    let mut h2 = Fnv(FNV_BASIS ^ 0x9e37_79b9_7f4a_7c15);
+    for cell in cells {
+        match cell {
+            None => {
+                h1.feed(&[0xFF, 0x00]);
+                h2.feed(&[0xFF, 0x00]);
+            }
+            Some(s) => {
+                h1.feed(&[0x01]);
+                h1.feed(s.as_bytes());
+                h1.feed(&[0x00]);
+                h2.feed(&[0x01]);
+                h2.feed(s.as_bytes());
+                h2.feed(&[0x00]);
+            }
+        }
+    }
+    ((h1.0 as u128) << 64) | (h2.0 as u128)
+}
+
 const FNV_BASIS: u64 = 0xcbf29ce484222325;
 
 fn hash_row_from(p: &super::Partition, idxs: &[usize], row: usize, basis: u64) -> u64 {
@@ -356,6 +386,33 @@ mod tests {
         assert_eq!(dropped, 1);
         assert_eq!(f.num_rows(), 1);
     }
+    #[test]
+    fn hash_cells_wide_matches_hash_row_wide() {
+        // The raw (borrowed-cell) ingest path and the materialized path
+        // must emit identical dedup keys, or the merge would treat the
+        // same row as two distinct ones depending on the executor.
+        let f = frame(vec![vec![
+            (Some("t1"), Some("a1")),
+            (None, Some("a2")),
+            (Some(""), None),
+            (None, None),
+        ]]);
+        let p = &f.partitions()[0];
+        for i in 0..4 {
+            let cells = [0usize, 1].map(|ci| match p.column(ci) {
+                Column::Str(v) => v[i].as_deref(),
+                _ => unreachable!(),
+            });
+            assert_eq!(hash_cells_wide(cells), hash_row_wide(p, &[0, 1], i), "row {i}");
+            // Column order is part of the key.
+            let rev = [1usize, 0].map(|ci| match p.column(ci) {
+                Column::Str(v) => v[i].as_deref(),
+                _ => unreachable!(),
+            });
+            assert_eq!(hash_cells_wide(rev), hash_row_wide(p, &[1, 0], i), "row {i} rev");
+        }
+    }
+
     #[test]
     fn hash_row_matches_hash_key() {
         let f = frame(vec![vec![(Some("t1"), None), (None, Some("a2"))]]);

@@ -64,6 +64,27 @@ pub fn ingest_dir(dir: &Path, fields: &[&str], workers: usize) -> Result<Frame> 
 /// resulting frame is deterministic and row-comparable with the
 /// sequential baseline (required by the accuracy analysis, Tables 5–6).
 pub fn ingest_files(files: &[PathBuf], fields: &[&str], opts: &IngestOptions) -> Result<Frame> {
+    ingest_files_with(files, fields, opts, read_shard)
+}
+
+/// [`ingest_files`] over the pre-cursor owned parser
+/// ([`read_shard_owned`]). Kept non-deprecated on purpose: the
+/// `parallel_x*` arms of `benches/ingest_modes.rs` measure this path so
+/// the `cursor_x*` arms have a stable same-topology baseline to beat.
+pub fn ingest_files_owned(
+    files: &[PathBuf],
+    fields: &[&str],
+    opts: &IngestOptions,
+) -> Result<Frame> {
+    ingest_files_with(files, fields, opts, read_shard_owned)
+}
+
+fn ingest_files_with(
+    files: &[PathBuf],
+    fields: &[&str],
+    opts: &IngestOptions,
+    read: fn(&Path, &[String]) -> Result<Partition>,
+) -> Result<Frame> {
     let schema = Schema::strings(fields);
     if files.is_empty() {
         return Ok(Frame::empty(schema));
@@ -89,7 +110,7 @@ pub fn ingest_files(files: &[PathBuf], fields: &[&str], opts: &IngestOptions) ->
                 loop {
                     let job = queue.lock().unwrap().pop_front();
                     let Some((idx, path)) = job else { break };
-                    let part = read_shard(&path, &fields);
+                    let part = read(&path, &fields);
                     // Receiver gone ⇒ collector bailed on an earlier
                     // error; just stop.
                     if tx.send((idx, part)).is_err() {
@@ -122,17 +143,74 @@ pub fn ingest_files(files: &[PathBuf], fields: &[&str], opts: &IngestOptions) ->
     })
 }
 
-/// Read + parse + project one shard into a partition.
+/// Read + parse + project one shard into a partition — the production
+/// path: raw bytes read once, then the zero-copy byte cursor
+/// ([`crate::json::parse_shard_projected`]) scans the buffer in place
+/// and only the surviving cells are copied into owned columns.
 ///
-/// Uses projection-pushdown parsing (`parse_document_projected`): only
-/// the selected fields are materialized, everything else is skipped at
-/// lexer speed — what Spark's JSON datasource does for a two-column
-/// select, and a mechanism pandas `read_json` (the CA path) lacks.
-/// Also the ingestion step of both plan executors (`crate::plan`): the
-/// fused single pass parses, cleans and filters each shard inside one
-/// worker task; the streaming executor's reader stage calls this alone
-/// and hands the parsed partition to a separate cleaning pool.
+/// Projection pushdown is unchanged: only the selected fields are
+/// materialized, everything else is skipped at lexer speed — what
+/// Spark's JSON datasource does for a two-column select, and a
+/// mechanism pandas `read_json` (the CA path) lacks. The plan executors
+/// (`crate::plan`) go one step further and run their leading filter ops
+/// over the *borrowed* cells before materializing (`run_raw`); this
+/// function is the re-chunk path's and eager driver's materialize-all
+/// variant.
 pub(crate) fn read_shard(path: &Path, fields: &[String]) -> Result<Partition> {
+    let bytes = read_shard_bytes(path)?;
+    partition_from_bytes(&bytes, path, fields)
+}
+
+/// Read one shard's raw bytes into a fresh buffer (sized from file
+/// metadata by `fs::read`, so the file is copied exactly once). The
+/// streaming executor's reader stage sends these whole buffers to its
+/// workers; the cursor parses them in place there.
+pub(crate) fn read_shard_bytes(path: &Path) -> Result<Vec<u8>> {
+    std::fs::read(path).map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))
+}
+
+/// Read one shard's raw bytes into `buf` (cleared first, allocation
+/// reused). The multi-process worker loop passes one buffer across all
+/// its assigned shards so steady-state reads allocate nothing.
+pub(crate) fn read_shard_into(path: &Path, buf: &mut Vec<u8>) -> Result<()> {
+    use std::io::Read;
+    buf.clear();
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    if let Ok(meta) = f.metadata() {
+        buf.reserve(meta.len() as usize);
+    }
+    f.read_to_end(buf)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Cursor-parse a shard buffer and materialize every projected cell
+/// into an owned partition. `path` is for error context only.
+pub(crate) fn partition_from_bytes(
+    bytes: &[u8],
+    path: &Path,
+    fields: &[String],
+) -> Result<Partition> {
+    let field_refs: Vec<&str> = fields.iter().map(|s| s.as_str()).collect();
+    let raw = crate::json::parse_shard_projected(bytes, &field_refs)
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+    Ok(Partition::new(
+        raw.cols
+            .into_iter()
+            .map(|col| {
+                Column::from_strs(col.into_iter().map(|c| c.map(std::borrow::Cow::into_owned)).collect())
+            })
+            .collect(),
+    ))
+}
+
+/// The pre-cursor read path: whole-file `read_to_string` (full UTF-8
+/// pass) + owned projected parse (one `String` per cell, kept or not).
+/// No production caller — this is the measured baseline for the
+/// `parallel_x*` bench arms and a second reference implementation for
+/// the cursor parity tests.
+pub fn read_shard_owned(path: &Path, fields: &[String]) -> Result<Partition> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
     let field_refs: Vec<&str> = fields.iter().map(|s| s.as_str()).collect();
@@ -200,6 +278,20 @@ mod tests {
         )
         .unwrap();
         assert_eq!(frame.num_partitions(), files.len());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cursor_and_owned_ingest_agree() {
+        // Same corpus through the production byte-cursor path and the
+        // legacy owned-parser path: identical frames, bit for bit.
+        let spec = CorpusSpec::tiny(7);
+        let dir = corpus("agree", &spec);
+        let files = list_shards(&dir).unwrap();
+        let opts = IngestOptions { workers: 2, queue_cap: 4 };
+        let cur = ingest_files(&files, &["title", "abstract"], &opts).unwrap().collect();
+        let owned = ingest_files_owned(&files, &["title", "abstract"], &opts).unwrap().collect();
+        assert_eq!(cur, owned);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

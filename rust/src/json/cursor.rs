@@ -1,0 +1,648 @@
+//! Zero-copy projected shard parsing: a byte-slice cursor (`&[u8]` +
+//! position) that scans a whole shard buffer in place and yields the
+//! projected columns as borrowed [`Cow`] cells.
+//!
+//! This is the ingestion hot path's replacement for
+//! [`parse_document_projected`](super::parse_document_projected) (which
+//! stays as the owned fallback behind the generic [`Json`](super::Json)
+//! API). The differences that buy the throughput:
+//!
+//! - **No whole-file UTF-8 pass.** Shards are read as raw bytes, not
+//!   `read_to_string`. UTF-8 validation is deferred to the spans that
+//!   need it: string contents (including skipped strings and keys) and
+//!   nothing else — every structural byte of JSON is ASCII, so a stray
+//!   `>= 0x80` byte outside a string fails structurally anyway. A file
+//!   the old path rejected is still rejected; it can never silently
+//!   mojibake through.
+//! - **The `Cow` borrow rule.** A projected cell borrows its span from
+//!   the shard buffer whenever the string contains no `\` escape; it
+//!   only allocates (`Cow::Owned`) when an escape forces decoding.
+//!   Rows that a downstream filter drops are therefore never copied.
+//! - **One `unsafe`.** All-ASCII spans skip the `from_utf8` re-check
+//!   via `from_utf8_unchecked`; the scan loop that produced the span
+//!   already proved every byte `< 0x80`. A `debug_assert!` re-checks
+//!   under the CI `checked-cursor` job.
+//!
+//! Projection semantics match the owned parser exactly (pinned by
+//! `rust/tests/cursor_parity.rs`): only string values assign a cell,
+//! non-string/null values of a projected field are skipped and leave
+//! the cell untouched, skipped strings are escape-skipped without
+//! decoding, and record layout handling (JSON array / JSON-lines /
+//! single object) is byte-for-byte compatible.
+
+use super::JsonError;
+use std::borrow::Cow;
+
+/// Column-major result of a projected shard parse: `cols[f][r]` is
+/// field `f` of record `r`. Cells borrow unescaped spans from the
+/// input buffer — the buffer must outlive this value.
+pub struct ProjectedColumns<'a> {
+    pub cols: Vec<Vec<Option<Cow<'a, str>>>>,
+    pub rows: usize,
+}
+
+/// Parse a shard buffer (JSON array of records, JSON-lines, or a single
+/// object) into projected columns, borrowing unescaped string spans.
+///
+/// ```
+/// use p3sapp::json::parse_shard_projected;
+/// use std::borrow::Cow;
+///
+/// let buf = br#"{"title": "plain", "n": 1}
+/// {"title": "esc\naped", "junk": [1, {"k": "v"}]}"#;
+/// let out = parse_shard_projected(buf, &["title"]).unwrap();
+/// assert_eq!(out.rows, 2);
+/// assert!(matches!(out.cols[0][0], Some(Cow::Borrowed("plain"))));
+/// assert!(matches!(out.cols[0][1], Some(Cow::Owned(_)))); // escape ⇒ alloc
+/// ```
+pub fn parse_shard_projected<'a>(
+    buf: &'a [u8],
+    fields: &[&str],
+) -> Result<ProjectedColumns<'a>, JsonError> {
+    let mut cols: Vec<Vec<Option<Cow<'a, str>>>> = fields.iter().map(|_| Vec::new()).collect();
+    let mut rows = 0usize;
+    // Reused per-record staging row; cells are *moved* into the columns
+    // (a `Cow` move is pointer-sized, no copy).
+    let mut row: Vec<Option<Cow<'a, str>>> = vec![None; fields.len()];
+
+    if matches!(first_significant(buf), Some((_, b'['))) {
+        let (start, _) = first_significant(buf).expect("checked above");
+        let mut c = Cursor { buf, pos: start + 1 };
+        c.skip_ws();
+        if c.peek() == Some(b']') {
+            c.pos += 1;
+            c.skip_ws();
+            if !c.eof() {
+                return Err(c.err("trailing characters after document"));
+            }
+            return Ok(ProjectedColumns { cols, rows });
+        }
+        loop {
+            c.record_projected(fields, &mut row)?;
+            for (f, cell) in row.iter_mut().enumerate() {
+                cols[f].push(cell.take());
+            }
+            rows += 1;
+            c.skip_ws();
+            match c.bump() {
+                Some(b',') => continue,
+                Some(b']') => break,
+                _ => return Err(c.err("expected ',' or ']' in record array")),
+            }
+        }
+        c.skip_ws();
+        if !c.eof() {
+            return Err(c.err("trailing characters after document"));
+        }
+    } else {
+        // JSON-lines (also covers the single-object case: one line).
+        // A record never spans lines, so each line gets its own
+        // end-clamped cursor; positions stay global for error offsets.
+        let mut start = 0usize;
+        loop {
+            let end = buf[start..]
+                .iter()
+                .position(|&b| b == b'\n')
+                .map_or(buf.len(), |p| start + p);
+            let (s, e) = trim_line(buf, start, end)?;
+            if s < e {
+                let mut c = Cursor { buf: &buf[..e], pos: s };
+                c.record_projected(fields, &mut row)?;
+                c.skip_ws();
+                if !c.eof() {
+                    return Err(JsonError {
+                        offset: start,
+                        message: "trailing characters after record".into(),
+                    });
+                }
+                for (f, cell) in row.iter_mut().enumerate() {
+                    cols[f].push(cell.take());
+                }
+                rows += 1;
+            }
+            if end == buf.len() {
+                break;
+            }
+            start = end + 1;
+        }
+    }
+    Ok(ProjectedColumns { cols, rows })
+}
+
+fn is_ascii_ws(b: u8) -> bool {
+    matches!(b, b' ' | b'\t' | b'\n' | b'\r')
+}
+
+/// First non-whitespace byte (offset, byte) — the layout sniff. The
+/// owned parser trims with `str::trim_start`, so Unicode whitespace
+/// before the document must be skipped too; non-ASCII bytes are decoded
+/// just far enough to ask `char::is_whitespace`.
+fn first_significant(buf: &[u8]) -> Option<(usize, u8)> {
+    let mut i = 0usize;
+    while i < buf.len() {
+        let b = buf[i];
+        if is_ascii_ws(b) {
+            i += 1;
+        } else if b < 0x80 {
+            return Some((i, b));
+        } else {
+            match decode_char(buf, i) {
+                Some(c) if c.is_whitespace() => i += c.len_utf8(),
+                // Not whitespace (or invalid UTF-8): significant — the
+                // record parse will produce the real error.
+                _ => return Some((i, b)),
+            }
+        }
+    }
+    None
+}
+
+/// Decode the UTF-8 char starting at `i`, if valid.
+fn decode_char(buf: &[u8], i: usize) -> Option<char> {
+    let max = (buf.len() - i).min(4);
+    for n in 1..=max {
+        if let Ok(s) = std::str::from_utf8(&buf[i..i + n]) {
+            return s.chars().next();
+        }
+    }
+    None
+}
+
+/// Trim one JSONL line to its significant span. ASCII whitespace is
+/// trimmed byte-wise; if a non-ASCII byte survives at either edge the
+/// line falls back to validated `str::trim` for parity with the owned
+/// parser (which trims Unicode whitespace).
+fn trim_line(buf: &[u8], start: usize, end: usize) -> Result<(usize, usize), JsonError> {
+    let mut s = start;
+    let mut e = end;
+    while s < e && is_ascii_ws(buf[s]) {
+        s += 1;
+    }
+    while e > s && is_ascii_ws(buf[e - 1]) {
+        e -= 1;
+    }
+    if s < e && (buf[s] >= 0x80 || buf[e - 1] >= 0x80) {
+        let text = std::str::from_utf8(&buf[s..e]).map_err(|err| JsonError {
+            offset: s + err.valid_up_to(),
+            message: "invalid UTF-8 in shard".into(),
+        })?;
+        let t = text.trim_start();
+        let s2 = s + (text.len() - t.len());
+        return Ok((s2, s2 + t.trim_end().len()));
+    }
+    Ok((s, e))
+}
+
+/// Convert a scanned span to `&str`. `ascii` is the scanner's proof
+/// obligation: it must be `true` only if every byte of the span was
+/// seen to be `< 0x80`. Non-ASCII spans pay a real `from_utf8` check —
+/// this is where the deferred validation (replacing the old whole-file
+/// `read_to_string` pass) actually happens.
+fn span_str(buf: &[u8], start: usize, end: usize, ascii: bool) -> Result<&str, JsonError> {
+    let span = &buf[start..end];
+    if ascii {
+        debug_assert!(span.is_ascii(), "scanner promised an all-ASCII span");
+        // SAFETY: the caller's scan loop checked every byte of
+        // `span` < 0x80, and ASCII bytes are valid one-byte UTF-8.
+        // Re-proved by the debug_assert above under the CI
+        // `checked-cursor` job.
+        Ok(unsafe { std::str::from_utf8_unchecked(span) })
+    } else {
+        std::str::from_utf8(span).map_err(|e| JsonError {
+            offset: start + e.valid_up_to(),
+            message: "invalid UTF-8 in string".into(),
+        })
+    }
+}
+
+/// The byte cursor: a buffer and a position. Error offsets are
+/// positions into `buf` (global when `buf` is the whole shard).
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn eof(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError { offset: self.pos, message: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.buf.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.buf.len() && is_ascii_ws(self.buf[self.pos]) {
+            self.pos += 1;
+        }
+    }
+
+    /// Parse one record object into `row` (cells reset first): string
+    /// values of projected fields are kept, everything else is skipped
+    /// at byte speed. Mirrors `projected::record_projected` — including
+    /// the duplicate-key rule: only a *string* value assigns the cell,
+    /// so a later non-string duplicate leaves an earlier value alone.
+    fn record_projected(
+        &mut self,
+        fields: &[&str],
+        row: &mut [Option<Cow<'a, str>>],
+    ) -> Result<(), JsonError> {
+        for cell in row.iter_mut() {
+            *cell = None;
+        }
+        self.skip_ws();
+        self.expect(b'{')?;
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            if let Some(idx) = fields.iter().position(|f| *f == key.as_ref()) {
+                self.skip_ws();
+                if self.peek() == Some(b'"') {
+                    row[idx] = Some(self.string()?);
+                } else {
+                    // null / number / object / array → cell untouched,
+                    // value still consumed.
+                    self.skip_value()?;
+                }
+            } else {
+                self.skip_value()?;
+            }
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(()),
+                _ => return Err(self.err("expected ',' or '}' in record")),
+            }
+        }
+    }
+
+    /// Parse one string, borrowing when possible. Fast path: scan to
+    /// the closing quote; no escape seen ⇒ `Cow::Borrowed` of the span
+    /// (UTF-8-checked only if a non-ASCII byte was seen). Slow path:
+    /// decode escapes into an owned `String`, validating raw runs.
+    fn string(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        let mut i = self.pos;
+        let mut ascii = true;
+        loop {
+            match self.buf.get(i) {
+                None => {
+                    self.pos = i;
+                    return Err(self.err("unterminated string"));
+                }
+                Some(b'"') => {
+                    let s = span_str(self.buf, start, i, ascii)?;
+                    self.pos = i + 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                Some(b'\\') => break,
+                Some(&b) => {
+                    if b >= 0x80 {
+                        ascii = false;
+                    }
+                    i += 1;
+                }
+            }
+        }
+        // Slow path: an escape forces an owned decode.
+        let mut s = String::with_capacity(16);
+        s.push_str(span_str(self.buf, start, i, ascii)?);
+        self.pos = i;
+        loop {
+            // Copy the raw run up to the next escape or close quote.
+            let run_start = self.pos;
+            let mut run_ascii = true;
+            while self.pos < self.buf.len() && !matches!(self.buf[self.pos], b'"' | b'\\') {
+                if self.buf[self.pos] >= 0x80 {
+                    run_ascii = false;
+                }
+                self.pos += 1;
+            }
+            s.push_str(span_str(self.buf, run_start, self.pos, run_ascii)?);
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(Cow::Owned(s)),
+                _ => match self.bump() {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'b') => s.push('\u{8}'),
+                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        if (0xD800..0xDC00).contains(&cp) {
+                            // High surrogate: require a \uXXXX low mate.
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("unpaired surrogate"));
+                            }
+                            let low = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&low) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (low - 0xDC00);
+                            s.push(char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))?);
+                        } else if (0xDC00..0xE000).contains(&cp) {
+                            return Err(self.err("unpaired low surrogate"));
+                        } else {
+                            s.push(char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?);
+                        }
+                    }
+                    _ => return Err(self.err("invalid escape")),
+                },
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.pos + 4 > self.buf.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let mut v = 0u32;
+        for &b in &self.buf[self.pos..self.pos + 4] {
+            let d = (b as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err("invalid \\u escape"))?;
+            v = (v << 4) | d;
+        }
+        self.pos += 4;
+        Ok(v)
+    }
+
+    /// Consume one complete JSON value without materializing it.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'n') => self.skip_literal("null"),
+            Some(b't') => self.skip_literal("true"),
+            Some(b'f') => self.skip_literal("false"),
+            Some(b'"') => self.skip_string(),
+            Some(b'-' | b'0'..=b'9') => self.skip_number(),
+            Some(b'[') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(b',') => continue,
+                        Some(b']') => return Ok(()),
+                        _ => return Err(self.err("expected ',' or ']' in array")),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_string()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(b',') => continue,
+                        Some(b'}') => return Ok(()),
+                        _ => return Err(self.err("expected ',' or '}' in object")),
+                    }
+                }
+            }
+            Some(c) => Err(self.err(format!("unexpected character '{}'", c as char))),
+        }
+    }
+
+    fn skip_literal(&mut self, lit: &str) -> Result<(), JsonError> {
+        if self.buf[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(self.err(format!("invalid literal, expected '{lit}'")))
+        }
+    }
+
+    /// Scan past a string without decoding. Escapes are skipped as
+    /// two-byte pairs without validation (the owned `skip_string` rule),
+    /// but the raw span is still UTF-8-checked: skipped values must not
+    /// smuggle invalid bytes past the deferred validation.
+    fn skip_string(&mut self) -> Result<(), JsonError> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        let mut ascii = true;
+        while self.pos < self.buf.len() {
+            match self.buf[self.pos] {
+                b'"' => {
+                    span_str(self.buf, start, self.pos, ascii)?;
+                    self.pos += 1;
+                    return Ok(());
+                }
+                b'\\' => {
+                    // The escaped byte is jumped over — it still counts
+                    // toward the span's ASCII-ness.
+                    if self.buf.get(self.pos + 1).is_some_and(|&b| b >= 0x80) {
+                        ascii = false;
+                    }
+                    self.pos += 2;
+                }
+                b => {
+                    if b >= 0x80 {
+                        ascii = false;
+                    }
+                    self.pos += 1;
+                }
+            }
+        }
+        Err(self.err("unterminated string"))
+    }
+
+    /// Scan one number with the owned parser's exact state machine and
+    /// reject what `f64` parsing rejects, so malformed numbers error
+    /// identically on both paths.
+    fn skip_number(&mut self) -> Result<(), JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        let text = span_str(self.buf, start, self.pos, true)?;
+        if text.parse::<f64>().is_err() {
+            return Err(JsonError {
+                offset: start,
+                message: format!("invalid number '{text}'"),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse1(buf: &[u8], fields: &[&str]) -> Vec<Vec<Option<String>>> {
+        let out = parse_shard_projected(buf, fields).unwrap();
+        (0..out.rows)
+            .map(|r| out.cols.iter().map(|c| c[r].as_deref().map(String::from)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn borrows_unescaped_allocates_escaped() {
+        let buf = br#"{"title": "plain span", "abstract": "got \"quotes\""}"#;
+        let out = parse_shard_projected(buf, &["title", "abstract"]).unwrap();
+        assert!(matches!(out.cols[0][0], Some(Cow::Borrowed("plain span"))));
+        assert!(matches!(out.cols[1][0], Some(Cow::Owned(_))));
+        assert_eq!(out.cols[1][0].as_deref(), Some("got \"quotes\""));
+    }
+
+    #[test]
+    fn non_ascii_borrows_after_validation() {
+        let buf = "{\"title\": \"naïve Σ café\"}".as_bytes();
+        let out = parse_shard_projected(buf, &["title"]).unwrap();
+        assert!(matches!(out.cols[0][0], Some(Cow::Borrowed("naïve Σ café"))));
+    }
+
+    #[test]
+    fn layouts_match_owned_shapes() {
+        // Array layout.
+        let rows = parse1(br#"[{"t": "a"}, {"t": "b"}]"#, &["t"]);
+        assert_eq!(rows, vec![vec![Some("a".into())], vec![Some("b".into())]]);
+        // JSONL with blank and whitespace-only lines.
+        let rows = parse1(b"{\"t\": \"a\"}\n\n   \n{\"t\": \"b\"}\n", &["t"]);
+        assert_eq!(rows.len(), 2);
+        // Single object.
+        let rows = parse1(br#"{"t": "only"}"#, &["t"]);
+        assert_eq!(rows, vec![vec![Some("only".into())]]);
+        // Empty array / empty input.
+        assert!(parse1(b"[]", &["t"]).is_empty());
+        assert!(parse1(b"", &["t"]).is_empty());
+        assert!(parse1(b"\n  \n", &["t"]).is_empty());
+    }
+
+    #[test]
+    fn projection_skips_and_null_rules() {
+        let rows = parse1(
+            br#"{"x": [1, {"y": "n}]"}], "t": "kept", "z": null, "w": 1e-3}
+{"t": 42}
+{"t": null}"#,
+            &["t"],
+        );
+        assert_eq!(rows[0][0].as_deref(), Some("kept"));
+        assert_eq!(rows[1][0], None); // non-string → None
+        assert_eq!(rows[2][0], None); // null → None
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        let rows = parse1(br#"{"t": "😀!"}"#, &["t"]);
+        assert_eq!(rows[0][0].as_deref(), Some("😀!"));
+        assert!(parse_shard_projected(br#"{"t": "\ud83d"}"#, &["t"]).is_err());
+        assert!(parse_shard_projected(br#"{"t": "\ude00"}"#, &["t"]).is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_errors_everywhere() {
+        // In an unescaped value span.
+        assert!(parse_shard_projected(b"{\"t\": \"a\xff b\"}", &["t"]).is_err());
+        // In a *skipped* string value.
+        assert!(parse_shard_projected(b"{\"x\": \"a\xff b\", \"t\": \"ok\"}", &["t"]).is_err());
+        // In a key.
+        assert!(parse_shard_projected(b"{\"k\xff\": 1, \"t\": \"ok\"}", &["t"]).is_err());
+        // Valid multi-byte UTF-8 in a skipped string is fine.
+        let rows = parse1("{\"x\": \"naïve\", \"t\": \"ok\"}".as_bytes(), &["t"]);
+        assert_eq!(rows[0][0].as_deref(), Some("ok"));
+    }
+
+    #[test]
+    fn truncated_records_error() {
+        for bad in [
+            &b"{\"t\": \"unterminated"[..],
+            b"{\"t\": ",
+            b"{\"t\"",
+            b"[{\"t\": \"a\"}",
+            b"{\"t\": \"a\"",
+            b"{\"t\": \"a\\",
+        ] {
+            assert!(parse_shard_projected(bad, &["t"]).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn error_offsets_are_global() {
+        // JSONL: error on line 2 must point past line 1.
+        let e = parse_shard_projected(b"{\"ok\": 1}\n{bad}\n", &["t"]).unwrap_err();
+        assert!(e.offset > 9, "offset {} should point into line 2", e.offset);
+    }
+
+    #[test]
+    fn embedded_nul_is_preserved() {
+        let rows = parse1(b"{\"t\": \"a\x00b\"}", &["t"]);
+        assert_eq!(rows[0][0].as_deref(), Some("a\0b"));
+        let rows = parse1(br#"{"t": "a\u0000b"}"#, &["t"]);
+        assert_eq!(rows[0][0].as_deref(), Some("a\0b"));
+    }
+
+    #[test]
+    fn duplicate_key_last_string_wins_nonstring_ignored() {
+        let rows = parse1(br#"{"t": "first", "t": "second"}"#, &["t"]);
+        assert_eq!(rows[0][0].as_deref(), Some("second"));
+        // A later non-string duplicate leaves the earlier value.
+        let rows = parse1(br#"{"t": "kept", "t": 7}"#, &["t"]);
+        assert_eq!(rows[0][0].as_deref(), Some("kept"));
+    }
+}

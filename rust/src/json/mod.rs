@@ -3,14 +3,22 @@
 //! vendored dependency closure) — and sized for what the pipeline needs:
 //! CORE-schema metadata records, JSON-array files and JSON-lines files.
 //!
-//! The parser is used on the ingestion hot path, so it avoids
-//! recursion-per-char, borrows the input for scanning, and only allocates
-//! for the values that survive (strings, arrays, objects).
+//! Two parsers share this substrate:
+//!
+//! - [`cursor`] — the ingestion hot path: a zero-copy byte-slice cursor
+//!   over raw shard bytes that yields projected columns as borrowed
+//!   [`std::borrow::Cow`] cells ([`parse_shard_projected`]);
+//! - [`parse`]/[`parse_document_projected`] — the owned recursive-descent
+//!   parser over `&str`, the generic fallback for config, report and
+//!   artifact JSON (and the reference the cursor is pinned against in
+//!   `rust/tests/cursor_parity.rs`).
 
+pub mod cursor;
 mod parse;
 mod projected;
 mod write;
 
+pub use cursor::{parse_shard_projected, ProjectedColumns};
 pub use parse::{parse, parse_document, Parser};
 pub use projected::parse_document_projected;
 pub use write::{escape_into, write_value};

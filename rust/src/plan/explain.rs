@@ -142,8 +142,8 @@ mod tests {
         let text = explain_stream(&plan, &opts).unwrap();
         assert!(text.contains("== Physical Plan (streaming) =="), "{text}");
         assert!(text.contains("StreamPipeline"), "{text}");
-        assert!(text.contains("readers: 1 x parse+project"), "{text}"); // clamped: 0 files
-        assert!(text.contains("workers: 3 x op-program"), "{text}");
+        assert!(text.contains("readers: 1 x read-bytes"), "{text}"); // clamped: 0 files
+        assert!(text.contains("workers: 3 x parse+project [title, abstract] + op-program"), "{text}");
         assert!(text.contains("FusedStringStage"), "{text}");
     }
 }

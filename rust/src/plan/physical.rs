@@ -1,10 +1,13 @@
 //! Physical execution: the whole lowered plan runs inside **one**
 //! parallel pass over the shard files. Each worker, per file:
-//! parse+project → null mask → positional sample → 128-bit dedup keys →
-//! (fused) cleaning sweeps → empty-string sweep. The driver is left with
-//! the only inherently ordered work: the first-occurrence-wins dedup
-//! merge, the global `Limit` budget, and the final extend into a
-//! contiguous [`LocalFrame`].
+//! read bytes → zero-copy cursor parse ([`crate::json::cursor`]) →
+//! null mask / positional sample / 128-bit dedup keys / limit cap over
+//! *borrowed* cells still pointing into the shard buffer → materialize
+//! survivors → (fused) cleaning sweeps → empty-string sweep. Rows the
+//! leading filters drop are never copied out of the raw buffer. The
+//! driver is left with the only inherently ordered work: the
+//! first-occurrence-wins dedup merge, the global `Limit` budget, and
+//! the final extend into a contiguous [`LocalFrame`].
 //!
 //! Plans carrying an `Estimator` stage ([`LogicalOp::Fit`]) lower to a
 //! **two-pass strategy**: pass 1 runs the pre-estimator program over the
@@ -36,10 +39,12 @@ use super::stream::{StreamExecutor, StreamOptions};
 use crate::cache::xxh64;
 use crate::driver::{CLEANING, INGESTION, POST_CLEANING, PRE_CLEANING};
 use crate::engine::Executor;
-use crate::frame::{hash_row_wide, Field, LocalFrame, Partition, Schema};
+use crate::frame::{hash_cells_wide, hash_row_wide, Column, Field, LocalFrame, Partition, Schema};
+use crate::json::cursor::ProjectedColumns;
 use crate::metrics::StageTimes;
 use crate::pipeline::{Estimator, Transformer};
 use crate::Result;
+use std::borrow::Cow;
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -339,6 +344,133 @@ pub(super) struct PartResult {
     pub(super) sampled_out: usize,
     pub(super) limited_out: usize,
     pub(super) phases: Phases,
+}
+
+/// Mutable op-program state threaded from the raw (borrowed-cell)
+/// prefix into the owned continuation (`run_ops_from`): counters,
+/// provenance ids and hashed key slots accumulate across the handoff
+/// so the two halves together report exactly what one owned pass would.
+struct OpState {
+    phases: Phases,
+    /// Current rows → parsed-row provenance ids; `Some` only when the
+    /// plan dedups (they let the merge register first occurrences that
+    /// later filters removed).
+    ids: Option<Vec<u32>>,
+    slots: Vec<KeySlot>,
+    rows_ingested: usize,
+    nulls_dropped: usize,
+    empties_dropped: usize,
+    sampled_out: usize,
+    limited_out: usize,
+}
+
+impl OpState {
+    fn new(rows_ingested: usize, n_distinct: usize, ingest_span: Duration) -> Self {
+        OpState {
+            phases: Phases { ingest: ingest_span, ..Default::default() },
+            ids: (n_distinct > 0).then(|| (0..rows_ingested as u32).collect()),
+            slots: Vec::new(),
+            rows_ingested,
+            nulls_dropped: 0,
+            empties_dropped: 0,
+            sampled_out: 0,
+            limited_out: 0,
+        }
+    }
+}
+
+/// A cursor-parsed shard still borrowing the raw byte buffer: projected
+/// columns of `Cow` cells. The raw-capable prefix ops (null filter,
+/// dedup-key hashing, positional sample, limit cap) run directly on
+/// these borrowed cells, so rows they drop are never copied out of the
+/// shard buffer; `materialize` builds the owned [`Partition`] from
+/// whatever survived.
+struct RawPart<'a> {
+    cols: Vec<Vec<Option<Cow<'a, str>>>>,
+    rows: usize,
+}
+
+impl<'a> RawPart<'a> {
+    fn cell(&self, ci: usize, ri: usize) -> Option<&str> {
+        self.cols[ci][ri].as_deref()
+    }
+
+    /// Drop rows with a null in any of the listed columns; returns how
+    /// many were dropped. Mirrors `frame::null_mask` + `filter_by_mask`.
+    fn null_filter(&mut self, idxs: &[usize], ids: Option<&mut Vec<u32>>) -> usize {
+        let mask: Vec<bool> = (0..self.rows)
+            .map(|i| !idxs.iter().any(|&ci| self.cols[ci][i].is_none()))
+            .collect();
+        let before = self.rows;
+        self.filter(&mask, ids);
+        before - self.rows
+    }
+
+    /// Wide hash of the listed key columns per row — cell-for-cell the
+    /// same encoding as [`hash_row_wide`] on a materialized partition
+    /// (pinned by a test in `frame::ops`).
+    fn hash_keys(&self, idxs: &[usize]) -> Vec<u128> {
+        (0..self.rows)
+            .map(|i| hash_cells_wide(idxs.iter().map(|&ci| self.cell(ci, i))))
+            .collect()
+    }
+
+    /// Positional Bernoulli sample, same keep function as the owned op.
+    fn sample_filter(
+        &mut self,
+        fraction: f64,
+        seed: u64,
+        shard: usize,
+        ids: Option<&mut Vec<u32>>,
+    ) -> usize {
+        let mask: Vec<bool> = (0..self.rows).map(|i| sample_keeps(seed, shard, i, fraction)).collect();
+        let before = self.rows;
+        self.filter(&mask, ids);
+        before - self.rows
+    }
+
+    /// Per-shard limit cap; returns how many rows were cut.
+    fn truncate(&mut self, n: usize, ids: Option<&mut Vec<u32>>) -> usize {
+        if self.rows <= n {
+            return 0;
+        }
+        let cut = self.rows - n;
+        for col in &mut self.cols {
+            col.truncate(n);
+        }
+        if let Some(ids) = ids {
+            ids.truncate(n);
+        }
+        self.rows = n;
+        cut
+    }
+
+    fn filter(&mut self, mask: &[bool], ids: Option<&mut Vec<u32>>) {
+        let kept = mask.iter().filter(|&&k| k).count();
+        if kept == self.rows {
+            return;
+        }
+        for col in &mut self.cols {
+            retain_by_mask(col, mask);
+        }
+        if let Some(ids) = ids {
+            retain_by_mask(ids, mask);
+        }
+        self.rows = kept;
+    }
+
+    /// Build the owned partition — the first (and only) copy out of the
+    /// shard buffer for every surviving cell.
+    fn materialize(self) -> Partition {
+        Partition::new(
+            self.cols
+                .into_iter()
+                .map(|col| {
+                    Column::from_strs(col.into_iter().map(|c| c.map(Cow::into_owned)).collect())
+                })
+                .collect(),
+        )
+    }
 }
 
 /// Result of executing a plan: the collected frame plus the stage-time
@@ -857,39 +989,134 @@ impl PhysicalPlan {
         total > 0 && (max as f64) / (total as f64) > 0.25
     }
 
-    /// The whole per-shard program, run by one worker: parse + op chain.
-    /// Shared with the multi-process executor's worker entry point
-    /// (`super::process::worker_main`), so an in-process worker thread
-    /// and a worker OS process run the exact same code per shard.
+    /// The whole per-shard program, run by one worker: read + cursor
+    /// parse + op chain. Shared with the multi-process executor's worker
+    /// entry point (`super::process::worker_main`), so an in-process
+    /// worker thread and a worker OS process run the exact same code
+    /// per shard.
     pub(super) fn run_partition(&self, shard: usize, path: &Path) -> Result<PartResult> {
+        let mut buf = Vec::new();
+        self.run_partition_buffered(shard, path, &mut buf)
+    }
+
+    /// Buffer-reusing variant of [`Self::run_partition`]: the shard's
+    /// raw bytes land in `buf` (cleared first), the byte cursor parses
+    /// them in place, and the leading filter ops run over borrowed
+    /// cells before anything is materialized. Callers that loop shards
+    /// on one thread (the process worker) pass one buffer so
+    /// steady-state reads reuse its allocation.
+    pub(super) fn run_partition_buffered(
+        &self,
+        shard: usize,
+        path: &Path,
+        buf: &mut Vec<u8>,
+    ) -> Result<PartResult> {
         let t0 = Instant::now();
-        let part = crate::ingest::spark::read_shard(path, &self.fields)?;
-        Ok(self.run_ops(part, shard, t0.elapsed()))
+        crate::ingest::spark::read_shard_into(path, buf)?;
+        self.run_shard_bytes(shard, path, buf, t0.elapsed())
+    }
+
+    /// Cursor-parse an already-read shard buffer and run the program.
+    /// The streaming executor's workers call this with buffers its
+    /// reader stage produced; `read_span` is the reader-side I/O time
+    /// to attribute to ingestion, `path` is error context only.
+    pub(super) fn run_shard_bytes(
+        &self,
+        shard: usize,
+        path: &Path,
+        bytes: &[u8],
+        read_span: Duration,
+    ) -> Result<PartResult> {
+        let t0 = Instant::now();
+        let field_refs: Vec<&str> = self.fields.iter().map(|s| s.as_str()).collect();
+        let raw = crate::json::parse_shard_projected(bytes, &field_refs)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        Ok(self.run_raw(raw, shard, read_span + t0.elapsed()))
+    }
+
+    /// Run the program over a freshly cursor-parsed shard: the leading
+    /// raw-capable ops (null filter, dedup keys, positional sample,
+    /// limit cap) execute directly on the borrowed `Cow` cells, so rows
+    /// they drop are never copied out of the shard buffer; the first
+    /// transformer stage (or empty-filter) forces materialization and
+    /// the rest of the program continues on the owned partition.
+    pub(super) fn run_raw(
+        &self,
+        raw: ProjectedColumns<'_>,
+        shard: usize,
+        ingest_span: Duration,
+    ) -> PartResult {
+        let mut raw = RawPart { rows: raw.rows, cols: raw.cols };
+        let mut state = OpState::new(raw.rows, self.n_distinct, ingest_span);
+        let mut consumed = 0usize;
+        let t_raw = Instant::now();
+        for op in &self.ops {
+            match op {
+                PartitionOp::NullFilter { idxs } => {
+                    state.nulls_dropped += raw.null_filter(idxs, state.ids.as_mut());
+                }
+                PartitionOp::HashKeys { slot, idxs } => {
+                    debug_assert_eq!(*slot, state.slots.len(), "HashKeys slots out of order");
+                    state.slots.push(KeySlot {
+                        keys: raw.hash_keys(idxs),
+                        ids: state.ids.as_ref().expect("dedup plans track ids").clone(),
+                    });
+                }
+                PartitionOp::SampleFilter { fraction, seed } => {
+                    state.sampled_out +=
+                        raw.sample_filter(*fraction, *seed, shard, state.ids.as_mut());
+                }
+                PartitionOp::LimitCap { n } => {
+                    state.limited_out += raw.truncate(*n, state.ids.as_mut());
+                }
+                PartitionOp::Stage { .. } | PartitionOp::EmptyFilter { .. } => break,
+            }
+            consumed += 1;
+        }
+        state.phases.pre += t_raw.elapsed();
+        // Materializing the surviving cells is the column-build work
+        // `read_shard` used to do at parse time — ingestion's bill.
+        let t_mat = Instant::now();
+        let part = raw.materialize();
+        state.phases.ingest += t_mat.elapsed();
+        self.run_ops_from(part, shard, consumed, state)
     }
 
     /// The op chain over one already-parsed partition (or chunk of one).
     /// `shard` is the shard index (used only by `SampleFilter`);
     /// `ingest_span` is the parse time to attribute to the ingestion
     /// stage — measured by the caller when parsing happened elsewhere
-    /// (the streaming executor's reader stage, the re-chunk path).
+    /// (the re-chunk path, tests feeding synthetic partitions).
     pub(super) fn run_ops(
         &self,
-        mut part: Partition,
+        part: Partition,
         shard: usize,
         ingest_span: Duration,
     ) -> PartResult {
-        let mut phases = Phases { ingest: ingest_span, ..Default::default() };
-        let rows_ingested = part.num_rows();
-        // Provenance ids (current rows → parsed-row domain), tracked
-        // only when the plan dedups: they let the merge register first
-        // occurrences that later filters removed.
-        let mut ids: Option<Vec<u32>> =
-            (self.n_distinct > 0).then(|| (0..rows_ingested as u32).collect());
-        let mut slots: Vec<KeySlot> = Vec::new();
-        let mut nulls_dropped = 0usize;
-        let mut empties_dropped = 0usize;
-        let mut sampled_out = 0usize;
-        let mut limited_out = 0usize;
+        let state = OpState::new(part.num_rows(), self.n_distinct, ingest_span);
+        self.run_ops_from(part, shard, 0, state)
+    }
+
+    /// Continue the op program at `self.ops[start..]` over an owned
+    /// partition, with `state` carrying whatever the raw prefix already
+    /// did (counters, provenance ids, hashed key slots, phase spans).
+    fn run_ops_from(
+        &self,
+        mut part: Partition,
+        shard: usize,
+        start: usize,
+        state: OpState,
+    ) -> PartResult {
+        let OpState {
+            mut phases,
+            mut ids,
+            mut slots,
+            rows_ingested,
+            mut nulls_dropped,
+            mut empties_dropped,
+            mut sampled_out,
+            mut limited_out,
+        } = state;
 
         let apply_mask = |part: &mut Partition, ids: &mut Option<Vec<u32>>, mask: &[bool]| {
             *part = part.filter_by_mask(mask);
@@ -898,7 +1125,7 @@ impl PhysicalPlan {
             }
         };
 
-        for op in &self.ops {
+        for op in &self.ops[start..] {
             match op {
                 PartitionOp::NullFilter { idxs } => {
                     let t = Instant::now();
@@ -1076,9 +1303,14 @@ impl PhysicalPlan {
         }
         let mut s = String::new();
         let _ = writeln!(s, "StreamPipeline [{} file-partitions]", self.files.len());
-        let _ = writeln!(s, "  readers: {readers} x parse+project [{}]", self.fields.join(", "));
-        let _ = writeln!(s, "  queue:   bounded({queue_cap} partitions, backpressure)");
-        let _ = writeln!(s, "  workers: {workers} x op-program");
+        let adaptive = if opts.readers == 0 { " (adaptive split)" } else { "" };
+        let _ = writeln!(s, "  readers: {readers} x read-bytes{adaptive}");
+        let _ = writeln!(s, "  queue:   bounded({queue_cap} raw shard buffers, backpressure)");
+        let _ = writeln!(
+            s,
+            "  workers: {workers} x parse+project [{}] + op-program",
+            self.fields.join(", ")
+        );
         for line in self.op_lines() {
             let _ = writeln!(s, "    {line}");
         }

@@ -1026,12 +1026,15 @@ fn run_job(job: &[u8]) -> Result<Vec<u8>> {
     buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
     buf.extend_from_slice(&worker_id.to_le_bytes());
     buf.push(mode);
+    // One shard-byte buffer per worker process: each read reuses the
+    // high-water allocation instead of growing a fresh Vec per shard.
+    let mut shard_buf: Vec<u8> = Vec::new();
     match fit {
         None => {
             buf.extend_from_slice(&(shards.len() as u32).to_le_bytes());
             for (idx, path) in &shards {
                 let r = plan
-                    .run_partition(*idx as usize, path)
+                    .run_partition_buffered(*idx as usize, path, &mut shard_buf)
                     .with_context(|| format!("shard {idx}"))?;
                 encode_part_result(&mut buf, *idx, &r);
             }
@@ -1043,7 +1046,7 @@ fn run_job(job: &[u8]) -> Result<Vec<u8>> {
                 .ok_or_else(|| anyhow::anyhow!("estimator {} has no accumulator", est.name()))?;
             for (idx, path) in &shards {
                 let r = plan
-                    .run_partition(*idx as usize, path)
+                    .run_partition_buffered(*idx as usize, path, &mut shard_buf)
                     .with_context(|| format!("shard {idx}"))?;
                 if r.part.num_rows() > 0 {
                     anyhow::ensure!(

@@ -1,16 +1,21 @@
-//! Streaming plan execution: overlap shard **parsing** with shard
-//! **cleaning**.
+//! Streaming plan execution: overlap shard **reading** with shard
+//! **parsing + cleaning**.
 //!
 //! The fused single pass ([`PhysicalPlan::execute`]) already removed the
-//! barriers between the paper's stages, but it still runs parse and
-//! clean for one shard inside the same worker task — ingest and compute
+//! barriers between the paper's stages, but it still runs read, parse
+//! and clean for one shard inside the same worker task — I/O and compute
 //! remain serialized *per shard*. This module splits them into a
 //! producer/consumer pipeline, the overlap the paper (and Spark's own
-//! ingestion) attributes its throughput to:
+//! ingestion) attributes its throughput to. Since the zero-copy cursor
+//! ([`crate::json::cursor`]) parses a raw byte buffer in place, the
+//! reader stage is pure I/O — it ships whole shard buffers and the
+//! workers cursor-parse them next to the op program, so the CPU-heavy
+//! parse scales with the (larger) worker pool:
 //!
 //! ```text
 //! readers (I/O-bound)        bounded queue         workers (CPU-bound)
-//! parse shard i+1..i+k  -->  cap partitions  -->   op program on shard i
+//! read shard i+1..i+k   -->  cap raw buffers -->   cursor parse + op
+//!                                                  program on shard i
 //!                                                       |
 //!                                    driver: reorder buffer -> ordered
 //!                                    dedup merge -> collect(LocalFrame)
@@ -18,13 +23,21 @@
 //!
 //! The queue reuses the backpressure `sync_channel` pattern from
 //! [`crate::ingest::spark`]: readers stall when they get more than
-//! `queue_cap` partitions ahead of the workers, bounding how far
-//! *parsing* can run ahead of cleaning. Cleaned results, by contrast,
+//! `queue_cap` shard buffers ahead of the workers, bounding how far
+//! *reading* can run ahead of cleaning. Cleaned results, by contrast,
 //! are not memory-bounded: the driver drains its channel eagerly into a
 //! reorder buffer, so under extreme skew the cleaned shards waiting on
 //! one slow predecessor accumulate there — the same O(corpus) driver
 //! footprint the single pass has when it collects its result vector,
 //! and `ingest::spark`'s collector has for parsed partitions.
+//!
+//! **Adaptive reader split.** With `readers: 0` (the default) the
+//! pipeline does not guess the I/O-vs-CPU balance from core counts: the
+//! driver runs shard 0 inline, timing its read separately from its
+//! parse+clean, and sizes the reader pool from the observed read share
+//! ([`adaptive_readers`] — ceil(cores x read-share), clamped to
+//! [1, cores/2]). The probe's result is fed to the sink *first*, so
+//! shard order — and therefore output bytes — are unchanged.
 //!
 //! **Ordering.** The ordered first-occurrence-wins dedup merge requires
 //! results in shard order, but workers finish out of order. The driver
@@ -45,7 +58,6 @@
 //! ```
 
 use super::physical::{Merger, PartResult, PhysicalPlan, PlanOutput};
-use crate::frame::Partition;
 use crate::Result;
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -58,14 +70,17 @@ use std::time::{Duration, Instant};
 /// the backpressure window between them.
 #[derive(Debug, Clone)]
 pub struct StreamOptions {
-    /// Parse/reader threads (0 = a quarter of the logical cores, at
-    /// least one). Readers are I/O-bound, so they need far fewer threads
-    /// than the cleaning workers.
+    /// Reader (I/O) threads. `0` = adaptive: the driver probes the
+    /// first shard, measures its read-vs-parse+clean ratio, and sizes
+    /// the pool as ceil(cores x read-share) clamped to [1, cores/2]
+    /// (see [`adaptive_readers`]). Readers only read bytes — the
+    /// cursor parse happens on the workers — so they need far fewer
+    /// threads than the cleaning pool.
     pub readers: usize,
-    /// Cleaning worker threads (0 = remaining logical cores).
+    /// Parse + cleaning worker threads (0 = remaining logical cores).
     pub workers: usize,
-    /// Bounded-queue capacity in partitions, for both the parsed queue
-    /// and the cleaned queue (backpressure window; minimum 1).
+    /// Bounded-queue capacity in raw shard buffers, for both the read
+    /// queue and the cleaned queue (backpressure window; minimum 1).
     pub queue_cap: usize,
 }
 
@@ -83,8 +98,12 @@ impl StreamOptions {
 
     /// Resolve the knobs against a concrete shard count, returning
     /// `(readers, workers, queue_cap)`. Zero values auto-size from the
-    /// logical core count; readers are clamped to the shard count so no
-    /// reader thread is spawned with nothing to parse.
+    /// logical core count — for `readers: 0` this static quarter-of-cores
+    /// figure is only the *estimate* used by EXPLAIN and the fallback
+    /// decision; the pipeline itself replaces it with the measured
+    /// [`adaptive_readers`] split once the first shard's timings are in.
+    /// Readers are clamped to the shard count so no reader thread is
+    /// spawned with nothing to read.
     pub fn resolve(&self, n_files: usize) -> (usize, usize, usize) {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
         let readers = if self.readers == 0 { (cores / 4).max(1) } else { self.readers };
@@ -99,9 +118,10 @@ impl StreamOptions {
 }
 
 /// Two-stage streaming executor over a lowered [`PhysicalPlan`]: a
-/// bounded parse/producer stage feeding a consumer pool that runs the
-/// per-partition op program (null mask → dedup keys → fused cleaning →
-/// empty sweep) while later shards are still parsing.
+/// bounded byte-reader stage feeding a consumer pool that cursor-parses
+/// each raw shard buffer and runs the per-partition op program (null
+/// mask → dedup keys → fused cleaning → empty sweep) while later shards
+/// are still being read.
 ///
 /// Construction is cheap — the executor is just its options; threads
 /// live only for the duration of one [`StreamExecutor::execute`] call.
@@ -181,9 +201,11 @@ impl StreamExecutor {
         self.run_pipeline(plan, sink)
     }
 
-    /// The two-stage pipeline itself: a bounded reader pool parsing
-    /// shards, a worker pool running the op program, and the driver's
-    /// reorder buffer releasing contiguous shard prefixes to `sink`.
+    /// The two-stage pipeline itself: a bounded reader pool shipping raw
+    /// shard buffers, a worker pool cursor-parsing them and running the
+    /// op program, and the driver's reorder buffer releasing contiguous
+    /// shard prefixes to `sink`. With `readers: 0` the driver first runs
+    /// shard 0 inline as the adaptive-split probe.
     fn run_pipeline(
         &self,
         plan: &PhysicalPlan,
@@ -191,21 +213,46 @@ impl StreamExecutor {
     ) -> Result<()> {
         let files: Vec<PathBuf> = plan.files().to_vec();
         let n = files.len();
-        let (readers, workers, queue_cap) = self.opts.resolve(n);
+        let (mut readers, _, queue_cap) = self.opts.resolve(n);
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(2);
+
+        // Adaptive reader split: run shard 0 on the driver, timing its
+        // read separately from its parse+clean, and size the reader
+        // pool from the observed ratio. Feeding the probe's result to
+        // the sink before the pipeline starts preserves shard order, so
+        // output bytes are identical to any fixed split.
+        let mut start = 0usize;
+        if self.opts.readers == 0 && n >= 2 {
+            let t_read = Instant::now();
+            let bytes = crate::ingest::spark::read_shard_bytes(&files[0])?;
+            let read_span = t_read.elapsed();
+            let t_work = Instant::now();
+            let probe = plan.run_shard_bytes(0, &files[0], &bytes, read_span)?;
+            let work_span = t_work.elapsed();
+            sink(probe)?;
+            readers = adaptive_readers(cores, read_span, work_span).min(n - 1);
+            start = 1;
+        }
+        let workers = if self.opts.workers == 0 {
+            cores.saturating_sub(readers).max(1)
+        } else {
+            self.opts.workers
+        };
 
         // Reader work queue, indexed so the driver can restore shard
         // order after out-of-order completion.
         let jobs: Mutex<VecDeque<(usize, PathBuf)>> =
-            Mutex::new(files.into_iter().enumerate().collect());
+            Mutex::new(files.iter().cloned().enumerate().skip(start).collect());
+        let files = &files;
         // Set when the driver hits a terminal error: readers skip the
-        // remaining shards instead of parsing work nobody will merge.
+        // remaining shards instead of reading work nobody will merge.
         let abort = AtomicBool::new(false);
 
-        // Stage 1 -> stage 2: parsed partitions (with their parse span),
-        // bounded for backpressure — this is the knob that keeps parsing
+        // Stage 1 -> stage 2: raw shard buffers (with their read span),
+        // bounded for backpressure — this is the knob that keeps reading
         // from racing arbitrarily far ahead of cleaning.
         let (parsed_tx, parsed_rx) =
-            sync_channel::<(usize, Result<(Partition, Duration)>)>(queue_cap);
+            sync_channel::<(usize, Result<(Vec<u8>, Duration)>)>(queue_cap);
         let parsed_rx = Mutex::new(parsed_rx);
         // Stage 2 -> driver: cleaned shard results. Bounded only to keep
         // the handoff allocation small — the driver drains it eagerly
@@ -217,7 +264,6 @@ impl StreamExecutor {
                 let jobs = &jobs;
                 let abort = &abort;
                 let parsed_tx = parsed_tx.clone();
-                let fields = plan.fields();
                 scope.spawn(move || loop {
                     if abort.load(Ordering::Relaxed) {
                         break;
@@ -225,9 +271,9 @@ impl StreamExecutor {
                     let job = jobs.lock().unwrap().pop_front();
                     let Some((idx, path)) = job else { break };
                     let t0 = Instant::now();
-                    let parsed = crate::ingest::spark::read_shard(&path, fields)
-                        .map(|part| (part, t0.elapsed()));
-                    if parsed_tx.send((idx, parsed)).is_err() {
+                    let read = crate::ingest::spark::read_shard_bytes(&path)
+                        .map(|bytes| (bytes, t0.elapsed()));
+                    if parsed_tx.send((idx, read)).is_err() {
                         break;
                     }
                 });
@@ -239,13 +285,13 @@ impl StreamExecutor {
                 let abort = &abort;
                 let done_tx = done_tx.clone();
                 scope.spawn(move || {
-                    // After the driver bails, keep draining the parsed
+                    // After the driver bails, keep draining the read
                     // queue (without cleaning) so blocked readers can
                     // finish their in-flight send and exit.
                     let mut drain = false;
                     loop {
                         let msg = parsed_rx.lock().unwrap().recv();
-                        let Ok((idx, parsed)) = msg else { break };
+                        let Ok((idx, read)) = msg else { break };
                         if drain {
                             continue;
                         }
@@ -253,9 +299,11 @@ impl StreamExecutor {
                         // that unwound here would stop draining, leaving
                         // readers blocked mid-send and the scope join
                         // hung. Convert to an error the driver reports.
-                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                            || parsed.map(|(part, span)| plan.run_ops(part, idx, span)),
-                        ))
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            read.and_then(|(bytes, span)| {
+                                plan.run_shard_bytes(idx, &files[idx], &bytes, span)
+                            })
+                        }))
                         .unwrap_or_else(|_| {
                             Err(anyhow::anyhow!("worker panicked while cleaning shard {idx}"))
                         });
@@ -273,7 +321,7 @@ impl StreamExecutor {
             // pools — the sink's work on shard i overlaps the cleaning
             // of i+1 and the parsing of i+2.
             let mut pending: Vec<Option<PartResult>> = (0..n).map(|_| None).collect();
-            let mut next = 0usize;
+            let mut next = start;
             for (idx, res) in done_rx {
                 pending[idx] = Some(res?);
                 while next < n {
@@ -290,6 +338,21 @@ impl StreamExecutor {
             Ok(())
         })
     }
+}
+
+/// Size the reader pool from one observed shard: readers get the share
+/// of the core budget that matches the read share of the shard's total
+/// (read + parse+clean) time, rounded up, clamped to [1, cores/2] so
+/// neither stage is ever starved however skewed the probe was. A probe
+/// too fast to measure (both spans zero) falls back to one reader.
+pub(crate) fn adaptive_readers(cores: usize, read: Duration, work: Duration) -> usize {
+    let hi = (cores / 2).max(1);
+    let total = read.as_secs_f64() + work.as_secs_f64();
+    if total <= 0.0 {
+        return 1;
+    }
+    let share = read.as_secs_f64() / total;
+    ((cores as f64 * share).ceil() as usize).clamp(1, hi)
 }
 
 #[cfg(test)]
@@ -485,11 +548,31 @@ mod tests {
         let phys = case_study_plan(&files, "title", "abstract").optimize().lower().unwrap();
         let r = phys.render_stream(&StreamOptions { readers: 2, workers: 3, queue_cap: 8 });
         assert!(r.contains("StreamPipeline"), "{r}");
-        assert!(r.contains("readers: 2 x parse+project [title, abstract]"), "{r}");
-        assert!(r.contains("bounded(8 partitions"), "{r}");
-        assert!(r.contains("workers: 3 x op-program"), "{r}");
+        assert!(r.contains("readers: 2 x read-bytes"), "{r}");
+        assert!(!r.contains("adaptive split"), "{r}"); // explicit readers
+        assert!(r.contains("bounded(8 raw shard buffers"), "{r}");
+        assert!(r.contains("workers: 3 x parse+project [title, abstract] + op-program"), "{r}");
         assert!(r.contains("hash-keys #0 [title, abstract] (128-bit)"), "{r}");
         assert!(r.contains("reorder buffer"), "{r}");
+        // readers: 0 renders the static estimate, flagged as adaptive.
+        let r = phys.render_stream(&StreamOptions { readers: 0, workers: 3, queue_cap: 8 });
+        assert!(r.contains("adaptive split") || r.contains("fallback"), "{r}");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn adaptive_reader_split_clamps() {
+        let ms = Duration::from_millis;
+        // All-CPU probe: one reader is enough.
+        assert_eq!(adaptive_readers(8, ms(0), ms(100)), 1);
+        // All-I/O probe: capped at half the cores.
+        assert_eq!(adaptive_readers(8, ms(100), ms(0)), 4);
+        // Tiny machines still get one reader and one worker.
+        assert_eq!(adaptive_readers(1, ms(100), ms(0)), 1);
+        assert_eq!(adaptive_readers(2, ms(50), ms(50)), 1);
+        // Proportional in between: 25% read share of 16 cores -> 4.
+        assert_eq!(adaptive_readers(16, ms(25), ms(75)), 4);
+        // Unmeasurably fast probe falls back to one reader.
+        assert_eq!(adaptive_readers(8, ms(0), ms(0)), 1);
     }
 }

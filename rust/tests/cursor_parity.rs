@@ -1,0 +1,310 @@
+//! Cursor-vs-owned parser agreement — the contract that lets the
+//! zero-copy byte cursor (`json::cursor`) replace the owned projected
+//! parser on the ingestion hot path: for every shard the two parsers
+//! either produce identical projected cells or both reject the shard.
+//! Inputs here are deliberately nasty — every escape form, surrogate
+//! pairs, embedded NUL, truncated records, invalid UTF-8 inside and
+//! outside escaped spans, blank/whitespace-only lines — plus a seeded
+//! randomized sweep over a grammar both parsers must agree on.
+//!
+//! (One known, deliberate divergence is excluded from the grammar: the
+//! owned parser's `u32::from_str_radix` accepts a sign in `\u` escapes,
+//! e.g. `\u+fff`; the cursor rejects it per RFC 8259. No real corpus
+//! contains signed `\u` escapes.)
+
+use p3sapp::ingest::spark::{ingest_files, ingest_files_owned, IngestOptions};
+use p3sapp::json::{parse_document_projected, parse_shard_projected};
+
+type Rows = Vec<Vec<Option<String>>>;
+
+fn cursor_rows(buf: &[u8], fields: &[&str]) -> Result<Rows, String> {
+    parse_shard_projected(buf, fields)
+        .map(|out| {
+            (0..out.rows)
+                .map(|r| out.cols.iter().map(|c| c[r].as_deref().map(String::from)).collect())
+                .collect()
+        })
+        .map_err(|e| e.to_string())
+}
+
+fn owned_rows(input: &str, fields: &[&str]) -> Result<Rows, String> {
+    parse_document_projected(input, fields).map_err(|e| e.to_string())
+}
+
+/// Both parsers must agree: same rows, or both errors. Error *messages*
+/// are not pinned — only accept/reject and the accepted cells are.
+fn assert_agree(input: &str, fields: &[&str]) {
+    let c = cursor_rows(input.as_bytes(), fields);
+    let o = owned_rows(input, fields);
+    match (&c, &o) {
+        (Ok(cr), Ok(or)) => assert_eq!(cr, or, "projected rows diverge for {input:?}"),
+        (Err(_), Err(_)) => {}
+        _ => panic!("parsers disagree on accept/reject for {input:?}:\n cursor={c:?}\n owned={o:?}"),
+    }
+}
+
+#[test]
+fn every_escape_form_agrees() {
+    for payload in [
+        r#"quote \" here"#,
+        r#"back \\ slash"#,
+        r#"solidus \/ ok"#,
+        r#"bell \b feed \f"#,
+        r#"line \n ret \r tab \t"#,
+        r#"mixed \"\\\/\b\f\n\r\t end"#,
+        r#"hex Aé中"#,
+        r#"nul \u0000 embedded"#,
+        r#"pair 😀 smile"#,
+        r#"high edge 𐀀 low edge 􏿿"#,
+        r#"adjacent words"#,
+    ] {
+        assert_agree(&format!("{{\"title\": \"{payload}\", \"abstract\": \"x\"}}"), &[
+            "title", "abstract",
+        ]);
+        // Same payload in a *skipped* (unprojected) field.
+        assert_agree(&format!("{{\"junk\": \"{payload}\", \"title\": \"kept\"}}"), &["title"]);
+    }
+}
+
+#[test]
+fn bad_escapes_and_surrogates_reject_on_both() {
+    for bad in [
+        r#"{"t": "\x41"}"#,    // unknown escape
+        r#"{"t": "\u12"}"#,    // short \u
+        r#"{"t": "\u12g4"}"#,  // non-hex digit
+        r#"{"t": "\ud800"}"#,  // unpaired high surrogate
+        r#"{"t": "\ud800A"}"#, // high followed by non-low
+        r#"{"t": "\ude00"}"#,  // lone low surrogate
+        r#"{"t": "\"#,         // escape at EOF
+    ] {
+        assert_agree(bad, &["t"]);
+        assert!(cursor_rows(bad.as_bytes(), &["t"]).is_err(), "{bad:?}");
+    }
+}
+
+#[test]
+fn truncated_records_reject_on_both() {
+    for bad in [
+        "{", "{\"t\"", "{\"t\":", "{\"t\": \"a", "{\"t\": \"a\"", "{\"t\": \"a\",",
+        "[", "[{\"t\": \"a\"}", "[{\"t\": \"a\"},", "{\"t\": tru}", "{\"t\": nul}",
+        "{\"t\": 1e}", "{\"t\": -}", "{\"t\": [1, 2}",
+    ] {
+        assert_agree(bad, &["t"]);
+        assert!(cursor_rows(bad.as_bytes(), &["t"]).is_err(), "{bad:?}");
+    }
+}
+
+#[test]
+fn whitespace_layouts_and_blank_lines_agree() {
+    for input in [
+        "",
+        "   \n \t \n",
+        "{\"t\": \"solo\"}",
+        "  {\"t\": \"padded\"}  ",
+        "{\"t\": \"a\"}\n\n   \n{\"t\": \"b\"}\n",
+        "\n\n{\"t\": \"late start\"}",
+        "[]",
+        "  [ ]  ",
+        "[{\"t\": \"a\"}, {\"t\": \"b\"}]",
+        "[ {\"t\": \"a\"} ,\n {\"t\": \"b\"} ]",
+        // Unicode whitespace around records (owned path trims it).
+        "\u{00A0}{\"t\": \"nbsp lead\"}",
+        "{\"t\": \"nbsp trail\"}\u{00A0}",
+    ] {
+        assert_agree(input, &["t"]);
+    }
+}
+
+#[test]
+fn projection_and_duplicate_key_rules_agree() {
+    for input in [
+        // Non-string / null projected values leave the cell None.
+        "{\"t\": 42}",
+        "{\"t\": null}",
+        "{\"t\": true}",
+        "{\"t\": [1, \"not me\"]}",
+        "{\"t\": {\"nested\": \"not me\"}}",
+        // Duplicate keys: later *string* wins, later non-string ignored.
+        "{\"t\": \"first\", \"t\": \"second\"}",
+        "{\"t\": \"kept\", \"t\": 7}",
+        "{\"t\": 7, \"t\": \"kept\"}",
+        // Deeply skipped junk with brace-lookalike payloads.
+        "{\"x\": [1, {\"y\": \"n}]\"}, [null, true]], \"t\": \"kept\", \"w\": 1e-3}",
+        // Missing projected field entirely.
+        "{\"other\": \"x\"}",
+        "{}",
+    ] {
+        assert_agree(input, &["t"]);
+    }
+}
+
+#[test]
+fn number_forms_agree() {
+    for (num, ok) in [
+        ("0", true),
+        ("-0", true),
+        ("42", true),
+        ("-17", true),
+        ("3.25", true),
+        ("-0.5", true),
+        ("1e10", true),
+        ("2E-3", true),
+        ("6.02e+23", true),
+        ("1e", false),
+        ("-", false),
+        (".5", false),
+        ("+1", false),
+    ] {
+        let input = format!("{{\"n\": {num}, \"t\": \"x\"}}");
+        assert_agree(&input, &["t"]);
+        assert_eq!(cursor_rows(input.as_bytes(), &["t"]).is_ok(), ok, "{num}");
+    }
+}
+
+#[test]
+fn invalid_utf8_always_rejects_never_mojibakes() {
+    // The owned path cannot even receive invalid UTF-8 (`read_to_string`
+    // rejects the file), so the cursor must reject it wherever the bytes
+    // hide — value span, escaped-string run, skipped string, key,
+    // structural area — and never pass replacement characters through.
+    let cases: &[&[u8]] = &[
+        b"{\"t\": \"a\xffb\"}",                   // raw value span
+        b"{\"t\": \"pre\\n mid \xff post\"}",     // run inside an escaped string
+        b"{\"junk\": \"a\xffb\", \"t\": \"ok\"}", // skipped string
+        b"{\"k\xff\": 1, \"t\": \"ok\"}",         // key
+        b"{\"t\": \"ok\"}\xff",                   // structural area (JSONL tail)
+        b"\xff{\"t\": \"ok\"}",                   // before the document
+        b"{\"t\": \"trunc \xe2\x82\"}",           // truncated multi-byte seq
+        b"{\"t\": \"overlong \xc0\xaf\"}",        // overlong encoding
+        b"{\"t\": \"cesu \xed\xa0\xbd\"}",        // surrogate bytes in UTF-8
+    ];
+    for case in cases {
+        let r = parse_shard_projected(case, &["t"]);
+        assert!(r.is_err(), "must reject {case:?}");
+        assert!(std::str::from_utf8(case).is_err(), "case should be invalid UTF-8");
+    }
+}
+
+/// Deterministic xorshift generator — no external crates, fixed seeds.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[(self.next() % items.len() as u64) as usize]
+    }
+}
+
+/// JSON *source text* fragments for string contents — already escaped,
+/// safe for both parsers (no signed `\u`, no lone surrogates).
+const STR_PARTS: &[&str] = &[
+    "plain",
+    "two words",
+    r#"q\" "#,
+    r#"b\\ "#,
+    r#"s\/ "#,
+    r#"\b\f\n\r\t"#,
+    r#"Aé"#,
+    r#"中文"#,
+    r#"😀"#,
+    r#"\u0000"#,
+    "naïve Σ café",
+    "😀 emoji raw",
+    "",
+];
+
+const NUMBERS: &[&str] = &["0", "-1", "42", "3.25", "-0.5", "1e10", "2E-3", "6.02e+23"];
+const KEYS: &[&str] = &["title", "abstract", "junk", "n", "flags", "meta", "title"];
+
+fn gen_string(rng: &mut Rng) -> String {
+    let n = rng.next() % 3 + 1;
+    let mut s = String::from("\"");
+    for _ in 0..n {
+        s.push_str(rng.pick(STR_PARTS));
+    }
+    s.push('"');
+    s
+}
+
+fn gen_value(rng: &mut Rng, depth: usize) -> String {
+    match rng.next() % if depth == 0 { 4 } else { 6 } {
+        0 => gen_string(rng),
+        1 => (*rng.pick(NUMBERS)).to_string(),
+        2 => (*rng.pick(&["true", "false"])).to_string(),
+        3 => "null".to_string(),
+        4 => {
+            let n = rng.next() % 3;
+            let items: Vec<String> = (0..n).map(|_| gen_value(rng, depth - 1)).collect();
+            format!("[{}]", items.join(", "))
+        }
+        _ => gen_record(rng, depth - 1),
+    }
+}
+
+fn gen_record(rng: &mut Rng, depth: usize) -> String {
+    let n = rng.next() % 4;
+    let fields: Vec<String> = (0..n)
+        .map(|_| format!("\"{}\": {}", rng.pick(KEYS), gen_value(rng, depth)))
+        .collect();
+    format!("{{{}}}", fields.join(", "))
+}
+
+#[test]
+fn randomized_documents_agree() {
+    let fields = ["title", "abstract"];
+    for seed in 1..=40u64 {
+        let mut rng = Rng(seed * 0x9E37_79B9_7F4A_7C15);
+        let n_records = rng.next() % 6 + 1;
+        let records: Vec<String> = (0..n_records).map(|_| gen_record(&mut rng, 2)).collect();
+        // Same records in both layouts.
+        let array = format!("[{}]", records.join(",\n"));
+        let jsonl = records.join("\n");
+        assert_agree(&array, &fields);
+        assert_agree(&jsonl, &fields);
+        // Sanity: the generated documents are well-formed, so agreement
+        // is on Ok results, not on mutual rejection.
+        assert!(cursor_rows(array.as_bytes(), &fields).is_ok(), "seed {seed}: {array}");
+        assert!(cursor_rows(jsonl.as_bytes(), &fields).is_ok(), "seed {seed}: {jsonl}");
+    }
+}
+
+#[test]
+fn file_level_cursor_and_owned_ingest_agree_on_nasty_shard() {
+    let dir = std::env::temp_dir().join(format!("p3sapp-cursor-parity-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("nasty.json"),
+        concat!(
+            "{\"title\": \"esc \\\"q\\\" \\u00e9 \\ud83d\\ude00\", \"abstract\": \"naïve Σ\"}\n",
+            "\n",
+            "   \n",
+            "{\"title\": 42, \"abstract\": null, \"junk\": [1, {\"x\": \"}]\"}]}\n",
+            "{\"abstract\": \"only abstract \\u0000 nul\"}\n",
+        ),
+    )
+    .unwrap();
+    let files = vec![dir.join("nasty.json")];
+    let opts = IngestOptions { workers: 2, queue_cap: 4 };
+    let fields = ["title", "abstract"];
+    let via_cursor = ingest_files(&files, &fields, &opts).unwrap().collect();
+    let via_owned = ingest_files_owned(&files, &fields, &opts).unwrap().collect();
+    assert_eq!(via_cursor, via_owned);
+    assert_eq!(via_cursor.num_rows(), 3);
+
+    // An invalid-UTF-8 shard is rejected by both paths.
+    std::fs::write(dir.join("bad.json"), b"{\"title\": \"a\xffb\", \"abstract\": \"x\"}\n")
+        .unwrap();
+    let bad = vec![dir.join("bad.json")];
+    assert!(ingest_files(&bad, &fields, &opts).is_err());
+    assert!(ingest_files_owned(&bad, &fields, &opts).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
