@@ -216,6 +216,7 @@ fn main() {
     let proc_opts = ProcessOptions {
         processes: workers.min(files.len()),
         worker_cmd: Some(PathBuf::from(env!("CARGO_BIN_EXE_repro"))),
+        ..Default::default()
     };
     let m_process = bench("plan process (multi-process workers)", 1, 5, || {
         black_box(&fused_plan).execute_process(&proc_opts).unwrap().rows_out

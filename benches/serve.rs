@@ -1,0 +1,140 @@
+//! Serve-daemon benchmark: throughput of repeated preprocessing jobs
+//! through a warm daemon (live cache memo + persistent worker pool)
+//! against the one-shot cold path that re-pays plan execution on every
+//! invocation.
+//!
+//! Arms (first is the benchgate reference):
+//!   oneshot_cold   run_p3sapp, no daemon, no cache — every job executes
+//!   serve_warm     one client, warm daemon — socket round-trip + memo
+//!                  restore + reply serialization
+//!   serve_warm_x4  4 concurrent clients against the same warm daemon
+//!
+//! Writes target/BENCH_serve.json (override with BENCH_SERVE_JSON=path,
+//! disable with =-), including jobs/sec extras for the warm arms.
+
+use p3sapp::benchkit::{bench, bench_record_json, black_box, env_f64, write_bench_record};
+use p3sapp::corpus::{generate_corpus, CorpusSpec};
+use p3sapp::driver::{run_p3sapp, DriverOptions};
+use p3sapp::ingest::list_shards;
+use p3sapp::serve::{request, run_serve, JobSpec, Reply, Request, ServeOptions};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let scale = env_f64("BENCH_SCALE", 1.0);
+    let root =
+        std::env::temp_dir().join(format!("p3sapp-bench-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let corpus_dir = root.join("corpus");
+    let manifest = generate_corpus(&CorpusSpec::tiny(42).scaled(scale), &corpus_dir).unwrap();
+    let files = list_shards(&corpus_dir).unwrap();
+    let workers = 2;
+    println!(
+        "== serve bench: {} records, {} files, {:.2} MB, {workers} workers ==",
+        manifest.n_records,
+        manifest.n_files,
+        manifest.total_bytes as f64 / 1048576.0
+    );
+
+    // Reference arm: the one-shot cold path — what every `repro
+    // preprocess` invocation pays without a daemon.
+    let oneshot = DriverOptions { workers, ..Default::default() };
+    let m_cold = bench("oneshot cold (no daemon, no cache)", 1, 5, || {
+        black_box(run_p3sapp(&files, &oneshot).unwrap().rows_out)
+    });
+    println!("  {}", m_cold.report());
+
+    // The daemon under test: warm cache next to the socket, persistent
+    // worker pool (the bench harness has no `plan-worker` mode, so the
+    // pool runs the built `repro` binary).
+    let socket = root.join("serve.sock");
+    let opts = ServeOptions {
+        socket: socket.clone(),
+        cache_dir: Some(root.join("cache")),
+        worker_cmd: Some(PathBuf::from(env!("CARGO_BIN_EXE_repro"))),
+        workers,
+        processes: 2,
+        ..Default::default()
+    };
+    let daemon = std::thread::spawn(move || run_serve(opts).unwrap());
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !(socket.exists() && std::os::unix::net::UnixStream::connect(&socket).is_ok()) {
+        assert!(Instant::now() < deadline, "daemon never started listening");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let job = || JobSpec { dir: corpus_dir.clone(), workers, ..Default::default() };
+
+    // Prime: the first served job executes (and stores); every timed
+    // iteration after it measures the warm path.
+    match request(&socket, &Request::Preprocess(job())).unwrap() {
+        Reply::Preprocess(p) => assert!(!p.from_cache(), "first served job must execute"),
+        other => panic!("unexpected reply: {other:?}"),
+    }
+
+    let m_warm = bench("serve warm (1 client)", 1, 10, || {
+        match request(&socket, &Request::Preprocess(job())).unwrap() {
+            Reply::Preprocess(p) => {
+                assert!(p.from_cache(), "warm job must restore, not execute");
+                p.rows_out
+            }
+            other => panic!("unexpected reply: {other:?}"),
+        }
+    });
+    println!("  {}", m_warm.report());
+
+    let clients = 4usize;
+    let m_warm_x4 = bench("serve warm (4 concurrent clients)", 1, 5, || {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|_| {
+                    let socket = socket.clone();
+                    let spec = job();
+                    scope.spawn(move || {
+                        match request(&socket, &Request::Preprocess(spec)).unwrap() {
+                            Reply::Preprocess(p) => p.rows_out,
+                            other => panic!("unexpected reply: {other:?}"),
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum::<u64>()
+        })
+    });
+    println!("  {}", m_warm_x4.report());
+
+    let jobs_per_sec_warm = 1.0 / m_warm.mean_secs();
+    let jobs_per_sec_warm_x4 = clients as f64 / m_warm_x4.mean_secs();
+    println!("\n  warm throughput (1 client):          {jobs_per_sec_warm:.1} jobs/s");
+    println!("  warm throughput ({clients} concurrent):       {jobs_per_sec_warm_x4:.1} jobs/s");
+    println!(
+        "  warm serve vs one-shot cold:         {:.2}x",
+        m_cold.mean_secs() / m_warm.mean_secs()
+    );
+
+    match request(&socket, &Request::Shutdown).unwrap() {
+        Reply::Ok => {}
+        other => panic!("shutdown must ack: {other:?}"),
+    }
+    daemon.join().unwrap();
+
+    let json = bench_record_json(
+        "serve",
+        &[
+            ("records", manifest.n_records.to_string()),
+            ("files", manifest.n_files.to_string()),
+            ("bytes", manifest.total_bytes.to_string()),
+            ("workers", workers.to_string()),
+            ("clients", clients.to_string()),
+            ("jobs_per_sec_warm", format!("{jobs_per_sec_warm:.3}")),
+            ("jobs_per_sec_warm_x4", format!("{jobs_per_sec_warm_x4:.3}")),
+        ],
+        &[
+            ("oneshot_cold", &m_cold),
+            ("serve_warm", &m_warm),
+            ("serve_warm_x4", &m_warm_x4),
+        ],
+    );
+    write_bench_record("BENCH_SERVE_JSON", "target/BENCH_serve.json", &json);
+    let _ = std::fs::remove_dir_all(&root);
+}

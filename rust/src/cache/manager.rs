@@ -71,6 +71,13 @@ pub struct CacheStats {
     /// Misses caused by a corrupt/unreadable artifact (subset of
     /// `misses`).
     pub corrupt: u64,
+    /// Shards fully digested by [`CacheManager::fingerprint_for`] — each
+    /// memo miss adds `files.len()`. The suite regression test pins this
+    /// to exactly one digest per shard per suite.
+    pub fp_digest_shards: u64,
+    /// Fingerprint memo hits revalidated by a cheap stat-identity check
+    /// instead of a re-digest.
+    pub fp_stat_revalidations: u64,
 }
 
 impl CacheStats {
@@ -226,10 +233,12 @@ impl CacheManager {
         let memo_key = xxh64(&material, 0x5eed);
         if let Some(fp) = self.fingerprints.lock().unwrap().get(&memo_key) {
             if stat_identity_unchanged(fp, files) {
+                self.stats.lock().unwrap().fp_stat_revalidations += 1;
                 return Ok(fp.clone());
             }
         }
         let fp = fingerprint(plan_render, files)?;
+        self.stats.lock().unwrap().fp_digest_shards += files.len() as u64;
         self.fingerprints.lock().unwrap().insert(memo_key, fp.clone());
         Ok(fp)
     }
@@ -647,11 +656,16 @@ mod tests {
             super::super::fingerprint::fingerprint("plan", &files).unwrap().key(),
             "memoized derivation must match the pure function"
         );
+        let s = m.stats();
+        assert_eq!((s.fp_digest_shards, s.fp_stat_revalidations), (1, 0));
         // Unchanged file: the memo serves the same key (stat-only path).
         assert_eq!(m.fingerprint_for("plan", &files).unwrap().key(), first.key());
+        let s = m.stats();
+        assert_eq!((s.fp_digest_shards, s.fp_stat_revalidations), (1, 1));
         // A different plan render over the same files is a different
         // memo entry, not a stale reuse.
         assert_ne!(m.fingerprint_for("plan-b", &files).unwrap().key(), first.key());
+        assert_eq!(m.stats().fp_digest_shards, 2, "new memo entry re-digests");
 
         // Content edit that moves the mtime: re-digested, key changes.
         // The mtime bump is explicit so coarse-granularity filesystems
@@ -662,6 +676,7 @@ mod tests {
         std::fs::File::options().write(true).open(&shard).unwrap().set_modified(bumped).unwrap();
         let edited = m.fingerprint_for("plan", &files).unwrap();
         assert_ne!(edited.key(), first.key());
+        assert_eq!(m.stats().fp_digest_shards, 3, "stat drift forces a re-digest");
 
         // The documented in-process trade-off: an edit that restores
         // length *and* mtime is served the memoized digest (a fresh

@@ -135,6 +135,12 @@ pub struct DriverOptions {
     /// lowers into the plan's two-pass physical strategy — no staged
     /// `Pipeline::fit` fallback. Ignored by the CA driver.
     pub features: bool,
+    /// Warm worker pool for the multi-process path ([`crate::plan::WorkerPool`]).
+    /// When set alongside `processes`, jobs ship to these long-lived
+    /// worker OS processes instead of spawning fresh ones per run — the
+    /// serve daemon holds one pool across requests. `None` (the default)
+    /// keeps the spawn-per-run behavior.
+    pub pool: Option<Arc<crate::plan::WorkerPool>>,
 }
 
 impl Default for DriverOptions {
@@ -149,6 +155,7 @@ impl Default for DriverOptions {
             sample: None,
             limit: None,
             features: false,
+            pool: None,
         }
     }
 }
@@ -171,8 +178,11 @@ impl DriverOptions {
     /// when the in-process executors run). Shared by the driver and
     /// EXPLAIN so both describe the same schedule.
     pub fn process_options(&self) -> Option<crate::plan::ProcessOptions> {
-        self.processes
-            .map(|n| crate::plan::ProcessOptions { processes: n, worker_cmd: None })
+        self.processes.map(|n| crate::plan::ProcessOptions {
+            processes: n,
+            pool: self.pool.clone(),
+            ..Default::default()
+        })
     }
 }
 

@@ -92,6 +92,7 @@ pub mod pipeline;
 pub mod plan;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod textutil;
 pub mod vocab;
 

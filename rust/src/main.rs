@@ -9,6 +9,8 @@
 //!   infer        generate titles with a freshly trained model
 //!   report       regenerate the paper's tables/figures (e1..e9, all)
 //!   cache        inspect (stats) or empty (clear) the plan cache
+//!   serve        run the preprocessing daemon, or talk to one
+//!              (start | preprocess | explain | train | stats | shutdown)
 //!
 //! Run `repro help` for options.
 
@@ -34,7 +36,14 @@ fn main() {
     // deliberately absent from `usage()` — it is an implementation
     // detail of `--processes`, not a user-facing command.
     if std::env::args().nth(1).as_deref() == Some("plan-worker") {
-        std::process::exit(p3sapp::plan::process::worker_main());
+        // `--persist` is the serve daemon's pool mode: loop over framed
+        // jobs on stdin instead of exiting after one.
+        let code = if std::env::args().nth(2).as_deref() == Some("--persist") {
+            p3sapp::plan::process::worker_main_persist()
+        } else {
+            p3sapp::plan::process::worker_main()
+        };
+        std::process::exit(code);
     }
     let args = match Args::parse(std::env::args().skip(1)) {
         Ok(a) => a,
@@ -70,6 +79,16 @@ fn usage() {
          \x20             [--tiers 1,2,3] [--workers N] [--artifacts A] [--csv]\n\
          \x20             [--explain] [--skip-ca]\n\
          \x20 cache       stats|clear --cache-dir D\n\
+         \x20 serve       start --socket S [--cache-dir D | --no-cache]\n\
+         \x20             [--workers N] [--processes N] [--max-active N]\n\
+         \x20             [--max-queue N] [--job-budget-bytes B]\n\
+         \x20             -- run the preprocessing daemon (warm plan cache,\n\
+         \x20             persistent worker pool, admission control)\n\
+         \x20 serve       preprocess|explain|train --socket S --dir D\n\
+         \x20             [--workers N] [--sample F] [--limit N] [--features]\n\
+         \x20             [--steps N] [--artifacts A] [--linger-millis M]\n\
+         \x20             -- submit one job to a running daemon\n\
+         \x20 serve       stats|shutdown --socket S\n\
          \x20 help\n\
          \n\
          common options:\n\
@@ -116,9 +135,12 @@ fn load_config(args: &Args) -> Result<AppConfig> {
 
 fn run(args: &Args) -> Result<()> {
     if let Some(sub) = &args.subcommand {
-        // Only `cache` takes an action word; elsewhere a stray
-        // positional is the error it always was.
-        anyhow::ensure!(args.command == "cache", "unexpected argument '{sub}'");
+        // Only `cache` and `serve` take an action word; elsewhere a
+        // stray positional is the error it always was.
+        anyhow::ensure!(
+            args.command == "cache" || args.command == "serve",
+            "unexpected argument '{sub}'"
+        );
     }
     match args.command.as_str() {
         "gen-corpus" => cmd_gen_corpus(args),
@@ -129,6 +151,7 @@ fn run(args: &Args) -> Result<()> {
         "infer" => cmd_infer(args),
         "report" => cmd_report(args),
         "cache" => cmd_cache(args),
+        "serve" => cmd_serve(args),
         "help" | "" => {
             usage();
             Ok(())
@@ -620,6 +643,129 @@ fn cmd_cache(args: &Args) -> Result<()> {
             println!("removed {n} cached artifacts from {dir}");
         }
         _ => unreachable!("validated above"),
+    }
+    Ok(())
+}
+
+/// `repro serve <action> --socket S` — run the preprocessing daemon
+/// (`start`) or submit to one (`preprocess`/`explain`/`train`/`stats`/
+/// `shutdown`). Client replies print in the same shape as the one-shot
+/// commands so scripts (and the CI smoke job) can diff them directly.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let sub = args.subcommand.as_deref().ok_or_else(|| {
+        anyhow::anyhow!("serve takes an action: start|preprocess|explain|train|stats|shutdown")
+    })?;
+    let socket = PathBuf::from(
+        args.get("socket").ok_or_else(|| anyhow::anyhow!("--socket is required"))?,
+    );
+    match sub {
+        "start" => {
+            let defaults = p3sapp::serve::ServeOptions::default();
+            // The daemon's whole point is warmth, so the cache defaults
+            // to *on* (next to the socket); `--no-cache` opts out.
+            let cache_dir = if args.flag("no-cache") {
+                None
+            } else {
+                Some(match args.get("cache-dir") {
+                    Some(dir) => PathBuf::from(dir),
+                    None => socket.with_extension("cache"),
+                })
+            };
+            p3sapp::serve::run_serve(p3sapp::serve::ServeOptions {
+                socket,
+                cache_dir,
+                worker_cmd: None,
+                workers: args.get_usize("workers", cfg.engine.workers)?,
+                processes: args.get_usize("processes", 0)?,
+                max_active: args.get_usize("max-active", defaults.max_active)?,
+                max_queue: args.get_usize("max-queue", defaults.max_queue)?,
+                job_budget_bytes: args
+                    .get_u64("job-budget-bytes", defaults.job_budget_bytes)?,
+            })
+        }
+        "stats" => {
+            print_serve_reply(p3sapp::serve::request(&socket, &p3sapp::serve::Request::Stats)?)
+        }
+        "shutdown" => print_serve_reply(p3sapp::serve::request(
+            &socket,
+            &p3sapp::serve::Request::Shutdown,
+        )?),
+        "preprocess" | "explain" | "train" => {
+            let spec = serve_job_spec(args)?;
+            let req = match sub {
+                "preprocess" => p3sapp::serve::Request::Preprocess(spec),
+                "explain" => p3sapp::serve::Request::Explain(spec),
+                _ => p3sapp::serve::Request::Train {
+                    spec,
+                    artifacts: args.get_or("artifacts", &cfg.model.artifacts_dir).to_string(),
+                    steps: args.get_usize("steps", cfg.model.train_steps)?,
+                },
+            };
+            print_serve_reply(p3sapp::serve::request(&socket, &req)?)
+        }
+        other => anyhow::bail!(
+            "serve takes start|preprocess|explain|train|stats|shutdown, got '{other}'"
+        ),
+    }
+}
+
+/// The job half of a `serve` client invocation: which corpus, and the
+/// plan-variant knobs the daemon folds into its own warm options.
+fn serve_job_spec(args: &Args) -> Result<p3sapp::serve::JobSpec> {
+    let dir = PathBuf::from(
+        args.get("dir").ok_or_else(|| anyhow::anyhow!("--dir is required"))?,
+    );
+    Ok(p3sapp::serve::JobSpec {
+        dir,
+        workers: args.get_usize("workers", 0)?,
+        sample: sample_opt(args)?,
+        limit: match args.get("limit") {
+            Some(_) => Some(args.get_usize("limit", 0)?),
+            None => None,
+        },
+        features: args.flag("features"),
+        linger_millis: args.get_u64("linger-millis", 0)?,
+    })
+}
+
+/// Render a daemon reply. Preprocess replies reuse the `cmd_preprocess`
+/// stage layout (so a warm job visibly reports its `cache_restore`
+/// stage); typed daemon errors become the process exit error, naming
+/// their cause.
+fn print_serve_reply(reply: p3sapp::serve::Reply) -> Result<()> {
+    use p3sapp::serve::Reply;
+    match reply {
+        Reply::Ok => println!("ok"),
+        Reply::Text(text) => {
+            print!("{text}");
+            if !text.ends_with('\n') {
+                println!();
+            }
+        }
+        Reply::Stats(s) => {
+            println!("active             {}", s.active);
+            println!("queued             {}", s.queued);
+            let pids = if s.worker_pids.is_empty() {
+                "-".to_string()
+            } else {
+                s.worker_pids.iter().map(u32::to_string).collect::<Vec<_>>().join(" ")
+            };
+            println!("worker pids        {pids}");
+            println!("cache              {}", s.cache);
+        }
+        Reply::Preprocess(p) => {
+            println!("rows ingested      {}", p.rows_ingested);
+            println!("rows out           {}", p.rows_out);
+            let mut total = 0.0;
+            for (stage, nanos) in &p.stages {
+                let secs = *nanos as f64 / 1e9;
+                total += secs;
+                println!("{stage:18} {secs:.3} s");
+            }
+            println!("cumulative (t_c)   {total:.3} s");
+        }
+        Reply::Err(e) => anyhow::bail!("serve error [{}]: {}", e.kind.name(), e.message),
     }
     Ok(())
 }

@@ -124,7 +124,7 @@ mod tests {
         let files: Vec<std::path::PathBuf> =
             (0..4).map(|i| std::path::PathBuf::from(format!("/tmp/{i}.json"))).collect();
         let plan = case_study_plan(&files, "title", "abstract");
-        let opts = ProcessOptions { processes: 2, worker_cmd: None };
+        let opts = ProcessOptions { processes: 2, ..Default::default() };
         let text = explain_with(&plan, 2, None, Some(&opts)).unwrap();
         assert!(text.contains("== Physical Plan (multi-process) =="), "{text}");
         assert!(text.contains("ProcessPool [4 file-partitions, 2 worker processes]"), "{text}");

@@ -73,5 +73,5 @@ pub use explain::{explain, explain_process, explain_stream, explain_with};
 pub use fused::FusedStringStage;
 pub use logical::{LogicalOp, LogicalPlan};
 pub use physical::{lower, sample_keeps, PhysicalPlan, PlanOutput};
-pub use process::{ProcessExecutor, ProcessOptions};
+pub use process::{ProcessExecutor, ProcessOptions, WorkerPool};
 pub use stream::{StreamExecutor, StreamOptions};

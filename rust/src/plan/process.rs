@@ -16,7 +16,11 @@
 //! The wire format reuses the `P3PC` artifact conventions
 //! ([`crate::cache::artifact`]): little-endian integers, a magic +
 //! version header, and a trailing xxh64 digest, so truncation and
-//! corruption are detected before any payload is trusted. A worker that
+//! corruption are detected before any payload is trusted. The envelope
+//! discipline itself (magic constants, digest check, path/string
+//! helpers) lives in [`crate::serve::proto`] — one implementation
+//! shared with the serve daemon, which speaks the same `P3PJ`/`P3PW`
+//! frames over its Unix socket. A worker that
 //! exits nonzero, dies on a signal, or returns a garbled frame becomes a
 //! **driver error naming the worker** — never a hang (each worker's
 //! stdout is drained to EOF and the child is always reaped) and never a
@@ -47,7 +51,6 @@
 
 use super::physical::{KeySlot, Merger, PartResult, PartitionOp, Phases, PhysicalPlan, PlanOutput};
 use crate::cache::artifact::{decode_cells, dtype_code, dtype_from, encode_cells, Cursor};
-use crate::cache::xxh64;
 use crate::frame::{Partition, Schema};
 use crate::pipeline::features::{HashingTF, Idf, IdfModel, NGram};
 use crate::pipeline::stages::{
@@ -55,26 +58,17 @@ use crate::pipeline::stages::{
     StopWordsRemoverStr, StringKernel, Tokenizer,
 };
 use crate::pipeline::{Estimator, Transformer};
+use crate::serve::proto::{
+    begin_frame, check_frame, read_frame, read_path, seal_frame, write_frame, write_path,
+    write_str, JOB_MAGIC, MODE_FIT, MODE_MAP, REPLY_MAGIC, WIRE_VERSION,
+};
 use crate::Result;
 use anyhow::Context as _;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
-use std::process::{Command, Stdio};
-use std::sync::Arc;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
-
-/// Job frame magic (driver → worker, on the worker's stdin).
-const JOB_MAGIC: &[u8; 4] = b"P3PJ";
-/// Result frame magic (worker → driver, on the worker's stdout).
-const REPLY_MAGIC: &[u8; 4] = b"P3PW";
-/// Wire-format version shared by both frames; a mismatch is a hard
-/// error (driver and workers are the same binary, so it only trips when
-/// a foreign `worker_cmd` is pointed at an incompatible build).
-const WIRE_VERSION: u32 = 1;
-/// Job modes: run the op program and return per-shard results, or fold
-/// the shards into a fit accumulator and return its partial state.
-const MODE_MAP: u8 = 0;
-const MODE_FIT: u8 = 1;
 
 /// Tuning knobs for the multi-process executor.
 #[derive(Debug, Clone, Default)]
@@ -88,6 +82,13 @@ pub struct ProcessOptions {
     /// `repro` binary self-execs its hidden `plan-worker` mode). Test
     /// and bench harnesses must point this at the built `repro` binary.
     pub worker_cmd: Option<PathBuf>,
+    /// Warm worker pool to run jobs through instead of spawning fresh
+    /// processes per pass (the serve daemon's amortization lever).
+    /// `None` — the default everywhere except `serve` — keeps the
+    /// spawn-per-pass behavior exactly. When set, `worker_cmd` is
+    /// ignored: the pool's own command governs, and the resolved worker
+    /// count is additionally clamped to the pool size.
+    pub pool: Option<Arc<WorkerPool>>,
 }
 
 impl ProcessOptions {
@@ -98,11 +99,18 @@ impl ProcessOptions {
         } else {
             self.processes
         };
+        let procs = match &self.pool {
+            Some(pool) => procs.min(pool.size()),
+            None => procs,
+        };
         procs.min(n_files)
     }
 
     /// The executable to spawn as `<cmd> plan-worker`.
     fn worker_command(&self) -> Result<PathBuf> {
+        if let Some(pool) = &self.pool {
+            return Ok(pool.cmd().to_path_buf());
+        }
         if let Some(cmd) = &self.worker_cmd {
             return Ok(cmd.clone());
         }
@@ -112,6 +120,162 @@ impl ProcessOptions {
             }
         }
         std::env::current_exe().map_err(|e| anyhow::anyhow!("cannot resolve worker binary: {e}"))
+    }
+
+    /// Ship each job to its worker — through the warm pool when one is
+    /// configured, else spawn-per-job — returning raw reply frames in
+    /// job order.
+    fn ship(&self, jobs: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
+        match &self.pool {
+            Some(pool) => run_workers_pooled(pool, jobs),
+            None => {
+                let cmd = self.worker_command()?;
+                run_workers(&cmd, jobs)
+            }
+        }
+    }
+}
+
+/// A pool of persistent `plan-worker --persist` processes, kept warm
+/// across passes by the serve daemon. Each slot owns (at most) one
+/// lazily spawned child; jobs ship as length-prefixed `P3PJ` frames on
+/// the child's stdin and replies return as length-prefixed `P3PW`
+/// frames on its stdout, one exchange at a time per slot.
+///
+/// Failure posture matches the spawn-per-job path: a worker that dies,
+/// closes its pipe early, or returns a garbled frame becomes a driver
+/// error naming the slot, and the dead child is reaped immediately —
+/// the slot respawns lazily on its next job, so one failed job never
+/// poisons the pool. A failed job also kills its persistent worker on
+/// the worker side (it exits nonzero rather than trying to resync the
+/// stream), which is what makes "error, then respawn" the whole
+/// recovery story.
+#[derive(Debug)]
+pub struct WorkerPool {
+    cmd: PathBuf,
+    slots: Vec<Mutex<Option<PooledWorker>>>,
+}
+
+#[derive(Debug)]
+struct PooledWorker {
+    child: Child,
+    stdin: ChildStdin,
+    stdout: ChildStdout,
+}
+
+impl WorkerPool {
+    /// A pool of `size` slots (clamped to ≥ 1) running `cmd plan-worker
+    /// --persist`. No process is spawned until a slot gets its first
+    /// job.
+    pub fn new(cmd: impl Into<PathBuf>, size: usize) -> WorkerPool {
+        WorkerPool {
+            cmd: cmd.into(),
+            slots: (0..size.max(1)).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn cmd(&self) -> &Path {
+        &self.cmd
+    }
+
+    /// PIDs of the currently live workers (lazily spawned slots that
+    /// have not run a job yet are absent). The serve `stats` reply and
+    /// the no-orphans shutdown test read this.
+    pub fn pids(&self) -> Vec<u32> {
+        self.slots
+            .iter()
+            .filter_map(|slot| {
+                slot.lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .as_ref()
+                    .map(|w| w.child.id())
+            })
+            .collect()
+    }
+
+    fn spawn_worker(&self, slot: usize) -> Result<PooledWorker> {
+        let mut child = Command::new(&self.cmd)
+            .args(["plan-worker", "--persist"])
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            // Stderr passes through to the daemon's own stderr: a
+            // persistent worker's diagnostics belong in the daemon log,
+            // and per-job capture would need a drain thread per slot
+            // for the lifetime of the pool.
+            .stderr(Stdio::inherit())
+            .spawn()
+            .map_err(|e| {
+                anyhow::anyhow!("pooled plan worker {slot}: spawn {}: {e}", self.cmd.display())
+            })?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        Ok(PooledWorker { child, stdin, stdout })
+    }
+
+    /// Run one job frame through `slot`'s persistent worker: lazily
+    /// spawn it, write the length-prefixed job, read the
+    /// length-prefixed reply. On any error the slot's worker is killed
+    /// and reaped before the error propagates, leaving the slot empty
+    /// for a lazy respawn.
+    fn exchange(&self, slot: usize, job: &[u8]) -> Result<Vec<u8>> {
+        let mut guard = self.slots[slot].lock().unwrap_or_else(|p| p.into_inner());
+        if guard.is_none() {
+            *guard = Some(self.spawn_worker(slot)?);
+        }
+        let worker = guard.as_mut().expect("just spawned");
+        let result = (|| -> Result<Vec<u8>> {
+            write_frame(&mut worker.stdin, job)
+                .map_err(|e| anyhow::anyhow!("shipping job: {e}"))?;
+            match read_frame(&mut worker.stdout)? {
+                Some(reply) => Ok(reply),
+                None => anyhow::bail!("worker closed its pipe without a reply"),
+            }
+        })();
+        if result.is_err() {
+            // The stream is out of sync (or the worker is dead): reap
+            // it now so the slot can respawn clean.
+            if let Some(mut dead) = guard.take() {
+                let _ = dead.child.kill();
+                let _ = dead.child.wait();
+            }
+        }
+        result.map_err(|e| {
+            anyhow::anyhow!("pooled plan worker {slot} ({}): {e:#}", self.cmd.display())
+        })
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Reap every live worker: close its stdin (the persistent loop
+    /// sees job EOF and exits cleanly), give it a short grace window,
+    /// then kill. Always waits, so no zombie survives the pool.
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            let mut guard = slot.lock().unwrap_or_else(|p| p.into_inner());
+            let Some(worker) = guard.take() else { continue };
+            let PooledWorker { mut child, stdin, stdout } = worker;
+            drop(stdin);
+            drop(stdout);
+            let mut exited = false;
+            for _ in 0..200 {
+                match child.try_wait() {
+                    Ok(Some(_)) => {
+                        exited = true;
+                        break;
+                    }
+                    Ok(None) => std::thread::sleep(Duration::from_millis(10)),
+                    Err(_) => break,
+                }
+            }
+            if !exited {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
     }
 }
 
@@ -334,43 +498,6 @@ impl WireEstimator {
     }
 }
 
-fn write_str(buf: &mut Vec<u8>, s: &str) {
-    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
-    buf.extend_from_slice(s.as_bytes());
-}
-
-/// Shard paths cross the wire as raw OS bytes on unix — a POSIX
-/// filename need not be UTF-8, and a lossy round trip would make the
-/// worker fail on a subtly mangled path. Elsewhere (no byte-level path
-/// API) the lossy conversion is the best available.
-fn write_path(buf: &mut Vec<u8>, path: &Path) {
-    #[cfg(unix)]
-    {
-        use std::os::unix::ffi::OsStrExt;
-        let bytes = path.as_os_str().as_bytes();
-        buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
-        buf.extend_from_slice(bytes);
-    }
-    #[cfg(not(unix))]
-    {
-        write_str(buf, &path.to_string_lossy());
-    }
-}
-
-fn read_path(cur: &mut Cursor<'_>) -> Result<PathBuf> {
-    let len = cur.u32()? as usize;
-    let bytes = cur.take(len)?;
-    #[cfg(unix)]
-    {
-        use std::os::unix::ffi::OsStrExt;
-        Ok(PathBuf::from(std::ffi::OsStr::from_bytes(bytes)))
-    }
-    #[cfg(not(unix))]
-    {
-        Ok(PathBuf::from(String::from_utf8(bytes.to_vec())?))
-    }
-}
-
 fn write_idxs(buf: &mut Vec<u8>, idxs: &[usize]) {
     buf.extend_from_slice(&(idxs.len() as u32).to_le_bytes());
     for &i in idxs {
@@ -460,9 +587,7 @@ fn encode_job(
     fit: Option<(&WireEstimator, usize)>,
     shards: &[(u64, &Path)],
 ) -> Result<Vec<u8>> {
-    let mut buf = Vec::with_capacity(256);
-    buf.extend_from_slice(JOB_MAGIC);
-    buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    let mut buf = begin_frame(JOB_MAGIC);
     buf.extend_from_slice(&worker_id.to_le_bytes());
     buf.push(if fit.is_some() { MODE_FIT } else { MODE_MAP });
     buf.extend_from_slice(&(plan.fields().len() as u32).to_le_bytes());
@@ -479,23 +604,8 @@ fn encode_job(
         buf.extend_from_slice(&idx.to_le_bytes());
         write_path(&mut buf, path);
     }
-    let digest = xxh64(&buf[4..], 0);
-    buf.extend_from_slice(&digest.to_le_bytes());
+    seal_frame(&mut buf);
     Ok(buf)
-}
-
-/// Validate a frame's envelope (magic, digest, version) and return a
-/// cursor over its body.
-fn check_frame<'a>(bytes: &'a [u8], magic: &[u8; 4], what: &str) -> Result<Cursor<'a>> {
-    anyhow::ensure!(bytes.len() >= 16, "{what} frame too short ({} bytes)", bytes.len());
-    anyhow::ensure!(&bytes[..4] == magic, "{what} frame has bad magic");
-    let body = &bytes[..bytes.len() - 8];
-    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
-    anyhow::ensure!(xxh64(&body[4..], 0) == stored, "{what} frame digest mismatch");
-    let mut cur = Cursor::new(body, 4);
-    let version = cur.u32()?;
-    anyhow::ensure!(version == WIRE_VERSION, "unsupported {what} frame version {version}");
-    Ok(cur)
 }
 
 /// Serialize one shard's [`PartResult`] into a reply frame body.
@@ -810,7 +920,7 @@ impl ProcessExecutor {
             .enumerate()
             .map(|(w, shards)| encode_job(prefix, w as u32, Some((&spec, in_idx)), shards))
             .collect::<Result<_>>()?;
-        let replies = run_workers(&cmd, &jobs)?;
+        let replies = self.opts.ship(&jobs)?;
         for (w, bytes) in replies.iter().enumerate() {
             let partial = decode_fit_reply(bytes, w as u32)
                 .with_context(|| format!("plan worker {w} ({})", cmd.display()))?;
@@ -834,7 +944,7 @@ impl ProcessExecutor {
             .enumerate()
             .map(|(w, shards)| encode_job(plan, w as u32, None, shards))
             .collect::<Result<_>>()?;
-        let replies = run_workers(&cmd, &jobs)?;
+        let replies = self.opts.ship(&jobs)?;
 
         let mut pending: Vec<Option<PartResult>> = (0..n).map(|_| None).collect();
         for (w, bytes) in replies.iter().enumerate() {
@@ -875,16 +985,21 @@ fn assign_shards(files: &[PathBuf], procs: usize) -> Vec<Vec<(u64, &Path)>> {
     assignments
 }
 
-/// Drive every worker process to completion concurrently, returning
-/// their raw reply frames in worker order. Every spawned child is
-/// waited on before this returns — success or failure — so no orphan
-/// survives a driver error.
-fn run_workers(cmd: &Path, jobs: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
+/// Drive every job concurrently through `run_one`, returning raw reply
+/// frames in job order (the first failure wins; every job still runs to
+/// completion so children are always reaped). Shared by the
+/// spawn-per-job and pooled paths — the failure-collection semantics
+/// must not drift between them.
+fn gather(
+    jobs: &[Vec<u8>],
+    run_one: impl Fn(usize, &[u8]) -> Result<Vec<u8>> + Sync,
+) -> Result<Vec<Vec<u8>>> {
     std::thread::scope(|scope| {
+        let run_one = &run_one;
         let handles: Vec<_> = jobs
             .iter()
             .enumerate()
-            .map(|(w, job)| scope.spawn(move || run_worker(w, cmd, job)))
+            .map(|(w, job)| scope.spawn(move || run_one(w, job)))
             .collect();
         let mut out = Vec::with_capacity(handles.len());
         let mut first_err: Option<anyhow::Error> = None;
@@ -908,6 +1023,26 @@ fn run_workers(cmd: &Path, jobs: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
             None => Ok(out),
         }
     })
+}
+
+/// Spawn-per-job execution: every worker process is spawned, driven to
+/// completion, and waited on before this returns — success or failure —
+/// so no orphan survives a driver error.
+fn run_workers(cmd: &Path, jobs: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
+    gather(jobs, |w, job| run_worker(w, cmd, job))
+}
+
+/// Pooled execution: job `w` exchanges with pool slot `w`. Callers
+/// never build more jobs than `ProcessOptions::resolve` allows, which
+/// is clamped to the pool size, so the slot index is always in range.
+fn run_workers_pooled(pool: &WorkerPool, jobs: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
+    anyhow::ensure!(
+        jobs.len() <= pool.size(),
+        "{} jobs for a {}-slot worker pool",
+        jobs.len(),
+        pool.size()
+    );
+    gather(jobs, |w, job| pool.exchange(w, job))
 }
 
 /// Run one worker process end to end: spawn, ship the job on stdin,
@@ -990,6 +1125,36 @@ fn worker_run() -> Result<()> {
     Ok(())
 }
 
+/// Entry point of the persistent worker mode (`repro plan-worker
+/// --persist`), which a [`WorkerPool`] keeps warm across passes:
+/// length-prefixed `P3PJ` job frames arrive on stdin in a loop, each
+/// answered with a length-prefixed `P3PW` reply on stdout; clean EOF at
+/// a frame boundary is the shutdown signal (exit 0).
+///
+/// A failed job exits the worker nonzero instead of attempting to
+/// resync the stream — the driver-side pool reaps it, surfaces the
+/// typed error, and lazily respawns the slot for the next job.
+pub fn worker_main_persist() -> i32 {
+    match worker_persist_loop() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("plan-worker: {e:#}");
+            1
+        }
+    }
+}
+
+fn worker_persist_loop() -> Result<()> {
+    let mut stdin = std::io::stdin().lock();
+    let mut stdout = std::io::stdout().lock();
+    while let Some(job) = read_frame(&mut stdin)? {
+        let reply = run_job(&job)?;
+        write_frame(&mut stdout, &reply)
+            .map_err(|e| anyhow::anyhow!("writing result to stdout: {e}"))?;
+    }
+    Ok(())
+}
+
 /// Decode and execute one job frame, producing the reply frame.
 fn run_job(job: &[u8]) -> Result<Vec<u8>> {
     let mut cur = check_frame(job, JOB_MAGIC, "job")?;
@@ -1021,9 +1186,7 @@ fn run_job(job: &[u8]) -> Result<Vec<u8>> {
     anyhow::ensure!(cur.remaining() == 0, "job frame has {} trailing bytes", cur.remaining());
 
     let plan = PhysicalPlan::from_wire(fields, ops);
-    let mut buf = Vec::with_capacity(1024);
-    buf.extend_from_slice(REPLY_MAGIC);
-    buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    let mut buf = begin_frame(REPLY_MAGIC);
     buf.extend_from_slice(&worker_id.to_le_bytes());
     buf.push(mode);
     // One shard-byte buffer per worker process: each read reuses the
@@ -1064,14 +1227,14 @@ fn run_job(job: &[u8]) -> Result<Vec<u8>> {
             buf.extend_from_slice(&partial);
         }
     }
-    let digest = xxh64(&buf[4..], 0);
-    buf.extend_from_slice(&digest.to_le_bytes());
+    seal_frame(&mut buf);
     Ok(buf)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::xxh64;
     use crate::frame::Column;
     use crate::pipeline::presets::case_study_plan;
     use crate::plan::LogicalPlan;
@@ -1269,10 +1432,18 @@ mod tests {
         let auto = ProcessOptions::default();
         assert!(auto.resolve(100) >= 1);
         assert_eq!(auto.resolve(0), 0);
-        let four = ProcessOptions { processes: 4, worker_cmd: None };
+        let four = ProcessOptions { processes: 4, ..Default::default() };
         assert_eq!(four.resolve(100), 4);
         assert_eq!(four.resolve(3), 3, "never more workers than shards");
         assert_eq!(four.resolve(1), 1);
+        // A pool additionally clamps the resolved count to its size.
+        let pooled = ProcessOptions {
+            processes: 4,
+            pool: Some(Arc::new(WorkerPool::new("/bin/false", 2))),
+            ..Default::default()
+        };
+        assert_eq!(pooled.resolve(100), 2);
+        assert_eq!(pooled.resolve(1), 1);
     }
 
     #[test]
@@ -1289,14 +1460,14 @@ mod tests {
     fn render_process_shows_topology_and_fallback() {
         let files: Vec<PathBuf> = (0..6).map(|i| PathBuf::from(format!("/tmp/{i}.json"))).collect();
         let phys = case_study_plan(&files, "title", "abstract").optimize().lower().unwrap();
-        let r = phys.render_process(&ProcessOptions { processes: 3, worker_cmd: None });
+        let r = phys.render_process(&ProcessOptions { processes: 3, ..Default::default() });
         assert!(r.contains("ProcessPool [6 file-partitions, 3 worker processes]"), "{r}");
         assert!(r.contains("plan-worker"), "{r}");
         assert!(r.contains("fold P3PW result frames"), "{r}");
         assert!(r.contains("hash-keys #0 [title, abstract]"), "{r}");
         // One shard: the executor delegates, and EXPLAIN says so.
         let one = case_study_plan(&files[..1], "title", "abstract").optimize().lower().unwrap();
-        let r = one.render_process(&ProcessOptions { processes: 8, worker_cmd: None });
+        let r = one.render_process(&ProcessOptions { processes: 8, ..Default::default() });
         assert!(r.contains("fallback"), "{r}");
         assert!(r.contains("SinglePass"), "{r}");
     }

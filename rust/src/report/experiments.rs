@@ -279,4 +279,50 @@ mod tests {
         assert!(cache.stats().hits() >= 1);
         std::fs::remove_dir_all(&base).unwrap();
     }
+
+    #[test]
+    fn suite_digests_each_shard_exactly_once_per_cold_run() {
+        // The cold-start triple-cost regression: EXPLAIN's cache probe,
+        // the driver's cache fingerprint and the executor each used to
+        // read the corpus independently. With both fingerprint callers
+        // routed through the shared manager's memo, a cold suite pays
+        // exactly one digest pass per shard; everything after that is a
+        // stat-revalidation.
+        let base = std::env::temp_dir()
+            .join(format!("p3sapp-suite-fpmemo-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let mut opts = SuiteOptions::new(&base);
+        opts.scale = 0.1;
+        opts.workers = 2;
+        opts.tiers = vec![1];
+        opts.skip_ca = true;
+        opts.explain = true; // the EXPLAIN probe must not add a digest pass
+        let cache =
+            std::sync::Arc::new(crate::cache::CacheManager::open(base.join("cache")).unwrap());
+        opts.cache = Some(std::sync::Arc::clone(&cache));
+
+        let first = run_suite(&opts).unwrap();
+        let n_files = first.tiers[0].n_files as u64;
+        assert!(n_files > 1, "tier 1 must have several shards for this to mean anything");
+        let cold = cache.stats();
+        assert_eq!(
+            cold.fp_digest_shards, n_files,
+            "cold suite: exactly one digest per shard (EXPLAIN probe and driver \
+             fingerprint share the memo)"
+        );
+        assert!(
+            cold.fp_stat_revalidations >= 1,
+            "the driver run after the EXPLAIN probe revalidates by stat, not re-digest"
+        );
+
+        let second = run_suite(&opts).unwrap();
+        assert!(second.tiers[0].p3sapp.from_cache(), "repeat must restore");
+        let warm = cache.stats();
+        assert_eq!(
+            warm.fp_digest_shards, n_files,
+            "a warm repeat must not re-digest any shard"
+        );
+        assert!(warm.fp_stat_revalidations > cold.fp_stat_revalidations);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
 }

@@ -1,0 +1,171 @@
+//! Admission control for the serve daemon: a bounded wait queue in
+//! front of a fixed number of execution permits, plus a per-job memory
+//! budget screened before a job ever queues.
+//!
+//! The contract the black-box tests pin: a submission is either
+//! **admitted** (possibly after waiting in the bounded queue), or
+//! rejected **immediately** with a typed cause — queue at capacity or
+//! job over the memory budget. Nothing ever blocks indefinitely behind
+//! an unbounded backlog, and rejection is a reply, not a dropped
+//! connection.
+
+use std::sync::{Condvar, Mutex};
+
+/// Shared admission state: `active` jobs hold a permit, `queued` jobs
+/// wait for one.
+#[derive(Debug, Default)]
+struct State {
+    active: usize,
+    queued: usize,
+}
+
+/// The daemon-wide admission controller.
+#[derive(Debug)]
+pub struct Admission {
+    max_active: usize,
+    max_queue: usize,
+    job_budget_bytes: u64,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// An execution permit; dropping it releases the slot and wakes one
+/// queued waiter.
+#[derive(Debug)]
+pub struct Permit<'a> {
+    adm: &'a Admission,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        let mut st = self.adm.state.lock().unwrap();
+        st.active -= 1;
+        drop(st);
+        self.adm.cv.notify_one();
+    }
+}
+
+/// The outcome of [`Admission::admit`].
+#[derive(Debug)]
+pub enum Decision<'a> {
+    Admitted(Permit<'a>),
+    /// The wait queue is at capacity; the load snapshot goes into the
+    /// typed reply so a client sees *why* it was turned away.
+    QueueFull { active: usize, queued: usize },
+    /// The job's estimated footprint exceeds the per-job budget; it
+    /// would be rejected no matter how idle the daemon is, so it is
+    /// screened before taking a queue slot.
+    OverBudget { need_bytes: u64, budget_bytes: u64 },
+}
+
+impl Admission {
+    /// `max_active` is clamped to ≥ 1 (an admission controller that can
+    /// admit nothing is a deadlock generator); `max_queue` 0 means
+    /// reject whenever all permits are busy; `job_budget_bytes` 0 means
+    /// no per-job memory screening.
+    pub fn new(max_active: usize, max_queue: usize, job_budget_bytes: u64) -> Admission {
+        Admission {
+            max_active: max_active.max(1),
+            max_queue,
+            job_budget_bytes,
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Try to admit a job with an estimated footprint of `job_bytes`.
+    /// May block while queued (bounded by `max_queue` peers), never
+    /// blocks when rejecting.
+    pub fn admit(&self, job_bytes: u64) -> Decision<'_> {
+        if self.job_budget_bytes > 0 && job_bytes > self.job_budget_bytes {
+            return Decision::OverBudget {
+                need_bytes: job_bytes,
+                budget_bytes: self.job_budget_bytes,
+            };
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.active < self.max_active {
+            st.active += 1;
+            return Decision::Admitted(Permit { adm: self });
+        }
+        if st.queued >= self.max_queue {
+            return Decision::QueueFull { active: st.active, queued: st.queued };
+        }
+        st.queued += 1;
+        while st.active >= self.max_active {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.queued -= 1;
+        st.active += 1;
+        Decision::Admitted(Permit { adm: self })
+    }
+
+    /// `(active, queued)` snapshot for the stats reply.
+    pub fn load(&self) -> (usize, usize) {
+        let st = self.state.lock().unwrap();
+        (st.active, st.queued)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn over_budget_rejects_immediately() {
+        let adm = Admission::new(2, 8, 100);
+        match adm.admit(101) {
+            Decision::OverBudget { need_bytes, budget_bytes } => {
+                assert_eq!((need_bytes, budget_bytes), (101, 100));
+            }
+            other => panic!("expected OverBudget, got {other:?}"),
+        }
+        // Exactly at budget is fine; budget 0 disables the screen.
+        assert!(matches!(adm.admit(100), Decision::Admitted(_)));
+        let unlimited = Admission::new(1, 0, 0);
+        assert!(matches!(unlimited.admit(u64::MAX), Decision::Admitted(_)));
+    }
+
+    #[test]
+    fn queue_full_rejects_with_load_snapshot() {
+        let adm = Admission::new(1, 0, 0);
+        let permit = match adm.admit(1) {
+            Decision::Admitted(p) => p,
+            other => panic!("expected Admitted, got {other:?}"),
+        };
+        match adm.admit(1) {
+            Decision::QueueFull { active, queued } => assert_eq!((active, queued), (1, 0)),
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        drop(permit);
+        assert_eq!(adm.load(), (0, 0));
+        assert!(matches!(adm.admit(1), Decision::Admitted(_)));
+    }
+
+    #[test]
+    fn queued_job_runs_after_permit_release() {
+        let adm = Arc::new(Admission::new(1, 4, 0));
+        let first = match adm.admit(1) {
+            Decision::Admitted(p) => p,
+            other => panic!("expected Admitted, got {other:?}"),
+        };
+        let adm2 = Arc::clone(&adm);
+        let waiter = std::thread::spawn(move || match adm2.admit(1) {
+            Decision::Admitted(_) => true,
+            _ => false,
+        });
+        // Wait until the second submission is visibly queued, then
+        // release the permit and let it through.
+        loop {
+            if adm.load().1 == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        drop(first);
+        assert!(waiter.join().unwrap(), "queued job was admitted after release");
+        // The waiter's permit dropped when its thread finished.
+        assert_eq!(adm.load(), (0, 0));
+    }
+}

@@ -1,0 +1,401 @@
+//! Preprocessing-as-a-service: a persistent driver daemon.
+//!
+//! The paper's cost story (Tables 2–4) is that repeated preprocessing
+//! dominates cumulative cloud cost — and a one-shot CLI invocation
+//! re-pays the cold-start share of that cost on *every* job: the plan
+//! cache memo starts empty, every fingerprint is re-digested, and the
+//! `--processes` worker pool is spawned and torn down per run. Spark
+//! NLP's production answer is to serve pipelines as long-lived services
+//! rather than one-shot jobs; this module is that shape for the plan
+//! layer.
+//!
+//! `repro serve start --socket S` runs a daemon on a local Unix socket.
+//! Clients (`repro serve preprocess|explain|train|stats|shutdown`)
+//! exchange the same versioned, digest-trailed `P3PJ`/`P3PW` envelopes
+//! the multi-process executor ships to its workers — factored into
+//! [`proto`] so the framing, digest checks and failure semantics are
+//! one implementation — length-prefixed over the stream
+//! ([`proto::read_frame`]/[`proto::write_frame`]).
+//!
+//! What stays warm across requests:
+//!
+//! - the [`CacheManager`] memo tier (a repeat job restores its frame
+//!   from memory and honestly reports a `cache_restore` stage),
+//! - the plan-fingerprint memo (a warm repeat revalidates shards with a
+//!   stat instead of re-digesting every byte),
+//! - a [`WorkerPool`](crate::plan::process::WorkerPool) of persistent
+//!   `plan-worker --persist` processes (with `--processes N`), so
+//!   `--processes` jobs skip the per-run spawn cost.
+//!
+//! Concurrency is governed by [`admission::Admission`]: `--max-active`
+//! execution permits, a `--max-queue`-bounded wait queue, and a
+//! `--job-budget-bytes` per-job memory screen (estimated from the job's
+//! total shard bytes — the same quantity the byte-capped memo tiers
+//! account in). Over-budget and queue-full submissions get a typed
+//! [`proto::ServeError`] reply immediately; they never hang.
+
+pub mod admission;
+pub mod proto;
+
+pub use admission::{Admission, Decision};
+pub use proto::{ErrKind, JobSpec, PreprocessReply, Reply, Request, ServeError, StatsReply};
+
+use crate::cache::CacheManager;
+use crate::driver::{run_p3sapp, DriverOptions};
+use crate::ingest::list_shards;
+use crate::plan::process::WorkerPool;
+use crate::Result;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Daemon construction knobs (`repro serve start` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Unix socket path to listen on (created on start, removed on
+    /// shutdown; a stale file from a crashed daemon is replaced).
+    pub socket: PathBuf,
+    /// Plan cache directory (`None` = serve without a cache — every job
+    /// executes; the warm-repeat story needs this set).
+    pub cache_dir: Option<PathBuf>,
+    /// Worker binary for the pool (`None` = this executable, like the
+    /// one-shot `--processes` path).
+    pub worker_cmd: Option<PathBuf>,
+    /// Worker threads inside each in-process executor (0 = one per
+    /// core); a job spec's own non-zero `workers` overrides it.
+    pub workers: usize,
+    /// Keep a pool of N persistent worker processes and run jobs
+    /// through the multi-process executor (0 = in-process execution, no
+    /// pool).
+    pub processes: usize,
+    /// Admission: concurrent execution permits.
+    pub max_active: usize,
+    /// Admission: bounded wait-queue depth (0 = reject when busy).
+    pub max_queue: usize,
+    /// Admission: per-job memory budget in bytes, screened against the
+    /// job's total shard bytes (0 = unlimited).
+    pub job_budget_bytes: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            socket: PathBuf::from("/tmp/p3sapp-serve.sock"),
+            cache_dir: None,
+            worker_cmd: None,
+            workers: 0,
+            processes: 0,
+            max_active: 2,
+            max_queue: 8,
+            job_budget_bytes: 0,
+        }
+    }
+}
+
+/// Shared daemon state: everything that stays warm across requests.
+#[derive(Debug)]
+struct Daemon {
+    opts: ServeOptions,
+    cache: Option<Arc<CacheManager>>,
+    pool: Option<Arc<WorkerPool>>,
+    admission: Admission,
+    shutdown: AtomicBool,
+}
+
+/// Run the daemon until a shutdown request. Blocks the calling thread;
+/// client connections are handled on scoped threads, so a panic in one
+/// handler cannot orphan the pool.
+pub fn run_serve(opts: ServeOptions) -> Result<()> {
+    if opts.socket.exists() {
+        // A live daemon would still be accepting here; the common case
+        // for a pre-existing file is a crashed predecessor's stale
+        // socket. Probe before clobbering.
+        if UnixStream::connect(&opts.socket).is_ok() {
+            anyhow::bail!("a daemon is already listening on {}", opts.socket.display());
+        }
+        std::fs::remove_file(&opts.socket)
+            .map_err(|e| anyhow::anyhow!("remove stale socket {}: {e}", opts.socket.display()))?;
+    }
+    let listener = UnixListener::bind(&opts.socket)
+        .map_err(|e| anyhow::anyhow!("bind {}: {e}", opts.socket.display()))?;
+
+    let cache = match &opts.cache_dir {
+        Some(dir) => Some(Arc::new(CacheManager::open(dir.clone())?)),
+        None => None,
+    };
+    let pool = if opts.processes > 0 {
+        let cmd = match &opts.worker_cmd {
+            Some(cmd) => cmd.clone(),
+            None => std::env::current_exe()
+                .map_err(|e| anyhow::anyhow!("resolve worker binary: {e}"))?,
+        };
+        Some(Arc::new(WorkerPool::new(cmd, opts.processes)))
+    } else {
+        None
+    };
+    let daemon = Daemon {
+        admission: Admission::new(opts.max_active, opts.max_queue, opts.job_budget_bytes),
+        opts,
+        cache,
+        pool,
+        shutdown: AtomicBool::new(false),
+    };
+    eprintln!(
+        "[serve] listening on {} (max-active {}, max-queue {}, processes {})",
+        daemon.opts.socket.display(),
+        daemon.opts.max_active,
+        daemon.opts.max_queue,
+        daemon.opts.processes
+    );
+
+    std::thread::scope(|scope| {
+        for conn in listener.incoming() {
+            if daemon.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    scope.spawn(|| handle_client(stream, &daemon));
+                }
+                Err(e) => eprintln!("[serve] accept failed: {e}"),
+            }
+        }
+    });
+    // Scope joined: every in-flight job has replied, so every handler's
+    // pool clone is gone and dropping the daemon drops the last Arc —
+    // `WorkerPool`'s Drop reaps the persistent workers (clean EOF
+    // first, kill as fallback) before run_serve returns.
+    let socket = daemon.opts.socket.clone();
+    drop(daemon);
+    let _ = std::fs::remove_file(&socket);
+    eprintln!("[serve] shut down");
+    Ok(())
+}
+
+/// One-shot client call: connect to a daemon at `socket`, send `req`,
+/// return its reply. This is what the `repro serve <job>` subcommands
+/// and the black-box tests drive.
+pub fn request(socket: &Path, req: &Request) -> Result<Reply> {
+    let mut stream = UnixStream::connect(socket)
+        .map_err(|e| anyhow::anyhow!("connect {}: {e}", socket.display()))?;
+    proto::write_frame(&mut stream, &proto::encode_request(req))
+        .map_err(|e| anyhow::anyhow!("send request: {e}"))?;
+    match proto::read_frame(&mut stream)? {
+        Some(frame) => proto::decode_reply(&frame),
+        None => anyhow::bail!("daemon closed the connection without a reply"),
+    }
+}
+
+/// Serve one connection: one request, one reply. A malformed frame gets
+/// a typed `bad_request` reply; a client that hangs up early costs the
+/// daemon nothing but a log line.
+fn handle_client(mut stream: UnixStream, daemon: &Daemon) {
+    // A stalled or vanished client must not pin a handler thread (and
+    // with it, scope join at shutdown) forever.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let reply = match proto::read_frame(&mut stream) {
+        // Connected and left without sending a frame: nothing to do.
+        Ok(None) => return,
+        Ok(Some(frame)) => match proto::decode_request(&frame) {
+            Ok(req) => dispatch(req, daemon),
+            Err(e) => Reply::Err(ServeError {
+                kind: ErrKind::BadRequest,
+                message: format!("{e:#}"),
+            }),
+        },
+        Err(e) => Reply::Err(ServeError {
+            kind: ErrKind::BadRequest,
+            message: format!("{e:#}"),
+        }),
+    };
+    if let Err(e) = proto::write_frame(&mut stream, &proto::encode_reply(&reply)) {
+        // The client disconnected mid-job (or stalled past the write
+        // timeout). Its admitted work is already done and cached; the
+        // daemon itself keeps serving.
+        eprintln!("[serve] client went away before the reply: {e}");
+    }
+}
+
+fn err(kind: ErrKind, message: String) -> Reply {
+    Reply::Err(ServeError { kind, message })
+}
+
+fn dispatch(req: Request, daemon: &Daemon) -> Reply {
+    if daemon.shutdown.load(Ordering::SeqCst) {
+        return err(ErrKind::Shutdown, "daemon is shutting down".into());
+    }
+    match req {
+        // Stats is deliberately *not* admission-gated: it is the
+        // observability channel clients (and tests) use to watch the
+        // admission state itself.
+        Request::Stats => {
+            let (active, queued) = daemon.admission.load();
+            let cache = match &daemon.cache {
+                Some(c) => {
+                    let s = c.stats();
+                    format!(
+                        "mem_hits={} disk_hits={} misses={} stores={} \
+                         fp_digest_shards={} fp_stat_revalidations={}",
+                        s.mem_hits,
+                        s.disk_hits,
+                        s.misses,
+                        s.stores,
+                        s.fp_digest_shards,
+                        s.fp_stat_revalidations
+                    )
+                }
+                None => "disabled".into(),
+            };
+            Reply::Stats(StatsReply {
+                active: active as u64,
+                queued: queued as u64,
+                worker_pids: daemon.pool.as_deref().map(WorkerPool::pids).unwrap_or_default(),
+                cache,
+            })
+        }
+        Request::Shutdown => {
+            daemon.shutdown.store(true, Ordering::SeqCst);
+            // The accept loop is blocked in `incoming()`; poke it so it
+            // observes the flag. The nudge connection is served the
+            // shutting_down reply path or dropped — either is fine.
+            let _ = UnixStream::connect(&daemon.opts.socket);
+            Reply::Ok
+        }
+        // Explain is metadata-only (a cheap plan render plus at most a
+        // stat-revalidated fingerprint probe), so it also bypasses
+        // admission — a full queue must not block introspection.
+        Request::Explain(spec) => match explain_job(&spec, daemon) {
+            Ok(text) => Reply::Text(text),
+            Err(e) => err(ErrKind::Exec, format!("{e:#}")),
+        },
+        Request::Preprocess(spec) => run_admitted(&spec, daemon, |files, dopts| {
+            let res = run_p3sapp(files, dopts)?;
+            Ok(Reply::Preprocess(PreprocessReply::from_result(&res)))
+        }),
+        Request::Train { spec, artifacts, steps } => {
+            run_admitted(&spec, daemon, |files, dopts| train_job(files, dopts, &artifacts, steps))
+        }
+    }
+}
+
+/// Admission-gated execution shared by preprocess and train: estimate
+/// the job's footprint from its shard bytes, take (or be refused) a
+/// permit, then run.
+fn run_admitted(
+    spec: &JobSpec,
+    daemon: &Daemon,
+    job: impl FnOnce(&[PathBuf], &DriverOptions) -> Result<Reply>,
+) -> Reply {
+    let files = match list_shards(&spec.dir) {
+        Ok(files) => files,
+        Err(e) => return err(ErrKind::BadRequest, format!("{e:#}")),
+    };
+    let job_bytes: u64 =
+        files.iter().map(|f| std::fs::metadata(f).map(|m| m.len()).unwrap_or(0)).sum();
+    let _permit = match daemon.admission.admit(job_bytes) {
+        Decision::Admitted(permit) => permit,
+        Decision::QueueFull { active, queued } => {
+            return err(
+                ErrKind::QueueFull,
+                format!(
+                    "admission queue full ({active} active, {queued} queued, \
+                     --max-queue {}); retry later",
+                    daemon.opts.max_queue
+                ),
+            );
+        }
+        Decision::OverBudget { need_bytes, budget_bytes } => {
+            return err(
+                ErrKind::OverBudget,
+                format!(
+                    "job needs ~{need_bytes} bytes of shard input, per-job memory \
+                     budget is {budget_bytes} bytes (--job-budget-bytes)"
+                ),
+            );
+        }
+    };
+    if spec.linger_millis > 0 {
+        std::thread::sleep(Duration::from_millis(spec.linger_millis));
+    }
+    let dopts = daemon.driver_opts(spec);
+    match job(&files, &dopts) {
+        Ok(reply) => reply,
+        Err(e) => err(ErrKind::Exec, format!("{e:#}")),
+    }
+}
+
+impl Daemon {
+    /// Driver options for one served job: the spec's plan-variant knobs
+    /// over the daemon's warm cache and pool.
+    fn driver_opts(&self, spec: &JobSpec) -> DriverOptions {
+        DriverOptions {
+            workers: if spec.workers > 0 { spec.workers } else { self.opts.workers },
+            processes: self.pool.as_ref().map(|p| p.size()),
+            pool: self.pool.clone(),
+            cache: self.cache.clone(),
+            sample: spec.sample,
+            limit: spec.limit,
+            features: spec.features,
+            ..Default::default()
+        }
+    }
+}
+
+fn explain_job(spec: &JobSpec, daemon: &Daemon) -> Result<String> {
+    let files = list_shards(&spec.dir)?;
+    let dopts = daemon.driver_opts(spec);
+    crate::cache::explain_with_cache(
+        &dopts.build_plan(&files),
+        dopts.workers,
+        dopts.stream.as_ref(),
+        dopts.process_options().as_ref(),
+        dopts.cache.as_deref(),
+    )
+}
+
+/// The served `train` job: preprocess through the warm cache, then run
+/// the real training loop against the AOT artifacts. Mirrors the CLI
+/// `train` pipeline; the reply is a text summary (the model lives in
+/// the daemon's artifacts dir, not on the wire).
+fn train_job(
+    files: &[PathBuf],
+    dopts: &DriverOptions,
+    artifacts: &str,
+    steps: usize,
+) -> Result<Reply> {
+    use crate::runtime::{Session, Trainer};
+    use crate::vocab::{Batcher, Vocabulary};
+    let pre = run_p3sapp(files, dopts)?;
+    let from_cache = pre.from_cache();
+    let session = Session::cpu(artifacts)?;
+    let mut trainer = Trainer::new(session)?;
+    let mcfg = trainer.manifest.config.clone();
+    let frame = pre.frame;
+    let texts: Vec<&str> = (0..frame.num_rows())
+        .flat_map(|i| {
+            [frame.column(0).get_str(i).unwrap_or(""), frame.column(1).get_str(i).unwrap_or("")]
+        })
+        .collect();
+    let vocab = Vocabulary::build(texts.into_iter(), mcfg.vocab);
+    let mut batcher = Batcher::new(
+        &frame,
+        &vocab,
+        "title",
+        "abstract",
+        mcfg.batch,
+        mcfg.src_len,
+        mcfg.tgt_len,
+        42,
+    )?;
+    let stats = trainer.train_loop(steps, || batcher.next_batch())?;
+    let last_loss = stats.last().map(|s| s.loss).unwrap_or(f32::NAN);
+    Ok(Reply::Text(format!(
+        "preprocessed {} rows (cache restore: {from_cache}), trained {} steps, \
+         final loss {last_loss:.4}",
+        frame.num_rows(),
+        stats.len(),
+    )))
+}

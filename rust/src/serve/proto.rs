@@ -1,0 +1,683 @@
+//! The serve wire protocol: **one implementation** of the versioned
+//! `P3PJ`/`P3PW` envelope discipline shared by the multi-process plan
+//! executor ([`crate::plan::process`]) and the serve daemon
+//! ([`crate::serve`]).
+//!
+//! Three layers, smallest first:
+//!
+//! 1. **Envelope** — every message is `magic(4) + version(u32 LE) +
+//!    body + xxh64(body[4..])` ([`begin_frame`]/[`seal_frame`] build
+//!    it, [`check_frame`] validates it). Truncation, corruption and
+//!    version skew are detected before any payload is trusted; this is
+//!    the exact code the process executor has pinned since PR 5, now
+//!    factored here so the daemon cannot drift from it.
+//! 2. **Stream framing** — a `u64 LE` length prefix per envelope
+//!    ([`read_frame`]/[`write_frame`]), so the same envelopes cross a
+//!    long-lived byte stream (the daemon's Unix socket, a pooled
+//!    worker's pipes) instead of a one-shot stdin/stdout pair. Clean
+//!    EOF at a frame boundary is `None`, not an error — that is how a
+//!    pooled worker and the daemon's accept loop distinguish an orderly
+//!    hang-up from a truncated message.
+//! 3. **Serve job codec** — [`Request`]/[`Reply`] for the daemon's
+//!    preprocess/explain/train/stats/shutdown jobs, including the typed
+//!    backpressure errors ([`ServeError`]) admission control returns
+//!    instead of hanging.
+
+use crate::cache::artifact::{decode_cells, dtype_code, dtype_from, encode_cells, Cursor};
+use crate::cache::xxh64;
+use crate::frame::{Column, DType, Field, LocalFrame, Schema};
+use crate::Result;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Job frame magic (driver → worker, daemon client → daemon).
+pub(crate) const JOB_MAGIC: &[u8; 4] = b"P3PJ";
+/// Result frame magic (worker → driver, daemon → client).
+pub(crate) const REPLY_MAGIC: &[u8; 4] = b"P3PW";
+/// Wire-format version shared by both frames; a mismatch is a hard
+/// error (driver, workers and daemon are the same binary, so it only
+/// trips when a foreign peer is pointed at an incompatible build).
+pub(crate) const WIRE_VERSION: u32 = 1;
+/// Plan-worker job modes: run the op program and return per-shard
+/// results, or fold the shards into a fit accumulator and return its
+/// partial state.
+pub(crate) const MODE_MAP: u8 = 0;
+pub(crate) const MODE_FIT: u8 = 1;
+
+/// Upper bound on one length-prefixed frame: a declared length past
+/// this is treated as a garbled prefix rather than honored with a
+/// multi-gigabyte allocation.
+const MAX_FRAME_BYTES: u64 = 1 << 30;
+
+/// Start an envelope: magic + version, body appended by the caller.
+pub(crate) fn begin_frame(magic: &[u8; 4]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(256);
+    buf.extend_from_slice(magic);
+    buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    buf
+}
+
+/// Finish an envelope: append the xxh64 digest over everything past the
+/// magic (version included, like the `P3PC` artifact convention).
+pub(crate) fn seal_frame(buf: &mut Vec<u8>) {
+    let digest = xxh64(&buf[4..], 0);
+    buf.extend_from_slice(&digest.to_le_bytes());
+}
+
+/// Validate a frame's envelope (magic, digest, version) and return a
+/// cursor over its body.
+pub(crate) fn check_frame<'a>(bytes: &'a [u8], magic: &[u8; 4], what: &str) -> Result<Cursor<'a>> {
+    anyhow::ensure!(bytes.len() >= 16, "{what} frame too short ({} bytes)", bytes.len());
+    anyhow::ensure!(&bytes[..4] == magic, "{what} frame has bad magic");
+    let body = &bytes[..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    anyhow::ensure!(xxh64(&body[4..], 0) == stored, "{what} frame digest mismatch");
+    let mut cur = Cursor::new(body, 4);
+    let version = cur.u32()?;
+    anyhow::ensure!(version == WIRE_VERSION, "unsupported {what} frame version {version}");
+    Ok(cur)
+}
+
+pub(crate) fn write_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Shard paths cross the wire as raw OS bytes on unix — a POSIX
+/// filename need not be UTF-8, and a lossy round trip would make the
+/// worker fail on a subtly mangled path. Elsewhere (no byte-level path
+/// API) the lossy conversion is the best available.
+pub(crate) fn write_path(buf: &mut Vec<u8>, path: &Path) {
+    #[cfg(unix)]
+    {
+        use std::os::unix::ffi::OsStrExt;
+        let bytes = path.as_os_str().as_bytes();
+        buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        buf.extend_from_slice(bytes);
+    }
+    #[cfg(not(unix))]
+    {
+        write_str(buf, &path.to_string_lossy());
+    }
+}
+
+pub(crate) fn read_path(cur: &mut Cursor<'_>) -> Result<PathBuf> {
+    let len = cur.u32()? as usize;
+    let bytes = cur.take(len)?;
+    #[cfg(unix)]
+    {
+        use std::os::unix::ffi::OsStrExt;
+        Ok(PathBuf::from(std::ffi::OsStr::from_bytes(bytes)))
+    }
+    #[cfg(not(unix))]
+    {
+        Ok(PathBuf::from(String::from_utf8(bytes.to_vec())?))
+    }
+}
+
+/// Write one envelope onto a byte stream with a `u64 LE` length prefix.
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(frame.len() as u64).to_le_bytes())?;
+    w.write_all(frame)?;
+    w.flush()
+}
+
+/// Read one length-prefixed envelope off a byte stream. Clean EOF at a
+/// frame boundary returns `None` (orderly hang-up); EOF inside a prefix
+/// or body, an unreasonable declared length, or any other I/O error is
+/// an `Err` — truncation can never be mistaken for completion.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 8];
+    let mut got = 0;
+    while got < 8 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => anyhow::bail!("frame length prefix truncated ({got} of 8 bytes)"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(anyhow::anyhow!("reading frame length: {e}")),
+        }
+    }
+    let len = u64::from_le_bytes(len_buf);
+    anyhow::ensure!(
+        (16..=MAX_FRAME_BYTES).contains(&len),
+        "unreasonable frame length {len}"
+    );
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)
+        .map_err(|e| anyhow::anyhow!("frame body truncated ({len} bytes declared): {e}"))?;
+    Ok(Some(buf))
+}
+
+// ---------------------------------------------------------------------------
+// Serve job codec
+// ---------------------------------------------------------------------------
+
+const REQ_PREPROCESS: u8 = 0;
+const REQ_EXPLAIN: u8 = 1;
+const REQ_TRAIN: u8 = 2;
+const REQ_STATS: u8 = 3;
+const REQ_SHUTDOWN: u8 = 4;
+
+const STATUS_OK: u8 = 0;
+const STATUS_ERR: u8 = 1;
+
+const PAYLOAD_EMPTY: u8 = 0;
+const PAYLOAD_TEXT: u8 = 1;
+const PAYLOAD_PREPROCESS: u8 = 2;
+const PAYLOAD_STATS: u8 = 3;
+
+/// One preprocessing job, as a client describes it: the corpus dir plus
+/// the plan-variant knobs the one-shot CLI takes.
+#[derive(Debug, Clone, Default)]
+pub struct JobSpec {
+    pub dir: PathBuf,
+    /// Worker threads for the in-process executors (0 = one per core).
+    pub workers: usize,
+    pub sample: Option<(f64, u64)>,
+    pub limit: Option<usize>,
+    pub features: bool,
+    /// Test/ops knob: hold the admission permit for this many
+    /// milliseconds before executing. Makes the admission-control
+    /// black-box tests (queue-full, client-disconnect-mid-job)
+    /// deterministic without a sleep-and-hope race; 0 in normal use.
+    pub linger_millis: u64,
+}
+
+/// A client request to the serve daemon.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Preprocess(JobSpec),
+    Explain(JobSpec),
+    Train { spec: JobSpec, artifacts: String, steps: usize },
+    Stats,
+    Shutdown,
+}
+
+/// Typed failure causes: admission backpressure ([`ErrKind::QueueFull`],
+/// [`ErrKind::OverBudget`]) and the request/execution failures. A
+/// client always gets one of these as a reply — never a hang, never a
+/// dropped connection with no diagnosis (unless the client itself left).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrKind {
+    /// Admission queue at capacity: retry later.
+    QueueFull,
+    /// The job's estimated bytes exceed the per-job memory budget.
+    OverBudget,
+    /// The request frame or its contents could not be understood.
+    BadRequest,
+    /// The job was admitted but failed while executing.
+    Exec,
+    /// The daemon is shutting down and takes no new jobs.
+    Shutdown,
+}
+
+impl ErrKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrKind::QueueFull => "queue_full",
+            ErrKind::OverBudget => "over_budget",
+            ErrKind::BadRequest => "bad_request",
+            ErrKind::Exec => "exec",
+            ErrKind::Shutdown => "shutting_down",
+        }
+    }
+
+    fn code(&self) -> u8 {
+        match self {
+            ErrKind::QueueFull => 0,
+            ErrKind::OverBudget => 1,
+            ErrKind::BadRequest => 2,
+            ErrKind::Exec => 3,
+            ErrKind::Shutdown => 4,
+        }
+    }
+
+    fn from_code(code: u8) -> Result<ErrKind> {
+        Ok(match code {
+            0 => ErrKind::QueueFull,
+            1 => ErrKind::OverBudget,
+            2 => ErrKind::BadRequest,
+            3 => ErrKind::Exec,
+            4 => ErrKind::Shutdown,
+            other => anyhow::bail!("unknown serve error kind {other}"),
+        })
+    }
+}
+
+/// A typed error reply naming its cause.
+#[derive(Debug, Clone)]
+pub struct ServeError {
+    pub kind: ErrKind,
+    pub message: String,
+}
+
+/// A completed preprocess job: the row accounting, the honest stage
+/// times (a warm job reports exactly one `cache_restore` stage), and
+/// the cleaned frame itself, cell-encoded with the same `P3PC` codec
+/// the artifact store and the worker reply frames use.
+#[derive(Debug, Clone)]
+pub struct PreprocessReply {
+    pub rows_ingested: u64,
+    pub rows_out: u64,
+    /// `(stage name, nanos)` in recorded order.
+    pub stages: Vec<(String, u64)>,
+    /// `(column name, dtype)` in schema order.
+    pub schema: Vec<(String, DType)>,
+    pub columns: Vec<Column>,
+}
+
+impl PreprocessReply {
+    pub fn from_result(res: &crate::driver::PreprocessResult) -> PreprocessReply {
+        PreprocessReply {
+            rows_ingested: res.rows_ingested as u64,
+            rows_out: res.rows_out as u64,
+            stages: res
+                .times
+                .stages()
+                .map(|(name, d)| (name.to_string(), d.as_nanos() as u64))
+                .collect(),
+            schema: res
+                .frame
+                .schema()
+                .fields()
+                .iter()
+                .map(|f| (f.name.clone(), f.dtype))
+                .collect(),
+            columns: res.frame.columns().to_vec(),
+        }
+    }
+
+    /// Whether this job was served from the live cache (keyed on the
+    /// presence of the `cache_restore` stage, like
+    /// [`crate::driver::PreprocessResult::from_cache`]).
+    pub fn from_cache(&self) -> bool {
+        self.stages.iter().any(|(name, _)| name == crate::driver::CACHE_RESTORE)
+    }
+
+    /// Reassemble the cleaned frame — what byte-identity tests compare
+    /// against a one-shot in-process run.
+    pub fn frame(&self) -> Result<LocalFrame> {
+        let fields =
+            self.schema.iter().map(|(name, dtype)| Field::new(name.clone(), *dtype)).collect();
+        LocalFrame::from_columns(Schema::new(fields), self.columns.clone())
+    }
+}
+
+/// Daemon liveness/occupancy snapshot.
+#[derive(Debug, Clone)]
+pub struct StatsReply {
+    /// Jobs currently holding an admission permit.
+    pub active: u64,
+    /// Jobs waiting in the admission queue.
+    pub queued: u64,
+    /// PIDs of the live pooled plan workers (lazily spawned — empty
+    /// until the first `--processes` job warms the pool).
+    pub worker_pids: Vec<u32>,
+    /// Rendered cache counters (one line).
+    pub cache: String,
+}
+
+/// A daemon reply.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    Preprocess(PreprocessReply),
+    /// Rendered EXPLAIN text or a train summary.
+    Text(String),
+    Stats(StatsReply),
+    /// Bare acknowledgement (shutdown).
+    Ok,
+    Err(ServeError),
+}
+
+fn encode_spec(buf: &mut Vec<u8>, spec: &JobSpec) {
+    write_path(buf, &spec.dir);
+    buf.extend_from_slice(&(spec.workers as u32).to_le_bytes());
+    match spec.sample {
+        None => buf.push(0),
+        Some((fraction, seed)) => {
+            buf.push(1);
+            buf.extend_from_slice(&fraction.to_le_bytes());
+            buf.extend_from_slice(&seed.to_le_bytes());
+        }
+    }
+    match spec.limit {
+        None => buf.push(0),
+        Some(n) => {
+            buf.push(1);
+            buf.extend_from_slice(&(n as u64).to_le_bytes());
+        }
+    }
+    buf.push(spec.features as u8);
+    buf.extend_from_slice(&spec.linger_millis.to_le_bytes());
+}
+
+fn decode_spec(cur: &mut Cursor<'_>) -> Result<JobSpec> {
+    let dir = read_path(cur)?;
+    let workers = cur.u32()? as usize;
+    let sample = match cur.u8()? {
+        0 => None,
+        _ => Some((cur.f64()?, cur.u64()?)),
+    };
+    let limit = match cur.u8()? {
+        0 => None,
+        _ => Some(cur.u64()? as usize),
+    };
+    let features = cur.u8()? != 0;
+    let linger_millis = cur.u64()?;
+    Ok(JobSpec { dir, workers, sample, limit, features, linger_millis })
+}
+
+/// Serialize a request into a sealed `P3PJ` envelope.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut buf = begin_frame(JOB_MAGIC);
+    match req {
+        Request::Preprocess(spec) => {
+            buf.push(REQ_PREPROCESS);
+            encode_spec(&mut buf, spec);
+        }
+        Request::Explain(spec) => {
+            buf.push(REQ_EXPLAIN);
+            encode_spec(&mut buf, spec);
+        }
+        Request::Train { spec, artifacts, steps } => {
+            buf.push(REQ_TRAIN);
+            encode_spec(&mut buf, spec);
+            write_str(&mut buf, artifacts);
+            buf.extend_from_slice(&(*steps as u64).to_le_bytes());
+        }
+        Request::Stats => buf.push(REQ_STATS),
+        Request::Shutdown => buf.push(REQ_SHUTDOWN),
+    }
+    seal_frame(&mut buf);
+    buf
+}
+
+/// Validate and decode a request envelope.
+pub fn decode_request(frame: &[u8]) -> Result<Request> {
+    let mut cur = check_frame(frame, JOB_MAGIC, "serve request")?;
+    let req = match cur.u8()? {
+        REQ_PREPROCESS => Request::Preprocess(decode_spec(&mut cur)?),
+        REQ_EXPLAIN => Request::Explain(decode_spec(&mut cur)?),
+        REQ_TRAIN => {
+            let spec = decode_spec(&mut cur)?;
+            let artifacts = cur.str()?;
+            let steps = cur.u64()? as usize;
+            Request::Train { spec, artifacts, steps }
+        }
+        REQ_STATS => Request::Stats,
+        REQ_SHUTDOWN => Request::Shutdown,
+        other => anyhow::bail!("unknown serve request kind {other}"),
+    };
+    anyhow::ensure!(
+        cur.remaining() == 0,
+        "serve request has {} trailing bytes",
+        cur.remaining()
+    );
+    Ok(req)
+}
+
+/// Serialize a reply into a sealed `P3PW` envelope.
+pub fn encode_reply(reply: &Reply) -> Vec<u8> {
+    let mut buf = begin_frame(REPLY_MAGIC);
+    match reply {
+        Reply::Err(e) => {
+            buf.push(STATUS_ERR);
+            buf.push(e.kind.code());
+            write_str(&mut buf, &e.message);
+        }
+        Reply::Ok => {
+            buf.push(STATUS_OK);
+            buf.push(PAYLOAD_EMPTY);
+        }
+        Reply::Text(text) => {
+            buf.push(STATUS_OK);
+            buf.push(PAYLOAD_TEXT);
+            write_str(&mut buf, text);
+        }
+        Reply::Stats(s) => {
+            buf.push(STATUS_OK);
+            buf.push(PAYLOAD_STATS);
+            buf.extend_from_slice(&s.active.to_le_bytes());
+            buf.extend_from_slice(&s.queued.to_le_bytes());
+            buf.extend_from_slice(&(s.worker_pids.len() as u32).to_le_bytes());
+            for pid in &s.worker_pids {
+                buf.extend_from_slice(&pid.to_le_bytes());
+            }
+            write_str(&mut buf, &s.cache);
+        }
+        Reply::Preprocess(p) => {
+            buf.push(STATUS_OK);
+            buf.push(PAYLOAD_PREPROCESS);
+            buf.extend_from_slice(&p.rows_ingested.to_le_bytes());
+            buf.extend_from_slice(&p.rows_out.to_le_bytes());
+            buf.extend_from_slice(&(p.stages.len() as u32).to_le_bytes());
+            for (name, nanos) in &p.stages {
+                write_str(&mut buf, name);
+                buf.extend_from_slice(&nanos.to_le_bytes());
+            }
+            buf.extend_from_slice(&(p.schema.len() as u32).to_le_bytes());
+            for ((name, dtype), col) in p.schema.iter().zip(&p.columns) {
+                write_str(&mut buf, name);
+                buf.push(dtype_code(*dtype));
+                encode_cells(&mut buf, col);
+            }
+        }
+    }
+    seal_frame(&mut buf);
+    buf
+}
+
+/// Validate and decode a reply envelope. Every declared count is
+/// checked against the bytes present (via the shared `P3PC` cell
+/// decoder) so a corrupt reply can only ever error.
+pub fn decode_reply(frame: &[u8]) -> Result<Reply> {
+    let mut cur = check_frame(frame, REPLY_MAGIC, "serve reply")?;
+    let reply = match cur.u8()? {
+        STATUS_ERR => {
+            let kind = ErrKind::from_code(cur.u8()?)?;
+            let message = cur.str()?;
+            Reply::Err(ServeError { kind, message })
+        }
+        STATUS_OK => match cur.u8()? {
+            PAYLOAD_EMPTY => Reply::Ok,
+            PAYLOAD_TEXT => Reply::Text(cur.str()?),
+            PAYLOAD_STATS => {
+                let active = cur.u64()?;
+                let queued = cur.u64()?;
+                let n = cur.u32()? as usize;
+                anyhow::ensure!(
+                    n.saturating_mul(4) <= cur.remaining(),
+                    "stats reply declares {n} worker pids"
+                );
+                let worker_pids = (0..n).map(|_| cur.u32()).collect::<Result<Vec<_>>>()?;
+                let cache = cur.str()?;
+                Reply::Stats(StatsReply { active, queued, worker_pids, cache })
+            }
+            PAYLOAD_PREPROCESS => {
+                let rows_ingested = cur.u64()?;
+                let rows_out = cur.u64()?;
+                let n_stages = cur.u32()? as usize;
+                anyhow::ensure!(
+                    n_stages <= cur.remaining(),
+                    "preprocess reply declares {n_stages} stages"
+                );
+                let mut stages = Vec::with_capacity(n_stages);
+                for _ in 0..n_stages {
+                    let name = cur.str()?;
+                    stages.push((name, cur.u64()?));
+                }
+                let n_cols = cur.u32()? as usize;
+                anyhow::ensure!(
+                    n_cols <= cur.remaining(),
+                    "preprocess reply declares {n_cols} columns"
+                );
+                let mut schema = Vec::with_capacity(n_cols);
+                let mut columns = Vec::with_capacity(n_cols);
+                for _ in 0..n_cols {
+                    let name = cur.str()?;
+                    let dtype = dtype_from(cur.u8()?)?;
+                    columns.push(decode_cells(&mut cur, dtype, rows_out as usize)?);
+                    schema.push((name, dtype));
+                }
+                Reply::Preprocess(PreprocessReply {
+                    rows_ingested,
+                    rows_out,
+                    stages,
+                    schema,
+                    columns,
+                })
+            }
+            other => anyhow::bail!("unknown serve reply payload {other}"),
+        },
+        other => anyhow::bail!("unknown serve reply status {other}"),
+    };
+    anyhow::ensure!(
+        cur.remaining() == 0,
+        "serve reply has {} trailing bytes",
+        cur.remaining()
+    );
+    Ok(reply)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_framing_roundtrips_and_detects_truncation() {
+        let frame = vec![7u8; 64];
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &frame).unwrap();
+        let mut r = wire.as_slice();
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), frame);
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF is None");
+        // Truncated prefix and truncated body are errors, not EOF.
+        assert!(read_frame(&mut &wire[..4]).is_err());
+        assert!(read_frame(&mut &wire[..wire.len() - 1]).is_err());
+        // A garbage length prefix never drives a giant allocation.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(read_frame(&mut huge.as_slice()).is_err());
+    }
+
+    #[test]
+    fn requests_roundtrip_and_reject_corruption() {
+        let spec = JobSpec {
+            dir: PathBuf::from("/tmp/corpus"),
+            workers: 4,
+            sample: Some((0.5, 42)),
+            limit: Some(100),
+            features: true,
+            linger_millis: 250,
+        };
+        for req in [
+            Request::Preprocess(spec.clone()),
+            Request::Explain(spec.clone()),
+            Request::Train { spec: spec.clone(), artifacts: "artifacts".into(), steps: 12 },
+            Request::Stats,
+            Request::Shutdown,
+        ] {
+            let frame = encode_request(&req);
+            let back = decode_request(&frame).unwrap();
+            match (&req, &back) {
+                (Request::Preprocess(a), Request::Preprocess(b))
+                | (Request::Explain(a), Request::Explain(b)) => {
+                    assert_eq!(a.dir, b.dir);
+                    assert_eq!(a.workers, b.workers);
+                    assert_eq!(a.sample, b.sample);
+                    assert_eq!(a.limit, b.limit);
+                    assert_eq!(a.features, b.features);
+                    assert_eq!(a.linger_millis, b.linger_millis);
+                }
+                (
+                    Request::Train { spec: a, artifacts: aa, steps: sa },
+                    Request::Train { spec: b, artifacts: ab, steps: sb },
+                ) => {
+                    assert_eq!(a.dir, b.dir);
+                    assert_eq!((aa, sa), (ab, sb));
+                }
+                (Request::Stats, Request::Stats) | (Request::Shutdown, Request::Shutdown) => {}
+                other => panic!("request changed shape over the wire: {other:?}"),
+            }
+            // Corruption fails the digest; truncation fails the length
+            // checks — never a panic, never a silently different job.
+            let mut bad = frame.clone();
+            let mid = bad.len() / 2;
+            bad[mid] ^= 0x10;
+            assert!(decode_request(&bad).is_err());
+            assert!(decode_request(&frame[..frame.len() - 3]).is_err());
+            // A request is not a reply.
+            assert!(decode_reply(&frame).is_err());
+        }
+    }
+
+    #[test]
+    fn replies_roundtrip_including_frames_and_typed_errors() {
+        let frame = LocalFrame::from_columns(
+            Schema::new(vec![
+                Field::new("title", DType::Str),
+                Field::new("tfidf", DType::Vector),
+            ]),
+            vec![
+                Column::Str(vec![Some("a".into()), Some("b".into())]),
+                Column::Vecs(vec![Some(vec![1.0, 2.0]), None]),
+            ],
+        )
+        .unwrap();
+        let res = crate::driver::PreprocessResult {
+            frame: frame.clone(),
+            times: {
+                let mut t = crate::metrics::StageTimes::new();
+                t.add(crate::driver::CACHE_RESTORE, std::time::Duration::from_millis(3));
+                t
+            },
+            rows_ingested: 5,
+            rows_out: 2,
+        };
+        let p = PreprocessReply::from_result(&res);
+        assert!(p.from_cache());
+        let wire = encode_reply(&Reply::Preprocess(p));
+        match decode_reply(&wire).unwrap() {
+            Reply::Preprocess(back) => {
+                assert_eq!(back.rows_ingested, 5);
+                assert_eq!(back.rows_out, 2);
+                assert_eq!(back.stages, vec![("cache_restore".to_string(), 3_000_000)]);
+                assert!(back.from_cache());
+                assert_eq!(back.frame().unwrap(), frame, "frame survives the socket byte-for-byte");
+            }
+            other => panic!("wrong reply: {other:?}"),
+        }
+        let mut bad = wire.clone();
+        bad[wire.len() / 2] ^= 0x01;
+        assert!(decode_reply(&bad).is_err());
+
+        let err_wire = encode_reply(&Reply::Err(ServeError {
+            kind: ErrKind::QueueFull,
+            message: "admission queue full (2 active, 8 queued)".into(),
+        }));
+        match decode_reply(&err_wire).unwrap() {
+            Reply::Err(e) => {
+                assert_eq!(e.kind, ErrKind::QueueFull);
+                assert_eq!(e.kind.name(), "queue_full");
+                assert!(e.message.contains("queue full"));
+            }
+            other => panic!("wrong reply: {other:?}"),
+        }
+
+        let stats_wire = encode_reply(&Reply::Stats(StatsReply {
+            active: 1,
+            queued: 2,
+            worker_pids: vec![101, 202],
+            cache: "mem_hits=3".into(),
+        }));
+        match decode_reply(&stats_wire).unwrap() {
+            Reply::Stats(s) => {
+                assert_eq!((s.active, s.queued), (1, 2));
+                assert_eq!(s.worker_pids, vec![101, 202]);
+                assert_eq!(s.cache, "mem_hits=3");
+            }
+            other => panic!("wrong reply: {other:?}"),
+        }
+    }
+}

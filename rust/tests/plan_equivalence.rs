@@ -34,6 +34,7 @@ fn process_opts(processes: usize) -> ProcessOptions {
     ProcessOptions {
         processes,
         worker_cmd: Some(PathBuf::from(env!("CARGO_BIN_EXE_repro"))),
+        ..Default::default()
     }
 }
 

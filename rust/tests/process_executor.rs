@@ -26,7 +26,7 @@ fn repro_bin() -> PathBuf {
 }
 
 fn process_opts(processes: usize) -> ProcessOptions {
-    ProcessOptions { processes, worker_cmd: Some(repro_bin()) }
+    ProcessOptions { processes, worker_cmd: Some(repro_bin()), ..Default::default() }
 }
 
 fn corpus(name: &str, seed: u64) -> (PathBuf, Vec<PathBuf>) {
@@ -112,6 +112,7 @@ fn fewer_shards_than_workers_delegates_to_the_single_pass() {
     let opts = ProcessOptions {
         processes: 8,
         worker_cmd: Some(PathBuf::from("/nonexistent/worker/binary")),
+        ..Default::default()
     };
     let out = plan.execute_process(&opts).unwrap();
     assert_eq!(out.frame, fused.frame);
@@ -147,6 +148,7 @@ fn worker_nonzero_exit_is_a_driver_error_naming_the_worker() {
     let opts = ProcessOptions {
         processes: 2,
         worker_cmd: Some(PathBuf::from("/bin/false")),
+        ..Default::default()
     };
     let err = plan.execute_process(&opts).unwrap_err();
     let msg = format!("{err:#}");
@@ -165,6 +167,7 @@ fn worker_emitting_a_garbled_frame_is_a_driver_error() {
     let opts = ProcessOptions {
         processes: 2,
         worker_cmd: Some(PathBuf::from("/bin/echo")),
+        ..Default::default()
     };
     let err = plan.execute_process(&opts).unwrap_err();
     let msg = format!("{err:#}");
@@ -194,7 +197,7 @@ fn worker_killed_mid_run_is_a_driver_error_not_a_hang() {
     std::fs::set_permissions(&script, perms).unwrap();
 
     let plan = case_study_plan(&files, "title", "abstract").optimize();
-    let opts = ProcessOptions { processes: 2, worker_cmd: Some(script) };
+    let opts = ProcessOptions { processes: 2, worker_cmd: Some(script), ..Default::default() };
     let err = plan.execute_process(&opts).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("plan worker"), "{msg}");
@@ -203,10 +206,50 @@ fn worker_killed_mid_run_is_a_driver_error_not_a_hang() {
 }
 
 #[test]
+fn pooled_workers_persist_across_runs_and_match_the_single_pass() {
+    // The serve daemon's warm pool: the same persistent `plan-worker
+    // --persist` processes serve repeated jobs. Output must stay
+    // byte-identical to the fused single pass, and the second run must
+    // reuse the first run's workers (same pids), not respawn.
+    let (dir, files) = corpus("pooled", 17);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let fused = plan.execute(2).unwrap();
+    let pool = std::sync::Arc::new(p3sapp::plan::WorkerPool::new(repro_bin(), 2));
+    let opts =
+        ProcessOptions { processes: 2, pool: Some(pool.clone()), ..Default::default() };
+    let first = plan.execute_process(&opts).unwrap();
+    assert_eq!(first.frame, fused.frame);
+    assert_eq!(first.rows_out, fused.rows_out);
+    let pids = pool.pids();
+    assert_eq!(pids.len(), 2, "both pool slots spawned lazily on first use");
+    let second = plan.execute_process(&opts).unwrap();
+    assert_eq!(second.frame, fused.frame);
+    assert_eq!(pool.pids(), pids, "warm repeat reuses the same workers");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[cfg(unix)]
+#[test]
+fn pooled_worker_failure_names_the_pooled_worker_and_does_not_hang() {
+    // A pool whose command dies immediately: the exchange must fail with
+    // an error naming the pooled worker and its command — same contract
+    // as the spawn-per-run failure paths above, no hang, no orphan.
+    let (dir, files) = corpus("pooldead", 19);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let pool = std::sync::Arc::new(p3sapp::plan::WorkerPool::new("/bin/false", 2));
+    let opts = ProcessOptions { processes: 2, pool: Some(pool), ..Default::default() };
+    let err = plan.execute_process(&opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pooled plan worker"), "{msg}");
+    assert!(msg.contains("/bin/false"), "{msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn explain_process_renders_the_real_topology() {
     let (dir, files) = corpus("explain", 3);
     let plan = case_study_plan(&files, "title", "abstract");
-    let opts = ProcessOptions { processes: 2, worker_cmd: None };
+    let opts = ProcessOptions { processes: 2, ..Default::default() };
     let text = p3sapp::plan::explain_process(&plan, &opts).unwrap();
     assert!(text.contains("== Physical Plan (multi-process) =="), "{text}");
     assert!(text.contains("worker processes"), "{text}");

@@ -1,0 +1,408 @@
+//! Black-box tests for the preprocessing daemon (`repro serve`).
+//!
+//! Every test spawns the *built binary* (`CARGO_BIN_EXE_repro serve
+//! start`) as a real OS process and talks to it over its Unix socket
+//! with real clients — nothing here reaches into daemon internals. The
+//! pinned contracts:
+//!
+//! - a warm repeat of an identical job restores from the daemon's live
+//!   cache (the reply reports a `cache_restore` stage) and its frame is
+//!   byte-identical to a one-shot in-process run;
+//! - N concurrent clients all complete, each byte-identical to the
+//!   one-shot result;
+//! - shutdown is clean: the pool's persistent workers are reaped (no
+//!   orphans) and the socket file is removed;
+//! - failure semantics mirror `process_executor.rs`: a garbled or
+//!   truncated frame, a queue-full or over-budget submission, and a
+//!   client that disconnects mid-job each produce a typed reply naming
+//!   the cause (or a log line) — never a daemon crash or hang.
+
+#![cfg(unix)]
+
+use p3sapp::corpus::{generate_corpus, CorpusSpec};
+use p3sapp::driver::{run_p3sapp, DriverOptions};
+use p3sapp::ingest::list_shards;
+use p3sapp::serve::proto::{encode_request, read_frame, write_frame};
+use p3sapp::serve::{request, ErrKind, JobSpec, Reply, Request};
+use std::io::Write;
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn repro_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_repro"))
+}
+
+/// Per-test scratch root: corpus shards, socket, cache dir.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("p3sapp-serve-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn corpus(root: &PathBuf, seed: u64) -> (PathBuf, Vec<PathBuf>) {
+    let dir = root.join("corpus");
+    generate_corpus(&CorpusSpec::tiny(seed), &dir).unwrap();
+    let files = list_shards(&dir).unwrap();
+    (dir, files)
+}
+
+/// A running daemon process; Drop shuts it down (politely, then by
+/// force) so a failing test cannot leak daemons.
+struct DaemonGuard {
+    child: Child,
+    socket: PathBuf,
+}
+
+impl DaemonGuard {
+    /// Spawn `repro serve start --socket <root>/serve.sock <extra...>`
+    /// and wait for the socket to accept connections.
+    fn start(root: &PathBuf, extra: &[&str]) -> DaemonGuard {
+        let socket = root.join("serve.sock");
+        let child = Command::new(repro_bin())
+            .arg("serve")
+            .arg("start")
+            .arg("--socket")
+            .arg(&socket)
+            .args(extra)
+            .stdin(Stdio::null())
+            .spawn()
+            .expect("spawn serve daemon");
+        let mut guard = DaemonGuard { child, socket };
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if guard.socket.exists() && UnixStream::connect(&guard.socket).is_ok() {
+                break;
+            }
+            if let Some(status) = guard.child.try_wait().unwrap() {
+                panic!("daemon exited before listening: {status}");
+            }
+            assert!(Instant::now() < deadline, "daemon never started listening");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        guard
+    }
+
+    /// Ask the daemon to stop and wait for the process to exit.
+    fn shutdown(mut self) {
+        let reply = request(&self.socket, &Request::Shutdown).expect("shutdown request");
+        assert!(matches!(reply, Reply::Ok), "shutdown must ack: {reply:?}");
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if self.child.try_wait().unwrap().is_some() {
+                // Forget the child so Drop does not kill a reaped pid.
+                self.child.stdin = None;
+                std::mem::forget(self);
+                return;
+            }
+            assert!(Instant::now() < deadline, "daemon did not exit after shutdown");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+}
+
+impl Drop for DaemonGuard {
+    fn drop(&mut self) {
+        let _ = request(&self.socket, &Request::Shutdown);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline {
+            if self.child.try_wait().unwrap().is_some() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn job(dir: &PathBuf) -> JobSpec {
+    JobSpec { dir: dir.clone(), workers: 2, ..Default::default() }
+}
+
+/// The one-shot reference run the served replies must match bit for
+/// bit: same driver, same options, no daemon.
+fn oneshot(files: &[PathBuf]) -> p3sapp::driver::PreprocessResult {
+    run_p3sapp(files, &DriverOptions { workers: 2, ..Default::default() }).unwrap()
+}
+
+#[test]
+fn warm_repeat_restores_from_cache_and_matches_the_oneshot_run() {
+    let root = scratch("warm");
+    let (dir, files) = corpus(&root, 29);
+    let daemon = DaemonGuard::start(&root, &[]);
+    let expected = oneshot(&files);
+
+    let cold = match request(&daemon.socket, &Request::Preprocess(job(&dir))).unwrap() {
+        Reply::Preprocess(p) => p,
+        other => panic!("expected a preprocess reply, got {other:?}"),
+    };
+    assert!(!cold.from_cache(), "first job must execute, not restore");
+    assert_eq!(cold.frame().unwrap(), expected.frame, "cold serve != one-shot");
+    assert_eq!(cold.rows_out as usize, expected.rows_out);
+
+    let warm = match request(&daemon.socket, &Request::Preprocess(job(&dir))).unwrap() {
+        Reply::Preprocess(p) => p,
+        other => panic!("expected a preprocess reply, got {other:?}"),
+    };
+    assert!(
+        warm.stages.iter().any(|(s, _)| s == "cache_restore"),
+        "warm repeat must report its cache_restore stage: {:?}",
+        warm.stages
+    );
+    assert_eq!(warm.frame().unwrap(), expected.frame, "warm serve != one-shot");
+
+    daemon.shutdown();
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn concurrent_clients_all_complete_byte_identical() {
+    let root = scratch("concurrent");
+    let (dir, files) = corpus(&root, 37);
+    let daemon = DaemonGuard::start(&root, &["--max-active", "2", "--max-queue", "8"]);
+    let expected = oneshot(&files);
+
+    let replies: Vec<Reply> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let socket = daemon.socket.clone();
+                let spec = job(&dir);
+                scope.spawn(move || request(&socket, &Request::Preprocess(spec)).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(replies.len(), 4);
+    for reply in replies {
+        match reply {
+            Reply::Preprocess(p) => {
+                assert_eq!(p.frame().unwrap(), expected.frame, "served frame != one-shot")
+            }
+            other => panic!("expected a preprocess reply, got {other:?}"),
+        }
+    }
+
+    daemon.shutdown();
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn shutdown_reaps_pool_workers_and_removes_the_socket() {
+    let root = scratch("shutdown");
+    let (dir, _files) = corpus(&root, 41);
+    let daemon = DaemonGuard::start(&root, &["--processes", "2"]);
+
+    // Run one job so the lazy pool actually spawns its workers.
+    match request(&daemon.socket, &Request::Preprocess(job(&dir))).unwrap() {
+        Reply::Preprocess(_) => {}
+        other => panic!("expected a preprocess reply, got {other:?}"),
+    }
+    let pids = match request(&daemon.socket, &Request::Stats).unwrap() {
+        Reply::Stats(s) => s.worker_pids,
+        other => panic!("expected stats, got {other:?}"),
+    };
+    assert_eq!(pids.len(), 2, "both pool workers should be live");
+
+    let socket = daemon.socket.clone();
+    daemon.shutdown();
+    assert!(!socket.exists(), "socket file must be removed on clean shutdown");
+    // The daemon reaps its pool before exiting, so by now every worker
+    // pid must be gone (poll briefly for kernel bookkeeping).
+    #[cfg(target_os = "linux")]
+    for pid in pids {
+        let proc_dir = PathBuf::from(format!("/proc/{pid}"));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while proc_dir.exists() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(!proc_dir.exists(), "worker {pid} was orphaned by shutdown");
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn garbled_frame_gets_a_typed_bad_request_and_the_daemon_survives() {
+    let root = scratch("garbled");
+    let (dir, _files) = corpus(&root, 43);
+    let daemon = DaemonGuard::start(&root, &[]);
+
+    // A well-framed envelope of garbage: long enough to pass the length
+    // check, wrong magic, wrong digest.
+    let mut stream = UnixStream::connect(&daemon.socket).unwrap();
+    write_frame(&mut stream, &[0xAB; 64]).unwrap();
+    match read_frame(&mut stream).unwrap() {
+        Some(frame) => match p3sapp::serve::proto::decode_reply(&frame).unwrap() {
+            Reply::Err(e) => {
+                assert_eq!(e.kind, ErrKind::BadRequest, "{e:?}");
+            }
+            other => panic!("expected a typed error, got {other:?}"),
+        },
+        None => panic!("daemon hung up instead of replying bad_request"),
+    }
+    drop(stream);
+
+    // The daemon is still serving real work.
+    match request(&daemon.socket, &Request::Preprocess(job(&dir))).unwrap() {
+        Reply::Preprocess(_) => {}
+        other => panic!("daemon should still serve after a garbled frame: {other:?}"),
+    }
+    daemon.shutdown();
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn truncated_frame_is_rejected_not_hung() {
+    let root = scratch("truncated");
+    let (dir, _files) = corpus(&root, 47);
+    let daemon = DaemonGuard::start(&root, &[]);
+
+    // Announce a 64-byte frame, deliver 5 bytes, half-close: the daemon
+    // must see the truncation and reply bad_request, not wait forever.
+    let mut stream = UnixStream::connect(&daemon.socket).unwrap();
+    stream.write_all(&64u64.to_le_bytes()).unwrap();
+    stream.write_all(b"short").unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    match read_frame(&mut stream).unwrap() {
+        Some(frame) => match p3sapp::serve::proto::decode_reply(&frame).unwrap() {
+            Reply::Err(e) => assert_eq!(e.kind, ErrKind::BadRequest, "{e:?}"),
+            other => panic!("expected a typed error, got {other:?}"),
+        },
+        None => panic!("daemon hung up instead of replying bad_request"),
+    }
+    drop(stream);
+
+    match request(&daemon.socket, &Request::Preprocess(job(&dir))).unwrap() {
+        Reply::Preprocess(_) => {}
+        other => panic!("daemon should still serve after a truncated frame: {other:?}"),
+    }
+    daemon.shutdown();
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn client_disconnect_mid_job_leaves_the_daemon_serving() {
+    let root = scratch("disconnect");
+    let (dir, _files) = corpus(&root, 53);
+    let daemon = DaemonGuard::start(&root, &[]);
+
+    // Submit a deliberately slow job and hang up before the reply.
+    let mut spec = job(&dir);
+    spec.linger_millis = 300;
+    let mut stream = UnixStream::connect(&daemon.socket).unwrap();
+    write_frame(&mut stream, &encode_request(&Request::Preprocess(spec))).unwrap();
+    drop(stream);
+
+    // The abandoned job must cost the daemon nothing but a log line:
+    // its permit is released when it finishes, nothing stays queued.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match request(&daemon.socket, &Request::Stats).unwrap() {
+            Reply::Stats(s) if (s.active, s.queued) == (0, 0) => break,
+            Reply::Stats(_) => {}
+            other => panic!("expected stats, got {other:?}"),
+        }
+        assert!(Instant::now() < deadline, "abandoned job leaked its permit");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    match request(&daemon.socket, &Request::Preprocess(job(&dir))).unwrap() {
+        Reply::Preprocess(_) => {}
+        other => panic!("daemon should still serve after a disconnect: {other:?}"),
+    }
+    daemon.shutdown();
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn queue_full_submission_gets_a_typed_rejection() {
+    let root = scratch("queuefull");
+    let (dir, _files) = corpus(&root, 59);
+    // One permit, zero queue slots: the second concurrent job must be
+    // turned away, typed, immediately.
+    let daemon = DaemonGuard::start(&root, &["--max-active", "1", "--max-queue", "0"]);
+
+    let socket = daemon.socket.clone();
+    let mut slow = job(&dir);
+    slow.linger_millis = 2000;
+    let holder =
+        std::thread::spawn(move || request(&socket, &Request::Preprocess(slow)).unwrap());
+    // Stats is not admission-gated, so it is the synchronization channel:
+    // wait until the slow job visibly holds the permit.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match request(&daemon.socket, &Request::Stats).unwrap() {
+            Reply::Stats(s) if s.active == 1 => break,
+            Reply::Stats(_) => {}
+            other => panic!("expected stats, got {other:?}"),
+        }
+        assert!(Instant::now() < deadline, "slow job never took the permit");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    match request(&daemon.socket, &Request::Preprocess(job(&dir))).unwrap() {
+        Reply::Err(e) => {
+            assert_eq!(e.kind, ErrKind::QueueFull, "{e:?}");
+            assert_eq!(e.kind.name(), "queue_full");
+            assert!(e.message.contains("queue"), "{}", e.message);
+        }
+        other => panic!("expected a queue_full rejection, got {other:?}"),
+    }
+    // The admitted job still completes normally.
+    match holder.join().unwrap() {
+        Reply::Preprocess(_) => {}
+        other => panic!("the admitted job should finish: {other:?}"),
+    }
+    daemon.shutdown();
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn over_budget_submission_gets_a_typed_rejection() {
+    let root = scratch("budget");
+    let (dir, files) = corpus(&root, 61);
+    let shard_bytes: u64 =
+        files.iter().map(|f| std::fs::metadata(f).unwrap().len()).sum();
+    assert!(shard_bytes > 1, "corpus must exceed the 1-byte budget");
+    let daemon = DaemonGuard::start(&root, &["--job-budget-bytes", "1"]);
+
+    match request(&daemon.socket, &Request::Preprocess(job(&dir))).unwrap() {
+        Reply::Err(e) => {
+            assert_eq!(e.kind, ErrKind::OverBudget, "{e:?}");
+            assert_eq!(e.kind.name(), "over_budget");
+            assert!(e.message.contains("budget"), "{}", e.message);
+        }
+        other => panic!("expected an over_budget rejection, got {other:?}"),
+    }
+    daemon.shutdown();
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn explain_over_the_socket_renders_the_warm_restore_path() {
+    let root = scratch("explain");
+    let (dir, _files) = corpus(&root, 67);
+    let daemon = DaemonGuard::start(&root, &[]);
+
+    let cold = match request(&daemon.socket, &Request::Explain(job(&dir))).unwrap() {
+        Reply::Text(t) => t,
+        other => panic!("expected an explain render, got {other:?}"),
+    };
+    assert!(cold.contains("== Physical Plan"), "{cold}");
+    assert!(!cold.contains("cache hit"), "cold explain must not claim a hit: {cold}");
+
+    match request(&daemon.socket, &Request::Preprocess(job(&dir))).unwrap() {
+        Reply::Preprocess(_) => {}
+        other => panic!("expected a preprocess reply, got {other:?}"),
+    }
+    let warm = match request(&daemon.socket, &Request::Explain(job(&dir))).unwrap() {
+        Reply::Text(t) => t,
+        other => panic!("expected an explain render, got {other:?}"),
+    };
+    assert!(warm.contains("cache hit"), "warm explain must render the restore: {warm}");
+    assert!(warm.contains("CacheRestore"), "{warm}");
+
+    daemon.shutdown();
+    std::fs::remove_dir_all(&root).unwrap();
+}
