@@ -36,14 +36,20 @@
 //! serialization overhead — the record's conservative ratios reflect
 //! that.
 //!
+//! plus the tracing-overhead arm: the fused single pass re-measured
+//! with a `--trace` sink installed, gated (`BENCH_obs.json`, ≤5%)
+//! against the tracing-off arm so span recording stays cheap enough to
+//! flip on in production runs.
+//!
 //! Results are also recorded as machine-readable JSON (defaults under
 //! `target/` so bench runs never dirty the checked-in schema records
 //! `BENCH_streaming.json` / `BENCH_cache.json` / `BENCH_twopass.json` /
-//! `BENCH_process.json` at the repo root; override with
-//! `BENCH_STREAMING_JSON=path` / `BENCH_CACHE_JSON=path` /
-//! `BENCH_TWOPASS_JSON=path` / `BENCH_PROCESS_JSON=path`, disable with
-//! `=-`). CI's bench-smoke job regenerates all four and runs the
-//! `benchgate` comparator against the repo-root records.
+//! `BENCH_process.json` / `BENCH_obs.json` at the repo root; override
+//! with `BENCH_STREAMING_JSON=path` / `BENCH_CACHE_JSON=path` /
+//! `BENCH_TWOPASS_JSON=path` / `BENCH_PROCESS_JSON=path` /
+//! `BENCH_OBS_JSON=path`, disable with `=-`). CI's bench-smoke job
+//! regenerates all five and runs the `benchgate` comparator against the
+//! repo-root records.
 //!
 //!     cargo bench --bench fused
 //!     BENCH_SCALE=4 BENCH_WORKERS=8 cargo bench --bench fused
@@ -231,6 +237,23 @@ fn main() {
         m_process.mean_secs() / m_fused.mean_secs()
     );
 
+    // Tracing-overhead arm: the same fused single pass with a trace
+    // sink installed (what `--trace` does), spans recorded and drained.
+    // The gate pins this within 5% of the tracing-off arm — the cost of
+    // leaving `--trace` available on every executor.
+    let m_traced = bench("plan single-pass, tracing on", 1, 5, || {
+        let sink = p3sapp::obs::install_new();
+        let rows = black_box(&fused_plan).execute(workers).unwrap().rows_out;
+        p3sapp::obs::uninstall();
+        black_box(sink.drain().len());
+        rows
+    });
+    println!("\n  {}", m_traced.report());
+    println!(
+        "\n  tracing overhead (traced/plan+fuse):            {:.2}x",
+        m_traced.mean_secs() / m_fused.mean_secs()
+    );
+
     let arms: [(&str, &Measurement); 4] = [
         ("staged", &m_staged),
         ("plan", &m_plan),
@@ -305,6 +328,18 @@ fn main() {
                 ("process", &m_process),
                 ("process_twopass", &m_process_twopass),
             ],
+        ),
+    );
+
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    corpus_extra(&mut extra);
+    write_bench_record(
+        "BENCH_OBS_JSON",
+        "target/BENCH_obs.json",
+        &bench_record_json(
+            "obs",
+            &extra,
+            &[("plan_fused", &m_fused), ("plan_fused_traced", &m_traced)],
         ),
     );
 

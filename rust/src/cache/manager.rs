@@ -28,6 +28,14 @@ use std::time::{Instant, SystemTime};
 /// Artifact file extension (content-addressed stem = fingerprint key).
 pub const ARTIFACT_EXT: &str = "p3pc";
 
+/// Sidecar file holding the cache *directory's* lifetime eviction and
+/// corruption counts, accumulated across processes — the in-process
+/// [`CacheStats`] restart at zero, so without it `repro cache stats`
+/// (always a fresh process) could never report either. Named without
+/// the artifact extension so [`CacheManager::entries`], the size cap
+/// and [`CacheManager::clear`] never treat it as cache content.
+pub const COUNTERS_FILE: &str = "counters.v1";
+
 /// Default disk-tier size cap: 1 GiB.
 pub const DEFAULT_MAX_BYTES: u64 = 1 << 30;
 
@@ -84,6 +92,17 @@ impl CacheStats {
     pub fn hits(&self) -> u64 {
         self.mem_hits + self.disk_hits
     }
+}
+
+/// Lifetime counters read from the [`COUNTERS_FILE`] sidecar: per cache
+/// directory, across processes. Advisory observability — a missing or
+/// unparseable sidecar reads as zeros, never an error.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LifetimeCounters {
+    /// Artifacts ever removed by the LRU size cap.
+    pub evictions: u64,
+    /// Artifacts ever dropped as corrupt/unreadable.
+    pub corrupt: u64,
 }
 
 /// One disk-tier entry, as listed by [`CacheManager::entries`].
@@ -304,9 +323,12 @@ impl CacheManager {
                 // defective artifact so the re-executed pass can store a
                 // fresh one over it.
                 let _ = std::fs::remove_file(&path);
-                let mut stats = self.stats.lock().unwrap();
-                stats.misses += 1;
-                stats.corrupt += 1;
+                {
+                    let mut stats = self.stats.lock().unwrap();
+                    stats.misses += 1;
+                    stats.corrupt += 1;
+                }
+                self.bump_lifetime(0, 1);
                 None
             }
         }
@@ -355,6 +377,7 @@ impl CacheManager {
         // Oldest first; entries without an mtime evict first, and the
         // just-stored entry is considered newest regardless of mtime.
         entries.sort_by_key(|e| (e.key == protect, e.modified));
+        let mut evicted = 0u64;
         for e in entries {
             if total <= self.cfg.max_bytes {
                 break;
@@ -364,7 +387,9 @@ impl CacheManager {
             self.memo.lock().unwrap().remove(&e.key);
             total = total.saturating_sub(e.bytes);
             self.stats.lock().unwrap().evictions += 1;
+            evicted += 1;
         }
+        self.bump_lifetime(evicted, 0);
         Ok(())
     }
 
@@ -419,6 +444,53 @@ impl CacheManager {
     pub fn stats(&self) -> CacheStats {
         *self.stats.lock().unwrap()
     }
+
+    fn counters_path(&self) -> PathBuf {
+        self.cfg.dir.join(COUNTERS_FILE)
+    }
+
+    /// Lifetime eviction/corruption counts for this cache *directory*,
+    /// accumulated in the [`COUNTERS_FILE`] sidecar across processes —
+    /// unlike [`Self::stats`], which restarts at zero with the process.
+    pub fn lifetime_counters(&self) -> LifetimeCounters {
+        read_lifetime(&self.counters_path())
+    }
+
+    /// Best-effort read-modify-write of the lifetime sidecar. The stats
+    /// lock serializes writers within this process; a concurrent
+    /// *process* can lose an increment, which is acceptable for
+    /// advisory counters — and a write failure never fails the run.
+    fn bump_lifetime(&self, evictions: u64, corrupt: u64) {
+        if evictions == 0 && corrupt == 0 {
+            return;
+        }
+        let _guard = self.stats.lock().unwrap();
+        let path = self.counters_path();
+        let mut c = read_lifetime(&path);
+        c.evictions += evictions;
+        c.corrupt += corrupt;
+        let _ = std::fs::write(
+            &path,
+            format!("evictions={}\ncorrupt={}\n", c.evictions, c.corrupt),
+        );
+    }
+}
+
+/// Parse the lifetime sidecar (`key=value` lines); anything missing or
+/// malformed reads as zero.
+fn read_lifetime(path: &Path) -> LifetimeCounters {
+    let mut c = LifetimeCounters::default();
+    let Ok(text) = std::fs::read_to_string(path) else { return c };
+    for line in text.lines() {
+        let Some((k, v)) = line.split_once('=') else { continue };
+        let Ok(v) = v.trim().parse::<u64>() else { continue };
+        match k.trim() {
+            "evictions" => c.evictions = v,
+            "corrupt" => c.corrupt = v,
+            _ => {}
+        }
+    }
+    c
 }
 
 /// True when every shard's stat identity (path order, length, mtime)
@@ -689,6 +761,45 @@ mod tests {
             super::super::fingerprint::fingerprint("plan", &files).unwrap().key(),
             edited.key()
         );
+        std::fs::remove_dir_all(m.dir()).unwrap();
+    }
+
+    #[test]
+    fn lifetime_counters_accumulate_in_the_sidecar_across_managers() {
+        let m = mgr("lifetime", 1, false); // every artifact alone exceeds the cap
+        assert_eq!(m.lifetime_counters(), LifetimeCounters::default());
+        m.put(&fp("plan-la"), &output(2, "a")).unwrap();
+        m.put(&fp("plan-lb"), &output(2, "b")).unwrap();
+        let evicted = m.lifetime_counters().evictions;
+        assert!(evicted >= 1);
+        assert_eq!(m.lifetime_counters().evictions, m.stats().evictions);
+
+        // A fresh manager over the same dir (a "second process") starts
+        // its in-process stats at zero but reads the sidecar — and
+        // keeps accumulating into it.
+        let m2 = CacheManager::with_config(CacheConfig {
+            dir: m.dir().to_path_buf(),
+            max_bytes: 0,
+            memory: false,
+            memory_max_bytes: 0,
+        })
+        .unwrap();
+        assert_eq!(m2.stats().evictions, 0);
+        assert_eq!(m2.lifetime_counters().evictions, evicted);
+        let fpc = fp("plan-lc");
+        m2.put(&fpc, &output(4, "c")).unwrap();
+        let path = m2.artifact_path(fpc.key());
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(m2.get(&fpc).is_none());
+        let c = m2.lifetime_counters();
+        assert_eq!((c.evictions, c.corrupt), (evicted, 1));
+        // The sidecar is not cache content: entries() skips it and
+        // clear() leaves it standing.
+        assert!(m2.dir().join(COUNTERS_FILE).exists());
+        assert!(m2.entries().unwrap().iter().all(|e| e.path.extension().unwrap() == "p3pc"));
+        m2.clear().unwrap();
+        assert_eq!(m2.lifetime_counters(), c);
         std::fs::remove_dir_all(m.dir()).unwrap();
     }
 

@@ -39,8 +39,8 @@ mod manager;
 pub use artifact::CachedFrame;
 pub use fingerprint::{fingerprint, shard_identity, xxh64, PlanFingerprint, ShardIdentity};
 pub use manager::{
-    CacheConfig, CacheEntry, CacheManager, CacheStats, ARTIFACT_EXT, DEFAULT_MAX_BYTES,
-    DEFAULT_MEMO_MAX_BYTES,
+    CacheConfig, CacheEntry, CacheManager, CacheStats, LifetimeCounters, ARTIFACT_EXT,
+    COUNTERS_FILE, DEFAULT_MAX_BYTES, DEFAULT_MEMO_MAX_BYTES,
 };
 
 use crate::plan::{LogicalOp, LogicalPlan, ProcessOptions, StreamOptions};

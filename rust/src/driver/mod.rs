@@ -22,6 +22,7 @@ use crate::cache::CacheManager;
 use crate::frame::LocalFrame;
 use crate::ingest::append::ingest_files_append;
 use crate::metrics::{StageClock, StageTimes};
+use crate::obs;
 use crate::pipeline::presets::{case_study_plan_with, CaseStudyOptions};
 use crate::plan::{LogicalPlan, PlanOutput};
 use crate::Result;
@@ -204,27 +205,63 @@ fn nullify_empty(frame: &mut LocalFrame) {
 /// proportional attribution of the pass (see `plan::physical`), so the
 /// Tables 2–4 accounting keeps working.
 pub fn run_p3sapp(files: &[PathBuf], opts: &DriverOptions) -> Result<PreprocessResult> {
-    let plan = opts.build_plan(files).optimize();
+    let plan = {
+        let _sp = obs::span("optimize", "driver");
+        opts.build_plan(files).optimize()
+    };
     if let Some(cache) = &opts.cache {
         // A shard we cannot stat/digest would also fail the executor —
         // fall through so the executor reports the real error, rather
         // than failing the run from inside the cache layer. The
         // memoized derivation lets a preceding EXPLAIN's digest pass be
         // revalidated with a stat instead of re-read.
-        if let Ok(fp) = cache.fingerprint_for(&plan.render(), files) {
-            if let Some(hit) = cache.get(&fp) {
-                return Ok(hit.into());
+        let fp = {
+            let _sp = obs::span("fingerprint", "driver");
+            cache.fingerprint_for(&plan.render(), files)
+        };
+        if let Ok(fp) = fp {
+            let hit = {
+                let _sp = obs::span("cache_get", "driver");
+                cache.get(&fp)
+            };
+            if let Some(hit) = hit {
+                return Ok(count_rows(hit.into()));
             }
-            let out = execute_plan(&plan, opts)?;
-            if let Err(e) = cache.put(&fp, &out) {
-                // A full disk must not fail a run that already computed
-                // its result; the next run simply misses again.
-                eprintln!("[cache] store failed (continuing uncached): {e:#}");
+            let out = timed_execute(&plan, opts)?;
+            {
+                let _sp = obs::span("cache_store", "driver");
+                if let Err(e) = cache.put(&fp, &out) {
+                    // A full disk must not fail a run that already
+                    // computed its result; the next run simply misses
+                    // again.
+                    eprintln!("[cache] store failed (continuing uncached): {e:#}");
+                }
             }
-            return Ok(out.into());
+            return Ok(count_rows(out.into()));
         }
     }
-    Ok(execute_plan(&plan, opts)?.into())
+    Ok(count_rows(timed_execute(&plan, opts)?.into()))
+}
+
+/// Execute under a driver-lane span carrying the row counts.
+fn timed_execute(plan: &LogicalPlan, opts: &DriverOptions) -> Result<PlanOutput> {
+    let mut sp = obs::span("execute", "driver");
+    let out = execute_plan(plan, opts)?;
+    if sp.active() {
+        sp.arg("rows_ingested", out.rows_ingested as u64);
+        sp.arg("rows_out", out.rows_out as u64);
+    }
+    Ok(out)
+}
+
+/// Fold a finished run's row counts into the global metrics registry —
+/// cache hits included, so the serve exposition reflects rows served,
+/// not just rows executed.
+fn count_rows(res: PreprocessResult) -> PreprocessResult {
+    let reg = crate::metrics::registry();
+    reg.counter_add("p3sapp_plan_rows_ingested_total", res.rows_ingested as u64);
+    reg.counter_add("p3sapp_plan_rows_out_total", res.rows_out as u64);
+    res
 }
 
 /// Execute an (already optimized) plan with the executor `opts` selects.

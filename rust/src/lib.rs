@@ -88,6 +88,7 @@ pub mod frame;
 pub mod ingest;
 pub mod json;
 pub mod metrics;
+pub mod obs;
 pub mod pipeline;
 pub mod plan;
 pub mod report;

@@ -8,11 +8,15 @@
 //!   train        preprocess then train the seq2seq model (AOT/PJRT)
 //!   infer        generate titles with a freshly trained model
 //!   report       regenerate the paper's tables/figures (e1..e9, all)
-//!   cache        inspect (stats) or empty (clear) the plan cache
+//!   cache        inspect (stats [--json]) or empty (clear) the plan cache
 //!   serve        run the preprocessing daemon, or talk to one
-//!              (start | preprocess | explain | train | stats | shutdown)
+//!              (start | preprocess | explain | train | stats | metrics |
+//!               shutdown)
 //!
-//! Run `repro help` for options.
+//! Every command that executes a plan accepts `--trace FILE` (Chrome
+//! trace-event JSON of the run, Perfetto-loadable), and `explain
+//! --analyze` executes the plan to annotate the topology with per-op
+//! actuals. Run `repro help` for options.
 
 use p3sapp::analysis::accuracy::match_column;
 use p3sapp::cache::CacheManager;
@@ -70,7 +74,7 @@ fn usage() {
          commands:\n\
          \x20 gen-corpus  --dir D [--tier 1..5 | --records N] [--seed S] [--scale F]\n\
          \x20 preprocess  --dir D --approach ca|p3sapp [--workers N] [--explain]\n\
-         \x20 explain     --dir D [--workers N]\n\
+         \x20 explain     --dir D [--workers N] [--analyze]\n\
          \x20 compare     --dir D [--workers N]\n\
          \x20 train       --dir D [--steps N] [--artifacts A] [--workers N]\n\
          \x20             [--save-params FILE]\n\
@@ -78,17 +82,21 @@ fn usage() {
          \x20 report      [--exp all|e1|...|e9] [--base-dir B] [--scale F]\n\
          \x20             [--tiers 1,2,3] [--workers N] [--artifacts A] [--csv]\n\
          \x20             [--explain] [--skip-ca]\n\
-         \x20 cache       stats|clear --cache-dir D\n\
+         \x20 cache       stats|clear --cache-dir D [--json]\n\
          \x20 serve       start --socket S [--cache-dir D | --no-cache]\n\
          \x20             [--workers N] [--processes N] [--max-active N]\n\
          \x20             [--max-queue N] [--job-budget-bytes B]\n\
+         \x20             [--trace FILE]\n\
          \x20             -- run the preprocessing daemon (warm plan cache,\n\
          \x20             persistent worker pool, admission control)\n\
          \x20 serve       preprocess|explain|train --socket S --dir D\n\
          \x20             [--workers N] [--sample F] [--limit N] [--features]\n\
          \x20             [--steps N] [--artifacts A] [--linger-millis M]\n\
          \x20             -- submit one job to a running daemon\n\
-         \x20 serve       stats|shutdown --socket S\n\
+         \x20 serve       stats|metrics|shutdown --socket S\n\
+         \x20             -- metrics prints the daemon's Prometheus-style\n\
+         \x20             exposition (admission depth, pool health, cache\n\
+         \x20             counters, per-job latency histograms)\n\
          \x20 help\n\
          \n\
          common options:\n\
@@ -122,7 +130,13 @@ fn usage() {
          \x20 --features      run the full Table-2 pipeline: cleaning plus\n\
          \x20                 Tokenizer -> HashingTF -> IDF; the IDF estimator\n\
          \x20                 lowers to a two-pass plan (preprocess/explain/\n\
-         \x20                 train/infer; not compare/report)\n"
+         \x20                 train/infer; not compare/report)\n\
+         \x20 --trace FILE    record every span of the run (driver, reader\n\
+         \x20                 and worker threads, worker processes) and write\n\
+         \x20                 one Chrome-trace-event JSON timeline on exit —\n\
+         \x20                 load it in Perfetto or chrome://tracing; on\n\
+         \x20                 serve start the trace covers the daemon's whole\n\
+         \x20                 lifetime and is written at shutdown\n"
     );
 }
 
@@ -143,24 +157,48 @@ fn run(args: &Args) -> Result<()> {
         );
     }
     match args.command.as_str() {
-        "gen-corpus" => cmd_gen_corpus(args),
-        "preprocess" => cmd_preprocess(args),
-        "explain" => cmd_explain(args),
-        "compare" => cmd_compare(args),
-        "train" => cmd_train(args),
-        "infer" => cmd_infer(args),
-        "report" => cmd_report(args),
-        "cache" => cmd_cache(args),
+        // The daemon threads `--trace` through `ServeOptions` instead:
+        // its sink must span the daemon lifetime, not this client call.
         "serve" => cmd_serve(args),
         "help" | "" => {
             usage();
             Ok(())
         }
-        other => {
-            usage();
-            anyhow::bail!("unknown command '{other}'")
-        }
+        other => with_trace(args, || match other {
+            "gen-corpus" => cmd_gen_corpus(args),
+            "preprocess" => cmd_preprocess(args),
+            "explain" => cmd_explain(args),
+            "compare" => cmd_compare(args),
+            "train" => cmd_train(args),
+            "infer" => cmd_infer(args),
+            "report" => cmd_report(args),
+            "cache" => cmd_cache(args),
+            other => {
+                usage();
+                anyhow::bail!("unknown command '{other}'")
+            }
+        }),
     }
+}
+
+/// `--trace FILE`: run `f` under a fresh global trace sink and write
+/// the recorded spans as one Chrome-trace-event JSON document when it
+/// returns — even on error, so a failing run still leaves its partial
+/// timeline. Without the flag, `f` runs with tracing off (every span
+/// call is a single relaxed atomic load).
+fn with_trace(args: &Args, f: impl FnOnce() -> Result<()>) -> Result<()> {
+    let Some(path) = args.get("trace").map(PathBuf::from) else {
+        return f();
+    };
+    let sink = p3sapp::obs::install_new();
+    let result = f();
+    p3sapp::obs::uninstall();
+    let spans = sink.drain();
+    match std::fs::write(&path, p3sapp::obs::chrome_trace_json(&spans)) {
+        Ok(()) => eprintln!("trace: {} spans written to {}", spans.len(), path.display()),
+        Err(e) => eprintln!("trace: writing {}: {e}", path.display()),
+    }
+    result
 }
 
 fn cmd_gen_corpus(args: &Args) -> Result<()> {
@@ -317,8 +355,48 @@ fn cmd_explain(args: &Args) -> Result<()> {
         args.get("dir").ok_or_else(|| anyhow::anyhow!("--dir is required"))?,
     );
     let files = list_shards(&dir)?;
-    let opts = driver_opts(args, &cfg)?;
+    let mut opts = driver_opts(args, &cfg)?;
+    if !args.flag("analyze") {
+        print!("{}", render_explain(&files, &opts)?);
+        return Ok(());
+    }
+    // EXPLAIN ANALYZE: execute the plan and re-render the topology
+    // annotated with per-op actuals folded from the recorded spans.
+    // The cache is disabled for the measured run — a restore executes
+    // no operators, so there would be nothing to annotate.
+    opts.cache = None;
+    // Reuse the sink `--trace` installed (the analyze run then lands in
+    // that timeline too); otherwise install a private one.
+    let (sink, shared) = match p3sapp::obs::uninstall() {
+        Some(s) => {
+            p3sapp::obs::install(Arc::clone(&s));
+            (s, true)
+        }
+        None => (p3sapp::obs::install_new(), false),
+    };
+    let run = run_p3sapp(&files, &opts);
+    let spans = if shared {
+        sink.snapshot()
+    } else {
+        p3sapp::obs::uninstall();
+        sink.drain()
+    };
+    let res = run?;
+    let stats = p3sapp::obs::aggregate_ops(&spans);
     print!("{}", render_explain(&files, &opts)?);
+    println!("== Analyzed Physical Plan ==");
+    print!("{}", opts.build_plan(&files).optimize().lower()?.render_analyze(&stats));
+    let execute_ns: u64 = spans
+        .iter()
+        .filter(|s| s.cat == "driver" && s.name == "execute")
+        .map(|s| s.dur_ns)
+        .sum();
+    println!(
+        "Driver: executed in {:.3} ms; {} rows ingested -> {} rows out",
+        execute_ns as f64 / 1e6,
+        res.rows_ingested,
+        res.rows_out
+    );
     Ok(())
 }
 
@@ -596,8 +674,11 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `repro cache stats|clear --cache-dir D` — inspect or empty the
-/// persistent plan cache without running any preprocessing.
+/// `repro cache stats|clear --cache-dir D [--json]` — inspect or empty
+/// the persistent plan cache without running any preprocessing. `stats`
+/// reports the per-artifact disk tier plus the directory's lifetime
+/// eviction/corruption counts (the `counters.v1` sidecar); `--json`
+/// emits the same data machine-readably.
 fn cmd_cache(args: &Args) -> Result<()> {
     let dir = args
         .get("cache-dir")
@@ -616,19 +697,43 @@ fn cmd_cache(args: &Args) -> Result<()> {
     match sub {
         "stats" => {
             let entries = mgr.entries()?;
+            let lifetime = mgr.lifetime_counters();
+            let now = std::time::SystemTime::now();
+            let total: u64 = entries.iter().map(|e| e.bytes).sum();
+            let age_secs = |e: &p3sapp::cache::CacheEntry| {
+                e.modified.and_then(|m| now.duration_since(m).ok()).map(|d| d.as_secs())
+            };
+            if args.flag("json") {
+                let items: Vec<String> = entries
+                    .iter()
+                    .map(|e| {
+                        let age = age_secs(e)
+                            .map(|a| a.to_string())
+                            .unwrap_or_else(|| "null".into());
+                        format!(
+                            "{{\"key\":\"{}\",\"bytes\":{},\"age_secs\":{age}}}",
+                            json_escape(&e.key),
+                            e.bytes
+                        )
+                    })
+                    .collect();
+                println!(
+                    "{{\"dir\":\"{}\",\"artifacts\":{},\"total_bytes\":{total},\
+                     \"evictions\":{},\"corrupt\":{},\"entries\":[{}]}}",
+                    json_escape(dir),
+                    entries.len(),
+                    lifetime.evictions,
+                    lifetime.corrupt,
+                    items.join(",")
+                );
+                return Ok(());
+            }
             let mut t = rpt::TextTable::new(
                 format!("Plan cache at {dir}"),
                 &["key", "size (KB)", "age (s)"],
             );
-            let now = std::time::SystemTime::now();
-            let mut total = 0u64;
             for e in &entries {
-                total += e.bytes;
-                let age = e
-                    .modified
-                    .and_then(|m| now.duration_since(m).ok())
-                    .map(|d| format!("{:.0}", d.as_secs_f64()))
-                    .unwrap_or_else(|| "-".into());
+                let age = age_secs(e).map(|a| a.to_string()).unwrap_or_else(|| "-".into());
                 t.row(vec![e.key.clone(), format!("{:.1}", e.bytes as f64 / 1024.0), age]);
             }
             print!("{}", t.render());
@@ -636,6 +741,10 @@ fn cmd_cache(args: &Args) -> Result<()> {
                 "{} artifacts, {:.2} MB total",
                 entries.len(),
                 total as f64 / (1024.0 * 1024.0)
+            );
+            println!(
+                "lifetime: {} evicted, {} corrupt dropped",
+                lifetime.evictions, lifetime.corrupt
             );
         }
         "clear" => {
@@ -647,14 +756,36 @@ fn cmd_cache(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Minimal JSON string escaping for `cache stats --json` (keys are hex
+/// and the dir is a user path — quotes, backslashes and control chars
+/// are all that can occur).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// `repro serve <action> --socket S` — run the preprocessing daemon
 /// (`start`) or submit to one (`preprocess`/`explain`/`train`/`stats`/
-/// `shutdown`). Client replies print in the same shape as the one-shot
-/// commands so scripts (and the CI smoke job) can diff them directly.
+/// `metrics`/`shutdown`). Client replies print in the same shape as the
+/// one-shot commands so scripts (and the CI smoke job) can diff them
+/// directly; `metrics` prints the daemon's Prometheus-style exposition
+/// verbatim.
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let sub = args.subcommand.as_deref().ok_or_else(|| {
-        anyhow::anyhow!("serve takes an action: start|preprocess|explain|train|stats|shutdown")
+        anyhow::anyhow!(
+            "serve takes an action: start|preprocess|explain|train|stats|metrics|shutdown"
+        )
     })?;
     let socket = PathBuf::from(
         args.get("socket").ok_or_else(|| anyhow::anyhow!("--socket is required"))?,
@@ -682,11 +813,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_queue: args.get_usize("max-queue", defaults.max_queue)?,
                 job_budget_bytes: args
                     .get_u64("job-budget-bytes", defaults.job_budget_bytes)?,
+                trace: args.get("trace").map(PathBuf::from),
             })
         }
         "stats" => {
             print_serve_reply(p3sapp::serve::request(&socket, &p3sapp::serve::Request::Stats)?)
         }
+        "metrics" => print_serve_reply(p3sapp::serve::request(
+            &socket,
+            &p3sapp::serve::Request::Metrics,
+        )?),
         "shutdown" => print_serve_reply(p3sapp::serve::request(
             &socket,
             &p3sapp::serve::Request::Shutdown,
@@ -705,7 +841,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             print_serve_reply(p3sapp::serve::request(&socket, &req)?)
         }
         other => anyhow::bail!(
-            "serve takes start|preprocess|explain|train|stats|shutdown, got '{other}'"
+            "serve takes start|preprocess|explain|train|stats|metrics|shutdown, got '{other}'"
         ),
     }
 }
@@ -752,7 +888,20 @@ fn print_serve_reply(reply: p3sapp::serve::Reply) -> Result<()> {
                 s.worker_pids.iter().map(u32::to_string).collect::<Vec<_>>().join(" ")
             };
             println!("worker pids        {pids}");
-            println!("cache              {}", s.cache);
+            // Typed counters render only here, at the CLI edge.
+            match &s.cache {
+                Some(c) => println!(
+                    "cache              mem_hits={} disk_hits={} misses={} stores={} \
+                     fp_digest_shards={} fp_stat_revalidations={}",
+                    c.mem_hits,
+                    c.disk_hits,
+                    c.misses,
+                    c.stores,
+                    c.fp_digest_shards,
+                    c.fp_stat_revalidations
+                ),
+                None => println!("cache              disabled"),
+            }
         }
         Reply::Preprocess(p) => {
             println!("rows ingested      {}", p.rows_ingested);

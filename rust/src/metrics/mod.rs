@@ -1,6 +1,11 @@
 //! Stage timing instrumentation shared by both approaches and the
 //! benchmark harness.
+//!
+//! The cross-cutting counters/gauges/histograms registry lives in
+//! [`crate::obs::metrics`]; it is re-exported here so callers that
+//! think in terms of "metrics" find it without knowing the obs layout.
 
 mod timer;
 
+pub use crate::obs::metrics::{registry, Registry};
 pub use timer::{StageClock, StageTimes};

@@ -1,0 +1,111 @@
+//! EXPLAIN ANALYZE aggregation: fold the per-op spans an executed plan
+//! recorded into per-op actuals the CLI renders next to the topology.
+//!
+//! Every executor tier wraps each physical op in a span with category
+//! `"op"` and an `"op"` arg carrying the op's index in the lowered op
+//! list, plus `rows_in`/`rows_out` args. Ops run once per shard (and
+//! worker spans are folded in by `record_remote` before aggregation),
+//! so summing across spans with the same index yields total rows and
+//! total op time; `shards` counts how many shard-level executions were
+//! observed.
+
+use std::collections::BTreeMap;
+
+use crate::obs::trace::Span;
+
+/// Actuals for one physical op, summed across shards (and workers).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct OpStats {
+    /// Total time inside the op across all shard executions.
+    pub time_ns: u64,
+    pub rows_in: u64,
+    pub rows_out: u64,
+    /// Number of shard-level executions observed.
+    pub shards: u64,
+}
+
+/// Fold category-`"op"` spans into per-op-index actuals.
+pub fn aggregate_ops(spans: &[Span]) -> BTreeMap<u64, OpStats> {
+    let mut out: BTreeMap<u64, OpStats> = BTreeMap::new();
+    for s in spans {
+        if s.cat != "op" {
+            continue;
+        }
+        let Some(&(_, idx)) = s.args.iter().find(|(k, _)| k == "op") else {
+            continue;
+        };
+        let stats = out.entry(idx).or_default();
+        stats.time_ns += s.dur_ns;
+        stats.shards += 1;
+        for (k, v) in &s.args {
+            match k.as_str() {
+                "rows_in" => stats.rows_in += v,
+                "rows_out" => stats.rows_out += v,
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{Lane, LANE_DRIVER};
+
+    fn op_span(idx: u64, lane: Lane, dur_ns: u64, rows_in: u64, rows_out: u64) -> Span {
+        Span {
+            name: "op".to_string(),
+            cat: "op".to_string(),
+            lane,
+            start_ns: 0,
+            dur_ns,
+            args: vec![
+                ("op".to_string(), idx),
+                ("rows_in".to_string(), rows_in),
+                ("rows_out".to_string(), rows_out),
+            ],
+        }
+    }
+
+    #[test]
+    fn sums_across_shards_and_skips_non_op_spans() {
+        let spans = vec![
+            op_span(0, LANE_DRIVER, 100, 10, 8),
+            op_span(0, Lane { pid: 2, tid: 0 }, 300, 20, 15),
+            op_span(1, LANE_DRIVER, 50, 8, 8),
+            Span {
+                name: "read shard".to_string(),
+                cat: "io".to_string(),
+                lane: LANE_DRIVER,
+                start_ns: 0,
+                dur_ns: 999,
+                args: vec![("shard".to_string(), 0)],
+            },
+            // An op span missing the index arg is ignored, not misfiled.
+            Span {
+                name: "op".to_string(),
+                cat: "op".to_string(),
+                lane: LANE_DRIVER,
+                start_ns: 0,
+                dur_ns: 1,
+                args: vec![],
+            },
+        ];
+        let agg = aggregate_ops(&spans);
+        assert_eq!(agg.len(), 2);
+        assert_eq!(
+            agg[&0],
+            OpStats { time_ns: 400, rows_in: 30, rows_out: 23, shards: 2 }
+        );
+        assert_eq!(
+            agg[&1],
+            OpStats { time_ns: 50, rows_in: 8, rows_out: 8, shards: 1 }
+        );
+    }
+
+    #[test]
+    fn empty_input_yields_empty_map() {
+        assert!(aggregate_ops(&[]).is_empty());
+    }
+}

@@ -1,0 +1,167 @@
+//! Chrome-trace-event rendering: serialize recorded spans as one JSON
+//! document loadable in Perfetto (or `chrome://tracing`).
+//!
+//! We emit the stable subset of the trace-event format: `"M"` metadata
+//! events naming each process/thread lane, then one `"X"` (complete)
+//! event per span with `ts`/`dur` in fractional microseconds. Pids and
+//! tids are *trace* coordinates from [`crate::obs::trace::Lane`] —
+//! pid 0 is the driver process, pid `1 + w` is worker process `w` —
+//! so a multi-process run renders as one timeline with the worker
+//! spans (already re-anchored by `record_remote`) nested inside the
+//! driver's per-worker RPC spans.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+use crate::json::escape_into;
+use crate::obs::trace::{Span, READER_TID_BASE, WORKER_TID_BASE};
+
+fn process_name(pid: u32) -> String {
+    if pid == 0 {
+        "driver".to_string()
+    } else {
+        format!("plan-worker {}", pid - 1)
+    }
+}
+
+fn thread_name(pid: u32, tid: u32) -> String {
+    if pid > 0 {
+        return "main".to_string();
+    }
+    if tid == 0 {
+        "driver".to_string()
+    } else if (READER_TID_BASE..WORKER_TID_BASE).contains(&tid) {
+        format!("reader {}", tid - READER_TID_BASE)
+    } else {
+        format!("worker {}", tid - WORKER_TID_BASE)
+    }
+}
+
+/// Render `spans` as a `{"traceEvents": [...]}` document.
+pub fn chrome_trace_json(spans: &[Span]) -> String {
+    let mut out = String::with_capacity(128 + spans.len() * 128);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    let mut push_event = |out: &mut String, first: &mut bool| {
+        if !*first {
+            out.push(',');
+        }
+        *first = false;
+        out.push('\n');
+    };
+
+    let pids: BTreeSet<u32> = spans.iter().map(|s| s.lane.pid).collect();
+    for pid in &pids {
+        push_event(&mut out, &mut first);
+        out.push_str(&format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"args\":{{\"name\":"
+        ));
+        escape_into(&process_name(*pid), &mut out);
+        out.push_str("}}");
+    }
+    let lanes: BTreeSet<(u32, u32)> = spans.iter().map(|s| (s.lane.pid, s.lane.tid)).collect();
+    for (pid, tid) in &lanes {
+        push_event(&mut out, &mut first);
+        out.push_str(&format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"args\":{{\"name\":"
+        ));
+        escape_into(&thread_name(*pid, *tid), &mut out);
+        out.push_str("}}");
+    }
+
+    for s in spans {
+        push_event(&mut out, &mut first);
+        out.push_str("{\"name\":");
+        escape_into(&s.name, &mut out);
+        out.push_str(",\"cat\":");
+        escape_into(&s.cat, &mut out);
+        let _ = write!(
+            out,
+            ",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":{},\"tid\":{}",
+            s.start_ns as f64 / 1000.0,
+            s.dur_ns as f64 / 1000.0,
+            s.lane.pid,
+            s.lane.tid,
+        );
+        if !s.args.is_empty() {
+            out.push_str(",\"args\":{");
+            for (i, (k, v)) in s.args.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                escape_into(k, &mut out);
+                let _ = write!(out, ":{v}");
+            }
+            out.push('}');
+        }
+        out.push('}');
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::{parse, Json};
+    use crate::obs::trace::{lane_reader, lane_worker_process, Lane, LANE_DRIVER};
+
+    fn span(name: &str, lane: Lane, start_ns: u64, dur_ns: u64) -> Span {
+        Span {
+            name: name.to_string(),
+            cat: "test".to_string(),
+            lane,
+            start_ns,
+            dur_ns,
+            args: vec![("shard".to_string(), 3)],
+        }
+    }
+
+    #[test]
+    fn output_parses_and_carries_lanes_and_metadata() {
+        let spans = vec![
+            span("drive", LANE_DRIVER, 0, 5_000),
+            span("read", lane_reader(0), 1_000, 2_000),
+            span("shard \"x\"", lane_worker_process(1), 1_500, 1_000),
+        ];
+        let doc = parse(&chrome_trace_json(&spans)).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 2 process_name + 3 thread_name metadata events + 3 spans.
+        assert_eq!(events.len(), 8);
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get_str("ph") == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 3);
+        let read = xs.iter().find(|e| e.get_str("name") == Some("read")).unwrap();
+        assert_eq!(read.get("pid").and_then(Json::as_i64), Some(0));
+        assert_eq!(read.get("tid").and_then(Json::as_i64), Some(100));
+        assert_eq!(read.get("ts").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(read.get("dur").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(
+            read.get("args").and_then(|a| a.get("shard")).and_then(Json::as_i64),
+            Some(3)
+        );
+        // Escaped span name survives the round trip.
+        assert!(xs.iter().any(|e| e.get_str("name") == Some("shard \"x\"")));
+        let metas: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get_str("ph") == Some("M"))
+            .collect();
+        let names: Vec<&str> = metas
+            .iter()
+            .filter_map(|m| m.get("args").and_then(|a| a.get_str("name")))
+            .collect();
+        assert!(names.contains(&"driver"));
+        assert!(names.contains(&"plan-worker 1"));
+        assert!(names.contains(&"reader 0"));
+        assert!(names.contains(&"main"));
+    }
+
+    #[test]
+    fn empty_span_list_still_renders_valid_json() {
+        let doc = parse(&chrome_trace_json(&[])).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(events.is_empty());
+    }
+}

@@ -1,0 +1,216 @@
+//! Process-global metrics registry: counters, gauges, and log₂-bucketed
+//! histograms with Prometheus-style text exposition.
+//!
+//! Dependency-free and deliberately small: every instrument lives in a
+//! name-keyed `BTreeMap` behind a mutex, so exposition order is stable
+//! and new series need no registration step. The serve daemon is the
+//! main producer/consumer — `run_admitted` observes per-job queue-wait
+//! / execute / cache-restore latencies, the `metrics` request mirrors
+//! gauge-like state (admission depth, pool health, cache counters) at
+//! scrape time and renders [`Registry::exposition`].
+//!
+//! Histograms bucket by powers of two: an observation `v` lands in the
+//! first bucket with `le = 2^i >= v` (`v = 0` and `v = 1` share
+//! `le = 1`). 32 buckets cover `1 .. 2^31` — microsecond observations
+//! up to ~35 minutes — and anything larger still counts toward
+//! `_count`/`_sum` under `+Inf`, matching Prometheus cumulative-bucket
+//! semantics (`_bucket{le="+Inf"}` always equals `_count`).
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+const HIST_BUCKETS: usize = 32;
+
+#[derive(Debug, Clone)]
+struct Hist {
+    buckets: [u64; HIST_BUCKETS],
+    sum: u64,
+    count: u64,
+}
+
+impl Hist {
+    fn new() -> Hist {
+        Hist { buckets: [0; HIST_BUCKETS], sum: 0, count: 0 }
+    }
+
+    fn observe(&mut self, v: u64) {
+        let idx = bucket_index(v);
+        if idx < HIST_BUCKETS {
+            self.buckets[idx] += 1;
+        }
+        self.sum = self.sum.saturating_add(v);
+        self.count += 1;
+    }
+}
+
+/// Index of the first power-of-two bucket holding `v`: the smallest `i`
+/// with `v <= 2^i` (0 and 1 both land in bucket 0, `le = 1`).
+fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        (64 - (v - 1).leading_zeros()) as usize
+    }
+}
+
+/// Name-keyed counters, gauges and histograms; see module docs.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, u64>>,
+    hists: Mutex<BTreeMap<String, Hist>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add `delta` to counter `name` (created at 0).
+    pub fn counter_add(&self, name: &str, delta: u64) {
+        let mut c = self.counters.lock().unwrap();
+        *c.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set counter `name` to an absolute value. Used to mirror counters
+    /// owned elsewhere (e.g. `CacheStats`) into the exposition at
+    /// scrape time without double-counting.
+    pub fn counter_store(&self, name: &str, value: u64) {
+        self.counters.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Set gauge `name`.
+    pub fn gauge_set(&self, name: &str, value: u64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Record one observation (conventionally microseconds; name the
+    /// series `*_us`) into histogram `name`.
+    pub fn observe_us(&self, name: &str, v: u64) {
+        let mut h = self.hists.lock().unwrap();
+        h.entry(name.to_string()).or_insert_with(Hist::new).observe(v);
+    }
+
+    /// Clear every instrument — test isolation only.
+    pub fn reset(&self) {
+        self.counters.lock().unwrap().clear();
+        self.gauges.lock().unwrap().clear();
+        self.hists.lock().unwrap().clear();
+    }
+
+    /// Prometheus-style text exposition of every instrument, in stable
+    /// (BTreeMap) name order: `# TYPE` line, then the samples;
+    /// histograms render cumulative `_bucket{le="..."}` lines up to the
+    /// highest non-empty bucket, then `+Inf`, `_sum`, `_count`.
+    pub fn exposition(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let max_used = h
+                .buckets
+                .iter()
+                .rposition(|&b| b > 0)
+                .map(|i| i + 1)
+                .unwrap_or(0);
+            let mut cum = 0u64;
+            for i in 0..max_used {
+                cum += h.buckets[i];
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                    1u64 << i
+                ));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{name}_sum {}\n", h.sum));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+/// The process-global registry.
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_first_power_of_two_at_or_above() {
+        assert_eq!(bucket_index(0), 0); // le=1
+        assert_eq!(bucket_index(1), 0); // le=1
+        assert_eq!(bucket_index(2), 1); // le=2
+        assert_eq!(bucket_index(3), 2); // le=4
+        assert_eq!(bucket_index(4), 2); // le=4
+        assert_eq!(bucket_index(5), 3); // le=8
+        assert_eq!(bucket_index(1024), 10); // le=1024
+        assert_eq!(bucket_index(1025), 11); // le=2048
+        assert!(bucket_index(u64::MAX) >= HIST_BUCKETS); // +Inf only
+    }
+
+    #[test]
+    fn counters_and_gauges_expose() {
+        let r = Registry::new();
+        r.counter_add("jobs_total", 2);
+        r.counter_add("jobs_total", 1);
+        r.counter_store("cache_mem_hits_total", 7);
+        r.gauge_set("active", 3);
+        r.gauge_set("active", 1);
+        let text = r.exposition();
+        assert!(text.contains("# TYPE jobs_total counter\njobs_total 3\n"));
+        assert!(text.contains("cache_mem_hits_total 7\n"));
+        assert!(text.contains("# TYPE active gauge\nactive 1\n"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_inf_matches_count() {
+        let r = Registry::new();
+        for v in [1, 2, 3, 3, 100] {
+            r.observe_us("lat_us", v);
+        }
+        r.observe_us("lat_us", u64::MAX); // +Inf-only observation
+        let text = r.exposition();
+        assert!(text.contains("# TYPE lat_us histogram\n"));
+        assert!(text.contains("lat_us_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("lat_us_bucket{le=\"2\"} 2\n"));
+        assert!(text.contains("lat_us_bucket{le=\"4\"} 4\n"));
+        assert!(text.contains("lat_us_bucket{le=\"128\"} 5\n"));
+        assert!(text.contains("lat_us_bucket{le=\"+Inf\"} 6\n"));
+        assert!(text.contains("lat_us_count 6\n"));
+        // +Inf bucket equals _count even with an over-range observation.
+        let inf: u64 = text
+            .lines()
+            .find(|l| l.starts_with("lat_us_bucket{le=\"+Inf\"}"))
+            .and_then(|l| l.rsplit(' ').next())
+            .unwrap()
+            .parse()
+            .unwrap();
+        let count: u64 = text
+            .lines()
+            .find(|l| l.starts_with("lat_us_count"))
+            .and_then(|l| l.rsplit(' ').next())
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(inf, count);
+    }
+
+    #[test]
+    fn reset_clears_and_global_registry_is_stable() {
+        let r = Registry::new();
+        r.counter_add("x", 1);
+        r.observe_us("y_us", 5);
+        r.reset();
+        assert_eq!(r.exposition(), "");
+        assert!(std::ptr::eq(registry(), registry()));
+    }
+}

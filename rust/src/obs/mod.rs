@@ -1,0 +1,49 @@
+//! Unified observability: span tracing, a metrics registry, and the
+//! EXPLAIN ANALYZE aggregation — dependency-free, threaded through
+//! every executor.
+//!
+//! The paper's whole evaluation is stage-level wall time, but after the
+//! executor tiers grew (fused single pass, streaming reader/worker
+//! split, multi-process workers, the serve daemon) the timing story was
+//! fragmented: `metrics::StageTimes` on the driver, raw phase nanos in
+//! `P3PW` frames, cache counters on `CacheManager`, a pre-formatted
+//! string in the serve stats reply. This module is the one place that
+//! can answer *"where did this job's time go, across threads, worker
+//! processes, and the daemon"*:
+//!
+//! - [`trace`] — a process-global [`trace::TraceSink`] records spans
+//!   (name, category, lane, monotonic start/dur nanos relative to the
+//!   sink's epoch). Spans are recorded from the driver, the streaming
+//!   executor's reader and worker threads, the fused executor's pool
+//!   threads, and — via a span section in the `P3PW` reply frame —
+//!   from inside `plan-worker` processes, clock-aligned to the
+//!   driver-side RPC anchor. When no sink is installed every tracing
+//!   call is a single relaxed atomic load returning an inert guard, so
+//!   executor outputs stay byte-identical and the overhead gate
+//!   (`BENCH_obs.json`, ≤5%) holds.
+//! - [`chrome`] — renders recorded spans as one Chrome-trace-event
+//!   JSON document (`--trace <path>`), loadable in Perfetto or
+//!   `chrome://tracing`, with driver / reader / worker-thread /
+//!   worker-process lanes in a single timeline.
+//! - [`metrics`] — a process-global registry of counters, gauges and
+//!   log₂-bucketed histograms with Prometheus-style text exposition;
+//!   the serve daemon's `metrics` request scrapes it (admission depth,
+//!   pool health, cache counters, per-job queue-wait / execute /
+//!   cache-restore latency histograms).
+//! - [`analyze`] — folds the per-op spans (category `"op"`, keyed by
+//!   op index with `rows_in`/`rows_out` args) into the per-op actuals
+//!   that `explain --analyze` renders next to the plan topology.
+
+pub mod analyze;
+pub mod chrome;
+pub mod metrics;
+pub mod trace;
+
+pub use analyze::{aggregate_ops, OpStats};
+pub use chrome::chrome_trace_json;
+pub use metrics::{registry, Registry};
+pub use trace::{
+    enabled, install, install_new, lane_reader, lane_scope, lane_worker_process,
+    lane_worker_thread, now_ns, pool_lane, record_remote, set_lane, span, uninstall, Lane, Span,
+    SpanGuard, TraceSink, LANE_DRIVER,
+};

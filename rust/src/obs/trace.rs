@@ -1,0 +1,396 @@
+//! Span tracing: a process-global [`TraceSink`] plus the lane model
+//! that places every span on one row of the cross-process timeline.
+//!
+//! **Lanes.** A [`Lane`] is a `(pid, tid)` pair in *trace* coordinates,
+//! not OS ids: the driver process is pid 0 (tid 0 = the driver thread,
+//! tids 100+ = streaming reader threads, tids 200+ = cleaning pool
+//! threads) and worker OS process `w` is pid `1 + w`. Worker-side spans
+//! are recorded against the worker's own epoch and shipped back in the
+//! `P3PW` reply; [`record_remote`] re-anchors them onto the driver
+//! timeline (adding the driver-side RPC start) and rewrites their pid —
+//! so a worker span always nests inside the driver's `rpc worker w`
+//! span on the same lane.
+//!
+//! **Cost when off.** [`span`] is the only call sites pay: one relaxed
+//! atomic load, then an inert guard whose `arg`/`Drop` do nothing. Hot
+//! paths guard any argument *computation* behind
+//! [`SpanGuard::active`]. Executor outputs are byte-identical with
+//! tracing on or off — spans observe, never steer.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// One row of the timeline, in trace coordinates (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Lane {
+    pub pid: u32,
+    pub tid: u32,
+}
+
+/// The driver thread of the driver process.
+pub const LANE_DRIVER: Lane = Lane { pid: 0, tid: 0 };
+
+/// First tid of the streaming executor's reader threads.
+pub const READER_TID_BASE: u32 = 100;
+
+/// First tid of in-process cleaning/worker threads (streaming consumer
+/// pool and the fused executor's thread pool).
+pub const WORKER_TID_BASE: u32 = 200;
+
+/// Lane of streaming reader thread `k`.
+pub fn lane_reader(k: usize) -> Lane {
+    Lane { pid: 0, tid: READER_TID_BASE + k as u32 }
+}
+
+/// Lane of in-process worker thread `k`.
+pub fn lane_worker_thread(k: usize) -> Lane {
+    Lane { pid: 0, tid: WORKER_TID_BASE + k as u32 }
+}
+
+/// Lane of worker OS process `w` (its main thread).
+pub fn lane_worker_process(w: usize) -> Lane {
+    Lane { pid: 1 + w as u32, tid: 0 }
+}
+
+/// One recorded span. `start_ns`/`dur_ns` are nanoseconds relative to
+/// the recording sink's epoch (monotonic, never wall-clock); args are
+/// small numeric annotations (`op` index, `shard`, `rows_in`, ...)
+/// that survive the wire round-trip from worker processes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: String,
+    pub cat: String,
+    pub lane: Lane,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub args: Vec<(String, u64)>,
+}
+
+/// Collects spans against a fixed monotonic epoch. Install one globally
+/// with [`install`]/[`install_new`]; worker processes install a fresh
+/// sink per traced job and drain it into the reply frame.
+#[derive(Debug)]
+pub struct TraceSink {
+    epoch: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink { epoch: Instant::now(), spans: Mutex::new(Vec::new()) }
+    }
+
+    /// Nanoseconds since this sink's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn push(&self, span: Span) {
+        self.spans.lock().unwrap().push(span);
+    }
+
+    /// Take every recorded span, leaving the sink empty.
+    pub fn drain(&self) -> Vec<Span> {
+        std::mem::take(&mut *self.spans.lock().unwrap())
+    }
+
+    /// Copy of the recorded spans (the sink keeps them) — used by
+    /// `explain --analyze` when a `--trace` sink is already installed
+    /// and must stay installed for the file write.
+    pub fn snapshot(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        TraceSink::new()
+    }
+}
+
+// The fast-path flag (relaxed load in `enabled`) and the sink slot it
+// guards. ACTIVE is only ever flipped together with the slot, so a true
+// load may race a concurrent uninstall — `sink()` re-checks the slot.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+fn slot() -> &'static Mutex<Option<Arc<TraceSink>>> {
+    static SLOT: OnceLock<Mutex<Option<Arc<TraceSink>>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Install `sink` as the process-global trace sink.
+pub fn install(sink: Arc<TraceSink>) {
+    *slot().lock().unwrap() = Some(sink);
+    ACTIVE.store(true, Ordering::Release);
+}
+
+/// Create, install and return a fresh sink (epoch = now).
+pub fn install_new() -> Arc<TraceSink> {
+    let sink = Arc::new(TraceSink::new());
+    install(sink.clone());
+    sink
+}
+
+/// Remove the global sink, returning it (with its recorded spans).
+pub fn uninstall() -> Option<Arc<TraceSink>> {
+    ACTIVE.store(false, Ordering::Release);
+    slot().lock().unwrap().take()
+}
+
+/// Is a sink installed? One relaxed atomic load — the tracing-off fast
+/// path every instrumented call site takes.
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+fn sink() -> Option<Arc<TraceSink>> {
+    if !enabled() {
+        return None;
+    }
+    slot().lock().unwrap().clone()
+}
+
+/// Nanoseconds since the installed sink's epoch (0 when tracing is
+/// off). The process executor captures this as the per-worker RPC
+/// anchor that [`record_remote`] aligns shipped spans to.
+pub fn now_ns() -> u64 {
+    sink().map(|s| s.now_ns()).unwrap_or(0)
+}
+
+thread_local! {
+    static CURRENT_LANE: Cell<Lane> = const { Cell::new(LANE_DRIVER) };
+    static POOL_LANE: Cell<Option<Lane>> = const { Cell::new(None) };
+}
+
+static NEXT_POOL_LANE: AtomicU32 = AtomicU32::new(0);
+
+/// Set the current thread's lane (dedicated threads: streaming readers
+/// and consumers set theirs once at spawn).
+pub fn set_lane(lane: Lane) {
+    CURRENT_LANE.with(|c| c.set(lane));
+}
+
+/// The lane new spans on this thread record against.
+pub fn current_lane() -> Lane {
+    CURRENT_LANE.with(|c| c.get())
+}
+
+/// RAII lane override: restores the previous lane on drop. Used where a
+/// closure may run on a borrowed thread (the fused executor's pool, the
+/// process executor's per-worker driver threads) so the driver lane is
+/// never left reassigned.
+pub struct LaneScope {
+    prev: Lane,
+}
+
+pub fn lane_scope(lane: Lane) -> LaneScope {
+    let prev = current_lane();
+    set_lane(lane);
+    LaneScope { prev }
+}
+
+impl Drop for LaneScope {
+    fn drop(&mut self) {
+        set_lane(self.prev);
+    }
+}
+
+/// A stable worker-thread lane for the calling thread, assigned on
+/// first use from a process-wide counter. The fused executor's pool
+/// threads have no external index, so each thread claims the next
+/// `WORKER_TID_BASE + k` lane the first time it runs a shard.
+pub fn pool_lane() -> Lane {
+    POOL_LANE.with(|c| match c.get() {
+        Some(lane) => lane,
+        None => {
+            let k = NEXT_POOL_LANE.fetch_add(1, Ordering::Relaxed) as usize;
+            let lane = lane_worker_thread(k);
+            c.set(Some(lane));
+            lane
+        }
+    })
+}
+
+struct LiveSpan {
+    sink: Arc<TraceSink>,
+    name: String,
+    cat: &'static str,
+    lane: Lane,
+    start_ns: u64,
+    args: Vec<(String, u64)>,
+}
+
+/// Records a span over its lifetime; inert (all methods no-ops) when no
+/// sink is installed. Dropping records the span on the thread's current
+/// lane at construction time.
+pub struct SpanGuard {
+    live: Option<LiveSpan>,
+}
+
+/// Open a span named `name` in category `cat` on the current thread's
+/// lane. Hot paths should pass a `&'static str` name (no allocation on
+/// the tracing-off path) and guard arg computation with
+/// [`SpanGuard::active`].
+pub fn span(name: impl Into<String>, cat: &'static str) -> SpanGuard {
+    match sink() {
+        None => SpanGuard { live: None },
+        Some(sink) => {
+            let start_ns = sink.now_ns();
+            SpanGuard {
+                live: Some(LiveSpan {
+                    sink,
+                    name: name.into(),
+                    cat,
+                    lane: current_lane(),
+                    start_ns,
+                    args: Vec::new(),
+                }),
+            }
+        }
+    }
+}
+
+impl SpanGuard {
+    /// True when this guard will record (a sink is installed).
+    pub fn active(&self) -> bool {
+        self.live.is_some()
+    }
+
+    /// Attach a numeric annotation (no-op when inert).
+    pub fn arg(&mut self, key: &str, value: u64) {
+        if let Some(live) = &mut self.live {
+            live.args.push((key.to_string(), value));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(live) = self.live.take() {
+            let dur_ns = live.sink.now_ns().saturating_sub(live.start_ns);
+            live.sink.push(Span {
+                name: live.name,
+                cat: live.cat.to_string(),
+                lane: live.lane,
+                start_ns: live.start_ns,
+                dur_ns,
+                args: live.args,
+            });
+        }
+    }
+}
+
+/// Fold spans shipped back from worker process `w` into the installed
+/// sink: their start is re-anchored by `anchor_ns` (the driver-side
+/// instant the RPC to that worker began, in driver-epoch nanos) and
+/// their pid is rewritten to the worker-process lane. The worker's own
+/// epoch starts at job decode — at or after the anchor — and every
+/// worker span ends before the reply is sent, so re-anchored spans
+/// always nest inside the driver's `rpc worker w` span. No-op when
+/// tracing is off.
+pub fn record_remote(spans: Vec<Span>, worker: usize, anchor_ns: u64) {
+    let Some(sink) = sink() else { return };
+    for mut s in spans {
+        s.lane.pid = 1 + worker as u32;
+        s.start_ns = s.start_ns.saturating_add(anchor_ns);
+        sink.push(s);
+    }
+}
+
+/// The sink is process-global and `cargo test` runs lib tests on
+/// parallel threads: every test (in any module) that installs one
+/// serializes through this lock.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_without_a_sink() {
+        let _l = test_lock();
+        uninstall();
+        assert!(!enabled());
+        let mut g = span("nothing", "test");
+        assert!(!g.active());
+        g.arg("ignored", 1); // must not panic or record anywhere
+        drop(g);
+        assert_eq!(now_ns(), 0);
+    }
+
+    #[test]
+    fn spans_record_with_lane_args_and_monotonic_times() {
+        let _l = test_lock();
+        let _sink = install_new();
+        {
+            let mut outer = span("outer", "test");
+            outer.arg("k", 7);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            let _inner = span("inner", "test");
+        }
+        let spans = uninstall().unwrap().drain();
+        assert_eq!(spans.len(), 2);
+        // Drop order: inner records first.
+        let inner = &spans[0];
+        let outer = &spans[1];
+        assert_eq!((outer.name.as_str(), outer.cat.as_str()), ("outer", "test"));
+        assert_eq!(outer.lane, LANE_DRIVER);
+        assert_eq!(outer.args, vec![("k".to_string(), 7)]);
+        assert!(outer.dur_ns >= 2_000_000, "{}", outer.dur_ns);
+        // Proper nesting: inner starts at/after outer and ends at/before.
+        assert!(inner.start_ns >= outer.start_ns);
+        assert!(inner.start_ns + inner.dur_ns <= outer.start_ns + outer.dur_ns);
+    }
+
+    #[test]
+    fn lane_scope_restores_and_pool_lanes_are_stable() {
+        let _l = test_lock();
+        assert_eq!(current_lane(), LANE_DRIVER);
+        {
+            let _s = lane_scope(lane_worker_process(3));
+            assert_eq!(current_lane(), Lane { pid: 4, tid: 0 });
+            {
+                let _s2 = lane_scope(lane_reader(1));
+                assert_eq!(current_lane(), Lane { pid: 0, tid: 101 });
+            }
+            assert_eq!(current_lane(), Lane { pid: 4, tid: 0 });
+        }
+        assert_eq!(current_lane(), LANE_DRIVER);
+        // A thread's pool lane is assigned once and reused.
+        let a = pool_lane();
+        assert_eq!(a, pool_lane());
+        assert!(a.tid >= WORKER_TID_BASE);
+        // A different thread gets a different lane.
+        let b = std::thread::spawn(pool_lane).join().unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn record_remote_reanchors_and_renames_the_pid() {
+        let _l = test_lock();
+        let _sink = install_new();
+        let shipped = vec![Span {
+            name: "shard".into(),
+            cat: "shard".into(),
+            lane: LANE_DRIVER, // worker-local coordinates
+            start_ns: 10,
+            dur_ns: 5,
+            args: vec![("shard".into(), 2)],
+        }];
+        record_remote(shipped, 1, 1_000);
+        let spans = uninstall().unwrap().drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].lane, Lane { pid: 2, tid: 0 });
+        assert_eq!(spans[0].start_ns, 1_010);
+        assert_eq!(spans[0].dur_ns, 5);
+        assert_eq!(spans[0].args[0].1, 2);
+        // With no sink installed, shipped spans are silently dropped.
+        record_remote(vec![], 0, 0);
+    }
+}

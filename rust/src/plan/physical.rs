@@ -42,6 +42,7 @@ use crate::engine::Executor;
 use crate::frame::{hash_cells_wide, hash_row_wide, Column, Field, LocalFrame, Partition, Schema};
 use crate::json::cursor::ProjectedColumns;
 use crate::metrics::StageTimes;
+use crate::obs;
 use crate::pipeline::{Estimator, Transformer};
 use crate::Result;
 use std::borrow::Cow;
@@ -774,8 +775,14 @@ impl PhysicalPlan {
 
         let mut merger =
             Merger::new(self.output_schema.clone(), self.n_distinct, self.limit_n());
-        for r in results {
-            merger.push(r);
+        {
+            let mut sp = obs::span("merge", "driver");
+            if sp.active() {
+                sp.arg("parts", results.len() as u64);
+            }
+            for r in results {
+                merger.push(r);
+            }
         }
         Ok(merger.finish(pass_wall, extra_ingest))
     }
@@ -797,14 +804,24 @@ impl PhysicalPlan {
         let results: Vec<PartResult> = if !self.needs_rechunk(exec.workers()) {
             let jobs: Vec<(usize, PathBuf)> =
                 self.files.iter().cloned().enumerate().collect();
-            exec.map_items(jobs, |(idx, path)| self.run_partition(idx, &path))
-                .into_iter()
-                .collect::<Result<Vec<_>>>()?
+            exec.map_items(jobs, |(idx, path)| {
+                // Pool threads have no external index: each claims a
+                // stable worker-thread lane on first use.
+                let _lane = obs::lane_scope(obs::pool_lane());
+                self.run_partition(idx, &path)
+            })
+            .into_iter()
+            .collect::<Result<Vec<_>>>()?
         } else {
             let parsed: Vec<Result<(Partition, Duration)>> =
                 exec.map_items(self.files.clone(), |path| {
+                    let _lane = obs::lane_scope(obs::pool_lane());
+                    let mut sp = obs::span("read+parse shard", "ingest");
                     let t0 = Instant::now();
                     let part = crate::ingest::spark::read_shard(&path, &self.fields)?;
+                    if sp.active() {
+                        sp.arg("rows", part.num_rows() as u64);
+                    }
                     Ok((part, t0.elapsed()))
                 });
             let mut parts: Vec<Partition> = Vec::with_capacity(parsed.len());
@@ -826,7 +843,10 @@ impl PhysicalPlan {
             // limit budget work per chunk exactly as per shard; shard
             // identity is only needed by SampleFilter, which disables
             // re-chunking (`needs_rechunk`), so the index is unused.
-            exec.map_items(chunks, |part| self.run_ops(part, 0, Duration::ZERO))
+            exec.map_items(chunks, |part| {
+                let _lane = obs::lane_scope(obs::pool_lane());
+                self.run_ops(part, 0, Duration::ZERO)
+            })
         };
         Ok((results, extra_ingest))
     }
@@ -1012,7 +1032,14 @@ impl PhysicalPlan {
         buf: &mut Vec<u8>,
     ) -> Result<PartResult> {
         let t0 = Instant::now();
-        crate::ingest::spark::read_shard_into(path, buf)?;
+        {
+            let mut sp = obs::span("read shard", "io");
+            crate::ingest::spark::read_shard_into(path, buf)?;
+            if sp.active() {
+                sp.arg("shard", shard as u64);
+                sp.arg("bytes", buf.len() as u64);
+            }
+        }
         self.run_shard_bytes(shard, path, buf, t0.elapsed())
     }
 
@@ -1027,10 +1054,22 @@ impl PhysicalPlan {
         bytes: &[u8],
         read_span: Duration,
     ) -> Result<PartResult> {
+        let mut shard_sp = obs::span("shard", "shard");
+        if shard_sp.active() {
+            shard_sp.arg("shard", shard as u64);
+        }
         let t0 = Instant::now();
-        let field_refs: Vec<&str> = self.fields.iter().map(|s| s.as_str()).collect();
-        let raw = crate::json::parse_shard_projected(bytes, &field_refs)
-            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let raw = {
+            let mut sp = obs::span("parse shard", "ingest");
+            let field_refs: Vec<&str> = self.fields.iter().map(|s| s.as_str()).collect();
+            let raw = crate::json::parse_shard_projected(bytes, &field_refs)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+            if sp.active() {
+                sp.arg("shard", shard as u64);
+                sp.arg("rows", raw.rows as u64);
+            }
+            raw
+        };
         Ok(self.run_raw(raw, shard, read_span + t0.elapsed()))
     }
 
@@ -1051,6 +1090,11 @@ impl PhysicalPlan {
         let mut consumed = 0usize;
         let t_raw = Instant::now();
         for op in &self.ops {
+            if matches!(op, PartitionOp::Stage { .. } | PartitionOp::EmptyFilter { .. }) {
+                break;
+            }
+            let mut sp = obs::span(op_span_name(op), "op");
+            let rows_before = raw.rows;
             match op {
                 PartitionOp::NullFilter { idxs } => {
                     state.nulls_dropped += raw.null_filter(idxs, state.ids.as_mut());
@@ -1069,7 +1113,13 @@ impl PhysicalPlan {
                 PartitionOp::LimitCap { n } => {
                     state.limited_out += raw.truncate(*n, state.ids.as_mut());
                 }
-                PartitionOp::Stage { .. } | PartitionOp::EmptyFilter { .. } => break,
+                PartitionOp::Stage { .. } | PartitionOp::EmptyFilter { .. } => unreachable!(),
+            }
+            if sp.active() {
+                sp.arg("op", consumed as u64);
+                sp.arg("shard", shard as u64);
+                sp.arg("rows_in", rows_before as u64);
+                sp.arg("rows_out", raw.rows as u64);
             }
             consumed += 1;
         }
@@ -1077,7 +1127,10 @@ impl PhysicalPlan {
         // Materializing the surviving cells is the column-build work
         // `read_shard` used to do at parse time — ingestion's bill.
         let t_mat = Instant::now();
-        let part = raw.materialize();
+        let part = {
+            let _sp = obs::span("materialize", "ingest");
+            raw.materialize()
+        };
         state.phases.ingest += t_mat.elapsed();
         self.run_ops_from(part, shard, consumed, state)
     }
@@ -1125,7 +1178,9 @@ impl PhysicalPlan {
             }
         };
 
-        for op in &self.ops[start..] {
+        for (off, op) in self.ops[start..].iter().enumerate() {
+            let mut sp = obs::span(op_span_name(op), "op");
+            let rows_before = part.num_rows();
             match op {
                 PartitionOp::NullFilter { idxs } => {
                     let t = Instant::now();
@@ -1206,6 +1261,12 @@ impl PhysicalPlan {
                     empties_dropped += dropped;
                     phases.post += t.elapsed();
                 }
+            }
+            if sp.active() {
+                sp.arg("op", (start + off) as u64);
+                sp.arg("shard", shard as u64);
+                sp.arg("rows_in", rows_before as u64);
+                sp.arg("rows_out", part.num_rows() as u64);
             }
         }
         PartResult {
@@ -1418,6 +1479,62 @@ impl PhysicalPlan {
         }
         let _ = writeln!(s, "  {}", self.driver_line(stream.is_some()));
         s
+    }
+
+    /// Render the per-partition program annotated with the actuals an
+    /// executed run recorded (`explain --analyze`): per op, total rows
+    /// in → out, summed in-op time and the number of shard-level
+    /// executions, folded from category-`"op"` spans by
+    /// [`crate::obs::aggregate_ops`]. Stats are keyed by op index in
+    /// the *executed* program; for estimator plans that program splices
+    /// the fitted stage in at the estimator's position, so indices past
+    /// it shift by one and any extra index renders as the spliced
+    /// stage.
+    pub fn render_analyze(
+        &self,
+        stats: &std::collections::BTreeMap<u64, obs::OpStats>,
+    ) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "AnalyzedProgram [{} file-partitions]", self.files.len());
+        let _ = writeln!(s, "  parse+project [{}]", self.fields.join(", "));
+        let fmt_stats = |st: &obs::OpStats| {
+            format!(
+                "[actual: {} -> {} rows, {:.3} ms, {} shard-runs]",
+                st.rows_in,
+                st.rows_out,
+                st.time_ns as f64 / 1e6,
+                st.shards
+            )
+        };
+        for (i, line) in self.op_lines().iter().enumerate() {
+            match stats.get(&(i as u64)) {
+                Some(st) => {
+                    let _ = writeln!(s, "  {line}  {}", fmt_stats(st));
+                }
+                None => {
+                    let _ = writeln!(s, "  {line}  [actual: not executed]");
+                }
+            }
+        }
+        for (idx, st) in stats.iter().filter(|(i, _)| **i >= self.ops.len() as u64) {
+            let _ = writeln!(s, "  op#{idx} (spliced fitted stage)  {}", fmt_stats(st));
+        }
+        s
+    }
+}
+
+/// The `&'static str` span name for one op kind — static so opening a
+/// span on the tracing-off path never allocates (the op *index* in the
+/// span args is what EXPLAIN ANALYZE keys on).
+fn op_span_name(op: &PartitionOp) -> &'static str {
+    match op {
+        PartitionOp::NullFilter { .. } => "null-filter",
+        PartitionOp::HashKeys { .. } => "hash-keys",
+        PartitionOp::SampleFilter { .. } => "sample",
+        PartitionOp::LimitCap { .. } => "limit-cap",
+        PartitionOp::Stage { .. } => "stage",
+        PartitionOp::EmptyFilter { .. } => "empty-filter",
     }
 }
 
@@ -1826,6 +1943,37 @@ mod tests {
         // Workers must not change the fit or the bytes.
         let seq = plan.execute(1).unwrap();
         assert_eq!(out.frame, seq.frame);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tracing_is_byte_identical_and_feeds_explain_analyze() {
+        let (dir, files) = corpus("traced");
+        let plan = case_study_plan(&files, "title", "abstract").optimize();
+        let phys = plan.lower().unwrap();
+        let plain = phys.execute(2).unwrap();
+        let _l = obs::trace::test_lock();
+        let _sink = obs::install_new();
+        let traced = phys.execute(2).unwrap();
+        let spans = obs::uninstall().unwrap().drain();
+        assert_eq!(plain.frame, traced.frame, "tracing must not change output");
+        assert_eq!(plain.rows_ingested, traced.rows_ingested);
+        // Every lowered op ran and reported real row flow.
+        let stats = obs::aggregate_ops(&spans);
+        assert_eq!(stats.len(), phys.ops.len(), "one stats entry per op");
+        assert_eq!(stats[&0].rows_in as usize, traced.rows_ingested);
+        for st in stats.values() {
+            assert!(st.rows_out <= st.rows_in);
+            assert!(st.shards as usize >= 1);
+        }
+        let rendered = phys.render_analyze(&stats);
+        assert!(rendered.contains("[actual: "), "{rendered}");
+        assert!(!rendered.contains("not executed"), "{rendered}");
+        // Op spans landed on pool worker-thread lanes (both the
+        // per-file and the re-chunk scheduling run on pool threads).
+        assert!(spans
+            .iter()
+            .any(|s| s.cat == "op" && s.lane.tid >= obs::trace::WORKER_TID_BASE));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -27,6 +27,12 @@
 //! silent partial result (the driver checks that every assigned shard
 //! came back exactly once).
 //!
+//! Since wire v2 every job frame carries a trace flag and every reply
+//! frame ends with a span section (count 0 when untraced): a traced
+//! worker installs a fresh [`crate::obs::TraceSink`] per job and ships
+//! its spans home, where [`crate::obs::record_remote`] re-anchors them
+//! onto the driver timeline inside that worker's `rpc` span.
+//!
 //! Workers are spawned by re-executing the current binary with the
 //! hidden `plan-worker` CLI mode ([`worker_main`]); tests and benches
 //! point [`ProcessOptions::worker_cmd`] (or `P3SAPP_WORKER_CMD`) at the
@@ -52,6 +58,7 @@
 use super::physical::{KeySlot, Merger, PartResult, PartitionOp, Phases, PhysicalPlan, PlanOutput};
 use crate::cache::artifact::{decode_cells, dtype_code, dtype_from, encode_cells, Cursor};
 use crate::frame::{Partition, Schema};
+use crate::obs;
 use crate::pipeline::features::{HashingTF, Idf, IdfModel, NGram};
 use crate::pipeline::stages::{
     ConvertToLower, RemoveHtmlTags, RemoveShortWords, RemoveUnwantedCharacters, StopWordsRemover,
@@ -123,9 +130,12 @@ impl ProcessOptions {
     }
 
     /// Ship each job to its worker — through the warm pool when one is
-    /// configured, else spawn-per-job — returning raw reply frames in
-    /// job order.
-    fn ship(&self, jobs: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
+    /// configured, else spawn-per-job — returning, in job order, each
+    /// worker's RPC anchor (driver-epoch nanos captured just before the
+    /// job was sent; 0 when tracing is off) and its raw reply frame.
+    /// The anchor is what clock-aligns the worker's shipped spans into
+    /// the driver timeline ([`obs::record_remote`]).
+    fn ship(&self, jobs: &[Vec<u8>]) -> Result<Vec<(u64, Vec<u8>)>> {
         match &self.pool {
             Some(pool) => run_workers_pooled(pool, jobs),
             None => {
@@ -590,6 +600,11 @@ fn encode_job(
     let mut buf = begin_frame(JOB_MAGIC);
     buf.extend_from_slice(&worker_id.to_le_bytes());
     buf.push(if fit.is_some() { MODE_FIT } else { MODE_MAP });
+    // Trace flag: when the driver is tracing, the worker installs a
+    // fresh local sink and ships its spans back in the reply's span
+    // section. Observability only — the result payload is byte-for-byte
+    // independent of this flag.
+    buf.push(obs::enabled() as u8);
     buf.extend_from_slice(&(plan.fields().len() as u32).to_le_bytes());
     for f in plan.fields() {
         write_str(&mut buf, f);
@@ -768,13 +783,71 @@ fn decode_part_result(
     ))
 }
 
-/// Decode a whole map-mode reply frame into shard results.
+/// Hard caps on the reply span section — a corrupt frame must not be
+/// able to provoke a huge allocation before validation fails.
+const MAX_WIRE_SPANS: usize = 1_000_000;
+const MAX_SPAN_ARGS: usize = 64;
+
+/// Serialize a worker's recorded spans as the reply frame's trailing
+/// span section (always present since wire v2; count 0 when the job was
+/// not traced). Lanes ship as the tid only — the driver rewrites the
+/// pid to the worker-process lane in [`obs::record_remote`].
+fn encode_spans(buf: &mut Vec<u8>, spans: &[obs::Span]) {
+    buf.extend_from_slice(&(spans.len() as u32).to_le_bytes());
+    for s in spans {
+        write_str(buf, &s.name);
+        write_str(buf, &s.cat);
+        buf.extend_from_slice(&s.lane.tid.to_le_bytes());
+        buf.extend_from_slice(&s.start_ns.to_le_bytes());
+        buf.extend_from_slice(&s.dur_ns.to_le_bytes());
+        buf.extend_from_slice(&(s.args.len().min(MAX_SPAN_ARGS) as u32).to_le_bytes());
+        for (k, v) in s.args.iter().take(MAX_SPAN_ARGS) {
+            write_str(buf, k);
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Decode the reply's span section. Spans arrive in worker-local
+/// coordinates (pid 0, worker epoch); the caller re-anchors them.
+fn decode_spans(cur: &mut Cursor<'_>) -> Result<Vec<obs::Span>> {
+    let n = cur.u32()? as usize;
+    anyhow::ensure!(n <= MAX_WIRE_SPANS, "reply declares {n} spans");
+    anyhow::ensure!(n <= cur.remaining(), "reply span section declares {n} spans");
+    let mut spans = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = cur.str()?;
+        let cat = cur.str()?;
+        let tid = cur.u32()?;
+        let start_ns = cur.u64()?;
+        let dur_ns = cur.u64()?;
+        let n_args = cur.u32()? as usize;
+        anyhow::ensure!(n_args <= MAX_SPAN_ARGS, "span declares {n_args} args");
+        let mut args = Vec::with_capacity(n_args);
+        for _ in 0..n_args {
+            let key = cur.str()?;
+            args.push((key, cur.u64()?));
+        }
+        spans.push(obs::Span {
+            name,
+            cat,
+            lane: obs::Lane { pid: 0, tid },
+            start_ns,
+            dur_ns,
+            args,
+        });
+    }
+    Ok(spans)
+}
+
+/// Decode a whole map-mode reply frame into shard results plus the
+/// worker's shipped spans (empty when the job was not traced).
 fn decode_map_reply(
     bytes: &[u8],
     worker_id: u32,
     schema: &Schema,
     expected_slots: usize,
-) -> Result<Vec<(u64, PartResult)>> {
+) -> Result<(Vec<(u64, PartResult)>, Vec<obs::Span>)> {
     let mut cur = check_frame(bytes, REPLY_MAGIC, "result")?;
     let got_worker = cur.u32()?;
     anyhow::ensure!(
@@ -788,16 +861,18 @@ fn decode_map_reply(
     for _ in 0..n_shards {
         out.push(decode_part_result(&mut cur, schema, expected_slots)?);
     }
+    let spans = decode_spans(&mut cur)?;
     anyhow::ensure!(
         cur.remaining() == 0,
         "result frame has {} trailing bytes",
         cur.remaining()
     );
-    Ok(out)
+    Ok((out, spans))
 }
 
-/// Decode a fit-mode reply frame into the accumulator partial.
-fn decode_fit_reply(bytes: &[u8], worker_id: u32) -> Result<Vec<u8>> {
+/// Decode a fit-mode reply frame into the accumulator partial plus the
+/// worker's shipped spans (empty when the job was not traced).
+fn decode_fit_reply(bytes: &[u8], worker_id: u32) -> Result<(Vec<u8>, Vec<obs::Span>)> {
     let mut cur = check_frame(bytes, REPLY_MAGIC, "result")?;
     let got_worker = cur.u32()?;
     anyhow::ensure!(
@@ -806,8 +881,15 @@ fn decode_fit_reply(bytes: &[u8], worker_id: u32) -> Result<Vec<u8>> {
     );
     anyhow::ensure!(cur.u8()? == MODE_FIT, "result frame has the wrong mode");
     let n = cur.u64()? as usize;
-    anyhow::ensure!(n == cur.remaining(), "fit partial length mismatch");
-    Ok(cur.take(n)?.to_vec())
+    anyhow::ensure!(n <= cur.remaining(), "fit partial length mismatch");
+    let partial = cur.take(n)?.to_vec();
+    let spans = decode_spans(&mut cur)?;
+    anyhow::ensure!(
+        cur.remaining() == 0,
+        "result frame has {} trailing bytes",
+        cur.remaining()
+    );
+    Ok((partial, spans))
 }
 
 /// The multi-process executor: scatter the op program + shard
@@ -921,9 +1003,10 @@ impl ProcessExecutor {
             .map(|(w, shards)| encode_job(prefix, w as u32, Some((&spec, in_idx)), shards))
             .collect::<Result<_>>()?;
         let replies = self.opts.ship(&jobs)?;
-        for (w, bytes) in replies.iter().enumerate() {
-            let partial = decode_fit_reply(bytes, w as u32)
+        for (w, (anchor, bytes)) in replies.iter().enumerate() {
+            let (partial, spans) = decode_fit_reply(bytes, w as u32)
                 .with_context(|| format!("plan worker {w} ({})", cmd.display()))?;
+            obs::record_remote(spans, w, *anchor);
             acc.merge_partial(&partial)
                 .with_context(|| format!("plan worker {w}: merging fit partial"))?;
         }
@@ -947,10 +1030,11 @@ impl ProcessExecutor {
         let replies = self.opts.ship(&jobs)?;
 
         let mut pending: Vec<Option<PartResult>> = (0..n).map(|_| None).collect();
-        for (w, bytes) in replies.iter().enumerate() {
-            let shard_results =
+        for (w, (anchor, bytes)) in replies.iter().enumerate() {
+            let (shard_results, spans) =
                 decode_map_reply(bytes, w as u32, plan.output_schema(), plan.n_distinct())
                     .with_context(|| format!("plan worker {w} ({})", cmd.display()))?;
+            obs::record_remote(spans, w, *anchor);
             anyhow::ensure!(
                 shard_results.len() == assignments[w].len(),
                 "plan worker {w}: returned {} shards, {} were assigned",
@@ -985,15 +1069,15 @@ fn assign_shards(files: &[PathBuf], procs: usize) -> Vec<Vec<(u64, &Path)>> {
     assignments
 }
 
-/// Drive every job concurrently through `run_one`, returning raw reply
-/// frames in job order (the first failure wins; every job still runs to
+/// Drive every job concurrently through `run_one`, returning results in
+/// job order (the first failure wins; every job still runs to
 /// completion so children are always reaped). Shared by the
 /// spawn-per-job and pooled paths — the failure-collection semantics
 /// must not drift between them.
-fn gather(
+fn gather<T: Send>(
     jobs: &[Vec<u8>],
-    run_one: impl Fn(usize, &[u8]) -> Result<Vec<u8>> + Sync,
-) -> Result<Vec<Vec<u8>>> {
+    run_one: impl Fn(usize, &[u8]) -> Result<T> + Sync,
+) -> Result<Vec<T>> {
     std::thread::scope(|scope| {
         let run_one = &run_one;
         let handles: Vec<_> = jobs
@@ -1025,24 +1109,43 @@ fn gather(
     })
 }
 
+/// Wrap one job exchange in an `rpc` span on the worker-process lane,
+/// capturing the driver-epoch anchor just before the job ships. Worker
+/// spans shipped back in the reply are re-anchored by this value
+/// ([`obs::record_remote`]), so they nest inside this span on the same
+/// Perfetto track. `anchor` is 0 when tracing is off.
+fn traced_exchange(
+    w: usize,
+    job: &[u8],
+    send: impl FnOnce(&[u8]) -> Result<Vec<u8>>,
+) -> Result<(u64, Vec<u8>)> {
+    let _lane = obs::lane_scope(obs::lane_worker_process(w));
+    let mut sp = obs::span("rpc", "rpc");
+    if sp.active() {
+        sp.arg("worker", w as u64);
+    }
+    let anchor = obs::now_ns();
+    send(job).map(|reply| (anchor, reply))
+}
+
 /// Spawn-per-job execution: every worker process is spawned, driven to
 /// completion, and waited on before this returns — success or failure —
 /// so no orphan survives a driver error.
-fn run_workers(cmd: &Path, jobs: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
-    gather(jobs, |w, job| run_worker(w, cmd, job))
+fn run_workers(cmd: &Path, jobs: &[Vec<u8>]) -> Result<Vec<(u64, Vec<u8>)>> {
+    gather(jobs, |w, job| traced_exchange(w, job, |job| run_worker(w, cmd, job)))
 }
 
 /// Pooled execution: job `w` exchanges with pool slot `w`. Callers
 /// never build more jobs than `ProcessOptions::resolve` allows, which
 /// is clamped to the pool size, so the slot index is always in range.
-fn run_workers_pooled(pool: &WorkerPool, jobs: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
+fn run_workers_pooled(pool: &WorkerPool, jobs: &[Vec<u8>]) -> Result<Vec<(u64, Vec<u8>)>> {
     anyhow::ensure!(
         jobs.len() <= pool.size(),
         "{} jobs for a {}-slot worker pool",
         jobs.len(),
         pool.size()
     );
-    gather(jobs, |w, job| pool.exchange(w, job))
+    gather(jobs, |w, job| traced_exchange(w, job, |job| pool.exchange(w, job)))
 }
 
 /// Run one worker process end to end: spawn, ship the job on stdin,
@@ -1161,6 +1264,7 @@ fn run_job(job: &[u8]) -> Result<Vec<u8>> {
     let worker_id = cur.u32()?;
     let mode = cur.u8()?;
     anyhow::ensure!(mode == MODE_MAP || mode == MODE_FIT, "job frame has unknown mode {mode}");
+    let traced = cur.u8()? != 0;
     let n_fields = cur.u32()? as usize;
     anyhow::ensure!(n_fields <= cur.remaining(), "job declares {n_fields} fields");
     let mut fields = Vec::with_capacity(n_fields);
@@ -1186,47 +1290,64 @@ fn run_job(job: &[u8]) -> Result<Vec<u8>> {
     anyhow::ensure!(cur.remaining() == 0, "job frame has {} trailing bytes", cur.remaining());
 
     let plan = PhysicalPlan::from_wire(fields, ops);
-    let mut buf = begin_frame(REPLY_MAGIC);
-    buf.extend_from_slice(&worker_id.to_le_bytes());
-    buf.push(mode);
-    // One shard-byte buffer per worker process: each read reuses the
-    // high-water allocation instead of growing a fresh Vec per shard.
-    let mut shard_buf: Vec<u8> = Vec::new();
-    match fit {
-        None => {
-            buf.extend_from_slice(&(shards.len() as u32).to_le_bytes());
-            for (idx, path) in &shards {
-                let r = plan
-                    .run_partition_buffered(*idx as usize, path, &mut shard_buf)
-                    .with_context(|| format!("shard {idx}"))?;
-                encode_part_result(&mut buf, *idx, &r);
-            }
-        }
-        Some((est_spec, in_idx)) => {
-            let est = est_spec.build();
-            let mut acc = est
-                .accumulator()
-                .ok_or_else(|| anyhow::anyhow!("estimator {} has no accumulator", est.name()))?;
-            for (idx, path) in &shards {
-                let r = plan
-                    .run_partition_buffered(*idx as usize, path, &mut shard_buf)
-                    .with_context(|| format!("shard {idx}"))?;
-                if r.part.num_rows() > 0 {
-                    anyhow::ensure!(
-                        in_idx < r.part.num_columns(),
-                        "fit input column {in_idx} out of range ({} columns)",
-                        r.part.num_columns()
-                    );
-                    acc.accumulate(r.part.column(in_idx))?;
+    // A traced job gets a fresh sink (epoch = now, i.e. at/after the
+    // driver's RPC anchor). It is uninstalled on every exit path: the
+    // persistent worker would otherwise leak a stale sink into its next
+    // job's spans.
+    let sink = if traced { Some(obs::trace::install_new()) } else { None };
+    let result = (|| -> Result<Vec<u8>> {
+        let mut buf = begin_frame(REPLY_MAGIC);
+        buf.extend_from_slice(&worker_id.to_le_bytes());
+        buf.push(mode);
+        // One shard-byte buffer per worker process: each read reuses the
+        // high-water allocation instead of growing a fresh Vec per shard.
+        let mut shard_buf: Vec<u8> = Vec::new();
+        match fit {
+            None => {
+                buf.extend_from_slice(&(shards.len() as u32).to_le_bytes());
+                for (idx, path) in &shards {
+                    let r = plan
+                        .run_partition_buffered(*idx as usize, path, &mut shard_buf)
+                        .with_context(|| format!("shard {idx}"))?;
+                    encode_part_result(&mut buf, *idx, &r);
                 }
             }
-            let partial = acc
-                .partial()
-                .ok_or_else(|| anyhow::anyhow!("estimator {} has no partial state", est.name()))?;
-            buf.extend_from_slice(&(partial.len() as u64).to_le_bytes());
-            buf.extend_from_slice(&partial);
+            Some((est_spec, in_idx)) => {
+                let est = est_spec.build();
+                let mut acc = est.accumulator().ok_or_else(|| {
+                    anyhow::anyhow!("estimator {} has no accumulator", est.name())
+                })?;
+                for (idx, path) in &shards {
+                    let r = plan
+                        .run_partition_buffered(*idx as usize, path, &mut shard_buf)
+                        .with_context(|| format!("shard {idx}"))?;
+                    if r.part.num_rows() > 0 {
+                        anyhow::ensure!(
+                            in_idx < r.part.num_columns(),
+                            "fit input column {in_idx} out of range ({} columns)",
+                            r.part.num_columns()
+                        );
+                        acc.accumulate(r.part.column(in_idx))?;
+                    }
+                }
+                let partial = acc.partial().ok_or_else(|| {
+                    anyhow::anyhow!("estimator {} has no partial state", est.name())
+                })?;
+                buf.extend_from_slice(&(partial.len() as u64).to_le_bytes());
+                buf.extend_from_slice(&partial);
+            }
         }
-    }
+        Ok(buf)
+    })();
+    let spans = match &sink {
+        Some(sink) => {
+            obs::trace::uninstall();
+            sink.drain()
+        }
+        None => Vec::new(),
+    };
+    let mut buf = result?;
+    encode_spans(&mut buf, &spans);
     seal_frame(&mut buf);
     Ok(buf)
 }
@@ -1350,10 +1471,15 @@ mod tests {
         buf.push(MODE_MAP);
         buf.extend_from_slice(&1u32.to_le_bytes());
         encode_part_result(&mut buf, 0, &r);
+        // Empty span section (wire v2: always present, count 0 when the
+        // job was not traced).
+        buf.extend_from_slice(&0u32.to_le_bytes());
         let digest = xxh64(&buf[4..], 0);
         buf.extend_from_slice(&digest.to_le_bytes());
 
-        let decoded = decode_map_reply(&buf, 7, phys.output_schema(), phys.n_distinct()).unwrap();
+        let (decoded, spans) =
+            decode_map_reply(&buf, 7, phys.output_schema(), phys.n_distinct()).unwrap();
+        assert!(spans.is_empty());
         assert_eq!(decoded.len(), 1);
         let (idx, d) = &decoded[0];
         assert_eq!(*idx, 0);
@@ -1387,7 +1513,32 @@ mod tests {
     }
 
     #[test]
+    fn span_section_roundtrips_and_caps_are_enforced() {
+        let spans = vec![obs::Span {
+            name: "op".into(),
+            cat: "op".into(),
+            lane: obs::Lane { pid: 0, tid: 0 },
+            start_ns: 5,
+            dur_ns: 10,
+            args: vec![("rows_in".into(), 9), ("rows_out".into(), 7)],
+        }];
+        let mut buf = Vec::new();
+        encode_spans(&mut buf, &spans);
+        let mut cur = Cursor::new(&buf, 0);
+        let decoded = decode_spans(&mut cur).unwrap();
+        assert_eq!(cur.remaining(), 0);
+        assert_eq!(decoded, spans);
+        // A declared count past the cap errors before any allocation.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_spans(&mut Cursor::new(&bad, 0)).is_err());
+    }
+
+    #[test]
     fn job_frame_roundtrips_and_rejects_corruption() {
+        // `encode_job` reads the global tracing flag; the lock keeps a
+        // concurrent sink-installing test from flipping it mid-encode.
+        let _lock = crate::obs::trace::test_lock();
         let files = vec![PathBuf::from("/tmp/a.json"), PathBuf::from("/tmp/b.json")];
         let plan = case_study_plan(&files, "title", "abstract").optimize();
         let phys = plan.lower().unwrap();
@@ -1399,6 +1550,7 @@ mod tests {
         let mut cur = check_frame(&job, JOB_MAGIC, "job").unwrap();
         assert_eq!(cur.u32().unwrap(), 3, "worker id");
         assert_eq!(cur.u8().unwrap(), MODE_MAP);
+        assert_eq!(cur.u8().unwrap(), 0, "trace flag off outside a sink install");
         // Corruption is detected by the digest.
         let mut bad = job.clone();
         let mid = bad.len() / 2;
@@ -1474,6 +1626,9 @@ mod tests {
 
     #[test]
     fn worker_rejects_bad_jobs() {
+        // `encode_job`/`run_job` consult the global tracing flag; hold
+        // the obs test lock so no concurrent test's sink leaks in.
+        let _lock = crate::obs::trace::test_lock();
         assert!(run_job(b"garbage").is_err());
         assert!(run_job(&[]).is_err());
         // Valid envelope, truncated body.

@@ -58,6 +58,7 @@
 //! ```
 
 use super::physical::{Merger, PartResult, PhysicalPlan, PlanOutput};
+use crate::obs;
 use crate::Result;
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -223,6 +224,7 @@ impl StreamExecutor {
         // output bytes are identical to any fixed split.
         let mut start = 0usize;
         if self.opts.readers == 0 && n >= 2 {
+            let _sp = obs::span("probe shard 0", "exec");
             let t_read = Instant::now();
             let bytes = crate::ingest::spark::read_shard_bytes(&files[0])?;
             let read_span = t_read.elapsed();
@@ -260,31 +262,43 @@ impl StreamExecutor {
         let (done_tx, done_rx) = sync_channel::<(usize, Result<PartResult>)>(queue_cap);
 
         std::thread::scope(|scope| -> Result<()> {
-            for _ in 0..readers {
+            for r in 0..readers {
                 let jobs = &jobs;
                 let abort = &abort;
                 let parsed_tx = parsed_tx.clone();
-                scope.spawn(move || loop {
-                    if abort.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let job = jobs.lock().unwrap().pop_front();
-                    let Some((idx, path)) = job else { break };
-                    let t0 = Instant::now();
-                    let read = crate::ingest::spark::read_shard_bytes(&path)
-                        .map(|bytes| (bytes, t0.elapsed()));
-                    if parsed_tx.send((idx, read)).is_err() {
-                        break;
+                scope.spawn(move || {
+                    obs::set_lane(obs::lane_reader(r));
+                    loop {
+                        if abort.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let job = jobs.lock().unwrap().pop_front();
+                        let Some((idx, path)) = job else { break };
+                        let mut sp = obs::span("read shard", "io");
+                        let t0 = Instant::now();
+                        let read = crate::ingest::spark::read_shard_bytes(&path)
+                            .map(|bytes| (bytes, t0.elapsed()));
+                        if sp.active() {
+                            sp.arg("shard", idx as u64);
+                            if let Ok((bytes, _)) = &read {
+                                sp.arg("bytes", bytes.len() as u64);
+                            }
+                        }
+                        drop(sp);
+                        if parsed_tx.send((idx, read)).is_err() {
+                            break;
+                        }
                     }
                 });
             }
             drop(parsed_tx); // workers see EOF once all readers finish
 
-            for _ in 0..workers {
+            for k in 0..workers {
                 let parsed_rx = &parsed_rx;
                 let abort = &abort;
                 let done_tx = done_tx.clone();
                 scope.spawn(move || {
+                    obs::set_lane(obs::lane_worker_thread(k));
                     // After the driver bails, keep draining the read
                     // queue (without cleaning) so blocked readers can
                     // finish their in-flight send and exit.

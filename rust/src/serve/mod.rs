@@ -38,18 +38,21 @@ pub mod admission;
 pub mod proto;
 
 pub use admission::{Admission, Decision};
-pub use proto::{ErrKind, JobSpec, PreprocessReply, Reply, Request, ServeError, StatsReply};
+pub use proto::{
+    CacheCounters, ErrKind, JobSpec, PreprocessReply, Reply, Request, ServeError, StatsReply,
+};
 
 use crate::cache::CacheManager;
 use crate::driver::{run_p3sapp, DriverOptions};
 use crate::ingest::list_shards;
+use crate::obs;
 use crate::plan::process::WorkerPool;
 use crate::Result;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Daemon construction knobs (`repro serve start` flags).
 #[derive(Debug, Clone)]
@@ -77,6 +80,11 @@ pub struct ServeOptions {
     /// Admission: per-job memory budget in bytes, screened against the
     /// job's total shard bytes (0 = unlimited).
     pub job_budget_bytes: u64,
+    /// Write a Chrome-trace-event JSON covering the daemon's whole
+    /// lifetime here on shutdown (`serve start --trace`). Spans from
+    /// every served job — driver work, reader/worker threads, pooled
+    /// worker processes — land in one timeline.
+    pub trace: Option<PathBuf>,
 }
 
 impl Default for ServeOptions {
@@ -90,6 +98,7 @@ impl Default for ServeOptions {
             max_active: 2,
             max_queue: 8,
             job_budget_bytes: 0,
+            trace: None,
         }
     }
 }
@@ -135,6 +144,10 @@ pub fn run_serve(opts: ServeOptions) -> Result<()> {
     } else {
         None
     };
+    // With --trace, one sink spans the daemon's whole lifetime: every
+    // served job's spans (including re-anchored pooled-worker spans)
+    // accumulate into a single timeline written at shutdown.
+    let trace_sink = opts.trace.as_ref().map(|_| obs::install_new());
     let daemon = Daemon {
         admission: Admission::new(opts.max_active, opts.max_queue, opts.job_budget_bytes),
         opts,
@@ -163,10 +176,19 @@ pub fn run_serve(opts: ServeOptions) -> Result<()> {
             }
         }
     });
-    // Scope joined: every in-flight job has replied, so every handler's
-    // pool clone is gone and dropping the daemon drops the last Arc —
-    // `WorkerPool`'s Drop reaps the persistent workers (clean EOF
-    // first, kill as fallback) before run_serve returns.
+    // Scope joined: every in-flight job has replied, so the trace is
+    // complete — write it before teardown. A write failure costs the
+    // trace, never the shutdown.
+    if let (Some(path), Some(sink)) = (&daemon.opts.trace, &trace_sink) {
+        obs::uninstall();
+        match std::fs::write(path, obs::chrome_trace_json(&sink.drain())) {
+            Ok(()) => eprintln!("[serve] trace written to {}", path.display()),
+            Err(e) => eprintln!("[serve] writing trace {}: {e}", path.display()),
+        }
+    }
+    // Every handler's pool clone is gone and dropping the daemon drops
+    // the last Arc — `WorkerPool`'s Drop reaps the persistent workers
+    // (clean EOF first, kill as fallback) before run_serve returns.
     let socket = daemon.opts.socket.clone();
     drop(daemon);
     let _ = std::fs::remove_file(&socket);
@@ -233,28 +255,53 @@ fn dispatch(req: Request, daemon: &Daemon) -> Reply {
         // admission state itself.
         Request::Stats => {
             let (active, queued) = daemon.admission.load();
-            let cache = match &daemon.cache {
-                Some(c) => {
-                    let s = c.stats();
-                    format!(
-                        "mem_hits={} disk_hits={} misses={} stores={} \
-                         fp_digest_shards={} fp_stat_revalidations={}",
-                        s.mem_hits,
-                        s.disk_hits,
-                        s.misses,
-                        s.stores,
-                        s.fp_digest_shards,
-                        s.fp_stat_revalidations
-                    )
+            let cache = daemon.cache.as_ref().map(|c| {
+                let s = c.stats();
+                CacheCounters {
+                    mem_hits: s.mem_hits,
+                    disk_hits: s.disk_hits,
+                    misses: s.misses,
+                    stores: s.stores,
+                    fp_digest_shards: s.fp_digest_shards,
+                    fp_stat_revalidations: s.fp_stat_revalidations,
                 }
-                None => "disabled".into(),
-            };
+            });
             Reply::Stats(StatsReply {
                 active: active as u64,
                 queued: queued as u64,
                 worker_pids: daemon.pool.as_deref().map(WorkerPool::pids).unwrap_or_default(),
                 cache,
             })
+        }
+        // Metrics bypasses admission like stats: scraping must work
+        // precisely when the daemon is saturated. Gauge-like state and
+        // externally-owned counters are mirrored at scrape time; the
+        // latency histograms accumulate in `run_admitted`.
+        Request::Metrics => {
+            let reg = crate::metrics::registry();
+            let (active, queued) = daemon.admission.load();
+            reg.gauge_set("p3sapp_admission_active", active as u64);
+            reg.gauge_set("p3sapp_admission_queued", queued as u64);
+            reg.gauge_set(
+                "p3sapp_pool_workers_live",
+                daemon.pool.as_deref().map(|p| p.pids().len()).unwrap_or(0) as u64,
+            );
+            if let Some(c) = &daemon.cache {
+                let s = c.stats();
+                for (name, v) in [
+                    ("p3sapp_cache_mem_hits_total", s.mem_hits),
+                    ("p3sapp_cache_disk_hits_total", s.disk_hits),
+                    ("p3sapp_cache_misses_total", s.misses),
+                    ("p3sapp_cache_stores_total", s.stores),
+                    ("p3sapp_cache_evictions_total", s.evictions),
+                    ("p3sapp_cache_corrupt_total", s.corrupt),
+                    ("p3sapp_cache_fp_digest_shards_total", s.fp_digest_shards),
+                    ("p3sapp_cache_fp_stat_revalidations_total", s.fp_stat_revalidations),
+                ] {
+                    reg.counter_store(name, v);
+                }
+            }
+            Reply::Text(reg.exposition())
         }
         Request::Shutdown => {
             daemon.shutdown.store(true, Ordering::SeqCst);
@@ -295,6 +342,7 @@ fn run_admitted(
     };
     let job_bytes: u64 =
         files.iter().map(|f| std::fs::metadata(f).map(|m| m.len()).unwrap_or(0)).sum();
+    let t_admit = Instant::now();
     let _permit = match daemon.admission.admit(job_bytes) {
         Decision::Admitted(permit) => permit,
         Decision::QueueFull { active, queued } => {
@@ -317,14 +365,34 @@ fn run_admitted(
             );
         }
     };
+    let queue_wait = t_admit.elapsed();
     if spec.linger_millis > 0 {
         std::thread::sleep(Duration::from_millis(spec.linger_millis));
     }
     let dopts = daemon.driver_opts(spec);
-    match job(&files, &dopts) {
+    let mut sp = obs::span("serve job", "serve");
+    if sp.active() {
+        sp.arg("shards", files.len() as u64);
+        sp.arg("bytes", job_bytes);
+    }
+    let t_exec = Instant::now();
+    let reply = match job(&files, &dopts) {
         Ok(reply) => reply,
         Err(e) => err(ErrKind::Exec, format!("{e:#}")),
+    };
+    drop(sp);
+    let reg = crate::metrics::registry();
+    reg.counter_add("p3sapp_serve_jobs_total", 1);
+    reg.observe_us("p3sapp_serve_job_queue_wait_us", queue_wait.as_micros() as u64);
+    reg.observe_us("p3sapp_serve_job_execute_us", t_exec.elapsed().as_micros() as u64);
+    if let Reply::Preprocess(p) = &reply {
+        if let Some((_, nanos)) =
+            p.stages.iter().find(|(name, _)| name == crate::driver::CACHE_RESTORE)
+        {
+            reg.observe_us("p3sapp_serve_job_cache_restore_us", *nanos / 1_000);
+        }
     }
+    reply
 }
 
 impl Daemon {

@@ -37,7 +37,10 @@ pub(crate) const REPLY_MAGIC: &[u8; 4] = b"P3PW";
 /// Wire-format version shared by both frames; a mismatch is a hard
 /// error (driver, workers and daemon are the same binary, so it only
 /// trips when a foreign peer is pointed at an incompatible build).
-pub(crate) const WIRE_VERSION: u32 = 1;
+/// v2: plan-worker job frames carry a trace flag, plan-worker replies
+/// end with a span section, stats replies carry typed cache counters,
+/// and the metrics request exists.
+pub(crate) const WIRE_VERSION: u32 = 2;
 /// Plan-worker job modes: run the op program and return per-shard
 /// results, or fold the shards into a fit accumulator and return its
 /// partial state.
@@ -158,6 +161,7 @@ const REQ_EXPLAIN: u8 = 1;
 const REQ_TRAIN: u8 = 2;
 const REQ_STATS: u8 = 3;
 const REQ_SHUTDOWN: u8 = 4;
+const REQ_METRICS: u8 = 5;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
@@ -192,6 +196,10 @@ pub enum Request {
     Train { spec: JobSpec, artifacts: String, steps: usize },
     Stats,
     Shutdown,
+    /// Prometheus-style text exposition of the daemon's metrics
+    /// registry (counters, gauges, latency histograms). Answered with
+    /// [`Reply::Text`]; never queued behind admission control.
+    Metrics,
 }
 
 /// Typed failure causes: admission backpressure ([`ErrKind::QueueFull`],
@@ -304,6 +312,21 @@ impl PreprocessReply {
     }
 }
 
+/// Typed cache counters as they cross the wire — numbers, not a
+/// pre-formatted line. The CLI renders them at the edge; tests and
+/// monitoring read the fields directly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub mem_hits: u64,
+    pub disk_hits: u64,
+    pub misses: u64,
+    pub stores: u64,
+    /// Shards whose content digest was recomputed while fingerprinting.
+    pub fp_digest_shards: u64,
+    /// Fingerprint memo hits revalidated by a stat scan alone.
+    pub fp_stat_revalidations: u64,
+}
+
 /// Daemon liveness/occupancy snapshot.
 #[derive(Debug, Clone)]
 pub struct StatsReply {
@@ -314,8 +337,8 @@ pub struct StatsReply {
     /// PIDs of the live pooled plan workers (lazily spawned — empty
     /// until the first `--processes` job warms the pool).
     pub worker_pids: Vec<u32>,
-    /// Rendered cache counters (one line).
-    pub cache: String,
+    /// Live cache counters; `None` when the daemon runs cache-less.
+    pub cache: Option<CacheCounters>,
 }
 
 /// A daemon reply.
@@ -388,6 +411,7 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         }
         Request::Stats => buf.push(REQ_STATS),
         Request::Shutdown => buf.push(REQ_SHUTDOWN),
+        Request::Metrics => buf.push(REQ_METRICS),
     }
     seal_frame(&mut buf);
     buf
@@ -407,6 +431,7 @@ pub fn decode_request(frame: &[u8]) -> Result<Request> {
         }
         REQ_STATS => Request::Stats,
         REQ_SHUTDOWN => Request::Shutdown,
+        REQ_METRICS => Request::Metrics,
         other => anyhow::bail!("unknown serve request kind {other}"),
     };
     anyhow::ensure!(
@@ -444,7 +469,22 @@ pub fn encode_reply(reply: &Reply) -> Vec<u8> {
             for pid in &s.worker_pids {
                 buf.extend_from_slice(&pid.to_le_bytes());
             }
-            write_str(&mut buf, &s.cache);
+            match &s.cache {
+                None => buf.push(0),
+                Some(c) => {
+                    buf.push(1);
+                    for n in [
+                        c.mem_hits,
+                        c.disk_hits,
+                        c.misses,
+                        c.stores,
+                        c.fp_digest_shards,
+                        c.fp_stat_revalidations,
+                    ] {
+                        buf.extend_from_slice(&n.to_le_bytes());
+                    }
+                }
+            }
         }
         Reply::Preprocess(p) => {
             buf.push(STATUS_OK);
@@ -491,7 +531,17 @@ pub fn decode_reply(frame: &[u8]) -> Result<Reply> {
                     "stats reply declares {n} worker pids"
                 );
                 let worker_pids = (0..n).map(|_| cur.u32()).collect::<Result<Vec<_>>>()?;
-                let cache = cur.str()?;
+                let cache = match cur.u8()? {
+                    0 => None,
+                    _ => Some(CacheCounters {
+                        mem_hits: cur.u64()?,
+                        disk_hits: cur.u64()?,
+                        misses: cur.u64()?,
+                        stores: cur.u64()?,
+                        fp_digest_shards: cur.u64()?,
+                        fp_stat_revalidations: cur.u64()?,
+                    }),
+                };
                 Reply::Stats(StatsReply { active, queued, worker_pids, cache })
             }
             PAYLOAD_PREPROCESS => {
@@ -577,6 +627,7 @@ mod tests {
             Request::Train { spec: spec.clone(), artifacts: "artifacts".into(), steps: 12 },
             Request::Stats,
             Request::Shutdown,
+            Request::Metrics,
         ] {
             let frame = encode_request(&req);
             let back = decode_request(&frame).unwrap();
@@ -597,7 +648,9 @@ mod tests {
                     assert_eq!(a.dir, b.dir);
                     assert_eq!((aa, sa), (ab, sb));
                 }
-                (Request::Stats, Request::Stats) | (Request::Shutdown, Request::Shutdown) => {}
+                (Request::Stats, Request::Stats)
+                | (Request::Shutdown, Request::Shutdown)
+                | (Request::Metrics, Request::Metrics) => {}
                 other => panic!("request changed shape over the wire: {other:?}"),
             }
             // Corruption fails the digest; truncation fails the length
@@ -665,18 +718,38 @@ mod tests {
             other => panic!("wrong reply: {other:?}"),
         }
 
+        let counters = CacheCounters {
+            mem_hits: 3,
+            disk_hits: 1,
+            misses: 4,
+            stores: 5,
+            fp_digest_shards: 12,
+            fp_stat_revalidations: 6,
+        };
         let stats_wire = encode_reply(&Reply::Stats(StatsReply {
             active: 1,
             queued: 2,
             worker_pids: vec![101, 202],
-            cache: "mem_hits=3".into(),
+            cache: Some(counters),
         }));
         match decode_reply(&stats_wire).unwrap() {
             Reply::Stats(s) => {
                 assert_eq!((s.active, s.queued), (1, 2));
                 assert_eq!(s.worker_pids, vec![101, 202]);
-                assert_eq!(s.cache, "mem_hits=3");
+                assert_eq!(s.cache, Some(counters), "counters cross as numbers, not text");
             }
+            other => panic!("wrong reply: {other:?}"),
+        }
+
+        // Cache-less daemon: the counters are absent, not zeroed.
+        let bare_wire = encode_reply(&Reply::Stats(StatsReply {
+            active: 0,
+            queued: 0,
+            worker_pids: vec![],
+            cache: None,
+        }));
+        match decode_reply(&bare_wire).unwrap() {
+            Reply::Stats(s) => assert_eq!(s.cache, None),
             other => panic!("wrong reply: {other:?}"),
         }
     }

@@ -15,7 +15,11 @@
 //! - failure semantics mirror `process_executor.rs`: a garbled or
 //!   truncated frame, a queue-full or over-budget submission, and a
 //!   client that disconnects mid-job each produce a typed reply naming
-//!   the cause (or a log line) — never a daemon crash or hang.
+//!   the cause (or a log line) — never a daemon crash or hang;
+//! - observability is part of the wire contract: stats replies carry
+//!   *typed* cache counters (no string parsing), and the metrics
+//!   request returns a Prometheus-style exposition with per-job
+//!   latency histograms.
 
 #![cfg(unix)]
 
@@ -375,6 +379,55 @@ fn over_budget_submission_gets_a_typed_rejection() {
         }
         other => panic!("expected an over_budget rejection, got {other:?}"),
     }
+    daemon.shutdown();
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn stats_counters_are_typed_and_metrics_exposition_scrapes() {
+    let root = scratch("metrics");
+    let (dir, _files) = corpus(&root, 71);
+    let daemon = DaemonGuard::start(&root, &[]);
+
+    // Cold then warm: exactly one miss+store, then at least one hit.
+    for _ in 0..2 {
+        match request(&daemon.socket, &Request::Preprocess(job(&dir))).unwrap() {
+            Reply::Preprocess(_) => {}
+            other => panic!("expected a preprocess reply, got {other:?}"),
+        }
+    }
+    let stats = match request(&daemon.socket, &Request::Stats).unwrap() {
+        Reply::Stats(s) => s,
+        other => panic!("expected stats, got {other:?}"),
+    };
+    // The counters arrive as numbers, not a pre-formatted string.
+    let c = stats.cache.expect("the daemon runs with a cache by default");
+    assert_eq!(c.stores, 1, "cold job stores exactly once: {c:?}");
+    assert!(c.misses >= 1, "cold job must miss first: {c:?}");
+    assert!(c.mem_hits + c.disk_hits >= 1, "warm job must hit: {c:?}");
+
+    let text = match request(&daemon.socket, &Request::Metrics).unwrap() {
+        Reply::Text(t) => t,
+        other => panic!("expected a metrics exposition, got {other:?}"),
+    };
+    // Counters: the job count and the mirrored live cache stats.
+    assert!(text.contains("# TYPE p3sapp_serve_jobs_total counter\n"), "{text}");
+    assert!(text.contains("p3sapp_serve_jobs_total 2\n"), "{text}");
+    assert!(text.contains("p3sapp_cache_stores_total 1\n"), "{text}");
+    assert!(text.contains("p3sapp_plan_rows_out_total"), "{text}");
+    // Gauges: admission depth is idle at scrape time.
+    assert!(text.contains("# TYPE p3sapp_admission_active gauge\n"), "{text}");
+    assert!(text.contains("p3sapp_admission_active 0\n"), "{text}");
+    // Histograms: one series per latency leg, cumulative buckets with
+    // the +Inf bucket equal to the observation count.
+    for series in ["p3sapp_serve_job_queue_wait_us", "p3sapp_serve_job_execute_us"] {
+        assert!(text.contains(&format!("# TYPE {series} histogram\n")), "{text}");
+        assert!(text.contains(&format!("{series}_count 2\n")), "{text}");
+        assert!(text.contains(&format!("{series}_bucket{{le=\"+Inf\"}} 2\n")), "{text}");
+    }
+    // Only the warm job restored from cache.
+    assert!(text.contains("p3sapp_serve_job_cache_restore_us_count 1\n"), "{text}");
+
     daemon.shutdown();
     std::fs::remove_dir_all(&root).unwrap();
 }

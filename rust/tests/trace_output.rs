@@ -1,0 +1,233 @@
+//! Golden-schema tests for `--trace` output and `explain --analyze`.
+//!
+//! Each test runs the *built binary* (`CARGO_BIN_EXE_repro`) over a
+//! small generated corpus and validates the Chrome-trace-event JSON it
+//! writes with the crate's own parser — the same document Perfetto or
+//! `chrome://tracing` would load. Pinned contracts:
+//!
+//! - the document is valid JSON with a non-empty `traceEvents` array of
+//!   `"M"` metadata and `"X"` complete events with sane timestamps;
+//! - a `--stream` run records distinct driver / reader / worker-thread
+//!   lanes (trace pid 0, tids 0 / 100+ / 200+), with the per-op spans
+//!   nested inside the driver's `execute` span;
+//! - a `--processes` run records worker-*process* lanes (trace pid
+//!   `1 + w`), whose shipped spans are clock-aligned into the driver
+//!   timeline: every remote span nests inside that worker's driver-side
+//!   `rpc` span;
+//! - `explain --analyze` renders the analyzed topology with per-op
+//!   actuals for every op.
+
+use p3sapp::corpus::{generate_corpus, CorpusSpec};
+use p3sapp::json::{parse, Json};
+use p3sapp::obs::trace::{READER_TID_BASE, WORKER_TID_BASE};
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::process::Command;
+
+/// Per-test scratch root holding the corpus shards and the trace file.
+fn scratch(name: &str) -> (PathBuf, PathBuf) {
+    let root = std::env::temp_dir().join(format!("p3sapp-trace-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let corpus = root.join("corpus");
+    generate_corpus(&CorpusSpec::tiny(23), &corpus).unwrap();
+    (root, corpus)
+}
+
+fn run_repro(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_repro")).args(args).output().unwrap();
+    assert!(
+        out.status.success(),
+        "repro {args:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).unwrap()
+}
+
+/// Parse a written trace and return its document after the generic
+/// schema checks every trace must pass.
+fn load_trace(path: &PathBuf) -> Json {
+    let text = std::fs::read_to_string(path).expect("trace file written");
+    let doc = parse(&text).expect("trace must be valid JSON");
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty(), "trace must record events");
+    for e in events {
+        match e.get_str("ph") {
+            Some("M") => {
+                assert!(
+                    e.get("args").and_then(|a| a.get_str("name")).is_some(),
+                    "metadata event must name its lane: {e:?}"
+                );
+            }
+            Some("X") => {
+                let ts = e.get("ts").and_then(Json::as_f64).expect("ts");
+                let dur = e.get("dur").and_then(Json::as_f64).expect("dur");
+                assert!(ts >= 0.0 && dur >= 0.0, "timestamps must be sane: {e:?}");
+            }
+            other => panic!("unexpected event phase {other:?}: {e:?}"),
+        }
+    }
+    doc
+}
+
+/// The `"X"` (span) events of a parsed trace as
+/// `(name, pid, tid, ts, end)` tuples.
+fn span_events(doc: &Json) -> Vec<(String, i64, i64, f64, f64)> {
+    doc.get("traceEvents")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter(|e| e.get_str("ph") == Some("X"))
+        .map(|e| {
+            let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+            let dur = e.get("dur").and_then(Json::as_f64).unwrap();
+            (
+                e.get_str("name").unwrap().to_string(),
+                e.get("pid").and_then(Json::as_i64).unwrap(),
+                e.get("tid").and_then(Json::as_i64).unwrap(),
+                ts,
+                ts + dur,
+            )
+        })
+        .collect()
+}
+
+fn lane_names(doc: &Json) -> Vec<String> {
+    doc.get("traceEvents")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter(|e| e.get_str("ph") == Some("M"))
+        .filter_map(|e| e.get("args").and_then(|a| a.get_str("name")).map(str::to_string))
+        .collect()
+}
+
+#[test]
+fn streamed_run_traces_driver_reader_and_worker_thread_lanes() {
+    let (root, corpus) = scratch("stream");
+    let trace = root.join("stream.trace.json");
+    run_repro(&[
+        "preprocess",
+        "--dir",
+        corpus.to_str().unwrap(),
+        "--approach",
+        "p3sapp",
+        "--stream",
+        "--readers",
+        "2",
+        "--workers",
+        "2",
+        "--trace",
+        trace.to_str().unwrap(),
+    ]);
+    let doc = load_trace(&trace);
+    let spans = span_events(&doc);
+
+    // All three in-process lane families, distinct by tid.
+    assert!(spans.iter().any(|(_, pid, tid, ..)| (*pid, *tid) == (0, 0)), "driver lane");
+    assert!(
+        spans.iter().any(|(_, pid, tid, ..)| *pid == 0
+            && (READER_TID_BASE as i64..WORKER_TID_BASE as i64).contains(tid)),
+        "reader lane missing: {spans:?}"
+    );
+    assert!(
+        spans.iter().any(|(_, pid, tid, ..)| *pid == 0 && *tid >= WORKER_TID_BASE as i64),
+        "worker-thread lane missing: {spans:?}"
+    );
+    let names = lane_names(&doc);
+    assert!(names.iter().any(|n| n == "driver"), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("reader ")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("worker ")), "{names:?}");
+
+    // Nesting: the driver's execute span brackets the whole pipeline,
+    // so every other pid-0 span recorded under it stays inside its
+    // interval (one shared monotonic clock).
+    let (_, _, _, exec_ts, exec_end) = spans
+        .iter()
+        .find(|(name, pid, tid, ..)| name == "execute" && (*pid, *tid) == (0, 0))
+        .expect("driver execute span")
+        .clone();
+    let nested: Vec<_> =
+        spans.iter().filter(|(name, pid, ..)| *pid == 0 && name != "execute").collect();
+    assert!(!nested.is_empty());
+    for (name, _, _, ts, end) in nested {
+        if *ts >= exec_ts {
+            assert!(
+                *end <= exec_end,
+                "span '{name}' [{ts}, {end}] escapes execute [{exec_ts}, {exec_end}]"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn multiprocess_run_aligns_worker_spans_inside_driver_rpc_spans() {
+    let (root, corpus) = scratch("procs");
+    let trace = root.join("procs.trace.json");
+    run_repro(&[
+        "preprocess",
+        "--dir",
+        corpus.to_str().unwrap(),
+        "--approach",
+        "p3sapp",
+        "--processes",
+        "2",
+        "--trace",
+        trace.to_str().unwrap(),
+    ]);
+    let doc = load_trace(&trace);
+    let spans = span_events(&doc);
+
+    // Worker-process lanes exist and carry real (shipped) spans beyond
+    // the driver-side rpc bracket.
+    let worker_pids: BTreeSet<i64> =
+        spans.iter().filter(|(_, pid, ..)| *pid >= 1).map(|(_, pid, ..)| *pid).collect();
+    assert!(!worker_pids.is_empty(), "no worker-process lanes: {spans:?}");
+    assert!(
+        spans.iter().any(|(name, pid, ..)| *pid >= 1 && name != "rpc"),
+        "no spans shipped back from the workers: {spans:?}"
+    );
+    let names = lane_names(&doc);
+    assert!(names.iter().any(|n| n.starts_with("plan-worker ")), "{names:?}");
+
+    // Clock alignment: each worker's spans were re-anchored to the
+    // driver-side RPC start, so they nest inside that worker's rpc span
+    // in the one shared timeline.
+    for pid in worker_pids {
+        let (_, _, _, rpc_ts, rpc_end) = spans
+            .iter()
+            .find(|(name, p, ..)| name == "rpc" && *p == pid)
+            .unwrap_or_else(|| panic!("no rpc span for worker pid {pid}"))
+            .clone();
+        for (name, p, _, ts, end) in &spans {
+            if *p == pid && name != "rpc" {
+                assert!(
+                    *ts >= rpc_ts && *end <= rpc_end,
+                    "worker span '{name}' [{ts}, {end}] escapes rpc [{rpc_ts}, {rpc_end}]"
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn explain_analyze_renders_per_op_actuals() {
+    let (root, corpus) = scratch("analyze");
+    let stdout = run_repro(&[
+        "explain",
+        "--dir",
+        corpus.to_str().unwrap(),
+        "--analyze",
+        "--workers",
+        "2",
+    ]);
+    assert!(stdout.contains("== Analyzed Physical Plan =="), "{stdout}");
+    assert!(stdout.contains("[actual: "), "{stdout}");
+    assert!(
+        !stdout.contains("[actual: not executed]"),
+        "every op of the cleaning plan runs: {stdout}"
+    );
+    assert!(stdout.contains("Driver: executed in"), "{stdout}");
+    std::fs::remove_dir_all(&root).unwrap();
+}
