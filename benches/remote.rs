@@ -1,0 +1,139 @@
+//! Remote executor over loopback TCP vs the in-process fused single
+//! pass — what the multi-machine tier costs when the "machines" are
+//! free (same host, kernel loopback). Arms:
+//!
+//!   1. plan_fused    — the optimized single pass, re-measured in this
+//!                      run (the ratio denominator);
+//!   2. remote        — the same program shipped to in-process loopback
+//!                      TCP workers ([`p3sapp::plan::remote::serve_listener`]),
+//!                      shards inline in the job frame, results streamed
+//!                      back as per-shard chunk frames;
+//!   3. remote_digest — the same, with `inline_max_bytes = 1` so every
+//!                      shard goes through the fetch-by-digest round
+//!                      trip (job frame carries digests, workers fetch
+//!                      the bytes back over the same connection);
+//!   4. remote_twopass — the two-pass estimator plan over the same
+//!                      endpoints (fit pass + fused pass, two jobs per
+//!                      endpoint).
+//!
+//! On smoke-scale corpora these arms price TCP connects, frame
+//! serialization and the digest round trip — the real distribution win
+//! (N machines' cores) cannot show on one host, so the checked-in
+//! record pins conservative ratios. The break-even is when per-shard
+//! compute outweighs shipping: shard bytes cross the wire at most
+//! twice, so a pipeline that does more than ~2 passes of work per byte
+//! (cleaning + features does many) wins as soon as remote cores are
+//! otherwise idle.
+//!
+//! Results are recorded as machine-readable JSON (default under
+//! `target/` so bench runs never dirty the checked-in
+//! `BENCH_remote.json`; override with `BENCH_REMOTE_JSON=path`,
+//! disable with `=-`). CI's remote-smoke job regenerates it and runs
+//! the `benchgate` comparator against the repo-root record.
+//!
+//!     cargo bench --bench remote
+//!     BENCH_SCALE=4 BENCH_WORKERS=8 cargo bench --bench remote
+
+use p3sapp::benchkit::{
+    bench, bench_record_json, black_box, env_f64, env_usize, write_bench_record, Measurement,
+};
+use p3sapp::corpus::{generate_corpus, CorpusSpec};
+use p3sapp::ingest::list_shards;
+use p3sapp::pipeline::presets::{case_study_features_plan, case_study_plan};
+use p3sapp::plan::{remote::serve_listener, RemoteOptions};
+
+/// Spin up `n` loopback workers, each a real `TcpListener` on
+/// `127.0.0.1:0` served by the library accept loop on its own thread
+/// (idle accept loops; the threads die with the process).
+fn loopback_endpoints(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|_| {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let ep = listener.local_addr().unwrap().to_string();
+            std::thread::spawn(move || serve_listener(listener));
+            ep
+        })
+        .collect()
+}
+
+fn main() {
+    let scale = env_f64("BENCH_SCALE", 1.0);
+    let workers = match env_usize("BENCH_WORKERS", 0) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2),
+        n => n,
+    };
+    let spec = CorpusSpec::tiny(7).scaled(scale * 8.0);
+    let dir = std::env::temp_dir().join(format!("p3sapp-bench-remote-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let manifest = generate_corpus(&spec, &dir).unwrap();
+    let files = list_shards(&dir).unwrap();
+    println!(
+        "corpus: {} records in {} files ({:.1} MB), {workers} workers\n",
+        manifest.n_records,
+        manifest.n_files,
+        manifest.total_bytes as f64 / 1048576.0
+    );
+
+    let fused_plan = case_study_plan(&files, "title", "abstract").optimize();
+    let features_plan = case_study_features_plan(&files, "title", "abstract").optimize();
+
+    let m_fused = bench("plan single-pass + FusedStringStage", 1, 5, || {
+        black_box(&fused_plan).execute(workers).unwrap().rows_out
+    });
+    println!("  {}", m_fused.report());
+
+    // Two loopback endpoints: enough to exercise the round-robin shard
+    // stripe and the per-endpoint driver threads without drowning one
+    // host in connections.
+    let endpoints = loopback_endpoints(2.min(files.len().max(1)));
+
+    let inline_opts = RemoteOptions { endpoints: endpoints.clone(), ..Default::default() };
+    let m_remote = bench("plan remote (loopback TCP, inline shards)", 1, 5, || {
+        black_box(&fused_plan).execute_remote(&inline_opts).unwrap().rows_out
+    });
+    println!("  {}", m_remote.report());
+
+    let digest_opts = RemoteOptions {
+        endpoints: endpoints.clone(),
+        inline_max_bytes: 1,
+        ..Default::default()
+    };
+    let m_digest = bench("plan remote (fetch-by-digest shards)", 1, 5, || {
+        black_box(&fused_plan).execute_remote(&digest_opts).unwrap().rows_out
+    });
+    println!("  {}", m_digest.report());
+
+    let m_twopass = bench("plan twopass remote (fit + fused pass)", 1, 5, || {
+        black_box(&features_plan).execute_remote(&inline_opts).unwrap().rows_out
+    });
+    println!("  {}", m_twopass.report());
+
+    println!(
+        "\n  remote vs in-process (remote/plan_fused):       {:.2}x",
+        m_remote.mean_secs() / m_fused.mean_secs()
+    );
+    println!(
+        "  digest round-trip cost (digest/remote):         {:.2}x",
+        m_digest.mean_secs() / m_remote.mean_secs()
+    );
+
+    let arms: [(&str, &Measurement); 4] = [
+        ("plan_fused", &m_fused),
+        ("remote", &m_remote),
+        ("remote_digest", &m_digest),
+        ("remote_twopass", &m_twopass),
+    ];
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    extra.push(("records", manifest.n_records.to_string()));
+    extra.push(("files", manifest.n_files.to_string()));
+    extra.push(("bytes", manifest.total_bytes.to_string()));
+    extra.push(("workers", workers.to_string()));
+    extra.push(("endpoints", endpoints.len().to_string()));
+    write_bench_record(
+        "BENCH_REMOTE_JSON",
+        "target/BENCH_remote.json",
+        &bench_record_json("remote", &extra, &arms),
+    );
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -43,7 +43,7 @@ pub use manager::{
     COUNTERS_FILE, DEFAULT_MAX_BYTES, DEFAULT_MEMO_MAX_BYTES,
 };
 
-use crate::plan::{LogicalOp, LogicalPlan, ProcessOptions, StreamOptions};
+use crate::plan::{ExecutorKind, LogicalOp, LogicalPlan};
 use crate::Result;
 use std::path::PathBuf;
 
@@ -70,8 +70,7 @@ pub fn plan_files(plan: &LogicalPlan) -> &[PathBuf] {
 pub fn explain_with_cache(
     plan: &LogicalPlan,
     workers: usize,
-    stream: Option<&StreamOptions>,
-    process: Option<&ProcessOptions>,
+    executor: &ExecutorKind,
     cache: Option<&CacheManager>,
 ) -> Result<String> {
     if let Some(mgr) = cache {
@@ -97,7 +96,7 @@ pub fn explain_with_cache(
             }
         }
     }
-    crate::plan::explain_with(plan, workers, stream, process)
+    crate::plan::explain_with(plan, workers, executor)
 }
 
 #[cfg(test)]
@@ -117,7 +116,7 @@ mod tests {
         let cache = CacheManager::open(dir.join("cache")).unwrap();
 
         // Cold: the normal topology renders.
-        let cold = explain_with_cache(&plan, 2, None, None, Some(&cache)).unwrap();
+        let cold = explain_with_cache(&plan, 2, &ExecutorKind::Fused, Some(&cache)).unwrap();
         assert!(cold.contains("SinglePass"), "{cold}");
         assert!(!cold.contains("cache hit"), "{cold}");
 
@@ -126,13 +125,13 @@ mod tests {
         let fp = fingerprint(&optimized.render(), &files).unwrap();
         let out = optimized.execute(2).unwrap();
         cache.put(&fp, &out).unwrap();
-        let warm = explain_with_cache(&plan, 2, None, None, Some(&cache)).unwrap();
+        let warm = explain_with_cache(&plan, 2, &ExecutorKind::Fused, Some(&cache)).unwrap();
         assert!(warm.contains(&format!("[cache hit {}]", fp.key())), "{warm}");
         assert!(warm.contains("== Optimized Logical Plan =="), "{warm}");
         assert!(!warm.contains("SinglePass"), "{warm}");
 
         // No cache manager: identical to the plain EXPLAIN.
-        let plain = explain_with_cache(&plan, 2, None, None, None).unwrap();
+        let plain = explain_with_cache(&plan, 2, &ExecutorKind::Fused, None).unwrap();
         assert_eq!(plain, crate::plan::explain(&plan, 2).unwrap());
         std::fs::remove_dir_all(&dir).unwrap();
     }

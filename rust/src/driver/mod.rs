@@ -24,7 +24,7 @@ use crate::ingest::append::ingest_files_append;
 use crate::metrics::{StageClock, StageTimes};
 use crate::obs;
 use crate::pipeline::presets::{case_study_plan_with, CaseStudyOptions};
-use crate::plan::{LogicalPlan, PlanOutput};
+use crate::plan::{ExecutorKind, LogicalPlan, PlanOutput};
 use crate::Result;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -101,20 +101,14 @@ pub struct DriverOptions {
     /// Columns to project (title, abstract for the case study).
     pub title_col: String,
     pub abstract_col: String,
-    /// When set, P3SAPP executes through the streaming pipeline
-    /// ([`crate::plan::StreamExecutor`]) — shard parsing overlaps
-    /// cleaning — instead of the fused single pass. Output is
-    /// byte-identical either way; only the schedule differs. Ignored by
-    /// the CA driver, which is the paper's eager control.
-    pub stream: Option<crate::plan::StreamOptions>,
-    /// When set, P3SAPP executes through the multi-process sharded
-    /// executor ([`crate::plan::ProcessExecutor`]): the op program and
-    /// per-worker shard assignments ship to `n` worker OS processes over
-    /// a versioned wire format, and the driver folds their result frames
-    /// (the Spark-executor analogy). Takes precedence over `stream` —
-    /// the CLI rejects setting both. Byte-identical output; ignored by
-    /// the CA driver.
-    pub processes: Option<usize>,
+    /// Which executor P3SAPP runs through — fused single pass (the
+    /// default), streaming pipeline, worker OS processes, a warm worker
+    /// pool, or remote TCP endpoints. Exactly one: the enum *is* the
+    /// mutual exclusion the CLI used to police across three separate
+    /// fields. Output is byte-identical across every variant; only the
+    /// schedule differs. Ignored by the CA driver, which is the paper's
+    /// eager control.
+    pub executor: ExecutorKind,
     /// When set, P3SAPP consults the persistent plan cache before
     /// executing: a fingerprint hit restores the frame (recorded under
     /// the [`CACHE_RESTORE`] stage) and a miss executes then stores.
@@ -136,12 +130,6 @@ pub struct DriverOptions {
     /// lowers into the plan's two-pass physical strategy — no staged
     /// `Pipeline::fit` fallback. Ignored by the CA driver.
     pub features: bool,
-    /// Warm worker pool for the multi-process path ([`crate::plan::WorkerPool`]).
-    /// When set alongside `processes`, jobs ship to these long-lived
-    /// worker OS processes instead of spawning fresh ones per run — the
-    /// serve daemon holds one pool across requests. `None` (the default)
-    /// keeps the spawn-per-run behavior.
-    pub pool: Option<Arc<crate::plan::WorkerPool>>,
 }
 
 impl Default for DriverOptions {
@@ -150,13 +138,11 @@ impl Default for DriverOptions {
             workers: 0,
             title_col: "title".into(),
             abstract_col: "abstract".into(),
-            stream: None,
-            processes: None,
+            executor: ExecutorKind::Fused,
             cache: None,
             sample: None,
             limit: None,
             features: false,
-            pool: None,
         }
     }
 }
@@ -173,17 +159,6 @@ impl DriverOptions {
     /// The exact logical plan [`run_p3sapp`] will execute over `files`.
     pub fn build_plan(&self, files: &[PathBuf]) -> LogicalPlan {
         case_study_plan_with(files, &self.title_col, &self.abstract_col, &self.plan_options())
-    }
-
-    /// The multi-process executor config `processes` selects (`None`
-    /// when the in-process executors run). Shared by the driver and
-    /// EXPLAIN so both describe the same schedule.
-    pub fn process_options(&self) -> Option<crate::plan::ProcessOptions> {
-        self.processes.map(|n| crate::plan::ProcessOptions {
-            processes: n,
-            pool: self.pool.clone(),
-            ..Default::default()
-        })
     }
 }
 
@@ -266,12 +241,14 @@ fn count_rows(res: PreprocessResult) -> PreprocessResult {
 
 /// Execute an (already optimized) plan with the executor `opts` selects.
 fn execute_plan(plan: &LogicalPlan, opts: &DriverOptions) -> Result<PlanOutput> {
-    if let Some(process) = opts.process_options() {
-        return plan.execute_process(&process);
-    }
-    match &opts.stream {
-        Some(stream) => plan.execute_stream(stream),
-        None => plan.execute(opts.workers),
+    match &opts.executor {
+        ExecutorKind::Fused => plan.execute(opts.workers),
+        ExecutorKind::Stream(stream) => plan.execute_stream(stream),
+        ExecutorKind::Remote(remote) => plan.execute_remote(remote),
+        kind @ (ExecutorKind::Process(_) | ExecutorKind::Pool(_)) => {
+            let process = kind.process_options().expect("process-backed kind");
+            plan.execute_process(&process)
+        }
     }
 }
 
@@ -367,7 +344,7 @@ mod tests {
             &files,
             &DriverOptions {
                 workers: 2,
-                stream: Some(crate::plan::StreamOptions {
+                executor: ExecutorKind::Stream(crate::plan::StreamOptions {
                     readers: 2,
                     workers: 2,
                     queue_cap: 2,

@@ -41,11 +41,15 @@ fn main() {
     // detail of `--processes`, not a user-facing command.
     if std::env::args().nth(1).as_deref() == Some("plan-worker") {
         // `--persist` is the serve daemon's pool mode: loop over framed
-        // jobs on stdin instead of exiting after one.
-        let code = if std::env::args().nth(2).as_deref() == Some("--persist") {
-            p3sapp::plan::process::worker_main_persist()
-        } else {
-            p3sapp::plan::process::worker_main()
+        // jobs on stdin instead of exiting after one. `--listen ADDR`
+        // is the remote tier: serve framed jobs over TCP instead of
+        // stdin/stdout, one driver connection at a time.
+        let code = match std::env::args().nth(2).as_deref() {
+            Some("--persist") => p3sapp::plan::process::worker_main_persist(),
+            Some("--listen") => {
+                p3sapp::plan::remote::listen_main(std::env::args().nth(3).as_deref())
+            }
+            _ => p3sapp::plan::process::worker_main(),
         };
         std::process::exit(code);
     }
@@ -97,6 +101,11 @@ fn usage() {
          \x20             -- metrics prints the daemon's Prometheus-style\n\
          \x20             exposition (admission depth, pool health, cache\n\
          \x20             counters, per-job latency histograms)\n\
+         \x20 plan-worker --listen HOST:PORT\n\
+         \x20             -- run a remote plan worker: serves framed plan\n\
+         \x20             jobs over TCP for drivers started with --remote;\n\
+         \x20             prints the bound address on startup (use port 0\n\
+         \x20             to let the OS pick)\n\
          \x20 help\n\
          \n\
          common options:\n\
@@ -115,6 +124,16 @@ fn usage() {
          \x20                 byte-identical output; excludes --stream;\n\
          \x20                 applies to preprocess/explain/compare/train/\n\
          \x20                 infer/report\n\
+         \x20 --remote EP[,EP...]\n\
+         \x20                 run P3SAPP across remote plan workers (each\n\
+         \x20                 EP a HOST:PORT running plan-worker --listen):\n\
+         \x20                 shard bytes ship inline or are fetched back\n\
+         \x20                 by content digest, workers stream result\n\
+         \x20                 chunks; byte-identical output; excludes\n\
+         \x20                 --stream and --processes; same commands as\n\
+         \x20                 --processes. Knobs: --remote-connect-timeout-\n\
+         \x20                 millis, --remote-io-timeout-millis,\n\
+         \x20                 --remote-retries, --remote-inline-max-bytes\n\
          \x20 --cache-dir D   persistent plan cache: P3SAPP runs restore a\n\
          \x20                 fingerprint-identical preprocessed frame instead\n\
          \x20                 of re-executing (report repeats, train/infer)\n\
@@ -234,12 +253,11 @@ fn cmd_gen_corpus(args: &Args) -> Result<()> {
 /// Execution options shared by every command that runs the P3SAPP
 /// driver (`preprocess` / `explain` / `compare` / `train` / `infer` /
 /// `report`), parsed in exactly one place: the worker count, the
-/// streaming-executor knobs, the plan-cache flags, and the plan-variant
-/// knobs (`--sample`, `--limit`).
+/// executor selection ([`exec_opts`]), the plan-cache flags, and the
+/// plan-variant knobs (`--sample`, `--limit`).
 struct CommonOpts {
     workers: usize,
-    stream: Option<p3sapp::plan::StreamOptions>,
-    processes: Option<usize>,
+    executor: p3sapp::plan::ExecutorKind,
     cache: Option<Arc<CacheManager>>,
     sample: Option<(f64, u64)>,
     limit: Option<usize>,
@@ -247,22 +265,9 @@ struct CommonOpts {
 
 fn common_opts(args: &Args, cfg: &AppConfig) -> Result<CommonOpts> {
     let workers = args.get_usize("workers", cfg.engine.workers)?;
-    let stream = stream_opts(args, workers)?;
-    let processes = match args.get("processes") {
-        Some(_) => Some(args.get_usize("processes", 0)?),
-        None => None,
-    };
-    // One executor per run: the two schedules are alternatives, and
-    // silently preferring one would make the other's flags dead knobs.
-    anyhow::ensure!(
-        processes.is_none() || stream.is_none(),
-        "--processes and --stream/--queue-cap/--readers select different executors; \
-         pick one"
-    );
     Ok(CommonOpts {
         workers,
-        stream,
-        processes,
+        executor: exec_opts(args, workers)?,
         cache: cache_opt(args)?,
         sample: sample_opt(args)?,
         limit: match args.get("limit") {
@@ -270,6 +275,83 @@ fn common_opts(args: &Args, cfg: &AppConfig) -> Result<CommonOpts> {
             None => None,
         },
     })
+}
+
+/// The one place executor-selecting flags are parsed — every command
+/// that runs or describes a plan (`preprocess` / `explain` / `compare` /
+/// `train` / `infer` / `report` / `serve start`) resolves its
+/// [`p3sapp::plan::ExecutorKind`] here, so conflicting flags are
+/// rejected identically everywhere, with a message naming both.
+fn exec_opts(args: &Args, workers: usize) -> Result<p3sapp::plan::ExecutorKind> {
+    use p3sapp::plan::ExecutorKind;
+    let stream = stream_opts(args, workers)?;
+    let processes = match args.get("processes") {
+        Some(_) => Some(args.get_usize("processes", 0)?),
+        None => None,
+    };
+    let remote = remote_opts(args)?;
+    // One executor per run: the schedules are alternatives, and
+    // silently preferring one would make the others' flags dead knobs.
+    anyhow::ensure!(
+        processes.is_none() || stream.is_none(),
+        "--processes and --stream/--queue-cap/--readers select different executors; \
+         pick one"
+    );
+    anyhow::ensure!(
+        remote.is_none() || processes.is_none(),
+        "--remote and --processes select different executors; pick one"
+    );
+    anyhow::ensure!(
+        remote.is_none() || stream.is_none(),
+        "--remote and --stream/--queue-cap/--readers select different executors; \
+         pick one"
+    );
+    Ok(match (remote, processes, stream) {
+        (Some(remote), _, _) => ExecutorKind::Remote(remote),
+        (None, Some(n), _) => ExecutorKind::Process(p3sapp::plan::ProcessOptions {
+            processes: n,
+            ..Default::default()
+        }),
+        (None, None, Some(stream)) => ExecutorKind::Stream(stream),
+        (None, None, None) => ExecutorKind::Fused,
+    })
+}
+
+/// `--remote EP[,EP...]` (+ optional timeout/retry knobs) → the remote
+/// executor options. Each endpoint is a `HOST:PORT` running
+/// `repro plan-worker --listen`.
+fn remote_opts(args: &Args) -> Result<Option<p3sapp::plan::RemoteOptions>> {
+    let Some(list) = args.get("remote") else {
+        for knob in [
+            "remote-connect-timeout-millis",
+            "remote-io-timeout-millis",
+            "remote-retries",
+            "remote-inline-max-bytes",
+        ] {
+            anyhow::ensure!(args.get(knob).is_none(), "--{knob} requires --remote");
+        }
+        return Ok(None);
+    };
+    let endpoints: Vec<String> =
+        list.split(',').map(|e| e.trim().to_string()).filter(|e| !e.is_empty()).collect();
+    anyhow::ensure!(
+        !endpoints.is_empty(),
+        "--remote expects a comma-separated HOST:PORT list, got '{list}'"
+    );
+    let defaults = p3sapp::plan::RemoteOptions::default();
+    Ok(Some(p3sapp::plan::RemoteOptions {
+        endpoints,
+        connect_timeout: std::time::Duration::from_millis(args.get_u64(
+            "remote-connect-timeout-millis",
+            defaults.connect_timeout.as_millis() as u64,
+        )?),
+        io_timeout: std::time::Duration::from_millis(
+            args.get_u64("remote-io-timeout-millis", defaults.io_timeout.as_millis() as u64)?,
+        ),
+        connect_retries: args.get_u64("remote-retries", defaults.connect_retries as u64)? as u32,
+        inline_max_bytes: args.get_u64("remote-inline-max-bytes", defaults.inline_max_bytes)?,
+        ..defaults
+    }))
 }
 
 /// `--sample F` (+ optional `--sample-seed S`, default 42) → a
@@ -324,8 +406,7 @@ fn driver_opts(args: &Args, cfg: &AppConfig) -> Result<DriverOptions> {
     let common = common_opts(args, cfg)?;
     Ok(DriverOptions {
         workers: common.workers,
-        stream: common.stream,
-        processes: common.processes,
+        executor: common.executor,
         cache: common.cache,
         sample: common.sample,
         limit: common.limit,
@@ -343,8 +424,7 @@ fn render_explain(files: &[PathBuf], opts: &DriverOptions) -> Result<String> {
     p3sapp::cache::explain_with_cache(
         &opts.build_plan(files),
         opts.workers,
-        opts.stream.as_ref(),
-        opts.process_options().as_ref(),
+        &opts.executor,
         opts.cache.as_deref(),
     )
 }
@@ -602,8 +682,7 @@ fn cmd_report(args: &Args) -> Result<()> {
     opts.workers = common.workers;
     opts.tiers = args.get_usize_list("tiers", &[1, 2, 3, 4, 5])?;
     opts.explain = args.flag("explain");
-    opts.stream = common.stream;
-    opts.processes = common.processes;
+    opts.executor = common.executor;
     opts.cache = common.cache;
     opts.sample = common.sample;
     opts.limit = common.limit;
@@ -803,12 +882,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     None => socket.with_extension("cache"),
                 })
             };
+            let workers = args.get_usize("workers", cfg.engine.workers)?;
+            // The daemon's executor is its warm worker pool; routing
+            // through the shared helper keeps conflicting executor
+            // flags rejected identically here.
+            let processes = match exec_opts(args, workers)? {
+                p3sapp::plan::ExecutorKind::Fused => 0,
+                p3sapp::plan::ExecutorKind::Process(p) => p.processes,
+                other => anyhow::bail!(
+                    "serve start runs jobs through its own warm worker pool \
+                     (--processes N); --{} does not apply",
+                    other.name()
+                ),
+            };
             p3sapp::serve::run_serve(p3sapp::serve::ServeOptions {
                 socket,
                 cache_dir,
                 worker_cmd: None,
-                workers: args.get_usize("workers", cfg.engine.workers)?,
-                processes: args.get_usize("processes", 0)?,
+                workers,
+                processes,
                 max_active: args.get_usize("max-active", defaults.max_active)?,
                 max_queue: args.get_usize("max-queue", defaults.max_queue)?,
                 job_budget_bytes: args

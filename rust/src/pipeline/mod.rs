@@ -79,6 +79,12 @@ pub trait Transformer: Send + Sync {
     /// Stages returning `None` (the default) cannot cross a process
     /// boundary, and a plan containing one fails `--processes` lowering
     /// with a clear error instead of silently running in-process.
+    ///
+    /// The spec type is crate-internal on purpose (the wire format is an
+    /// implementation detail of [`crate::serve::proto`]'s framing):
+    /// downstream crates cannot name it, so their stages inherit the
+    /// `None` default and stay in-process.
+    #[allow(private_interfaces)]
     fn wire_spec(&self) -> Option<crate::plan::process::WireStage> {
         None
     }
@@ -121,6 +127,11 @@ pub trait Estimator: Send + Sync {
     /// [`FitAccumulator`], and ships the accumulated state back for the
     /// driver to merge. `None` (the default) keeps the fit fold on the
     /// driver (workers ship admitted partitions instead).
+    ///
+    /// Crate-internal spec type, same rationale as
+    /// [`Transformer::wire_spec`]: estimators outside this crate inherit
+    /// the `None` default.
+    #[allow(private_interfaces)]
     fn wire_spec(&self) -> Option<crate::plan::process::WireEstimator> {
         None
     }

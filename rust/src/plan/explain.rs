@@ -5,7 +5,9 @@
 
 use super::logical::LogicalPlan;
 use super::process::ProcessOptions;
+use super::remote::RemoteOptions;
 use super::stream::StreamOptions;
+use super::ExecutorKind;
 use crate::Result;
 
 /// Render all three EXPLAIN sections for `plan`.
@@ -28,21 +30,20 @@ pub fn explain(plan: &LogicalPlan, workers: usize) -> Result<String> {
     ))
 }
 
-/// Dispatch for callers holding the CLI/report executor choice
-/// (`--processes` / `--stream` / default): [`explain_process`] when a
-/// process config is set, else [`explain_stream`] when a streaming
-/// config is set, else [`explain`]. The CLI rejects setting both, so
-/// precedence here never decides a real invocation.
-pub fn explain_with(
-    plan: &LogicalPlan,
-    workers: usize,
-    stream: Option<&StreamOptions>,
-    process: Option<&ProcessOptions>,
-) -> Result<String> {
-    match (process, stream) {
-        (Some(opts), _) => explain_process(plan, opts),
-        (None, Some(opts)) => explain_stream(plan, opts),
-        (None, None) => explain(plan, workers),
+/// Dispatch on the run's [`ExecutorKind`] — the same value the driver
+/// executes through, so EXPLAIN always names the executor that would
+/// actually run. A `Pool` renders as the multi-process topology its
+/// jobs ship to.
+pub fn explain_with(plan: &LogicalPlan, workers: usize, executor: &ExecutorKind) -> Result<String> {
+    match executor {
+        ExecutorKind::Fused => explain(plan, workers),
+        ExecutorKind::Stream(opts) => explain_stream(plan, opts),
+        ExecutorKind::Process(opts) => explain_process(plan, opts),
+        ExecutorKind::Pool(_) => {
+            let opts = executor.process_options().expect("Pool maps to ProcessOptions");
+            explain_process(plan, &opts)
+        }
+        ExecutorKind::Remote(opts) => explain_remote(plan, opts),
     }
 }
 
@@ -58,6 +59,20 @@ pub fn explain_process(plan: &LogicalPlan, opts: &ProcessOptions) -> Result<Stri
         plan.render(),
         optimized.render(),
         physical.render_process(opts)
+    ))
+}
+
+/// Like [`explain`], but the physical section renders the remote
+/// topology (endpoint list, shard shipping strategy, chunked reply
+/// fold) that [`LogicalPlan::execute_remote`] would run.
+pub fn explain_remote(plan: &LogicalPlan, opts: &RemoteOptions) -> Result<String> {
+    let optimized = plan.clone().optimize();
+    let physical = optimized.lower()?;
+    Ok(format!(
+        "== Logical Plan ==\n{}\n== Optimized Logical Plan ==\n{}\n== Physical Plan (remote) ==\n{}",
+        plan.render(),
+        optimized.render(),
+        physical.render_remote(opts)
     ))
 }
 
@@ -117,6 +132,7 @@ mod tests {
         assert!(explain(&plan, 1).is_err());
         assert!(explain_stream(&plan, &StreamOptions::default()).is_err());
         assert!(explain_process(&plan, &ProcessOptions::default()).is_err());
+        assert!(explain_remote(&plan, &RemoteOptions::default()).is_err());
     }
 
     #[test]
@@ -125,14 +141,30 @@ mod tests {
             (0..4).map(|i| std::path::PathBuf::from(format!("/tmp/{i}.json"))).collect();
         let plan = case_study_plan(&files, "title", "abstract");
         let opts = ProcessOptions { processes: 2, ..Default::default() };
-        let text = explain_with(&plan, 2, None, Some(&opts)).unwrap();
+        let text = explain_with(&plan, 2, &ExecutorKind::Process(opts)).unwrap();
         assert!(text.contains("== Physical Plan (multi-process) =="), "{text}");
         assert!(text.contains("ProcessPool [4 file-partitions, 2 worker processes]"), "{text}");
         assert!(text.contains("FusedStringStage"), "{text}");
-        // Process config wins the dispatch when both could apply.
-        let both =
-            explain_with(&plan, 2, Some(&StreamOptions::default()), Some(&opts)).unwrap();
-        assert!(both.contains("multi-process"), "{both}");
+        // The unified enum holds exactly one executor, so dispatch is
+        // total — the default renders the single-pass topology.
+        let fused = explain_with(&plan, 2, &ExecutorKind::Fused).unwrap();
+        assert!(fused.contains("SinglePass"), "{fused}");
+    }
+
+    #[test]
+    fn explain_remote_renders_topology_section() {
+        let files: Vec<std::path::PathBuf> =
+            (0..4).map(|i| std::path::PathBuf::from(format!("/tmp/{i}.json"))).collect();
+        let plan = case_study_plan(&files, "title", "abstract");
+        let opts = RemoteOptions {
+            endpoints: vec!["10.0.0.1:7401".into(), "10.0.0.2:7401".into()],
+            ..Default::default()
+        };
+        let text = explain_with(&plan, 2, &ExecutorKind::Remote(opts)).unwrap();
+        assert!(text.contains("== Physical Plan (remote) =="), "{text}");
+        assert!(text.contains("RemotePool [4 file-partitions, 2 remote endpoints]"), "{text}");
+        assert!(text.contains("10.0.0.1:7401"), "{text}");
+        assert!(text.contains("FusedStringStage"), "{text}");
     }
 
     #[test]

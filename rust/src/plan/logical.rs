@@ -215,6 +215,15 @@ impl LogicalPlan {
         self.lower()?.execute_process(opts)
     }
 
+    /// Lower and execute across remote `plan-worker --listen` endpoints
+    /// ([`super::remote::RemoteExecutor`]): the same job frames travel
+    /// over TCP, shard bytes ship inline or by content digest, and
+    /// workers stream per-shard result chunks back. Byte-identical
+    /// output to [`LogicalPlan::execute`].
+    pub fn execute_remote(&self, opts: &super::remote::RemoteOptions) -> Result<PlanOutput> {
+        self.lower()?.execute_remote(opts)
+    }
+
     /// Render the op list, one op per line.
     pub fn render(&self) -> String {
         let mut out = String::new();

@@ -29,7 +29,8 @@
 //! spliced in as an ordinary fused stage. Output is byte-identical to
 //! `Pipeline::fit` + `transform` (`rust/tests/plan_equivalence.rs`).
 //!
-//! Three executors share that lowered program:
+//! Four executors share that lowered program, selected through one
+//! [`ExecutorKind`] value:
 //!
 //! - [`PhysicalPlan::execute`] — the fused single pass: each worker
 //!   parses *and* cleans one shard end to end;
@@ -41,7 +42,12 @@
 //!   executor ([`process::ProcessExecutor`]): the optimized program plus
 //!   per-worker shard assignments serialize into a versioned wire format
 //!   and run in worker OS processes (self-exec `plan-worker`), the
-//!   Spark-executor analogy.
+//!   Spark-executor analogy;
+//! - [`PhysicalPlan::execute_remote`] — the multi-machine tier
+//!   ([`remote::RemoteExecutor`]): the same versioned `P3PJ`/`P3PW`
+//!   frames travel over TCP to `plan-worker --listen` endpoints, shard
+//!   bytes ship inline or are fetched back by content digest, and
+//!   workers stream bounded per-shard result chunks.
 //!
 //! All produce byte-identical output; `docs/ARCHITECTURE.md` at the
 //! repository root walks the whole layer with a rendered EXPLAIN sample.
@@ -67,11 +73,69 @@ mod logical;
 mod optimize;
 mod physical;
 pub mod process;
+pub mod remote;
 mod stream;
 
-pub use explain::{explain, explain_process, explain_stream, explain_with};
+pub use explain::{
+    explain, explain_process, explain_remote, explain_stream, explain_with,
+};
 pub use fused::FusedStringStage;
 pub use logical::{LogicalOp, LogicalPlan};
 pub use physical::{lower, sample_keeps, PhysicalPlan, PlanOutput};
 pub use process::{ProcessExecutor, ProcessOptions, WorkerPool};
+pub use remote::{RemoteExecutor, RemoteOptions};
 pub use stream::{StreamExecutor, StreamOptions};
+
+use std::sync::Arc;
+
+/// Which executor a run uses — the *single* selection surface shared by
+/// the driver, the CLI, the serve daemon and the report suite. Exactly
+/// one variant can be held, so conflicting executor configurations
+/// (`--stream` plus `--processes`, a warm pool plus a remote tier, …)
+/// are unrepresentable rather than merely rejected.
+#[derive(Debug, Clone, Default)]
+pub enum ExecutorKind {
+    /// The fused single pass ([`PhysicalPlan::execute`]) — the default.
+    #[default]
+    Fused,
+    /// The streaming pipeline ([`PhysicalPlan::execute_stream`]).
+    Stream(StreamOptions),
+    /// Worker OS processes spawned per run
+    /// ([`PhysicalPlan::execute_process`]).
+    Process(ProcessOptions),
+    /// A warm, long-lived worker-process pool (the serve daemon's
+    /// executor). Jobs ship to these processes instead of spawning
+    /// fresh ones.
+    Pool(Arc<WorkerPool>),
+    /// Remote `plan-worker --listen` endpoints over TCP
+    /// ([`PhysicalPlan::execute_remote`]).
+    Remote(RemoteOptions),
+}
+
+impl ExecutorKind {
+    /// Short name for EXPLAIN output and error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutorKind::Fused => "fused",
+            ExecutorKind::Stream(_) => "stream",
+            ExecutorKind::Process(_) => "process",
+            ExecutorKind::Pool(_) => "pool",
+            ExecutorKind::Remote(_) => "remote",
+        }
+    }
+
+    /// The `ProcessOptions` this kind executes through, when it is one
+    /// of the two process-backed variants: `Pool` is a `Process` run
+    /// whose jobs ship to the warm pool's processes.
+    pub fn process_options(&self) -> Option<ProcessOptions> {
+        match self {
+            ExecutorKind::Process(opts) => Some(opts.clone()),
+            ExecutorKind::Pool(pool) => Some(ProcessOptions {
+                processes: pool.size(),
+                worker_cmd: None,
+                pool: Some(Arc::clone(pool)),
+            }),
+            _ => None,
+        }
+    }
+}

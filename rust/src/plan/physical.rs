@@ -906,6 +906,49 @@ impl PhysicalPlan {
         sink.finish()
     }
 
+    /// Execute by shipping the op program to remote `plan-worker
+    /// --listen` endpoints over TCP (see [`super::remote::RemoteExecutor`]):
+    /// the same `P3PJ` job frames the process executor pipes to local
+    /// children travel over sockets, shard bytes ride inline or are
+    /// fetched back by content digest, and each worker streams bounded
+    /// per-shard `P3PW` chunk frames that the driver folds through the
+    /// same `Merger` in shard order. Output is byte-identical to
+    /// [`Self::execute`].
+    pub fn execute_remote(&self, opts: &super::remote::RemoteOptions) -> Result<PlanOutput> {
+        if let Some(tp) = &self.two_pass {
+            let t0 = Instant::now();
+            let fitted = self.run_fit_remote(tp, opts)?;
+            let fit_wall = t0.elapsed();
+            let mut out = self.with_model(tp, fitted).execute_remote(opts)?;
+            out.times.add(CLEANING, fit_wall);
+            return Ok(out);
+        }
+        super::remote::RemoteExecutor::new(opts.clone()).execute(self)
+    }
+
+    /// Pass 1 on the remote executor — the same split as
+    /// [`Self::run_fit_process`]: accumulator partials when no
+    /// dedup/limit is pending, admitted prefix partitions otherwise.
+    fn run_fit_remote(
+        &self,
+        tp: &TwoPass,
+        opts: &super::remote::RemoteOptions,
+    ) -> Result<Arc<dyn Transformer>> {
+        let prefix = self.prefix_plan(tp);
+        if partial_fit_available(tp, &prefix) {
+            let spec = tp.est.wire_spec().expect("checked by partial_fit_available");
+            return super::remote::RemoteExecutor::new(opts.clone()).run_fit_partial(
+                &prefix,
+                &*tp.est,
+                spec,
+                tp.in_idx,
+            );
+        }
+        let mut sink = FitSink::new(tp, &prefix)?;
+        super::remote::RemoteExecutor::new(opts.clone()).run(&prefix, &mut |r| sink.push(r))?;
+        sink.finish()
+    }
+
     /// Execute through the two-stage streaming pipeline instead of the
     /// fused single pass: a bounded reader stage parses shards while a
     /// worker pool runs the op program on shards already parsed (see
@@ -1433,6 +1476,54 @@ impl PhysicalPlan {
         let _ = writeln!(
             s,
             "Driver: fold P3PW result frames (shard order) -> {}",
+            base.trim_start_matches("Driver: ")
+        );
+        s
+    }
+
+    /// Render the remote topology (EXPLAIN's third section when
+    /// `--remote` is selected): the endpoint list and shard-shipping
+    /// policy around the same per-partition op program, plus the
+    /// streamed-chunk driver fold.
+    pub fn render_remote(&self, opts: &super::remote::RemoteOptions) -> String {
+        use std::fmt::Write;
+        let n_eps = opts.endpoints.len();
+        if let Some(tp) = &self.two_pass {
+            let mode = if partial_fit_available(tp, &self.prefix_plan(tp)) {
+                "accumulator partials"
+            } else {
+                "admitted partitions"
+            };
+            return self.render_two_pass(
+                tp,
+                &format!("{n_eps} remote endpoints, pass-1 fold: {mode}"),
+                None,
+            );
+        }
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "RemotePool [{} file-partitions, {n_eps} remote endpoints]",
+            self.files.len()
+        );
+        let _ = writeln!(s, "  connect: {}", opts.endpoints.join(", "));
+        let _ = writeln!(
+            s,
+            "  ship:    P3PJ job over TCP (shards <= {} KiB inline, else fetch-by-digest)",
+            opts.inline_max_bytes / 1024
+        );
+        let _ = writeln!(
+            s,
+            "  worker:  parse+project [{}] + op-program (scoped threads across cores)",
+            self.fields.join(", ")
+        );
+        for line in self.op_lines() {
+            let _ = writeln!(s, "    {line}");
+        }
+        let base = self.driver_line(false);
+        let _ = writeln!(
+            s,
+            "Driver: fold streamed P3PW chunk frames (shard order) -> {}",
             base.trim_start_matches("Driver: ")
         );
         s

@@ -292,9 +292,11 @@ impl Drop for WorkerPool {
 /// Serializable description of one transformer stage — what crosses the
 /// process boundary in place of an `Arc<dyn Transformer>`. Stages map to
 /// specs via [`Transformer::wire_spec`]; a worker rebuilds the concrete
-/// stage with [`WireStage::build`].
+/// stage with [`WireStage::build`]. Crate-internal: the wire format is
+/// an implementation detail of the process/remote executors, and
+/// framing enters through [`crate::serve::proto`] only.
 #[derive(Debug, Clone)]
-pub enum WireStage {
+pub(crate) enum WireStage {
     /// A fused chain of string kernels (`FusedStringStage`).
     Fused { col: String, kernels: Vec<StringKernel> },
     Lower { col: String },
@@ -313,7 +315,7 @@ pub enum WireStage {
 
 impl WireStage {
     /// Rebuild the concrete transformer this spec describes.
-    pub fn build(self) -> Arc<dyn Transformer> {
+    pub(crate) fn build(self) -> Arc<dyn Transformer> {
         match self {
             WireStage::Fused { col, kernels } => {
                 Arc::new(super::fused::FusedStringStage::new(col, kernels))
@@ -471,13 +473,13 @@ impl WireStage {
 /// Serializable description of one estimator, for the partial-aggregate
 /// fit pass. Maps via [`Estimator::wire_spec`].
 #[derive(Debug, Clone)]
-pub enum WireEstimator {
+pub(crate) enum WireEstimator {
     Idf { input: String, output: String, min_doc_freq: usize },
 }
 
 impl WireEstimator {
     /// Rebuild the concrete estimator this spec describes.
-    pub fn build(self) -> Box<dyn Estimator> {
+    pub(crate) fn build(self) -> Box<dyn Estimator> {
         match self {
             WireEstimator::Idf { input, output, min_doc_freq } => {
                 Box::new(Idf::new(input, output).with_min_doc_freq(min_doc_freq))
@@ -590,12 +592,16 @@ fn decode_ops(cur: &mut Cursor<'_>) -> Result<Vec<PartitionOp>> {
     Ok(ops)
 }
 
-/// Assemble one worker's job frame.
-fn encode_job(
+/// Assemble the job-frame prefix shared by the local and remote
+/// executors — everything up to (not including) the shard section:
+/// worker id, mode, trace flag, field names, op program, and the fit
+/// spec when fitting. Each executor appends its own shard section
+/// (local paths here, inline-bytes-or-digest entries in
+/// [`super::remote`]) and seals the frame.
+pub(super) fn encode_job_prefix(
     plan: &PhysicalPlan,
     worker_id: u32,
     fit: Option<(&WireEstimator, usize)>,
-    shards: &[(u64, &Path)],
 ) -> Result<Vec<u8>> {
     let mut buf = begin_frame(JOB_MAGIC);
     buf.extend_from_slice(&worker_id.to_le_bytes());
@@ -614,6 +620,17 @@ fn encode_job(
         est.encode(&mut buf);
         buf.extend_from_slice(&(in_idx as u32).to_le_bytes());
     }
+    Ok(buf)
+}
+
+/// Assemble one worker's job frame.
+fn encode_job(
+    plan: &PhysicalPlan,
+    worker_id: u32,
+    fit: Option<(&WireEstimator, usize)>,
+    shards: &[(u64, &Path)],
+) -> Result<Vec<u8>> {
+    let mut buf = encode_job_prefix(plan, worker_id, fit)?;
     buf.extend_from_slice(&(shards.len() as u32).to_le_bytes());
     for (idx, path) in shards {
         buf.extend_from_slice(&idx.to_le_bytes());
@@ -623,8 +640,42 @@ fn encode_job(
     Ok(buf)
 }
 
+/// The decoded job-frame prefix, shared by the local and remote worker
+/// entry points. The cursor is left at the start of the executor's own
+/// shard section.
+pub(super) struct JobPrefix {
+    pub(super) worker_id: u32,
+    pub(super) mode: u8,
+    pub(super) traced: bool,
+    pub(super) plan: PhysicalPlan,
+    pub(super) fit: Option<(WireEstimator, usize)>,
+}
+
+/// Decode everything of a checked job frame up to the shard section.
+pub(super) fn decode_job_prefix(cur: &mut Cursor<'_>) -> Result<JobPrefix> {
+    let worker_id = cur.u32()?;
+    let mode = cur.u8()?;
+    anyhow::ensure!(mode == MODE_MAP || mode == MODE_FIT, "job frame has unknown mode {mode}");
+    let traced = cur.u8()? != 0;
+    let n_fields = cur.u32()? as usize;
+    anyhow::ensure!(n_fields <= cur.remaining(), "job declares {n_fields} fields");
+    let mut fields = Vec::with_capacity(n_fields);
+    for _ in 0..n_fields {
+        fields.push(cur.str()?);
+    }
+    let ops = decode_ops(cur)?;
+    let fit = if mode == MODE_FIT {
+        let est = WireEstimator::decode(cur)?;
+        let in_idx = cur.u32()? as usize;
+        Some((est, in_idx))
+    } else {
+        None
+    };
+    Ok(JobPrefix { worker_id, mode, traced, plan: PhysicalPlan::from_wire(fields, ops), fit })
+}
+
 /// Serialize one shard's [`PartResult`] into a reply frame body.
-fn encode_part_result(buf: &mut Vec<u8>, idx: u64, r: &PartResult) {
+pub(super) fn encode_part_result(buf: &mut Vec<u8>, idx: u64, r: &PartResult) {
     buf.extend_from_slice(&idx.to_le_bytes());
     buf.extend_from_slice(&(r.part.num_rows() as u64).to_le_bytes());
     buf.extend_from_slice(&(r.part.num_columns() as u32).to_le_bytes());
@@ -663,7 +714,7 @@ fn encode_part_result(buf: &mut Vec<u8>, idx: u64, r: &PartResult) {
 /// Decode one shard's result, validating every declared count against
 /// the bytes present and the driver's expectations (schema dtypes, slot
 /// count, provenance-id domain) so a corrupt frame can only ever error.
-fn decode_part_result(
+pub(super) fn decode_part_result(
     cur: &mut Cursor<'_>,
     schema: &Schema,
     expected_slots: usize,
@@ -792,7 +843,7 @@ const MAX_SPAN_ARGS: usize = 64;
 /// span section (always present since wire v2; count 0 when the job was
 /// not traced). Lanes ship as the tid only — the driver rewrites the
 /// pid to the worker-process lane in [`obs::record_remote`].
-fn encode_spans(buf: &mut Vec<u8>, spans: &[obs::Span]) {
+pub(super) fn encode_spans(buf: &mut Vec<u8>, spans: &[obs::Span]) {
     buf.extend_from_slice(&(spans.len() as u32).to_le_bytes());
     for s in spans {
         write_str(buf, &s.name);
@@ -810,7 +861,7 @@ fn encode_spans(buf: &mut Vec<u8>, spans: &[obs::Span]) {
 
 /// Decode the reply's span section. Spans arrive in worker-local
 /// coordinates (pid 0, worker epoch); the caller re-anchors them.
-fn decode_spans(cur: &mut Cursor<'_>) -> Result<Vec<obs::Span>> {
+pub(super) fn decode_spans(cur: &mut Cursor<'_>) -> Result<Vec<obs::Span>> {
     let n = cur.u32()? as usize;
     anyhow::ensure!(n <= MAX_WIRE_SPANS, "reply declares {n} spans");
     anyhow::ensure!(n <= cur.remaining(), "reply span section declares {n} spans");
@@ -872,7 +923,7 @@ fn decode_map_reply(
 
 /// Decode a fit-mode reply frame into the accumulator partial plus the
 /// worker's shipped spans (empty when the job was not traced).
-fn decode_fit_reply(bytes: &[u8], worker_id: u32) -> Result<(Vec<u8>, Vec<obs::Span>)> {
+pub(super) fn decode_fit_reply(bytes: &[u8], worker_id: u32) -> Result<(Vec<u8>, Vec<obs::Span>)> {
     let mut cur = check_frame(bytes, REPLY_MAGIC, "result")?;
     let got_worker = cur.u32()?;
     anyhow::ensure!(
@@ -1061,7 +1112,7 @@ impl ProcessExecutor {
 /// `i % procs`), so early shards land on distinct workers and the
 /// in-order driver fold is never starved by one worker holding the
 /// whole prefix.
-fn assign_shards(files: &[PathBuf], procs: usize) -> Vec<Vec<(u64, &Path)>> {
+pub(super) fn assign_shards(files: &[PathBuf], procs: usize) -> Vec<Vec<(u64, &Path)>> {
     let mut assignments: Vec<Vec<(u64, &Path)>> = (0..procs).map(|_| Vec::new()).collect();
     for (i, path) in files.iter().enumerate() {
         assignments[i % procs].push((i as u64, path.as_path()));
@@ -1261,24 +1312,7 @@ fn worker_persist_loop() -> Result<()> {
 /// Decode and execute one job frame, producing the reply frame.
 fn run_job(job: &[u8]) -> Result<Vec<u8>> {
     let mut cur = check_frame(job, JOB_MAGIC, "job")?;
-    let worker_id = cur.u32()?;
-    let mode = cur.u8()?;
-    anyhow::ensure!(mode == MODE_MAP || mode == MODE_FIT, "job frame has unknown mode {mode}");
-    let traced = cur.u8()? != 0;
-    let n_fields = cur.u32()? as usize;
-    anyhow::ensure!(n_fields <= cur.remaining(), "job declares {n_fields} fields");
-    let mut fields = Vec::with_capacity(n_fields);
-    for _ in 0..n_fields {
-        fields.push(cur.str()?);
-    }
-    let ops = decode_ops(&mut cur)?;
-    let fit = if mode == MODE_FIT {
-        let est = WireEstimator::decode(&mut cur)?;
-        let in_idx = cur.u32()? as usize;
-        Some((est, in_idx))
-    } else {
-        None
-    };
+    let JobPrefix { worker_id, mode, traced, plan, fit } = decode_job_prefix(&mut cur)?;
     let n_shards = cur.u32()? as usize;
     anyhow::ensure!(n_shards <= cur.remaining(), "job declares {n_shards} shards");
     let mut shards = Vec::with_capacity(n_shards);
@@ -1289,7 +1323,6 @@ fn run_job(job: &[u8]) -> Result<Vec<u8>> {
     }
     anyhow::ensure!(cur.remaining() == 0, "job frame has {} trailing bytes", cur.remaining());
 
-    let plan = PhysicalPlan::from_wire(fields, ops);
     // A traced job gets a fresh sink (epoch = now, i.e. at/after the
     // driver's RPC anchor). It is uninstalled on every exit path: the
     // persistent worker would otherwise leak a stale sink into its next

@@ -1,0 +1,914 @@
+//! Remote sharded execution: distribute a lowered [`PhysicalPlan`]
+//! across `repro plan-worker --listen` endpoints on **other machines** —
+//! the same versioned, digest-checked `P3PJ`/`P3PW` frames the process
+//! executor pipes over stdio ([`super::process`]), carried over TCP.
+//!
+//! ```text
+//! driver                                     remote workers (plan-worker --listen)
+//! connect (retry + timeouts), ship    P3PJ   accept loop, one connection thread
+//! op program + shard list per      ───────►  per driver; shards arrive inline or
+//! endpoint                                   are fetched back by content digest
+//!                                     P3PJ
+//! answer fetch-artifact requests   ◄───────  resolve digest shards, then run the
+//! with the shard bytes             ───────►  program on scoped threads across
+//!                                     P3PW   cores
+//! fold streamed chunk frames in    ◄───────  one bounded MODE_MAP_CHUNK frame
+//! shard order through the shared             per completed shard, MODE_MAP_DONE
+//! Merger as they arrive                      with the span section last
+//! ```
+//!
+//! The job frame is the process executor's prefix
+//! ([`super::process::encode_job_prefix`]: magic + version + trace flag
+//! + op program + optional fit spec) followed by a *remote* shard
+//! section: small shards ship **inline** (raw bytes in the frame, up to
+//! [`RemoteOptions::inline_max_bytes`]), large shards ship as a content
+//! digest (`xxh64` hex key + length) the worker resolves by sending a
+//! [`Request::FetchArtifact`] back over the same connection before any
+//! compute starts. Both directions verify the digest, so a shard that
+//! changes on disk between encoding and fetching is a typed error,
+//! never silent divergence.
+//!
+//! Failures are **driver errors naming the endpoint**: connection
+//! refused (after [`RemoteOptions::connect_retries`] retries with
+//! backoff), a read/write stuck past [`RemoteOptions::io_timeout`], a
+//! garbled frame, or a connection that dies mid-stream (the error says
+//! how many of the assigned shard results had arrived). The driver
+//! checks that every assigned shard comes back exactly once and that
+//! the worker's `MODE_MAP_DONE` chunk count matches.
+//!
+//! Output is **byte-identical** to every other executor: workers run
+//! the exact same per-shard program ([`PhysicalPlan::run_shard_bytes`])
+//! and the driver folds the streamed chunks through the exact same
+//! ordered [`Merger`] (`rust/tests/plan_equivalence.rs`). Traced jobs
+//! ship their spans home in the `MODE_MAP_DONE` / `MODE_FIT` frame and
+//! [`obs::record_remote`] re-anchors them onto the driver timeline
+//! inside the endpoint's `rpc` span, exactly like process workers.
+
+use super::physical::{Merger, PartResult, PhysicalPlan, PlanOutput};
+use super::process::{
+    assign_shards, decode_fit_reply, decode_job_prefix, decode_part_result, decode_spans,
+    encode_job_prefix, encode_part_result, encode_spans, JobPrefix, WireEstimator,
+};
+use crate::cache::xxh64;
+use crate::obs;
+use crate::pipeline::{Estimator, Transformer};
+use crate::serve::proto::{
+    begin_frame, check_frame, decode_reply, decode_request, encode_reply, encode_request,
+    read_frame, read_path, seal_frame, write_frame, write_path, write_str, Reply, Request,
+    JOB_MAGIC, MODE_FIT, MODE_MAP_CHUNK, MODE_MAP_DONE, REPLY_MAGIC,
+};
+use crate::Result;
+use anyhow::Context as _;
+use std::collections::{BTreeMap, HashMap};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shard-shipping kinds in the remote job frame's shard section.
+const SHARD_INLINE: u8 = 0;
+const SHARD_DIGEST: u8 = 1;
+
+/// Ceiling on any single worker-side socket read or write. A wedged or
+/// dead driver must not pin a connection thread forever; this is a
+/// generous backstop (a healthy driver answers fetches and drains
+/// chunks promptly), not pacing.
+const WORKER_IO_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Knobs for the remote executor. `endpoints` is the only required
+/// field; the rest default to LAN-friendly values.
+#[derive(Debug, Clone)]
+pub struct RemoteOptions {
+    /// `HOST:PORT` of each `repro plan-worker --listen` endpoint. One
+    /// connection per endpoint; shards stripe across them round-robin
+    /// ([`assign_shards`]).
+    pub endpoints: Vec<String>,
+    /// Per-attempt TCP connect ceiling.
+    pub connect_timeout: Duration,
+    /// Ceiling on any single socket read or write once connected —
+    /// a worker stuck past this is a typed driver error, not a hang.
+    pub io_timeout: Duration,
+    /// Connect retries after the first attempt (so `3` means up to 4
+    /// attempts), with [`RemoteOptions::retry_backoff`] between them —
+    /// covers a worker still binding its listener.
+    pub connect_retries: u32,
+    /// Sleep between connect attempts.
+    pub retry_backoff: Duration,
+    /// Shards at most this many bytes ship inline in the job frame;
+    /// larger shards ship as a content digest the worker fetches back.
+    pub inline_max_bytes: u64,
+}
+
+impl Default for RemoteOptions {
+    fn default() -> Self {
+        RemoteOptions {
+            endpoints: Vec::new(),
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(60),
+            connect_retries: 3,
+            retry_backoff: Duration::from_millis(100),
+            inline_max_bytes: 4 * 1024 * 1024,
+        }
+    }
+}
+
+/// Drives a plan across remote `plan-worker --listen` endpoints. See
+/// the module docs for the wire protocol and failure semantics.
+pub struct RemoteExecutor {
+    opts: RemoteOptions,
+}
+
+impl RemoteExecutor {
+    pub fn new(opts: RemoteOptions) -> Self {
+        RemoteExecutor { opts }
+    }
+
+    fn check_endpoints(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.opts.endpoints.is_empty(),
+            "remote executor has no endpoints (pass --remote HOST:PORT[,HOST:PORT...])"
+        );
+        Ok(())
+    }
+
+    /// Run `plan` across the remote endpoints. Output (frame bytes, row
+    /// order, drop accounting) is identical to
+    /// [`PhysicalPlan::execute`]; only the schedule differs.
+    pub fn execute(&self, plan: &PhysicalPlan) -> Result<PlanOutput> {
+        // Estimator-bearing plans orchestrate their two passes in
+        // `PhysicalPlan::execute_remote`.
+        if plan.is_two_pass() {
+            return plan.execute_remote(&self.opts);
+        }
+        self.check_endpoints()?;
+        let t_pass = Instant::now();
+        if plan.files().is_empty() {
+            // Nothing to ship: the in-process pass produces the same
+            // (empty) bytes without a connection.
+            return plan.execute(0);
+        }
+        let mut merger =
+            Merger::new(plan.output_schema().clone(), plan.n_distinct(), plan.limit_n());
+        self.run_map(plan, &mut |r| {
+            merger.push(r);
+            Ok(())
+        })?;
+        Ok(merger.finish(t_pass.elapsed(), Duration::ZERO))
+    }
+
+    /// Sink-based variant: hand each shard's [`PartResult`] to `sink`
+    /// **in shard order** without merging — the partition-shipping fit
+    /// pass of the two-pass strategy.
+    pub(super) fn run(
+        &self,
+        plan: &PhysicalPlan,
+        sink: &mut dyn FnMut(PartResult) -> Result<()>,
+    ) -> Result<()> {
+        if plan.files().is_empty() {
+            return Ok(());
+        }
+        self.check_endpoints()?;
+        self.run_map(plan, sink)
+    }
+
+    /// Partial-aggregate fit pass: each endpoint folds its shards into
+    /// its own accumulator and ships the accumulated state; the driver
+    /// merges partials (endpoint order) and fits the model. Only valid
+    /// when the prefix program has no pending dedup/limit — the caller
+    /// ([`PhysicalPlan::execute_remote`]) checks that.
+    pub(super) fn run_fit_partial(
+        &self,
+        prefix: &PhysicalPlan,
+        est: &dyn Estimator,
+        spec: WireEstimator,
+        in_idx: usize,
+    ) -> Result<Arc<dyn Transformer>> {
+        let mut acc = est.accumulator().ok_or_else(|| {
+            anyhow::anyhow!(
+                "estimator {} lost its accumulator between lower and execute",
+                est.name()
+            )
+        })?;
+        let n = prefix.files().len();
+        if n == 0 {
+            return acc.finish();
+        }
+        self.check_endpoints()?;
+        anyhow::ensure!(
+            acc.partial().is_some(),
+            "estimator {} does not support cross-process partial folds",
+            est.name()
+        );
+        let k = self.opts.endpoints.len().min(n);
+        let assignments = assign_shards(prefix.files(), k);
+        let replies: Vec<(u64, Vec<u8>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = assignments
+                .iter()
+                .enumerate()
+                .map(|(w, shards)| {
+                    let opts = &self.opts;
+                    let ep = self.opts.endpoints[w].as_str();
+                    let spec = &spec;
+                    scope.spawn(move || drive_endpoint_fit(opts, ep, w, prefix, spec, in_idx, shards))
+                })
+                .collect();
+            join_first_err(handles)
+        })?;
+        for (w, (anchor, bytes)) in replies.iter().enumerate() {
+            let ep = &self.opts.endpoints[w];
+            let (partial, spans) = decode_fit_reply(bytes, w as u32)
+                .with_context(|| format!("remote worker {ep}"))?;
+            obs::record_remote(spans, w, *anchor);
+            acc.merge_partial(&partial)
+                .with_context(|| format!("remote worker {ep}: merging fit partial"))?;
+        }
+        acc.finish()
+    }
+
+    /// Scatter the plan's shards across the endpoints and fold the
+    /// streamed chunk frames into `sink` **in shard order** (the
+    /// `Merger`'s dedup and limit fold depend on it): out-of-order
+    /// arrivals park in a reorder buffer until their predecessors land.
+    fn run_map(
+        &self,
+        plan: &PhysicalPlan,
+        sink: &mut dyn FnMut(PartResult) -> Result<()>,
+    ) -> Result<()> {
+        let n = plan.files().len();
+        let k = self.opts.endpoints.len().min(n);
+        let assignments = assign_shards(plan.files(), k);
+        let (tx, rx) = mpsc::channel::<(u64, PartResult)>();
+        let mut pending: BTreeMap<u64, PartResult> = BTreeMap::new();
+        let mut next: u64 = 0;
+        let mut sink_err: Option<anyhow::Error> = None;
+        std::thread::scope(|scope| -> Result<()> {
+            let handles: Vec<_> = assignments
+                .iter()
+                .enumerate()
+                .map(|(w, shards)| {
+                    let tx = tx.clone();
+                    let opts = &self.opts;
+                    let ep = self.opts.endpoints[w].as_str();
+                    scope.spawn(move || drive_endpoint_map(opts, ep, w, plan, shards, &tx))
+                })
+                .collect();
+            // The endpoint threads hold the remaining senders; dropping
+            // ours lets the drain loop end when they all finish.
+            drop(tx);
+            while let Ok((idx, r)) = rx.recv() {
+                anyhow::ensure!(idx < n as u64, "remote result for unknown shard index {idx}");
+                anyhow::ensure!(
+                    idx >= next && !pending.contains_key(&idx),
+                    "shard {idx} returned twice"
+                );
+                pending.insert(idx, r);
+                while let Some(r) = pending.remove(&next) {
+                    if sink_err.is_none() {
+                        if let Err(e) = sink(r) {
+                            // Keep draining so endpoint threads can
+                            // finish; their error (if any) wins below.
+                            sink_err = Some(e);
+                        }
+                    }
+                    next += 1;
+                }
+            }
+            join_first_err(handles).map(|_| ())
+        })?;
+        if let Some(e) = sink_err {
+            return Err(e);
+        }
+        anyhow::ensure!(next == n as u64, "remote pass folded {next} of {n} shards");
+        Ok(())
+    }
+}
+
+/// Join every endpoint thread and return their results in endpoint
+/// order, first error winning — every thread is joined before this
+/// returns, so no connection outlives a driver error unobserved.
+fn join_first_err<T>(
+    handles: Vec<std::thread::ScopedJoinHandle<'_, Result<T>>>,
+) -> Result<Vec<T>> {
+    let mut out = Vec::with_capacity(handles.len());
+    let mut first_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(v)) => out.push(v),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!("remote driver thread panicked"));
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
+/// Resolve and connect to `ep` with per-attempt timeouts and
+/// retry-with-backoff, then arm both I/O timeouts. Every failure is a
+/// typed error naming the endpoint.
+fn connect(opts: &RemoteOptions, ep: &str) -> Result<TcpStream> {
+    let attempts = opts.connect_retries.saturating_add(1);
+    let mut last = String::from("no addresses resolved");
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            std::thread::sleep(opts.retry_backoff);
+        }
+        // Re-resolve each attempt: a worker host coming up may not be
+        // in DNS yet on the first try.
+        let addrs: Vec<SocketAddr> = match ep.to_socket_addrs() {
+            Ok(addrs) => addrs.collect(),
+            Err(e) => {
+                last = format!("resolve: {e}");
+                continue;
+            }
+        };
+        for addr in addrs {
+            match TcpStream::connect_timeout(&addr, opts.connect_timeout) {
+                Ok(stream) => {
+                    if !opts.io_timeout.is_zero() {
+                        stream
+                            .set_read_timeout(Some(opts.io_timeout))
+                            .and_then(|()| stream.set_write_timeout(Some(opts.io_timeout)))
+                            .map_err(|e| {
+                                anyhow::anyhow!("remote worker {ep}: arming I/O timeouts: {e}")
+                            })?;
+                    }
+                    // Chunk frames are small and latency-sensitive.
+                    let _ = stream.set_nodelay(true);
+                    return Ok(stream);
+                }
+                Err(e) => last = format!("{addr}: {e}"),
+            }
+        }
+    }
+    anyhow::bail!("remote worker {ep}: connect failed after {attempts} attempts: {last}")
+}
+
+/// Encode one endpoint's job frame: the shared prefix
+/// ([`encode_job_prefix`]) plus the remote shard section — inline bytes
+/// for small shards, a content-digest key (plus expected length) for
+/// large ones. Returns the sealed frame and the `key → path` map for
+/// answering that connection's fetch-artifact requests. Every shard is
+/// read once here (large ones are re-read on fetch; the digest pins
+/// content identity across the two reads).
+fn encode_remote_job(
+    plan: &PhysicalPlan,
+    worker_id: u32,
+    fit: Option<(&WireEstimator, usize)>,
+    shards: &[(u64, &Path)],
+    inline_max: u64,
+) -> Result<(Vec<u8>, HashMap<String, PathBuf>)> {
+    let mut buf = encode_job_prefix(plan, worker_id, fit)?;
+    let mut by_key = HashMap::new();
+    buf.extend_from_slice(&(shards.len() as u32).to_le_bytes());
+    for (idx, path) in shards {
+        buf.extend_from_slice(&idx.to_le_bytes());
+        write_path(&mut buf, path);
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("read shard {}: {e}", path.display()))?;
+        if bytes.len() as u64 <= inline_max {
+            buf.push(SHARD_INLINE);
+            buf.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            buf.extend_from_slice(&bytes);
+        } else {
+            let key = format!("{:016x}", xxh64(&bytes, 0));
+            buf.push(SHARD_DIGEST);
+            write_str(&mut buf, &key);
+            buf.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            by_key.insert(key, path.to_path_buf());
+        }
+    }
+    seal_frame(&mut buf);
+    Ok((buf, by_key))
+}
+
+/// Answer one worker fetch-artifact request with the shard bytes,
+/// re-verifying the digest before shipping.
+fn answer_fetch(
+    stream: &mut TcpStream,
+    ep: &str,
+    key: &str,
+    by_key: &HashMap<String, PathBuf>,
+) -> Result<()> {
+    let path = by_key
+        .get(key)
+        .ok_or_else(|| anyhow::anyhow!("remote worker {ep}: requested unknown shard digest {key}"))?;
+    let bytes = std::fs::read(path).map_err(|e| {
+        anyhow::anyhow!("remote worker {ep}: re-reading shard {}: {e}", path.display())
+    })?;
+    anyhow::ensure!(
+        format!("{:016x}", xxh64(&bytes, 0)) == key,
+        "remote worker {ep}: shard {} changed on disk since the job was encoded",
+        path.display()
+    );
+    write_frame(stream, &encode_reply(&Reply::Bytes(bytes)))
+        .map_err(|e| anyhow::anyhow!("remote worker {ep}: shipping shard bytes: {e}"))?;
+    Ok(())
+}
+
+/// Drive one endpoint through a map job: connect, ship the job, answer
+/// its shard fetches, and forward every streamed chunk to `tx` until
+/// the `MODE_MAP_DONE` frame closes the books.
+fn drive_endpoint_map(
+    opts: &RemoteOptions,
+    ep: &str,
+    w: usize,
+    plan: &PhysicalPlan,
+    shards: &[(u64, &Path)],
+    tx: &mpsc::Sender<(u64, PartResult)>,
+) -> Result<()> {
+    let (job, by_key) = encode_remote_job(plan, w as u32, None, shards, opts.inline_max_bytes)?;
+    let mut stream = connect(opts, ep)?;
+    // Wrap the exchange in an `rpc` span on the worker-process lane;
+    // the worker's shipped spans re-anchor against `anchor` so they
+    // nest inside it on the same track ([`obs::record_remote`]).
+    let _lane = obs::lane_scope(obs::lane_worker_process(w));
+    let mut sp = obs::span("rpc", "rpc");
+    if sp.active() {
+        sp.arg("worker", w as u64);
+    }
+    let anchor = obs::now_ns();
+    write_frame(&mut stream, &job)
+        .map_err(|e| anyhow::anyhow!("remote worker {ep}: shipping job: {e}"))?;
+    let mut chunks: u64 = 0;
+    loop {
+        let frame = read_frame(&mut stream)
+            .with_context(|| format!("remote worker {ep}"))?
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "remote worker {ep}: connection closed mid-stream \
+                     ({chunks} of {} shard results received)",
+                    shards.len()
+                )
+            })?;
+        // The worker interleaves two frame kinds on this socket: P3PJ
+        // fetch-artifact requests (before compute) and P3PW results.
+        if frame.starts_with(JOB_MAGIC) {
+            match decode_request(&frame).with_context(|| format!("remote worker {ep}"))? {
+                Request::FetchArtifact { key } => answer_fetch(&mut stream, ep, &key, &by_key)?,
+                _ => anyhow::bail!("remote worker {ep}: unexpected request on a job connection"),
+            }
+            continue;
+        }
+        let mut cur = check_frame(&frame, REPLY_MAGIC, "result")
+            .with_context(|| format!("remote worker {ep}"))?;
+        let ctx = || format!("remote worker {ep}");
+        let got = cur.u32().with_context(ctx)?;
+        anyhow::ensure!(
+            got == w as u32,
+            "remote worker {ep}: result frame for worker {got}, expected {w}"
+        );
+        match cur.u8().with_context(ctx)? {
+            MODE_MAP_CHUNK => {
+                let (idx, r) = decode_part_result(&mut cur, plan.output_schema(), plan.n_distinct())
+                    .with_context(ctx)?;
+                anyhow::ensure!(
+                    cur.remaining() == 0,
+                    "remote worker {ep}: chunk frame has {} trailing bytes",
+                    cur.remaining()
+                );
+                chunks += 1;
+                if tx.send((idx, r)).is_err() {
+                    // Receiver gone: another endpoint already failed
+                    // and the drain loop ended. Stop quietly; that
+                    // first error wins.
+                    return Ok(());
+                }
+            }
+            MODE_MAP_DONE => {
+                let declared = cur.u64().with_context(ctx)?;
+                let spans = decode_spans(&mut cur).with_context(ctx)?;
+                anyhow::ensure!(
+                    cur.remaining() == 0,
+                    "remote worker {ep}: done frame has {} trailing bytes",
+                    cur.remaining()
+                );
+                anyhow::ensure!(
+                    declared == chunks && chunks as usize == shards.len(),
+                    "remote worker {ep}: {chunks} shard results arrived for {} assigned \
+                     shards ({declared} declared)",
+                    shards.len()
+                );
+                obs::record_remote(spans, w, anchor);
+                return Ok(());
+            }
+            mode => anyhow::bail!("remote worker {ep}: result frame has unexpected mode {mode}"),
+        }
+    }
+}
+
+/// Drive one endpoint through a fit job: connect, ship, answer
+/// fetches, and return the raw `MODE_FIT` reply frame with the RPC
+/// anchor (decoded on the driver thread, in endpoint order).
+fn drive_endpoint_fit(
+    opts: &RemoteOptions,
+    ep: &str,
+    w: usize,
+    prefix: &PhysicalPlan,
+    spec: &WireEstimator,
+    in_idx: usize,
+    shards: &[(u64, &Path)],
+) -> Result<(u64, Vec<u8>)> {
+    let (job, by_key) =
+        encode_remote_job(prefix, w as u32, Some((spec, in_idx)), shards, opts.inline_max_bytes)?;
+    let mut stream = connect(opts, ep)?;
+    let _lane = obs::lane_scope(obs::lane_worker_process(w));
+    let mut sp = obs::span("rpc", "rpc");
+    if sp.active() {
+        sp.arg("worker", w as u64);
+    }
+    let anchor = obs::now_ns();
+    write_frame(&mut stream, &job)
+        .map_err(|e| anyhow::anyhow!("remote worker {ep}: shipping job: {e}"))?;
+    loop {
+        let frame = read_frame(&mut stream)
+            .with_context(|| format!("remote worker {ep}"))?
+            .ok_or_else(|| {
+                anyhow::anyhow!("remote worker {ep}: connection closed before the fit reply")
+            })?;
+        if frame.starts_with(JOB_MAGIC) {
+            match decode_request(&frame).with_context(|| format!("remote worker {ep}"))? {
+                Request::FetchArtifact { key } => answer_fetch(&mut stream, ep, &key, &by_key)?,
+                _ => anyhow::bail!("remote worker {ep}: unexpected request on a job connection"),
+            }
+            continue;
+        }
+        return Ok((anchor, frame));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side: `repro plan-worker --listen ADDR`
+// ---------------------------------------------------------------------------
+
+/// CLI entry for `repro plan-worker --listen [ADDR]` (default
+/// `127.0.0.1:0`): bind, print the bound address, serve forever.
+pub fn listen_main(addr: Option<&str>) -> i32 {
+    match listen(addr.unwrap_or("127.0.0.1:0")) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("plan-worker: {e:#}");
+            1
+        }
+    }
+}
+
+fn listen(addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+    // The bound address prints first and alone on stdout — harnesses
+    // that bind port 0 parse this line to learn the real port.
+    let local = listener.local_addr().map_err(|e| anyhow::anyhow!("local addr: {e}"))?;
+    println!("listening on {local}");
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    serve_listener(listener)
+}
+
+/// Accept loop: one connection thread per driver, forever. Public so
+/// tests and benches can serve an in-process loopback listener (bind
+/// `127.0.0.1:0` themselves, spawn this on a thread) without spawning
+/// the `repro` binary. A connection error is logged to stderr and does
+/// not take the listener down.
+pub fn serve_listener(listener: TcpListener) -> Result<()> {
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(e) => {
+                eprintln!("plan-worker: accept: {e}");
+                continue;
+            }
+        };
+        std::thread::spawn(move || {
+            if let Err(e) = serve_conn(stream, peer) {
+                eprintln!("plan-worker: {peer}: {e:#}");
+            }
+        });
+    }
+}
+
+/// One driver connection: run job frames until the driver hangs up
+/// cleanly. A job failure propagates (closing the connection), which
+/// the driver surfaces as a typed mid-stream error.
+fn serve_conn(mut stream: TcpStream, peer: SocketAddr) -> Result<()> {
+    stream
+        .set_read_timeout(Some(WORKER_IO_TIMEOUT))
+        .and_then(|()| stream.set_write_timeout(Some(WORKER_IO_TIMEOUT)))
+        .map_err(|e| anyhow::anyhow!("arming I/O timeouts: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    while let Some(job) = read_frame(&mut stream).with_context(|| format!("driver {peer}"))? {
+        run_remote_job(&job, &mut stream).with_context(|| format!("driver {peer}"))?;
+    }
+    Ok(())
+}
+
+/// A shard as shipped in the remote job frame: index, path (error
+/// context only), and its raw bytes (resolved before compute starts).
+type RemoteShard = (u64, PathBuf, Vec<u8>);
+
+enum RunDone {
+    Map { chunks: u64 },
+    Fit { partial: Vec<u8> },
+}
+
+/// Decode and execute one remote job frame, streaming chunk frames as
+/// shards complete and closing with the `MODE_MAP_DONE` (or `MODE_FIT`)
+/// frame that carries the span section.
+fn run_remote_job(job: &[u8], stream: &mut TcpStream) -> Result<()> {
+    let mut cur = check_frame(job, JOB_MAGIC, "job")?;
+    let JobPrefix { worker_id, mode: _, traced, plan, fit } = decode_job_prefix(&mut cur)?;
+    let n_shards = cur.u32()? as usize;
+    anyhow::ensure!(n_shards <= cur.remaining(), "job declares {n_shards} shards");
+    let mut shards: Vec<RemoteShard> = Vec::with_capacity(n_shards);
+    let mut fetches: Vec<(usize, String, u64)> = Vec::new();
+    for i in 0..n_shards {
+        let idx = cur.u64()?;
+        let path = read_path(&mut cur)?;
+        match cur.u8()? {
+            SHARD_INLINE => {
+                let len = cur.u64()? as usize;
+                let bytes = cur.take(len)?.to_vec();
+                shards.push((idx, path, bytes));
+            }
+            SHARD_DIGEST => {
+                let key = cur.str()?;
+                let len = cur.u64()?;
+                fetches.push((i, key, len));
+                shards.push((idx, path, Vec::new()));
+            }
+            kind => anyhow::bail!("unknown shard-shipping kind {kind}"),
+        }
+    }
+    anyhow::ensure!(cur.remaining() == 0, "job frame has {} trailing bytes", cur.remaining());
+
+    // Resolve digest shards back over the same connection, one at a
+    // time, before any compute starts — afterwards the socket is
+    // write-only until the job's closing frame.
+    for (i, key, len) in fetches {
+        write_frame(stream, &encode_request(&Request::FetchArtifact { key: key.clone() }))
+            .map_err(|e| anyhow::anyhow!("requesting shard {key}: {e}"))?;
+        let frame = read_frame(stream)?
+            .ok_or_else(|| anyhow::anyhow!("driver closed while serving shard {key}"))?;
+        let bytes = match decode_reply(&frame)? {
+            Reply::Bytes(bytes) => bytes,
+            Reply::Err(e) => anyhow::bail!("driver refused shard {key}: {}", e.message),
+            _ => anyhow::bail!("unexpected reply to a shard fetch"),
+        };
+        anyhow::ensure!(
+            bytes.len() as u64 == len && format!("{:016x}", xxh64(&bytes, 0)) == key,
+            "shard {key}: fetched bytes fail their digest"
+        );
+        shards[i].2 = bytes;
+    }
+
+    // A traced job gets a fresh sink, uninstalled on every exit path:
+    // this connection thread would otherwise leak a stale sink into
+    // the driver's next job on the same connection.
+    let sink = if traced { Some(obs::trace::install_new()) } else { None };
+    let result = run_assigned(worker_id, &plan, fit, &shards, stream);
+    let spans = match &sink {
+        Some(sink) => {
+            obs::trace::uninstall();
+            sink.drain()
+        }
+        None => Vec::new(),
+    };
+    match result? {
+        RunDone::Map { chunks } => {
+            let mut buf = begin_frame(REPLY_MAGIC);
+            buf.extend_from_slice(&worker_id.to_le_bytes());
+            buf.push(MODE_MAP_DONE);
+            buf.extend_from_slice(&chunks.to_le_bytes());
+            encode_spans(&mut buf, &spans);
+            seal_frame(&mut buf);
+            write_frame(stream, &buf).map_err(|e| anyhow::anyhow!("writing done frame: {e}"))
+        }
+        RunDone::Fit { partial } => {
+            let mut buf = begin_frame(REPLY_MAGIC);
+            buf.extend_from_slice(&worker_id.to_le_bytes());
+            buf.push(MODE_FIT);
+            buf.extend_from_slice(&(partial.len() as u64).to_le_bytes());
+            buf.extend_from_slice(&partial);
+            encode_spans(&mut buf, &spans);
+            seal_frame(&mut buf);
+            write_frame(stream, &buf).map_err(|e| anyhow::anyhow!("writing fit reply: {e}"))
+        }
+    }
+}
+
+/// Run the resolved shards. Map jobs fan out across scoped threads
+/// (one per core, capped at the shard count), each claiming shards off
+/// a shared counter and streaming one bounded chunk frame per
+/// completed shard under the write lock — the reply never buffers more
+/// than one shard's result. Fit jobs fold sequentially in shard order,
+/// exactly like the process worker.
+fn run_assigned(
+    worker_id: u32,
+    plan: &PhysicalPlan,
+    fit: Option<(WireEstimator, usize)>,
+    shards: &[RemoteShard],
+    stream: &mut TcpStream,
+) -> Result<RunDone> {
+    match fit {
+        Some((est_spec, in_idx)) => {
+            let est = est_spec.build();
+            let mut acc = est
+                .accumulator()
+                .ok_or_else(|| anyhow::anyhow!("estimator {} has no accumulator", est.name()))?;
+            for (idx, path, bytes) in shards {
+                let r = plan
+                    .run_shard_bytes(*idx as usize, path, bytes, Duration::ZERO)
+                    .with_context(|| format!("shard {idx}"))?;
+                if r.part.num_rows() > 0 {
+                    anyhow::ensure!(
+                        in_idx < r.part.num_columns(),
+                        "fit input column {in_idx} out of range ({} columns)",
+                        r.part.num_columns()
+                    );
+                    acc.accumulate(r.part.column(in_idx))?;
+                }
+            }
+            let partial = acc
+                .partial()
+                .ok_or_else(|| anyhow::anyhow!("estimator {} has no partial state", est.name()))?;
+            Ok(RunDone::Fit { partial })
+        }
+        None => {
+            let threads = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2)
+                .min(shards.len())
+                .max(1);
+            let next = AtomicUsize::new(0);
+            let writer = Mutex::new(stream);
+            std::thread::scope(|scope| -> Result<()> {
+                let handles: Vec<_> = (0..threads)
+                    .map(|t| {
+                        let next = &next;
+                        let writer = &writer;
+                        scope.spawn(move || -> Result<()> {
+                            // Each compute thread records on its own lane
+                            // so shipped spans land on per-thread tracks.
+                            let _lane = obs::lane_scope(obs::lane_worker_thread(t));
+                            loop {
+                                let i = next.fetch_add(1, Ordering::Relaxed);
+                                let Some((idx, path, bytes)) = shards.get(i) else {
+                                    return Ok(());
+                                };
+                                let r = plan
+                                    .run_shard_bytes(*idx as usize, path, bytes, Duration::ZERO)
+                                    .with_context(|| format!("shard {idx}"))?;
+                                let mut buf = begin_frame(REPLY_MAGIC);
+                                buf.extend_from_slice(&worker_id.to_le_bytes());
+                                buf.push(MODE_MAP_CHUNK);
+                                encode_part_result(&mut buf, *idx, &r);
+                                seal_frame(&mut buf);
+                                let mut w =
+                                    writer.lock().unwrap_or_else(|poison| poison.into_inner());
+                                write_frame(&mut **w, &buf).map_err(|e| {
+                                    anyhow::anyhow!("shipping shard {idx} result: {e}")
+                                })?;
+                            }
+                        })
+                    })
+                    .collect();
+                join_first_err(handles).map(|_| ())
+            })?;
+            Ok(RunDone::Map { chunks: shards.len() as u64 })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::LogicalPlan;
+
+    fn tmp_shard(name: &str, bytes: &[u8]) -> PathBuf {
+        let path = std::env::temp_dir().join(format!("p3sapp-remote-{}-{name}", std::process::id()));
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn options_default_to_lan_friendly_knobs() {
+        let opts = RemoteOptions::default();
+        assert!(opts.endpoints.is_empty());
+        assert_eq!(opts.connect_timeout, Duration::from_secs(5));
+        assert_eq!(opts.io_timeout, Duration::from_secs(60));
+        assert_eq!(opts.connect_retries, 3);
+        assert_eq!(opts.retry_backoff, Duration::from_millis(100));
+        assert_eq!(opts.inline_max_bytes, 4 * 1024 * 1024);
+    }
+
+    #[test]
+    fn connect_failure_names_endpoint_and_attempts() {
+        // Bind then drop to find a port that (very likely) refuses.
+        let port = {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.local_addr().unwrap().port()
+        };
+        let ep = format!("127.0.0.1:{port}");
+        let opts = RemoteOptions {
+            endpoints: vec![ep.clone()],
+            connect_timeout: Duration::from_millis(250),
+            connect_retries: 1,
+            retry_backoff: Duration::from_millis(1),
+            ..RemoteOptions::default()
+        };
+        let err = format!("{:#}", connect(&opts, &ep).unwrap_err());
+        assert!(err.contains(&format!("remote worker {ep}")), "{err}");
+        assert!(err.contains("connect failed after 2 attempts"), "{err}");
+    }
+
+    #[test]
+    fn execute_without_endpoints_is_a_typed_error() {
+        let plan = LogicalPlan::scan(vec![tmp_shard("no-eps", b"{}")], &["title"])
+            .collect()
+            .optimize()
+            .lower()
+            .unwrap();
+        let err = format!(
+            "{:#}",
+            RemoteExecutor::new(RemoteOptions::default()).execute(&plan).unwrap_err()
+        );
+        assert!(err.contains("remote executor has no endpoints"), "{err}");
+        assert!(err.contains("--remote"), "{err}");
+    }
+
+    #[test]
+    fn job_shards_ship_inline_or_by_digest() {
+        let small = tmp_shard("inline", b"{\"title\":\"a\"}\n");
+        let big_bytes = vec![b'x'; 64];
+        let big = tmp_shard("digest", &big_bytes);
+        let plan = LogicalPlan::scan(vec![small.clone(), big.clone()], &["title"])
+            .collect()
+            .optimize()
+            .lower()
+            .unwrap();
+        let shards = assign_shards(plan.files(), 1);
+        let (job, by_key) = encode_remote_job(&plan, 0, None, &shards[0], 32).unwrap();
+
+        let expect_key = format!("{:016x}", xxh64(&big_bytes, 0));
+        assert_eq!(by_key.len(), 1);
+        assert_eq!(by_key.get(&expect_key), Some(&big));
+
+        let mut cur = check_frame(&job, JOB_MAGIC, "job").unwrap();
+        let prefix = decode_job_prefix(&mut cur).unwrap();
+        assert_eq!(prefix.worker_id, 0);
+        assert!(prefix.fit.is_none());
+        assert_eq!(cur.u32().unwrap(), 2);
+        // Shard 0: small enough for the inline kind, raw bytes present.
+        assert_eq!(cur.u64().unwrap(), 0);
+        assert_eq!(read_path(&mut cur).unwrap(), small);
+        assert_eq!(cur.u8().unwrap(), SHARD_INLINE);
+        let len = cur.u64().unwrap() as usize;
+        assert_eq!(cur.take(len).unwrap(), &std::fs::read(&small).unwrap()[..]);
+        // Shard 1: over the inline ceiling, ships digest + length only.
+        assert_eq!(cur.u64().unwrap(), 1);
+        assert_eq!(read_path(&mut cur).unwrap(), big);
+        assert_eq!(cur.u8().unwrap(), SHARD_DIGEST);
+        assert_eq!(cur.str().unwrap(), expect_key);
+        assert_eq!(cur.u64().unwrap(), big_bytes.len() as u64);
+        assert_eq!(cur.remaining(), 0);
+    }
+
+    #[test]
+    fn loopback_execute_matches_fused() {
+        let rows = b"{\"title\":\"Alpha\",\"x\":1}\n{\"title\":\"beta\"}\n{\"title\":null}\n";
+        let rows2 = b"{\"title\":\"Gamma\"}\n{\"title\":\"beta\"}\n";
+        let files = vec![tmp_shard("lb-0", rows), tmp_shard("lb-1", rows2)];
+        let plan = LogicalPlan::scan(files, &["title"])
+            .drop_nulls(&["title"])
+            .distinct(&["title"])
+            .collect()
+            .optimize()
+            .lower()
+            .unwrap();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let ep = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || serve_listener(listener));
+
+        let opts = RemoteOptions {
+            endpoints: vec![ep],
+            // Force the digest path for one shard to cover the fetch
+            // round-trip end to end.
+            inline_max_bytes: rows2.len() as u64,
+            ..RemoteOptions::default()
+        };
+        let remote = RemoteExecutor::new(opts).execute(&plan).unwrap();
+        let fused = plan.execute(0).unwrap();
+        assert_eq!(remote.rows_out, fused.rows_out);
+        assert_eq!(remote.frame, fused.frame);
+    }
+}

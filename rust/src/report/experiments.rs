@@ -26,15 +26,11 @@ pub struct SuiteOptions {
     /// once per suite, so perf numbers in a report can be read next to
     /// what was actually fused.
     pub explain: bool,
-    /// When set, P3SAPP runs through the streaming executor (parse ‖
-    /// clean overlap) instead of the fused single pass; the EXPLAIN
-    /// output switches to the streaming topology accordingly.
-    pub stream: Option<crate::plan::StreamOptions>,
-    /// When set, each tier's P3SAPP run distributes across this many
-    /// worker OS processes ([`crate::plan::ProcessExecutor`]); the
-    /// EXPLAIN output switches to the process topology. The CA control
-    /// stays in-process — it is the paper's eager baseline.
-    pub processes: Option<usize>,
+    /// Which executor each tier's P3SAPP run uses (fused single pass,
+    /// streaming pipeline, worker processes, warm pool or remote TCP
+    /// endpoints); the EXPLAIN output names the same topology. The CA
+    /// control stays in-process — it is the paper's eager baseline.
+    pub executor: crate::plan::ExecutorKind,
     /// When set, each tier's P3SAPP run consults the persistent plan
     /// cache ([`crate::cache::CacheManager`]): a repeated `report` run
     /// (same corpus, same plan) restores every tier's frame instead of
@@ -60,8 +56,7 @@ impl SuiteOptions {
             tiers: vec![1, 2, 3, 4, 5],
             skip_ca: false,
             explain: false,
-            stream: None,
-            processes: None,
+            executor: crate::plan::ExecutorKind::Fused,
             cache: None,
             sample: None,
             limit: None,
@@ -114,8 +109,7 @@ pub fn run_tier(opts: &SuiteOptions, tier: usize) -> Result<TierResult> {
 
     let driver_opts = DriverOptions {
         workers: opts.workers,
-        stream: opts.stream.clone(),
-        processes: opts.processes,
+        executor: opts.executor.clone(),
         cache: opts.cache.clone(),
         sample: opts.sample,
         limit: opts.limit,
@@ -129,8 +123,7 @@ pub fn run_tier(opts: &SuiteOptions, tier: usize) -> Result<TierResult> {
         let text = crate::cache::explain_with_cache(
             &driver_opts.build_plan(&files),
             driver_opts.workers,
-            driver_opts.stream.as_ref(),
-            driver_opts.process_options().as_ref(),
+            &driver_opts.executor,
             driver_opts.cache.as_deref(),
         )?;
         eprintln!("{text}");

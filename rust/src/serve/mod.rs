@@ -325,7 +325,38 @@ fn dispatch(req: Request, daemon: &Daemon) -> Reply {
         Request::Train { spec, artifacts, steps } => {
             run_admitted(&spec, daemon, |files, dopts| train_job(files, dopts, &artifacts, steps))
         }
+        // The cross-machine artifact exchange: hand out a stored P3PC
+        // artifact by key. Not admission-gated — the requester is
+        // another machine's already-admitted job, and the cost is one
+        // sequential file read.
+        Request::FetchArtifact { key } => match fetch_artifact(&key, daemon) {
+            Ok(bytes) => Reply::Bytes(bytes),
+            Err(e) => err(ErrKind::BadRequest, format!("{e:#}")),
+        },
     }
+}
+
+/// Resolve one `fetch-artifact` request against the daemon's artifact
+/// store. The key is hex (it names an xxh64 fingerprint), so reject
+/// anything else outright — a key is never allowed to become a path
+/// traversal.
+fn fetch_artifact(key: &str, daemon: &Daemon) -> Result<Vec<u8>> {
+    let cache = daemon
+        .cache
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("this daemon runs cache-less; no artifacts to fetch"))?;
+    anyhow::ensure!(
+        !key.is_empty()
+            && key.len() <= 64
+            && key.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase()),
+        "artifact key must be lowercase hex, got '{key}'"
+    );
+    let path = cache.dir().join(format!("{key}.{}", crate::cache::ARTIFACT_EXT));
+    anyhow::ensure!(
+        crate::cache::artifact::verify_header(&path, key),
+        "no artifact stored under key {key}"
+    );
+    std::fs::read(&path).map_err(|e| anyhow::anyhow!("read artifact {key}: {e}"))
 }
 
 /// Admission-gated execution shared by preprocess and train: estimate
@@ -401,8 +432,10 @@ impl Daemon {
     fn driver_opts(&self, spec: &JobSpec) -> DriverOptions {
         DriverOptions {
             workers: if spec.workers > 0 { spec.workers } else { self.opts.workers },
-            processes: self.pool.as_ref().map(|p| p.size()),
-            pool: self.pool.clone(),
+            executor: match &self.pool {
+                Some(pool) => crate::plan::ExecutorKind::Pool(Arc::clone(pool)),
+                None => crate::plan::ExecutorKind::Fused,
+            },
             cache: self.cache.clone(),
             sample: spec.sample,
             limit: spec.limit,
@@ -418,8 +451,7 @@ fn explain_job(spec: &JobSpec, daemon: &Daemon) -> Result<String> {
     crate::cache::explain_with_cache(
         &dopts.build_plan(&files),
         dopts.workers,
-        dopts.stream.as_ref(),
-        dopts.process_options().as_ref(),
+        &dopts.executor,
         dopts.cache.as_deref(),
     )
 }

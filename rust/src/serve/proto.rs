@@ -46,6 +46,14 @@ pub(crate) const WIRE_VERSION: u32 = 2;
 /// partial state.
 pub(crate) const MODE_MAP: u8 = 0;
 pub(crate) const MODE_FIT: u8 = 1;
+/// Remote-worker streaming reply modes: one bounded `MODE_MAP_CHUNK`
+/// frame per completed shard (so the worker never buffers its whole
+/// stripe), then a single `MODE_MAP_DONE` frame carrying the chunk
+/// count and the worker's span section. Only the TCP transport
+/// ([`crate::plan::remote`]) emits these; pipe workers keep the
+/// buffered single-frame `MODE_MAP` reply.
+pub(crate) const MODE_MAP_CHUNK: u8 = 2;
+pub(crate) const MODE_MAP_DONE: u8 = 3;
 
 /// Upper bound on one length-prefixed frame: a declared length past
 /// this is treated as a garbled prefix rather than honored with a
@@ -162,6 +170,7 @@ const REQ_TRAIN: u8 = 2;
 const REQ_STATS: u8 = 3;
 const REQ_SHUTDOWN: u8 = 4;
 const REQ_METRICS: u8 = 5;
+const REQ_FETCH_ARTIFACT: u8 = 6;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
@@ -170,6 +179,7 @@ const PAYLOAD_EMPTY: u8 = 0;
 const PAYLOAD_TEXT: u8 = 1;
 const PAYLOAD_PREPROCESS: u8 = 2;
 const PAYLOAD_STATS: u8 = 3;
+const PAYLOAD_BYTES: u8 = 4;
 
 /// One preprocessing job, as a client describes it: the corpus dir plus
 /// the plan-variant knobs the one-shot CLI takes.
@@ -200,6 +210,14 @@ pub enum Request {
     /// registry (counters, gauges, latency histograms). Answered with
     /// [`Reply::Text`]; never queued behind admission control.
     Metrics,
+    /// Fetch content-addressed bytes by their hex xxh64 `key` — the
+    /// cross-machine artifact exchange. The serve daemon answers from
+    /// its `P3PC` artifact store; a remote plan worker sends this back
+    /// up its job connection to pull a shard the driver declared by
+    /// digest instead of shipping inline. Answered with
+    /// [`Reply::Bytes`]; never queued behind admission control (it
+    /// gates another machine's already-admitted job).
+    FetchArtifact { key: String },
 }
 
 /// Typed failure causes: admission backpressure ([`ErrKind::QueueFull`],
@@ -350,6 +368,10 @@ pub enum Reply {
     Stats(StatsReply),
     /// Bare acknowledgement (shutdown).
     Ok,
+    /// Raw content-addressed bytes (a [`Request::FetchArtifact`]
+    /// answer). The requester verifies the digest against the key it
+    /// asked for — the transport digest only covers the frame.
+    Bytes(Vec<u8>),
     Err(ServeError),
 }
 
@@ -412,6 +434,10 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         Request::Stats => buf.push(REQ_STATS),
         Request::Shutdown => buf.push(REQ_SHUTDOWN),
         Request::Metrics => buf.push(REQ_METRICS),
+        Request::FetchArtifact { key } => {
+            buf.push(REQ_FETCH_ARTIFACT);
+            write_str(&mut buf, key);
+        }
     }
     seal_frame(&mut buf);
     buf
@@ -432,6 +458,7 @@ pub fn decode_request(frame: &[u8]) -> Result<Request> {
         REQ_STATS => Request::Stats,
         REQ_SHUTDOWN => Request::Shutdown,
         REQ_METRICS => Request::Metrics,
+        REQ_FETCH_ARTIFACT => Request::FetchArtifact { key: cur.str()? },
         other => anyhow::bail!("unknown serve request kind {other}"),
     };
     anyhow::ensure!(
@@ -454,6 +481,12 @@ pub fn encode_reply(reply: &Reply) -> Vec<u8> {
         Reply::Ok => {
             buf.push(STATUS_OK);
             buf.push(PAYLOAD_EMPTY);
+        }
+        Reply::Bytes(bytes) => {
+            buf.push(STATUS_OK);
+            buf.push(PAYLOAD_BYTES);
+            buf.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            buf.extend_from_slice(bytes);
         }
         Reply::Text(text) => {
             buf.push(STATUS_OK);
@@ -522,6 +555,10 @@ pub fn decode_reply(frame: &[u8]) -> Result<Reply> {
         STATUS_OK => match cur.u8()? {
             PAYLOAD_EMPTY => Reply::Ok,
             PAYLOAD_TEXT => Reply::Text(cur.str()?),
+            PAYLOAD_BYTES => {
+                let len = cur.u64()? as usize;
+                Reply::Bytes(cur.take(len)?.to_vec())
+            }
             PAYLOAD_STATS => {
                 let active = cur.u64()?;
                 let queued = cur.u64()?;
@@ -628,6 +665,7 @@ mod tests {
             Request::Stats,
             Request::Shutdown,
             Request::Metrics,
+            Request::FetchArtifact { key: "00deadbeefc0ffee".into() },
         ] {
             let frame = encode_request(&req);
             let back = decode_request(&frame).unwrap();
@@ -651,6 +689,10 @@ mod tests {
                 (Request::Stats, Request::Stats)
                 | (Request::Shutdown, Request::Shutdown)
                 | (Request::Metrics, Request::Metrics) => {}
+                (
+                    Request::FetchArtifact { key: a },
+                    Request::FetchArtifact { key: b },
+                ) => assert_eq!(a, b),
                 other => panic!("request changed shape over the wire: {other:?}"),
             }
             // Corruption fails the digest; truncation fails the length
@@ -740,6 +782,19 @@ mod tests {
             }
             other => panic!("wrong reply: {other:?}"),
         }
+
+        // Content-addressed bytes cross verbatim (the fetch-artifact
+        // exchange); truncating the declared length is caught by the
+        // cell-level bound, corruption by the envelope digest.
+        let blob: Vec<u8> = (0..=255u8).collect();
+        let bytes_wire = encode_reply(&Reply::Bytes(blob.clone()));
+        match decode_reply(&bytes_wire).unwrap() {
+            Reply::Bytes(b) => assert_eq!(b, blob),
+            other => panic!("wrong reply: {other:?}"),
+        }
+        let mut bad_bytes = bytes_wire.clone();
+        bad_bytes[bytes_wire.len() / 2] ^= 0x04;
+        assert!(decode_reply(&bad_bytes).is_err());
 
         // Cache-less daemon: the counters are absent, not zeroed.
         let bare_wire = encode_reply(&Reply::Stats(StatsReply {

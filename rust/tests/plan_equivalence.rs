@@ -9,7 +9,10 @@
 //! (including `queue_cap = 1` and fewer-shards-than-workers) and — for
 //! the estimator pipeline — against a cache round trip. The process
 //! arms spawn real worker processes (the built `repro` binary's hidden
-//! `plan-worker` mode).
+//! `plan-worker` mode); the remote arms drive in-process loopback TCP
+//! workers ([`p3sapp::plan::remote::serve_listener`]) over the same
+//! `P3PJ`/`P3PW` frames, covering both inline and fetch-by-digest
+//! shard shipping.
 
 use p3sapp::cache::CacheManager;
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
@@ -21,7 +24,7 @@ use p3sapp::pipeline::presets::{
     abstract_stages, case_study_features_pipeline, case_study_pipeline, case_study_plan,
     case_study_plan_with, CaseStudyOptions,
 };
-use p3sapp::plan::{sample_keeps, LogicalPlan, ProcessOptions, StreamOptions};
+use p3sapp::plan::{sample_keeps, LogicalPlan, ProcessOptions, RemoteOptions, StreamOptions};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -36,6 +39,24 @@ fn process_opts(processes: usize) -> ProcessOptions {
         worker_cmd: Some(PathBuf::from(env!("CARGO_BIN_EXE_repro"))),
         ..Default::default()
     }
+}
+
+/// Remote executor options backed by `n` fresh in-process loopback
+/// workers: each endpoint is a real `TcpListener` on `127.0.0.1:0`
+/// served by [`p3sapp::plan::remote::serve_listener`] on its own
+/// thread (the threads outlive the test harmlessly — an idle accept
+/// loop). `inline_max_bytes` is passed through so tests can force the
+/// fetch-by-digest shard path.
+fn loopback_remote(n: usize, inline_max_bytes: u64) -> RemoteOptions {
+    let endpoints = (0..n)
+        .map(|_| {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let ep = listener.local_addr().unwrap().to_string();
+            std::thread::spawn(move || p3sapp::plan::remote::serve_listener(listener));
+            ep
+        })
+        .collect();
+    RemoteOptions { endpoints, inline_max_bytes, ..Default::default() }
 }
 
 fn corpus(name: &str, spec: &CorpusSpec) -> (PathBuf, Vec<PathBuf>) {
@@ -98,6 +119,21 @@ fn fused_plan_is_byte_identical_to_staged_reference() {
         assert_eq!(
             processed.empties_dropped, out.empties_dropped,
             "seed {seed}: process empties"
+        );
+        // The remote executor ships the same program over loopback TCP
+        // (inline_max_bytes = 1 forces every shard through the
+        // fetch-by-digest round trip) and streams chunk frames back —
+        // same bytes, same accounting.
+        let remoted = case_study_plan(&files, "title", "abstract")
+            .optimize()
+            .execute_remote(&loopback_remote(2, 1))
+            .unwrap();
+        assert_eq!(remoted.frame, reference.frame, "seed {seed}: remote frames diverge");
+        assert_eq!(remoted.nulls_dropped, out.nulls_dropped, "seed {seed}: remote nulls");
+        assert_eq!(remoted.dups_dropped, out.dups_dropped, "seed {seed}: remote dups");
+        assert_eq!(
+            remoted.empties_dropped, out.empties_dropped,
+            "seed {seed}: remote empties"
         );
         assert_eq!(out.nulls_dropped, reference.nulls_dropped, "seed {seed}: null drops");
         // A duplicated row that cleans to empty is attributed to the
@@ -244,6 +280,11 @@ fn sampled_plan_matches_the_positionally_sampled_staged_reference() {
         let processed = plan.execute_process(&process_opts(2)).unwrap();
         assert_eq!(processed.frame, reference, "seed {corpus_seed}: process");
         assert_eq!(processed.sampled_out, sampled_out, "seed {corpus_seed}: process sample");
+        // Remote workers also receive shard indices with their shards,
+        // so positional sampling survives the TCP boundary.
+        let remoted = plan.execute_remote(&loopback_remote(2, 4 * 1024 * 1024)).unwrap();
+        assert_eq!(remoted.frame, reference, "seed {corpus_seed}: remote");
+        assert_eq!(remoted.sampled_out, sampled_out, "seed {corpus_seed}: remote sample");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }
@@ -267,8 +308,11 @@ fn limited_plan_is_the_staged_reference_prefix_everywhere() {
         outputs.push(plan.execute_stream(&stream).unwrap());
     }
     // The global Limit budget is enforced at the driver merge, so the
-    // process executor cuts the exact same prefix.
+    // process and remote executors cut the exact same prefix — for
+    // remote, the shard-ordered fold of streamed chunk frames is what
+    // keeps the budget deterministic.
     outputs.push(plan.execute_process(&process_opts(2)).unwrap());
+    outputs.push(plan.execute_remote(&loopback_remote(2, 1)).unwrap());
     for out in &outputs {
         assert_eq!(out.rows_out, n);
         assert_eq!(out.limited_out, reference.frame.num_rows() - n);
@@ -340,6 +384,11 @@ fn multi_distinct_plan_matches_the_double_distinct_staged_reference() {
             // merge must land on the staged bytes from there too.
             let processed = optimized.execute_process(&process_opts(2)).unwrap();
             assert_eq!(processed.frame, reference, "seed {seed}: process multi-distinct");
+            // Same provenance contract across TCP: per-slot KeySlots
+            // ride the streamed chunk frames and the driver's ordered
+            // fold must land on the staged bytes.
+            let remoted = optimized.execute_remote(&loopback_remote(2, 1)).unwrap();
+            assert_eq!(remoted.frame, reference, "seed {seed}: remote multi-distinct");
         }
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -445,6 +494,12 @@ fn lowered_idf_matches_pipeline_fit_transform_across_all_executors() {
         // fitted model inside the job — same bytes as Pipeline::fit.
         let processed = plan.execute_process(&process_opts(2)).unwrap();
         assert_eq!(processed.frame, reference, "seed {seed}: process two-pass");
+
+        // Remote two-pass over loopback workers: pass 1 ships admitted
+        // partitions back as chunk frames, pass 2 broadcasts the fitted
+        // model inside the job — same bytes as Pipeline::fit.
+        let remoted = plan.execute_remote(&loopback_remote(2, 1)).unwrap();
+        assert_eq!(remoted.frame, reference, "seed {seed}: remote two-pass");
 
         // Cached: cold run stores (vectors and all), warm run restores
         // the identical frame.

@@ -18,8 +18,9 @@ use p3sapp::ingest::list_shards;
 use p3sapp::pipeline::features::{HashingTF, Idf};
 use p3sapp::pipeline::presets::{case_study_features_plan, case_study_plan};
 use p3sapp::pipeline::stages::Tokenizer;
-use p3sapp::plan::{LogicalPlan, ProcessOptions};
+use p3sapp::plan::{LogicalPlan, ProcessOptions, RemoteOptions};
 use std::path::PathBuf;
+use std::time::Duration;
 
 fn repro_bin() -> PathBuf {
     PathBuf::from(env!("CARGO_BIN_EXE_repro"))
@@ -89,6 +90,27 @@ fn dedup_free_fit_uses_partials_and_still_matches() {
     let out = plan.execute_process(&process_opts(2)).unwrap();
     assert_eq!(out.frame, fused.frame);
     assert_eq!(out.rows_out, fused.rows_out);
+
+    // The remote executor's partial-fit pass ships one MODE_FIT frame
+    // per endpoint (document-frequency partials, not partitions) over
+    // loopback TCP and must land on the same bytes.
+    let listeners: Vec<String> = (0..2)
+        .map(|_| {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let ep = listener.local_addr().unwrap().to_string();
+            std::thread::spawn(move || p3sapp::plan::remote::serve_listener(listener));
+            ep
+        })
+        .collect();
+    let ropts = RemoteOptions {
+        endpoints: listeners,
+        // Force the fetch-by-digest path in the fit pass too.
+        inline_max_bytes: 1,
+        ..Default::default()
+    };
+    let remoted = plan.execute_remote(&ropts).unwrap();
+    assert_eq!(remoted.frame, fused.frame);
+    assert_eq!(remoted.rows_out, fused.rows_out);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
@@ -242,6 +264,127 @@ fn pooled_worker_failure_names_the_pooled_worker_and_does_not_hang() {
     let msg = format!("{err:#}");
     assert!(msg.contains("pooled plan worker"), "{msg}");
     assert!(msg.contains("/bin/false"), "{msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Remote executor failure paths: every network failure mode must surface
+// as a typed driver error naming the endpoint — never a hang. The fake
+// "workers" here are plain TCP listeners misbehaving in controlled ways;
+// the happy loopback paths live in plan_equivalence.rs.
+// ---------------------------------------------------------------------------
+
+fn remote_opts(eps: &[&str]) -> RemoteOptions {
+    RemoteOptions {
+        endpoints: eps.iter().map(|s| s.to_string()).collect(),
+        connect_timeout: Duration::from_secs(2),
+        io_timeout: Duration::from_secs(5),
+        connect_retries: 1,
+        retry_backoff: Duration::from_millis(10),
+        ..Default::default()
+    }
+}
+
+/// Read one length-prefixed frame off `s` raw — the fake workers
+/// swallow the driver's job so the socket is drained before they
+/// misbehave (a close with unread data would RST instead of FIN).
+fn drain_frame(s: &mut std::net::TcpStream) {
+    use std::io::Read;
+    let mut len = [0u8; 8];
+    s.read_exact(&mut len).unwrap();
+    let mut body = vec![0u8; u64::from_le_bytes(len) as usize];
+    s.read_exact(&mut body).unwrap();
+}
+
+#[test]
+fn remote_connect_refused_is_a_typed_driver_error_after_retries() {
+    // Bind then drop to find a port that refuses connections.
+    let port = {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.local_addr().unwrap().port()
+    };
+    let ep = format!("127.0.0.1:{port}");
+    let (dir, files) = corpus("remote-refused", 37);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let err = plan.execute_remote(&remote_opts(&[&ep])).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&format!("remote worker {ep}")), "{msg}");
+    assert!(msg.contains("connect failed after 2 attempts"), "{msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn remote_worker_dying_mid_stream_is_a_typed_driver_error() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let ep = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        // Swallow the job, then hang up without a single result frame.
+        drain_frame(&mut s);
+    });
+    let (dir, files) = corpus("remote-midstream", 29);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let err = plan.execute_remote(&remote_opts(&[&ep])).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&format!("remote worker {ep}")), "{msg}");
+    assert!(msg.contains("mid-stream"), "{msg}");
+    assert!(msg.contains("0 of"), "{msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn remote_garbled_result_frame_is_a_driver_error_naming_the_endpoint() {
+    use std::io::Write;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let ep = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        drain_frame(&mut s);
+        // A well-framed reply whose body is garbage: wrong magic, no
+        // digest. The driver must reject it, not misparse it.
+        let garbage = [0x55u8; 32];
+        s.write_all(&(garbage.len() as u64).to_le_bytes()).unwrap();
+        s.write_all(&garbage).unwrap();
+        s.flush().unwrap();
+    });
+    let (dir, files) = corpus("remote-garbled", 41);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let err = plan.execute_remote(&remote_opts(&[&ep])).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&format!("remote worker {ep}")), "{msg}");
+    assert!(msg.contains("magic") || msg.contains("frame"), "{msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn remote_read_timeout_is_a_typed_driver_error_not_a_hang() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let ep = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        // Accept and then stall: never read the job, never reply.
+        let (_s, _) = listener.accept().unwrap();
+        std::thread::sleep(Duration::from_secs(20));
+    });
+    let (dir, files) = corpus("remote-stall", 43);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let mut opts = remote_opts(&[&ep]);
+    opts.io_timeout = Duration::from_millis(400);
+    let t0 = std::time::Instant::now();
+    let err = plan.execute_remote(&opts).unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(10), "timed out far too late");
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&format!("remote worker {ep}")), "{msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn remote_without_endpoints_is_a_typed_error_naming_the_flag() {
+    let (dir, files) = corpus("remote-noeps", 53);
+    let plan = case_study_plan(&files, "title", "abstract").optimize();
+    let err = plan.execute_remote(&RemoteOptions::default()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no endpoints"), "{msg}");
+    assert!(msg.contains("--remote"), "{msg}");
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
