@@ -18,6 +18,14 @@
 //!   6. cache warm — fingerprint + restore from disk (memo disabled, so
 //!                   this is the honest second-process number);
 //!
+//! plus the incremental (per-shard) pair measuring the append-one-shard
+//! workflow the shard tier exists for:
+//!
+//!   5b. incremental cold — digest + execute + store every shard;
+//!   6b. incremental warm append — all prior shards restore from disk,
+//!       exactly one shard executes (its payload is evicted before each
+//!       iteration so every run is an honest (n-1)-hit/1-miss append);
+//!
 //! plus the estimator pair measuring the two-pass Idf lowering against
 //! the staged `Pipeline::fit`/`transform` path it replaces:
 //!
@@ -43,12 +51,13 @@
 //!
 //! Results are also recorded as machine-readable JSON (defaults under
 //! `target/` so bench runs never dirty the checked-in schema records
-//! `BENCH_streaming.json` / `BENCH_cache.json` / `BENCH_twopass.json` /
-//! `BENCH_process.json` / `BENCH_obs.json` at the repo root; override
-//! with `BENCH_STREAMING_JSON=path` / `BENCH_CACHE_JSON=path` /
+//! `BENCH_streaming.json` / `BENCH_cache.json` / `BENCH_incremental.json` /
+//! `BENCH_twopass.json` / `BENCH_process.json` / `BENCH_obs.json` at the
+//! repo root; override with `BENCH_STREAMING_JSON=path` /
+//! `BENCH_CACHE_JSON=path` / `BENCH_INCREMENTAL_JSON=path` /
 //! `BENCH_TWOPASS_JSON=path` / `BENCH_PROCESS_JSON=path` /
 //! `BENCH_OBS_JSON=path`, disable with `=-`). CI's bench-smoke job
-//! regenerates all five and runs the `benchgate` comparator against the
+//! regenerates all six and runs the `benchgate` comparator against the
 //! repo-root records.
 //!
 //!     cargo bench --bench fused
@@ -66,7 +75,9 @@ use p3sapp::ingest::spark::{ingest_files, IngestOptions};
 use p3sapp::pipeline::presets::{
     case_study_features_pipeline, case_study_features_plan, case_study_pipeline, case_study_plan,
 };
-use p3sapp::plan::{ProcessOptions, StreamOptions};
+use p3sapp::plan::{
+    execute_incremental, incremental_shard_keys, ExecutorKind, ProcessOptions, StreamOptions,
+};
 use std::path::PathBuf;
 
 const COLS: [&str; 2] = ["title", "abstract"];
@@ -195,6 +206,49 @@ fn main() {
         m_cold.mean_secs() / m_warm.mean_secs()
     );
 
+    // Incremental (per-shard) arms: the append-one-shard workflow. A
+    // separate disk-only cache dir keeps the whole-plan arms honest.
+    let incr_cache = CacheManager::with_config(CacheConfig {
+        dir: dir.join("incr-cache"),
+        max_bytes: 0,
+        memory: false,
+        memory_max_bytes: 0,
+    })
+    .unwrap();
+    let m_incr_cold = bench("incremental cold (execute + store all shards)", 1, 5, || {
+        incr_cache.clear().unwrap();
+        let fp = fingerprint(&black_box(&fused_plan).render(), &files).unwrap();
+        execute_incremental(&fused_plan, workers, &ExecutorKind::Fused, &incr_cache, &fp)
+            .unwrap()
+            .expect("eligible plan")
+            .rows_out
+    });
+    println!("\n  {}", m_incr_cold.report());
+    // Warm the tier once, then evict the last shard's payload before
+    // each iteration so every warm run is an honest (n-1)-hit / 1-miss
+    // append rather than an all-hit restore.
+    let fp_full = fingerprint(&fused_plan.render(), &files).unwrap();
+    execute_incremental(&fused_plan, workers, &ExecutorKind::Fused, &incr_cache, &fp_full)
+        .unwrap()
+        .expect("eligible plan");
+    let last_key = incremental_shard_keys(&fused_plan, &fp_full)
+        .into_iter()
+        .last()
+        .expect("non-empty shard set");
+    let m_incr_warm = bench("incremental warm append (1 of n shards runs)", 1, 5, || {
+        incr_cache.remove_shard(&last_key);
+        let fp = fingerprint(&black_box(&fused_plan).render(), &files).unwrap();
+        execute_incremental(&fused_plan, workers, &ExecutorKind::Fused, &incr_cache, &fp)
+            .unwrap()
+            .expect("eligible plan")
+            .rows_out
+    });
+    println!("  {}", m_incr_warm.report());
+    println!(
+        "\n  incremental append speedup (cold/warm):         {:.2}x",
+        m_incr_cold.mean_secs() / m_incr_warm.mean_secs()
+    );
+
     // Two-pass estimator arms: the full Table-2 pipeline (cleaning +
     // Tokenizer → HashingTF → IDF), staged vs lowered into the plan.
     let features_plan = case_study_features_plan(&files, "title", "abstract").optimize();
@@ -296,6 +350,21 @@ fn main() {
         "BENCH_CACHE_JSON",
         "target/BENCH_cache.json",
         &bench_record_json("cache", &extra, &[("cache_cold", &m_cold), ("cache_warm", &m_warm)]),
+    );
+
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    corpus_extra(&mut extra);
+    write_bench_record(
+        "BENCH_INCREMENTAL_JSON",
+        "target/BENCH_incremental.json",
+        &bench_record_json(
+            "incremental",
+            &extra,
+            &[
+                ("incremental_cold", &m_incr_cold),
+                ("incremental_warm_append", &m_incr_warm),
+            ],
+        ),
     );
 
     let mut extra: Vec<(&str, String)> = Vec::new();

@@ -5,8 +5,9 @@
 //! Layout (all integers little-endian):
 //! ```text
 //! magic    b"P3PC"        4 bytes
-//! version  u32            (2)
+//! version  u32            (3)
 //! key_len  u32, key bytes (fingerprint hex — verified on load)
+//! kind     u8             (0 = whole-plan frame, 1 = per-shard payload)
 //! rows_ingested  u64      \
 //! nulls_dropped  u64       |
 //! dups_dropped   u64       | the drop accounting the reports consume
@@ -26,6 +27,12 @@
 //! digest   u64            xxh64 over bytes[4 .. len-8], seed 0
 //! ```
 //!
+//! Kind-1 artifacts (the incremental cache's per-shard entries, see
+//! `crate::plan` and [`save_raw`]/[`load_raw`]) replace everything
+//! between `kind` and `digest` with an opaque payload the plan layer
+//! encodes — the envelope discipline (magic, version, key, trailing
+//! digest, atomic save) is identical.
+//!
 //! The trailing digest makes truncation and bit-rot detectable without
 //! parsing; [`load`] additionally bounds-checks every read, so a corrupt
 //! artifact can only ever produce an `Err` — which the
@@ -39,13 +46,19 @@ use crate::Result;
 use std::path::Path;
 
 pub(super) const MAGIC: &[u8; 4] = b"P3PC";
-/// v2: the accounting block grew `sampled_out` / `limited_out` (plan
-/// `Sample`/`Limit` support). v1 artifacts fail the version check and
-/// are treated as misses — the pass re-executes and re-stores.
-pub(super) const VERSION: u32 = 2;
-/// Magic + version + key_len is the minimum readable prefix; the digest
-/// trails the file.
-const MIN_LEN: usize = 4 + 4 + 4 + 8;
+/// v3: a `kind` byte after the key distinguishes whole-plan frame
+/// artifacts from the incremental cache's per-shard payloads (v2 grew
+/// the accounting block with `sampled_out` / `limited_out`). Artifacts
+/// from any earlier version fail the version check and are treated as
+/// clean misses — the pass re-executes and re-stores; never an error.
+pub(super) const VERSION: u32 = 3;
+/// Whole-plan frame artifact (the original `P3PC` payload).
+const KIND_FRAME: u8 = 0;
+/// Per-shard payload artifact (opaque bytes the plan layer encodes).
+const KIND_SHARD: u8 = 1;
+/// Magic + version + key_len + kind is the minimum readable prefix; the
+/// digest trails the file.
+const MIN_LEN: usize = 4 + 4 + 4 + 1 + 8;
 
 /// What an artifact restores: the cleaned frame plus the row accounting.
 /// Stage times are *not* stored — a restored run reports its own
@@ -85,6 +98,7 @@ pub fn encode(key: &str, out: &PlanOutput) -> Vec<u8> {
     buf.extend_from_slice(&VERSION.to_le_bytes());
     buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
     buf.extend_from_slice(key.as_bytes());
+    buf.push(KIND_FRAME);
     for n in [
         out.rows_ingested,
         out.nulls_dropped,
@@ -279,7 +293,7 @@ impl<'a> Cursor<'a> {
 /// corrupt file.
 pub fn verify(path: &Path, key: &str) -> bool {
     let Ok(bytes) = std::fs::read(path) else { return false };
-    check_envelope(&bytes, key).is_ok()
+    check_envelope(&bytes, key, KIND_FRAME).is_ok()
 }
 
 /// O(header) probe: check magic, version and key from the first few
@@ -302,11 +316,13 @@ pub fn verify_header(path: &Path, key: &str) -> bool {
     if key_len != key.len() {
         return false;
     }
-    let mut got = vec![0u8; key_len];
-    f.read_exact(&mut got).is_ok() && got == key.as_bytes()
+    let mut got = vec![0u8; key_len + 1];
+    f.read_exact(&mut got).is_ok()
+        && &got[..key_len] == key.as_bytes()
+        && got[key_len] == KIND_FRAME
 }
 
-fn check_envelope<'a>(bytes: &'a [u8], key: &str) -> Result<Cursor<'a>> {
+fn check_envelope<'a>(bytes: &'a [u8], key: &str, kind: u8) -> Result<Cursor<'a>> {
     anyhow::ensure!(bytes.len() >= MIN_LEN, "artifact too short ({} bytes)", bytes.len());
     anyhow::ensure!(&bytes[..4] == MAGIC, "not a p3sapp plan-cache artifact (bad magic)");
     let body = &bytes[..bytes.len() - 8];
@@ -320,6 +336,11 @@ fn check_envelope<'a>(bytes: &'a [u8], key: &str) -> Result<Cursor<'a>> {
         got_key == key,
         "artifact key mismatch: stored {got_key}, expected {key}"
     );
+    let got_kind = cur.u8()?;
+    anyhow::ensure!(
+        got_kind == kind,
+        "artifact kind mismatch: stored {got_kind}, expected {kind}"
+    );
     Ok(cur)
 }
 
@@ -329,7 +350,7 @@ fn check_envelope<'a>(bytes: &'a [u8], key: &str) -> Result<Cursor<'a>> {
 pub fn load(path: &Path, key: &str) -> Result<CachedFrame> {
     let bytes = std::fs::read(path)
         .map_err(|e| anyhow::anyhow!("read artifact {}: {e}", path.display()))?;
-    let mut cur = check_envelope(&bytes, key)?;
+    let mut cur = check_envelope(&bytes, key, KIND_FRAME)?;
     let rows_ingested = cur.u64()? as usize;
     let nulls_dropped = cur.u64()? as usize;
     let dups_dropped = cur.u64()? as usize;
@@ -383,14 +404,46 @@ pub fn load(path: &Path, key: &str) -> Result<CachedFrame> {
 /// interleave writes into one temp file — each renames its own complete
 /// artifact, last one wins, and readers only ever observe whole files.
 pub fn save(path: &Path, key: &str, out: &PlanOutput) -> Result<()> {
+    write_atomic(path, &encode(key, out))
+}
+
+/// Persist an opaque per-shard payload under the same `P3PC` envelope
+/// (kind 1): the plan layer's incremental cache stores one serialized
+/// shard result per artifact, keyed by
+/// [`super::fingerprint::shard_key`]. Same atomic temp+rename
+/// discipline as [`save`].
+pub fn save_raw(path: &Path, key: &str, payload: &[u8]) -> Result<()> {
+    let mut buf = Vec::with_capacity(MIN_LEN + key.len() + payload.len());
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
+    buf.extend_from_slice(key.as_bytes());
+    buf.push(KIND_SHARD);
+    buf.extend_from_slice(payload);
+    let digest = xxh64(&buf[4..], 0);
+    buf.extend_from_slice(&digest.to_le_bytes());
+    write_atomic(path, &buf)
+}
+
+/// Load a per-shard payload saved by [`save_raw`], validating the full
+/// envelope (magic, version, key, kind, trailing digest). Errors on any
+/// defect; the cache manager treats every error as a miss.
+pub fn load_raw(path: &Path, key: &str) -> Result<Vec<u8>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("read artifact {}: {e}", path.display()))?;
+    let mut cur = check_envelope(&bytes, key, KIND_SHARD)?;
+    let n = cur.remaining();
+    Ok(cur.take(n)?.to_vec())
+}
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-    let bytes = encode(key, out);
     let tmp = path.with_extension(format!(
         "{}-{}.tmp",
         std::process::id(),
         SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
     ));
-    if let Err(e) = std::fs::write(&tmp, &bytes) {
+    if let Err(e) = std::fs::write(&tmp, bytes) {
         let _ = std::fs::remove_file(&tmp);
         anyhow::bail!("write artifact {}: {e}", tmp.display());
     }
@@ -504,8 +557,8 @@ mod tests {
         save(&path, "k", &sample_output()).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         // n_rows sits after magic(4) + version(4) + key_len(4) + key(1)
-        // + six u64 counters(48).
-        let n_rows_at = 13 + 48;
+        // + kind(1) + six u64 counters(48).
+        let n_rows_at = 14 + 48;
         bytes[n_rows_at..n_rows_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
         let n = bytes.len();
         let digest = xxh64(&bytes[4..n - 8], 0);
@@ -513,6 +566,55 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         assert!(verify(&path, "k"), "digest is deliberately valid");
         assert!(load(&path, "k").is_err(), "counts exceed payload -> error, not abort");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn raw_payload_roundtrips_and_kinds_do_not_cross() {
+        let path = tmp("raw");
+        save_raw(&path, "shard-key", b"opaque shard payload").unwrap();
+        assert_eq!(load_raw(&path, "shard-key").unwrap(), b"opaque shard payload");
+        assert!(load_raw(&path, "other-key").is_err());
+        // A shard artifact is not a frame artifact and vice versa.
+        assert!(load(&path, "shard-key").is_err());
+        assert!(!verify(&path, "shard-key"));
+        assert!(!verify_header(&path, "shard-key"));
+        save(&path, "shard-key", &sample_output()).unwrap();
+        assert!(load_raw(&path, "shard-key").is_err());
+        assert!(load(&path, "shard-key").is_ok());
+        // Truncation and bit rot are caught by the trailing digest.
+        save_raw(&path, "shard-key", b"opaque shard payload").unwrap();
+        let good = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &good[..good.len() - 3]).unwrap();
+        assert!(load_raw(&path, "shard-key").is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn stale_v2_layout_artifact_is_rejected_not_misread() {
+        // A pre-incremental (v2) artifact has no kind byte: its counter
+        // block starts where v3 expects the kind. The version check must
+        // reject it before any payload interpretation.
+        let path = tmp("v2");
+        let key = "stale-key";
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&(key.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(key.as_bytes());
+        for n in [9u64, 2, 1, 1, 0, 0] {
+            bytes.extend_from_slice(&n.to_le_bytes());
+        }
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // n_rows
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // n_cols
+        let digest = xxh64(&bytes[4..], 0);
+        bytes.extend_from_slice(&digest.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(!verify(&path, key));
+        assert!(!verify_header(&path, key));
+        let err = load(&path, key).unwrap_err().to_string();
+        assert!(err.contains("unsupported artifact version 2"), "{err}");
+        assert!(load_raw(&path, key).is_err());
         std::fs::remove_file(&path).unwrap();
     }
 

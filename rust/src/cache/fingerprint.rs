@@ -187,6 +187,46 @@ impl PlanFingerprint {
 /// assert_ne!(a.key(), b.key());
 /// assert_eq!(a.key().len(), 32);
 /// ```
+/// Derive the per-shard cache key for running `plan_render` over one
+/// shard: the **plan shape** × the **shard content** — nothing else.
+///
+/// Two deliberate exclusions make appended corpora O(delta):
+///
+/// - The `Ingest [N files]` line of the render is normalized to drop the
+///   file count, so adding a shard to the corpus leaves every other
+///   shard's key unchanged (the whole-plan [`fingerprint`] still covers
+///   the full file list — these keys name *per-shard* work).
+/// - The shard's path and mtime are excluded: like the whole-plan key,
+///   the digest names the bytes, so a renamed or re-downloaded
+///   byte-identical shard still hits, and the key is independent of the
+///   shard's position in the file list.
+///
+/// A `1u8` domain marker separates this material from the whole-plan
+/// key's per-file `0u8` records, so a one-shard corpus never collides
+/// with its own whole-plan artifact key.
+pub fn shard_key(plan_render: &str, shard: &ShardIdentity) -> String {
+    let mut material = Vec::with_capacity(plan_render.len() + 32);
+    for line in plan_render.lines() {
+        let normalized = line
+            .strip_prefix("Ingest [")
+            .and_then(|rest| rest.find("] ").map(|end| &rest[end + 2..]));
+        match normalized {
+            Some(rest) => {
+                material.extend_from_slice(b"Ingest ");
+                material.extend_from_slice(rest.as_bytes());
+            }
+            None => material.extend_from_slice(line.as_bytes()),
+        }
+        material.push(b'\n');
+    }
+    material.push(1);
+    material.extend_from_slice(&shard.len.to_le_bytes());
+    material.extend_from_slice(&shard.digest.to_le_bytes());
+    let lo = xxh64(&material, 0);
+    let hi = xxh64(&material, PRIME64_5);
+    format!("{hi:016x}{lo:016x}")
+}
+
 pub fn fingerprint(plan_render: &str, files: &[std::path::PathBuf]) -> Result<PlanFingerprint> {
     let mut shards = Vec::with_capacity(files.len());
     let mut material = Vec::with_capacity(plan_render.len() + files.len() * 64);
@@ -248,6 +288,51 @@ mod tests {
         // A same-length content edit does.
         std::fs::write(&shard, b"{\"title\": \"b\"}\n").unwrap();
         assert_ne!(base.key(), fingerprint("plan-a", &files).unwrap().key());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_key_ignores_file_count_path_and_mtime_but_not_content_or_plan() {
+        let id = |path: &str, len: u64, digest: u64| ShardIdentity {
+            path: PathBuf::from(path),
+            len,
+            mtime_nanos: 7,
+            digest,
+        };
+        let base = shard_key("Ingest [3 files] project=[title]\nCollect\n", &id("/a/s0.json", 10, 99));
+        assert_eq!(base.len(), 32);
+        // Appending a shard only changes the Ingest line's file count —
+        // the per-shard key must not move.
+        assert_eq!(
+            base,
+            shard_key("Ingest [4 files] project=[title]\nCollect\n", &id("/a/s0.json", 10, 99))
+        );
+        // Path and mtime are not key bits (content-addressed identity).
+        assert_eq!(
+            base,
+            shard_key("Ingest [3 files] project=[title]\nCollect\n", &{
+                let mut other = id("/elsewhere/renamed.json", 10, 99);
+                other.mtime_nanos = 123_456;
+                other
+            })
+        );
+        // Content, length, projection and plan shape all are.
+        assert_ne!(base, shard_key("Ingest [3 files] project=[title]\nCollect\n", &id("/a/s0.json", 10, 98)));
+        assert_ne!(base, shard_key("Ingest [3 files] project=[title]\nCollect\n", &id("/a/s0.json", 11, 99)));
+        assert_ne!(base, shard_key("Ingest [3 files] project=[abstract]\nCollect\n", &id("/a/s0.json", 10, 99)));
+        assert_ne!(
+            base,
+            shard_key("Ingest [3 files] project=[title]\nDropNulls [title]\nCollect\n", &id("/a/s0.json", 10, 99))
+        );
+        // Distinct domain from the whole-plan key of a one-shard corpus.
+        let dir = std::env::temp_dir().join(format!("p3pc-shardkey-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let shard = dir.join("s.json");
+        std::fs::write(&shard, b"{\"title\": \"a\"}\n").unwrap();
+        let render = "Ingest [1 files] project=[title]\nCollect\n";
+        let fp = fingerprint(render, &[shard]).unwrap();
+        assert_ne!(fp.key(), shard_key(render, &fp.shards()[0]));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

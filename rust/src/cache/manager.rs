@@ -86,6 +86,16 @@ pub struct CacheStats {
     /// Fingerprint memo hits revalidated by a cheap stat-identity check
     /// instead of a re-digest.
     pub fp_stat_revalidations: u64,
+    /// Per-shard artifacts restored by an incremental run (reported by
+    /// the plan layer after a restored payload decoded cleanly).
+    pub shard_hits: u64,
+    /// Shards an incremental run had to execute (no usable per-shard
+    /// artifact). `shard_hits + shard_misses` sums to the shard count of
+    /// every incremental pass.
+    pub shard_misses: u64,
+    /// Per-shard artifacts written. Deliberately separate from `stores`,
+    /// which stays whole-plan-only (bench and test assertions pin it).
+    pub shard_stores: u64,
 }
 
 impl CacheStats {
@@ -103,6 +113,15 @@ pub struct LifetimeCounters {
     pub evictions: u64,
     /// Artifacts ever dropped as corrupt/unreadable.
     pub corrupt: u64,
+    /// Incremental-tier shards ever restored instead of executed.
+    /// Persisted (unlike the whole-plan hit counters) because the
+    /// incremental CI smoke asserts the hit/miss split from a *fresh*
+    /// `repro cache stats` process after the warm run exited.
+    pub shard_hits: u64,
+    /// Incremental-tier shards that had to execute.
+    pub shard_misses: u64,
+    /// Per-shard artifacts ever written.
+    pub shard_stores: u64,
 }
 
 /// One disk-tier entry, as listed by [`CacheManager::entries`].
@@ -328,7 +347,7 @@ impl CacheManager {
                     stats.misses += 1;
                     stats.corrupt += 1;
                 }
-                self.bump_lifetime(0, 1);
+                self.bump_lifetime(corrupt_delta());
                 None
             }
         }
@@ -389,7 +408,7 @@ impl CacheManager {
             self.stats.lock().unwrap().evictions += 1;
             evicted += 1;
         }
-        self.bump_lifetime(evicted, 0);
+        self.bump_lifetime(LifetimeCounters { evictions: evicted, ..Default::default() });
         Ok(())
     }
 
@@ -445,11 +464,86 @@ impl CacheManager {
         *self.stats.lock().unwrap()
     }
 
+    /// Load one per-shard payload (incremental tier, kind-1 artifacts;
+    /// see [`super::fingerprint::shard_key`]). Envelope-validated bytes,
+    /// or `None` when absent; a corrupt or stale-versioned artifact is
+    /// removed and counted (`CacheStats::corrupt`), never an error.
+    /// Disk-only — shard payloads are plan-layer bytes, not frames, so
+    /// the memo tier does not apply. Hit/miss accounting is reported by
+    /// the caller via [`Self::count_shard_probe`] once it knows whether
+    /// the payload also *decoded*, so the counters mean "shard restored"
+    /// / "shard executed", not "file existed".
+    pub fn get_shard(&self, key: &str) -> Option<Vec<u8>> {
+        let path = self.artifact_path(key);
+        if !path.exists() {
+            return None;
+        }
+        match artifact::load_raw(&path, key) {
+            Ok(bytes) => {
+                // Touch for LRU, same as the whole-plan tier.
+                let _ = std::fs::File::options()
+                    .write(true)
+                    .open(&path)
+                    .and_then(|f| f.set_modified(SystemTime::now()));
+                Some(bytes)
+            }
+            Err(_) => {
+                self.stats.lock().unwrap().corrupt += 1;
+                let _ = std::fs::remove_file(&path);
+                self.bump_lifetime(corrupt_delta());
+                None
+            }
+        }
+    }
+
+    /// Store one per-shard payload under `key` (atomic write, then the
+    /// shared LRU size cap — shard artifacts live in the same `.p3pc`
+    /// namespace as whole-plan ones, so eviction and `clear` cover both).
+    pub fn put_shard(&self, key: &str, payload: &[u8]) -> Result<()> {
+        artifact::save_raw(&self.artifact_path(key), key, payload)?;
+        self.stats.lock().unwrap().shard_stores += 1;
+        self.bump_lifetime(LifetimeCounters { shard_stores: 1, ..Default::default() });
+        self.evict(key)?;
+        Ok(())
+    }
+
+    /// Drop one shard artifact whose envelope verified but whose payload
+    /// failed to decode in the plan layer — counted corrupt, so the next
+    /// run re-executes and re-stores that shard.
+    pub fn remove_shard(&self, key: &str) {
+        let _ = std::fs::remove_file(self.artifact_path(key));
+        self.stats.lock().unwrap().corrupt += 1;
+        self.bump_lifetime(corrupt_delta());
+    }
+
+    /// Cheap existence probe for EXPLAIN's hit/miss shard split: does a
+    /// `.p3pc` file exist under this shard key? (The warm run revalidates
+    /// the full envelope; a stale or corrupt file renders as a hit here
+    /// and misses there.)
+    pub fn probe_shard(&self, key: &str) -> bool {
+        self.artifact_path(key).exists()
+    }
+
+    /// Record one incremental pass's restored/executed shard split
+    /// (reported by the plan layer — see [`Self::get_shard`]).
+    pub fn count_shard_probe(&self, hits: u64, misses: u64) {
+        {
+            let mut stats = self.stats.lock().unwrap();
+            stats.shard_hits += hits;
+            stats.shard_misses += misses;
+        }
+        self.bump_lifetime(LifetimeCounters {
+            shard_hits: hits,
+            shard_misses: misses,
+            ..Default::default()
+        });
+    }
+
     fn counters_path(&self) -> PathBuf {
         self.cfg.dir.join(COUNTERS_FILE)
     }
 
-    /// Lifetime eviction/corruption counts for this cache *directory*,
+    /// Lifetime eviction/corruption/shard counts for this cache *directory*,
     /// accumulated in the [`COUNTERS_FILE`] sidecar across processes —
     /// unlike [`Self::stats`], which restarts at zero with the process.
     pub fn lifetime_counters(&self) -> LifetimeCounters {
@@ -460,20 +554,31 @@ impl CacheManager {
     /// lock serializes writers within this process; a concurrent
     /// *process* can lose an increment, which is acceptable for
     /// advisory counters — and a write failure never fails the run.
-    fn bump_lifetime(&self, evictions: u64, corrupt: u64) {
-        if evictions == 0 && corrupt == 0 {
+    fn bump_lifetime(&self, delta: LifetimeCounters) {
+        if delta == LifetimeCounters::default() {
             return;
         }
         let _guard = self.stats.lock().unwrap();
         let path = self.counters_path();
         let mut c = read_lifetime(&path);
-        c.evictions += evictions;
-        c.corrupt += corrupt;
+        c.evictions += delta.evictions;
+        c.corrupt += delta.corrupt;
+        c.shard_hits += delta.shard_hits;
+        c.shard_misses += delta.shard_misses;
+        c.shard_stores += delta.shard_stores;
         let _ = std::fs::write(
             &path,
-            format!("evictions={}\ncorrupt={}\n", c.evictions, c.corrupt),
+            format!(
+                "evictions={}\ncorrupt={}\nshard_hits={}\nshard_misses={}\nshard_stores={}\n",
+                c.evictions, c.corrupt, c.shard_hits, c.shard_misses, c.shard_stores
+            ),
         );
     }
+}
+
+/// A lifetime delta with only `corrupt` set — the most common bump.
+fn corrupt_delta() -> LifetimeCounters {
+    LifetimeCounters { corrupt: 1, ..Default::default() }
 }
 
 /// Parse the lifetime sidecar (`key=value` lines); anything missing or
@@ -487,6 +592,9 @@ fn read_lifetime(path: &Path) -> LifetimeCounters {
         match k.trim() {
             "evictions" => c.evictions = v,
             "corrupt" => c.corrupt = v,
+            "shard_hits" => c.shard_hits = v,
+            "shard_misses" => c.shard_misses = v,
+            "shard_stores" => c.shard_stores = v,
             _ => {}
         }
     }
@@ -800,6 +908,45 @@ mod tests {
         assert!(m2.entries().unwrap().iter().all(|e| e.path.extension().unwrap() == "p3pc"));
         m2.clear().unwrap();
         assert_eq!(m2.lifetime_counters(), c);
+        std::fs::remove_dir_all(m.dir()).unwrap();
+    }
+
+    #[test]
+    fn shard_tier_stores_restores_and_drops_corrupt_payloads() {
+        let m = mgr("shard", 0, false);
+        let key = "00000000000000000000000000000abc";
+        assert!(m.get_shard(key).is_none());
+        assert!(!m.probe_shard(key));
+        m.put_shard(key, b"per-shard payload").unwrap();
+        assert!(m.probe_shard(key));
+        assert_eq!(m.get_shard(key).unwrap(), b"per-shard payload");
+        m.count_shard_probe(1, 0);
+        let s = m.stats();
+        assert_eq!((s.shard_hits, s.shard_misses, s.shard_stores), (1, 0, 1));
+        assert_eq!(s.stores, 0, "shard stores never count as whole-plan stores");
+        // Shard artifacts are ordinary cache content: listed and cleared.
+        assert_eq!(m.entries().unwrap().len(), 1);
+        // Corrupt payloads are dropped and counted, never an error.
+        let path = m.dir().join(format!("{key}.{ARTIFACT_EXT}"));
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 2]).unwrap();
+        assert!(m.get_shard(key).is_none());
+        assert!(!path.exists());
+        assert_eq!(m.stats().corrupt, 1);
+        // remove_shard covers the decoded-but-unusable path.
+        m.put_shard(key, b"payload 2").unwrap();
+        m.remove_shard(key);
+        assert!(!m.probe_shard(key));
+        assert_eq!(m.stats().corrupt, 2);
+        // Shard counters persist in the lifetime sidecar, so a fresh
+        // process (`repro cache stats` after a warm run) can report the
+        // restored/executed split. Pre-shard sidecars read back zeros.
+        let c = m.lifetime_counters();
+        assert_eq!((c.shard_hits, c.shard_misses, c.shard_stores), (1, 0, 2));
+        std::fs::write(m.dir().join(COUNTERS_FILE), "evictions=3\ncorrupt=1\n").unwrap();
+        let old = m.lifetime_counters();
+        assert_eq!((old.evictions, old.corrupt), (3, 1));
+        assert_eq!((old.shard_hits, old.shard_misses, old.shard_stores), (0, 0, 0));
         std::fs::remove_dir_all(m.dir()).unwrap();
     }
 

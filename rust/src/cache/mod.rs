@@ -37,7 +37,9 @@ pub mod fingerprint;
 mod manager;
 
 pub use artifact::CachedFrame;
-pub use fingerprint::{fingerprint, shard_identity, xxh64, PlanFingerprint, ShardIdentity};
+pub use fingerprint::{
+    fingerprint, shard_identity, shard_key, xxh64, PlanFingerprint, ShardIdentity,
+};
 pub use manager::{
     CacheConfig, CacheEntry, CacheManager, CacheStats, LifetimeCounters, ARTIFACT_EXT,
     COUNTERS_FILE, DEFAULT_MAX_BYTES, DEFAULT_MEMO_MAX_BYTES,
@@ -60,7 +62,10 @@ pub fn plan_files(plan: &LogicalPlan) -> &[PathBuf] {
 /// cache manager is present and holds a valid artifact for this exact
 /// plan + input state, the physical section renders the restore path —
 /// `[cache hit <key>]` — instead of a topology that will not run. On a
-/// miss (or with no cache) the full topology renders as before.
+/// whole-plan miss with per-shard artifacts available (a grown corpus),
+/// a `CacheRestore [k of n shards hit]` block renders the hit/miss
+/// split ahead of the topology that will execute the misses. On a full
+/// miss (or with no cache) the plain topology renders as before.
 ///
 /// The fingerprint is derived through the manager's in-process memo
 /// ([`CacheManager::fingerprint_for`]), so the driver run that follows
@@ -93,6 +98,29 @@ pub fn explain_with_cache(
                     fp.key(),
                     mgr.dir().join(format!("{}.{ARTIFACT_EXT}", fp.key())).display(),
                 ));
+            }
+            // Whole-plan miss: the per-shard tier may still cover part
+            // of the run (see `plan::incremental`). Render the split
+            // only when at least one shard would restore — a fully cold
+            // probe explains exactly like the cache-less path.
+            if crate::plan::incremental_eligible(&optimized) {
+                let keys = crate::plan::incremental_shard_keys(&optimized, &fp);
+                let probed: Vec<bool> = keys.iter().map(|k| mgr.probe_shard(k)).collect();
+                let hits = probed.iter().filter(|&&h| h).count();
+                if hits > 0 {
+                    let full = crate::plan::explain_with(plan, workers, executor)?;
+                    let marker = "== Physical Plan ==\n";
+                    if let Some(pos) = full.find(marker) {
+                        let at = pos + marker.len();
+                        let mut block =
+                            format!("CacheRestore [{hits} of {} shards hit]\n", keys.len());
+                        for (i, (key, hit)) in keys.iter().zip(&probed).enumerate() {
+                            let state = if *hit { "hit " } else { "miss" };
+                            block.push_str(&format!("  shard {i}: {state} {key}\n"));
+                        }
+                        return Ok(format!("{}{}{}", &full[..at], block, &full[at..]));
+                    }
+                }
             }
         }
     }
@@ -133,6 +161,36 @@ mod tests {
         // No cache manager: identical to the plain EXPLAIN.
         let plain = explain_with_cache(&plan, 2, &ExecutorKind::Fused, None).unwrap();
         assert_eq!(plain, crate::plan::explain(&plan, 2).unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn explain_renders_the_shard_split_after_a_corpus_grows() {
+        let dir = std::env::temp_dir().join(format!("p3pc-explain-incr-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        generate_corpus(&CorpusSpec::tiny(17), &dir).unwrap();
+        let files = list_shards(&dir).unwrap();
+        assert!(files.len() >= 2);
+        let cache = CacheManager::open(dir.join("cache")).unwrap();
+
+        // Warm the shard tier over the initial corpus (cold incremental
+        // run stores per-shard artifacts, whole-plan artifact withheld).
+        let initial = files[..files.len() - 1].to_vec();
+        let plan1 = case_study_plan(&initial, "title", "abstract").optimize();
+        let fp1 = cache.fingerprint_for(&plan1.render(), &initial).unwrap();
+        crate::plan::execute_incremental(&plan1, 2, &ExecutorKind::Fused, &cache, &fp1)
+            .unwrap()
+            .expect("eligible");
+
+        // Grown corpus: whole-plan miss, but the untouched shards hit.
+        let plan2 = case_study_plan(&files, "title", "abstract");
+        let grown = explain_with_cache(&plan2, 2, &ExecutorKind::Fused, Some(&cache)).unwrap();
+        let split = format!("CacheRestore [{} of {} shards hit]", initial.len(), files.len());
+        assert!(grown.contains(&split), "{grown}");
+        assert!(grown.contains(&format!("shard {}: miss", files.len() - 1)), "{grown}");
+        assert!(grown.contains("shard 0: hit"), "{grown}");
+        // The topology that will execute the misses still renders.
+        assert!(grown.contains("SinglePass"), "{grown}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

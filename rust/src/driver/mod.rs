@@ -65,9 +65,12 @@ impl PreprocessResult {
         self.times.secs(CACHE_RESTORE)
     }
 
-    /// Whether this result was restored from the plan cache rather than
-    /// executed (the restore stage exists only on a hit — keyed on
-    /// presence, not magnitude, so a sub-tick restore still counts).
+    /// Whether this result was restored *whole* from the plan cache
+    /// rather than executed (the bare restore stage exists only on a
+    /// whole-plan hit — keyed on presence, not magnitude, so a sub-tick
+    /// restore still counts). A per-shard incremental run executed
+    /// something, so its `cache_restore(k of n shards)` stage
+    /// deliberately does not match.
     pub fn from_cache(&self) -> bool {
         self.times.stages().any(|(stage, _)| stage == CACHE_RESTORE)
     }
@@ -130,6 +133,14 @@ pub struct DriverOptions {
     /// lowers into the plan's two-pass physical strategy — no staged
     /// `Pipeline::fit` fallback. Ignored by the CA driver.
     pub features: bool,
+    /// On a whole-plan cache miss, try the per-shard incremental path
+    /// ([`crate::plan::execute_incremental`]) before a full execute:
+    /// shards cached by an earlier run over a smaller corpus restore,
+    /// only new/changed shards execute. `true` by default — it is a
+    /// no-op without [`DriverOptions::cache`], and ineligible plans
+    /// (e.g. `--sample`) fall through to the normal execute on their
+    /// own. `--no-incremental` forces `false`.
+    pub incremental: bool,
 }
 
 impl Default for DriverOptions {
@@ -143,6 +154,7 @@ impl Default for DriverOptions {
             sample: None,
             limit: None,
             features: false,
+            incremental: true,
         }
     }
 }
@@ -202,7 +214,35 @@ pub fn run_p3sapp(files: &[PathBuf], opts: &DriverOptions) -> Result<PreprocessR
             if let Some(hit) = hit {
                 return Ok(count_rows(hit.into()));
             }
-            let out = timed_execute(&plan, opts)?;
+            // Whole-plan miss: the per-shard tier may still hold most
+            // of the work (a grown corpus re-keys the whole-plan
+            // fingerprint but not the untouched shards). Any cache-side
+            // failure falls back to the normal execute — like the
+            // whole-plan store, the cache must never fail a run.
+            let incr = if opts.incremental {
+                let _sp = obs::span("incremental_execute", "driver");
+                match crate::plan::execute_incremental(
+                    &plan,
+                    opts.workers,
+                    &opts.executor,
+                    cache,
+                    &fp,
+                ) {
+                    Ok(out) => out,
+                    Err(e) => {
+                        eprintln!(
+                            "[cache] incremental execute failed (falling back to full run): {e:#}"
+                        );
+                        None
+                    }
+                }
+            } else {
+                None
+            };
+            let out = match incr {
+                Some(out) => out,
+                None => timed_execute(&plan, opts)?,
+            };
             {
                 let _sp = obs::span("cache_store", "driver");
                 if let Err(e) = cache.put(&fp, &out) {
@@ -457,6 +497,63 @@ mod tests {
         )
         .unwrap();
         assert!(!plain.from_cache(), "featured and plain plans must not collide");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn incremental_warm_append_executes_only_the_new_shard() {
+        let (dir, files) = corpus("incrdrv");
+        let cache = Arc::new(CacheManager::open(dir.join("plan-cache")).unwrap());
+        let initial = files[..files.len() - 1].to_vec();
+        let opts = DriverOptions {
+            workers: 2,
+            cache: Some(Arc::clone(&cache)),
+            ..Default::default()
+        };
+
+        // Cold over the initial corpus: every shard misses and stores.
+        let cold = run_p3sapp(&initial, &opts).unwrap();
+        assert!(!cold.from_cache());
+        assert_eq!(cache.stats().shard_misses, initial.len() as u64);
+        assert_eq!(cache.stats().shard_stores, initial.len() as u64);
+
+        // Grown corpus: whole-plan misses, but only the appended shard
+        // is executed — the rest restore from the shard tier.
+        let grown = run_p3sapp(&files, &opts).unwrap();
+        let stats = cache.stats();
+        assert_eq!(stats.shard_hits, initial.len() as u64);
+        assert_eq!(stats.shard_misses, initial.len() as u64 + 1);
+        assert!(!grown.from_cache(), "an incremental run is not a whole-plan hit");
+        assert!(
+            grown.times.stages().any(|(st, _)| st
+                == format!("{CACHE_RESTORE}({} of {} shards)", initial.len(), files.len())),
+            "restore stage must pin the hit/miss split"
+        );
+        let plain =
+            run_p3sapp(&files, &DriverOptions { workers: 2, ..Default::default() }).unwrap();
+        assert_eq!(grown.frame, plain.frame);
+        assert_eq!(grown.rows_ingested, plain.rows_ingested);
+
+        // --no-incremental: the shard tier is never consulted. A fresh
+        // manager over the same directory (empty memo) with the grown
+        // whole-plan artifact deleted forces the full-execute path.
+        let render = opts.build_plan(&files).optimize().render();
+        let key = crate::cache::fingerprint(&render, &files).unwrap().key().to_string();
+        std::fs::remove_file(
+            dir.join("plan-cache").join(format!("{key}.{}", crate::cache::ARTIFACT_EXT)),
+        )
+        .unwrap();
+        let cache2 = Arc::new(CacheManager::open(dir.join("plan-cache")).unwrap());
+        let off = DriverOptions {
+            incremental: false,
+            cache: Some(Arc::clone(&cache2)),
+            ..opts.clone()
+        };
+        let full = run_p3sapp(&files, &off).unwrap();
+        assert!(!full.from_cache());
+        assert_eq!(full.frame, plain.frame);
+        assert_eq!(cache2.stats().shard_hits, 0);
+        assert_eq!(cache2.stats().shard_misses, 0);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

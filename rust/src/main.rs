@@ -138,6 +138,10 @@ fn usage() {
          \x20                 fingerprint-identical preprocessed frame instead\n\
          \x20                 of re-executing (report repeats, train/infer)\n\
          \x20 --no-cache      ignore --cache-dir (always execute)\n\
+         \x20 --no-incremental\n\
+         \x20                 disable the per-shard incremental tier: on a\n\
+         \x20                 whole-plan miss, execute the full corpus instead\n\
+         \x20                 of restoring unchanged shards from --cache-dir\n\
          \x20 --sample F      keep each input record with probability F —\n\
          \x20                 a deterministic positional sample; applies to\n\
          \x20                 every P3SAPP run (preprocess/explain/train/\n\
@@ -259,6 +263,7 @@ struct CommonOpts {
     workers: usize,
     executor: p3sapp::plan::ExecutorKind,
     cache: Option<Arc<CacheManager>>,
+    incremental: bool,
     sample: Option<(f64, u64)>,
     limit: Option<usize>,
 }
@@ -269,6 +274,7 @@ fn common_opts(args: &Args, cfg: &AppConfig) -> Result<CommonOpts> {
         workers,
         executor: exec_opts(args, workers)?,
         cache: cache_opt(args)?,
+        incremental: !args.flag("no-incremental"),
         sample: sample_opt(args)?,
         limit: match args.get("limit") {
             Some(_) => Some(args.get_usize("limit", 0)?),
@@ -408,6 +414,7 @@ fn driver_opts(args: &Args, cfg: &AppConfig) -> Result<DriverOptions> {
         workers: common.workers,
         executor: common.executor,
         cache: common.cache,
+        incremental: common.incremental,
         sample: common.sample,
         limit: common.limit,
         features: args.flag("features"),
@@ -756,8 +763,10 @@ fn cmd_report(args: &Args) -> Result<()> {
 /// `repro cache stats|clear --cache-dir D [--json]` — inspect or empty
 /// the persistent plan cache without running any preprocessing. `stats`
 /// reports the per-artifact disk tier plus the directory's lifetime
-/// eviction/corruption counts (the `counters.v1` sidecar); `--json`
-/// emits the same data machine-readably.
+/// eviction/corruption counts and incremental-tier shard split
+/// (the `counters.v1` sidecar); `--json` emits the same data
+/// machine-readably — the CI incremental smoke asserts the
+/// `shard_hits`/`shard_misses` fields from it.
 fn cmd_cache(args: &Args) -> Result<()> {
     let dir = args
         .get("cache-dir")
@@ -798,11 +807,15 @@ fn cmd_cache(args: &Args) -> Result<()> {
                     .collect();
                 println!(
                     "{{\"dir\":\"{}\",\"artifacts\":{},\"total_bytes\":{total},\
-                     \"evictions\":{},\"corrupt\":{},\"entries\":[{}]}}",
+                     \"evictions\":{},\"corrupt\":{},\"shard_hits\":{},\
+                     \"shard_misses\":{},\"shard_stores\":{},\"entries\":[{}]}}",
                     json_escape(dir),
                     entries.len(),
                     lifetime.evictions,
                     lifetime.corrupt,
+                    lifetime.shard_hits,
+                    lifetime.shard_misses,
+                    lifetime.shard_stores,
                     items.join(",")
                 );
                 return Ok(());
@@ -824,6 +837,10 @@ fn cmd_cache(args: &Args) -> Result<()> {
             println!(
                 "lifetime: {} evicted, {} corrupt dropped",
                 lifetime.evictions, lifetime.corrupt
+            );
+            println!(
+                "incremental: {} shards restored, {} executed, {} stored",
+                lifetime.shard_hits, lifetime.shard_misses, lifetime.shard_stores
             );
         }
         "clear" => {
@@ -984,13 +1001,17 @@ fn print_serve_reply(reply: p3sapp::serve::Reply) -> Result<()> {
             match &s.cache {
                 Some(c) => println!(
                     "cache              mem_hits={} disk_hits={} misses={} stores={} \
-                     fp_digest_shards={} fp_stat_revalidations={}",
+                     fp_digest_shards={} fp_stat_revalidations={} \
+                     shard_hits={} shard_misses={} shard_stores={}",
                     c.mem_hits,
                     c.disk_hits,
                     c.misses,
                     c.stores,
                     c.fp_digest_shards,
-                    c.fp_stat_revalidations
+                    c.fp_stat_revalidations,
+                    c.shard_hits,
+                    c.shard_misses,
+                    c.shard_stores
                 ),
                 None => println!("cache              disabled"),
             }

@@ -1,0 +1,580 @@
+//! Per-shard incremental plan cache — warm re-runs over a *grown*
+//! corpus execute only the shards that changed.
+//!
+//! The whole-plan cache ([`crate::cache`]) collapses a byte-identical
+//! re-run to one deserialization, but the paper's workload is a corpus
+//! that *grows*: each arXiv ingest appends shard files while the
+//! existing ones stay untouched. A single appended shard changes the
+//! plan fingerprint, and the whole-plan tier re-preprocesses everything.
+//! This module re-keys cached work at shard granularity — one `P3PC`
+//! payload per (plan fingerprint × shard content digest), see
+//! [`crate::cache::fingerprint::shard_key`] — so a warm run restores
+//! the per-shard results it has, executes only the miss shards through
+//! the selected [`ExecutorKind`], and re-runs the driver-side merge
+//! over the mixed restored + fresh partitions.
+//!
+//! Correctness hinges on what a cached payload carries: not the shard's
+//! *final* rows but its full [`PartResult`] — the partition plus every
+//! `Distinct` slot's hashed keys and row-provenance ids, and the
+//! stage counters. Dedup provenance crossing serialization is what
+//! keeps cross-shard `Distinct` exact: the merge can still register a
+//! first occurrence inside a restored shard and drop its duplicate in
+//! a fresh one (or vice versa), byte-identical to a cold full run.
+//!
+//! Estimator-bearing (two-pass) plans cache their **pass-1 prefix**
+//! results instead — pass-2 rows depend on the fitted model, which
+//! depends on every shard, so they can never be reused across corpus
+//! states. Each shard's payload carries the prefix `PartResult` plus,
+//! when the estimator supports it, its order-insensitive
+//! [`FitAccumulator`](crate::pipeline::FitAccumulator) partial. A warm
+//! run merges partials (restored + fresh) to re-fit the model — `Idf`
+//! document frequencies fold per shard — then *resumes* each prefix
+//! result through the fitted stage and suffix ops
+//! ([`PhysicalPlan::resume_ops`]) rather than re-parsing raw bytes.
+//!
+//! Not eligible (the driver falls back to a normal execute): plans with
+//! a `Sample` op (the positional keep-decision depends on the shard
+//! *index*, while shard keys are content-addressed and index-free) and
+//! empty file lists. Restores are reported honestly: the run gains a
+//! `cache_restore(k of n shards)` stage and the manager's
+//! `shard_hits`/`shard_misses` counters move, so `p3sapp cache stats`
+//! and EXPLAIN pin exactly how much work was skipped.
+
+use super::logical::LogicalPlan;
+use super::physical::{
+    lower, partial_fit_available, FitSink, KeySlot, Merger, PartResult, Phases, PhysicalPlan,
+};
+use super::process::ProcessExecutor;
+use super::remote::RemoteExecutor;
+use super::stream::StreamExecutor;
+use super::{ExecutorKind, PlanOutput};
+use crate::cache::artifact::{decode_cells, dtype_code, dtype_from, encode_cells, Cursor};
+use crate::cache::{shard_key, CacheManager, PlanFingerprint};
+use crate::driver::{CACHE_RESTORE, CLEANING};
+use crate::engine::Executor;
+use crate::frame::Partition;
+use crate::obs;
+use crate::Result;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Whether `plan` (already optimized) can run through the incremental
+/// path at all. Shared with cache-aware EXPLAIN so the topology it
+/// renders is the one the driver will pick.
+pub fn incremental_eligible(plan: &LogicalPlan) -> bool {
+    match lower(plan) {
+        Ok(phys) => !phys.files().is_empty() && !phys.has_sample(),
+        Err(_) => false,
+    }
+}
+
+/// The per-shard cache keys of `plan` over the fingerprinted shard set,
+/// in shard order. Public for EXPLAIN and the CLI's probe paths.
+pub fn incremental_shard_keys(plan: &LogicalPlan, fp: &PlanFingerprint) -> Vec<String> {
+    let render = plan.render();
+    fp.shards().iter().map(|s| shard_key(&render, s)).collect()
+}
+
+/// Execute `plan` (already optimized) through the per-shard cache:
+/// restore hit shards, execute only miss shards on `executor`, merge.
+/// Returns `Ok(None)` when the plan is not eligible — the caller falls
+/// back to a normal execute. Fresh shard results are stored as they
+/// complete, so even an all-miss (cold) pass warms the shard tier.
+///
+/// `fp` must be the fingerprint of exactly `plan` over its own files —
+/// the driver computes it for the whole-plan probe and hands it down so
+/// the corpus is digested once per run.
+pub fn execute_incremental(
+    plan: &LogicalPlan,
+    workers: usize,
+    executor: &ExecutorKind,
+    cache: &CacheManager,
+    fp: &PlanFingerprint,
+) -> Result<Option<PlanOutput>> {
+    let phys = lower(plan)?;
+    if phys.files().is_empty() || phys.has_sample() {
+        return Ok(None);
+    }
+    anyhow::ensure!(
+        fp.shards().len() == phys.files().len(),
+        "fingerprint covers {} shards but the plan ingests {}",
+        fp.shards().len(),
+        phys.files().len()
+    );
+    let keys = incremental_shard_keys(plan, fp);
+    let out = if phys.two_pass().is_some() {
+        run_two_pass(&phys, &keys, workers, executor, cache)?
+    } else {
+        run_single_pass(&phys, &keys, workers, executor, cache)?
+    };
+    Ok(Some(out))
+}
+
+/// Single-pass plans: one cached payload per shard is the shard's final
+/// `PartResult`; a warm run merges restored and fresh results exactly
+/// as the cold merge would.
+fn run_single_pass(
+    phys: &PhysicalPlan,
+    keys: &[String],
+    workers: usize,
+    executor: &ExecutorKind,
+    cache: &CacheManager,
+) -> Result<PlanOutput> {
+    let n = keys.len();
+    let t_restore = Instant::now();
+    let mut slots: Vec<Option<PartResult>> = keys
+        .iter()
+        .enumerate()
+        .map(|(i, key)| restore_shard(cache, key, i, false).map(|(r, _)| r))
+        .collect();
+    let restore_wall = t_restore.elapsed();
+    let miss_idx: Vec<usize> =
+        slots.iter().enumerate().filter(|(_, s)| s.is_none()).map(|(i, _)| i).collect();
+    let hits = n - miss_idx.len();
+
+    let t_pass = Instant::now();
+    if !miss_idx.is_empty() {
+        let sub = phys.with_files(miss_idx.iter().map(|&i| phys.files()[i].clone()).collect());
+        let mut j = 0usize;
+        run_miss_shards(&sub, workers, executor, &mut |r| {
+            let gi = miss_idx[j];
+            j += 1;
+            cache.put_shard(&keys[gi], &encode_payload(&r, None))?;
+            slots[gi] = Some(r);
+            Ok(())
+        })?;
+        anyhow::ensure!(
+            j == miss_idx.len(),
+            "executor delivered {j} of {} miss shards",
+            miss_idx.len()
+        );
+    }
+    let pass_wall = t_pass.elapsed();
+
+    let mut merger = Merger::new(phys.output_schema().clone(), phys.n_distinct(), phys.limit_n());
+    for s in slots {
+        merger.push(s.expect("every shard was restored or executed"));
+    }
+    let mut out = merger.finish(pass_wall, Duration::ZERO);
+    finish_restore(&mut out, cache, hits, n, restore_wall);
+    Ok(out)
+}
+
+/// Two-pass plans: the cached payload per shard is its pass-1 prefix
+/// `PartResult` plus (when available) the estimator's partial; a warm
+/// run re-fits from merged partials and resumes every prefix result
+/// through the fitted stage + suffix.
+fn run_two_pass(
+    phys: &PhysicalPlan,
+    keys: &[String],
+    workers: usize,
+    executor: &ExecutorKind,
+    cache: &CacheManager,
+) -> Result<PlanOutput> {
+    let tp = phys.two_pass().expect("caller checked is_two_pass");
+    let prefix = phys.prefix_plan(tp);
+    let partials_ok = partial_fit_available(tp, &prefix);
+    let n = keys.len();
+
+    let t_restore = Instant::now();
+    let mut slots: Vec<Option<(PartResult, Option<Vec<u8>>)>> = keys
+        .iter()
+        .enumerate()
+        .map(|(i, key)| restore_shard(cache, key, i, partials_ok))
+        .collect();
+    let restore_wall = t_restore.elapsed();
+    let miss_idx: Vec<usize> =
+        slots.iter().enumerate().filter(|(_, s)| s.is_none()).map(|(i, _)| i).collect();
+    let hits = n - miss_idx.len();
+
+    let t_pass = Instant::now();
+    if !miss_idx.is_empty() {
+        let sub = prefix.with_files(miss_idx.iter().map(|&i| phys.files()[i].clone()).collect());
+        let mut j = 0usize;
+        run_miss_shards(&sub, workers, executor, &mut |r| {
+            let gi = miss_idx[j];
+            j += 1;
+            let partial = if partials_ok {
+                let mut acc = tp.est.accumulator().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "estimator {} lost its accumulator between lower and execute",
+                        tp.est.name()
+                    )
+                })?;
+                if r.part.num_rows() > 0 {
+                    acc.accumulate(r.part.column(tp.in_idx))?;
+                }
+                acc.partial()
+            } else {
+                None
+            };
+            cache.put_shard(&keys[gi], &encode_payload(&r, partial.as_deref()))?;
+            slots[gi] = Some((r, partial));
+            Ok(())
+        })?;
+        anyhow::ensure!(
+            j == miss_idx.len(),
+            "executor delivered {j} of {} miss shards",
+            miss_idx.len()
+        );
+    }
+
+    // Re-fit over all shards. The partial fold never applies when the
+    // prefix carries a pending dedup or limit, so when it does not
+    // apply the `FitSink` fold re-runs the exact stream-order admission
+    // the cold fit pass used — over clones, because the originals
+    // continue into pass 2.
+    let t_fit = Instant::now();
+    let fitted = if partials_ok {
+        let mut acc = tp.est.accumulator().ok_or_else(|| {
+            anyhow::anyhow!(
+                "estimator {} lost its accumulator between lower and execute",
+                tp.est.name()
+            )
+        })?;
+        for s in &slots {
+            let (_, partial) = s.as_ref().expect("every shard was restored or executed");
+            let bytes = partial.as_ref().expect("partial availability is plan-determined");
+            acc.merge_partial(bytes)?;
+        }
+        acc.finish()?
+    } else {
+        let mut sink = FitSink::new(tp, &prefix)?;
+        for s in &slots {
+            let (r, _) = s.as_ref().expect("every shard was restored or executed");
+            sink.push(r.clone())?;
+        }
+        sink.finish()?
+    };
+    let fit_wall = t_fit.elapsed();
+
+    // Pass 2: resume every prefix result through the fitted stage and
+    // the suffix ops — no shard is re-parsed from raw bytes.
+    let full = phys.with_model(tp, fitted);
+    let start = tp.prefix_len;
+    let jobs: Vec<(usize, PartResult)> = slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| (i, s.expect("every shard was restored or executed").0))
+        .collect();
+    let exec = Executor::new(workers);
+    let resumed = exec.map_items(jobs, |(i, r)| {
+        let _lane = obs::lane_scope(obs::pool_lane());
+        full.resume_ops(r, i, start)
+    });
+    let pass_wall = t_pass.elapsed();
+
+    let mut merger = Merger::new(phys.output_schema().clone(), phys.n_distinct(), phys.limit_n());
+    for r in resumed {
+        merger.push(r);
+    }
+    let mut out = merger.finish(pass_wall, Duration::ZERO);
+    // Same attribution as the cold two-pass: fitting is cleaning work.
+    out.times.add(CLEANING, fit_wall);
+    finish_restore(&mut out, cache, hits, n, restore_wall);
+    Ok(out)
+}
+
+/// Probe + restore one shard payload. `None` on a miss, a corrupt or
+/// undecodable payload (removed — next run is a clean miss), or a
+/// payload missing a fit partial the plan requires.
+fn restore_shard(
+    cache: &CacheManager,
+    key: &str,
+    shard: usize,
+    want_partial: bool,
+) -> Option<(PartResult, Option<Vec<u8>>)> {
+    let bytes = cache.get_shard(key)?;
+    let mut sp = obs::span("restore shard", "cache");
+    if sp.active() {
+        sp.arg("shard", shard as u64);
+        sp.arg("bytes", bytes.len() as u64);
+    }
+    match decode_payload(&bytes) {
+        Ok((r, partial)) => {
+            if want_partial && partial.is_none() {
+                // A payload for this exact plan without the partial its
+                // estimator supports can only be damage — drop it.
+                cache.remove_shard(key);
+                return None;
+            }
+            Some((r, partial))
+        }
+        Err(_) => {
+            cache.remove_shard(key);
+            None
+        }
+    }
+}
+
+/// Run the miss sub-plan's shards through the selected executor,
+/// delivering each shard's `PartResult` to `sink` in (sub-plan) shard
+/// order. Every route keeps the shard file as the unit of work — the
+/// re-chunk fallbacks would break the 1:1 shard↔artifact mapping.
+fn run_miss_shards(
+    sub: &PhysicalPlan,
+    workers: usize,
+    executor: &ExecutorKind,
+    sink: &mut dyn FnMut(PartResult) -> Result<()>,
+) -> Result<()> {
+    match executor {
+        ExecutorKind::Fused => {
+            for r in sub.collect_shard_results(workers)? {
+                sink(r)?;
+            }
+            Ok(())
+        }
+        ExecutorKind::Stream(opts) => StreamExecutor::new(opts.clone()).run_shards(sub, sink),
+        ExecutorKind::Process(_) | ExecutorKind::Pool(_) => {
+            let opts = executor.process_options().expect("process-backed kind");
+            ProcessExecutor::new(opts).run_shards(sub, sink)
+        }
+        ExecutorKind::Remote(opts) => RemoteExecutor::new(opts.clone()).run(sub, sink),
+    }
+}
+
+/// Book-keeping shared by both strategies: report the restore as its
+/// own stage (only when something was restored) and move the manager's
+/// shard counters so `cache stats` pins the split.
+fn finish_restore(
+    out: &mut PlanOutput,
+    cache: &CacheManager,
+    hits: usize,
+    n: usize,
+    restore_wall: Duration,
+) {
+    if hits > 0 {
+        out.times.add(&format!("{CACHE_RESTORE}({hits} of {n} shards)"), restore_wall);
+    }
+    cache.count_shard_probe(hits as u64, (n - hits) as u64);
+}
+
+// --- per-shard payload codec -------------------------------------------
+//
+// The bytes inside a kind-1 `P3PC` artifact (see [`crate::cache::artifact`]
+// for the envelope). Little-endian throughout:
+//
+// | field        | encoding                                            |
+// |--------------|-----------------------------------------------------|
+// | n_rows       | u64                                                 |
+// | n_cols       | u32                                                 |
+// | columns      | per column: dtype u8 + cells (artifact cell codec)  |
+// | counters     | 5 × u64 (ingested, nulls, empties, sampled, limited)|
+// | n_slots      | u32                                                 |
+// | slots        | per slot: n u64, n × u128 keys, n × u32 ids         |
+// | final_ids    | u8 tag (0/1); if 1: n u64 + n × u32                 |
+// | fit partial  | u8 tag (0/1); if 1: len u64 + bytes                 |
+//
+// Worker phase spans are deliberately not persisted: a restored shard
+// did no work this run, so its phases are zero and the proportional
+// stage attribution only covers shards that actually executed.
+
+fn encode_payload(r: &PartResult, partial: Option<&[u8]>) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&(r.part.num_rows() as u64).to_le_bytes());
+    buf.extend_from_slice(&(r.part.num_columns() as u32).to_le_bytes());
+    for col in r.part.columns() {
+        buf.push(dtype_code(col.dtype()));
+        encode_cells(&mut buf, col);
+    }
+    for v in [r.rows_ingested, r.nulls_dropped, r.empties_dropped, r.sampled_out, r.limited_out] {
+        buf.extend_from_slice(&(v as u64).to_le_bytes());
+    }
+    buf.extend_from_slice(&(r.slots.len() as u32).to_le_bytes());
+    for slot in &r.slots {
+        buf.extend_from_slice(&(slot.keys.len() as u64).to_le_bytes());
+        for k in &slot.keys {
+            buf.extend_from_slice(&k.to_le_bytes());
+        }
+        for id in &slot.ids {
+            buf.extend_from_slice(&id.to_le_bytes());
+        }
+    }
+    match &r.final_ids {
+        None => buf.push(0),
+        Some(ids) => {
+            buf.push(1);
+            buf.extend_from_slice(&(ids.len() as u64).to_le_bytes());
+            for id in ids {
+                buf.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+    }
+    match partial {
+        None => buf.push(0),
+        Some(bytes) => {
+            buf.push(1);
+            buf.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            buf.extend_from_slice(bytes);
+        }
+    }
+    buf
+}
+
+fn decode_payload(bytes: &[u8]) -> Result<(PartResult, Option<Vec<u8>>)> {
+    let mut cur = Cursor::new(bytes, 0);
+    let n_rows = cur.u64()? as usize;
+    let n_cols = cur.u32()? as usize;
+    let mut cols = Vec::with_capacity(n_cols);
+    for _ in 0..n_cols {
+        let dtype = dtype_from(cur.u8()?)?;
+        cols.push(decode_cells(&mut cur, dtype, n_rows)?);
+    }
+    let rows_ingested = cur.u64()? as usize;
+    let nulls_dropped = cur.u64()? as usize;
+    let empties_dropped = cur.u64()? as usize;
+    let sampled_out = cur.u64()? as usize;
+    let limited_out = cur.u64()? as usize;
+    let n_slots = cur.u32()? as usize;
+    let mut slots = Vec::with_capacity(n_slots);
+    for _ in 0..n_slots {
+        let n = cur.u64()? as usize;
+        let mut keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b: [u8; 16] = cur.take(16)?.try_into().expect("take(16) is 16 bytes");
+            keys.push(u128::from_le_bytes(b));
+        }
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            ids.push(cur.u32()?);
+        }
+        slots.push(KeySlot { keys, ids });
+    }
+    let final_ids = match cur.u8()? {
+        0 => None,
+        1 => {
+            let n = cur.u64()? as usize;
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(cur.u32()?);
+            }
+            Some(ids)
+        }
+        t => anyhow::bail!("bad final_ids tag {t} in shard payload"),
+    };
+    let partial = match cur.u8()? {
+        0 => None,
+        1 => {
+            let len = cur.u64()? as usize;
+            Some(cur.take(len)?.to_vec())
+        }
+        t => anyhow::bail!("bad fit-partial tag {t} in shard payload"),
+    };
+    anyhow::ensure!(cur.remaining() == 0, "trailing bytes in shard payload");
+    let r = PartResult {
+        part: Partition::new(cols),
+        slots,
+        final_ids,
+        rows_ingested,
+        nulls_dropped,
+        empties_dropped,
+        sampled_out,
+        limited_out,
+        phases: Phases::default(),
+    };
+    Ok((r, partial))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::fingerprint;
+    use crate::corpus::{generate_corpus, CorpusSpec};
+    use crate::ingest::list_shards;
+    use crate::pipeline::presets::case_study_plan;
+
+    fn corpus(name: &str) -> (PathBuf, Vec<PathBuf>) {
+        let dir =
+            std::env::temp_dir().join(format!("p3sapp-incr-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        generate_corpus(&CorpusSpec::tiny(31), &dir).unwrap();
+        let files = list_shards(&dir).unwrap();
+        assert!(files.len() >= 3, "need multiple shards, got {}", files.len());
+        (dir, files)
+    }
+
+    #[test]
+    fn payload_roundtrips_real_part_results() {
+        let (dir, files) = corpus("codec");
+        let plan = case_study_plan(&files, "title", "abstract").optimize();
+        let phys = lower(&plan).unwrap();
+        for r in phys.collect_shard_results(2).unwrap() {
+            let bytes = encode_payload(&r, Some(b"partial-state"));
+            let (back, partial) = decode_payload(&bytes).unwrap();
+            assert_eq!(back.part, r.part);
+            assert_eq!(back.rows_ingested, r.rows_ingested);
+            assert_eq!(back.nulls_dropped, r.nulls_dropped);
+            assert_eq!(back.empties_dropped, r.empties_dropped);
+            assert_eq!(back.sampled_out, r.sampled_out);
+            assert_eq!(back.limited_out, r.limited_out);
+            assert_eq!(back.final_ids, r.final_ids);
+            assert_eq!(back.slots.len(), r.slots.len());
+            for (a, b) in back.slots.iter().zip(&r.slots) {
+                assert_eq!(a.keys, b.keys);
+                assert_eq!(a.ids, b.ids);
+            }
+            assert_eq!(partial.as_deref(), Some(&b"partial-state"[..]));
+
+            let (_, none) = decode_payload(&encode_payload(&r, None)).unwrap();
+            assert!(none.is_none());
+            // Truncation anywhere must error, never panic or misread.
+            assert!(decode_payload(&bytes[..bytes.len() - 1]).is_err());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn warm_append_executes_only_the_new_shard_and_matches_cold() {
+        let (dir, files) = corpus("append");
+        let cache = CacheManager::open(dir.join("cache")).unwrap();
+        let grown = files.clone();
+        let initial = files[..files.len() - 1].to_vec();
+
+        // Cold pass over the initial corpus: all shards miss, all store.
+        let plan1 = case_study_plan(&initial, "title", "abstract").optimize();
+        let fp1 = fingerprint(&plan1.render(), &initial).unwrap();
+        let out1 = execute_incremental(&plan1, 2, &ExecutorKind::Fused, &cache, &fp1)
+            .unwrap()
+            .expect("eligible plan");
+        let s = cache.stats();
+        assert_eq!((s.shard_hits, s.shard_misses), (0, initial.len() as u64));
+        assert_eq!(out1.frame, plan1.execute(2).unwrap().frame);
+        assert!(!out1.times.stages().any(|(st, _)| st.starts_with(CACHE_RESTORE)));
+
+        // Warm pass over the grown corpus: only the appended shard runs.
+        let plan2 = case_study_plan(&grown, "title", "abstract").optimize();
+        let fp2 = fingerprint(&plan2.render(), &grown).unwrap();
+        let out2 = execute_incremental(&plan2, 2, &ExecutorKind::Fused, &cache, &fp2)
+            .unwrap()
+            .expect("eligible plan");
+        let s = cache.stats();
+        assert_eq!(s.shard_hits, initial.len() as u64);
+        assert_eq!(s.shard_misses, initial.len() as u64 + 1);
+        let restore = format!("{CACHE_RESTORE}({} of {} shards)", initial.len(), grown.len());
+        assert!(out2.times.stages().any(|(st, _)| st == restore), "{:?}",
+            out2.times.stages().map(|(st, _)| st.to_string()).collect::<Vec<_>>());
+        // Byte-identical to a cold full run, counters included.
+        let cold = plan2.execute(2).unwrap();
+        assert_eq!(out2.frame, cold.frame);
+        assert_eq!(out2.rows_ingested, cold.rows_ingested);
+        assert_eq!(out2.rows_out, cold.rows_out);
+        assert_eq!(out2.dups_dropped, cold.dups_dropped);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sample_plans_are_not_eligible() {
+        let (dir, files) = corpus("sample");
+        let plan = crate::plan::LogicalPlan::scan(files.clone(), &["title", "abstract"])
+            .sample(0.5, 7)
+            .collect()
+            .optimize();
+        assert!(!incremental_eligible(&plan));
+        let cache = CacheManager::open(dir.join("cache")).unwrap();
+        let fp = fingerprint(&plan.render(), &files).unwrap();
+        let out =
+            execute_incremental(&plan, 2, &ExecutorKind::Fused, &cache, &fp).unwrap();
+        assert!(out.is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

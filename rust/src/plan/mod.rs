@@ -69,6 +69,7 @@
 
 mod explain;
 mod fused;
+mod incremental;
 mod logical;
 mod optimize;
 mod physical;
@@ -80,6 +81,7 @@ pub use explain::{
     explain, explain_process, explain_remote, explain_stream, explain_with,
 };
 pub use fused::FusedStringStage;
+pub use incremental::{execute_incremental, incremental_eligible, incremental_shard_keys};
 pub use logical::{LogicalOp, LogicalPlan};
 pub use physical::{lower, sample_keeps, PhysicalPlan, PlanOutput};
 pub use process::{ProcessExecutor, ProcessOptions, WorkerPool};

@@ -80,13 +80,15 @@ pub(super) enum PartitionOp {
 
 /// The lowered form of a [`LogicalOp::Fit`]: everything pass 1 and
 /// pass 2 need to fit the estimator and splice the fitted model.
-struct TwoPass {
+/// `pub(super)` so the incremental cache (`super::incremental`) can
+/// orchestrate its own prefix-restore + re-fit + continuation.
+pub(super) struct TwoPass {
     /// `ops[..prefix_len]` is the pass-1 (pre-estimator) program.
-    prefix_len: usize,
+    pub(super) prefix_len: usize,
     /// Schema at the estimator's position (pass-1 output schema).
     prefix_schema: Schema,
-    est: Arc<dyn Estimator>,
-    in_idx: usize,
+    pub(super) est: Arc<dyn Estimator>,
+    pub(super) in_idx: usize,
     out_idx: usize,
     /// Whether the plan's `Limit` precedes the estimator (then the fit
     /// pass must enforce it — the fit sees only the limited stream).
@@ -324,6 +326,7 @@ impl Phases {
 /// masking keys away when later filters drop rows — lets the merge
 /// register a first occurrence that a later filter removed, which is
 /// what makes multi-`Distinct` plans byte-identical to the staged path.
+#[derive(Clone)]
 pub(super) struct KeySlot {
     pub(super) keys: Vec<u128>,
     pub(super) ids: Vec<u32>,
@@ -332,6 +335,9 @@ pub(super) struct KeySlot {
 /// What one worker hands back for one shard file (or chunk). Opaque
 /// outside the plan layer; the streaming executor moves these from its
 /// worker pool to the driver-side [`Merger`] without looking inside.
+/// `Clone` because the incremental cache's fit fold consumes a copy of
+/// each pass-1 result while the original continues into pass 2.
+#[derive(Clone)]
 pub(super) struct PartResult {
     pub(super) part: Partition,
     /// One entry per `Distinct` op in the program, in slot order; empty
@@ -752,8 +758,29 @@ impl PhysicalPlan {
         self.two_pass.is_some()
     }
 
-    fn has_sample(&self) -> bool {
+    pub(super) fn two_pass(&self) -> Option<&TwoPass> {
+        self.two_pass.as_ref()
+    }
+
+    pub(super) fn has_sample(&self) -> bool {
         self.ops.iter().any(|op| matches!(op, PartitionOp::SampleFilter { .. }))
+    }
+
+    /// The same program over a subset of the shard files — the
+    /// incremental cache's miss sub-plan. Only the scan target changes;
+    /// op program, schema, dedup slots and the global limit budget are
+    /// untouched (the budget is enforced at the caller's merge over the
+    /// full restored+fresh sequence, not inside the sub-plan).
+    pub(super) fn with_files(&self, files: Vec<PathBuf>) -> PhysicalPlan {
+        PhysicalPlan {
+            files,
+            fields: self.fields.clone(),
+            ops: self.ops.clone(),
+            output_schema: self.output_schema.clone(),
+            n_distinct: self.n_distinct,
+            limit: self.limit,
+            two_pass: None,
+        }
     }
 
     /// Execute with `workers` threads (0 = all cores).
@@ -849,6 +876,42 @@ impl PhysicalPlan {
             })
         };
         Ok((results, extra_ingest))
+    }
+
+    /// Like [`Self::collect_results`], but the shard file is *always*
+    /// the unit of parallelism — never the re-chunk path, whatever the
+    /// file/worker ratio or byte skew. The incremental cache requires
+    /// shard-aligned results (each one becomes, or is compared against,
+    /// a per-shard artifact), so chunk-level results are useless to it.
+    pub(super) fn collect_shard_results(&self, workers: usize) -> Result<Vec<PartResult>> {
+        let exec = Executor::new(workers);
+        let jobs: Vec<(usize, PathBuf)> = self.files.iter().cloned().enumerate().collect();
+        exec.map_items(jobs, |(idx, path)| {
+            let _lane = obs::lane_scope(obs::pool_lane());
+            self.run_partition(idx, &path)
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>>>()
+    }
+
+    /// Continue the op program at `self.ops[start..]` over a shard
+    /// result whose first `start` ops already ran (in this process or a
+    /// previous one — the incremental cache restores pass-1 prefix
+    /// results and resumes them through the fitted stage + suffix).
+    /// Counters, provenance ids and hashed key slots carry across, so
+    /// the resumed result is identical to running the whole program.
+    pub(super) fn resume_ops(&self, r: PartResult, shard: usize, start: usize) -> PartResult {
+        let state = OpState {
+            phases: r.phases,
+            ids: r.final_ids,
+            slots: r.slots,
+            rows_ingested: r.rows_ingested,
+            nulls_dropped: r.nulls_dropped,
+            empties_dropped: r.empties_dropped,
+            sampled_out: r.sampled_out,
+            limited_out: r.limited_out,
+        };
+        self.run_ops_from(r.part, shard, start, state)
     }
 
     /// Execute by distributing the op program across worker OS
@@ -969,7 +1032,7 @@ impl PhysicalPlan {
 
     /// The pass-1 plan: the pre-estimator program with the estimator's
     /// input schema (no fitted stage, no suffix ops).
-    fn prefix_plan(&self, tp: &TwoPass) -> PhysicalPlan {
+    pub(super) fn prefix_plan(&self, tp: &TwoPass) -> PhysicalPlan {
         let ops: Vec<PartitionOp> = self.ops[..tp.prefix_len].to_vec();
         let n_distinct = ops
             .iter()
@@ -988,7 +1051,7 @@ impl PhysicalPlan {
 
     /// The pass-2 plan: the full program with the fitted model spliced
     /// in at the estimator's position as an ordinary stage.
-    fn with_model(&self, tp: &TwoPass, fitted: Arc<dyn Transformer>) -> PhysicalPlan {
+    pub(super) fn with_model(&self, tp: &TwoPass, fitted: Arc<dyn Transformer>) -> PhysicalPlan {
         let mut ops = self.ops.clone();
         ops.insert(
             tp.prefix_len,
@@ -1667,7 +1730,7 @@ fn op_lines_of(ops: &[PartitionOp], schema: &Schema) -> Vec<String> {
 /// `run_fit_process` and `render_process`, so `--processes` never picks
 /// a fold its EXPLAIN did not describe — and never errors on a plan the
 /// partition-shipping fallback could run.
-fn partial_fit_available(tp: &TwoPass, prefix: &PhysicalPlan) -> bool {
+pub(super) fn partial_fit_available(tp: &TwoPass, prefix: &PhysicalPlan) -> bool {
     prefix.n_distinct() == 0
         && prefix.limit_n().is_none()
         && tp.est.wire_spec().is_some()
@@ -1676,14 +1739,14 @@ fn partial_fit_available(tp: &TwoPass, prefix: &PhysicalPlan) -> bool {
 
 /// Pass-1 sink: admit partitions in stream order (dedup + limit), feed
 /// the estimator's accumulator, discard the rows.
-struct FitSink {
+pub(super) struct FitSink {
     admitter: Admitter,
     acc: Box<dyn crate::pipeline::FitAccumulator>,
     in_idx: usize,
 }
 
 impl FitSink {
-    fn new(tp: &TwoPass, prefix: &PhysicalPlan) -> Result<FitSink> {
+    pub(super) fn new(tp: &TwoPass, prefix: &PhysicalPlan) -> Result<FitSink> {
         let acc = tp.est.accumulator().ok_or_else(|| {
             anyhow::anyhow!(
                 "estimator {} lost its accumulator between lower and execute",
@@ -1697,7 +1760,7 @@ impl FitSink {
         })
     }
 
-    fn push(&mut self, r: PartResult) -> Result<()> {
+    pub(super) fn push(&mut self, r: PartResult) -> Result<()> {
         let (part, _, _) =
             self.admitter.admit(r.part, r.rows_ingested, &r.slots, r.final_ids.as_deref());
         if part.num_rows() > 0 {
@@ -1706,7 +1769,7 @@ impl FitSink {
         Ok(())
     }
 
-    fn finish(self) -> Result<Arc<dyn Transformer>> {
+    pub(super) fn finish(self) -> Result<Arc<dyn Transformer>> {
         self.acc.finish()
     }
 }

@@ -1010,6 +1010,32 @@ impl ProcessExecutor {
         Ok(())
     }
 
+    /// Like [`Self::run`], but the shard file is *always* the unit of
+    /// work: the single-worker fallback uses the shard-aligned collect
+    /// rather than the re-chunk path, because the incremental cache
+    /// needs each [`PartResult`] to map 1:1 onto a shard file.
+    pub(super) fn run_shards(
+        &self,
+        plan: &PhysicalPlan,
+        sink: &mut dyn FnMut(PartResult) -> Result<()>,
+    ) -> Result<()> {
+        let n = plan.files().len();
+        if n == 0 {
+            return Ok(());
+        }
+        let procs = self.opts.resolve(n);
+        if procs <= 1 {
+            for r in plan.collect_shard_results(0)? {
+                sink(r)?;
+            }
+            return Ok(());
+        }
+        for r in self.scatter_gather(plan, procs)? {
+            sink(r)?;
+        }
+        Ok(())
+    }
+
     /// Partial-aggregate fit pass: each worker folds its shards into its
     /// own accumulator and ships the accumulated state; the driver
     /// merges partials (worker order) and fits the model. Only valid

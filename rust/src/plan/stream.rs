@@ -202,6 +202,31 @@ impl StreamExecutor {
         self.run_pipeline(plan, sink)
     }
 
+    /// Like [`Self::run`], but the shard file is *always* the unit of
+    /// work: the scarce-shard case drops to the single-pass executor's
+    /// shard-aligned collect instead of its re-chunk path. The
+    /// incremental cache needs every [`PartResult`] to map 1:1 onto a
+    /// shard file so it can be stored as (or compared against) that
+    /// shard's artifact.
+    pub(super) fn run_shards(
+        &self,
+        plan: &PhysicalPlan,
+        sink: &mut dyn FnMut(PartResult) -> Result<()>,
+    ) -> Result<()> {
+        let n = plan.files().len();
+        if n == 0 {
+            return Ok(());
+        }
+        let (readers, workers, _) = self.opts.resolve(n);
+        if n < workers {
+            for r in plan.collect_shard_results(readers + workers)? {
+                sink(r)?;
+            }
+            return Ok(());
+        }
+        self.run_pipeline(plan, sink)
+    }
+
     /// The two-stage pipeline itself: a bounded reader pool shipping raw
     /// shard buffers, a worker pool cursor-parsing them and running the
     /// op program, and the driver's reorder buffer releasing contiguous

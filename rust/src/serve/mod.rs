@@ -264,6 +264,9 @@ fn dispatch(req: Request, daemon: &Daemon) -> Reply {
                     stores: s.stores,
                     fp_digest_shards: s.fp_digest_shards,
                     fp_stat_revalidations: s.fp_stat_revalidations,
+                    shard_hits: s.shard_hits,
+                    shard_misses: s.shard_misses,
+                    shard_stores: s.shard_stores,
                 }
             });
             Reply::Stats(StatsReply {
@@ -297,6 +300,9 @@ fn dispatch(req: Request, daemon: &Daemon) -> Reply {
                     ("p3sapp_cache_corrupt_total", s.corrupt),
                     ("p3sapp_cache_fp_digest_shards_total", s.fp_digest_shards),
                     ("p3sapp_cache_fp_stat_revalidations_total", s.fp_stat_revalidations),
+                    ("p3sapp_cache_shard_hits_total", s.shard_hits),
+                    ("p3sapp_cache_shard_misses_total", s.shard_misses),
+                    ("p3sapp_cache_shard_stores_total", s.shard_stores),
                 ] {
                     reg.counter_store(name, v);
                 }
@@ -417,9 +423,12 @@ fn run_admitted(
     reg.observe_us("p3sapp_serve_job_queue_wait_us", queue_wait.as_micros() as u64);
     reg.observe_us("p3sapp_serve_job_execute_us", t_exec.elapsed().as_micros() as u64);
     if let Reply::Preprocess(p) = &reply {
-        if let Some((_, nanos)) =
-            p.stages.iter().find(|(name, _)| name == crate::driver::CACHE_RESTORE)
-        {
+        // Whole-plan restores report the bare stage; incremental runs
+        // report `cache_restore(k of n shards)` — both are restore time.
+        if let Some((_, nanos)) = p.stages.iter().find(|(name, _)| {
+            name == crate::driver::CACHE_RESTORE
+                || name.starts_with(&format!("{}(", crate::driver::CACHE_RESTORE))
+        }) {
             reg.observe_us("p3sapp_serve_job_cache_restore_us", *nanos / 1_000);
         }
     }

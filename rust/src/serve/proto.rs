@@ -40,7 +40,9 @@ pub(crate) const REPLY_MAGIC: &[u8; 4] = b"P3PW";
 /// v2: plan-worker job frames carry a trace flag, plan-worker replies
 /// end with a span section, stats replies carry typed cache counters,
 /// and the metrics request exists.
-pub(crate) const WIRE_VERSION: u32 = 2;
+/// v3: stats-reply cache counters grew the per-shard incremental tier
+/// (`shard_hits`, `shard_misses`, `shard_stores`).
+pub(crate) const WIRE_VERSION: u32 = 3;
 /// Plan-worker job modes: run the op program and return per-shard
 /// results, or fold the shards into a fit accumulator and return its
 /// partial state.
@@ -343,6 +345,12 @@ pub struct CacheCounters {
     pub fp_digest_shards: u64,
     /// Fingerprint memo hits revalidated by a stat scan alone.
     pub fp_stat_revalidations: u64,
+    /// Per-shard incremental tier: shards restored instead of executed.
+    pub shard_hits: u64,
+    /// Per-shard incremental tier: shards that had to execute.
+    pub shard_misses: u64,
+    /// Per-shard artifacts written.
+    pub shard_stores: u64,
 }
 
 /// Daemon liveness/occupancy snapshot.
@@ -513,6 +521,9 @@ pub fn encode_reply(reply: &Reply) -> Vec<u8> {
                         c.stores,
                         c.fp_digest_shards,
                         c.fp_stat_revalidations,
+                        c.shard_hits,
+                        c.shard_misses,
+                        c.shard_stores,
                     ] {
                         buf.extend_from_slice(&n.to_le_bytes());
                     }
@@ -577,6 +588,9 @@ pub fn decode_reply(frame: &[u8]) -> Result<Reply> {
                         stores: cur.u64()?,
                         fp_digest_shards: cur.u64()?,
                         fp_stat_revalidations: cur.u64()?,
+                        shard_hits: cur.u64()?,
+                        shard_misses: cur.u64()?,
+                        shard_stores: cur.u64()?,
                     }),
                 };
                 Reply::Stats(StatsReply { active, queued, worker_pids, cache })
@@ -767,6 +781,9 @@ mod tests {
             stores: 5,
             fp_digest_shards: 12,
             fp_stat_revalidations: 6,
+            shard_hits: 9,
+            shard_misses: 2,
+            shard_stores: 7,
         };
         let stats_wire = encode_reply(&Reply::Stats(StatsReply {
             active: 1,

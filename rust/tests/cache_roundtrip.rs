@@ -3,7 +3,7 @@
 //! (shard content, plan shape) must miss; a damaged artifact must be a
 //! miss that re-executes, never an error.
 
-use p3sapp::cache::{fingerprint, CacheConfig, CacheManager};
+use p3sapp::cache::{fingerprint, shard_key, CacheConfig, CacheManager, ARTIFACT_EXT};
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
 use p3sapp::driver::{run_p3sapp, DriverOptions};
 use p3sapp::ingest::list_shards;
@@ -158,6 +158,50 @@ fn truncated_artifact_is_a_miss_and_the_driver_reexecutes() {
     let warm = run_p3sapp(&files, &opts2).unwrap();
     assert!(warm.from_cache());
     assert_eq!(warm.frame, cold.frame);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn stale_version_artifacts_on_disk_are_clean_misses_never_errors() {
+    // A cache directory written by an older build (version-2 whole-plan
+    // envelopes, before the per-shard kind byte) must behave as if
+    // empty: the driver re-executes to the same bytes and re-stores
+    // current-version artifacts — no error, no partial restore.
+    let (dir, files) = corpus("stale", 61);
+    let plain =
+        run_p3sapp(&files, &DriverOptions { workers: 2, ..Default::default() }).unwrap();
+
+    let cache_dir = dir.join("cache");
+    let cache = Arc::new(CacheManager::open(&cache_dir).unwrap());
+    let opts = DriverOptions { workers: 2, cache: Some(Arc::clone(&cache)), ..Default::default() };
+    // Plant stale (version-2) artifacts at both the whole-plan key and
+    // the first shard's per-shard key.
+    let plan = opts.build_plan(&files).optimize();
+    let fp = fingerprint(&plan.render(), &files).unwrap();
+    let skey = shard_key(&plan.render(), &fp.shards()[0]);
+    let mut v2 = Vec::new();
+    v2.extend_from_slice(b"P3PC");
+    v2.extend_from_slice(&2u32.to_le_bytes());
+    v2.extend_from_slice(&[0u8; 64]);
+    for key in [fp.key(), skey.as_str()] {
+        std::fs::write(cache_dir.join(format!("{key}.{ARTIFACT_EXT}")), &v2).unwrap();
+    }
+
+    let out = run_p3sapp(&files, &opts).unwrap();
+    assert!(!out.from_cache(), "stale artifacts must not restore");
+    assert_eq!(out.frame, plain.frame);
+    let s = cache.stats();
+    assert!(s.corrupt >= 2, "both stale artifacts dropped, got {}", s.corrupt);
+    assert_eq!(s.shard_hits, 0, "no shard may restore from a stale artifact");
+    assert_eq!(s.shard_misses, files.len() as u64);
+
+    // The rewrite healed the cache: a fresh-process warm run restores.
+    let cache2 = Arc::new(disk_manager(&cache_dir));
+    let opts2 =
+        DriverOptions { workers: 2, cache: Some(Arc::clone(&cache2)), ..Default::default() };
+    let warm = run_p3sapp(&files, &opts2).unwrap();
+    assert!(warm.from_cache());
+    assert_eq!(warm.frame, plain.frame);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -14,17 +14,22 @@
 //! `P3PJ`/`P3PW` frames, covering both inline and fetch-by-digest
 //! shard shipping.
 
-use p3sapp::cache::CacheManager;
+use p3sapp::cache::{fingerprint, CacheManager};
 use p3sapp::corpus::{generate_corpus, CorpusSpec};
-use p3sapp::driver::{run_p3sapp, DriverOptions};
+use p3sapp::driver::{run_p3sapp, DriverOptions, CACHE_RESTORE};
 use p3sapp::frame::{distinct, drop_nulls, Frame, LocalFrame};
 use p3sapp::ingest::list_shards;
 use p3sapp::ingest::spark::{ingest_files, IngestOptions};
+use p3sapp::pipeline::features::{HashingTF, Idf};
 use p3sapp::pipeline::presets::{
     abstract_stages, case_study_features_pipeline, case_study_pipeline, case_study_plan,
-    case_study_plan_with, CaseStudyOptions,
+    case_study_plan_with, case_study_stages, CaseStudyOptions,
 };
-use p3sapp::plan::{sample_keeps, LogicalPlan, ProcessOptions, RemoteOptions, StreamOptions};
+use p3sapp::pipeline::stages::Tokenizer;
+use p3sapp::plan::{
+    execute_incremental, sample_keeps, ExecutorKind, LogicalPlan, ProcessOptions, RemoteOptions,
+    StreamOptions,
+};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -519,6 +524,180 @@ fn lowered_idf_matches_pipeline_fit_transform_across_all_executors() {
 
         std::fs::remove_dir_all(&dir).unwrap();
     }
+}
+
+#[test]
+fn warm_append_is_byte_identical_to_cold_across_executors() {
+    // The incremental tier's core contract: after a corpus grows by one
+    // shard, a warm driver run restores the untouched shards from the
+    // per-shard cache, executes only the appended one, and still lands
+    // on the exact bytes of a cold full run — for every executor whose
+    // schedule keeps the shard file as the unit of work.
+    let mut spec = CorpusSpec::tiny(67);
+    spec.dup_rate = 0.15;
+    spec.null_title_rate = 0.1;
+    let (dir, files) = corpus("warmappend", &spec);
+    let initial = files[..files.len() - 1].to_vec();
+    let cold_full =
+        run_p3sapp(&files, &DriverOptions { workers: 3, ..Default::default() }).unwrap();
+
+    for (name, executor) in [
+        ("fused", ExecutorKind::Fused),
+        ("stream", ExecutorKind::Stream(StreamOptions { readers: 2, workers: 3, queue_cap: 2 })),
+        ("process", ExecutorKind::Process(process_opts(2))),
+    ] {
+        let cache = Arc::new(CacheManager::open(dir.join(format!("cache-{name}"))).unwrap());
+        let opts = DriverOptions {
+            workers: 3,
+            executor: executor.clone(),
+            cache: Some(Arc::clone(&cache)),
+            ..Default::default()
+        };
+        let cold = run_p3sapp(&initial, &opts).unwrap();
+        assert!(!cold.from_cache(), "{name}: cold run executes");
+        assert_eq!(cache.stats().shard_misses, initial.len() as u64, "{name}: cold misses");
+
+        let warm = run_p3sapp(&files, &opts).unwrap();
+        assert!(!warm.from_cache(), "{name}: an incremental run did real work");
+        let s = cache.stats();
+        assert_eq!(s.shard_hits, initial.len() as u64, "{name}: every old shard restored");
+        assert_eq!(s.shard_misses, initial.len() as u64 + 1, "{name}: one shard executed");
+        let restore = format!("{CACHE_RESTORE}({} of {} shards)", initial.len(), files.len());
+        assert!(
+            warm.times.stages().any(|(st, _)| st == restore),
+            "{name}: missing '{restore}' in {:?}",
+            warm.times.stages().map(|(st, _)| st.to_string()).collect::<Vec<_>>()
+        );
+        assert_eq!(warm.frame, cold_full.frame, "{name}: warm append diverges from cold");
+        assert_eq!(warm.rows_out, cold_full.rows_out, "{name}: rows_out");
+        assert_eq!(warm.rows_ingested, cold_full.rows_ingested, "{name}: rows_ingested");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn warm_append_drops_duplicates_spanning_the_restore_boundary() {
+    // Dedup provenance must cross serialization: a duplicate whose first
+    // occurrence lives in a *restored* shard has to be dropped from the
+    // *fresh* one (append case), and — after the growth re-indexes the
+    // shards — a first occurrence in a fresh shard that sorts ahead has
+    // to evict the copy inside a restored shard (prepend case).
+    let dir = std::env::temp_dir().join(format!("p3sapp-planeq-incrdup-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let dup = "{\"title\": \"dup title\", \"abstract\": \"shared words here\"}\n";
+    std::fs::write(dir.join("a.json"), format!("{dup}{}",
+        "{\"title\": \"first\", \"abstract\": \"alpha words\"}\n")).unwrap();
+    std::fs::write(
+        dir.join("b.json"),
+        "{\"title\": \"second\", \"abstract\": \"beta words\"}\n",
+    )
+    .unwrap();
+    let initial = list_shards(&dir).unwrap();
+    assert_eq!(initial.len(), 2);
+
+    let cache = CacheManager::open(dir.join("cache")).unwrap();
+    let run = |files: &[PathBuf], cache: &CacheManager| {
+        let plan = case_study_plan(files, "title", "abstract").optimize();
+        let fp = fingerprint(&plan.render(), files).unwrap();
+        let warm = execute_incremental(&plan, 2, &ExecutorKind::Fused, cache, &fp)
+            .unwrap()
+            .expect("eligible plan");
+        let cold = plan.execute(2).unwrap();
+        assert_eq!(warm.frame, cold.frame, "incremental diverges from cold");
+        assert_eq!(warm.dups_dropped, cold.dups_dropped);
+        warm
+    };
+    run(&initial, &cache);
+
+    // Append: the duplicate's first occurrence sits in restored a.json.
+    std::fs::write(dir.join("c.json"), format!("{dup}{}",
+        "{\"title\": \"third\", \"abstract\": \"gamma words\"}\n")).unwrap();
+    let grown = list_shards(&dir).unwrap();
+    assert_eq!(grown.len(), 3);
+    let warm = run(&grown, &cache);
+    assert_eq!(warm.dups_dropped, 1, "the cross-boundary duplicate must drop");
+    assert_eq!(cache.stats().shard_hits, 2, "a.json and b.json restored");
+
+    // Prepend: a fresh shard that sorts first registers the key, so the
+    // copy inside restored a.json (now at a shifted shard index) drops.
+    std::fs::write(dir.join("0early.json"), dup).unwrap();
+    let grown2 = list_shards(&dir).unwrap();
+    assert_eq!(grown2.len(), 4);
+    assert!(grown2[0].ends_with("0early.json"), "{grown2:?}");
+    let hits_before = cache.stats().shard_hits;
+    let warm2 = run(&grown2, &cache);
+    assert_eq!(warm2.dups_dropped, 2, "both copies after the fresh first occurrence drop");
+    assert_eq!(
+        cache.stats().shard_hits,
+        hits_before + 3,
+        "content-addressed keys survive the index shift"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn warm_append_two_pass_idf_reuses_persisted_fit_partials() {
+    let mut spec = CorpusSpec::tiny(91);
+    spec.null_abstract_rate = 0.1;
+    let (dir, files) = corpus("incridf", &spec);
+    let initial = files[..files.len() - 1].to_vec();
+
+    // A dedup-free estimator plan: per-shard document-frequency partials
+    // persist next to the prefix artifacts, so the warm re-fit merges
+    // partials (restored + fresh) instead of re-admitting every row.
+    let plan_for = |files: &[PathBuf]| {
+        LogicalPlan::scan(files.to_vec(), &COLS)
+            .drop_nulls(&COLS)
+            .transforms(case_study_stages("title", "abstract"))
+            .transform(Tokenizer::new("abstract", "tokens"))
+            .transform(HashingTF::new("tokens", "tf", 512))
+            .fit(Idf::new("tf", "tfidf"))
+            .drop_empty(&COLS)
+            .collect()
+            .optimize()
+    };
+    let cache = CacheManager::open(dir.join("cache")).unwrap();
+    let plan1 = plan_for(&initial);
+    let fp1 = fingerprint(&plan1.render(), &initial).unwrap();
+    execute_incremental(&plan1, 3, &ExecutorKind::Fused, &cache, &fp1)
+        .unwrap()
+        .expect("eligible plan");
+
+    let plan2 = plan_for(&files);
+    let fp2 = fingerprint(&plan2.render(), &files).unwrap();
+    let warm = execute_incremental(&plan2, 3, &ExecutorKind::Fused, &cache, &fp2)
+        .unwrap()
+        .expect("eligible plan");
+    let s = cache.stats();
+    assert_eq!(s.shard_hits, initial.len() as u64);
+    assert_eq!(s.shard_misses, initial.len() as u64 + 1);
+    // The fitted model saw every shard: TF-IDF weights (which depend on
+    // global document frequencies) must match a cold full run exactly.
+    let cold = plan2.execute(3).unwrap();
+    assert_eq!(warm.frame, cold.frame, "merged-partial fit diverges from cold fit");
+    assert_eq!(warm.rows_out, cold.rows_out);
+
+    // The dedup-bearing features preset takes the fit-sink fold instead
+    // (per-shard partials cannot see global dedup) — same byte contract,
+    // via the driver path the CLI exercises.
+    let cache2 = Arc::new(CacheManager::open(dir.join("cache-features")).unwrap());
+    let opts = DriverOptions {
+        workers: 3,
+        features: true,
+        cache: Some(Arc::clone(&cache2)),
+        ..Default::default()
+    };
+    let plain = run_p3sapp(
+        &files,
+        &DriverOptions { workers: 3, features: true, ..Default::default() },
+    )
+    .unwrap();
+    run_p3sapp(&initial, &opts).unwrap();
+    let warm2 = run_p3sapp(&files, &opts).unwrap();
+    assert_eq!(cache2.stats().shard_hits, initial.len() as u64);
+    assert_eq!(warm2.frame, plain.frame, "features warm append diverges from cold");
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
